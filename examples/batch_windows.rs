@@ -1,0 +1,108 @@
+//! Mixed-archetype workload planning + headroom analysis: builds a
+//! workload from the paper's motivating patterns (always-on baselines,
+//! weekday bursts, nightly batch windows, deadline jobs, duty-cycled
+//! sensors), rightsizes a cluster for it, then stress-tests the plan with
+//! the admission/auto-scaling simulator (the paper's future-work hook).
+//!
+//! Run with: cargo run --release --example batch_windows
+
+use tlrs::algo::algorithms::lp_map_best;
+use tlrs::algo::local_search;
+use tlrs::algo::placement::FitPolicy;
+use tlrs::io::patterns::{mixed_workload, WEEK_HOURS};
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, Instance, NodeType, Task};
+use tlrs::sim::autoscale;
+
+fn main() -> anyhow::Result<()> {
+    // 1. compose the workload from archetypes
+    let tasks = mixed_workload(120, 7);
+    println!(
+        "workload: {} time-limited tasks from 120 services over a {}-hour week",
+        tasks.len(),
+        WEEK_HOURS
+    );
+
+    let catalog = vec![
+        NodeType::new("edge-small", vec![0.35, 0.40], 3.0),
+        NodeType::new("edge-med", vec![0.60, 0.60], 5.0),
+        NodeType::new("dc-large", vec![1.0, 1.0], 8.5),
+    ];
+    let inst = Instance::new(tasks, catalog, WEEK_HOURS);
+    let tr = trim(&inst).instance;
+    println!("timeline trimmed to {} slots", tr.horizon);
+
+    // 2. rightsize
+    let solver = NativePdhgSolver::default();
+    let rep = lp_map_best(&tr, &solver, true)?;
+    let mut plan = rep.solution.clone();
+    let stats = local_search::improve(&tr, &mut plan, 8);
+    plan.verify(&tr).expect("feasible");
+    println!(
+        "\nplan: ${:.2} -> ${:.2} after local search ({} drained, {} downgraded); LB ${:.2}",
+        stats.cost_before,
+        stats.cost_after,
+        stats.nodes_drained,
+        stats.nodes_downgraded,
+        rep.certified_lb
+    );
+    for (b, c) in plan.nodes_per_type(&tr).iter().enumerate() {
+        if *c > 0 {
+            println!("  {} x {}", c, tr.node_types[b].name);
+        }
+    }
+
+    // 3. stress: replay planned load, then +30% surprise bursts
+    let planned = autoscale::simulate(&tr, &plan, &tr.tasks, FitPolicy::FirstFit, false);
+    println!(
+        "\nplanned load : {:.1}% admitted (expected 100%)",
+        planned.admission_rate() * 100.0
+    );
+
+    let mut surprise = tr.tasks.clone();
+    let extra = mixed_workload(36, 99);
+    let base = surprise.len() as u64;
+    // surprise tasks live on the original hourly timeline; retrim jointly
+    let mut all = inst.tasks.clone();
+    all.extend(extra.iter().map(|t| Task::new(base + t.id, t.demand.clone(), t.start, t.end)));
+    let joint = trim(&Instance::new(all, inst.node_types.clone(), WEEK_HOURS)).instance;
+    surprise = joint.tasks.clone();
+
+    // re-plan cluster on the joint trimmed timeline for a fair replay
+    let joint_rep = lp_map_best(&joint, &solver, true)?;
+    let fixed = autoscale::simulate(&joint, &rep_plan_on(&joint, &joint_rep.solution), &surprise, FitPolicy::FirstFit, false);
+    let hybrid = autoscale::simulate(&joint, &plan_shell(&joint, &plan), &surprise, FitPolicy::FirstFit, true);
+    println!(
+        "joint replan : ${:.2} for planned+surprise load",
+        joint_rep.solution.cost(&joint)
+    );
+    println!(
+        "fixed replan cluster admits {:.1}% of planned+surprise arrivals",
+        fixed.admission_rate() * 100.0
+    );
+    println!(
+        "original plan + rented overflow: {:.1}% admitted, ${:.2} overflow rent ({} nodes)",
+        hybrid.admission_rate() * 100.0,
+        hybrid.overflow_cost,
+        hybrid.overflow_nodes
+    );
+    Ok(())
+}
+
+/// Use a solution's purchased nodes as an empty shell on another instance
+/// with the same node-type catalog.
+fn plan_shell(inst: &Instance, plan: &tlrs::model::Solution) -> tlrs::model::Solution {
+    let mut shell = tlrs::model::Solution::new(inst.n_tasks());
+    for (i, node) in plan.nodes.iter().enumerate() {
+        shell.nodes.push(tlrs::model::PlacedNode {
+            type_idx: node.type_idx,
+            purchase_order: i,
+            tasks: Vec::new(),
+        });
+    }
+    shell
+}
+
+fn rep_plan_on(inst: &Instance, sol: &tlrs::model::Solution) -> tlrs::model::Solution {
+    plan_shell(inst, sol)
+}

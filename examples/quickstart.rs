@@ -1,0 +1,59 @@
+//! Quickstart: rightsizing a tiny cluster — the paper's Figure 1 instance.
+//!
+//! Run with: cargo run --release --example quickstart
+
+use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+use tlrs::algo::exact;
+use tlrs::harness::scenarios::figure1_instance;
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::trim;
+
+fn main() -> anyhow::Result<()> {
+    // Three time-limited tasks, two node-types (Figure 1 of the paper).
+    let inst = figure1_instance();
+    println!(
+        "instance: {} tasks, {} node-types, T={}",
+        inst.n_tasks(),
+        inst.n_types(),
+        inst.horizon
+    );
+    for u in &inst.tasks {
+        println!("  task {} demand {:?} active [{}, {}]", u.id, u.demand, u.start, u.end);
+    }
+    for b in &inst.node_types {
+        println!("  type {:8} capacity {:?} cost ${}", b.name, b.capacity, b.cost);
+    }
+
+    // Step 1: trim the timeline (only task start slots matter).
+    let trimmed = trim(&inst);
+    println!("\ntimeline trimmed: T={} -> T={}", inst.horizon, trimmed.instance.horizon);
+    let tr = trimmed.instance;
+
+    // Step 2: the baseline PenaltyMap and the LP-based mapping.
+    let solver = NativePdhgSolver::default();
+    let pen = penalty_map_best(&tr, false);
+    let lp = lp_map_best(&tr, &solver, true)?;
+    println!("\nPenaltyMap  cost: ${:.2}", pen.cost(&tr));
+    println!(
+        "LP-map-F    cost: ${:.2}  (LP lower bound ${:.2})",
+        lp.solution.cost(&tr),
+        lp.certified_lb
+    );
+
+    // Step 3: check against the exact optimum (tiny instance).
+    let opt = exact::optimal(&tr);
+    println!("exact optimum   : ${:.2}", opt.cost(&tr));
+
+    // Step 4: what ignoring the timeline would cost.
+    let collapsed = inst.collapse_timeline();
+    let opt_flat = exact::optimal(&collapsed);
+    println!(
+        "\nwithout time-sharing the same workload needs ${:.2} of nodes",
+        opt_flat.cost(&collapsed)
+    );
+
+    // Every solution is independently verified.
+    lp.solution.verify(&tr).expect("feasible");
+    println!("\nsolution verified: every (node, timeslot, dimension) within capacity");
+    Ok(())
+}

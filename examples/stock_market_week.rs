@@ -1,0 +1,91 @@
+//! Stock-market week (the paper's Figure 2): a long-running service with a
+//! low-demand baseline plus market-hours bursts, modeled as six
+//! time-limited tasks, then rightsized together with a batch-analytics
+//! workload that runs overnight.
+//!
+//! Shows the modeling workflow the paper motivates: windows of one
+//! long-running task become independent time-limited tasks, letting night
+//! batch jobs reuse the daytime burst capacity.
+//!
+//! Run with: cargo run --release --example stock_market_week
+
+use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+use tlrs::harness::scenarios::figure2_tasks;
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, Instance, NodeType, Task};
+use tlrs::sim::replay::replay;
+
+fn main() -> anyhow::Result<()> {
+    // Figure 2's six tasks: T1 baseline all week, T2-T6 market-hours bursts.
+    let mut tasks = figure2_tasks();
+
+    // Plus overnight batch analytics: 2:00-5:00 every night.
+    let mut next_id = 100u64;
+    for day in 0..7u32 {
+        for shard in 0..3 {
+            tasks.push(Task::new(
+                next_id,
+                vec![0.20 + 0.05 * shard as f64, 0.15],
+                day * 24 + 2,
+                day * 24 + 4,
+            ));
+            next_id += 1;
+        }
+    }
+
+    // Node catalog: a big general-purpose shape and a small edge shape.
+    let inst = Instance::new(
+        tasks,
+        vec![
+            NodeType::new("c2-large", vec![1.0, 1.0], 10.0),
+            NodeType::new("e2-small", vec![0.35, 0.40], 3.0),
+        ],
+        7 * 24,
+    );
+    println!(
+        "workload: {} tasks over a {}-slot week; catalog: {} shapes",
+        inst.n_tasks(),
+        inst.horizon,
+        inst.n_types()
+    );
+
+    let tr = trim(&inst).instance;
+    println!("trimmed timeline: {} -> {} slots", inst.horizon, tr.horizon);
+
+    let solver = NativePdhgSolver::default();
+    let pen = penalty_map_best(&tr, true);
+    let lp = lp_map_best(&tr, &solver, true)?;
+    println!("\nPenaltyMap-F cluster cost : ${:.2}", pen.cost(&tr));
+    println!(
+        "LP-map-F     cluster cost : ${:.2}   (lower bound ${:.2}, normalized {:.3})",
+        lp.solution.cost(&tr),
+        lp.certified_lb,
+        lp.solution.cost(&tr) / lp.certified_lb
+    );
+    let per_type = lp.solution.nodes_per_type(&tr);
+    for (b, count) in per_type.iter().enumerate() {
+        if *count > 0 {
+            println!("  {} x {}", count, tr.node_types[b].name);
+        }
+    }
+
+    // Replay the week against the plan: utilization + overload check.
+    let rep = replay(&tr, &lp.solution);
+    println!(
+        "\nreplay: {} overloads, avg busy-node utilization {:.1}%, peak {} concurrent tasks",
+        rep.overloads,
+        rep.avg_utilization * 100.0,
+        rep.peak_tasks
+    );
+
+    // Contrast with a plan that treats every task as always-on.
+    let flat = inst.collapse_timeline();
+    let flat_tr = trim(&flat).instance;
+    let flat_lp = lp_map_best(&flat_tr, &solver, true)?;
+    println!(
+        "\nignoring the timeline, the same workload plans at ${:.2} ({:.2}x)",
+        flat_lp.solution.cost(&flat_tr),
+        flat_lp.solution.cost(&flat_tr) / lp.solution.cost(&tr)
+    );
+    Ok(())
+}

@@ -1,0 +1,127 @@
+"""AOT lowering: JAX/Pallas programs -> HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published `xla` rust crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Instances are zero-padded into fixed shape buckets (PJRT needs static
+shapes).  Padded tasks have zero demand, an empty activity column and
+taskmask 0; padded node-types have rho == 0 rows, typemask 0 and cost 0 --
+they are inert in every constraint (see model.py).
+
+Emitted per bucket `k`:
+    pdhg_<k>.hlo.txt     one PDHG chunk (warm-startable)
+    power_<k>.hlo.txt    ||A||_2 power-iteration estimate
+    penalty_<k>.hlo.txt  PenaltyMap scoring (p_avg, p_max, h_avg)
+plus a manifest.json the Rust runtime uses for bucket selection.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# (name, N, M, T, D, chunk_iters): shape buckets.  b0 covers unit tests and
+# the quickstart; b1 the synthetic benchmark defaults (n=1000, T=24 trimmed,
+# D<=8, m<=16); b2 the GCT-like trace (D=2).  Instances whose trimmed T
+# exceeds every bucket fall back to the Rust-native sparse-operator PDHG.
+BUCKETS = [
+    ("b0", 128, 8, 32, 4, 200),
+    ("b1", 1024, 16, 32, 8, 100),
+    ("b2", 2048, 16, 256, 2, 50),
+]
+
+POWER_ITERS = 60
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_bucket(name, n, m, t, d, iters):
+    """Lower the three programs for one bucket; returns {fname: hlo_text}."""
+    act = _spec(t, n)
+    r = _spec(n, m, d)
+    rho = _spec(m, t, d)
+    c = _spec(m)
+    tmask = _spec(n)
+    bmask = _spec(m)
+    x = _spec(n, m)
+    alpha = _spec(m)
+    y = _spec(m, t, d)
+    w = _spec(n)
+    scal = _spec()
+
+    pdhg = jax.jit(M.make_pdhg(iters))
+    pdhg_hlo = to_hlo_text(pdhg.lower(
+        act, r, rho, c, tmask, bmask, x, alpha, y, w, scal, scal))
+
+    power = jax.jit(lambda a_, r_, rho_: M.power_iter(a_, r_, rho_,
+                                                      n_iter=POWER_ITERS))
+    power_hlo = to_hlo_text(power.lower(act, r, rho))
+
+    dem = _spec(n, d)
+    capinv = _spec(m, d)
+    pen = jax.jit(M.penalty_scores)
+    pen_hlo = to_hlo_text(pen.lower(dem, capinv, c))
+
+    return {
+        f"pdhg_{name}.hlo.txt": pdhg_hlo,
+        f"power_{name}.hlo.txt": power_hlo,
+        f"penalty_{name}.hlo.txt": pen_hlo,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated bucket names to build (default all)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    want = set(filter(None, args.buckets.split(",")))
+    manifest = {"format": "hlo-text", "power_iters": POWER_ITERS,
+                "buckets": []}
+    for name, n, m, t, d, iters in BUCKETS:
+        if want and name not in want:
+            continue
+        files = lower_bucket(name, n, m, t, d, iters)
+        for fname, text in files.items():
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["buckets"].append({
+            "name": name, "n": n, "m": m, "t": t, "d": d,
+            "chunk_iters": iters,
+            "pdhg": f"pdhg_{name}.hlo.txt",
+            "power": f"power_{name}.hlo.txt",
+            "penalty": f"penalty_{name}.hlo.txt",
+        })
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused scale-matmul.
+
+The TL-Rightsizing mapping LP's constraint operator never materializes its
+(m*T*D) x (n*m) matrix.  Both the forward operator
+
+    K(x)[B,t,d] = sum_u Act[t,u] * x[u,B] * r[u,B,d]
+
+and its adjoint reduce to one primitive: a tiled matmul with an elementwise
+scaling fused into the left-operand tiles,
+
+    out = A @ (X * S)
+
+with A:(T,N), X:(N,K), S:(N,K).  The grid tiles the T rows; each grid step
+is a (Tt x N) @ (N x K) contraction -- an MXU-native shape on TPU.  The
+X*S product is recomputed per tile inside VMEM; its cost (N*K mults) is
+negligible against the matmul (Tt*N*K MACs) and fusing it avoids an HBM
+round-trip for the scaled operand.
+
+interpret=True: the CPU PJRT plugin cannot execute Mosaic custom-calls, so
+the kernel is lowered through the Pallas interpreter into plain HLO.  On a
+real TPU the same BlockSpec schedule applies (see DESIGN.md
+section Hardware-Adaptation for the VMEM/MXU estimate).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block_rows(t: int) -> int:
+    """Largest MXU-friendly tile height that divides t."""
+    for cand in (128, 64, 32, 16, 8, 4, 2):
+        if t % cand == 0:
+            return cand
+    return 1
+
+
+def _kernel(a_ref, x_ref, s_ref, o_ref):
+    # Fuse the elementwise scale into the tile, then hit the MXU.
+    xs = x_ref[...] * s_ref[...]
+    o_ref[...] = jnp.dot(a_ref[...], xs, preferred_element_type=jnp.float32)
+
+
+def fused_scale_matmul(a, x, s, *, block_rows: int | None = None):
+    """Compute ``a @ (x * s)`` with a row-tiled Pallas kernel.
+
+    a: (T, N) float32   left operand (activity mask tiles stream through VMEM)
+    x: (N, K) float32   right operand
+    s: (N, K) float32   elementwise scale fused into the right operand
+    returns (T, K) float32
+    """
+    t, n = a.shape
+    n2, k = x.shape
+    assert n == n2, f"contraction mismatch {n} vs {n2}"
+    assert s.shape == (n, k), f"scale shape {s.shape} != {(n, k)}"
+    br = block_rows or _pick_block_rows(t)
+    assert t % br == 0, f"block_rows {br} must divide T {t}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(t // br,),
+        in_specs=[
+            pl.BlockSpec((br, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, k), jnp.float32),
+        interpret=True,
+    )(a, x, s)
+
+
+def k_forward(act, x, r):
+    """Constraint-operator forward pass.
+
+    act: (T, N) 0/1 activity mask,  x: (N, M) assignment,  r: (N, M, D)
+    normalized demand ratios.  Returns (M, T, D):
+    K(x)[B,t,d] = sum_u act[t,u] * x[u,B] * r[u,B,d].
+    """
+    n, m, d = r.shape
+    xb = jnp.broadcast_to(x[:, :, None], (n, m, d)).reshape(n, m * d)
+    out = fused_scale_matmul(act, xb, r.reshape(n, m * d))  # (T, M*D)
+    t = act.shape[0]
+    return out.reshape(t, m, d).transpose(1, 0, 2)
+
+
+def k_adjoint(act, y, r):
+    """Constraint-operator adjoint.
+
+    act: (T, N), y: (M, T, D), r: (N, M, D).  Returns (N, M):
+    (K^T y)[u,B] = sum_{t,d} act[t,u] * r[u,B,d] * y[B,t,d].
+    """
+    m, t, d = y.shape
+    yflat = y.transpose(1, 0, 2).reshape(t, m * d)
+    ones = jnp.ones_like(yflat)
+    z = fused_scale_matmul(act.T, yflat, ones)  # (N, M*D)
+    n = act.shape[1]
+    return jnp.sum(z.reshape(n, m, d) * r, axis=2)

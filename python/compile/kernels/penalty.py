@@ -1,0 +1,37 @@
+"""L1 penalty-scoring kernels for the PenaltyMap mapping phase.
+
+PenaltyMap (paper section III) scores every (task, node-type) pair:
+
+    h_avg(u|B) = 1/D * sum_d dem(u,d)/cap(B,d)        relative demand
+    p_avg(u|B) = cost(B) * h_avg(u|B)                 penalty
+    h_max(u|B) = max_d  dem(u,d)/cap(B,d)             alternative policy
+    p_max(u|B) = cost(B) * h_max(u|B)
+
+The average-variants are (N,D)@(D,M) matmuls and run through the same
+fused_scale_matmul Pallas kernel as the LP operator; the max-variant is an
+elementwise reduce kept in jnp (no contraction to tile).
+"""
+
+import jax.numpy as jnp
+
+from .fused_matmul import fused_scale_matmul
+
+
+def penalty_scores(dem, capinv, cost):
+    """Score all pairs.
+
+    dem:    (N, D) task demands
+    capinv: (M, D) reciprocal capacities 1/cap(B,d)
+    cost:   (M,)   node-type prices
+
+    Returns (p_avg, p_max, h_avg), each (N, M).
+    """
+    n, d = dem.shape
+    m = cost.shape[0]
+    # h_avg = dem @ capinv^T / D, via the fused kernel with scale = 1/D.
+    scale = jnp.full((d, m), 1.0 / d, dtype=jnp.float32)
+    h_avg = fused_scale_matmul(dem, capinv.T, scale)
+    p_avg = h_avg * cost[None, :]
+    h_max = jnp.max(dem[:, None, :] * capinv[None, :, :], axis=2)
+    p_max = h_max * cost[None, :]
+    return p_avg, p_max, h_avg

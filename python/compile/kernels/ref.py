@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has a reference implementation here, written
+with plain jnp/einsum and no Pallas.  pytest + hypothesis assert allclose
+between kernel and oracle across shapes and dtypes; the AOT path is only
+trusted because this file exists.
+"""
+
+import jax.numpy as jnp
+
+
+def fused_scale_matmul_ref(a, x, s):
+    """out = a @ (x * s)."""
+    return jnp.dot(a, x * s)
+
+
+def k_forward_ref(act, x, r):
+    """K(x)[B,t,d] = sum_u act[t,u] * x[u,B] * r[u,B,d]."""
+    return jnp.einsum("tu,ub,ubd->btd", act, x, r)
+
+
+def k_adjoint_ref(act, y, r):
+    """(K^T y)[u,B] = sum_{t,d} act[t,u] * r[u,B,d] * y[B,t,d]."""
+    return jnp.einsum("tu,btd,ubd->ub", act, y, r)
+
+
+def penalty_avg_ref(dem, capinv, cost):
+    """p_avg[u,B] = cost[B]/D * sum_d dem[u,d] * capinv[B,d]."""
+    d = dem.shape[1]
+    return jnp.einsum("ud,bd->ub", dem, capinv) * cost[None, :] / d
+
+
+def penalty_max_ref(dem, capinv, cost):
+    """p_max[u,B] = cost[B] * max_d dem[u,d] * capinv[B,d]."""
+    h = jnp.max(dem[:, None, :] * capinv[None, :, :], axis=2)
+    return h * cost[None, :]
+
+
+def h_avg_ref(dem, capinv):
+    """h_avg[u,B] = 1/D * sum_d dem[u,d] * capinv[B,d]."""
+    d = dem.shape[1]
+    return jnp.einsum("ud,bd->ub", dem, capinv) / d

@@ -1,0 +1,153 @@
+"""L2: the mapping-LP PDHG solver as a JAX compute graph.
+
+The TL-Rightsizing mapping LP (paper section V-B), over padded shapes
+(N tasks, M node-types, T timeslots, D dimensions):
+
+    min  sum_B cost[B] * alpha[B]
+    s.t. sum_B x[u,B] = taskmask[u]                    (dual w, free)
+         rho[B,t,d] * ( K(x)[B,t,d] - alpha[B] ) <= 0  (dual y >= 0)
+         x, alpha >= 0
+
+    K(x)[B,t,d] = sum_u act[t,u] * x[u,B] * r[u,B,d]
+    r[u,B,d]    = dem(u,d) / cap(B,d)
+
+rho carries both row equilibration (Ruiz scaling, computed in Rust) and
+padding masks: rho == 0 on padded (B,t,d) rows removes them.  taskmask
+zeroes the equality row of padded tasks; typemask projects x columns of
+padded node-types to zero each iteration.
+
+The solver is PDHG (Chambolle-Pock) with iterate averaging; one AOT call
+runs a fixed chunk of iterations (lax.fori_loop) and returns both the last
+and the chunk-averaged iterates plus residual diagnostics.  The Rust L3
+driver chains chunks, restarts from the better iterate (PDLP-style restart)
+and retunes the primal weight omega between chunks.  All heavy linear
+algebra goes through the L1 Pallas kernel (k_forward / k_adjoint).
+
+This module is build-time only: aot.py lowers `pdhg_chunk`, `power_iter`
+and `penalty_scores` to HLO text; the Rust runtime executes the artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_matmul import k_forward, k_adjoint
+from .kernels.penalty import penalty_scores  # re-exported for aot.py
+
+__all__ = ["pdhg_chunk", "power_iter", "penalty_scores", "residuals"]
+
+
+def _operators(act, r, rho):
+    """Masked/scaled forward + adjoint closures."""
+
+    def fwd(x, alpha):
+        # rho * (K x - alpha), shape (M, T, D)
+        kx = k_forward(act, x, r)
+        return rho * (kx - alpha[:, None, None])
+
+    def adj(y):
+        # (K^T (rho*y), sum_td rho*y) -- gradient pieces for x and alpha
+        ry = rho * y
+        return k_adjoint(act, ry, r), jnp.sum(ry, axis=(1, 2))
+
+    return fwd, adj
+
+
+def residuals(act, r, rho, c, taskmask, x, alpha, y, w):
+    """Primal/dual residuals + normalized gap for an iterate.
+
+    Returns a (4,) f32 vector: [eq_res, ineq_res, dual_res, gap].
+    """
+    fwd, adj = _operators(act, r, rho)
+    eq_res = jnp.max(jnp.abs(jnp.sum(x, axis=1) - taskmask))
+    ineq_res = jnp.max(jnp.maximum(fwd(x, alpha), 0.0))
+    kty, sum_ry = adj(y)
+    # Stationarity: for x >= 0 need K^T(rho y) - w >= 0 (violation below 0);
+    # for alpha >= 0 need c - sum(rho y) >= 0.
+    dual_x = jnp.max(jnp.maximum(w[:, None] - kty, 0.0))
+    dual_a = jnp.max(jnp.maximum(sum_ry - c, 0.0))
+    dual_res = jnp.maximum(dual_x, dual_a)
+    pobj = jnp.dot(c, alpha)
+    dobj = jnp.dot(w, taskmask)
+    gap = jnp.abs(pobj - dobj) / (1.0 + jnp.abs(pobj) + jnp.abs(dobj))
+    return jnp.stack([eq_res, ineq_res, dual_res, gap])
+
+
+def pdhg_chunk(act, r, rho, c, taskmask, typemask, x0, alpha0, y0, w0,
+               tau, sigma, *, n_iter: int):
+    """Run `n_iter` PDHG iterations from the given state.
+
+    act:      (T, N)   0/1 activity mask (padded rows/cols zero)
+    r:        (N, M, D) demand/capacity ratios (padded entries zero)
+    rho:      (M, T, D) row scaling, zero on padded constraint rows
+    c:        (M,)     node-type costs (padded types zero)
+    taskmask: (N,)     1 for real tasks
+    typemask: (M,)     1 for real node-types
+    x0,alpha0,y0,w0:   warm-start state
+    tau, sigma:        scalar step sizes (tau*sigma*||A||^2 < 1)
+
+    Returns (x, alpha, y, w, xa, alphaa, ya, wa, diag) where the *a values
+    are chunk averages and diag is (8,) = residuals(last) ++ residuals(avg).
+    """
+    fwd, adj = _operators(act, r, rho)
+
+    def body(_, carry):
+        x, a, y, w, sx, sa, sy, sw = carry
+        kty, sum_ry = adj(y)
+        gx = kty - w[:, None]
+        ga = c - sum_ry
+        xn = jnp.maximum(x - tau * gx, 0.0) * typemask[None, :]
+        an = jnp.maximum(a - tau * ga, 0.0) * typemask
+        xb = 2.0 * xn - x
+        ab = 2.0 * an - a
+        yn = jnp.maximum(y + sigma * fwd(xb, ab), 0.0)
+        wn = w + sigma * (taskmask - jnp.sum(xb, axis=1))
+        return (xn, an, yn, wn, sx + xn, sa + an, sy + yn, sw + wn)
+
+    zx, za = jnp.zeros_like(x0), jnp.zeros_like(alpha0)
+    zy, zw = jnp.zeros_like(y0), jnp.zeros_like(w0)
+    x, a, y, w, sx, sa, sy, sw = jax.lax.fori_loop(
+        0, n_iter, body, (x0, alpha0, y0, w0, zx, za, zy, zw))
+    k = jnp.float32(n_iter)
+    xa, aa, ya, wa = sx / k, sa / k, sy / k, sw / k
+    diag = jnp.concatenate([
+        residuals(act, r, rho, c, taskmask, x, a, y, w),
+        residuals(act, r, rho, c, taskmask, xa, aa, ya, wa),
+    ])
+    return x, a, y, w, xa, aa, ya, wa, diag
+
+
+def power_iter(act, r, rho, *, n_iter: int = 40):
+    """Estimate ||A||_2 of the full constraint operator by power iteration.
+
+    A stacks the scaled inequality rows rho*(K x - alpha) and the equality
+    rows sum_B x[u,B].  Deterministic start (ones) -- no RNG in artifacts.
+    """
+    fwd, adj = _operators(act, r, rho)
+    n, m, _ = r.shape
+
+    def apply_ata(x, alpha):
+        y = fwd(x, alpha)                       # (M,T,D)
+        e = jnp.sum(x, axis=1)                  # (N,)
+        kty, sum_ry = adj(y)
+        gx = kty + e[:, None]                   # K^T rho y + E^T e
+        ga = -sum_ry                            # alpha rows of A^T
+        return gx, ga
+
+    def body(_, carry):
+        x, alpha, _ = carry
+        gx, ga = apply_ata(x, alpha)
+        nrm = jnp.sqrt(jnp.sum(gx * gx) + jnp.sum(ga * ga)) + 1e-30
+        return gx / nrm, ga / nrm, nrm
+
+    x0 = jnp.ones((n, m), jnp.float32) / jnp.sqrt(jnp.float32(n * m))
+    a0 = jnp.ones((m,), jnp.float32) / jnp.sqrt(jnp.float32(m))
+    _, _, lam = jax.lax.fori_loop(0, n_iter, body, (x0, a0, jnp.float32(1)))
+    # lam approximates ||A^T A||_2 = ||A||^2.
+    return (jnp.sqrt(lam),)
+
+
+def make_pdhg(n_iter: int):
+    """Chunked-solver entry point with a static iteration count."""
+    return functools.partial(pdhg_chunk, n_iter=n_iter)

@@ -1,0 +1,146 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every property is checked with
+assert_allclose against the reference implementation.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.fused_matmul import (
+    fused_scale_matmul, k_forward, k_adjoint, _pick_block_rows)
+from compile.kernels.penalty import penalty_scores
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, dtype=np.float32):
+    return rng.uniform(-1.0, 1.0, shape).astype(dtype)
+
+
+@st.composite
+def matmul_shapes(draw):
+    t = draw(st.sampled_from([1, 2, 4, 8, 16, 32, 64, 96, 128, 256]))
+    n = draw(st.integers(1, 48))
+    k = draw(st.integers(1, 40))
+    return t, n, k
+
+
+class TestFusedScaleMatmul:
+    @settings(**SETTINGS)
+    @given(shapes=matmul_shapes(), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shapes, seed):
+        t, n, k = shapes
+        rng = np.random.default_rng(seed)
+        a, x, s = _rand(rng, t, n), _rand(rng, n, k), _rand(rng, n, k)
+        got = fused_scale_matmul(a, x, s)
+        want = ref.fused_scale_matmul_ref(a, x, s)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_explicit_block_rows(self):
+        rng = np.random.default_rng(0)
+        a, x, s = _rand(rng, 64, 8, dtype=np.float32), _rand(rng, 8, 4), _rand(rng, 8, 4)
+        for br in (1, 2, 4, 8, 16, 32, 64):
+            got = fused_scale_matmul(a, x, s, block_rows=br)
+            np.testing.assert_allclose(got, a @ (x * s), rtol=2e-5, atol=2e-5)
+
+    def test_bad_block_rows_rejected(self):
+        rng = np.random.default_rng(0)
+        a, x, s = _rand(rng, 6, 4), _rand(rng, 4, 3), _rand(rng, 4, 3)
+        with pytest.raises(AssertionError):
+            fused_scale_matmul(a, x, s, block_rows=4)
+
+    def test_shape_mismatch_rejected(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(AssertionError):
+            fused_scale_matmul(_rand(rng, 4, 5), _rand(rng, 6, 3), _rand(rng, 6, 3))
+
+    def test_zero_operand(self):
+        rng = np.random.default_rng(1)
+        a = np.zeros((32, 8), np.float32)
+        x, s = _rand(rng, 8, 4), _rand(rng, 8, 4)
+        np.testing.assert_array_equal(np.asarray(fused_scale_matmul(a, x, s)), 0.0)
+
+    def test_pick_block_rows(self):
+        assert _pick_block_rows(256) == 128
+        assert _pick_block_rows(96) == 32
+        assert _pick_block_rows(7) == 1
+        for t in (1, 2, 3, 12, 24, 100, 1024):
+            assert t % _pick_block_rows(t) == 0
+
+
+@st.composite
+def op_shapes(draw):
+    t = draw(st.sampled_from([4, 8, 16, 32, 64]))
+    n = draw(st.integers(1, 24))
+    m = draw(st.integers(1, 6))
+    d = draw(st.integers(1, 5))
+    return t, n, m, d
+
+
+class TestConstraintOperator:
+    @settings(**SETTINGS)
+    @given(shapes=op_shapes(), seed=st.integers(0, 2**31 - 1))
+    def test_forward_matches_ref(self, shapes, seed):
+        t, n, m, d = shapes
+        rng = np.random.default_rng(seed)
+        act = (rng.random((t, n)) < 0.5).astype(np.float32)
+        x, r = _rand(rng, n, m), _rand(rng, n, m, d)
+        got = k_forward(act, x, r)
+        want = ref.k_forward_ref(act, x, r)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(shapes=op_shapes(), seed=st.integers(0, 2**31 - 1))
+    def test_adjoint_matches_ref(self, shapes, seed):
+        t, n, m, d = shapes
+        rng = np.random.default_rng(seed)
+        act = (rng.random((t, n)) < 0.5).astype(np.float32)
+        y, r = _rand(rng, m, t, d), _rand(rng, n, m, d)
+        got = k_adjoint(act, y, r)
+        want = ref.k_adjoint_ref(act, y, r)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    @settings(**SETTINGS)
+    @given(shapes=op_shapes(), seed=st.integers(0, 2**31 - 1))
+    def test_adjointness(self, shapes, seed):
+        """<K x, y> == <x, K^T y>: forward and adjoint are true transposes."""
+        t, n, m, d = shapes
+        rng = np.random.default_rng(seed)
+        act = (rng.random((t, n)) < 0.5).astype(np.float32)
+        x, r, y = _rand(rng, n, m), _rand(rng, n, m, d), _rand(rng, m, t, d)
+        lhs = float(jnp.sum(k_forward(act, x, r) * y))
+        rhs = float(jnp.sum(x * k_adjoint(act, y, r)))
+        assert abs(lhs - rhs) <= 1e-3 * (1.0 + abs(lhs))
+
+
+class TestPenaltyKernel:
+    @settings(**SETTINGS)
+    @given(n=st.integers(1, 40), m=st.integers(1, 8), d=st.integers(1, 6),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, m, d, seed):
+        rng = np.random.default_rng(seed)
+        dem = rng.uniform(0.0, 0.5, (n, d)).astype(np.float32)
+        capinv = rng.uniform(1.0, 5.0, (m, d)).astype(np.float32)
+        cost = rng.uniform(0.1, 3.0, m).astype(np.float32)
+        p_avg, p_max, h_avg = penalty_scores(dem, capinv, cost)
+        np.testing.assert_allclose(
+            p_avg, ref.penalty_avg_ref(dem, capinv, cost), rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(
+            p_max, ref.penalty_max_ref(dem, capinv, cost), rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(
+            h_avg, ref.h_avg_ref(dem, capinv), rtol=2e-5, atol=2e-6)
+
+    def test_avg_le_max_times_d(self):
+        """h_avg <= h_max <= D * h_avg (sanity relation between policies)."""
+        rng = np.random.default_rng(7)
+        dem = rng.uniform(0, 0.5, (30, 4)).astype(np.float32)
+        capinv = rng.uniform(1, 5, (5, 4)).astype(np.float32)
+        cost = np.ones(5, np.float32)
+        p_avg, p_max, _ = penalty_scores(dem, capinv, cost)
+        assert np.all(np.asarray(p_avg) <= np.asarray(p_max) + 1e-6)
+        assert np.all(np.asarray(p_max) <= 4 * np.asarray(p_avg) + 1e-6)

@@ -1,0 +1,179 @@
+"""L2 PDHG solver correctness: against scipy.optimize.linprog ground truth.
+
+Builds the dense mapping LP explicitly (the L2 solver never does) and
+checks objective agreement, residual convergence, padding invariance and
+the dual lower-bound property.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import model as M
+
+
+def random_instance(rng, n, m, t, d):
+    dem = rng.uniform(0.02, 0.3, (n, d)).astype(np.float32)
+    cap = rng.uniform(0.5, 1.0, (m, d)).astype(np.float32)
+    cost = rng.uniform(0.5, 3.0, m).astype(np.float32)
+    s = rng.integers(0, t, n)
+    e = np.minimum(t - 1, s + rng.integers(0, max(1, t // 2), n))
+    act = np.zeros((t, n), np.float32)
+    for u in range(n):
+        act[s[u]:e[u] + 1, u] = 1.0
+    r = (dem[:, None, :] / cap[None, :, :]).astype(np.float32)
+    return dem, cap, cost, act, r
+
+
+def scipy_opt(act, r, cost):
+    from scipy.optimize import linprog
+    t, n = act.shape
+    _, m, d = r.shape
+    nv = n * m + m
+    c = np.zeros(nv)
+    c[n * m:] = cost
+    a_eq = np.zeros((n, nv))
+    for u in range(n):
+        a_eq[u, u * m:(u + 1) * m] = 1.0
+    rows = []
+    for b in range(m):
+        for ts in range(t):
+            if not act[ts].any():
+                continue
+            for dd in range(d):
+                row = np.zeros(nv)
+                row[np.arange(n) * m + b] = act[ts] * r[:, b, dd]
+                row[n * m + b] = -1.0
+                rows.append(row)
+    res = linprog(c, A_ub=np.array(rows), b_ub=np.zeros(len(rows)),
+                  A_eq=a_eq, b_eq=np.ones(n), bounds=[(0, None)] * nv,
+                  method="highs")
+    assert res.status == 0
+    return res.fun
+
+
+def solve_pdhg(act, r, cost, chunks=40, iters=200, rho=None):
+    t, n = act.shape
+    _, m, d = r.shape
+    rho = np.ones((m, t, d), np.float32) if rho is None else rho
+    tmask, bmask = np.ones(n, np.float32), np.ones(m, np.float32)
+    nrm = float(M.power_iter(act, r, rho, n_iter=60)[0])
+    tau = sigma = np.float32(0.9 / nrm)
+    x = np.zeros((n, m), np.float32)
+    al = np.zeros(m, np.float32)
+    y = np.zeros((m, t, d), np.float32)
+    w = np.zeros(n, np.float32)
+    step = jax.jit(M.make_pdhg(iters))
+    for _ in range(chunks):
+        x, al, y, w, xa, aa, ya, wa, diag = step(
+            act, r, rho, cost, tmask, bmask, x, al, y, w, tau, sigma)
+        if float(np.max(np.asarray(diag)[:4])) < 1e-6:
+            break
+    return np.asarray(x), np.asarray(al), np.asarray(y), np.asarray(w), \
+        np.asarray(diag)
+
+
+class TestPdhgVsScipy:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_objective_matches(self, seed):
+        rng = np.random.default_rng(seed)
+        n, m, t, d = 12, 3, 8, 2
+        dem, cap, cost, act, r = random_instance(rng, n, m, t, d)
+        want = scipy_opt(act, r, cost)
+        x, al, y, w, diag = solve_pdhg(act, r, cost)
+        got = float(np.dot(cost, al))
+        assert abs(got - want) <= 2e-4 * (1.0 + abs(want))
+
+    def test_residuals_converge(self):
+        rng = np.random.default_rng(3)
+        dem, cap, cost, act, r = random_instance(rng, 16, 4, 8, 3)
+        x, al, y, w, diag = solve_pdhg(act, r, cost)
+        assert np.max(diag[:4]) < 1e-5
+
+    def test_dual_is_lower_bound(self):
+        """sum(w) at convergence lower-bounds the scipy optimum."""
+        rng = np.random.default_rng(4)
+        dem, cap, cost, act, r = random_instance(rng, 12, 3, 8, 2)
+        want = scipy_opt(act, r, cost)
+        x, al, y, w, diag = solve_pdhg(act, r, cost)
+        assert np.sum(w) <= want + 1e-3 * (1 + abs(want))
+
+    def test_row_scaling_invariant(self):
+        """Ruiz-style row scaling must not change the optimum."""
+        rng = np.random.default_rng(5)
+        n, m, t, d = 12, 3, 8, 2
+        dem, cap, cost, act, r = random_instance(rng, n, m, t, d)
+        _, al0, *_ = solve_pdhg(act, r, cost)
+        rho = rng.uniform(0.5, 2.0, (m, t, d)).astype(np.float32)
+        _, al1, *_ = solve_pdhg(act, r, cost, rho=rho)
+        o0, o1 = np.dot(cost, al0), np.dot(cost, al1)
+        assert abs(o0 - o1) <= 5e-4 * (1 + abs(o0))
+
+
+class TestPadding:
+    def test_padding_invariance(self):
+        """Zero-padding tasks/types/slots/dims must not change the optimum."""
+        rng = np.random.default_rng(6)
+        n, m, t, d = 10, 3, 8, 2
+        dem, cap, cost, act, r = random_instance(rng, n, m, t, d)
+        _, al0, *_ = solve_pdhg(act, r, cost)
+        o0 = float(np.dot(cost, al0))
+
+        np_, mp, tp, dp = 16, 5, 16, 3
+        act_p = np.zeros((tp, np_), np.float32)
+        act_p[:t, :n] = act
+        r_p = np.zeros((np_, mp, dp), np.float32)
+        r_p[:n, :m, :d] = r
+        rho_p = np.zeros((mp, tp, dp), np.float32)
+        rho_p[:m, :t, :d] = 1.0
+        cost_p = np.zeros(mp, np.float32)
+        cost_p[:m] = cost
+        tmask = np.zeros(np_, np.float32)
+        tmask[:n] = 1.0
+        bmask = np.zeros(mp, np.float32)
+        bmask[:m] = 1.0
+
+        nrm = float(M.power_iter(act_p, r_p, rho_p, n_iter=60)[0])
+        tau = sigma = np.float32(0.9 / nrm)
+        x = np.zeros((np_, mp), np.float32)
+        al = np.zeros(mp, np.float32)
+        y = np.zeros((mp, tp, dp), np.float32)
+        w = np.zeros(np_, np.float32)
+        step = jax.jit(M.make_pdhg(200))
+        for _ in range(40):
+            x, al, y, w, xa, aa, ya, wa, diag = step(
+                act_p, r_p, rho_p, cost_p, tmask, bmask, x, al, y, w,
+                tau, sigma)
+            if float(np.max(np.asarray(diag)[:4])) < 1e-6:
+                break
+        o1 = float(np.dot(cost_p, al))
+        assert abs(o0 - o1) <= 5e-4 * (1 + abs(o0))
+        # padded x-columns stay empty
+        assert float(np.abs(np.asarray(x)[:, m:]).max()) == 0.0
+
+
+class TestPowerIter:
+    def test_matches_dense_norm(self):
+        """power_iter vs numpy SVD of the explicitly-built operator."""
+        rng = np.random.default_rng(7)
+        n, m, t, d = 8, 2, 4, 2
+        dem, cap, cost, act, r = random_instance(rng, n, m, t, d)
+        rho = np.ones((m, t, d), np.float32)
+        got = float(M.power_iter(act, r, rho, n_iter=200)[0])
+        # dense operator: rows = m*t*d ineq + n eq, cols = n*m + m
+        nv = n * m + m
+        rows = []
+        for b in range(m):
+            for ts in range(t):
+                for dd in range(d):
+                    row = np.zeros(nv)
+                    row[np.arange(n) * m + b] = act[ts] * r[:, b, dd]
+                    row[n * m + b] = -1.0
+                    rows.append(row)
+        for u in range(n):
+            row = np.zeros(nv)
+            row[u * m:(u + 1) * m] = 1.0
+            rows.append(row)
+        want = np.linalg.svd(np.array(rows), compute_uv=False)[0]
+        assert abs(got - want) <= 1e-2 * want

@@ -1,0 +1,51 @@
+//! End-to-end benchmarks: full planner evaluations (all four algorithms +
+//! lower bound) and single planning-service requests — the numbers behind
+//! EXPERIMENTS.md section Perf and the section VI-E reproduction.
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::service::handle_request;
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::util::bench::bench_n;
+use tlrs::util::json::Json;
+
+fn main() {
+    println!("== end-to-end benches ==");
+
+    let planner = Planner::new(Backend::Auto).unwrap();
+
+    // paper-default synthetic scenario
+    let inst = generate(&SynthParams::default(), 1);
+    bench_n("planner_evaluate/synth n=1000,m=10,D=5", 3, || {
+        planner.evaluate(&inst).unwrap()
+    });
+
+    // GCT-like scenario (long timeline -> native backend)
+    let trace = tlrs::io::gct_like::generate_trace(4000, 5);
+    let mut gct = trace.sample_scenario(1000, 10, 1);
+    tlrs::model::CostModel::homogeneous(gct.dims()).apply(&mut gct.node_types);
+    bench_n("planner_evaluate/gct n=1000,m=10", 3, || {
+        planner.evaluate(&gct).unwrap()
+    });
+
+    // single service request (lp-map-f), via the same codepath as TCP
+    let small = generate(&SynthParams { n: 200, m: 5, ..Default::default() }, 2);
+    let req = Json::obj(vec![
+        ("instance", files::instance_to_json(&small)),
+        ("algorithm", Json::Str("lp-map-f".into())),
+    ])
+    .to_string();
+    bench_n("service_request/lp-map-f n=200", 5, || handle_request(&planner, &req));
+
+    bench_n("service_request/penalty-map-f n=200", 5, || {
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&small)),
+            ("algorithm", Json::Str("penalty-map-f".into())),
+        ])
+        .to_string();
+        handle_request(&planner, &req)
+    });
+
+    println!("\n--- planner metrics ---\n{}", planner.metrics.report());
+}

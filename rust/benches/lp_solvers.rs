@@ -1,0 +1,71 @@
+//! LP-solver benchmarks: native sparse-operator PDHG vs the AOT
+//! JAX/Pallas artifact vs exact simplex — the paper's section VI-E
+//! "LP solver takes about 15 min" line item, reproduced at seconds scale.
+
+use std::time::Duration;
+
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::lp::pdhg::Operator;
+use tlrs::lp::solver::{MappingSolver, NativePdhgSolver, SimplexSolver};
+use tlrs::lp::{scaling, MappingLp};
+use tlrs::model::trim;
+use tlrs::runtime::ArtifactSolver;
+use tlrs::util::bench::{bench, bench_n};
+
+fn lp_for(n: usize, m: usize, dims: usize, horizon: u32, seed: u64) -> MappingLp {
+    let inst = generate(&SynthParams { n, m, dims, horizon, ..Default::default() }, seed);
+    let mut lp = MappingLp::from_instance(&trim(&inst).instance);
+    scaling::equilibrate(&mut lp);
+    lp
+}
+
+fn main() {
+    println!("== LP solver benches ==");
+
+    // operator micro-benches: the per-iteration cost
+    for &(n, t) in &[(1000usize, 24u32), (2000, 256)] {
+        let lp = lp_for(n, 10, 5, t, 1);
+        let mut op = Operator::new(&lp);
+        let x = vec![0.1; lp.n * lp.m];
+        let alpha = vec![0.5; lp.m];
+        let y = vec![0.1; lp.m * lp.t * lp.dims];
+        let mut kx = vec![0.0; lp.m * lp.t * lp.dims];
+        let mut gx = vec![0.0; lp.n * lp.m];
+        let mut ga = vec![0.0; lp.m];
+        bench(&format!("operator_forward/n={n},T={t}"), Duration::from_millis(500), || {
+            op.forward(&x, &alpha, &mut kx)
+        });
+        bench(&format!("operator_adjoint/n={n},T={t}"), Duration::from_millis(500), || {
+            op.adjoint(&y, &mut gx, &mut ga)
+        });
+    }
+
+    // full solves (paper default scale)
+    let lp = lp_for(1000, 10, 5, 24, 2);
+    bench_n("pdhg_native/n=1000,m=10,D=5,T=24", 3, || {
+        NativePdhgSolver::default().solve_mapping(&lp).unwrap()
+    });
+
+    if let Ok(artifact) = ArtifactSolver::from_default_dir() {
+        bench_n("pdhg_artifact/n=1000,m=10,D=5,T=24", 3, || {
+            artifact.solve_mapping(&lp).unwrap()
+        });
+    } else {
+        println!("(artifacts not built; skipping artifact solver bench)");
+    }
+
+    // exact simplex on the largest size it can stomach
+    let small = lp_for(30, 3, 2, 8, 3);
+    bench_n("simplex_exact/n=30,m=3,D=2", 3, || {
+        SimplexSolver.solve_mapping(&small).unwrap()
+    });
+
+    // trace-scale native solve (artifact buckets don't reach this T)
+    let trace = tlrs::io::gct_like::generate_trace(4000, 4);
+    let gct = trace.sample_scenario(1000, 10, 1);
+    let mut lp = MappingLp::from_instance(&trim(&gct).instance);
+    scaling::equilibrate(&mut lp);
+    bench_n(&format!("pdhg_native/gct n=1000 T={}", lp.t), 2, || {
+        NativePdhgSolver::default().solve_mapping(&lp).unwrap()
+    });
+}

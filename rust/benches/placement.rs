@@ -1,0 +1,52 @@
+//! L3 placement-engine benchmarks: the O(n·|S|·D·T) hot path of both
+//! algorithms (paper section III, Time Complexity). Regenerates the
+//! placement-side of the section VI-E running-time discussion.
+
+use std::time::Duration;
+
+use tlrs::algo::fill::solve_with_filling;
+use tlrs::algo::penalty_map::{map_tasks, MappingPolicy};
+use tlrs::algo::placement::FitPolicy;
+use tlrs::algo::twophase::solve_with_mapping;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::model::trim;
+use tlrs::util::bench::bench;
+
+fn main() {
+    println!("== placement benches ==");
+    let budget = Duration::from_millis(800);
+
+    for &n in &[250usize, 1000, 4000] {
+        let inst = generate(&SynthParams { n, ..Default::default() }, 1);
+        let tr = trim(&inst).instance;
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+
+        bench(&format!("first_fit/n={n}"), budget, || {
+            solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false)
+        });
+        bench(&format!("similarity_fit/n={n}"), budget, || {
+            solve_with_mapping(&tr, &mapping, FitPolicy::SimilarityFit, false)
+        });
+        bench(&format!("cross_fill/n={n}"), budget, || {
+            solve_with_filling(&tr, &mapping, FitPolicy::FirstFit)
+        });
+    }
+
+    // mapping phase alone (O(n*m*D))
+    let inst = generate(&SynthParams { n: 4000, ..Default::default() }, 2);
+    let tr = trim(&inst).instance;
+    bench("penalty_mapping/n=4000", budget, || {
+        map_tasks(&tr, MappingPolicy::HAvg)
+    });
+
+    // GCT-like shape: long trimmed timeline
+    let trace = tlrs::io::gct_like::generate_trace(4000, 3);
+    let gct = trace.sample_scenario(2000, 13, 1);
+    let tr = trim(&gct).instance;
+    let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+    bench(
+        &format!("first_fit/gct n=2000 T={}", tr.horizon),
+        Duration::from_secs(3),
+        || solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false),
+    );
+}

@@ -1,0 +1,145 @@
+//! The four evaluated algorithms, with the paper's best-of-policy
+//! reporting convention (section VI-A): PenaltyMap and PenaltyMap-F take
+//! the minimum over {h_avg, h_max} x {first-fit, similarity-fit};
+//! LP-map and LP-map-F over the two fitting policies.
+
+use anyhow::Result;
+
+use crate::lp::solver::MappingSolver;
+use crate::model::{Instance, Solution};
+
+use super::lpmap::LpMapReport;
+use super::penalty_map::{map_tasks, MappingPolicy};
+use super::placement::FitPolicy;
+use super::twophase::solve_with_mapping;
+
+/// Which algorithm (figure legend names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    PenaltyMap,
+    PenaltyMapF,
+    LpMap,
+    LpMapF,
+}
+
+impl Algorithm {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algorithm::PenaltyMap => "PenaltyMap",
+            Algorithm::PenaltyMapF => "PenaltyMap-F",
+            Algorithm::LpMap => "LP-map",
+            Algorithm::LpMapF => "LP-map-F",
+        }
+    }
+
+    pub fn uses_lp(&self) -> bool {
+        matches!(self, Algorithm::LpMap | Algorithm::LpMapF)
+    }
+
+    pub fn all() -> [Algorithm; 4] {
+        [Algorithm::PenaltyMap, Algorithm::PenaltyMapF, Algorithm::LpMap, Algorithm::LpMapF]
+    }
+}
+
+const FITS: [FitPolicy; 2] = [FitPolicy::FirstFit, FitPolicy::SimilarityFit];
+const MAPS: [MappingPolicy; 2] = [MappingPolicy::HAvg, MappingPolicy::HMax];
+
+fn best_solution(inst: &Instance, candidates: Vec<Solution>) -> Solution {
+    candidates
+        .into_iter()
+        .min_by(|a, b| a.cost(inst).partial_cmp(&b.cost(inst)).unwrap())
+        .expect("at least one candidate")
+}
+
+/// PenaltyMap / PenaltyMap-F: min over four policy combinations.
+pub fn penalty_map_best(inst: &Instance, cross_fill: bool) -> Solution {
+    let mut candidates = Vec::with_capacity(4);
+    for mp in MAPS {
+        let mapping = map_tasks(inst, mp);
+        for fit in FITS {
+            candidates.push(solve_with_mapping(inst, &mapping, fit, cross_fill));
+        }
+    }
+    best_solution(inst, candidates)
+}
+
+/// LP-map / LP-map-F from a precomputed LP outcome: min over the two
+/// fitting policies (no additional LP solves).
+pub fn lp_place_best(
+    inst: &Instance,
+    outcome: &super::lpmap::LpOutcome,
+    cross_fill: bool,
+) -> Solution {
+    let candidates = FITS
+        .iter()
+        .map(|&fit| super::lpmap::place_lp_outcome(inst, outcome, fit, cross_fill))
+        .collect();
+    best_solution(inst, candidates)
+}
+
+/// LP-map / LP-map-F: one LP solve, then min over the two fitting
+/// policies. Returns the best report (solution + LP diagnostics).
+pub fn lp_map_best(
+    inst: &Instance,
+    solver: &dyn MappingSolver,
+    cross_fill: bool,
+) -> Result<LpMapReport> {
+    let outcome = super::lpmap::solve_lp_mapping(inst, solver)?;
+    let solution = lp_place_best(inst, &outcome, cross_fill);
+    Ok(LpMapReport {
+        solution,
+        mapping: outcome.mapping,
+        lp_objective: outcome.lp_objective,
+        certified_lb: outcome.certified_lb,
+        x_max: outcome.x_max,
+        solver_iterations: outcome.solver_iterations,
+        solver_converged: outcome.solver_converged,
+    })
+}
+
+/// Dispatch by algorithm enum; returns (solution, optional LP report).
+pub fn run(
+    inst: &Instance,
+    algo: Algorithm,
+    solver: &dyn MappingSolver,
+) -> Result<(Solution, Option<LpMapReport>)> {
+    Ok(match algo {
+        Algorithm::PenaltyMap => (penalty_map_best(inst, false), None),
+        Algorithm::PenaltyMapF => (penalty_map_best(inst, true), None),
+        Algorithm::LpMap => {
+            let rep = lp_map_best(inst, solver, false)?;
+            (rep.solution.clone(), Some(rep))
+        }
+        Algorithm::LpMapF => {
+            let rep = lp_map_best(inst, solver, true)?;
+            (rep.solution.clone(), Some(rep))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
+    use crate::model::trim;
+
+    #[test]
+    fn all_algorithms_feasible_and_ordered() {
+        let inst = generate(&SynthParams { n: 150, m: 6, ..Default::default() }, 33);
+        let tr = trim(&inst).instance;
+        let solver = NativePdhgSolver::default();
+        let mut costs = std::collections::HashMap::new();
+        for algo in Algorithm::all() {
+            let (sol, rep) = run(&tr, algo, &solver).unwrap();
+            assert!(sol.verify(&tr).is_ok(), "{algo:?}");
+            costs.insert(algo, sol.cost(&tr));
+            if let Some(rep) = rep {
+                assert!(rep.certified_lb <= sol.cost(&tr) + 1e-6, "{algo:?}");
+            }
+        }
+        // filling variants never lose to their plain versions here
+        assert!(costs[&Algorithm::PenaltyMapF] <= costs[&Algorithm::PenaltyMap] + 1e-9);
+        assert!(costs[&Algorithm::LpMapF] <= costs[&Algorithm::LpMap] + 1e-9);
+    }
+}

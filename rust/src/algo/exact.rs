@@ -1,0 +1,176 @@
+//! Exhaustive exact solver for tiny instances (branch and bound over
+//! task -> node assignments). Used to (a) reproduce "optimal" reference
+//! points like Figure 1's $16 no-timeline packing, and (b) measure true
+//! approximation ratios of the heuristics in tests. Exponential — guarded
+//! to small n.
+
+use crate::model::{Instance, PlacedNode, Solution};
+
+const MAX_TASKS: usize = 12;
+
+/// Compute the optimal solution by branch and bound. Panics if the
+/// instance is larger than MAX_TASKS tasks (use the heuristics instead).
+pub fn optimal(inst: &Instance) -> Solution {
+    assert!(
+        inst.n_tasks() <= MAX_TASKS,
+        "exact solver is exponential; n={} > {MAX_TASKS}",
+        inst.n_tasks()
+    );
+    let dims = inst.dims();
+    let t_len = inst.horizon as usize;
+
+    // State: open nodes (type, usage profile); branch each task into every
+    // open node it fits plus one new node per type.
+    struct Node {
+        type_idx: usize,
+        usage: Vec<f64>,
+        tasks: Vec<usize>,
+    }
+    struct Search<'a> {
+        inst: &'a Instance,
+        dims: usize,
+        t_len: usize,
+        best_cost: f64,
+        best: Option<Vec<(usize, Vec<usize>)>>,
+    }
+    impl<'a> Search<'a> {
+        fn fits(&self, node: &Node, u: usize) -> bool {
+            let task = &self.inst.tasks[u];
+            let cap = &self.inst.node_types[node.type_idx].capacity;
+            for t in task.start..=task.end {
+                for d in 0..self.dims {
+                    if node.usage[t as usize * self.dims + d] + task.demand[d]
+                        > cap[d] + 1e-9
+                    {
+                        return false;
+                    }
+                }
+            }
+            true
+        }
+
+        fn go(&mut self, u: usize, nodes: &mut Vec<Node>, cost: f64) {
+            if cost >= self.best_cost - 1e-12 {
+                return; // bound
+            }
+            if u == self.inst.n_tasks() {
+                self.best_cost = cost;
+                self.best = Some(
+                    nodes
+                        .iter()
+                        .map(|n| (n.type_idx, n.tasks.clone()))
+                        .collect(),
+                );
+                return;
+            }
+            let task = &self.inst.tasks[u];
+            // existing nodes
+            for i in 0..nodes.len() {
+                if self.fits(&nodes[i], u) {
+                    add(&mut nodes[i], self.inst, u, self.dims);
+                    self.go(u + 1, nodes, cost);
+                    remove(&mut nodes[i], self.inst, u, self.dims);
+                }
+            }
+            // new node of each admitting type; skip symmetric duplicates
+            // (only open a new node of type b if no empty node of b exists)
+            for b in 0..self.inst.n_types() {
+                if !self.inst.node_types[b].admits(&task.demand) {
+                    continue;
+                }
+                let mut node = Node {
+                    type_idx: b,
+                    usage: vec![0.0; self.t_len * self.dims],
+                    tasks: Vec::new(),
+                };
+                add(&mut node, self.inst, u, self.dims);
+                nodes.push(node);
+                self.go(u + 1, nodes, cost + self.inst.node_types[b].cost);
+                nodes.pop();
+            }
+        }
+    }
+    fn add(node: &mut Node, inst: &Instance, u: usize, dims: usize) {
+        let task = &inst.tasks[u];
+        for t in task.start..=task.end {
+            for d in 0..dims {
+                node.usage[t as usize * dims + d] += task.demand[d];
+            }
+        }
+        node.tasks.push(u);
+    }
+    fn remove(node: &mut Node, inst: &Instance, u: usize, dims: usize) {
+        let task = &inst.tasks[u];
+        for t in task.start..=task.end {
+            for d in 0..dims {
+                node.usage[t as usize * dims + d] -= task.demand[d];
+            }
+        }
+        node.tasks.pop();
+    }
+
+    let mut search = Search { inst, dims, t_len, best_cost: f64::INFINITY, best: None };
+    search.go(0, &mut Vec::new(), 0.0);
+    let layout = search.best.expect("feasible instance");
+
+    let mut sol = Solution::new(inst.n_tasks());
+    for (i, (type_idx, tasks)) in layout.into_iter().enumerate() {
+        for &u in &tasks {
+            sol.assignment[u] = Some(i);
+        }
+        sol.nodes.push(PlacedNode { type_idx, purchase_order: i, tasks });
+    }
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::algorithms::penalty_map_best;
+    use crate::harness::scenarios::figure1_instance;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    #[test]
+    fn figure1_reference_points() {
+        let inst = figure1_instance();
+        // timeline-aware optimum is the single $10 node
+        let sol = optimal(&inst);
+        assert!(sol.verify(&inst).is_ok());
+        assert!((sol.cost(&inst) - 10.0).abs() < 1e-9);
+        // no-timeline optimum is $16 (one node of each type)
+        let collapsed = inst.collapse_timeline();
+        let sol = optimal(&collapsed);
+        assert!(sol.verify(&collapsed).is_ok());
+        assert!((sol.cost(&collapsed) - 16.0).abs() < 1e-9, "got {}", sol.cost(&collapsed));
+    }
+
+    #[test]
+    fn heuristics_never_beat_optimal() {
+        for seed in 0..6 {
+            let inst = generate(
+                &SynthParams {
+                    n: 7,
+                    m: 3,
+                    dims: 2,
+                    horizon: 6,
+                    dem_range: (0.1, 0.5),
+                    ..Default::default()
+                },
+                seed,
+            );
+            let tr = trim(&inst).instance;
+            let opt = optimal(&tr);
+            assert!(opt.verify(&tr).is_ok());
+            let heur = penalty_map_best(&tr, true);
+            assert!(
+                heur.cost(&tr) >= opt.cost(&tr) - 1e-9,
+                "seed {seed}: heuristic {} < optimal {}",
+                heur.cost(&tr),
+                opt.cost(&tr)
+            );
+            // and the approximation is reasonable on tiny instances
+            assert!(heur.cost(&tr) <= 3.0 * opt.cost(&tr) + 1e-9, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Cross-node-type filling (paper section V-D, Figure 6).
+//!
+//! Node-types are processed in decreasing capacity-per-cost order
+//! (`sum_d cap(B,d) / cost(B)`). For each node-type B: first its own
+//! remaining mapped tasks are placed greedily (purchasing nodes), then
+//! every still-unplaced task — regardless of mapping — gets a chance to
+//! piggy-back into the leftover capacity of B's nodes, in increasing
+//! `h_avg(u|B)` order, never purchasing. Tasks mapped to less
+//! cost-effective node-types thus ride along on cheaper capacity.
+
+use crate::model::{Instance, Solution};
+
+use super::placement::{place_group, select_node, to_solution, FitPolicy, NodeState};
+
+/// Node-type processing order: decreasing capacity per cost.
+pub fn type_order(inst: &Instance) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..inst.n_types()).collect();
+    order.sort_by(|&a, &b| {
+        inst.node_types[b]
+            .capacity_per_cost()
+            .partial_cmp(&inst.node_types[a].capacity_per_cost())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    order
+}
+
+/// Two-phase solve with cross-node-type filling.
+pub fn solve_with_filling(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+) -> Solution {
+    let m = inst.n_types();
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (u, &b) in mapping.iter().enumerate() {
+        groups[b].push(u);
+    }
+    let mut remaining = vec![true; inst.n_tasks()];
+    let mut placed_groups: Vec<Vec<NodeState>> = Vec::with_capacity(m);
+    let mut seq = 0usize;
+
+    for &b in &type_order(inst) {
+        // 1. place this node-type's own still-remaining tasks
+        let own: Vec<usize> =
+            groups[b].iter().copied().filter(|&u| remaining[u]).collect();
+        let mut nodes = place_group(inst, b, &own, policy, &mut seq);
+        for u in &own {
+            remaining[*u] = false;
+        }
+
+        // 2. piggy-back: all remaining tasks, cheapest-footprint first
+        let mut rest: Vec<usize> =
+            (0..inst.n_tasks()).filter(|&u| remaining[u]).collect();
+        rest.sort_by(|&u, &v| {
+            inst.h_avg(u, b)
+                .partial_cmp(&inst.h_avg(v, b))
+                .unwrap()
+                .then(u.cmp(&v))
+        });
+        for u in rest {
+            if let Some(i) = select_node(inst, &nodes, u, policy) {
+                nodes[i].add(inst, u);
+                remaining[u] = false;
+            }
+        }
+        placed_groups.push(nodes);
+    }
+    debug_assert!(remaining.iter().all(|&r| !r), "all tasks placed");
+    to_solution(inst, placed_groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NodeType, Task};
+
+    #[test]
+    fn type_order_by_value() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.1], 0, 0)],
+            vec![
+                NodeType::new("pricey", vec![1.0], 4.0),  // 0.25 cap/cost
+                NodeType::new("value", vec![1.0], 1.0),   // 1.0
+                NodeType::new("mid", vec![0.5], 1.0),     // 0.5
+            ],
+            1,
+        );
+        assert_eq!(type_order(&inst), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn piggyback_avoids_new_node() {
+        // Task 1 is mapped to the expensive type but fits in the leftover
+        // capacity of the node purchased for task 0 -> only one node bought.
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.5], 0, 1),
+                Task::new(1, vec![0.4], 0, 1),
+            ],
+            vec![
+                NodeType::new("value", vec![1.0], 1.0),
+                NodeType::new("pricey", vec![1.0], 3.0),
+            ],
+            2,
+        );
+        let mapping = vec![0, 1];
+        let sol = solve_with_filling(&inst, &mapping, FitPolicy::FirstFit);
+        assert!(sol.verify(&inst).is_ok());
+        assert_eq!(sol.nodes.len(), 1);
+        assert_eq!(sol.nodes[0].type_idx, 0);
+        assert!((sol.cost(&inst) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_piggyback_when_no_room() {
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.9], 0, 1),
+                Task::new(1, vec![0.4], 0, 1),
+            ],
+            vec![
+                NodeType::new("value", vec![1.0], 1.0),
+                NodeType::new("pricey", vec![1.0], 3.0),
+            ],
+            2,
+        );
+        let sol = solve_with_filling(&inst, &[0, 1], FitPolicy::FirstFit);
+        assert!(sol.verify(&inst).is_ok());
+        assert_eq!(sol.nodes.len(), 2);
+        assert!((sol.cost(&inst) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fill_order_prefers_small_tasks() {
+        // leftover space 0.5; two candidates mapped elsewhere: a 0.3 and a
+        // 0.4; filling in increasing h_avg places the 0.3 first, then the
+        // 0.4 cannot fit — deterministic by the paper's ordering.
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.5], 0, 0),
+                Task::new(1, vec![0.4], 0, 0),
+                Task::new(2, vec![0.3], 0, 0),
+            ],
+            vec![
+                NodeType::new("value", vec![1.0], 1.0),
+                NodeType::new("pricey", vec![1.0], 2.0),
+            ],
+            1,
+        );
+        let sol = solve_with_filling(&inst, &[0, 1, 1], FitPolicy::FirstFit);
+        assert!(sol.verify(&inst).is_ok());
+        // node 0 holds tasks 0 and 2; task 1 forced onto pricey type
+        let n0 = &sol.nodes[0];
+        assert!(n0.tasks.contains(&0) && n0.tasks.contains(&2));
+        assert_eq!(sol.nodes.len(), 2);
+    }
+}

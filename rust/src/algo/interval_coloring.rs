@@ -1,0 +1,102 @@
+//! Interval coloring with bandwidths — the D=1, m=1 special case the paper
+//! builds on (section I, Prior Work). Kept as a standalone baseline: the
+//! classical first-fit-by-start-time heuristic with O(1) approximation on
+//! unit-capacity instances, and a clique-load lower bound.
+
+use crate::model::{Instance, Solution};
+
+use super::placement::{place_group, to_solution, FitPolicy};
+
+/// Solve a single-node-type instance by first-fit in start order.
+/// (With m=1 the mapping phase is trivial; this is exactly the paper's
+/// placement phase.) Works for any D; the classic setting is D=1.
+pub fn color(inst: &Instance) -> Solution {
+    assert_eq!(inst.n_types(), 1, "interval coloring needs a single node-type");
+    let tasks: Vec<usize> = (0..inst.n_tasks()).collect();
+    let mut seq = 0;
+    let nodes = place_group(inst, 0, &tasks, FitPolicy::FirstFit, &mut seq);
+    to_solution(inst, vec![nodes])
+}
+
+/// Clique-load lower bound: at any timeslot, total demand / capacity
+/// (rounded up) nodes are needed.
+pub fn clique_bound(inst: &Instance) -> usize {
+    assert_eq!(inst.n_types(), 1);
+    let dims = inst.dims();
+    let cap = &inst.node_types[0].capacity;
+    let mut best = 0usize;
+    for t in 0..inst.horizon {
+        for d in 0..dims {
+            let load: f64 = inst
+                .tasks
+                .iter()
+                .filter(|u| u.active_at(t))
+                .map(|u| u.demand[d])
+                .sum();
+            best = best.max((load / cap[d] - 1e-9).ceil() as usize);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NodeType, Task};
+    use crate::util::rng::Rng;
+
+    fn unit_instance(tasks: Vec<Task>, horizon: u32) -> Instance {
+        Instance::new(tasks, vec![NodeType::new("c", vec![1.0], 1.0)], horizon)
+    }
+
+    #[test]
+    fn disjoint_intervals_share_one_node() {
+        let inst = unit_instance(
+            vec![
+                Task::new(0, vec![0.9], 0, 1),
+                Task::new(1, vec![0.9], 2, 3),
+                Task::new(2, vec![0.9], 4, 5),
+            ],
+            6,
+        );
+        let sol = color(&inst);
+        assert!(sol.verify(&inst).is_ok());
+        assert_eq!(sol.nodes.len(), 1);
+    }
+
+    #[test]
+    fn overlap_forces_split() {
+        let inst = unit_instance(
+            vec![Task::new(0, vec![0.6], 0, 2), Task::new(1, vec![0.6], 1, 3)],
+            4,
+        );
+        let sol = color(&inst);
+        assert_eq!(sol.nodes.len(), 2);
+        assert!(clique_bound(&inst) >= 2);
+    }
+
+    #[test]
+    fn random_instances_near_bound() {
+        // first-fit with bandwidths stays within a small constant of the
+        // clique bound on random small-bandwidth instances
+        let mut rng = Rng::new(31);
+        for trial in 0..10 {
+            let tasks: Vec<Task> = (0..120)
+                .map(|i| {
+                    let s = rng.below(20) as u32;
+                    let e = (s + rng.below(6) as u32).min(19);
+                    Task::new(i, vec![rng.uniform(0.05, 0.25)], s, e)
+                })
+                .collect();
+            let inst = unit_instance(tasks, 20);
+            let sol = color(&inst);
+            assert!(sol.verify(&inst).is_ok(), "trial {trial}");
+            let lb = clique_bound(&inst).max(1);
+            assert!(
+                sol.nodes.len() <= 4 * lb,
+                "trial {trial}: {} nodes vs bound {lb}",
+                sol.nodes.len()
+            );
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Post-placement local search — the paper's first "fruitful research"
+//! avenue (section VII): bridging the residual gap between the heuristic
+//! solutions and the lower bound on hard instances.
+//!
+//! Two moves, applied to a fixed point:
+//!   1. *Drain*: try to empty the least-valuable nodes (highest cost per
+//!      peak utilization) by relocating each of their tasks into any other
+//!      node with room; an emptied node is returned (cost saved).
+//!   2. *Downgrade*: replace a node with a strictly cheaper node-type that
+//!      still fits its load profile.
+//!
+//! Both moves only ever reduce cost, so the loop terminates; every
+//! intermediate state is capacity-feasible.
+
+use crate::model::{Instance, PlacedNode, Solution};
+
+/// Load profile of one node, supporting add/remove/fit queries.
+struct NodeLoad {
+    type_idx: usize,
+    usage: Vec<f64>,
+    tasks: Vec<usize>,
+}
+
+impl NodeLoad {
+    fn new(inst: &Instance, node: &PlacedNode) -> Self {
+        let dims = inst.dims();
+        let mut usage = vec![0.0; inst.horizon as usize * dims];
+        for &u in &node.tasks {
+            let t = &inst.tasks[u];
+            for ts in t.start..=t.end {
+                for d in 0..dims {
+                    usage[ts as usize * dims + d] += t.demand[d];
+                }
+            }
+        }
+        NodeLoad { type_idx: node.type_idx, usage, tasks: node.tasks.clone() }
+    }
+
+    fn fits(&self, inst: &Instance, u: usize) -> bool {
+        let task = &inst.tasks[u];
+        let dims = inst.dims();
+        let cap = &inst.node_types[self.type_idx].capacity;
+        for ts in task.start..=task.end {
+            for d in 0..dims {
+                if self.usage[ts as usize * dims + d] + task.demand[d] > cap[d] + 1e-9 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn add(&mut self, inst: &Instance, u: usize) {
+        let task = &inst.tasks[u];
+        let dims = inst.dims();
+        for ts in task.start..=task.end {
+            for d in 0..dims {
+                self.usage[ts as usize * dims + d] += task.demand[d];
+            }
+        }
+        self.tasks.push(u);
+    }
+
+    fn remove(&mut self, inst: &Instance, u: usize) {
+        let task = &inst.tasks[u];
+        let dims = inst.dims();
+        for ts in task.start..=task.end {
+            for d in 0..dims {
+                self.usage[ts as usize * dims + d] -= task.demand[d];
+            }
+        }
+        self.tasks.retain(|&t| t != u);
+    }
+
+    /// Peak usage per dimension over the timeline.
+    fn peaks(&self, dims: usize) -> Vec<f64> {
+        let mut peaks = vec![0.0f64; dims];
+        for chunk in self.usage.chunks(dims) {
+            for d in 0..dims {
+                peaks[d] = peaks[d].max(chunk[d]);
+            }
+        }
+        peaks
+    }
+}
+
+/// Statistics from one `improve` run.
+#[derive(Clone, Debug, Default)]
+pub struct LocalSearchStats {
+    pub nodes_drained: usize,
+    pub nodes_downgraded: usize,
+    pub tasks_moved: usize,
+    pub cost_before: f64,
+    pub cost_after: f64,
+}
+
+/// Improve a feasible solution in place. Returns statistics.
+pub fn improve(inst: &Instance, sol: &mut Solution, max_rounds: usize) -> LocalSearchStats {
+    let dims = inst.dims();
+    let mut stats = LocalSearchStats {
+        cost_before: sol.cost(inst),
+        ..Default::default()
+    };
+    let mut nodes: Vec<NodeLoad> = sol.nodes.iter().map(|n| NodeLoad::new(inst, n)).collect();
+
+    for _round in 0..max_rounds {
+        let mut changed = false;
+
+        // ---- downgrade pass: cheapest admitting type per node ----
+        for node in nodes.iter_mut() {
+            if node.tasks.is_empty() {
+                continue;
+            }
+            let peaks = node.peaks(dims);
+            let current_cost = inst.node_types[node.type_idx].cost;
+            let mut best: Option<(usize, f64)> = None;
+            for (b, ty) in inst.node_types.iter().enumerate() {
+                if ty.cost < current_cost - 1e-12
+                    && peaks.iter().zip(&ty.capacity).all(|(&p, &c)| p <= c + 1e-9)
+                {
+                    if best.map(|(_, c)| ty.cost < c).unwrap_or(true) {
+                        best = Some((b, ty.cost));
+                    }
+                }
+            }
+            if let Some((b, _)) = best {
+                node.type_idx = b;
+                stats.nodes_downgraded += 1;
+                changed = true;
+            }
+        }
+
+        // ---- drain pass: empty expensive low-utilization nodes ----
+        // candidate order: descending cost / peak-utilization
+        let mut order: Vec<usize> = (0..nodes.len()).collect();
+        let value = |nl: &NodeLoad| {
+            let cap = &inst.node_types[nl.type_idx].capacity;
+            let util = nl
+                .peaks(dims)
+                .iter()
+                .zip(cap)
+                .map(|(&p, &c)| p / c)
+                .fold(0.0f64, f64::max);
+            inst.node_types[nl.type_idx].cost * (1.0 - util)
+        };
+        order.sort_by(|&a, &b| value(&nodes[b]).partial_cmp(&value(&nodes[a])).unwrap());
+
+        for &i in &order {
+            if nodes[i].tasks.is_empty() {
+                continue;
+            }
+            // tentatively relocate every task of node i elsewhere
+            let tasks: Vec<usize> = nodes[i].tasks.clone();
+            let mut moves: Vec<(usize, usize)> = Vec::with_capacity(tasks.len());
+            let mut ok = true;
+            for &u in &tasks {
+                nodes[i].remove(inst, u);
+                let mut placed = false;
+                for j in 0..nodes.len() {
+                    if j != i && !nodes[j].tasks.is_empty() && nodes[j].fits(inst, u) {
+                        nodes[j].add(inst, u);
+                        moves.push((u, j));
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                stats.nodes_drained += 1;
+                stats.tasks_moved += moves.len();
+                changed = true;
+            } else {
+                // roll back
+                for &(u, j) in moves.iter().rev() {
+                    nodes[j].remove(inst, u);
+                    nodes[i].add(inst, u);
+                }
+                // re-add the task that failed placement
+                for &u in &tasks {
+                    if !nodes[i].tasks.contains(&u)
+                        && !nodes.iter().any(|n| n.tasks.contains(&u))
+                    {
+                        nodes[i].add(inst, u);
+                    }
+                }
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    // rebuild the solution from surviving nodes
+    let mut out = Solution::new(inst.n_tasks());
+    for node in nodes.into_iter().filter(|n| !n.tasks.is_empty()) {
+        let idx = out.nodes.len();
+        for &u in &node.tasks {
+            out.assignment[u] = Some(idx);
+        }
+        out.nodes.push(PlacedNode {
+            type_idx: node.type_idx,
+            purchase_order: idx,
+            tasks: node.tasks,
+        });
+    }
+    stats.cost_after = out.cost(inst);
+    *sol = out;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::placement::FitPolicy;
+    use crate::algo::twophase::solve_with_mapping;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::{trim, NodeType, Task};
+
+    #[test]
+    fn drains_obviously_wasteful_node() {
+        // two nodes each holding one tiny task -> local search merges them
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.2], 0, 1), Task::new(1, vec![0.2], 2, 3)],
+            vec![NodeType::new("a", vec![1.0], 5.0)],
+            4,
+        );
+        let mut sol = Solution::new(2);
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0] });
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 1, tasks: vec![1] });
+        sol.assignment = vec![Some(0), Some(1)];
+        let stats = improve(&inst, &mut sol, 5);
+        assert!(sol.verify(&inst).is_ok());
+        assert_eq!(sol.nodes.len(), 1);
+        assert_eq!(stats.nodes_drained, 1);
+        assert!(stats.cost_after < stats.cost_before);
+    }
+
+    #[test]
+    fn downgrades_oversized_node() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.3], 0, 0)],
+            vec![
+                NodeType::new("big", vec![1.0], 10.0),
+                NodeType::new("small", vec![0.4], 2.0),
+            ],
+            1,
+        );
+        let mut sol = Solution::new(1);
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0] });
+        sol.assignment = vec![Some(0)];
+        let stats = improve(&inst, &mut sol, 5);
+        assert!(sol.verify(&inst).is_ok());
+        assert_eq!(stats.nodes_downgraded, 1);
+        assert_eq!(sol.nodes[0].type_idx, 1);
+        assert_eq!(sol.cost(&inst), 2.0);
+    }
+
+    #[test]
+    fn never_increases_cost_and_stays_feasible() {
+        for seed in 0..6u64 {
+            let inst = generate(&SynthParams { n: 120, m: 5, ..Default::default() }, seed);
+            let tr = trim(&inst).instance;
+            let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+            let mut sol = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+            let before = sol.cost(&tr);
+            let stats = improve(&tr, &mut sol, 10);
+            assert!(sol.verify(&tr).is_ok(), "seed {seed}");
+            assert!(sol.cost(&tr) <= before + 1e-9, "seed {seed}");
+            assert!((stats.cost_after - sol.cost(&tr)).abs() < 1e-9, "seed {seed}");
+            assert!(stats.cost_before >= stats.cost_after, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! Lower bounds on the optimal cluster cost.
+//!
+//! The paper normalizes every reported cost by the LP lower bound
+//! (section VI-A). We report the best of:
+//!   - the certified dual bound of the mapping LP (section V-B: the LP
+//!     optimum lower-bounds cost(opt); our bound is a feasible dual point,
+//!     so it lower-bounds the LP optimum and hence cost(opt)),
+//!   - the congestion bound of Lemma 1 (cheap, no LP solve).
+
+use anyhow::Result;
+
+use crate::lp::solver::MappingSolver;
+use crate::lp::{dual, scaling, MappingLp};
+use crate::model::Instance;
+
+#[derive(Clone, Debug)]
+pub struct LowerBoundReport {
+    /// Certified LP dual bound.
+    pub lp_bound: f64,
+    /// Lemma-1 congestion bound.
+    pub congestion_bound: f64,
+    /// Approximate LP objective (diagnostic; not a certified bound).
+    pub lp_objective: f64,
+}
+
+impl LowerBoundReport {
+    /// The normalizer used in every figure.
+    pub fn best(&self) -> f64 {
+        self.lp_bound.max(self.congestion_bound)
+    }
+}
+
+/// Compute lower bounds for a (timeline-trimmed) instance.
+pub fn lower_bound(inst: &Instance, solver: &dyn MappingSolver) -> Result<LowerBoundReport> {
+    let mut lp = MappingLp::from_instance(inst);
+    scaling::equilibrate(&mut lp);
+    let sol = solver.solve_mapping(&lp)?;
+    let lp_bound = if sol.y.is_empty() {
+        sol.objective
+    } else {
+        dual::certified_bound(&lp, &sol.y).0
+    };
+    Ok(LowerBoundReport {
+        lp_bound,
+        congestion_bound: dual::congestion_bound(&lp),
+        lp_objective: sol.objective,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::placement::FitPolicy;
+    use crate::algo::twophase::solve_with_mapping;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
+    use crate::model::trim;
+
+    #[test]
+    fn bounds_below_any_algorithm() {
+        for seed in 0..4 {
+            let inst = generate(&SynthParams { n: 100, m: 5, ..Default::default() }, seed);
+            let tr = trim(&inst).instance;
+            let lb = lower_bound(&tr, &NativePdhgSolver::default()).unwrap();
+            let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+            let sol = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+            assert!(
+                lb.best() <= sol.cost(&tr) + 1e-6,
+                "seed {seed}: lb {} vs cost {}",
+                lb.best(),
+                sol.cost(&tr)
+            );
+            assert!(lb.best() > 0.0);
+            assert!(lb.congestion_bound <= lb.lp_objective + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! LP-map: the paper's improved mapping strategy (section V).
+//!
+//! Solve the mapping LP once, round each task to its argmax node-type
+//! (near-integrality, Lemma 4 / Figure 5 — `x_max` is exported so the
+//! harness can regenerate the figure), then run the shared placement
+//! phase, optionally with cross-node-type filling (LP-map-F). The LP
+//! solve is decoupled from placement so one solve can feed all
+//! fit-policy/filling variants.
+
+use anyhow::Result;
+
+use crate::lp::dual;
+use crate::lp::scaling;
+use crate::lp::solver::MappingSolver;
+use crate::lp::MappingLp;
+use crate::model::{Instance, Solution};
+
+use super::placement::FitPolicy;
+use super::twophase::solve_with_mapping;
+
+/// Result of the LP mapping phase (placement-independent).
+#[derive(Clone, Debug)]
+pub struct LpOutcome {
+    /// Primary rounded mapping (argmax of the crossover solution).
+    pub mapping: Vec<usize>,
+    /// Alternative LP-derived roundings (top-k-mass restrictions etc.);
+    /// the placement phase picks the cheapest. On the degenerate optimal
+    /// faces of homogeneous cost models the LP cannot distinguish
+    /// packable from fragmented mappings, so rounding variants matter.
+    pub alternates: Vec<Vec<usize>>,
+    /// Per-task `x_max(u) = max_B x*(u,B)` — Figure 5's series.
+    pub x_max: Vec<f64>,
+    /// LP objective (approximate for first-order backends).
+    pub lp_objective: f64,
+    /// Certified dual lower bound on the LP optimum (valid normalizer).
+    pub certified_lb: f64,
+    pub solver_iterations: usize,
+    pub solver_converged: bool,
+}
+
+/// Full LP-map result: outcome + a placed solution.
+#[derive(Clone, Debug)]
+pub struct LpMapReport {
+    pub solution: Solution,
+    pub mapping: Vec<usize>,
+    pub lp_objective: f64,
+    pub certified_lb: f64,
+    pub x_max: Vec<f64>,
+    pub solver_iterations: usize,
+    pub solver_converged: bool,
+}
+
+/// Per-type congestion peaks implied by a fractional assignment — the
+/// tightest alpha for which x is feasible (used as the crossover budget).
+fn implied_alpha(lp: &crate::lp::MappingLp, x: &[f64]) -> Vec<f64> {
+    let mut op = crate::lp::pdhg::Operator::new(lp);
+    let mut buf = vec![0.0; lp.m * lp.t * lp.dims];
+    op.forward(x, &vec![0.0; lp.m], &mut buf);
+    let mut alpha = vec![0.0f64; lp.m];
+    for b in 0..lp.m {
+        for ts in 0..lp.t {
+            for d in 0..lp.dims {
+                let rho = lp.rho_at(b, d);
+                if rho > 0.0 {
+                    let v = buf[(b * lp.t + ts) * lp.dims + d] / rho;
+                    alpha[b] = alpha[b].max(v);
+                }
+            }
+        }
+    }
+    alpha
+}
+
+/// Concentrating roundings: restrict each task to its argmax among the
+/// k node-types carrying the most total fractional mass (k = 1..3),
+/// falling back to the global admissible argmax when none of the top-k
+/// admit the task. Counters placement fragmentation when the LP optimum
+/// is degenerate across many equally cost-effective types.
+fn top_k_mass_mappings(inst: &Instance, x: &[f64]) -> Vec<Vec<usize>> {
+    let (n, m) = (inst.n_tasks(), inst.n_types());
+    let mut mass: Vec<(usize, f64)> = (0..m)
+        .map(|b| (b, (0..n).map(|u| x[u * m + b]).sum()))
+        .collect();
+    mass.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    let mut out = Vec::new();
+    for k in 1..=3usize.min(m) {
+        let allowed: Vec<usize> = mass[..k].iter().map(|&(b, _)| b).collect();
+        let mapping: Vec<usize> = (0..n)
+            .map(|u| {
+                let pick = allowed
+                    .iter()
+                    .copied()
+                    .filter(|&b| inst.node_types[b].admits(&inst.tasks[u].demand))
+                    .max_by(|&a, &b| {
+                        x[u * m + a].partial_cmp(&x[u * m + b]).unwrap()
+                    });
+                match pick {
+                    Some(b) => b,
+                    None => {
+                        // fall back to the global admissible argmax
+                        (0..m)
+                            .filter(|&b| {
+                                inst.node_types[b].admits(&inst.tasks[u].demand)
+                            })
+                            .max_by(|&a, &b| {
+                                x[u * m + a].partial_cmp(&x[u * m + b]).unwrap()
+                            })
+                            .expect("task fits some type")
+                    }
+                }
+            })
+            .collect();
+        out.push(mapping);
+    }
+    out.dedup();
+    out
+}
+
+/// Round a fractional assignment to the argmax admissible node-type.
+/// Inadmissible types are skipped; ties break toward lower index.
+pub fn round_mapping(inst: &Instance, x: &[f64]) -> (Vec<usize>, Vec<f64>) {
+    let (n, m) = (inst.n_tasks(), inst.n_types());
+    let mut mapping = Vec::with_capacity(n);
+    let mut x_max = Vec::with_capacity(n);
+    for u in 0..n {
+        let mut arg = usize::MAX;
+        let mut best = f64::NEG_INFINITY;
+        for b in 0..m {
+            if !inst.node_types[b].admits(&inst.tasks[u].demand) {
+                continue;
+            }
+            let v = x[u * m + b];
+            if v > best {
+                best = v;
+                arg = b;
+            }
+        }
+        assert!(arg != usize::MAX, "task {u} fits no node-type");
+        mapping.push(arg);
+        // report the raw max over all types (figure 5 semantics)
+        let raw = (0..m).map(|b| x[u * m + b]).fold(f64::NEG_INFINITY, f64::max);
+        x_max.push(raw);
+    }
+    (mapping, x_max)
+}
+
+/// Phase 1 only: solve + round. The instance should be timeline-trimmed.
+pub fn solve_lp_mapping(inst: &Instance, solver: &dyn MappingSolver) -> Result<LpOutcome> {
+    let mut lp = MappingLp::from_instance(inst);
+    scaling::equilibrate(&mut lp);
+    let sol = solver.solve_mapping(&lp)?;
+    // First-order backends return interior-face points; crossover pulls
+    // them to a near-vertex solution (Lemma 4 near-integrality) without
+    // changing the objective. Exact backends are already basic.
+    let x = if sol.y.is_empty() {
+        sol.x.clone()
+    } else {
+        // alpha is implied by x at the optimum: recompute per-type peaks
+        let alpha = implied_alpha(&lp, &sol.x);
+        crate::lp::crossover::crossover(&lp, &sol.x, &alpha, 1e-4).0
+    };
+    let (mapping, x_max) = round_mapping(inst, &x);
+    let mut alternates = top_k_mass_mappings(inst, &sol.x);
+    // argmax of the raw (pre-crossover) solution is a further candidate
+    alternates.push(round_mapping(inst, &sol.x).0);
+    alternates.retain(|alt| alt != &mapping);
+    alternates.dedup();
+    let certified_lb = if sol.y.is_empty() {
+        // exact backend: the objective itself is the bound
+        sol.objective
+    } else {
+        dual::certified_bound(&lp, &sol.y).0
+    };
+    Ok(LpOutcome {
+        mapping,
+        alternates,
+        x_max,
+        lp_objective: sol.objective,
+        certified_lb,
+        solver_iterations: sol.iterations,
+        solver_converged: sol.converged,
+    })
+}
+
+/// Phase 2: place a previously-computed LP mapping — the primary rounding
+/// plus every alternate, keeping the cheapest feasible placement.
+pub fn place_lp_outcome(
+    inst: &Instance,
+    outcome: &LpOutcome,
+    policy: FitPolicy,
+    cross_fill: bool,
+) -> Solution {
+    let mut best = solve_with_mapping(inst, &outcome.mapping, policy, cross_fill);
+    for alt in &outcome.alternates {
+        let sol = solve_with_mapping(inst, alt, policy, cross_fill);
+        if sol.cost(inst) < best.cost(inst) {
+            best = sol;
+        }
+    }
+    best
+}
+
+/// Convenience: run both phases.
+pub fn lp_map(
+    inst: &Instance,
+    solver: &dyn MappingSolver,
+    policy: FitPolicy,
+    cross_fill: bool,
+) -> Result<LpMapReport> {
+    let outcome = solve_lp_mapping(inst, solver)?;
+    let solution = place_lp_outcome(inst, &outcome, policy, cross_fill);
+    Ok(LpMapReport {
+        solution,
+        mapping: outcome.mapping,
+        lp_objective: outcome.lp_objective,
+        certified_lb: outcome.certified_lb,
+        x_max: outcome.x_max,
+        solver_iterations: outcome.solver_iterations,
+        solver_converged: outcome.solver_converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::{NativePdhgSolver, SimplexSolver};
+    use crate::model::trim;
+
+    #[test]
+    fn produces_feasible_and_bounded() {
+        let inst = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, 21);
+        let tr = trim(&inst).instance;
+        let rep = lp_map(&tr, &NativePdhgSolver::default(), FitPolicy::FirstFit, false).unwrap();
+        assert!(rep.solution.verify(&tr).is_ok());
+        assert!(rep.certified_lb <= rep.solution.cost(&tr) + 1e-6);
+        assert!(rep.certified_lb > 0.0);
+        assert_eq!(rep.x_max.len(), 80);
+    }
+
+    #[test]
+    fn near_integrality_manifest() {
+        // paper Figure 5: most tasks are (nearly) integrally assigned
+        let inst = generate(&SynthParams { n: 120, m: 5, ..Default::default() }, 22);
+        let tr = trim(&inst).instance;
+        let rep = lp_map(&tr, &NativePdhgSolver::default(), FitPolicy::FirstFit, false).unwrap();
+        let frac_near_integral =
+            rep.x_max.iter().filter(|&&v| v > 0.9).count() as f64 / 120.0;
+        assert!(frac_near_integral > 0.5, "only {frac_near_integral} near-integral");
+    }
+
+    #[test]
+    fn rounding_respects_admissibility() {
+        use crate::model::{NodeType, Task};
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.8], 0, 0)],
+            vec![
+                NodeType::new("small", vec![0.5], 0.1),
+                NodeType::new("big", vec![1.0], 1.0),
+            ],
+            1,
+        );
+        // fractional solution prefers the small type, but it can't fit
+        let (mapping, _) = round_mapping(&inst, &[0.9, 0.1]);
+        assert_eq!(mapping, vec![1]);
+    }
+
+    #[test]
+    fn one_solve_feeds_all_variants() {
+        let inst = generate(&SynthParams { n: 60, m: 4, ..Default::default() }, 24);
+        let tr = trim(&inst).instance;
+        let outcome = solve_lp_mapping(&tr, &NativePdhgSolver::default()).unwrap();
+        for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+            for fill in [false, true] {
+                let sol = place_lp_outcome(&tr, &outcome, policy, fill);
+                assert!(sol.verify(&tr).is_ok());
+                assert!(outcome.certified_lb <= sol.cost(&tr) + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn simplex_backend_end_to_end() {
+        let inst = generate(
+            &SynthParams { n: 12, m: 3, dims: 2, horizon: 6, dem_range: (0.05, 0.3), ..Default::default() },
+            23,
+        );
+        let tr = trim(&inst).instance;
+        let rep = lp_map(&tr, &SimplexSolver, FitPolicy::SimilarityFit, true).unwrap();
+        assert!(rep.solution.verify(&tr).is_ok());
+        assert!(rep.lp_objective <= rep.solution.cost(&tr) + 1e-6);
+    }
+}

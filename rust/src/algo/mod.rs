@@ -1,0 +1,17 @@
+//! TL-Rightsizing algorithms: the paper's contribution layer.
+
+pub mod algorithms;
+pub mod exact;
+pub mod fill;
+pub mod interval_coloring;
+pub mod local_search;
+pub mod lowerbound;
+pub mod lpmap;
+pub mod online;
+pub mod penalty_map;
+pub mod placement;
+pub mod segregate;
+pub mod twophase;
+
+pub use algorithms::Algorithm;
+pub use placement::FitPolicy;

@@ -1,0 +1,77 @@
+//! Online TL-Rightsizing baseline: tasks arrive in start-time order and
+//! must be placed immediately (online interval coloring with bandwidths,
+//! the paper's second prior-work stream, generalized to multiple
+//! dimensions and node-types). No remapping, no lookahead: each arrival
+//! is mapped by the penalty rule and first-fit into the purchased pool,
+//! buying a new node of its penalty-best type when nothing fits.
+//!
+//! Serves as an ablation anchor: how much of the offline algorithms' win
+//! comes from seeing the whole workload up front.
+
+use crate::model::{Instance, Solution};
+
+use super::penalty_map::{map_tasks, MappingPolicy};
+use super::placement::{select_node, to_solution, FitPolicy, NodeState};
+
+/// Place tasks online (start order, ties by index). Cross-type reuse is
+/// allowed on arrival — the online player may use any open node.
+pub fn solve_online(inst: &Instance, policy: FitPolicy) -> Solution {
+    let mapping = map_tasks(inst, MappingPolicy::HAvg);
+    let mut order: Vec<usize> = (0..inst.n_tasks()).collect();
+    order.sort_by_key(|&u| (inst.tasks[u].start, u));
+
+    let mut nodes: Vec<NodeState> = Vec::new();
+    let mut seq = 0usize;
+    for u in order {
+        match select_node(inst, &nodes, u, policy) {
+            Some(i) => nodes[i].add(inst, u),
+            None => {
+                let b = mapping[u];
+                let mut node = NodeState::new(inst, b, seq);
+                seq += 1;
+                assert!(node.fits(inst, u), "mapping must admit task {u}");
+                node.add(inst, u);
+                nodes.push(node);
+            }
+        }
+    }
+    to_solution(inst, vec![nodes])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::algorithms::penalty_map_best;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    #[test]
+    fn online_is_feasible() {
+        for seed in 0..5u64 {
+            let inst = generate(&SynthParams { n: 100, m: 5, ..Default::default() }, seed);
+            let tr = trim(&inst).instance;
+            for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+                let sol = solve_online(&tr, policy);
+                assert!(sol.verify(&tr).is_ok(), "seed {seed} {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn offline_usually_wins() {
+        // aggregate over seeds: the offline best-of-policies should not
+        // lose to the online player
+        let mut online_total = 0.0;
+        let mut offline_total = 0.0;
+        for seed in 0..5u64 {
+            let inst = generate(&SynthParams { n: 150, m: 6, ..Default::default() }, seed + 10);
+            let tr = trim(&inst).instance;
+            online_total += solve_online(&tr, FitPolicy::FirstFit).cost(&tr);
+            offline_total += penalty_map_best(&tr, true).cost(&tr);
+        }
+        assert!(
+            offline_total <= online_total + 1e-9,
+            "offline {offline_total} vs online {online_total}"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! PenaltyMap: the paper's baseline two-phase algorithm (section III).
+//!
+//! Mapping phase: each task goes to the node-type minimizing the penalty
+//! `p(u|B) = cost(B) * h(u|B)` where the relative demand `h` is either the
+//! dimension-average (`h_avg`) or the dimension-max (`h_max`).
+//! Placement phase: per node-type greedy placement (placement.rs).
+
+use crate::model::Instance;
+
+/// Which relative-demand aggregate drives the penalty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MappingPolicy {
+    HAvg,
+    HMax,
+}
+
+/// Penalty matrix p[u*m + b] for the chosen policy. Inadmissible pairs
+/// (demand exceeding capacity in some dimension) get +inf so the argmin
+/// never maps a task onto a node-type it cannot fit alone.
+pub fn penalty_matrix(inst: &Instance, policy: MappingPolicy) -> Vec<f64> {
+    let (n, m) = (inst.n_tasks(), inst.n_types());
+    let mut p = vec![f64::INFINITY; n * m];
+    for u in 0..n {
+        for b in 0..m {
+            if !inst.node_types[b].admits(&inst.tasks[u].demand) {
+                continue;
+            }
+            let h = match policy {
+                MappingPolicy::HAvg => inst.h_avg(u, b),
+                MappingPolicy::HMax => inst.h_max(u, b),
+            };
+            p[u * m + b] = inst.node_types[b].cost * h;
+        }
+    }
+    p
+}
+
+/// Minimum penalty per task, `p*(u)` — the congestion-bound ingredient
+/// (paper Lemma 1).
+pub fn min_penalties(inst: &Instance, policy: MappingPolicy) -> Vec<f64> {
+    let m = inst.n_types();
+    penalty_matrix(inst, policy)
+        .chunks(m)
+        .map(|row| row.iter().copied().fold(f64::INFINITY, f64::min))
+        .collect()
+}
+
+/// The penalty-based mapping: task -> argmin_B p(u|B).
+pub fn map_tasks(inst: &Instance, policy: MappingPolicy) -> Vec<usize> {
+    let m = inst.n_types();
+    let p = penalty_matrix(inst, policy);
+    (0..inst.n_tasks())
+        .map(|u| {
+            let row = &p[u * m..(u + 1) * m];
+            let (mut best, mut arg) = (f64::INFINITY, usize::MAX);
+            for (b, &v) in row.iter().enumerate() {
+                if v < best {
+                    best = v;
+                    arg = b;
+                }
+            }
+            assert!(arg != usize::MAX, "task {u} fits no node-type");
+            arg
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NodeType, Task};
+
+    fn inst() -> Instance {
+        Instance::new(
+            vec![
+                Task::new(0, vec![0.4, 0.1], 0, 0), // cpu-heavy
+                Task::new(1, vec![0.1, 0.4], 0, 0), // mem-heavy
+            ],
+            vec![
+                NodeType::new("cpu", vec![1.0, 0.25], 1.0),
+                NodeType::new("mem", vec![0.25, 1.0], 1.0),
+            ],
+            1,
+        )
+    }
+
+    #[test]
+    fn maps_to_matching_shape() {
+        let inst = inst();
+        let map = map_tasks(&inst, MappingPolicy::HAvg);
+        assert_eq!(map, vec![0, 1]);
+        let map = map_tasks(&inst, MappingPolicy::HMax);
+        assert_eq!(map, vec![0, 1]);
+    }
+
+    #[test]
+    fn penalty_values() {
+        let inst = inst();
+        let p = penalty_matrix(&inst, MappingPolicy::HAvg);
+        // task 0 on cpu-type: (0.4/1.0 + 0.1/0.25)/2 = 0.4
+        assert!((p[0] - 0.4).abs() < 1e-12);
+        // task 0 on mem-type: inadmissible (0.4 > cap 0.25) -> +inf
+        assert!(p[1].is_infinite());
+        // task 1 on mem-type: (0.1/0.25 + 0.4/1.0)/2 = 0.4
+        assert!((p[3] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inadmissible_pair_excluded() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.5, 0.5], 0, 0)],
+            vec![
+                NodeType::new("small", vec![0.4, 1.0], 0.1),
+                NodeType::new("big", vec![1.0, 1.0], 5.0),
+            ],
+            1,
+        );
+        // cheap type can't hold the task; must map to the big one
+        assert_eq!(map_tasks(&inst, MappingPolicy::HAvg), vec![1]);
+        let p = penalty_matrix(&inst, MappingPolicy::HAvg);
+        assert!(p[0].is_infinite());
+    }
+
+    #[test]
+    fn cost_breaks_ties() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.1], 0, 0)],
+            vec![
+                NodeType::new("expensive", vec![1.0], 10.0),
+                NodeType::new("cheap", vec![1.0], 1.0),
+            ],
+            1,
+        );
+        assert_eq!(map_tasks(&inst, MappingPolicy::HAvg), vec![1]);
+    }
+
+    #[test]
+    fn min_penalties_are_row_minima() {
+        let inst = inst();
+        let mp = min_penalties(&inst, MappingPolicy::HAvg);
+        assert!((mp[0] - 0.4).abs() < 1e-12);
+        assert!((mp[1] - 0.4).abs() < 1e-12);
+    }
+}

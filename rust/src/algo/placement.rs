@@ -1,0 +1,292 @@
+//! Greedy placement engine (the paper's Placement Phase, section III).
+//!
+//! Tasks mapped to one node-type are processed in increasing start-time
+//! order; each is placed into an already-purchased node when it fits
+//! (first-fit: earliest purchased; similarity-fit: highest cosine
+//! similarity between the task's normalized demand and the node's
+//! remaining capacity over the task span), else a new node is purchased.
+
+use crate::model::{Instance, PlacedNode, Solution};
+
+/// Node-selection policy among feasible already-purchased nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitPolicy {
+    /// Paper's first-fit: the node purchased the earliest.
+    FirstFit,
+    /// Paper's similarity-fit: maximum cosine similarity between the
+    /// capacity-normalized demand and remaining-capacity vectors, summed
+    /// over the task's active timeslots.
+    SimilarityFit,
+}
+
+/// Mutable state of one purchased node: its load profile over (t, d).
+#[derive(Clone, Debug)]
+pub struct NodeState {
+    pub type_idx: usize,
+    pub purchase_order: usize,
+    pub tasks: Vec<usize>,
+    /// usage[t*dims + d]: aggregate demand of active tasks.
+    usage: Vec<f64>,
+    /// Cached capacity vector of the node-type.
+    cap: Vec<f64>,
+    dims: usize,
+}
+
+const EPS: f64 = 1e-9;
+
+impl NodeState {
+    pub fn new(inst: &Instance, type_idx: usize, purchase_order: usize) -> Self {
+        let dims = inst.dims();
+        NodeState {
+            type_idx,
+            purchase_order,
+            tasks: Vec::new(),
+            usage: vec![0.0; inst.horizon as usize * dims],
+            cap: inst.node_types[type_idx].capacity.clone(),
+            dims,
+        }
+    }
+
+    /// Does task `u` fit without violating capacity anywhere in its span?
+    pub fn fits(&self, inst: &Instance, u: usize) -> bool {
+        let task = &inst.tasks[u];
+        let dims = self.dims;
+        for t in task.start..=task.end {
+            let base = t as usize * dims;
+            for d in 0..dims {
+                if self.usage[base + d] + task.demand[d] > self.cap[d] + EPS {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Cosine similarity between capacity-normalized demand and remaining
+    /// capacity, aggregated over the task span (paper section III,
+    /// "Alternative Mapping and Fitting Policies").
+    pub fn similarity(&self, inst: &Instance, u: usize) -> f64 {
+        let task = &inst.tasks[u];
+        let dims = self.dims;
+        let mut dot = 0.0;
+        let mut nrm_d = 0.0;
+        let mut nrm_r = 0.0;
+        for t in task.start..=task.end {
+            let base = t as usize * dims;
+            for d in 0..dims {
+                let dem = task.demand[d] / self.cap[d];
+                let rem = (self.cap[d] - self.usage[base + d]).max(0.0) / self.cap[d];
+                dot += dem * rem;
+                nrm_d += dem * dem;
+                nrm_r += rem * rem;
+            }
+        }
+        if nrm_d <= 0.0 || nrm_r <= 0.0 {
+            return 0.0;
+        }
+        dot / (nrm_d.sqrt() * nrm_r.sqrt())
+    }
+
+    /// Add task `u` (caller must have checked `fits`).
+    pub fn add(&mut self, inst: &Instance, u: usize) {
+        let task = &inst.tasks[u];
+        let dims = self.dims;
+        for t in task.start..=task.end {
+            let base = t as usize * dims;
+            for d in 0..dims {
+                self.usage[base + d] += task.demand[d];
+            }
+        }
+        self.tasks.push(u);
+    }
+
+    /// Peak load fraction over the node's busiest (t, d).
+    pub fn peak_utilization(&self) -> f64 {
+        let dims = self.dims;
+        let mut best: f64 = 0.0;
+        for chunk in self.usage.chunks(dims) {
+            for d in 0..dims {
+                best = best.max(chunk[d] / self.cap[d]);
+            }
+        }
+        best
+    }
+}
+
+/// Pick a feasible node per policy; `None` if nothing fits.
+pub fn select_node(
+    inst: &Instance,
+    nodes: &[NodeState],
+    u: usize,
+    policy: FitPolicy,
+) -> Option<usize> {
+    match policy {
+        FitPolicy::FirstFit => nodes.iter().position(|b| b.fits(inst, u)),
+        FitPolicy::SimilarityFit => {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, b) in nodes.iter().enumerate() {
+                if b.fits(inst, u) {
+                    let s = b.similarity(inst, u);
+                    if best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                        best = Some((i, s));
+                    }
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+    }
+}
+
+/// Place the given tasks (already filtered to one node-type) in increasing
+/// start order, purchasing nodes of `type_idx` as needed. `purchase_seq`
+/// is the global purchase counter shared across node-types.
+pub fn place_group(
+    inst: &Instance,
+    type_idx: usize,
+    tasks: &[usize],
+    policy: FitPolicy,
+    purchase_seq: &mut usize,
+) -> Vec<NodeState> {
+    let mut order: Vec<usize> = tasks.to_vec();
+    order.sort_by_key(|&u| (inst.tasks[u].start, u));
+    let mut nodes: Vec<NodeState> = Vec::new();
+    for u in order {
+        match select_node(inst, &nodes, u, policy) {
+            Some(i) => nodes[i].add(inst, u),
+            None => {
+                let mut b = NodeState::new(inst, type_idx, *purchase_seq);
+                *purchase_seq += 1;
+                assert!(
+                    b.fits(inst, u),
+                    "task {u} cannot fit an empty node of type {type_idx}: \
+                     mapping must respect admissibility"
+                );
+                b.add(inst, u);
+                nodes.push(b);
+            }
+        }
+    }
+    nodes
+}
+
+/// Assemble a [`Solution`] from per-type node lists.
+pub fn to_solution(inst: &Instance, groups: Vec<Vec<NodeState>>) -> Solution {
+    let mut sol = Solution::new(inst.n_tasks());
+    for nodes in groups {
+        for b in nodes {
+            let idx = sol.nodes.len();
+            for &u in &b.tasks {
+                sol.assignment[u] = Some(idx);
+            }
+            sol.nodes.push(PlacedNode {
+                type_idx: b.type_idx,
+                purchase_order: b.purchase_order,
+                tasks: b.tasks,
+            });
+        }
+    }
+    sol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NodeType, Task};
+
+    fn inst() -> Instance {
+        Instance::new(
+            vec![
+                Task::new(0, vec![0.6], 0, 2),
+                Task::new(1, vec![0.6], 1, 3),
+                Task::new(2, vec![0.6], 4, 5),
+                Task::new(3, vec![0.3], 0, 5),
+            ],
+            vec![NodeType::new("a", vec![1.0], 2.0)],
+            6,
+        )
+    }
+
+    #[test]
+    fn first_fit_reuses_after_expiry() {
+        let inst = inst();
+        let mut seq = 0;
+        let nodes = place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
+        // tasks 0,1 overlap (1.2 > 1.0) -> 2 nodes; task 2 fits node 0 later
+        assert_eq!(nodes.len(), 2);
+        assert_eq!(nodes[0].tasks, vec![0, 2]);
+        assert_eq!(nodes[1].tasks, vec![1]);
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let inst = inst();
+        let mut seq = 0;
+        let nodes = place_group(&inst, 0, &[0, 1, 2, 3], FitPolicy::FirstFit, &mut seq);
+        let sol = to_solution(&inst, vec![nodes]);
+        assert!(sol.verify(&inst).is_ok());
+    }
+
+    #[test]
+    fn similarity_prefers_complementary_node() {
+        // node 0 holds a balanced task (remaining capacity (0.7,0.7));
+        // node 1 holds a cpu-heavy task (remaining (0.2,0.9)).
+        // A memory-heavy task fits both; cosine similarity picks node 1
+        // (complementary shape), while first-fit would pick node 0.
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.3, 0.3], 0, 0),
+                Task::new(1, vec![0.8, 0.1], 0, 0),
+                Task::new(2, vec![0.1, 0.6], 0, 0),
+            ],
+            vec![NodeType::new("a", vec![1.0, 1.0], 1.0)],
+            1,
+        );
+        let mut seq = 0;
+        let sim = place_group(&inst, 0, &[0, 1, 2], FitPolicy::SimilarityFit, &mut seq);
+        assert_eq!(sim.len(), 2);
+        let node_of_2 = sim.iter().position(|b| b.tasks.contains(&2)).unwrap();
+        assert!(sim[node_of_2].tasks.contains(&1), "similarity: {sim:?}");
+
+        let mut seq = 0;
+        let ff = place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
+        let node_of_2 = ff.iter().position(|b| b.tasks.contains(&2)).unwrap();
+        assert!(ff[node_of_2].tasks.contains(&0), "first-fit: {ff:?}");
+    }
+
+    #[test]
+    fn select_none_when_full() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.9], 0, 0), Task::new(1, vec![0.9], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            1,
+        );
+        let mut seq = 0;
+        let mut nodes = vec![NodeState::new(&inst, 0, seq)];
+        seq += 1;
+        nodes[0].add(&inst, 0);
+        assert_eq!(select_node(&inst, &nodes, 1, FitPolicy::FirstFit), None);
+        let _ = seq;
+    }
+
+    #[test]
+    fn peak_utilization_tracks_load() {
+        let inst = inst();
+        let mut b = NodeState::new(&inst, 0, 0);
+        b.add(&inst, 3);
+        assert!((b.peak_utilization() - 0.3).abs() < 1e-12);
+        b.add(&inst, 0);
+        assert!((b.peak_utilization() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn inadmissible_task_panics() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![1.5], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            1,
+        );
+        let mut seq = 0;
+        place_group(&inst, 0, &[0], FitPolicy::FirstFit, &mut seq);
+    }
+}

@@ -1,0 +1,139 @@
+//! Small/large task segregation (paper section III, after Theorem 3).
+//!
+//! The O(D·min(m,T)) analysis assumes *small* tasks (every demand at most
+//! half of every capacity). The general-case recipe solves the small and
+//! large classes separately and unions the solutions; the paper notes that
+//! in practice segregation is rarely worth it — our ablation bench
+//! (`cargo bench`/harness) quantifies exactly that.
+
+use crate::model::{Instance, Solution};
+
+/// Split task indices into (small, large) per the paper's definition:
+/// small iff for all node-types B and dims d, dem(u,d) <= cap(B,d)/2.
+pub fn split_small_large(inst: &Instance) -> (Vec<usize>, Vec<usize>) {
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    for (u, task) in inst.tasks.iter().enumerate() {
+        let is_small = inst
+            .node_types
+            .iter()
+            .all(|b| task.is_small_for(&b.capacity));
+        if is_small {
+            small.push(u);
+        } else {
+            large.push(u);
+        }
+    }
+    (small, large)
+}
+
+/// Restrict an instance to a subset of tasks; returns the sub-instance and
+/// the original indices (position i in the sub-instance = `keep[i]`).
+pub fn sub_instance(inst: &Instance, keep: &[usize]) -> Instance {
+    let tasks = keep
+        .iter()
+        .enumerate()
+        .map(|(new_id, &u)| {
+            let t = &inst.tasks[u];
+            crate::model::Task::new(new_id as u64, t.demand.clone(), t.start, t.end)
+        })
+        .collect();
+    Instance::new(tasks, inst.node_types.clone(), inst.horizon)
+}
+
+/// Union two sub-solutions back into a solution over the full instance.
+pub fn merge_solutions(
+    inst: &Instance,
+    parts: &[(&[usize], &Solution)],
+) -> Solution {
+    let mut out = Solution::new(inst.n_tasks());
+    for (keep, sol) in parts {
+        let base = out.nodes.len();
+        for node in &sol.nodes {
+            let mut mapped = node.clone();
+            mapped.purchase_order = base + mapped.purchase_order;
+            mapped.tasks = node.tasks.iter().map(|&u| keep[u]).collect();
+            for &orig in &mapped.tasks {
+                out.assignment[orig] = Some(out.nodes.len());
+            }
+            out.nodes.push(mapped);
+        }
+    }
+    out
+}
+
+/// Solve with segregation: apply `solve` to the small and large classes
+/// independently and union the results.
+pub fn solve_segregated(
+    inst: &Instance,
+    mut solve: impl FnMut(&Instance) -> Solution,
+) -> Solution {
+    let (small, large) = split_small_large(inst);
+    if small.is_empty() || large.is_empty() {
+        return solve(inst);
+    }
+    let si = sub_instance(inst, &small);
+    let li = sub_instance(inst, &large);
+    let ss = solve(&si);
+    let ls = solve(&li);
+    merge_solutions(inst, &[(&small, &ss), (&large, &ls)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::placement::FitPolicy;
+    use crate::algo::twophase::solve_with_mapping;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    #[test]
+    fn split_definition() {
+        let inst = generate(
+            &SynthParams { n: 50, m: 3, dem_range: (0.01, 0.6), ..Default::default() },
+            5,
+        );
+        let (small, large) = split_small_large(&inst);
+        assert_eq!(small.len() + large.len(), 50);
+        for &u in &small {
+            for b in &inst.node_types {
+                assert!(inst.tasks[u].is_small_for(&b.capacity));
+            }
+        }
+        for &u in &large {
+            assert!(inst
+                .node_types
+                .iter()
+                .any(|b| !inst.tasks[u].is_small_for(&b.capacity)));
+        }
+    }
+
+    #[test]
+    fn segregated_solution_feasible() {
+        let inst = generate(
+            &SynthParams { n: 120, m: 5, dem_range: (0.01, 0.5), ..Default::default() },
+            6,
+        );
+        let tr = trim(&inst).instance;
+        let sol = solve_segregated(&tr, |i| {
+            let mapping = map_tasks(i, MappingPolicy::HAvg);
+            solve_with_mapping(i, &mapping, FitPolicy::FirstFit, false)
+        });
+        assert!(sol.verify(&tr).is_ok());
+    }
+
+    #[test]
+    fn all_small_shortcut() {
+        let inst = generate(&SynthParams { n: 40, m: 3, ..Default::default() }, 7);
+        let tr = trim(&inst).instance;
+        let (small, large) = split_small_large(&tr);
+        assert_eq!(small.len(), 40);
+        assert!(large.is_empty());
+        let sol = solve_segregated(&tr, |i| {
+            let mapping = map_tasks(i, MappingPolicy::HAvg);
+            solve_with_mapping(i, &mapping, FitPolicy::FirstFit, false)
+        });
+        assert!(sol.verify(&tr).is_ok());
+    }
+}

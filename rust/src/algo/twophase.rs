@@ -1,0 +1,76 @@
+//! The two-phase solve framework shared by every mapping strategy
+//! (paper Figures 3 and 6): partition tasks by their mapped node-type,
+//! place each group greedily, and optionally run cross-node-type filling.
+
+use crate::model::{Instance, Solution};
+
+use super::fill;
+use super::placement::{place_group, to_solution, FitPolicy};
+
+/// Solve with a given task -> node-type mapping.
+///
+/// Without filling, node-types are independent and processed in index
+/// order (paper Figure 3). With filling, they are processed in decreasing
+/// capacity-per-cost order and leftover capacity is offered to the tasks
+/// of later node-types (paper Figure 6).
+pub fn solve_with_mapping(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+    cross_fill: bool,
+) -> Solution {
+    assert_eq!(mapping.len(), inst.n_tasks());
+    if cross_fill {
+        return fill::solve_with_filling(inst, mapping, policy);
+    }
+    let m = inst.n_types();
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (u, &b) in mapping.iter().enumerate() {
+        groups[b].push(u);
+    }
+    let mut seq = 0usize;
+    let placed: Vec<_> = (0..m)
+        .map(|b| place_group(inst, b, &groups[b], policy, &mut seq))
+        .collect();
+    to_solution(inst, placed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    #[test]
+    fn produces_feasible_solutions() {
+        for seed in 0..5 {
+            let inst = generate(&SynthParams { n: 120, m: 5, ..Default::default() }, seed);
+            let tr = trim(&inst).instance;
+            let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+            for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+                for fill in [false, true] {
+                    let sol = solve_with_mapping(&tr, &mapping, policy, fill);
+                    assert!(sol.verify(&tr).is_ok(), "seed {seed} {policy:?} fill={fill}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn filling_never_costs_more() {
+        for seed in 0..5 {
+            let inst = generate(&SynthParams { n: 150, m: 6, ..Default::default() }, seed + 50);
+            let tr = trim(&inst).instance;
+            let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+            let plain = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+            let filled = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, true);
+            assert!(
+                filled.cost(&tr) <= plain.cost(&tr) + 1e-9,
+                "seed {seed}: fill {} > plain {}",
+                filled.cost(&tr),
+                plain.cost(&tr)
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Experiment/scenario configuration (Table I defaults + JSON overrides).
+
+use anyhow::{bail, Result};
+
+use crate::io::synth::{CostKind, SynthParams};
+use crate::util::json::Json;
+
+/// Which LP backend the coordinator should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Artifact when a bucket fits, native PDHG otherwise.
+    Auto,
+    Native,
+    Artifact,
+    Simplex,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "auto" => Backend::Auto,
+            "native" => Backend::Native,
+            "artifact" => Backend::Artifact,
+            "simplex" => Backend::Simplex,
+            other => bail!("unknown backend '{other}'"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Backend::Auto => "auto",
+            Backend::Native => "native",
+            Backend::Artifact => "artifact",
+            Backend::Simplex => "simplex",
+        }
+    }
+}
+
+/// Source of the workload.
+#[derive(Clone, Debug)]
+pub enum TraceKind {
+    Synthetic(SynthParams),
+    /// GCT-like trace scenario: (n, m); pricing-based cost when `priced`.
+    GctLike { n: usize, m: usize, priced: bool },
+}
+
+/// One experiment scenario (a figure data point before seeding).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub label: String,
+    pub trace: TraceKind,
+    pub seeds: Vec<u64>,
+}
+
+/// Table I defaults (paper section VI-A).
+pub fn table1_defaults() -> SynthParams {
+    SynthParams::default()
+}
+
+/// Parse a synthetic-scenario override from JSON, starting at defaults.
+pub fn synth_from_json(v: &Json) -> Result<SynthParams> {
+    let mut p = table1_defaults();
+    if let Some(n) = v.get("n").as_usize() {
+        p.n = n;
+    }
+    if let Some(m) = v.get("m").as_usize() {
+        p.m = m;
+    }
+    if let Some(d) = v.get("dims").as_usize() {
+        p.dims = d;
+    }
+    if let Some(t) = v.get("horizon").as_usize() {
+        p.horizon = t as u32;
+    }
+    if let Some(r) = v.get("dem_range").to_f64_vec() {
+        if r.len() != 2 {
+            bail!("dem_range needs two entries");
+        }
+        p.dem_range = (r[0], r[1]);
+    }
+    if let Some(r) = v.get("cap_range").to_f64_vec() {
+        if r.len() != 2 {
+            bail!("cap_range needs two entries");
+        }
+        p.cap_range = (r[0], r[1]);
+    }
+    match v.get("cost_model").as_str() {
+        None | Some("homogeneous") => {}
+        Some("heterogeneous") => {
+            let e = v.get("exponent").as_f64().unwrap_or(1.0);
+            p.cost_model = CostKind::HeterogeneousRandom { exponent: e };
+        }
+        Some(other) => bail!("unknown cost_model '{other}'"),
+    }
+    Ok(p)
+}
+
+/// Default seed list: 5 random inputs per scenario (paper section VI-A).
+pub fn default_seeds(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![1, 2]
+    } else {
+        vec![1, 2, 3, 4, 5]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn defaults_match_table1() {
+        let p = table1_defaults();
+        assert_eq!(p.n, 1000);
+        assert_eq!(p.m, 10);
+        assert_eq!(p.dims, 5);
+        assert_eq!(p.horizon, 24);
+        assert_eq!(p.cap_range, (0.2, 1.0));
+        assert_eq!(p.dem_range, (0.01, 0.1));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let v = json::parse(
+            r#"{"n": 200, "dims": 3, "dem_range": [0.05, 0.2],
+                "cost_model": "heterogeneous", "exponent": 2.0}"#,
+        )
+        .unwrap();
+        let p = synth_from_json(&v).unwrap();
+        assert_eq!(p.n, 200);
+        assert_eq!(p.dims, 3);
+        assert_eq!(p.dem_range, (0.05, 0.2));
+        assert!(matches!(p.cost_model, CostKind::HeterogeneousRandom { exponent } if exponent == 2.0));
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(Backend::parse("quantum").is_err());
+        let v = json::parse(r#"{"dem_range": [0.1]}"#).unwrap();
+        assert!(synth_from_json(&v).is_err());
+        let v = json::parse(r#"{"cost_model": "mystery"}"#).unwrap();
+        assert!(synth_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn seeds() {
+        assert_eq!(default_seeds(false).len(), 5);
+        assert_eq!(default_seeds(true).len(), 2);
+    }
+}

@@ -1,0 +1,96 @@
+//! Lightweight metrics registry: counters and wall-time accumulators,
+//! shared across the planner's worker threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, (f64, u64)>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Time a closure and accumulate under `name`. Returns its result.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        let dt = t0.elapsed().as_secs_f64();
+        let mut timers = self.timers.lock().unwrap();
+        let e = timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += dt;
+        e.1 += 1;
+        r
+    }
+
+    pub fn timer_total(&self, name: &str) -> f64 {
+        self.timers.lock().unwrap().get(name).map(|e| e.0).unwrap_or(0.0)
+    }
+
+    pub fn timer_count(&self, name: &str) -> u64 {
+        self.timers.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Human-readable dump, sorted by key.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k:<40} {v}\n"));
+        }
+        for (k, (total, count)) in self.timers.lock().unwrap().iter() {
+            let avg_ms = if *count > 0 { total / *count as f64 * 1e3 } else { 0.0 };
+            out.push_str(&format!(
+                "timer   {k:<40} total {total:>9.3}s  n={count:<6} avg {avg_ms:.2}ms\n"
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let m = Metrics::new();
+        m.inc("solves", 2);
+        m.inc("solves", 1);
+        assert_eq!(m.counter("solves"), 3);
+        let v = m.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(m.timer_count("work"), 1);
+        assert!(m.timer_total("work") >= 0.0);
+        let rep = m.report();
+        assert!(rep.contains("solves") && rep.contains("work"));
+    }
+
+    #[test]
+    fn thread_safety() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        m.inc("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("n"), 400);
+    }
+}

@@ -1,0 +1,7 @@
+//! L3 coordination: configuration, planning, metrics, and the TCP
+//! planning service.
+
+pub mod config;
+pub mod metrics;
+pub mod planner;
+pub mod service;

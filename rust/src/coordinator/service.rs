@@ -1,0 +1,175 @@
+//! The planning service: a line-delimited JSON-over-TCP request loop.
+//!
+//! Request (one line):
+//!   {"instance": {<io::files instance format>}, "algorithm": "lp-map-f"}
+//! Response (one line):
+//!   {"ok": true, "cost": ..., "normalized_cost": ..., "n_nodes": ...,
+//!    "nodes_per_type": [...], "backend": "...", "seconds": ...}
+//! or {"ok": false, "error": "..."}.
+//!
+//! Python never serves requests; this loop is the deployable L3 artifact.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::io::files;
+use crate::model::trim;
+use crate::util::json::{self, Json};
+
+use super::planner::Planner;
+
+/// Handle one request line; always returns a JSON response line.
+pub fn handle_request(planner: &Planner, line: &str) -> String {
+    match handle_inner(planner, line) {
+        Ok(v) => v.to_string(),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(format!("{e:#}"))),
+        ])
+        .to_string(),
+    }
+}
+
+fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let inst = files::instance_from_json(req.get("instance")).context("instance")?;
+    anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
+    let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
+    let t0 = std::time::Instant::now();
+
+    let tr = trim(&inst).instance;
+    let (solver, backend) = planner.solver_for(&tr);
+    use crate::algo::algorithms::{lp_map_best, penalty_map_best};
+    let (solution, lb) = match algo {
+        "penalty-map" => (penalty_map_best(&tr, false), None),
+        "penalty-map-f" => (penalty_map_best(&tr, true), None),
+        "lp-map" => {
+            let rep = lp_map_best(&tr, solver.as_ref(), false)?;
+            (rep.solution.clone(), Some(rep.certified_lb))
+        }
+        "lp-map-f" => {
+            let rep = lp_map_best(&tr, solver.as_ref(), true)?;
+            (rep.solution.clone(), Some(rep.certified_lb))
+        }
+        other => anyhow::bail!("unknown algorithm '{other}'"),
+    };
+    solution
+        .verify(&tr)
+        .map_err(|v| anyhow::anyhow!("internal: infeasible solution: {v:?}"))?;
+    let cost = solution.cost(&tr);
+    let seconds = t0.elapsed().as_secs_f64();
+    planner.metrics.inc("service_requests", 1);
+
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("algorithm", Json::Str(algo.to_string())),
+        ("cost", Json::Num(cost)),
+        ("n_nodes", Json::Num(solution.nodes.len() as f64)),
+        (
+            "nodes_per_type",
+            Json::Arr(
+                solution
+                    .nodes_per_type(&tr)
+                    .iter()
+                    .map(|&c| Json::Num(c as f64))
+                    .collect(),
+            ),
+        ),
+        ("backend", Json::Str(backend.to_string())),
+        ("seconds", Json::Num(seconds)),
+    ];
+    if let Some(lb) = lb {
+        fields.push(("lower_bound", Json::Num(lb)));
+        fields.push(("normalized_cost", Json::Num(cost / lb.max(1e-12))));
+    }
+    Ok(Json::obj(fields))
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7077"). Connections are
+/// handled sequentially on the accept thread: the PJRT client underneath
+/// the artifact backend is deliberately not shared across threads (the
+/// xla handle is not Sync), and on this single-solver deployment a solve
+/// saturates the machine anyway. Each connection may pipeline many
+/// request lines.
+pub fn serve(planner: Arc<Planner>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("tlrs planning service on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if let Err(e) = serve_connection(&planner, stream) {
+            eprintln!("connection error: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+/// Handle one client connection (used directly by tests).
+pub fn serve_connection(planner: &Planner, stream: TcpStream) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_request(planner, &line);
+        writer.write_all(resp.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Backend;
+    use crate::io::synth::{generate, SynthParams};
+
+    fn planner() -> Planner {
+        Planner::new(Backend::Native).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let p = planner();
+        let inst = generate(&SynthParams { n: 40, m: 3, ..Default::default() }, 4);
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+        ]);
+        let resp = handle_request(&p, &req.to_string());
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{resp}");
+        assert!(v.get("cost").as_f64().unwrap() > 0.0);
+        assert!(v.get("normalized_cost").as_f64().unwrap() >= 1.0 - 1e-6);
+    }
+
+    #[test]
+    fn malformed_requests_dont_crash() {
+        let p = planner();
+        for bad in ["not json", "{}", r#"{"instance": 3}"#,
+                    r#"{"instance": {"horizon": 1, "node_types": [], "tasks": []}}"#] {
+            let resp = handle_request(&p, bad);
+            let v = json::parse(&resp).unwrap();
+            assert_eq!(v.get("ok").as_bool(), Some(false), "input {bad}: {resp}");
+        }
+    }
+
+    #[test]
+    fn unknown_algorithm_rejected() {
+        let p = planner();
+        let inst = generate(&SynthParams { n: 10, m: 2, ..Default::default() }, 1);
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("magic".into())),
+        ]);
+        let resp = handle_request(&p, &req.to_string());
+        assert!(resp.contains("unknown algorithm"));
+    }
+}

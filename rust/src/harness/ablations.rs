@@ -1,0 +1,128 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!   A1 omega adaptation on/off (PDHG primal weight),
+//!   A2 crossover on/off (near-vertex pull before rounding),
+//!   A3 cross-fill node-type ordering (capacity/cost vs index order),
+//!   A4 small/large segregation on/off,
+//!   A5 local search post-pass on/off,
+//!   A6 offline vs online placement.
+//!
+//! Run via `tlrs ablations [--quick]`; each row reports cost normalized by
+//! the certified lower bound, averaged over seeds.
+
+use anyhow::Result;
+
+use crate::algo::algorithms::{lp_map_best, penalty_map_best};
+use crate::algo::local_search;
+use crate::algo::online;
+use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+use crate::algo::placement::FitPolicy;
+use crate::algo::segregate;
+use crate::algo::twophase::solve_with_mapping;
+use crate::coordinator::config::TraceKind;
+use crate::io::synth::SynthParams;
+use crate::lp::pdhg::{self, PdhgOptions};
+use crate::lp::solver::NativePdhgSolver;
+use crate::lp::{scaling, MappingLp};
+use crate::model::trim;
+use crate::util::stats;
+
+use super::runner::instantiate;
+
+pub fn run(quick: bool) -> Result<String> {
+    let seeds: Vec<u64> = if quick { vec![1, 2] } else { vec![1, 2, 3, 4, 5] };
+    let mut out = String::from("== ablations (normalized cost / iterations) ==\n");
+
+    // workloads: synthetic default + GCT-like
+    let traces = [
+        ("synth", TraceKind::Synthetic(SynthParams { n: if quick { 300 } else { 1000 }, ..Default::default() })),
+        ("gct", TraceKind::GctLike { n: if quick { 300 } else { 1000 }, m: 10, priced: false }),
+    ];
+
+    for (tname, trace) in &traces {
+        let mut lp_iters_adapt = Vec::new();
+        let mut lp_iters_plain = Vec::new();
+        let mut norm = vec![Vec::new(); 7]; // variants below
+        for &seed in &seeds {
+            let inst = instantiate(trace, seed);
+            let tr = trim(&inst).instance;
+            let solver = NativePdhgSolver::default();
+
+            // reference: LP-map-F + its certified LB
+            let rep = lp_map_best(&tr, &solver, true)?;
+            let lb = rep.certified_lb;
+            anyhow::ensure!(lb > 0.0);
+
+            // A1: omega adaptation (solver-level; measure iterations)
+            let mut lp = MappingLp::from_instance(&tr);
+            scaling::equilibrate(&mut lp);
+            let plain = pdhg::solve(&lp, &PdhgOptions::default());
+            let adapt = pdhg::solve(
+                &lp,
+                &PdhgOptions { adapt_omega: true, ..Default::default() },
+            );
+            lp_iters_plain.push(plain.iterations as f64);
+            lp_iters_adapt.push(adapt.iterations as f64);
+
+            // A2: rounding without alternates/crossover = raw argmax
+            let raw = {
+                use crate::algo::lpmap::round_mapping;
+                let sol = solver_solution(&lp, &solver)?;
+                let (mapping, _) = round_mapping(&tr, &sol);
+                solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, true)
+            };
+
+            // variants: [lp-map-f, raw-rounding, penalty-f, seg, local, online, pen]
+            norm[0].push(rep.solution.cost(&tr) / lb);
+            norm[1].push(raw.cost(&tr) / lb);
+            let pen_f = penalty_map_best(&tr, true);
+            norm[2].push(pen_f.cost(&tr) / lb);
+            let seg = segregate::solve_segregated(&tr, |i| {
+                let mapping = map_tasks(i, MappingPolicy::HAvg);
+                solve_with_mapping(i, &mapping, FitPolicy::FirstFit, true)
+            });
+            norm[3].push(seg.cost(&tr) / lb);
+            let mut ls = rep.solution.clone();
+            local_search::improve(&tr, &mut ls, 8);
+            norm[4].push(ls.cost(&tr) / lb);
+            norm[5].push(online::solve_online(&tr, FitPolicy::FirstFit).cost(&tr) / lb);
+            norm[6].push(penalty_map_best(&tr, false).cost(&tr) / lb);
+        }
+        out.push_str(&format!("\n[{tname}]\n"));
+        out.push_str(&format!(
+            "  A1 pdhg iterations       : plain {:>9.0}  adapt-omega {:>9.0}\n",
+            stats::mean(&lp_iters_plain),
+            stats::mean(&lp_iters_adapt)
+        ));
+        let row = |label: &str, xs: &[f64]| {
+            format!("  {label:<25}: {:.3} ± {:.3}\n", stats::mean(xs), stats::stddev(xs))
+        };
+        out.push_str(&row("LP-map-F (full)", &norm[0]));
+        out.push_str(&row("A2 raw argmax rounding", &norm[1]));
+        out.push_str(&row("PenaltyMap-F", &norm[2]));
+        out.push_str(&row("A4 segregated PenaltyMapF", &norm[3]));
+        out.push_str(&row("A5 LP-map-F + local search", &norm[4]));
+        out.push_str(&row("A6 online first-fit", &norm[5]));
+        out.push_str(&row("PenaltyMap (no fill)", &norm[6]));
+    }
+    Ok(out)
+}
+
+/// Solve the LP and return the raw fractional x (helper for A2).
+fn solver_solution(
+    lp: &MappingLp,
+    solver: &NativePdhgSolver,
+) -> Result<Vec<f64>> {
+    use crate::lp::solver::MappingSolver;
+    Ok(solver.solve_mapping(lp)?.x)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ablations_run_quick() {
+        let out = super::run(true).unwrap();
+        assert!(out.contains("A1"));
+        assert!(out.contains("LP-map-F (full)"));
+        assert!(out.contains("[gct]"));
+    }
+}

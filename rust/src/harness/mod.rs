@@ -1,0 +1,7 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+
+pub mod ablations;
+pub mod report;
+pub mod runner;
+pub mod scenarios;
+pub mod special;

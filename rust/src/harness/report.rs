@@ -1,0 +1,154 @@
+//! Report formatting: paper-style tables on stdout + JSON result files
+//! for EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::runner::FigureResult;
+
+fn fmt_summary(s: &Summary) -> String {
+    format!("{:.3}±{:.3}", s.mean, s.std)
+}
+
+/// Render one figure as an aligned text table (normalized costs,
+/// mean ± std over seeds; 1.000 = LP lower bound).
+pub fn render_table(res: &FigureResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("== {} — {} ==\n", res.id, res.title));
+    out.push_str(&format!(
+        "{:<14} {:>14} {:>14} {:>14} {:>14} {:>12} {:>10}\n",
+        res.x_name, "PenaltyMap", "PenaltyMap-F", "LP-map", "LP-map-F", "LB(abs)", "backend"
+    ));
+    for row in &res.rows {
+        out.push_str(&format!(
+            "{:<14} {:>14} {:>14} {:>14} {:>14} {:>12.3} {:>10}\n",
+            row.label,
+            fmt_summary(&row.normalized[0]),
+            fmt_summary(&row.normalized[1]),
+            fmt_summary(&row.normalized[2]),
+            fmt_summary(&row.normalized[3]),
+            row.lower_bound.mean,
+            row.backend,
+        ));
+    }
+    // paper-style gain lines
+    if !res.rows.is_empty() {
+        let max_gain = res
+            .rows
+            .iter()
+            .map(|r| (r.normalized[0].mean - r.normalized[3].mean) / r.normalized[3].mean)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let worst_lpf = res
+            .rows
+            .iter()
+            .map(|r| r.normalized[3].mean)
+            .fold(f64::NEG_INFINITY, f64::max);
+        out.push_str(&format!(
+            "-- LP-map-F vs PenaltyMap: up to {:.0}% cheaper; LP-map-F stays within {:.0}% of LB\n",
+            max_gain * 100.0,
+            (worst_lpf - 1.0) * 100.0
+        ));
+    }
+    out
+}
+
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("mean", Json::Num(s.mean)),
+        ("std", Json::Num(s.std)),
+        ("min", Json::Num(s.min)),
+        ("max", Json::Num(s.max)),
+        ("n", Json::Num(s.n as f64)),
+    ])
+}
+
+pub fn to_json(res: &FigureResult) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(res.id.clone())),
+        ("title", Json::Str(res.title.clone())),
+        ("x_name", Json::Str(res.x_name.clone())),
+        (
+            "rows",
+            Json::Arr(
+                res.rows
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::Str(r.label.clone())),
+                            ("penalty_map", summary_json(&r.normalized[0])),
+                            ("penalty_map_f", summary_json(&r.normalized[1])),
+                            ("lp_map", summary_json(&r.normalized[2])),
+                            ("lp_map_f", summary_json(&r.normalized[3])),
+                            ("lower_bound", summary_json(&r.lower_bound)),
+                            ("seconds", Json::arr_f64(&r.seconds)),
+                            ("backend", Json::Str(r.backend.to_string())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write `<dir>/<id>.json`.
+pub fn save_json(res: &FigureResult, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}.json", res.id));
+    std::fs::write(&path, to_json(res).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::runner::Row;
+
+    fn sample() -> FigureResult {
+        FigureResult {
+            id: "figX".into(),
+            title: "test".into(),
+            x_name: "m".into(),
+            rows: vec![Row {
+                label: "m=5".into(),
+                normalized: [
+                    Summary::of(&[1.4, 1.5]),
+                    Summary::of(&[1.3, 1.4]),
+                    Summary::of(&[1.2, 1.3]),
+                    Summary::of(&[1.1, 1.2]),
+                ],
+                lower_bound: Summary::of(&[10.0, 11.0]),
+                seconds: [0.1, 0.1, 0.5, 0.5, 0.0],
+                backend: "pdhg-native",
+            }],
+        }
+    }
+
+    #[test]
+    fn table_renders() {
+        let t = render_table(&sample());
+        assert!(t.contains("PenaltyMap-F"));
+        assert!(t.contains("m=5"));
+        assert!(t.contains("LP-map-F"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = to_json(&sample());
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("id").as_str(), Some("figX"));
+        let rows = parsed.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].get("lp_map_f").get("mean").as_f64().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join(format!("tlrs_report_{}", std::process::id()));
+        save_json(&sample(), &dir).unwrap();
+        assert!(dir.join("figX.json").exists());
+    }
+}

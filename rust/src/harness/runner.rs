@@ -1,0 +1,157 @@
+//! Figure runner: instantiates scenarios, evaluates all algorithms over
+//! the seed set, and aggregates paper-style rows.
+
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use crate::coordinator::config::TraceKind;
+use crate::coordinator::planner::Planner;
+use crate::io::gct_like::{self, Trace};
+use crate::io::synth;
+use crate::model::{CostModel, Instance};
+use crate::util::stats::Summary;
+
+use super::scenarios::Figure;
+
+/// Master GCT-like trace: ~13K tasks, 13 shapes (paper section VI-A),
+/// generated once per process.
+pub fn master_trace() -> &'static Trace {
+    static TRACE: OnceLock<Trace> = OnceLock::new();
+    TRACE.get_or_init(|| gct_like::generate_trace(13_000, 0x6c7_2019))
+}
+
+/// Materialize the instance for a trace kind and seed.
+pub fn instantiate(trace: &TraceKind, seed: u64) -> Instance {
+    match trace {
+        TraceKind::Synthetic(params) => synth::generate(params, seed),
+        TraceKind::GctLike { n, m, priced } => {
+            let mut inst = master_trace().sample_scenario(*n, *m, seed);
+            if !priced {
+                // homogeneous-linear experiments re-price cap-sum = cost
+                CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+            }
+            inst
+        }
+    }
+}
+
+/// Aggregated results for one figure point.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    /// Normalized-cost summaries: [PenaltyMap, PenaltyMap-F, LP-map, LP-map-F].
+    pub normalized: [Summary; 4],
+    pub lower_bound: Summary,
+    /// Mean wall seconds [penalty, penalty_f, lp, lp_f, lb].
+    pub seconds: [f64; 5],
+    pub backend: &'static str,
+}
+
+#[derive(Clone, Debug)]
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub x_name: String,
+    pub rows: Vec<Row>,
+}
+
+/// Evaluate a full figure sweep.
+pub fn run_figure(planner: &Planner, fig: &Figure) -> Result<FigureResult> {
+    let mut rows = Vec::with_capacity(fig.points.len());
+    for point in &fig.points {
+        let mut normalized: [Vec<f64>; 4] = Default::default();
+        let mut lbs = Vec::new();
+        let mut secs = [0.0f64; 5];
+        let mut backend = "";
+        for &seed in &fig.seeds {
+            let inst = instantiate(&point.trace, seed);
+            let row = planner.evaluate(&inst)?;
+            for k in 0..4 {
+                normalized[k].push(row.normalized[k]);
+            }
+            lbs.push(row.lower_bound);
+            for k in 0..5 {
+                secs[k] += row.seconds[k] / fig.seeds.len() as f64;
+            }
+            backend = row.backend_used;
+        }
+        eprintln!(
+            "  [{}] {}: pen={:.3} penF={:.3} lp={:.3} lpF={:.3} ({})",
+            fig.id,
+            point.label,
+            crate::util::stats::mean(&normalized[0]),
+            crate::util::stats::mean(&normalized[1]),
+            crate::util::stats::mean(&normalized[2]),
+            crate::util::stats::mean(&normalized[3]),
+            backend,
+        );
+        rows.push(Row {
+            label: point.label.clone(),
+            normalized: [
+                Summary::of(&normalized[0]),
+                Summary::of(&normalized[1]),
+                Summary::of(&normalized[2]),
+                Summary::of(&normalized[3]),
+            ],
+            lower_bound: Summary::of(&lbs),
+            seconds: secs,
+            backend,
+        });
+    }
+    Ok(FigureResult {
+        id: fig.id.to_string(),
+        title: fig.title.to_string(),
+        x_name: fig.x_name.to_string(),
+        rows,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::Backend;
+    use crate::harness::scenarios;
+
+    #[test]
+    fn instantiate_both_kinds() {
+        let s = instantiate(
+            &TraceKind::Synthetic(synth::SynthParams { n: 30, m: 3, ..Default::default() }),
+            1,
+        );
+        assert_eq!(s.n_tasks(), 30);
+        let g = instantiate(&TraceKind::GctLike { n: 50, m: 5, priced: false }, 1);
+        assert_eq!(g.n_tasks(), 50);
+        // homogeneous re-pricing: cost == capacity sum
+        for b in &g.node_types {
+            let sum: f64 = b.capacity.iter().sum();
+            assert!((b.cost - sum).abs() < 1e-12);
+        }
+        let gp = instantiate(&TraceKind::GctLike { n: 50, m: 5, priced: true }, 1);
+        for b in &gp.node_types {
+            assert!(b.cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn tiny_figure_sweep() {
+        // shrunken fig7a-style sweep exercises the whole runner
+        let planner = Planner::new(Backend::Native).unwrap();
+        let mut fig = scenarios::figure("fig7a", true).unwrap();
+        fig.seeds = vec![1];
+        for p in fig.points.iter_mut() {
+            if let TraceKind::Synthetic(sp) = &mut p.trace {
+                sp.n = 60;
+                sp.m = 4;
+            }
+        }
+        fig.points.truncate(2);
+        let res = run_figure(&planner, &fig).unwrap();
+        assert_eq!(res.rows.len(), 2);
+        for row in &res.rows {
+            for s in &row.normalized {
+                assert!(s.mean >= 1.0 - 1e-6, "normalized {:?}", s);
+            }
+        }
+    }
+}

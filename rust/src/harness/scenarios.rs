@@ -1,0 +1,253 @@
+//! Scenario definitions for every figure/table in the paper's evaluation
+//! (DESIGN.md section 5 maps each id to the paper artifact).
+
+use crate::coordinator::config::{default_seeds, TraceKind};
+use crate::io::synth::{CostKind, SynthParams};
+use crate::model::{Instance, NodeType, Task};
+
+/// One figure data point (x-axis value), evaluated over several seeds.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub label: String,
+    pub trace: TraceKind,
+}
+
+/// A figure: an ordered list of points plus presentation metadata.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub x_name: &'static str,
+    pub points: Vec<Point>,
+    pub seeds: Vec<u64>,
+}
+
+fn synth(f: impl FnOnce(&mut SynthParams)) -> TraceKind {
+    let mut p = SynthParams::default();
+    f(&mut p);
+    TraceKind::Synthetic(p)
+}
+
+/// All figure ids, in paper order.
+pub fn all_ids() -> Vec<&'static str> {
+    vec!["fig1", "fig5", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig9",
+         "fig10", "fig11", "tab1", "rt", "ntl"]
+}
+
+/// Build the sweep for a figure id handled by the generic runner
+/// (fig1/fig5/tab1/rt/ntl have dedicated runners).
+pub fn figure(id: &str, quick: bool) -> Option<Figure> {
+    let seeds = default_seeds(quick);
+    let fig = match id {
+        "fig7a" => Figure {
+            id: "fig7a",
+            title: "[Synthetic-Homogeneous] scaling dimensions D",
+            x_name: "D",
+            points: [2usize, 5, 7]
+                .iter()
+                .map(|&d| Point {
+                    label: format!("D={d}"),
+                    trace: synth(|p| p.dims = d),
+                })
+                .collect(),
+            seeds,
+        },
+        "fig7b" => Figure {
+            id: "fig7b",
+            title: "[Synthetic-Homogeneous] scaling node-types m",
+            x_name: "m",
+            points: [5usize, 10, 15]
+                .iter()
+                .map(|&m| Point {
+                    label: format!("m={m}"),
+                    trace: synth(|p| p.m = m),
+                })
+                .collect(),
+            seeds,
+        },
+        "fig7c" => Figure {
+            id: "fig7c",
+            title: "[Synthetic-Homogeneous] scaling task demand",
+            x_name: "demand",
+            points: [(0.01, 0.05), (0.01, 0.1), (0.01, 0.2)]
+                .iter()
+                .map(|&r| Point {
+                    label: format!("[{},{}]", r.0, r.1),
+                    trace: synth(|p| p.dem_range = r),
+                })
+                .collect(),
+            seeds,
+        },
+        "fig8a" => Figure {
+            id: "fig8a",
+            title: "[GCT-2019-like, Homogeneous] scaling tasks n (m=10)",
+            x_name: "n",
+            points: if quick { vec![250usize, 1000] } else { vec![250, 500, 1000, 1500, 2000] }
+                .into_iter()
+                .map(|n| Point {
+                    label: format!("n={n}"),
+                    trace: TraceKind::GctLike { n, m: 10, priced: false },
+                })
+                .collect(),
+            seeds,
+        },
+        "fig8b" => Figure {
+            id: "fig8b",
+            title: "[GCT-2019-like, Homogeneous] scaling node-types m (n=1000)",
+            x_name: "m",
+            points: [4usize, 7, 10, 13]
+                .iter()
+                .map(|&m| Point {
+                    label: format!("m={m}"),
+                    trace: TraceKind::GctLike { n: 1000, m, priced: false },
+                })
+                .collect(),
+            seeds,
+        },
+        "fig9" => Figure {
+            id: "fig9",
+            title: "[Synthetic-Heterogeneous] varying cost exponent e (D=5, m=10)",
+            x_name: "e",
+            points: [0.33f64, 0.5, 1.0, 2.0, 3.0]
+                .iter()
+                .map(|&e| Point {
+                    label: format!("e={e}"),
+                    trace: synth(|p| {
+                        p.cost_model = CostKind::HeterogeneousRandom { exponent: e }
+                    }),
+                })
+                .collect(),
+            seeds,
+        },
+        "fig10" => Figure {
+            id: "fig10",
+            title: "[GCT-2019-like, Heterogeneous] pricing-model costs, varying m (n=1000)",
+            x_name: "m",
+            points: [4usize, 7, 10, 13]
+                .iter()
+                .map(|&m| Point {
+                    label: format!("m={m}"),
+                    trace: TraceKind::GctLike { n: 1000, m, priced: true },
+                })
+                .collect(),
+            seeds,
+        },
+        "fig11" => Figure {
+            id: "fig11",
+            title: "[GCT-2019-like, All-Scenarios] PenaltyMap-F vs LP-map-F",
+            x_name: "scenario",
+            points: {
+                let mut pts: Vec<Point> = Vec::new();
+                for n in if quick { vec![250usize, 1000] } else { vec![250, 500, 1000, 1500, 2000] } {
+                    pts.push(Point {
+                        label: format!("hom n={n}"),
+                        trace: TraceKind::GctLike { n, m: 10, priced: false },
+                    });
+                }
+                for m in [4usize, 7, 13] {
+                    pts.push(Point {
+                        label: format!("hom m={m}"),
+                        trace: TraceKind::GctLike { n: 1000, m, priced: false },
+                    });
+                    pts.push(Point {
+                        label: format!("priced m={m}"),
+                        trace: TraceKind::GctLike { n: 1000, m, priced: true },
+                    });
+                }
+                pts
+            },
+            seeds,
+        },
+        _ => return None,
+    };
+    Some(fig)
+}
+
+/// The exact Figure 1 illustration instance: three time-limited tasks that
+/// share one big node ($10) when the timeline is exploited, but need $16
+/// of capacity if every task is treated as always-on.
+pub fn figure1_instance() -> Instance {
+    Instance::new(
+        vec![
+            Task::new(1, vec![0.60, 0.60], 0, 1),
+            Task::new(2, vec![0.45, 0.30], 2, 3),
+            Task::new(3, vec![0.40, 0.40], 0, 3),
+        ],
+        vec![
+            NodeType::new("type-1", vec![1.0, 1.0], 10.0),
+            NodeType::new("type-2", vec![0.5, 0.5], 6.0),
+        ],
+        4,
+    )
+}
+
+/// Figure 2's stock-market week modeled as six tasks (one low-demand
+/// long-runner + five market-hours bursts), hourly slots over one week.
+pub fn figure2_tasks() -> Vec<Task> {
+    let mut tasks = vec![Task::new(1, vec![0.05, 0.08], 0, 7 * 24 - 1)];
+    for day in 0..5u32 {
+        // market open 9:00-17:00, Monday = day 0
+        let start = day * 24 + 9;
+        let end = day * 24 + 16;
+        tasks.push(Task::new(2 + day as u64, vec![0.30, 0.20], start, end));
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::placement::FitPolicy;
+    use crate::algo::twophase::solve_with_mapping;
+    use crate::model::trim;
+
+    #[test]
+    fn figure_ids_resolve() {
+        for id in all_ids() {
+            if matches!(id, "fig1" | "fig5" | "tab1" | "rt" | "ntl") {
+                assert!(figure(id, false).is_none());
+            } else {
+                let f = figure(id, false).unwrap();
+                assert!(!f.points.is_empty(), "{id}");
+                assert_eq!(f.id, id);
+            }
+        }
+    }
+
+    #[test]
+    fn quick_mode_shrinks() {
+        let full = figure("fig8a", false).unwrap();
+        let quick = figure("fig8a", true).unwrap();
+        assert!(quick.points.len() < full.points.len());
+        assert!(quick.seeds.len() < full.seeds.len());
+    }
+
+    #[test]
+    fn figure1_story_holds() {
+        let inst = figure1_instance();
+        // timeline-aware: everything fits one type-1 node
+        let tr = trim(&inst).instance;
+        let sol = solve_with_mapping(&tr, &[0, 0, 0], FitPolicy::FirstFit, false);
+        assert!(sol.verify(&tr).is_ok());
+        assert_eq!(sol.nodes.len(), 1);
+        assert!((sol.cost(&tr) - 10.0).abs() < 1e-9);
+
+        // timeline-agnostic: the best packing needs $16
+        let collapsed = inst.collapse_timeline();
+        let mapping = map_tasks(&collapsed, MappingPolicy::HAvg);
+        let sol = solve_with_mapping(&collapsed, &mapping, FitPolicy::FirstFit, true);
+        assert!(sol.verify(&collapsed).is_ok());
+        assert!(sol.cost(&collapsed) >= 16.0 - 1e-9, "got {}", sol.cost(&collapsed));
+    }
+
+    #[test]
+    fn figure2_shape() {
+        let tasks = figure2_tasks();
+        assert_eq!(tasks.len(), 6);
+        assert_eq!(tasks[0].span_len(), 7 * 24);
+        for t in &tasks[1..] {
+            assert_eq!(t.span_len(), 8);
+        }
+    }
+}

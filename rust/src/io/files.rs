@@ -1,0 +1,249 @@
+//! On-disk formats: instances as JSON, task traces as CSV.
+//!
+//! The CSV trace format mirrors the processed GCT-2019 table the paper
+//! builds from BigQuery: one task per line, `id,start,end,dem0,dem1,...`.
+//! Node-type catalogs live in the JSON instance format.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Instance, NodeType, Solution, Task};
+use crate::util::json::{self, Json};
+
+// ---------- JSON instance format ----------------------------------------
+
+pub fn instance_to_json(inst: &Instance) -> Json {
+    Json::obj(vec![
+        ("horizon", Json::Num(inst.horizon as f64)),
+        (
+            "node_types",
+            Json::Arr(
+                inst.node_types
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("name", Json::Str(b.name.clone())),
+                            ("capacity", Json::arr_f64(&b.capacity)),
+                            ("cost", Json::Num(b.cost)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "tasks",
+            Json::Arr(
+                inst.tasks
+                    .iter()
+                    .map(|u| {
+                        Json::obj(vec![
+                            ("id", Json::Num(u.id as f64)),
+                            ("demand", Json::arr_f64(&u.demand)),
+                            ("start", Json::Num(u.start as f64)),
+                            ("end", Json::Num(u.end as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn instance_from_json(v: &Json) -> Result<Instance> {
+    let horizon = v
+        .get("horizon")
+        .as_usize()
+        .context("instance: missing horizon")? as u32;
+    let mut node_types = Vec::new();
+    for b in v.get("node_types").as_arr().context("instance: node_types")? {
+        node_types.push(NodeType::new(
+            b.get("name").as_str().unwrap_or("unnamed"),
+            b.get("capacity").to_f64_vec().context("node_type capacity")?,
+            b.get("cost").as_f64().context("node_type cost")?,
+        ));
+    }
+    let mut tasks = Vec::new();
+    for t in v.get("tasks").as_arr().context("instance: tasks")? {
+        let start = t.get("start").as_usize().context("task start")? as u32;
+        let end = t.get("end").as_usize().context("task end")? as u32;
+        let demand = t.get("demand").to_f64_vec().context("task demand")?;
+        if end < start || demand.is_empty() {
+            bail!("task with invalid span [{start},{end}] or empty demand");
+        }
+        tasks.push(Task::new(
+            t.get("id").as_f64().context("task id")? as u64,
+            demand,
+            start,
+            end,
+        ));
+    }
+    // Validate before Instance::new, which treats violations as programmer
+    // errors (panics) — external input must fail gracefully instead.
+    if node_types.is_empty() {
+        bail!("instance has no node-types");
+    }
+    if horizon == 0 {
+        bail!("instance has zero horizon");
+    }
+    let dims = node_types[0].dims();
+    for b in &node_types {
+        if b.dims() != dims {
+            bail!("node-type {} has {} dims, expected {dims}", b.name, b.dims());
+        }
+    }
+    for u in &tasks {
+        if u.dims() != dims {
+            bail!("task {} has {} dims, expected {dims}", u.id, u.dims());
+        }
+        if u.end >= horizon {
+            bail!("task {} extends beyond horizon {horizon}", u.id);
+        }
+    }
+    Ok(Instance::new(tasks, node_types, horizon))
+}
+
+pub fn save_instance(inst: &Instance, path: &Path) -> Result<()> {
+    fs::write(path, instance_to_json(inst).to_string())
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn load_instance(path: &Path) -> Result<Instance> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    instance_from_json(&v)
+}
+
+// ---------- CSV trace format ---------------------------------------------
+
+/// Write tasks as `id,start,end,dem0,dem1,...` with a header line.
+pub fn save_trace_csv(tasks: &[Task], path: &Path) -> Result<()> {
+    let dims = tasks.first().map(|t| t.dims()).unwrap_or(0);
+    let mut out = String::from("id,start,end");
+    for d in 0..dims {
+        out.push_str(&format!(",dem{d}"));
+    }
+    out.push('\n');
+    for t in tasks {
+        out.push_str(&format!("{},{},{}", t.id, t.start, t.end));
+        for &x in &t.demand {
+            out.push_str(&format!(",{x}"));
+        }
+        out.push('\n');
+    }
+    fs::write(path, out).with_context(|| format!("writing {}", path.display()))
+}
+
+/// Load tasks from the CSV trace format. Rows with missing fields are
+/// rejected (the paper purges them from the sampled trace).
+pub fn load_trace_csv(path: &Path) -> Result<Vec<Task>> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty trace file")?;
+    let dims = header.split(',').count().saturating_sub(3);
+    if dims == 0 {
+        bail!("trace header has no demand columns: {header}");
+    }
+    let mut tasks = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != dims + 3 {
+            bail!("line {}: expected {} fields, got {}", lineno + 2, dims + 3, fields.len());
+        }
+        let id: u64 = fields[0].parse().with_context(|| format!("line {}: id", lineno + 2))?;
+        let start: u32 = fields[1].parse().context("start")?;
+        let end: u32 = fields[2].parse().context("end")?;
+        let demand: Vec<f64> = fields[3..]
+            .iter()
+            .map(|f| f.parse::<f64>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("line {}: demand", lineno + 2))?;
+        tasks.push(Task::new(id, demand, start, end));
+    }
+    Ok(tasks)
+}
+
+// ---------- Solution summary (report artifact) ----------------------------
+
+pub fn solution_to_json(sol: &Solution, inst: &Instance) -> Json {
+    Json::obj(vec![
+        ("cost", Json::Num(sol.cost(inst))),
+        ("n_nodes", Json::Num(sol.nodes.len() as f64)),
+        (
+            "nodes_per_type",
+            Json::Arr(
+                sol.nodes_per_type(inst)
+                    .iter()
+                    .map(|&c| Json::Num(c as f64))
+                    .collect(),
+            ),
+        ),
+        (
+            "nodes",
+            Json::Arr(
+                sol.nodes
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("type", Json::Str(inst.node_types[b.type_idx].name.clone())),
+                            (
+                                "tasks",
+                                Json::Arr(
+                                    b.tasks.iter().map(|&u| Json::Num(u as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+
+    #[test]
+    fn instance_json_roundtrip() {
+        let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 5);
+        let v = instance_to_json(&inst);
+        let back = instance_from_json(&json::parse(&v.to_string()).unwrap()).unwrap();
+        assert_eq!(inst.tasks, back.tasks);
+        assert_eq!(inst.node_types, back.node_types);
+        assert_eq!(inst.horizon, back.horizon);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let inst = generate(&SynthParams { n: 15, m: 2, ..Default::default() }, 6);
+        let dir = std::env::temp_dir().join("tlrs_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        save_trace_csv(&inst.tasks, &path).unwrap();
+        let back = load_trace_csv(&path).unwrap();
+        assert_eq!(inst.tasks, back);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        let dir = std::env::temp_dir().join("tlrs_test_csv2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "id,start,end,dem0\n1,2\n").unwrap();
+        assert!(load_trace_csv(&path).is_err());
+    }
+
+    #[test]
+    fn files_io_errors_surface() {
+        assert!(load_instance(Path::new("/nonexistent/inst.json")).is_err());
+        assert!(load_trace_csv(Path::new("/nonexistent/trace.csv")).is_err());
+    }
+}

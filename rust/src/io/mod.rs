@@ -1,0 +1,8 @@
+//! Loaders and generators: synthetic benchmark, GCT-like trace, pricing,
+//! and on-disk formats.
+
+pub mod files;
+pub mod gct_like;
+pub mod patterns;
+pub mod pricing;
+pub mod synth;

@@ -1,0 +1,181 @@
+//! Workload pattern library — the task archetypes the paper's introduction
+//! motivates: load bursts during peak hours, nightly batch windows,
+//! deadline jobs, duty-cycled sensors and always-on baselines. Patterns
+//! compose into mixed workloads for the examples and ablation studies.
+
+use crate::model::Task;
+use crate::util::rng::Rng;
+
+/// Hourly slots over one week.
+pub const WEEK_HOURS: u32 = 7 * 24;
+
+/// A parametric workload pattern on an hourly one-week timeline.
+#[derive(Clone, Debug)]
+pub enum Pattern {
+    /// Always-on service baseline.
+    Baseline { demand: Vec<f64> },
+    /// Extra demand during daily peak hours [start_hour, end_hour).
+    DailyBurst { demand: Vec<f64>, start_hour: u32, end_hour: u32, weekdays_only: bool },
+    /// Nightly batch window: fixed start hour and duration, every day.
+    NightlyBatch { demand: Vec<f64>, start_hour: u32, duration: u32 },
+    /// One-shot deadline job: release and deadline hours; runs for
+    /// `duration` hours placed as late as possible (paper: scheduled
+    /// tasks with deadlines in edge settings).
+    DeadlineJob { demand: Vec<f64>, release: u32, deadline: u32, duration: u32 },
+    /// Duty-cycled sensor: `on` hours every `period` hours.
+    DutyCycle { demand: Vec<f64>, period: u32, on: u32 },
+}
+
+impl Pattern {
+    /// Expand the pattern into time-limited tasks over the week,
+    /// allocating ids starting at `next_id` (updated in place).
+    pub fn expand(&self, next_id: &mut u64) -> Vec<Task> {
+        let mut out = Vec::new();
+        let mut push = |id: &mut u64, demand: &Vec<f64>, s: u32, e: u32| {
+            out.push(Task::new(*id, demand.clone(), s, e.min(WEEK_HOURS - 1)));
+            *id += 1;
+        };
+        match self {
+            Pattern::Baseline { demand } => push(next_id, demand, 0, WEEK_HOURS - 1),
+            Pattern::DailyBurst { demand, start_hour, end_hour, weekdays_only } => {
+                let days = if *weekdays_only { 0..5 } else { 0..7 };
+                for day in days {
+                    let s = day * 24 + start_hour;
+                    let e = day * 24 + end_hour - 1;
+                    push(next_id, demand, s, e);
+                }
+            }
+            Pattern::NightlyBatch { demand, start_hour, duration } => {
+                for day in 0..7 {
+                    let s = day * 24 + start_hour;
+                    push(next_id, demand, s, s + duration - 1);
+                }
+            }
+            Pattern::DeadlineJob { demand, release, deadline, duration } => {
+                assert!(release + duration <= *deadline, "infeasible deadline job");
+                let s = deadline - duration; // as late as possible
+                push(next_id, demand, s, deadline - 1);
+            }
+            Pattern::DutyCycle { demand, period, on } => {
+                assert!(on <= period && *period > 0);
+                let mut s = 0;
+                while s < WEEK_HOURS {
+                    push(next_id, demand, s, s + on - 1);
+                    s += period;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A randomized mixed workload of the paper's motivating archetypes.
+pub fn mixed_workload(n_services: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    let mut next_id = 0u64;
+    let mut tasks = Vec::new();
+    for _ in 0..n_services {
+        let d2 = |rng: &mut Rng, lo: f64, hi: f64| vec![rng.uniform(lo, hi), rng.uniform(lo, hi)];
+        let pattern = match rng.below(5) {
+            0 => Pattern::Baseline { demand: d2(&mut rng, 0.01, 0.06) },
+            1 => Pattern::DailyBurst {
+                demand: d2(&mut rng, 0.05, 0.2),
+                start_hour: 8 + rng.below(3) as u32,
+                end_hour: 16 + rng.below(4) as u32,
+                weekdays_only: rng.f64() < 0.6,
+            },
+            2 => Pattern::NightlyBatch {
+                demand: d2(&mut rng, 0.1, 0.3),
+                start_hour: 0 + rng.below(4) as u32,
+                duration: 2 + rng.below(4) as u32,
+            },
+            3 => {
+                let release = rng.below(100) as u32;
+                let duration = 2 + rng.below(20) as u32;
+                let deadline = (release + duration + rng.below(40) as u32).min(WEEK_HOURS);
+                Pattern::DeadlineJob {
+                    demand: d2(&mut rng, 0.05, 0.25),
+                    release,
+                    deadline,
+                    duration,
+                }
+            }
+            _ => Pattern::DutyCycle {
+                demand: d2(&mut rng, 0.02, 0.1),
+                period: 4 + rng.below(8) as u32,
+                on: 1 + rng.below(3) as u32,
+            },
+        };
+        tasks.extend(pattern.expand(&mut next_id));
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_spans_week() {
+        let mut id = 0;
+        let t = Pattern::Baseline { demand: vec![0.1] }.expand(&mut id);
+        assert_eq!(t.len(), 1);
+        assert_eq!((t[0].start, t[0].end), (0, WEEK_HOURS - 1));
+    }
+
+    #[test]
+    fn burst_weekdays() {
+        let mut id = 0;
+        let t = Pattern::DailyBurst {
+            demand: vec![0.2],
+            start_hour: 9,
+            end_hour: 17,
+            weekdays_only: true,
+        }
+        .expand(&mut id);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0].start, 9);
+        assert_eq!(t[0].end, 16);
+        assert_eq!(t[4].start, 4 * 24 + 9);
+    }
+
+    #[test]
+    fn nightly_batch_and_duty_cycle() {
+        let mut id = 0;
+        let t = Pattern::NightlyBatch { demand: vec![0.3], start_hour: 2, duration: 3 }
+            .expand(&mut id);
+        assert_eq!(t.len(), 7);
+        assert_eq!((t[0].start, t[0].end), (2, 4));
+        let t = Pattern::DutyCycle { demand: vec![0.1], period: 6, on: 2 }.expand(&mut id);
+        assert_eq!(t.len(), (WEEK_HOURS as usize).div_ceil(6));
+        assert_eq!((t[0].start, t[0].end), (0, 1));
+    }
+
+    #[test]
+    fn deadline_placed_late() {
+        let mut id = 0;
+        let t = Pattern::DeadlineJob { demand: vec![0.2], release: 10, deadline: 30, duration: 5 }
+            .expand(&mut id);
+        assert_eq!((t[0].start, t[0].end), (25, 29));
+    }
+
+    #[test]
+    #[should_panic]
+    fn infeasible_deadline_rejected() {
+        let mut id = 0;
+        Pattern::DeadlineJob { demand: vec![0.2], release: 10, deadline: 12, duration: 5 }
+            .expand(&mut id);
+    }
+
+    #[test]
+    fn mixed_workload_valid() {
+        let tasks = mixed_workload(50, 3);
+        assert!(tasks.len() >= 50);
+        for t in &tasks {
+            assert!(t.end < WEEK_HOURS);
+            assert_eq!(t.dims(), 2);
+        }
+        // deterministic
+        assert_eq!(tasks, mixed_workload(50, 3));
+    }
+}

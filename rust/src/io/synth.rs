@@ -1,0 +1,169 @@
+//! Synthetic benchmark generator (paper section VI-A).
+//!
+//! Each of the D demand/capacity components is drawn uniformly and
+//! independently from its interval; task spans are uniform over `[0, T)`;
+//! node-type costs follow the configured cost model (Equation 8).
+
+use crate::model::{CostModel, Instance, NodeType, Task};
+use crate::util::rng::Rng;
+
+/// Generator parameters with the paper's Table I defaults.
+#[derive(Clone, Debug)]
+pub struct SynthParams {
+    pub n: usize,
+    pub m: usize,
+    pub dims: usize,
+    pub horizon: u32,
+    /// Capacity component interval [a, b] ⊆ (0, 1].
+    pub cap_range: (f64, f64),
+    /// Demand component interval [a, b] ⊆ (0, 1).
+    pub dem_range: (f64, f64),
+    pub cost_model: CostKind,
+}
+
+/// Which cost model to price node-types with (paper sections VI-B/VI-C).
+#[derive(Clone, Debug)]
+pub enum CostKind {
+    /// c_d = 1, e = 1.
+    HomogeneousLinear,
+    /// Coefficients drawn uniformly from [0.3, 1.0]; exponent `e`.
+    HeterogeneousRandom { exponent: f64 },
+    /// Fixed coefficients (e.g. pricing-table based) with exponent `e`.
+    Fixed { coefficients: Vec<f64>, exponent: f64 },
+}
+
+impl Default for SynthParams {
+    /// Table I defaults: n=1000, m=10, D=5, T=24, cap [0.2,1.0],
+    /// demand [0.01,0.1], homogeneous linear cost.
+    fn default() -> Self {
+        SynthParams {
+            n: 1000,
+            m: 10,
+            dims: 5,
+            horizon: 24,
+            cap_range: (0.2, 1.0),
+            dem_range: (0.01, 0.1),
+            cost_model: CostKind::HomogeneousLinear,
+        }
+    }
+}
+
+/// Generate a synthetic instance. Fully deterministic in `seed`.
+pub fn generate(params: &SynthParams, seed: u64) -> Instance {
+    let mut rng = Rng::new(seed);
+    let d = params.dims;
+
+    let mut node_types: Vec<NodeType> = (0..params.m)
+        .map(|i| {
+            let cap: Vec<f64> = (0..d)
+                .map(|_| rng.uniform(params.cap_range.0, params.cap_range.1))
+                .collect();
+            NodeType::new(format!("synth-{i}"), cap, 1.0)
+        })
+        .collect();
+
+    let model = match &params.cost_model {
+        CostKind::HomogeneousLinear => CostModel::homogeneous(d),
+        CostKind::HeterogeneousRandom { exponent } => {
+            let coeff: Vec<f64> = (0..d).map(|_| rng.uniform(0.3, 1.0)).collect();
+            CostModel::new(coeff, *exponent)
+        }
+        CostKind::Fixed { coefficients, exponent } => {
+            CostModel::new(coefficients.clone(), *exponent)
+        }
+    };
+    model.apply(&mut node_types);
+
+    // Demands must be placeable on at least one node-type. Clamping each
+    // dimension against the per-dimension max over *all* types is not
+    // enough (the maxima may come from different types), so clamp against
+    // the single type whose weakest dimension is largest — that one type
+    // then admits every task.
+    let anchor = (0..params.m)
+        .max_by(|&a, &b| {
+            let min_a = node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
+            let min_b = node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
+            min_a.partial_cmp(&min_b).unwrap()
+        })
+        .expect("m >= 1");
+    let anchor_cap = node_types[anchor].capacity.clone();
+
+    let tasks: Vec<Task> = (0..params.n)
+        .map(|i| {
+            let dem: Vec<f64> = (0..d)
+                .map(|k| {
+                    rng.uniform(params.dem_range.0, params.dem_range.1).min(anchor_cap[k])
+                })
+                .collect();
+            let a = rng.below(params.horizon as u64) as u32;
+            let b = rng.below(params.horizon as u64) as u32;
+            let (s, e) = if a <= b { (a, b) } else { (b, a) };
+            Task::new(i as u64, dem, s, e)
+        })
+        .collect();
+
+    Instance::new(tasks, node_types, params.horizon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let p = SynthParams { n: 50, m: 4, ..Default::default() };
+        let a = generate(&p, 3);
+        let b = generate(&p, 3);
+        assert_eq!(a.tasks, b.tasks);
+        assert_eq!(a.node_types, b.node_types);
+    }
+
+    #[test]
+    fn respects_ranges() {
+        let p = SynthParams { n: 200, m: 8, ..Default::default() };
+        let inst = generate(&p, 1);
+        assert_eq!(inst.n_tasks(), 200);
+        assert_eq!(inst.n_types(), 8);
+        assert_eq!(inst.dims(), 5);
+        for b in &inst.node_types {
+            for &c in &b.capacity {
+                assert!((0.2..=1.0).contains(&c));
+            }
+        }
+        for u in &inst.tasks {
+            assert!(u.end < 24);
+            for &x in &u.demand {
+                assert!(x >= 0.01 - 1e-12 && x <= 0.1 + 1e-12);
+            }
+        }
+        assert!(inst.is_feasible());
+    }
+
+    #[test]
+    fn homogeneous_cost_is_capacity_sum() {
+        let p = SynthParams { n: 5, m: 3, ..Default::default() };
+        let inst = generate(&p, 9);
+        for b in &inst.node_types {
+            let sum: f64 = b.capacity.iter().sum();
+            assert!((b.cost - sum).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cost_nonlinear() {
+        let p = SynthParams {
+            n: 5,
+            m: 6,
+            cost_model: CostKind::HeterogeneousRandom { exponent: 2.0 },
+            ..Default::default()
+        };
+        let inst = generate(&p, 4);
+        // super-linear pricing: cost below the linear-coefficient bound
+        for b in &inst.node_types {
+            assert!(b.cost > 0.0);
+            let linear_ub: f64 = b.capacity.iter().sum();
+            assert!(b.cost <= linear_ub + 1e-9, "coefficients <=1, caps <=1");
+        }
+        assert!(inst.is_feasible());
+    }
+}

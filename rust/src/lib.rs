@@ -1,0 +1,10 @@
+//! TL-Rightsizing: cold-start cluster rightsizing for time-limited tasks.
+pub mod model;
+pub mod io;
+pub mod algo;
+pub mod lp;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,159 @@
+//! The mapping LP (paper section V-B), in the structured form every solver
+//! backend consumes:
+//!
+//! ```text
+//!     min  sum_B cost(B) * alpha_B
+//!     s.t. sum_B x(u,B) = 1                          for every task u
+//!          sum_{u~t} x(u,B) * r(u,B,d) <= alpha_B    for every (B,t,d)
+//!          x, alpha >= 0
+//! ```
+//!
+//! The constraint matrix is never materialized on the solve path (PDHG
+//! applies it through interval prefix-sums / the Pallas kernel); the dense
+//! export exists for the exact simplex cross-check on small instances.
+
+use crate::model::Instance;
+
+use super::problem::{DenseLp, Matrix};
+
+/// Structured mapping LP extracted from a (timeline-trimmed) instance.
+#[derive(Clone, Debug)]
+pub struct MappingLp {
+    pub n: usize,
+    pub m: usize,
+    pub dims: usize,
+    pub t: usize,
+    /// Per-task inclusive spans on the trimmed timeline.
+    pub spans: Vec<(u32, u32)>,
+    /// r[u,B,d] = dem(u,d)/cap(B,d), layout `u*m*dims + b*dims + d`.
+    pub ratios: Vec<f64>,
+    /// Node-type prices.
+    pub costs: Vec<f64>,
+    /// Row scaling rho[B,d] (uniform over t; see scaling.rs). The scaled
+    /// inequality row is `rho * (K x - alpha) <= 0` — feasibility-equivalent.
+    pub rho: Vec<f64>,
+}
+
+impl MappingLp {
+    /// Build from an instance. The instance should already be
+    /// timeline-trimmed (T <= n); an untrimmed one still works, just larger.
+    pub fn from_instance(inst: &Instance) -> Self {
+        let (n, m, dims) = (inst.n_tasks(), inst.n_types(), inst.dims());
+        let mut ratios = vec![0.0; n * m * dims];
+        for u in 0..n {
+            for b in 0..m {
+                for d in 0..dims {
+                    ratios[(u * m + b) * dims + d] = inst.ratio(u, b, d);
+                }
+            }
+        }
+        MappingLp {
+            n,
+            m,
+            dims,
+            t: inst.horizon as usize,
+            spans: inst.tasks.iter().map(|u| (u.start, u.end)).collect(),
+            ratios: ratios,
+            costs: inst.node_types.iter().map(|b| b.cost).collect(),
+            rho: vec![1.0; m * dims],
+        }
+    }
+
+    #[inline]
+    pub fn ratio(&self, u: usize, b: usize, d: usize) -> f64 {
+        self.ratios[(u * self.m + b) * self.dims + d]
+    }
+
+    #[inline]
+    pub fn rho_at(&self, b: usize, d: usize) -> f64 {
+        self.rho[b * self.dims + d]
+    }
+
+    /// Number of primal variables (x entries + alphas).
+    pub fn n_vars(&self) -> usize {
+        self.n * self.m + self.m
+    }
+
+    /// Objective of an (x, alpha) pair.
+    pub fn objective(&self, alpha: &[f64]) -> f64 {
+        self.costs.iter().zip(alpha).map(|(c, a)| c * a).sum()
+    }
+
+    /// Dense export for the exact simplex backend. Variable layout:
+    /// `x(u,B) = u*m + B`, `alpha_B = n*m + B`. Only constraint rows for
+    /// timeslots where some task is active are emitted (empty rows are
+    /// trivially satisfied). Row scaling is intentionally *not* applied:
+    /// the dense path is the unscaled ground truth.
+    pub fn to_dense(&self) -> DenseLp {
+        let (n, m, dims, t) = (self.n, self.m, self.dims, self.t);
+        let nv = self.n_vars();
+        let mut c = vec![0.0; nv];
+        c[n * m..].copy_from_slice(&self.costs);
+
+        let mut a_eq = Matrix::zeros(n, nv);
+        for u in 0..n {
+            for b in 0..m {
+                a_eq.set(u, u * m + b, 1.0);
+            }
+        }
+
+        // active task lists per timeslot
+        let mut active: Vec<Vec<usize>> = vec![Vec::new(); t];
+        for (u, &(s, e)) in self.spans.iter().enumerate() {
+            for ts in s..=e {
+                active[ts as usize].push(u);
+            }
+        }
+        let live: Vec<usize> = (0..t).filter(|&ts| !active[ts].is_empty()).collect();
+        let rows = live.len() * m * dims;
+        let mut a_ub = Matrix::zeros(rows, nv);
+        let mut row = 0;
+        for b in 0..m {
+            for &ts in &live {
+                for d in 0..dims {
+                    for &u in &active[ts] {
+                        a_ub.set(row, u * m + b, self.ratio(u, b, d));
+                    }
+                    a_ub.set(row, n * m + b, -1.0);
+                    row += 1;
+                }
+            }
+        }
+        DenseLp { c, a_ub, b_ub: vec![0.0; rows], a_eq, b_eq: vec![1.0; n] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::simplex;
+    use crate::model::trim;
+
+    #[test]
+    fn shapes_and_layout() {
+        let inst = generate(&SynthParams { n: 12, m: 3, dims: 2, horizon: 6, ..Default::default() }, 1);
+        let lp = MappingLp::from_instance(&inst);
+        assert_eq!(lp.n, 12);
+        assert_eq!(lp.m, 3);
+        assert_eq!(lp.ratios.len(), 12 * 3 * 2);
+        assert!((lp.ratio(3, 1, 0) - inst.ratio(3, 1, 0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn dense_solves_tiny() {
+        let inst = generate(&SynthParams { n: 6, m: 2, dims: 2, horizon: 4, ..Default::default() }, 2);
+        let tr = trim(&inst);
+        let lp = MappingLp::from_instance(&tr.instance);
+        let dense = lp.to_dense();
+        let r = simplex::solve(&dense);
+        assert_eq!(r.status, simplex::SimplexStatus::Optimal);
+        // optimum positive and below the trivial one-type bound
+        assert!(r.objective > 0.0);
+        // each task fully assigned
+        for u in 0..lp.n {
+            let s: f64 = (0..lp.m).map(|b| r.x[u * lp.m + b]).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+}

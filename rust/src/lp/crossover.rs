@@ -1,0 +1,233 @@
+//! Crossover: pull a first-order (PDHG) LP solution onto a near-vertex
+//! point of the optimal face.
+//!
+//! Simplex returns *basic* solutions, which Lemma 4 shows are near-integral
+//! (at most n + mTD fractional variables) — that is what the paper's
+//! Figure 5 plots and what makes argmax rounding sharp. PDHG instead
+//! converges to an interior point of the optimal face, smearing x across
+//! node-types. This pass fixes that without changing the objective: with
+//! alpha* held fixed, tasks are greedily re-assigned integrally (in
+//! decreasing x_max order, preferring types by descending fractional mass)
+//! subject to the congestion caps `K x <= alpha* (1 + tol)`; tasks that fit
+//! nowhere integrally keep their fractional row. The result is feasible
+//! for the same alpha*, so the LP objective — and the certified dual
+//! bound — are untouched.
+
+use super::builder::MappingLp;
+
+/// Congestion tracker: load per (b, t, d) with interval updates.
+struct Load {
+    t: usize,
+    dims: usize,
+    data: Vec<f64>,
+}
+
+impl Load {
+    fn new(lp: &MappingLp) -> Self {
+        Load { t: lp.t, dims: lp.dims, data: vec![0.0; lp.m * lp.t * lp.dims] }
+    }
+
+    #[inline]
+    fn idx(&self, b: usize, ts: usize, d: usize) -> usize {
+        (b * self.t + ts) * self.dims + d
+    }
+
+    /// Add `frac` of task `u` on type `b`.
+    fn add(&mut self, lp: &MappingLp, u: usize, b: usize, frac: f64) {
+        let (s, e) = lp.spans[u];
+        for ts in s as usize..=e as usize {
+            for d in 0..self.dims {
+                let i = self.idx(b, ts, d);
+                self.data[i] += frac * lp.ratio(u, b, d);
+            }
+        }
+    }
+
+    /// Would adding `frac` of task `u` on `b` keep load within `cap[b,d]`?
+    fn fits(&self, lp: &MappingLp, u: usize, b: usize, frac: f64, cap: &[f64]) -> bool {
+        let (s, e) = lp.spans[u];
+        for ts in s as usize..=e as usize {
+            for d in 0..self.dims {
+                if self.data[self.idx(b, ts, d)] + frac * lp.ratio(u, b, d)
+                    > cap[b * self.dims + d]
+                {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Largest fraction of task `u` that fits on type `b` right now.
+    fn max_fraction(&self, lp: &MappingLp, u: usize, b: usize, cap: &[f64]) -> f64 {
+        let (s, e) = lp.spans[u];
+        let mut frac = f64::INFINITY;
+        for ts in s as usize..=e as usize {
+            for d in 0..self.dims {
+                let r = lp.ratio(u, b, d);
+                if r > 0.0 {
+                    let slack = cap[b * self.dims + d] - self.data[self.idx(b, ts, d)];
+                    frac = frac.min(slack / r);
+                }
+            }
+        }
+        frac.clamp(0.0, 1.0)
+    }
+}
+
+/// Crossover `x` toward a vertex at fixed `alpha`. Returns the new x and
+/// the number of tasks that remain fractional.
+pub fn crossover(lp: &MappingLp, x: &[f64], alpha: &[f64], tol: f64) -> (Vec<f64>, usize) {
+    let (n, m) = (lp.n, lp.m);
+    // per-(b,d) congestion cap: alpha_b relaxed by tol (absolute + relative)
+    let mut cap = vec![0.0; m * lp.dims];
+    for b in 0..m {
+        for d in 0..lp.dims {
+            cap[b * lp.dims + d] = alpha[b] * (1.0 + tol) + tol;
+        }
+    }
+
+    // Type-major pass: process node-types in descending total fractional
+    // mass, and within a type take tasks in descending x[u,b]. On the
+    // degenerate optimal faces of homogeneous cost models (every type has
+    // identical capacity-per-cost) any congestion-feasible mapping is
+    // LP-optimal — task-major rounding fragments tasks across all types
+    // (one under-filled node per type after placement), while type-major
+    // concentration keeps the mapping packable. On non-degenerate faces
+    // the x mass is already concentrated and the two orders agree.
+    let mut type_order: Vec<usize> = (0..m).collect();
+    let mass: Vec<f64> =
+        (0..m).map(|b| (0..n).map(|u| x[u * m + b]).sum()).collect();
+    type_order.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap().then(a.cmp(&b)));
+
+    let mut load = Load::new(lp);
+    let mut out = vec![0.0; n * m];
+    let mut fractional = 0usize;
+    let mut assigned = vec![false; n];
+
+    for &b in &type_order {
+        let mut tasks: Vec<usize> =
+            (0..n).filter(|&u| !assigned[u] && x[u * m + b] > 1e-9).collect();
+        tasks.sort_by(|&u, &v| {
+            x[v * m + b].partial_cmp(&x[u * m + b]).unwrap().then(u.cmp(&v))
+        });
+        for u in tasks {
+            if load.fits(lp, u, b, 1.0, &cap) {
+                load.add(lp, u, b, 1.0);
+                out[u * m + b] = 1.0;
+                assigned[u] = true;
+            }
+        }
+    }
+
+    // leftover tasks: slack-split across their fractional support
+    for u in 0..n {
+        if assigned[u] {
+            continue;
+        }
+        let mut types: Vec<usize> = (0..m).collect();
+        types.sort_by(|&a, &b| {
+            x[u * m + b]
+                .partial_cmp(&x[u * m + a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        {
+            // Split across types by remaining slack (descending x order,
+            // then any type). The original fractional row is not re-usable
+            // verbatim: other tasks' integral reassignments consumed
+            // different slack than the LP solution did.
+            fractional += 1;
+            let mut remaining = 1.0f64;
+            for &b in &types {
+                if remaining <= 1e-12 {
+                    break;
+                }
+                let f = load.max_fraction(lp, u, b, &cap).min(remaining);
+                if f > 1e-12 {
+                    load.add(lp, u, b, f);
+                    out[u * m + b] += f;
+                    remaining -= f;
+                }
+            }
+            if remaining > 1e-9 {
+                // No slack left anywhere: park the remainder on the type
+                // with the most headroom. This slightly exceeds alpha; the
+                // caller's tolerance accounts for it (tracked for tests).
+                let b = types[0];
+                load.add(lp, u, b, remaining);
+                out[u * m + b] += remaining;
+            }
+        }
+    }
+    (out, fractional)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::pdhg::{self, PdhgOptions};
+    use crate::lp::scaling;
+    use crate::model::trim;
+
+    fn solved(seed: u64, n: usize) -> (MappingLp, pdhg::PdhgResult) {
+        let inst = generate(&SynthParams { n, m: 5, ..Default::default() }, seed);
+        let mut lp = MappingLp::from_instance(&trim(&inst).instance);
+        scaling::equilibrate(&mut lp);
+        let r = pdhg::solve(&lp, &PdhgOptions::default());
+        (lp, r)
+    }
+
+    #[test]
+    fn integralizes_most_tasks() {
+        let (lp, r) = solved(3, 150);
+        let before_integral = (0..lp.n)
+            .filter(|&u| (0..lp.m).any(|b| r.x[u * lp.m + b] > 0.99))
+            .count();
+        let (x2, fractional) = crossover(&lp, &r.x, &r.alpha, 1e-4);
+        let after_integral = (0..lp.n)
+            .filter(|&u| (0..lp.m).any(|b| x2[u * lp.m + b] > 0.99))
+            .count();
+        assert!(after_integral >= before_integral);
+        assert!(
+            after_integral as f64 >= 0.8 * lp.n as f64,
+            "only {after_integral}/{} integral ({fractional} fractional)",
+            lp.n
+        );
+    }
+
+    #[test]
+    fn preserves_row_sums_and_objective() {
+        let (lp, r) = solved(4, 100);
+        let (x2, _) = crossover(&lp, &r.x, &r.alpha, 1e-4);
+        for u in 0..lp.n {
+            let s: f64 = (0..lp.m).map(|b| x2[u * lp.m + b]).sum();
+            assert!((s - 1.0).abs() < 2e-3, "task {u} row sum {s}");
+        }
+        // The crossover x need not respect alpha exactly (that is the
+        // integrality gap); what matters is that its implied congestion
+        // cost stays close to the LP optimum — it feeds only the rounding.
+        let mut op = pdhg::Operator::new(&lp);
+        let mut buf = vec![0.0; lp.m * lp.t * lp.dims];
+        op.forward(&x2, &vec![0.0; lp.m], &mut buf);
+        let mut alpha2 = vec![0.0f64; lp.m];
+        for b in 0..lp.m {
+            for ts in 0..lp.t {
+                for d in 0..lp.dims {
+                    let rho = lp.rho_at(b, d);
+                    if rho > 0.0 {
+                        alpha2[b] =
+                            alpha2[b].max(buf[(b * lp.t + ts) * lp.dims + d] / rho);
+                    }
+                }
+            }
+        }
+        let obj2: f64 = lp.costs.iter().zip(&alpha2).map(|(c, a)| c * a).sum();
+        assert!(
+            obj2 <= r.objective * 1.10 + 1e-9,
+            "crossover objective {obj2} vs LP {}",
+            r.objective
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! LP substrates: the structured mapping LP, an exact simplex solver,
+//! the native PDHG first-order solver, row equilibration and certified
+//! dual bounds.
+
+pub mod builder;
+pub mod crossover;
+pub mod dual;
+pub mod pdhg;
+pub mod problem;
+pub mod scaling;
+pub mod simplex;
+pub mod solver;
+
+pub use builder::MappingLp;
+pub use pdhg::{PdhgOptions, PdhgResult};

@@ -1,0 +1,552 @@
+//! Native (f64) PDHG solver for the mapping LP — the same algorithm the
+//! JAX/Pallas AOT artifact runs, with one structural difference: the
+//! constraint operator exploits interval sparsity. Tasks are active over
+//! contiguous spans, so `K x` is computed with difference arrays and
+//! `K^T y` with prefix sums — O(m*D*(n+T)) per application instead of the
+//! dense O(T*n*m*D) einsum. This is the production backend for trace-scale
+//! instances whose trimmed T exceeds the largest artifact bucket; the two
+//! backends are cross-checked in tests (and against the exact simplex).
+//!
+//! Enhancements over vanilla PDHG (both backends share the scheme, with
+//! the restart/adaptation decisions taken between chunks):
+//!   - iterate averaging (ergodic O(1/k) convergence on LPs),
+//!   - adaptive restart to the better of {last, average} per chunk,
+//!   - primal-weight (omega) rebalancing from the residual ratio.
+
+use super::builder::MappingLp;
+
+/// Solver options. Defaults suit the unit-scale mapping LPs.
+#[derive(Clone, Debug)]
+pub struct PdhgOptions {
+    pub max_iters: usize,
+    /// Iterations between residual checks / restarts (a "chunk" — matches
+    /// the AOT artifact's compiled chunk length).
+    pub chunk: usize,
+    /// Feasibility tolerance (absolute; the LP is unit-scale).
+    pub tol: f64,
+    /// Relative duality-gap tolerance.
+    pub gap_tol: f64,
+    /// Initial primal weight.
+    pub omega: f64,
+    /// Adapt omega from the residual ratio between chunks. Off by
+    /// default: on the mapping LP the restart scheme alone converges
+    /// faster (see EXPERIMENTS.md section Perf, omega ablation).
+    pub adapt_omega: bool,
+}
+
+impl Default for PdhgOptions {
+    fn default() -> Self {
+        PdhgOptions { max_iters: 120_000, chunk: 250, tol: 2e-4, gap_tol: 2e-4, omega: 1.0, adapt_omega: false }
+    }
+}
+
+/// Solver outcome: primal/dual iterates, objective, residuals.
+#[derive(Clone, Debug)]
+pub struct PdhgResult {
+    /// x[u*m + b]: fractional assignment of task u to node-type b.
+    pub x: Vec<f64>,
+    pub alpha: Vec<f64>,
+    /// Inequality duals y[(b*t + ts)*dims + d] (for the *scaled* rows).
+    pub y: Vec<f64>,
+    /// Equality duals (one per task).
+    pub w: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+    pub converged: bool,
+    /// [eq_res, ineq_res, dual_res, rel_gap]
+    pub residuals: [f64; 4],
+}
+
+/// The structured operator with scratch buffers.
+///
+/// Perf note (EXPERIMENTS.md section Perf): the public x/gx layout is
+/// task-major `[u*m + b]` and ratios are `[(u*m + b)*dims + d]`, so the
+/// per-(b,d) inner loops over tasks would stride by m / m*dims. The
+/// operator therefore keeps a (b,d)-major copy of the ratios and span
+/// endpoints, and transposes x/gx through scratch buffers once per
+/// application — O(nm) copies against O(nmD) strided reads saved.
+pub struct Operator<'a> {
+    lp: &'a MappingLp,
+    /// prefix/diff scratch, length t+1
+    scratch: Vec<f64>,
+    /// ratios in (b,d)-major layout: ratios_bd[(b*dims + d)*n + u]
+    ratios_bd: Vec<f64>,
+    /// span endpoints as usize (avoids u32 -> usize in the hot loop)
+    starts: Vec<usize>,
+    ends: Vec<usize>,
+    /// x transposed to type-major: xt[b*n + u]
+    xt: Vec<f64>,
+    /// gx accumulator in type-major layout
+    gxt: Vec<f64>,
+    /// task permutation (sorted by start slot); internal arrays use
+    /// permuted indices, transposes map back to the public order
+    perm: Vec<usize>,
+}
+
+impl<'a> Operator<'a> {
+    pub fn new(lp: &'a MappingLp) -> Self {
+        let (n, m, dims) = (lp.n, lp.m, lp.dims);
+        // Process tasks in start order: the diff-array scatter in forward()
+        // then walks memory monotonically (second perf iteration, see
+        // EXPERIMENTS.md section Perf).
+        let mut perm: Vec<usize> = (0..n).collect();
+        perm.sort_by_key(|&u| lp.spans[u].0);
+        let mut ratios_bd = vec![0.0; m * dims * n];
+        for (i, &u) in perm.iter().enumerate() {
+            for b in 0..m {
+                for d in 0..dims {
+                    ratios_bd[(b * dims + d) * n + i] = lp.ratio(u, b, d);
+                }
+            }
+        }
+        Operator {
+            lp,
+            scratch: vec![0.0; lp.t + 1],
+            ratios_bd,
+            starts: perm.iter().map(|&u| lp.spans[u].0 as usize).collect(),
+            ends: perm.iter().map(|&u| lp.spans[u].1 as usize).collect(),
+            xt: vec![0.0; n * m],
+            gxt: vec![0.0; n * m],
+            perm,
+        }
+    }
+
+    /// y_out = rho * (K x - alpha), shape (m, t, dims) flattened b-major.
+    pub fn forward(&mut self, x: &[f64], alpha: &[f64], out: &mut [f64]) {
+        let (n, m) = (self.lp.n, self.lp.m);
+        // transpose x to type-major (permuted) once
+        for (i, &u) in self.perm.iter().enumerate() {
+            for b in 0..m {
+                self.xt[b * n + i] = x[u * m + b];
+            }
+        }
+        let xt = std::mem::take(&mut self.xt);
+        self.forward_tm(&xt, alpha, out);
+        self.xt = xt;
+    }
+
+    /// forward on a type-major permuted x (solver-internal hot path; the
+    /// transpose-free variant saves 3 O(nm) passes per PDHG iteration).
+    pub fn forward_tm(&mut self, xt: &[f64], alpha: &[f64], out: &mut [f64]) {
+        let lp = self.lp;
+        let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+        debug_assert_eq!(out.len(), m * t * dims);
+        for b in 0..m {
+            let xb = &xt[b * n..(b + 1) * n];
+            for d in 0..dims {
+                let rho = lp.rho_at(b, d);
+                let rat = &self.ratios_bd[(b * dims + d) * n..(b * dims + d + 1) * n];
+                let diff = &mut self.scratch;
+                diff[..=t].fill(0.0);
+                for u in 0..n {
+                    let w = xb[u] * rat[u];
+                    if w != 0.0 {
+                        diff[self.starts[u]] += w;
+                        diff[self.ends[u] + 1] -= w;
+                    }
+                }
+                let mut acc = 0.0;
+                let a = alpha[b];
+                for ts in 0..t {
+                    acc += diff[ts];
+                    out[(b * t + ts) * dims + d] = rho * (acc - a);
+                }
+            }
+        }
+    }
+
+    /// Adjoint pieces: gx[u*m+b] = sum_{t,d} rho*y * r over the task span;
+    /// ga[b] = sum_{t,d} rho*y (the alpha-column contribution, negated by
+    /// the caller).
+    pub fn adjoint(&mut self, y: &[f64], gx: &mut [f64], ga: &mut [f64]) {
+        let (n, m) = (self.lp.n, self.lp.m);
+        let mut gxt = std::mem::take(&mut self.gxt);
+        self.adjoint_tm(y, &mut gxt, ga);
+        // transpose back to task-major public order
+        for (i, &u) in self.perm.iter().enumerate() {
+            for b in 0..m {
+                gx[u * m + b] = gxt[b * n + i];
+            }
+        }
+        self.gxt = gxt;
+    }
+
+    /// adjoint producing a type-major permuted gradient (solver-internal).
+    pub fn adjoint_tm(&mut self, y: &[f64], gxt: &mut [f64], ga: &mut [f64]) {
+        let lp = self.lp;
+        let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+        gxt.fill(0.0);
+        ga.fill(0.0);
+        for b in 0..m {
+            let gxb = &mut gxt[b * n..(b + 1) * n];
+            for d in 0..dims {
+                let rho = lp.rho_at(b, d);
+                let rat = &self.ratios_bd[(b * dims + d) * n..(b * dims + d + 1) * n];
+                // prefix[ts] = sum of rho*y[b,0..ts,d]
+                let prefix = &mut self.scratch;
+                prefix[0] = 0.0;
+                for ts in 0..t {
+                    prefix[ts + 1] = prefix[ts] + rho * y[(b * t + ts) * dims + d];
+                }
+                ga[b] += prefix[t];
+                for u in 0..n {
+                    let seg = prefix[self.ends[u] + 1] - prefix[self.starts[u]];
+                    gxb[u] += seg * rat[u];
+                }
+            }
+        }
+    }
+
+    /// Transpose a type-major permuted vector into the public task-major
+    /// order (chunk-boundary use).
+    pub fn to_public(&self, vt: &[f64], v: &mut [f64]) {
+        let (n, m) = (self.lp.n, self.lp.m);
+        for (i, &u) in self.perm.iter().enumerate() {
+            for b in 0..m {
+                v[u * m + b] = vt[b * n + i];
+            }
+        }
+    }
+
+    /// Permute a public per-task vector into internal order.
+    pub fn permute_tasks(&self, v: &[f64], vt: &mut [f64]) {
+        for (i, &u) in self.perm.iter().enumerate() {
+            vt[i] = v[u];
+        }
+    }
+
+    /// Un-permute an internal per-task vector to public order.
+    pub fn unpermute_tasks(&self, vt: &[f64], v: &mut [f64]) {
+        for (i, &u) in self.perm.iter().enumerate() {
+            v[u] = vt[i];
+        }
+    }
+
+    /// Transpose public task-major x into type-major permuted layout.
+    pub fn to_internal(&self, v: &[f64], vt: &mut [f64]) {
+        let (n, m) = (self.lp.n, self.lp.m);
+        for (i, &u) in self.perm.iter().enumerate() {
+            for b in 0..m {
+                vt[b * n + i] = v[u * m + b];
+            }
+        }
+    }
+
+    /// Power iteration estimate of the full operator's spectral norm
+    /// (inequality rows + equality rows).
+    pub fn norm_estimate(&mut self, iters: usize) -> f64 {
+        let lp = self.lp;
+        let (n, m) = (lp.n, lp.m);
+        let mut x = vec![1.0 / ((n * m) as f64).sqrt(); n * m];
+        let mut alpha = vec![1.0 / (m as f64).sqrt(); m];
+        let mut y = vec![0.0; m * lp.t * lp.dims];
+        let mut gx = vec![0.0; n * m];
+        let mut ga = vec![0.0; m];
+        let mut lam = 1.0;
+        for _ in 0..iters {
+            // A^T A (x, alpha)
+            self.forward(&x, &alpha, &mut y);
+            self.adjoint(&y, &mut gx, &mut ga);
+            // equality rows: E x (per task), E^T e added to gx
+            for u in 0..n {
+                let e: f64 = (0..m).map(|b| x[u * m + b]).sum();
+                for b in 0..m {
+                    gx[u * m + b] += e;
+                }
+            }
+            // alpha columns of A: -sum rho y
+            for b in 0..m {
+                ga[b] = -ga[b];
+            }
+            let nrm = (gx.iter().map(|v| v * v).sum::<f64>()
+                + ga.iter().map(|v| v * v).sum::<f64>())
+            .sqrt()
+            .max(1e-30);
+            lam = nrm;
+            for (xi, gi) in x.iter_mut().zip(&gx) {
+                *xi = gi / nrm;
+            }
+            for (ai, gi) in alpha.iter_mut().zip(&ga) {
+                *ai = gi / nrm;
+            }
+        }
+        lam.sqrt().max(1e-12)
+    }
+}
+
+/// Residuals of an iterate: [eq, ineq, dual, rel_gap].
+pub fn residuals(
+    op: &mut Operator,
+    x: &[f64],
+    alpha: &[f64],
+    y: &[f64],
+    w: &[f64],
+) -> [f64; 4] {
+    let lp = op.lp;
+    let (n, m) = (lp.n, lp.m);
+    let mut eq: f64 = 0.0;
+    for u in 0..n {
+        let s: f64 = (0..m).map(|b| x[u * m + b]).sum();
+        eq = eq.max((s - 1.0).abs());
+    }
+    let mut buf = vec![0.0; m * lp.t * lp.dims];
+    op.forward(x, alpha, &mut buf);
+    let ineq = buf.iter().copied().fold(0.0f64, |a, v| a.max(v));
+
+    let mut gx = vec![0.0; n * m];
+    let mut ga = vec![0.0; m];
+    op.adjoint(y, &mut gx, &mut ga);
+    let mut dual: f64 = 0.0;
+    for u in 0..n {
+        for b in 0..m {
+            dual = dual.max(w[u] - gx[u * m + b]);
+        }
+    }
+    for b in 0..m {
+        dual = dual.max(ga[b] - lp.costs[b]);
+    }
+    let pobj = lp.objective(alpha);
+    let dobj: f64 = w.iter().sum();
+    let gap = (pobj - dobj).abs() / (1.0 + pobj.abs() + dobj.abs());
+    [eq, ineq.max(0.0), dual.max(0.0), gap]
+}
+
+/// Solve with a warm primal start from an integral mapping: x is the
+/// one-hot assignment, alpha its implied congestion peaks. Duals start at
+/// zero. Cuts iterations substantially when the heuristic mapping is
+/// already near-optimal (see EXPERIMENTS.md section Perf).
+pub fn solve_warm(lp: &MappingLp, opts: &PdhgOptions, mapping: &[usize]) -> PdhgResult {
+    assert_eq!(mapping.len(), lp.n);
+    let mut x0 = vec![0.0; lp.n * lp.m];
+    for (u, &b) in mapping.iter().enumerate() {
+        x0[u * lp.m + b] = 1.0;
+    }
+    let mut op = Operator::new(lp);
+    let mut kx = vec![0.0; lp.m * lp.t * lp.dims];
+    op.forward(&x0, &vec![0.0; lp.m], &mut kx);
+    let mut alpha0 = vec![0.0f64; lp.m];
+    for b in 0..lp.m {
+        for ts in 0..lp.t {
+            for d in 0..lp.dims {
+                let rho = lp.rho_at(b, d);
+                if rho > 0.0 {
+                    alpha0[b] = alpha0[b].max(kx[(b * lp.t + ts) * lp.dims + d] / rho);
+                }
+            }
+        }
+    }
+    solve_from(lp, opts, x0, alpha0)
+}
+
+/// Solve the mapping LP with chunked, restarted, omega-adaptive PDHG.
+pub fn solve(lp: &MappingLp, opts: &PdhgOptions) -> PdhgResult {
+    let (n, m) = (lp.n, lp.m);
+    solve_from(lp, opts, vec![0.0; n * m], vec![0.0; m])
+}
+
+fn solve_from(lp: &MappingLp, opts: &PdhgOptions, x0: Vec<f64>, alpha0: Vec<f64>) -> PdhgResult {
+    let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+    let mut op = Operator::new(lp);
+    let norm = op.norm_estimate(50);
+    let base = 0.9 / norm;
+    let mut omega = opts.omega;
+
+    let nm = n * m;
+    let ny = m * t * dims;
+    assert_eq!(x0.len(), nm);
+    assert_eq!(alpha0.len(), m);
+    // All per-iteration state lives in the operator-internal layout
+    // (type-major, start-sorted): no transposes inside the hot loop.
+    let mut xt = vec![0.0; nm];
+    op.to_internal(&x0, &mut xt);
+    let mut alpha = alpha0;
+    let mut y = vec![0.0; ny];
+    let mut wt = vec![0.0; n];
+
+    // scratch (internal layout)
+    let mut gxt = vec![0.0; nm];
+    let mut ga = vec![0.0; m];
+    let mut kx = vec![0.0; ny];
+    let mut xbt = vec![0.0; nm];
+    let mut ab = vec![0.0; m];
+    let mut rows = vec![0.0; n];
+    // chunk averages (internal layout)
+    let (mut sxt, mut sa) = (vec![0.0; nm], vec![0.0; m]);
+    let (mut sy, mut swt) = (vec![0.0; ny], vec![0.0; n]);
+    // public-layout buffers for chunk-boundary residuals
+    let mut xp = vec![0.0; nm];
+    let mut wp = vec![0.0; n];
+
+    let mut iter = 0usize;
+    let mut res = [f64::INFINITY; 4];
+    let mut converged = false;
+
+    while iter < opts.max_iters {
+        let tau = base * omega;
+        let sigma = base / omega;
+        sxt.fill(0.0);
+        sa.fill(0.0);
+        sy.fill(0.0);
+        swt.fill(0.0);
+        let chunk = opts.chunk.min(opts.max_iters - iter);
+        for _ in 0..chunk {
+            // primal step (fused: update + extrapolate + average + row sums)
+            op.adjoint_tm(&y, &mut gxt, &mut ga);
+            rows.fill(0.0);
+            for b in 0..m {
+                let base_i = b * n;
+                for i in 0..n {
+                    let j = base_i + i;
+                    let v = xt[j] - tau * (gxt[j] - wt[i]);
+                    let v = if v > 0.0 { v } else { 0.0 };
+                    let xb = 2.0 * v - xt[j];
+                    xbt[j] = xb;
+                    rows[i] += xb;
+                    xt[j] = v;
+                    sxt[j] += v;
+                }
+            }
+            for b in 0..m {
+                let v = alpha[b] - tau * (lp.costs[b] - ga[b]);
+                let v = if v > 0.0 { v } else { 0.0 };
+                ab[b] = 2.0 * v - alpha[b];
+                alpha[b] = v;
+                sa[b] += v;
+            }
+            // dual step on extrapolated point (fused y update + average)
+            op.forward_tm(&xbt, &ab, &mut kx);
+            for i in 0..ny {
+                let v = y[i] + sigma * kx[i];
+                let v = if v > 0.0 { v } else { 0.0 };
+                y[i] = v;
+                sy[i] += v;
+            }
+            for i in 0..n {
+                let v = wt[i] + sigma * (1.0 - rows[i]);
+                wt[i] = v;
+                swt[i] += v;
+            }
+            iter += 1;
+        }
+        // chunk boundary: evaluate last vs average, restart from the better
+        let k = chunk as f64;
+        let axt: Vec<f64> = sxt.iter().map(|v| v / k).collect();
+        let aa: Vec<f64> = sa.iter().map(|v| v / k).collect();
+        let ay: Vec<f64> = sy.iter().map(|v| v / k).collect();
+        let awt: Vec<f64> = swt.iter().map(|v| v / k).collect();
+
+        op.to_public(&xt, &mut xp);
+        op.unpermute_tasks(&wt, &mut wp);
+        let r_last = residuals(&mut op, &xp, &alpha, &y, &wp);
+        op.to_public(&axt, &mut xp);
+        op.unpermute_tasks(&awt, &mut wp);
+        let r_avg = residuals(&mut op, &xp, &aa, &ay, &wp);
+        let score = |r: &[f64; 4]| r[0].max(r[1]).max(r[2]).max(r[3]);
+        if score(&r_avg) < score(&r_last) {
+            xt.copy_from_slice(&axt);
+            alpha.copy_from_slice(&aa);
+            y.copy_from_slice(&ay);
+            wt.copy_from_slice(&awt);
+            res = r_avg;
+        } else {
+            res = r_last;
+        }
+        if res[0].max(res[1]) <= opts.tol && res[3] <= opts.gap_tol {
+            converged = true;
+            break;
+        }
+        // optional primal-weight adaptation (ablation shows the restart
+        // scheme alone converges faster on the mapping LP; default off)
+        if opts.adapt_omega {
+            let pri = res[0].max(res[1]).max(1e-12);
+            let dua = res[2].max(1e-12);
+            let ratio = (pri / dua).sqrt().clamp(0.5, 2.0);
+            omega = (omega * ratio).clamp(1e-3, 1e3);
+        }
+    }
+
+    let mut x = vec![0.0; nm];
+    let mut w = vec![0.0; n];
+    op.to_public(&xt, &mut x);
+    op.unpermute_tasks(&wt, &mut w);
+    let objective = lp.objective(&alpha);
+    PdhgResult { x, alpha, y, w, objective, iterations: iter, converged, residuals: res }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::simplex;
+    use crate::model::trim;
+
+    fn small_lp(seed: u64, n: usize, m: usize, dims: usize, horizon: u32) -> MappingLp {
+        let inst = generate(
+            &SynthParams { n, m, dims, horizon, dem_range: (0.05, 0.3), ..Default::default() },
+            seed,
+        );
+        let tr = trim(&inst);
+        MappingLp::from_instance(&tr.instance)
+    }
+
+    #[test]
+    fn operator_adjointness() {
+        // <K x, y> == <x, K^T y> for random vectors
+        use crate::util::rng::Rng;
+        let lp = small_lp(1, 10, 3, 2, 8);
+        let mut op = Operator::new(&lp);
+        let mut rng = Rng::new(2);
+        let x: Vec<f64> = (0..lp.n * lp.m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> = (0..lp.m * lp.t * lp.dims).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let alpha = vec![0.0; lp.m];
+        let mut kx = vec![0.0; y.len()];
+        op.forward(&x, &alpha, &mut kx);
+        let lhs: f64 = kx.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let mut gx = vec![0.0; x.len()];
+        let mut ga = vec![0.0; lp.m];
+        op.adjoint(&y, &mut gx, &mut ga);
+        let rhs: f64 = gx.iter().zip(&x).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn matches_simplex_on_small() {
+        for seed in [0, 1, 2] {
+            let lp = small_lp(seed, 8, 2, 2, 6);
+            let exact = simplex::solve(&lp.to_dense());
+            assert_eq!(exact.status, simplex::SimplexStatus::Optimal);
+            let r = solve(&lp, &PdhgOptions { tol: 1e-7, gap_tol: 1e-7, ..Default::default() });
+            assert!(r.converged, "seed {seed}: not converged {:?}", r.residuals);
+            let rel = (r.objective - exact.objective).abs() / (1.0 + exact.objective.abs());
+            assert!(rel < 1e-4, "seed {seed}: pdhg {} vs simplex {}", r.objective, exact.objective);
+        }
+    }
+
+    #[test]
+    fn converges_on_medium() {
+        let lp = small_lp(3, 60, 5, 3, 12);
+        let r = solve(&lp, &PdhgOptions::default());
+        assert!(r.converged, "residuals {:?}", r.residuals);
+        assert!(r.objective > 0.0);
+    }
+
+    #[test]
+    fn dual_never_exceeds_primal_at_tolerance() {
+        let lp = small_lp(4, 20, 3, 2, 8);
+        let r = solve(&lp, &PdhgOptions::default());
+        let dobj: f64 = r.w.iter().sum();
+        assert!(dobj <= r.objective + 1e-3 * (1.0 + r.objective));
+    }
+
+    #[test]
+    fn row_scaling_preserves_optimum() {
+        let mut lp = small_lp(5, 15, 3, 2, 8);
+        let r0 = solve(&lp, &PdhgOptions::default());
+        for v in lp.rho.iter_mut() {
+            *v = 0.37;
+        }
+        let r1 = solve(&lp, &PdhgOptions::default());
+        let rel = (r0.objective - r1.objective).abs() / (1.0 + r0.objective);
+        assert!(rel < 5e-4, "{} vs {}", r0.objective, r1.objective);
+    }
+}

@@ -1,0 +1,106 @@
+//! General dense LP representation (used by the exact simplex substrate
+//! and for cross-checking the structured PDHG solvers on small instances).
+//!
+//! ```text
+//!     min  c·x
+//!     s.t. A_ub x <= b_ub
+//!          A_eq x == b_eq
+//!          x >= 0
+//! ```
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, Default)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// A dense LP in inequality/equality form with non-negative variables.
+#[derive(Clone, Debug, Default)]
+pub struct DenseLp {
+    pub c: Vec<f64>,
+    pub a_ub: Matrix,
+    pub b_ub: Vec<f64>,
+    pub a_eq: Matrix,
+    pub b_eq: Vec<f64>,
+}
+
+impl DenseLp {
+    pub fn n_vars(&self) -> usize {
+        self.c.len()
+    }
+
+    /// Objective value of a candidate point.
+    pub fn objective(&self, x: &[f64]) -> f64 {
+        self.c.iter().zip(x).map(|(a, b)| a * b).sum()
+    }
+
+    /// Max constraint violation of a candidate point (feasibility check).
+    pub fn max_violation(&self, x: &[f64]) -> f64 {
+        let mut v: f64 = 0.0;
+        for r in 0..self.a_ub.rows {
+            let lhs: f64 = self.a_ub.row(r).iter().zip(x).map(|(a, b)| a * b).sum();
+            v = v.max(lhs - self.b_ub[r]);
+        }
+        for r in 0..self.a_eq.rows {
+            let lhs: f64 = self.a_eq.row(r).iter().zip(x).map(|(a, b)| a * b).sum();
+            v = v.max((lhs - self.b_eq[r]).abs());
+        }
+        for &xi in x {
+            v = v.max(-xi);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_access() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn violation_and_objective() {
+        // min x0 s.t. x0 + x1 <= 1, x0 == 0.25
+        let mut lp = DenseLp {
+            c: vec![1.0, 0.0],
+            a_ub: Matrix::zeros(1, 2),
+            b_ub: vec![1.0],
+            a_eq: Matrix::zeros(1, 2),
+            b_eq: vec![0.25],
+        };
+        lp.a_ub.set(0, 0, 1.0);
+        lp.a_ub.set(0, 1, 1.0);
+        lp.a_eq.set(0, 0, 1.0);
+        assert_eq!(lp.objective(&[0.25, 0.5]), 0.25);
+        assert!(lp.max_violation(&[0.25, 0.5]) < 1e-12);
+        assert!(lp.max_violation(&[0.5, 0.9]) > 0.2);
+    }
+}

@@ -1,0 +1,308 @@
+//! Exact LP solver: dense two-phase primal simplex with Bland's rule.
+//!
+//! Built from scratch as the verification substrate (the paper used CBC via
+//! python-mip). Used on small instances in tests and as an optional exact
+//! backend; the production path is the PDHG first-order solver (native or
+//! the JAX/Pallas AOT artifact), cross-checked against this.
+//!
+//! Bland's anti-cycling rule guarantees termination; numerics use a fixed
+//! pivot tolerance which is ample for the unit-scale mapping LPs here.
+
+use super::problem::DenseLp;
+
+const EPS: f64 = 1e-9;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimplexStatus {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimplexResult {
+    pub status: SimplexStatus,
+    pub objective: f64,
+    pub x: Vec<f64>,
+}
+
+/// Solve a dense LP exactly. Two phases: artificial variables drive an
+/// initial basic feasible solution, then the true objective is optimized.
+pub fn solve(lp: &DenseLp) -> SimplexResult {
+    let n = lp.n_vars();
+    let m_ub = lp.a_ub.rows;
+    let m_eq = lp.a_eq.rows;
+    let m = m_ub + m_eq;
+
+    // Tableau variables: [x (n) | slack (m_ub) | artificial (m)]
+    // We give every row an artificial to keep the construction uniform;
+    // slack columns could serve as a basis for ub rows with b >= 0, but the
+    // uniform version is simpler and phase 1 prices them out regardless.
+    let n_slack = m_ub;
+    let n_art = m;
+    let cols = n + n_slack + n_art + 1; // + rhs
+    let mut t = vec![0.0f64; m * cols];
+    let rhs = cols - 1;
+    let mut basis = vec![0usize; m];
+
+    for r in 0..m {
+        let (row_coeffs, b) = if r < m_ub {
+            (lp.a_ub.row(r), lp.b_ub[r])
+        } else {
+            (lp.a_eq.row(r - m_ub), lp.b_eq[r - m_ub])
+        };
+        let sign = if b < 0.0 { -1.0 } else { 1.0 };
+        for c in 0..n {
+            t[r * cols + c] = sign * row_coeffs[c];
+        }
+        if r < m_ub {
+            t[r * cols + n + r] = sign * 1.0; // slack
+        }
+        t[r * cols + n + n_slack + r] = 1.0; // artificial
+        t[r * cols + rhs] = sign * b;
+        basis[r] = n + n_slack + r;
+    }
+
+    // ---- phase 1: min sum(artificials) ----
+    let mut cost1 = vec![0.0f64; cols - 1];
+    for a in 0..n_art {
+        cost1[n + n_slack + a] = 1.0;
+    }
+    if !optimize(&mut t, &mut basis, m, cols, &cost1) {
+        // phase-1 objective is bounded below by 0; unbounded is impossible
+        unreachable!("phase 1 cannot be unbounded");
+    }
+    let phase1_obj = objective_of(&t, &basis, m, cols, &cost1);
+    if phase1_obj > 1e-7 {
+        return SimplexResult { status: SimplexStatus::Infeasible, objective: f64::NAN, x: vec![] };
+    }
+    // Pivot out any artificial still in the basis (degenerate zero rows).
+    for r in 0..m {
+        if basis[r] >= n + n_slack {
+            let mut pivoted = false;
+            for c in 0..n + n_slack {
+                if t[r * cols + c].abs() > 1e-7 {
+                    pivot(&mut t, &mut basis, m, cols, r, c);
+                    pivoted = true;
+                    break;
+                }
+            }
+            if !pivoted {
+                // all-zero row: redundant constraint; leave artificial at 0
+            }
+        }
+    }
+
+    // ---- phase 2: original objective (artificials excluded) ----
+    let mut cost2 = vec![0.0f64; cols - 1];
+    cost2[..n].copy_from_slice(&lp.c);
+    // forbid artificials from re-entering
+    for a in 0..n_art {
+        cost2[n + n_slack + a] = f64::INFINITY;
+    }
+    if !optimize(&mut t, &mut basis, m, cols, &cost2) {
+        return SimplexResult { status: SimplexStatus::Unbounded, objective: f64::NEG_INFINITY, x: vec![] };
+    }
+
+    let mut x = vec![0.0f64; n];
+    for r in 0..m {
+        if basis[r] < n {
+            x[basis[r]] = t[r * cols + rhs];
+        }
+    }
+    let objective = lp.objective(&x);
+    SimplexResult { status: SimplexStatus::Optimal, objective, x }
+}
+
+/// Reduced-cost driven simplex iterations with Bland's rule.
+/// Returns false if unbounded.
+fn optimize(t: &mut [f64], basis: &mut [usize], m: usize, cols: usize, cost: &[f64]) -> bool {
+    let rhs = cols - 1;
+    loop {
+        // reduced costs: r_j = c_j - c_B^T B^{-1} A_j (computed via tableau)
+        let mut entering = None;
+        for j in 0..cols - 1 {
+            if cost[j].is_infinite() {
+                continue; // banned column
+            }
+            let mut rj = cost[j];
+            for r in 0..m {
+                let cb = cost[basis[r]];
+                if cb != 0.0 && cb.is_finite() {
+                    rj -= cb * t[r * cols + j];
+                }
+            }
+            if rj < -EPS {
+                entering = Some(j); // Bland: first improving index
+                break;
+            }
+        }
+        let Some(j) = entering else { return true };
+
+        // ratio test, Bland tie-break on smallest basis index
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for r in 0..m {
+            let a = t[r * cols + j];
+            if a > EPS {
+                let ratio = t[r * cols + rhs] / a;
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.map(|l| basis[r] < basis[l]).unwrap_or(false))
+                {
+                    best = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let Some(r) = leave else { return false };
+        pivot(t, basis, m, cols, r, j);
+    }
+}
+
+fn objective_of(t: &[f64], basis: &[usize], m: usize, cols: usize, cost: &[f64]) -> f64 {
+    let rhs = cols - 1;
+    (0..m)
+        .filter(|&r| cost[basis[r]].is_finite())
+        .map(|r| cost[basis[r]] * t[r * cols + rhs])
+        .sum()
+}
+
+fn pivot(t: &mut [f64], basis: &mut [usize], m: usize, cols: usize, r: usize, j: usize) {
+    let p = t[r * cols + j];
+    debug_assert!(p.abs() > 1e-12, "zero pivot");
+    for c in 0..cols {
+        t[r * cols + c] /= p;
+    }
+    for rr in 0..m {
+        if rr != r {
+            let f = t[rr * cols + j];
+            if f != 0.0 {
+                for c in 0..cols {
+                    t[rr * cols + c] -= f * t[r * cols + c];
+                }
+            }
+        }
+    }
+    basis[r] = j;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::problem::{DenseLp, Matrix};
+
+    fn lp(c: &[f64], aub: &[&[f64]], bub: &[f64], aeq: &[&[f64]], beq: &[f64]) -> DenseLp {
+        let n = c.len();
+        let mut a_ub = Matrix::zeros(aub.len(), n);
+        for (i, row) in aub.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                a_ub.set(i, j, v);
+            }
+        }
+        let mut a_eq = Matrix::zeros(aeq.len(), n);
+        for (i, row) in aeq.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                a_eq.set(i, j, v);
+            }
+        }
+        DenseLp { c: c.to_vec(), a_ub, b_ub: bub.to_vec(), a_eq, b_eq: beq.to_vec() }
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => min -3x-5y, opt=-36
+        let p = lp(
+            &[-3.0, -5.0],
+            &[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]],
+            &[4.0, 12.0, 18.0],
+            &[],
+            &[],
+        );
+        let r = solve(&p);
+        assert_eq!(r.status, SimplexStatus::Optimal);
+        assert!((r.objective + 36.0).abs() < 1e-6);
+        assert!((r.x[0] - 2.0).abs() < 1e-6 && (r.x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // min x+2y s.t. x+y == 1 => x=1,y=0, obj 1
+        let p = lp(&[1.0, 2.0], &[], &[], &[&[1.0, 1.0]], &[1.0]);
+        let r = solve(&p);
+        assert_eq!(r.status, SimplexStatus::Optimal);
+        assert!((r.objective - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x <= -1 with x >= 0
+        let p = lp(&[1.0], &[&[1.0]], &[-1.0], &[], &[]);
+        assert_eq!(solve(&p).status, SimplexStatus::Infeasible);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x, no constraints
+        let p = lp(&[-1.0], &[], &[], &[], &[]);
+        assert_eq!(solve(&p).status, SimplexStatus::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_terminates() {
+        // redundant constraints forcing degeneracy
+        let p = lp(
+            &[-1.0, -1.0],
+            &[&[1.0, 0.0], &[1.0, 0.0], &[1.0, 1.0]],
+            &[1.0, 1.0, 1.0],
+            &[],
+            &[],
+        );
+        let r = solve(&p);
+        assert_eq!(r.status, SimplexStatus::Optimal);
+        assert!((r.objective + 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn negative_rhs_rows() {
+        // min x s.t. -x <= -2  (x >= 2)
+        let p = lp(&[1.0], &[&[-1.0]], &[-2.0], &[], &[]);
+        let r = solve(&p);
+        assert_eq!(r.status, SimplexStatus::Optimal);
+        assert!((r.objective - 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn random_lps_feasible_and_kkt_sane() {
+        // random feasible LPs: simplex solution must be feasible and not
+        // worse than a known feasible point
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        for trial in 0..20 {
+            let n = 3 + (trial % 4);
+            let m = 2 + (trial % 3);
+            // known feasible x0 in [0,1]^n; constraints a·x <= a·x0 + margin
+            let x0: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let mut a_ub = Matrix::zeros(m, n);
+            let mut b_ub = vec![0.0; m];
+            for r in 0..m {
+                let mut dot = 0.0;
+                for c in 0..n {
+                    let v = rng.uniform(-1.0, 1.0);
+                    a_ub.set(r, c, v);
+                    dot += v * x0[c];
+                }
+                b_ub[r] = dot + rng.f64() * 0.5;
+            }
+            let c: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let p = DenseLp { c, a_ub, b_ub, a_eq: Matrix::zeros(0, n), b_eq: vec![] };
+            let r = solve(&p);
+            if r.status == SimplexStatus::Optimal {
+                assert!(p.max_violation(&r.x) < 1e-6, "trial {trial}");
+                assert!(r.objective <= p.objective(&x0) + 1e-7, "trial {trial}");
+            } else {
+                assert_eq!(r.status, SimplexStatus::Unbounded, "trial {trial}");
+            }
+        }
+    }
+}

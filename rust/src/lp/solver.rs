@@ -1,0 +1,105 @@
+//! Backend abstraction for solving the mapping LP.
+//!
+//! Three interchangeable backends, cross-checked in tests:
+//!   - `NativePdhgSolver`: f64 PDHG with the sparse interval operator,
+//!   - `SimplexSolver`: exact dense simplex (small instances only),
+//!   - `runtime::ArtifactSolver`: the AOT JAX/Pallas PDHG artifact run
+//!     through PJRT (the paper-system production path).
+
+use anyhow::Result;
+
+use super::builder::MappingLp;
+use super::pdhg::{self, PdhgOptions};
+use super::simplex::{self, SimplexStatus};
+
+/// Fractional mapping-LP solution returned by any backend.
+#[derive(Clone, Debug)]
+pub struct MappingSolution {
+    /// x[u*m + b] fractional assignment.
+    pub x: Vec<f64>,
+    /// Inequality duals (scaled rows), layout (b*t + ts)*dims + d.
+    /// May be empty for backends that do not expose duals.
+    pub y: Vec<f64>,
+    pub objective: f64,
+    pub converged: bool,
+    pub iterations: usize,
+}
+
+pub trait MappingSolver {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution>;
+    /// Short backend name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Native f64 PDHG backend (default production path for large T).
+pub struct NativePdhgSolver {
+    pub opts: PdhgOptions,
+}
+
+impl Default for NativePdhgSolver {
+    fn default() -> Self {
+        NativePdhgSolver { opts: PdhgOptions::default() }
+    }
+}
+
+impl MappingSolver for NativePdhgSolver {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        let r = pdhg::solve(lp, &self.opts);
+        Ok(MappingSolution {
+            x: r.x,
+            y: r.y,
+            objective: r.objective,
+            converged: r.converged,
+            iterations: r.iterations,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "pdhg-native"
+    }
+}
+
+/// Exact simplex backend. Cost is exponential-ish in practice on large
+/// dense tableaus — use for tests and tiny instances only.
+pub struct SimplexSolver;
+
+impl MappingSolver for SimplexSolver {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        let r = simplex::solve(&lp.to_dense());
+        if r.status != SimplexStatus::Optimal {
+            anyhow::bail!("simplex: {:?}", r.status);
+        }
+        let nm = lp.n * lp.m;
+        Ok(MappingSolution {
+            x: r.x[..nm].to_vec(),
+            y: Vec::new(),
+            objective: r.objective,
+            converged: true,
+            iterations: 0,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "simplex"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    #[test]
+    fn backends_agree() {
+        let inst = generate(
+            &SynthParams { n: 10, m: 3, dims: 2, horizon: 6, dem_range: (0.05, 0.3), ..Default::default() },
+            11,
+        );
+        let lp = MappingLp::from_instance(&trim(&inst).instance);
+        let a = NativePdhgSolver::default().solve_mapping(&lp).unwrap();
+        let b = SimplexSolver.solve_mapping(&lp).unwrap();
+        let rel = (a.objective - b.objective).abs() / (1.0 + b.objective);
+        assert!(rel < 1e-3, "pdhg {} vs simplex {}", a.objective, b.objective);
+    }
+}

@@ -1,0 +1,258 @@
+//! tlrs — TL-Rightsizing CLI (the L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   solve    --input inst.json [--algo lp-map-f] [--backend auto] [--replay]
+//!   gen      --kind synth|gct [--n N] [--m M] [--dims D] [--horizon T]
+//!            [--seed S] --out inst.json [--csv trace.csv]
+//!   lb       --input inst.json [--backend auto]
+//!   figures  <id|all> [--quick] [--backend auto] [--out-dir bench_results]
+//!   serve    [--addr 127.0.0.1:7077] [--backend auto]
+//!   info     print artifact manifest and PJRT platform
+//!   help
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::service;
+use tlrs::harness::{report, runner, scenarios, special};
+use tlrs::io::files;
+use tlrs::io::gct_like;
+use tlrs::io::synth::{self, SynthParams};
+use tlrs::model::trim;
+use tlrs::sim::replay::replay;
+use tlrs::util::cli::Args;
+use tlrs::util::json::Json;
+
+const USAGE: &str = "\
+tlrs — cold-start cluster rightsizing for time-limited tasks (CLOUD'21)
+
+USAGE:
+  tlrs solve   --input inst.json [--algo penalty-map|penalty-map-f|lp-map|lp-map-f]
+               [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
+  tlrs gen     --kind synth|gct [--n 1000] [--m 10] [--dims 5] [--horizon 24]
+               [--seed 1] [--priced] --out inst.json [--csv trace.csv]
+  tlrs lb      --input inst.json [--backend ...]
+  tlrs figures <fig1|fig5|fig7a|fig7b|fig7c|fig8a|fig8b|fig9|fig10|fig11|tab1|rt|ntl|all>
+               [--quick] [--backend ...] [--out-dir bench_results]
+  tlrs ablations [--quick]
+  tlrs serve   [--addr 127.0.0.1:7077] [--backend ...]
+  tlrs info
+";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn planner_from(args: &Args) -> Result<Planner> {
+    let backend = Backend::parse(&args.get_or("backend", "auto"))?;
+    Planner::new(backend)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "solve" => cmd_solve(args),
+        "gen" => cmd_gen(args),
+        "lb" => cmd_lb(args),
+        "figures" => cmd_figures(args),
+        "ablations" => {
+            let out = tlrs::harness::ablations::run(args.has_flag("quick"))?;
+            print!("{out}");
+            Ok(())
+        }
+        "serve" => cmd_serve(args),
+        "info" => cmd_info(),
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let input = args.get("input").context("--input required")?;
+    let inst = files::load_instance(Path::new(input))?;
+    let planner = planner_from(args)?;
+    let algo = args.get_or("algo", "lp-map-f");
+
+    let tr = trim(&inst).instance;
+    let (solver, backend) = planner.solver_for(&tr);
+    use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+    let t0 = std::time::Instant::now();
+    let (solution, lb) = match algo.as_str() {
+        "penalty-map" => (penalty_map_best(&tr, false), None),
+        "penalty-map-f" => (penalty_map_best(&tr, true), None),
+        "lp-map" => {
+            let r = lp_map_best(&tr, solver.as_ref(), false)?;
+            (r.solution.clone(), Some(r.certified_lb))
+        }
+        "lp-map-f" => {
+            let r = lp_map_best(&tr, solver.as_ref(), true)?;
+            (r.solution.clone(), Some(r.certified_lb))
+        }
+        other => bail!("unknown --algo '{other}'"),
+    };
+    let dt = t0.elapsed();
+    solution
+        .verify(&tr)
+        .map_err(|v| anyhow::anyhow!("infeasible solution produced: {v:?}"))?;
+
+    let cost = solution.cost(&tr);
+    println!("algorithm      : {algo} ({backend})");
+    println!("tasks / types  : {} / {}", tr.n_tasks(), tr.n_types());
+    println!("trimmed T      : {}", tr.horizon);
+    println!("nodes purchased: {}", solution.nodes.len());
+    println!("cluster cost   : {cost:.4}");
+    if let Some(lb) = lb {
+        println!("lower bound    : {lb:.4}  (normalized cost {:.3})", cost / lb);
+    }
+    println!("solve time     : {dt:?}");
+    if args.has_flag("replay") {
+        let rep = replay(&tr, &solution);
+        println!(
+            "replay         : {} overloads, avg utilization {:.1}%, peak tasks {}",
+            rep.overloads,
+            rep.avg_utilization * 100.0,
+            rep.peak_tasks
+        );
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, files::solution_to_json(&solution, &tr).to_string())?;
+        println!("solution       : wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out = args.get("out").context("--out required")?;
+    let seed = args.get_u64("seed", 1);
+    let kind = args.get_or("kind", "synth");
+    let inst = match kind.as_str() {
+        "synth" => {
+            let mut p = SynthParams::default();
+            p.n = args.get_usize("n", p.n);
+            p.m = args.get_usize("m", p.m);
+            p.dims = args.get_usize("dims", p.dims);
+            p.horizon = args.get_usize("horizon", p.horizon as usize) as u32;
+            synth::generate(&p, seed)
+        }
+        "gct" => {
+            let trace = gct_like::generate_trace(13_000, 0x6c7_2019);
+            let n = args.get_usize("n", 1000);
+            let m = args.get_usize("m", 10);
+            let mut inst = trace.sample_scenario(n, m, seed);
+            if !args.has_flag("priced") {
+                tlrs::model::CostModel::homogeneous(inst.dims())
+                    .apply(&mut inst.node_types);
+            }
+            inst
+        }
+        other => bail!("unknown --kind '{other}'"),
+    };
+    files::save_instance(&inst, Path::new(out))?;
+    println!("wrote {} ({} tasks, {} node-types)", out, inst.n_tasks(), inst.n_types());
+    if let Some(csv) = args.get("csv") {
+        files::save_trace_csv(&inst.tasks, Path::new(csv))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_lb(args: &Args) -> Result<()> {
+    let input = args.get("input").context("--input required")?;
+    let inst = files::load_instance(Path::new(input))?;
+    let planner = planner_from(args)?;
+    let tr = trim(&inst).instance;
+    let (solver, backend) = planner.solver_for(&tr);
+    let lb = tlrs::algo::lowerbound::lower_bound(&tr, solver.as_ref())?;
+    println!("backend              : {backend}");
+    println!("LP dual bound        : {:.6}", lb.lp_bound);
+    println!("congestion bound     : {:.6}", lb.congestion_bound);
+    println!("LP objective (approx): {:.6}", lb.lp_objective);
+    println!("best certified LB    : {:.6}", lb.best());
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("all")
+        .to_string();
+    let quick = args.has_flag("quick");
+    let out_dir = PathBuf::from(args.get_or("out-dir", "bench_results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let planner = planner_from(args)?;
+
+    let ids: Vec<&str> = if which == "all" {
+        scenarios::all_ids()
+    } else {
+        scenarios::all_ids().into_iter().filter(|id| *id == which).collect()
+    };
+    anyhow::ensure!(!ids.is_empty(), "unknown figure '{which}'");
+
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        if let Some(fig) = scenarios::figure(id, quick) {
+            eprintln!(
+                "running {id} ({} points x {} seeds)...",
+                fig.points.len(),
+                fig.seeds.len()
+            );
+            let res = runner::run_figure(&planner, &fig)?;
+            print!("{}", report::render_table(&res));
+            report::save_json(&res, &out_dir)?;
+        } else {
+            let (text, json) = match id {
+                "fig1" => special::fig1(&planner)?,
+                "fig5" => special::fig5(&planner)?,
+                "tab1" => special::tab1(),
+                "rt" => special::running_time(&planner, quick)?,
+                "ntl" => special::no_timeline(&planner, quick)?,
+                other => bail!("unhandled figure {other}"),
+            };
+            print!("{text}");
+            std::fs::write(out_dir.join(format!("{id}.json")), json.to_string())?;
+        }
+        eprintln!("{id} done in {:?}\n", t0.elapsed());
+    }
+    eprintln!("--- metrics ---\n{}", planner.metrics.report());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7077");
+    let planner = Arc::new(planner_from(args)?);
+    service::serve(planner, &addr)
+}
+
+fn cmd_info() -> Result<()> {
+    match tlrs::runtime::Manifest::load(&tlrs::runtime::Manifest::default_dir()) {
+        Ok(m) => {
+            println!("artifact dir: {}", m.dir.display());
+            for b in &m.buckets {
+                println!(
+                    "  bucket {:<4} N={:<5} M={:<3} T={:<5} D={:<2} chunk={} ({}, {}, {})",
+                    b.name, b.n, b.m, b.t, b.d, b.chunk_iters, b.pdhg, b.power, b.penalty
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+    }
+    match tlrs::runtime::Engine::cpu() {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    let j = Json::obj(vec![("version", Json::Str(env!("CARGO_PKG_VERSION").into()))]);
+    println!("tlrs {}", j.get("version").as_str().unwrap());
+    Ok(())
+}

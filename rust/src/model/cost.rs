@@ -1,0 +1,83 @@
+//! Node-type cost models (paper Equation 8):
+//!
+//! ```text
+//! cost(B) = sum_d c_d * cap(B,d)^e
+//! ```
+//!
+//! Homogeneous-linear sets every coefficient and the exponent to one;
+//! heterogeneous draws coefficients (or takes pricing-table ones) and
+//! varies `e` to model non-linear rate curves (e<1: bulk discount,
+//! e>1: premium for large shapes).
+
+use super::nodetype::NodeType;
+
+/// Cost model parameters.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Per-dimension coefficients `c_d`.
+    pub coefficients: Vec<f64>,
+    /// Exponent `e` applied to each capacity component.
+    pub exponent: f64,
+}
+
+impl CostModel {
+    /// Homogeneous linear model: `c_d = 1`, `e = 1` (paper section VI-B).
+    pub fn homogeneous(dims: usize) -> Self {
+        CostModel { coefficients: vec![1.0; dims], exponent: 1.0 }
+    }
+
+    pub fn new(coefficients: Vec<f64>, exponent: f64) -> Self {
+        assert!(!coefficients.is_empty());
+        assert!(exponent > 0.0, "non-positive exponent");
+        CostModel { coefficients, exponent }
+    }
+
+    /// Price a capacity vector.
+    pub fn price(&self, capacity: &[f64]) -> f64 {
+        assert_eq!(capacity.len(), self.coefficients.len());
+        capacity
+            .iter()
+            .zip(&self.coefficients)
+            .map(|(&cap, &c)| c * cap.powf(self.exponent))
+            .sum()
+    }
+
+    /// Re-price a catalog of node-types in place.
+    pub fn apply(&self, types: &mut [NodeType]) {
+        for b in types {
+            b.cost = self.price(&b.capacity);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_is_sum() {
+        let m = CostModel::homogeneous(3);
+        assert!((m.price(&[0.2, 0.3, 0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exponent_effects() {
+        let m_sub = CostModel::new(vec![1.0], 0.5);
+        let m_sup = CostModel::new(vec![1.0], 2.0);
+        // sub-linear: doubling capacity less than doubles cost
+        assert!(m_sub.price(&[0.8]) < 2.0 * m_sub.price(&[0.4]));
+        // super-linear: doubling capacity more than doubles cost
+        assert!(m_sup.price(&[0.8]) > 2.0 * m_sup.price(&[0.4]));
+    }
+
+    #[test]
+    fn apply_repricing() {
+        let mut types = vec![
+            NodeType::new("a", vec![0.5, 0.5], 99.0),
+            NodeType::new("b", vec![1.0, 0.2], 99.0),
+        ];
+        CostModel::new(vec![2.0, 1.0], 1.0).apply(&mut types);
+        assert!((types[0].cost - 1.5).abs() < 1e-12);
+        assert!((types[1].cost - 2.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,155 @@
+//! A TL-Rightsizing problem instance: tasks + node-types + timeline.
+
+use super::nodetype::NodeType;
+use super::task::Task;
+
+/// A complete problem instance (paper section II). Dimensions are uniform
+/// across tasks and node-types; the timeline is `0..horizon` timeslots.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub tasks: Vec<Task>,
+    pub node_types: Vec<NodeType>,
+    /// Number of timeslots T; every task span lies in [0, horizon).
+    pub horizon: u32,
+}
+
+impl Instance {
+    /// Validate and build. Panics on inconsistent dimensions or spans —
+    /// instances come from our own loaders, so this is a programmer error.
+    pub fn new(tasks: Vec<Task>, node_types: Vec<NodeType>, horizon: u32) -> Self {
+        assert!(!node_types.is_empty(), "no node-types");
+        assert!(horizon > 0, "zero horizon");
+        let d = node_types[0].dims();
+        for b in &node_types {
+            assert_eq!(b.dims(), d, "node-type {} dims mismatch", b.name);
+        }
+        for u in &tasks {
+            assert_eq!(u.dims(), d, "task {} dims mismatch", u.id);
+            assert!(u.end < horizon, "task {} beyond horizon", u.id);
+        }
+        Instance { tasks, node_types, horizon }
+    }
+
+    /// Number of resource dimensions D.
+    pub fn dims(&self) -> usize {
+        self.node_types[0].dims()
+    }
+
+    /// Number of tasks n.
+    pub fn n_tasks(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Number of node-types m.
+    pub fn n_types(&self) -> usize {
+        self.node_types.len()
+    }
+
+    /// Demand/capacity ratio `r(u,B,d) = dem(u,d)/cap(B,d)`.
+    #[inline]
+    pub fn ratio(&self, u: usize, b: usize, d: usize) -> f64 {
+        self.tasks[u].demand[d] / self.node_types[b].capacity[d]
+    }
+
+    /// Relative demand `h_avg(u|B)` (paper section III).
+    pub fn h_avg(&self, u: usize, b: usize) -> f64 {
+        let d = self.dims();
+        (0..d).map(|k| self.ratio(u, b, k)).sum::<f64>() / d as f64
+    }
+
+    /// Relative demand `h_max(u|B)` (alternative mapping policy).
+    pub fn h_max(&self, u: usize, b: usize) -> f64 {
+        (0..self.dims())
+            .map(|k| self.ratio(u, b, k))
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Can every task fit on at least one node-type alone? (feasibility
+    /// precondition; loaders guarantee it, algorithms assert it).
+    pub fn is_feasible(&self) -> bool {
+        self.tasks.iter().all(|u| {
+            self.node_types.iter().any(|b| b.admits(&u.demand))
+        })
+    }
+
+    /// Sum of node-type costs `cost(B)` over the catalog — the additive
+    /// constant in the approximation bounds (paper Lemma 2).
+    pub fn catalog_cost(&self) -> f64 {
+        self.node_types.iter().map(|b| b.cost).sum()
+    }
+
+    /// Indices of tasks active at timeslot `t`.
+    pub fn active_at(&self, t: u32) -> Vec<usize> {
+        (0..self.tasks.len())
+            .filter(|&u| self.tasks[u].active_at(t))
+            .collect()
+    }
+
+    /// Treat every task as perpetually active (paper section VI-F,
+    /// "no-timeline" comparison): all spans become [0, 0], horizon 1.
+    pub fn collapse_timeline(&self) -> Instance {
+        let tasks = self
+            .tasks
+            .iter()
+            .map(|u| Task::new(u.id, u.demand.clone(), 0, 0))
+            .collect();
+        Instance::new(tasks, self.node_types.clone(), 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn tiny() -> Instance {
+        Instance::new(
+            vec![
+                Task::new(0, vec![0.2, 0.4], 0, 2),
+                Task::new(1, vec![0.5, 0.1], 3, 5),
+            ],
+            vec![
+                NodeType::new("a", vec![1.0, 1.0], 10.0),
+                NodeType::new("b", vec![0.5, 0.5], 6.0),
+            ],
+            6,
+        )
+    }
+
+    #[test]
+    fn accessors() {
+        let inst = tiny();
+        assert_eq!(inst.dims(), 2);
+        assert_eq!(inst.n_tasks(), 2);
+        assert_eq!(inst.n_types(), 2);
+        assert!((inst.ratio(0, 1, 1) - 0.8).abs() < 1e-12);
+        assert!((inst.h_avg(0, 0) - 0.3).abs() < 1e-12);
+        assert!((inst.h_max(0, 0) - 0.4).abs() < 1e-12);
+        assert!((inst.catalog_cost() - 16.0).abs() < 1e-12);
+        assert!(inst.is_feasible());
+    }
+
+    #[test]
+    fn active_sets() {
+        let inst = tiny();
+        assert_eq!(inst.active_at(0), vec![0]);
+        assert_eq!(inst.active_at(3), vec![1]);
+        assert!(inst.active_at(6.min(inst.horizon - 1)).len() <= 2);
+    }
+
+    #[test]
+    fn collapse() {
+        let c = tiny().collapse_timeline();
+        assert_eq!(c.horizon, 1);
+        assert!(c.tasks.iter().all(|u| u.start == 0 && u.end == 0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_rejected() {
+        Instance::new(
+            vec![Task::new(0, vec![0.1], 0, 0)],
+            vec![NodeType::new("a", vec![1.0, 1.0], 1.0)],
+            1,
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Problem model: tasks, node-types, instances, timelines, solutions, costs.
+
+pub mod cost;
+pub mod instance;
+pub mod nodetype;
+pub mod solution;
+pub mod task;
+pub mod timeline;
+
+pub use cost::CostModel;
+pub use instance::Instance;
+pub use nodetype::NodeType;
+pub use solution::{PlacedNode, Solution, Violation};
+pub use task::Task;
+pub use timeline::{trim, Trimmed};

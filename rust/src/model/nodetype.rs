@@ -1,0 +1,71 @@
+//! Node-types: purchasable machine shapes with capacity and price.
+
+/// A node-type `B` (paper section II): capacity vector `cap(B,d)` and price
+/// `cost(B)`. A purchased replica of a node-type is a *node*.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeType {
+    /// Human-readable name (e.g. "n2-standard-8" for GCT-like traces).
+    pub name: String,
+    /// Capacity along each of the D dimensions, normalized to (0, 1].
+    pub capacity: Vec<f64>,
+    /// Purchase price of one replica.
+    pub cost: f64,
+}
+
+impl NodeType {
+    pub fn new(name: impl Into<String>, capacity: Vec<f64>, cost: f64) -> Self {
+        let name = name.into();
+        assert!(!capacity.is_empty(), "node-type {name}: empty capacity");
+        assert!(
+            capacity.iter().all(|&c| c > 0.0),
+            "node-type {name}: non-positive capacity"
+        );
+        assert!(cost >= 0.0, "node-type {name}: negative cost");
+        NodeType { name, capacity, cost }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.capacity.len()
+    }
+
+    /// Capacity offered per unit cost, `sum_d cap(B,d) / cost(B)` — the
+    /// node-type ordering key for cross-node-type filling (paper section V-D).
+    pub fn capacity_per_cost(&self) -> f64 {
+        let total: f64 = self.capacity.iter().sum();
+        if self.cost <= 0.0 {
+            f64::INFINITY
+        } else {
+            total / self.cost
+        }
+    }
+
+    /// Could a task with this demand vector ever fit on an empty node?
+    pub fn admits(&self, demand: &[f64]) -> bool {
+        demand.iter().zip(&self.capacity).all(|(&d, &c)| d <= c + 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_and_admit() {
+        let b = NodeType::new("small", vec![0.5, 0.25], 3.0);
+        assert!((b.capacity_per_cost() - 0.25).abs() < 1e-12);
+        assert!(b.admits(&[0.5, 0.2]));
+        assert!(!b.admits(&[0.51, 0.2]));
+    }
+
+    #[test]
+    fn zero_cost_is_infinite_ratio() {
+        let b = NodeType::new("free", vec![1.0], 0.0);
+        assert!(b.capacity_per_cost().is_infinite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        NodeType::new("bad", vec![0.0], 1.0);
+    }
+}

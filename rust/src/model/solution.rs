@@ -1,0 +1,206 @@
+//! Solutions: a purchased multiset of nodes plus a task placement,
+//! with an independent feasibility verifier.
+
+use super::instance::Instance;
+
+/// One purchased node (a replica of a node-type). `purchase_order` is the
+/// sequence number used by first-fit ("node purchased the earliest").
+#[derive(Clone, Debug)]
+pub struct PlacedNode {
+    pub type_idx: usize,
+    pub purchase_order: usize,
+    /// Indices of the tasks placed in this node.
+    pub tasks: Vec<usize>,
+}
+
+/// A feasible (or to-be-verified) solution.
+#[derive(Clone, Debug, Default)]
+pub struct Solution {
+    pub nodes: Vec<PlacedNode>,
+    /// For each task index, the node index it is placed in.
+    pub assignment: Vec<Option<usize>>,
+}
+
+/// A feasibility violation found by [`Solution::verify`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Violation {
+    Unplaced { task: usize },
+    DoublyPlaced { task: usize },
+    CapacityExceeded { node: usize, timeslot: u32, dim: usize, load: f64, cap: f64 },
+    InconsistentAssignment { task: usize },
+}
+
+impl Solution {
+    pub fn new(n_tasks: usize) -> Self {
+        Solution { nodes: Vec::new(), assignment: vec![None; n_tasks] }
+    }
+
+    /// Total purchase cost `sum_b cost(b)`.
+    pub fn cost(&self, inst: &Instance) -> f64 {
+        self.nodes.iter().map(|b| inst.node_types[b.type_idx].cost).sum()
+    }
+
+    /// Number of nodes purchased per node-type.
+    pub fn nodes_per_type(&self, inst: &Instance) -> Vec<usize> {
+        let mut counts = vec![0usize; inst.n_types()];
+        for b in &self.nodes {
+            counts[b.type_idx] += 1;
+        }
+        counts
+    }
+
+    /// Full independent feasibility check (paper capacity constraint):
+    /// every task placed exactly once, assignment consistent with node task
+    /// lists, and for every node, timeslot and dimension the aggregate
+    /// demand of active tasks is within capacity.
+    pub fn verify(&self, inst: &Instance) -> Result<(), Vec<Violation>> {
+        let mut violations = Vec::new();
+        let mut seen = vec![0usize; inst.n_tasks()];
+        for (bi, node) in self.nodes.iter().enumerate() {
+            for &u in &node.tasks {
+                seen[u] += 1;
+                if self.assignment[u] != Some(bi) {
+                    violations.push(Violation::InconsistentAssignment { task: u });
+                }
+            }
+        }
+        for u in 0..inst.n_tasks() {
+            match seen[u] {
+                0 => violations.push(Violation::Unplaced { task: u }),
+                1 => {}
+                _ => violations.push(Violation::DoublyPlaced { task: u }),
+            }
+        }
+        let dims = inst.dims();
+        for (bi, node) in self.nodes.iter().enumerate() {
+            let cap = &inst.node_types[node.type_idx].capacity;
+            // load profile over (t, d) for this node
+            let t_len = inst.horizon as usize;
+            let mut load = vec![0.0f64; t_len * dims];
+            for &u in &node.tasks {
+                let task = &inst.tasks[u];
+                for t in task.start..=task.end {
+                    for d in 0..dims {
+                        load[t as usize * dims + d] += task.demand[d];
+                    }
+                }
+            }
+            for t in 0..t_len {
+                for d in 0..dims {
+                    let l = load[t * dims + d];
+                    if l > cap[d] + 1e-9 {
+                        violations.push(Violation::CapacityExceeded {
+                            node: bi,
+                            timeslot: t as u32,
+                            dim: d,
+                            load: l,
+                            cap: cap[d],
+                        });
+                    }
+                }
+            }
+        }
+        if violations.is_empty() {
+            Ok(())
+        } else {
+            Err(violations)
+        }
+    }
+
+    /// Peak utilization of a node over its busiest (t, d): used by reports.
+    pub fn node_peak_utilization(&self, inst: &Instance, node_idx: usize) -> f64 {
+        let node = &self.nodes[node_idx];
+        let cap = &inst.node_types[node.type_idx].capacity;
+        let dims = inst.dims();
+        let mut best: f64 = 0.0;
+        for t in 0..inst.horizon {
+            for d in 0..dims {
+                let load: f64 = node
+                    .tasks
+                    .iter()
+                    .filter(|&&u| inst.tasks[u].active_at(t))
+                    .map(|&u| inst.tasks[u].demand[d])
+                    .sum();
+                best = best.max(load / cap[d]);
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::nodetype::NodeType;
+    use crate::model::task::Task;
+
+    fn inst() -> Instance {
+        Instance::new(
+            vec![
+                Task::new(0, vec![0.6], 0, 1),
+                Task::new(1, vec![0.6], 1, 2),
+                Task::new(2, vec![0.6], 3, 3),
+            ],
+            vec![NodeType::new("a", vec![1.0], 5.0)],
+            4,
+        )
+    }
+
+    #[test]
+    fn good_solution_verifies() {
+        let inst = inst();
+        let mut s = Solution::new(3);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 2] });
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 1, tasks: vec![1] });
+        s.assignment = vec![Some(0), Some(1), Some(0)];
+        assert!(s.verify(&inst).is_ok());
+        assert_eq!(s.cost(&inst), 10.0);
+        assert_eq!(s.nodes_per_type(&inst), vec![2]);
+    }
+
+    #[test]
+    fn overload_detected() {
+        let inst = inst();
+        let mut s = Solution::new(3);
+        // tasks 0 and 1 overlap at t=1 with total demand 1.2 > 1.0
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 1, 2] });
+        s.assignment = vec![Some(0), Some(0), Some(0)];
+        let errs = s.verify(&inst).unwrap_err();
+        assert!(errs.iter().any(|v| matches!(
+            v,
+            Violation::CapacityExceeded { timeslot: 1, .. }
+        )));
+    }
+
+    #[test]
+    fn unplaced_detected() {
+        let inst = inst();
+        let mut s = Solution::new(3);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 2] });
+        s.assignment = vec![Some(0), None, Some(0)];
+        let errs = s.verify(&inst).unwrap_err();
+        assert!(errs.contains(&Violation::Unplaced { task: 1 }));
+    }
+
+    #[test]
+    fn double_place_detected() {
+        let inst = inst();
+        let mut s = Solution::new(3);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 2] });
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 1, tasks: vec![1, 2] });
+        s.assignment = vec![Some(0), Some(1), Some(0)];
+        let errs = s.verify(&inst).unwrap_err();
+        assert!(errs.iter().any(|v| matches!(v, Violation::DoublyPlaced { task: 2 })
+            || matches!(v, Violation::InconsistentAssignment { task: 2 })));
+    }
+
+    #[test]
+    fn peak_utilization() {
+        let inst = inst();
+        let mut s = Solution::new(3);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 2] });
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 1, tasks: vec![1] });
+        s.assignment = vec![Some(0), Some(1), Some(0)];
+        assert!((s.node_peak_utilization(&inst, 0) - 0.6).abs() < 1e-12);
+    }
+}

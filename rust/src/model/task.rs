@@ -1,0 +1,90 @@
+//! Tasks: D-dimensional resource demands over a closed timeslot interval.
+
+/// A time-limited task (paper section II): demand vector `dem(u,d)` and an
+/// inclusive active span `[start, end]` in discrete timeslots.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Task {
+    /// Stable external identifier (index into the source trace).
+    pub id: u64,
+    /// Demand along each of the D dimensions, normalized to [0, 1].
+    pub demand: Vec<f64>,
+    /// First active timeslot (0-based).
+    pub start: u32,
+    /// Last active timeslot, inclusive; `end >= start`.
+    pub end: u32,
+}
+
+impl Task {
+    pub fn new(id: u64, demand: Vec<f64>, start: u32, end: u32) -> Self {
+        assert!(end >= start, "task {id}: end {end} < start {start}");
+        assert!(!demand.is_empty(), "task {id}: empty demand");
+        Task { id, demand, start, end }
+    }
+
+    /// Number of resource dimensions.
+    pub fn dims(&self) -> usize {
+        self.demand.len()
+    }
+
+    /// Is the task active at timeslot `t` (paper: `u ~ t`)?
+    #[inline]
+    pub fn active_at(&self, t: u32) -> bool {
+        t >= self.start && t <= self.end
+    }
+
+    /// Number of active timeslots.
+    pub fn span_len(&self) -> u32 {
+        self.end - self.start + 1
+    }
+
+    /// Do the active spans of two tasks intersect?
+    pub fn overlaps(&self, other: &Task) -> bool {
+        self.start <= other.end && other.start <= self.end
+    }
+
+    /// A task is *small* w.r.t. a capacity vector if every demand component
+    /// is at most half the capacity (paper section III analysis).
+    pub fn is_small_for(&self, capacity: &[f64]) -> bool {
+        self.demand.iter().zip(capacity).all(|(&d, &c)| d <= c / 2.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u32, e: u32) -> Task {
+        Task::new(0, vec![0.1], s, e)
+    }
+
+    #[test]
+    fn active_span() {
+        let u = t(2, 5);
+        assert!(!u.active_at(1));
+        assert!(u.active_at(2));
+        assert!(u.active_at(5));
+        assert!(!u.active_at(6));
+        assert_eq!(u.span_len(), 4);
+    }
+
+    #[test]
+    fn overlap_cases() {
+        assert!(t(0, 3).overlaps(&t(3, 5)));
+        assert!(t(3, 5).overlaps(&t(0, 3)));
+        assert!(!t(0, 2).overlaps(&t(3, 5)));
+        assert!(t(0, 9).overlaps(&t(4, 5)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_interval_rejected() {
+        Task::new(1, vec![0.1], 5, 4);
+    }
+
+    #[test]
+    fn smallness() {
+        let u = Task::new(0, vec![0.3, 0.1], 0, 0);
+        assert!(u.is_small_for(&[0.6, 0.2]));
+        assert!(!u.is_small_for(&[0.5, 0.2]));
+    }
+}

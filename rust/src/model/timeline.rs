@@ -1,0 +1,135 @@
+//! Timeline trimming (paper section II): only task start slots matter.
+//!
+//! For capacity constraints, the aggregate load within a node only changes
+//! at task start times — between consecutive starts the active set can only
+//! shrink. Remapping every slot to the rank of the latest start <= slot
+//! therefore preserves the feasible-solution set exactly while shrinking
+//! T to at most n distinct values.
+
+use super::instance::Instance;
+use super::task::Task;
+
+/// Result of trimming: the rewritten instance plus the sorted original
+/// start slots (`slots[k]` is the original timeslot of trimmed slot `k`),
+/// so solutions can be reported against the original timeline.
+#[derive(Clone, Debug)]
+pub struct Trimmed {
+    pub instance: Instance,
+    pub slots: Vec<u32>,
+}
+
+/// Trim the timeline of `inst` to distinct task start slots.
+///
+/// Each task's interval `[s, e]` becomes `[rank(s), rank'(e)]` where
+/// `rank` is the index of `s` among sorted distinct starts and `rank'`
+/// maps `e` to the latest start `<= e`. Tasks always contain their own
+/// start, so the image interval is non-empty.
+pub fn trim(inst: &Instance) -> Trimmed {
+    if inst.tasks.is_empty() {
+        return Trimmed {
+            instance: Instance::new(vec![], inst.node_types.clone(), 1),
+            slots: vec![0],
+        };
+    }
+    let mut slots: Vec<u32> = inst.tasks.iter().map(|u| u.start).collect();
+    slots.sort_unstable();
+    slots.dedup();
+
+    let rank_of_start = |s: u32| -> u32 {
+        slots.binary_search(&s).expect("start must be a slot") as u32
+    };
+    // latest start <= e; every task has start <= e so this never underflows
+    let rank_of_end = |e: u32| -> u32 {
+        match slots.binary_search(&e) {
+            Ok(i) => i as u32,
+            Err(i) => (i - 1) as u32,
+        }
+    };
+
+    let tasks: Vec<Task> = inst
+        .tasks
+        .iter()
+        .map(|u| Task::new(u.id, u.demand.clone(), rank_of_start(u.start), rank_of_end(u.end)))
+        .collect();
+    let horizon = slots.len() as u32;
+    Trimmed {
+        instance: Instance::new(tasks, inst.node_types.clone(), horizon),
+        slots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::nodetype::NodeType;
+
+    fn types() -> Vec<NodeType> {
+        vec![NodeType::new("a", vec![1.0], 1.0)]
+    }
+
+    #[test]
+    fn trims_to_starts() {
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.1], 5, 100),
+                Task::new(1, vec![0.1], 40, 60),
+                Task::new(2, vec![0.1], 5, 39),
+            ],
+            types(),
+            101,
+        );
+        let tr = trim(&inst);
+        assert_eq!(tr.slots, vec![5, 40]);
+        assert_eq!(tr.instance.horizon, 2);
+        // task 0: [5,100] -> [0,1]; task 1: [40,60] -> [1,1]; task 2: [5,39] -> [0,0]
+        assert_eq!((tr.instance.tasks[0].start, tr.instance.tasks[0].end), (0, 1));
+        assert_eq!((tr.instance.tasks[1].start, tr.instance.tasks[1].end), (1, 1));
+        assert_eq!((tr.instance.tasks[2].start, tr.instance.tasks[2].end), (0, 0));
+    }
+
+    #[test]
+    fn overlap_preserved() {
+        // Pairwise overlap structure at start slots is exactly preserved.
+        let inst = Instance::new(
+            vec![
+                Task::new(0, vec![0.1], 0, 9),
+                Task::new(1, vec![0.1], 3, 4),
+                Task::new(2, vec![0.1], 5, 9),
+            ],
+            types(),
+            10,
+        );
+        let tr = trim(&inst);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(
+                    inst.tasks[i].overlaps(&inst.tasks[j]),
+                    tr.instance.tasks[i].overlaps(&tr.instance.tasks[j]),
+                    "pair ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.1], 0, 3), Task::new(1, vec![0.1], 2, 3)],
+            types(),
+            4,
+        );
+        let once = trim(&inst);
+        let twice = trim(&once.instance);
+        assert_eq!(once.instance.horizon, twice.instance.horizon);
+        for (a, b) in once.instance.tasks.iter().zip(&twice.instance.tasks) {
+            assert_eq!((a.start, a.end), (b.start, b.end));
+        }
+    }
+
+    #[test]
+    fn empty_instance() {
+        let inst = Instance::new(vec![], types(), 5);
+        let tr = trim(&inst);
+        assert_eq!(tr.instance.horizon, 1);
+    }
+}

@@ -1,0 +1,140 @@
+//! Artifact manifest + shape-bucket selection.
+//!
+//! python/compile/aot.py pads every program into fixed shape buckets and
+//! records them in artifacts/manifest.json; this module picks the smallest
+//! bucket an instance fits and resolves artifact file paths.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub name: String,
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+    pub d: usize,
+    pub chunk_iters: usize,
+    pub pdhg: String,
+    pub power: String,
+    pub penalty: String,
+}
+
+impl Bucket {
+    pub fn fits(&self, n: usize, m: usize, t: usize, d: usize) -> bool {
+        n <= self.n && m <= self.m && t <= self.t && d <= self.d
+    }
+
+    /// Padded problem volume — the bucket-selection ordering key.
+    pub fn volume(&self) -> usize {
+        self.n * self.m * self.t * self.d
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<Bucket>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut buckets = Vec::new();
+        for b in v.get("buckets").as_arr().context("manifest: buckets")? {
+            buckets.push(Bucket {
+                name: b.get("name").as_str().context("bucket name")?.to_string(),
+                n: b.get("n").as_usize().context("bucket n")?,
+                m: b.get("m").as_usize().context("bucket m")?,
+                t: b.get("t").as_usize().context("bucket t")?,
+                d: b.get("d").as_usize().context("bucket d")?,
+                chunk_iters: b.get("chunk_iters").as_usize().context("chunk_iters")?,
+                pdhg: b.get("pdhg").as_str().context("pdhg file")?.to_string(),
+                power: b.get("power").as_str().context("power file")?.to_string(),
+                penalty: b.get("penalty").as_str().context("penalty file")?.to_string(),
+            });
+        }
+        anyhow::ensure!(!buckets.is_empty(), "manifest has no buckets");
+        Ok(Manifest { dir: dir.to_path_buf(), buckets })
+    }
+
+    /// Default artifact directory: $TLRS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("TLRS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket that fits the given logical shape.
+    pub fn select(&self, n: usize, m: usize, t: usize, d: usize) -> Option<&Bucket> {
+        self.buckets
+            .iter()
+            .filter(|b| b.fits(n, m, t, d))
+            .min_by_key(|b| b.volume())
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_from(text: &str) -> Manifest {
+        let dir = std::env::temp_dir().join(format!("tlrs_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    fn sample() -> Manifest {
+        manifest_from(
+            r#"{"buckets":[
+                {"name":"s","n":64,"m":4,"t":16,"d":2,"chunk_iters":10,
+                 "pdhg":"p_s","power":"w_s","penalty":"y_s"},
+                {"name":"l","n":512,"m":8,"t":64,"d":4,"chunk_iters":10,
+                 "pdhg":"p_l","power":"w_l","penalty":"y_l"}
+            ]}"#,
+        )
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        let m = sample();
+        assert_eq!(m.select(50, 4, 10, 2).unwrap().name, "s");
+        assert_eq!(m.select(100, 4, 10, 2).unwrap().name, "l");
+        assert!(m.select(1000, 4, 10, 2).is_none());
+        assert!(m.select(50, 4, 10, 8).is_none());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.buckets.is_empty());
+            for b in &m.buckets {
+                assert!(m.path_of(&b.pdhg).exists(), "{} missing", b.pdhg);
+                assert!(m.path_of(&b.power).exists());
+                assert!(m.path_of(&b.penalty).exists());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let dir = std::env::temp_dir().join(format!("tlrs_manifest_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"buckets":[]}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

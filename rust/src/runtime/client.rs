@@ -1,0 +1,138 @@
+//! PJRT execution wrapper around the `xla` crate.
+//!
+//! Loads AOT artifacts (HLO *text* — see python/compile/aot.py for why not
+//! serialized protos), compiles them once on the CPU PJRT client, and
+//! executes with f32 host buffers. Python never runs here; the artifacts
+//! are self-contained.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A host-side f32 tensor (row-major) handed to / received from PJRT.
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<i64>, data: Vec<f32>) -> Self {
+        let numel: i64 = shape.iter().product();
+        assert_eq!(numel as usize, data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(shape: Vec<i64>) -> Self {
+        let numel: i64 = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; numel as usize] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.shape)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let data = lit.to_vec::<f32>()?;
+        Ok(HostTensor { shape: dims, data })
+    }
+}
+
+/// One compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .with_context(|| format!("building inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of {}", self.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple, possibly 1-ary
+        let parts = out.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The PJRT client with a compile cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let arc = std::sync::Arc::new(Executable { exe, name });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let s = HostTensor::scalar(4.0);
+        assert!(s.shape.is_empty());
+        let z = HostTensor::zeros(vec![4]);
+        assert_eq!(z.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

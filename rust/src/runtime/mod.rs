@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! PJRT client from the L3 hot path (python is build-time only).
+
+pub mod artifact;
+pub mod client;
+pub mod pad;
+pub mod pdhg_exec;
+
+pub use artifact::Manifest;
+pub use client::{Engine, HostTensor};
+pub use pdhg_exec::{ArtifactOptions, ArtifactSolver};

@@ -1,0 +1,168 @@
+//! Zero-padding a structured mapping LP into a shape bucket.
+//!
+//! Padding semantics (mirrors python/compile/model.py):
+//!   - padded tasks: zero activity column, zero ratios, taskmask 0;
+//!   - padded node-types: typemask 0 (x columns projected to 0), cost 0,
+//!     rho rows 0;
+//!   - padded timeslots / dims: act rows 0 and rho 0 make them inert.
+
+use crate::lp::MappingLp;
+
+use super::artifact::Bucket;
+use super::client::HostTensor;
+
+/// All padded input tensors for one PDHG chunk call (excluding state).
+pub struct PaddedLp {
+    pub act: HostTensor,      // (T, N)
+    pub r: HostTensor,        // (N, M, D)
+    pub rho: HostTensor,      // (M, T, D)
+    pub cost: HostTensor,     // (M,)
+    pub taskmask: HostTensor, // (N,)
+    pub typemask: HostTensor, // (M,)
+}
+
+pub fn pad(lp: &MappingLp, bucket: &Bucket) -> PaddedLp {
+    let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+    let (pn, pm, pt, pd) = (bucket.n, bucket.m, bucket.t, bucket.d);
+    assert!(bucket.fits(n, m, t, dims), "bucket too small");
+
+    let mut act = vec![0.0f32; pt * pn];
+    for (u, &(s, e)) in lp.spans.iter().enumerate() {
+        for ts in s..=e {
+            act[ts as usize * pn + u] = 1.0;
+        }
+    }
+    let mut r = vec![0.0f32; pn * pm * pd];
+    for u in 0..n {
+        for b in 0..m {
+            for d in 0..dims {
+                r[(u * pm + b) * pd + d] = lp.ratio(u, b, d) as f32;
+            }
+        }
+    }
+    let mut rho = vec![0.0f32; pm * pt * pd];
+    for b in 0..m {
+        for ts in 0..t {
+            for d in 0..dims {
+                rho[(b * pt + ts) * pd + d] = lp.rho_at(b, d) as f32;
+            }
+        }
+    }
+    let mut cost = vec![0.0f32; pm];
+    for b in 0..m {
+        cost[b] = lp.costs[b] as f32;
+    }
+    let mut taskmask = vec![0.0f32; pn];
+    taskmask[..n].fill(1.0);
+    let mut typemask = vec![0.0f32; pm];
+    typemask[..m].fill(1.0);
+
+    PaddedLp {
+        act: HostTensor::new(vec![pt as i64, pn as i64], act),
+        r: HostTensor::new(vec![pn as i64, pm as i64, pd as i64], r),
+        rho: HostTensor::new(vec![pm as i64, pt as i64, pd as i64], rho),
+        cost: HostTensor::new(vec![pm as i64], cost),
+        taskmask: HostTensor::new(vec![pn as i64], taskmask),
+        typemask: HostTensor::new(vec![pm as i64], typemask),
+    }
+}
+
+/// Extract the real (n, m) block of a padded (N, M) x-matrix into f64.
+pub fn unpad_x(lp: &MappingLp, bucket: &Bucket, x: &[f32]) -> Vec<f64> {
+    let mut out = vec![0.0f64; lp.n * lp.m];
+    for u in 0..lp.n {
+        for b in 0..lp.m {
+            out[u * lp.m + b] = x[u * bucket.m + b] as f64;
+        }
+    }
+    out
+}
+
+/// Extract real duals y from padded (M, T, D) layout into the native
+/// (b*t + ts)*dims + d layout.
+pub fn unpad_y(lp: &MappingLp, bucket: &Bucket, y: &[f32]) -> Vec<f64> {
+    let mut out = vec![0.0f64; lp.m * lp.t * lp.dims];
+    for b in 0..lp.m {
+        for ts in 0..lp.t {
+            for d in 0..lp.dims {
+                out[(b * lp.t + ts) * lp.dims + d] =
+                    y[(b * bucket.t + ts) * bucket.d + d] as f64;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::trim;
+
+    fn bucket() -> Bucket {
+        Bucket {
+            name: "t".into(),
+            n: 32,
+            m: 4,
+            t: 16,
+            d: 4,
+            chunk_iters: 10,
+            pdhg: String::new(),
+            power: String::new(),
+            penalty: String::new(),
+        }
+    }
+
+    fn lp() -> MappingLp {
+        let inst = generate(
+            &SynthParams { n: 10, m: 3, dims: 2, horizon: 8, ..Default::default() },
+            1,
+        );
+        MappingLp::from_instance(&trim(&inst).instance)
+    }
+
+    #[test]
+    fn padding_layout() {
+        let lp = lp();
+        let b = bucket();
+        let p = pad(&lp, &b);
+        assert_eq!(p.act.shape, vec![16, 32]);
+        assert_eq!(p.r.shape, vec![32, 4, 4]);
+        // active exactly over the span
+        let (s, e) = lp.spans[0];
+        for ts in 0..16usize {
+            let want = ts >= s as usize && ts <= e as usize;
+            assert_eq!(p.act.data[ts * 32] == 1.0, want, "ts {ts}");
+        }
+        // padded regions are zero
+        assert!(p.act.data.iter().skip(10).step_by(32).all(|&v| v == 0.0 || v == 1.0));
+        for u in 10..32 {
+            for bb in 0..4 {
+                for d in 0..4 {
+                    assert_eq!(p.r.data[(u * 4 + bb) * 4 + d], 0.0);
+                }
+            }
+        }
+        assert_eq!(p.taskmask.data.iter().sum::<f32>(), 10.0);
+        assert_eq!(p.typemask.data.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn unpad_roundtrip() {
+        let lp = lp();
+        let b = bucket();
+        // fabricate a padded x with recognizable entries
+        let mut x = vec![0.0f32; b.n * b.m];
+        for u in 0..lp.n {
+            for bb in 0..lp.m {
+                x[u * b.m + bb] = (u * 10 + bb) as f32;
+            }
+        }
+        let out = unpad_x(&lp, &b, &x);
+        assert_eq!(out[2 * lp.m + 1], 21.0);
+        let mut y = vec![0.0f32; b.m * b.t * b.d];
+        y[(1 * b.t + 2) * b.d + 1] = 7.0;
+        let oy = unpad_y(&lp, &b, &y);
+        assert_eq!(oy[(1 * lp.t + 2) * lp.dims + 1], 7.0);
+    }
+}

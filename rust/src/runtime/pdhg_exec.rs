@@ -1,0 +1,216 @@
+//! The AOT-artifact LP backend: drives the compiled JAX/Pallas PDHG chunk
+//! through PJRT until convergence.
+//!
+//! One artifact call = one fixed-length chunk of PDHG iterations (state in,
+//! state out + diagnostics). Rust owns the outer loop: restart-to-the-
+//! better-iterate (PDLP-style), primal-weight adaptation, and the stopping
+//! rule — exactly mirroring lp::pdhg's chunk boundary logic so the two
+//! backends are interchangeable.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::lp::solver::{MappingSolution, MappingSolver};
+use crate::lp::MappingLp;
+
+use super::artifact::{Bucket, Manifest};
+use super::client::{Engine, HostTensor};
+use super::pad::{pad, unpad_x, unpad_y, PaddedLp};
+
+/// Options for the artifact-backed solve.
+#[derive(Clone, Debug)]
+pub struct ArtifactOptions {
+    pub max_chunks: usize,
+    pub tol: f32,
+    pub gap_tol: f32,
+    /// See lp::pdhg::PdhgOptions::adapt_omega (default off).
+    pub adapt_omega: bool,
+}
+
+impl Default for ArtifactOptions {
+    fn default() -> Self {
+        // f32 state: feasibility plateaus near 1e-5-1e-6
+        ArtifactOptions { max_chunks: 400, tol: 3e-4, gap_tol: 3e-4, adapt_omega: false }
+    }
+}
+
+/// MappingSolver backend executing the AOT artifacts.
+pub struct ArtifactSolver {
+    engine: Arc<Engine>,
+    manifest: Manifest,
+    pub opts: ArtifactOptions,
+}
+
+impl ArtifactSolver {
+    pub fn new(engine: Arc<Engine>, manifest: Manifest) -> Self {
+        ArtifactSolver { engine, manifest, opts: ArtifactOptions::default() }
+    }
+
+    /// Load the default manifest and CPU engine.
+    pub fn from_default_dir() -> Result<Self> {
+        let manifest = Manifest::load(&Manifest::default_dir())?;
+        Ok(Self::new(Arc::new(Engine::cpu()?), manifest))
+    }
+
+    pub fn bucket_for(&self, lp: &MappingLp) -> Option<&Bucket> {
+        self.manifest.select(lp.n, lp.m, lp.t, lp.dims)
+    }
+
+    fn power_norm(&self, bucket: &Bucket, padded: &PaddedLp) -> Result<f32> {
+        let exe = self.engine.load(&self.manifest.path_of(&bucket.power))?;
+        let out = exe.run(&[padded.act.clone(), padded.r.clone(), padded.rho.clone()])?;
+        let norm = out[0].data[0];
+        anyhow::ensure!(norm.is_finite() && norm > 0.0, "bad operator norm {norm}");
+        Ok(norm)
+    }
+}
+
+fn score(diag: &[f32]) -> f32 {
+    diag.iter().copied().fold(0.0f32, f32::max)
+}
+
+impl MappingSolver for ArtifactSolver {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        let bucket = self
+            .bucket_for(lp)
+            .with_context(|| {
+                format!(
+                    "no artifact bucket fits (n={}, m={}, t={}, d={}); \
+                     use the native backend",
+                    lp.n, lp.m, lp.t, lp.dims
+                )
+            })?
+            .clone();
+        let padded = pad(lp, &bucket);
+        let norm = self.power_norm(&bucket, &padded)?;
+        let exe = self.engine.load(&self.manifest.path_of(&bucket.pdhg))?;
+
+        let (pn, pm, pt, pd) = (bucket.n as i64, bucket.m as i64, bucket.t as i64, bucket.d as i64);
+        let mut x = HostTensor::zeros(vec![pn, pm]);
+        let mut alpha = HostTensor::zeros(vec![pm]);
+        let mut y = HostTensor::zeros(vec![pm, pt, pd]);
+        let mut w = HostTensor::zeros(vec![pn]);
+
+        let base = 0.9 / norm;
+        let mut omega = 1.0f32;
+        let mut iterations = 0usize;
+        let mut converged = false;
+        let mut best_diag = [f32::INFINITY; 4];
+
+        for _ in 0..self.opts.max_chunks {
+            let tau = HostTensor::scalar(base * omega);
+            let sigma = HostTensor::scalar(base / omega);
+            let out = exe.run(&[
+                padded.act.clone(),
+                padded.r.clone(),
+                padded.rho.clone(),
+                padded.cost.clone(),
+                padded.taskmask.clone(),
+                padded.typemask.clone(),
+                x.clone(),
+                alpha.clone(),
+                y.clone(),
+                w.clone(),
+                tau,
+                sigma,
+            ])?;
+            anyhow::ensure!(out.len() == 9, "pdhg artifact returned {} outputs", out.len());
+            let diag = &out[8].data;
+            anyhow::ensure!(diag.len() == 8, "diag length {}", diag.len());
+            let (last, avg) = (&diag[..4], &diag[4..]);
+            iterations += bucket.chunk_iters;
+
+            // restart from the better of {last, average}
+            let use_avg = score(avg) < score(last);
+            let pick = if use_avg { 4..8 } else { 0..4 };
+            x = out[if use_avg { 4 } else { 0 }].clone();
+            alpha = out[if use_avg { 5 } else { 1 }].clone();
+            y = out[if use_avg { 6 } else { 2 }].clone();
+            w = out[if use_avg { 7 } else { 3 }].clone();
+            let d = &diag[pick];
+            best_diag = [d[0], d[1], d[2], d[3]];
+
+            if d[0].max(d[1]) <= self.opts.tol && d[3] <= self.opts.gap_tol {
+                converged = true;
+                break;
+            }
+            if self.opts.adapt_omega {
+                let pri = d[0].max(d[1]).max(1e-10);
+                let dua = d[2].max(1e-10);
+                omega = (omega * (pri / dua).sqrt().clamp(0.5, 2.0)).clamp(1e-3, 1e3);
+            }
+        }
+        let _ = best_diag;
+
+        let xs = unpad_x(lp, &bucket, &x.data);
+        let ys = unpad_y(lp, &bucket, &y.data);
+        let objective: f64 = lp
+            .costs
+            .iter()
+            .zip(alpha.data.iter())
+            .map(|(c, &a)| c * a as f64)
+            .sum();
+        Ok(MappingSolution { x: xs, y: ys, objective, converged, iterations })
+    }
+
+    fn name(&self) -> &'static str {
+        "pdhg-artifact"
+    }
+}
+
+/// Penalty scoring through the AOT penalty artifact — used to cross-check
+/// the L1 kernel numbers against the native implementation at runtime.
+pub fn penalty_scores_artifact(
+    solver: &ArtifactSolver,
+    inst: &crate::model::Instance,
+) -> Result<(Vec<f64>, Vec<f64>)> {
+    let (n, m, dims) = (inst.n_tasks(), inst.n_types(), inst.dims());
+    let bucket = solver
+        .manifest
+        .select(n, m, 1, dims)
+        .context("no bucket for penalty scoring")?
+        .clone();
+    let (pn, pm, pd) = (bucket.n, bucket.m, bucket.d);
+    let mut dem = vec![0.0f32; pn * pd];
+    for u in 0..n {
+        for d in 0..dims {
+            dem[u * pd + d] = inst.tasks[u].demand[d] as f32;
+        }
+    }
+    // capinv for padded types/dims: zero => zero scores (harmless)
+    let mut capinv = vec![0.0f32; pm * pd];
+    let mut cost = vec![0.0f32; pm];
+    for b in 0..m {
+        cost[b] = inst.node_types[b].cost as f32;
+        for d in 0..dims {
+            capinv[b * pd + d] = (1.0 / inst.node_types[b].capacity[d]) as f32;
+        }
+    }
+    let exe = solver.engine.load(&solver.manifest.path_of(&bucket.penalty))?;
+    let out = exe.run(&[
+        HostTensor::new(vec![pn as i64, pd as i64], dem),
+        HostTensor::new(vec![pm as i64, pd as i64], capinv),
+        HostTensor::new(vec![pm as i64], cost),
+    ])?;
+    anyhow::ensure!(out.len() == 3, "penalty artifact outputs");
+    // NOTE: the kernel divides by the padded D; rescale to the real D.
+    let scale = pd as f64 / dims as f64;
+    let take = |t: &HostTensor, rescale: bool| -> Vec<f64> {
+        let mut v = vec![0.0f64; n * m];
+        for u in 0..n {
+            for b in 0..m {
+                let raw = t.data[u * pm + b] as f64;
+                v[u * m + b] = if rescale { raw * scale } else { raw };
+            }
+        }
+        v
+    };
+    Ok((take(&out[0], true), take(&out[1], false)))
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration coverage lives in rust/tests/integration_runtime.rs
+    // (needs built artifacts). Unit-testable pieces are in pad.rs/artifact.rs.
+}

@@ -1,0 +1,199 @@
+//! Admission/auto-scaling simulator — the paper's closing future-work item
+//! ("enhancing the scheduler and auto-scaling algorithms to better
+//! leverage the output from TL-Rightsizing").
+//!
+//! Given a rightsized cluster and an *online* task stream (the planned
+//! workload plus optional unplanned surprise load), the simulator admits
+//! each arrival first-fit into the fixed cluster; what does not fit is
+//! either rejected (fixed edge cluster) or served by renting overflow
+//! nodes on demand (public-cloud hybrid). Reports admission rate and
+//! overflow spend — quantifying how much headroom a plan really has.
+
+use crate::algo::placement::{select_node, FitPolicy, NodeState};
+use crate::model::{Instance, Solution, Task};
+
+#[derive(Clone, Debug)]
+pub struct AutoscaleReport {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub overflow_nodes: usize,
+    /// Cost of rented overflow capacity (0 when renting is disabled).
+    pub overflow_cost: f64,
+    /// Planned cluster cost, for comparison.
+    pub planned_cost: f64,
+}
+
+impl AutoscaleReport {
+    pub fn admission_rate(&self) -> f64 {
+        let total = self.admitted + self.rejected;
+        if total == 0 {
+            1.0
+        } else {
+            self.admitted as f64 / total as f64
+        }
+    }
+}
+
+/// Simulate serving `stream` on the cluster purchased by `plan`.
+///
+/// `allow_overflow`: rent a penalty-best node for any arrival that does
+/// not fit (hybrid mode); otherwise reject it (fixed edge cluster).
+pub fn simulate(
+    inst: &Instance,
+    plan: &Solution,
+    stream: &[Task],
+    policy: FitPolicy,
+    allow_overflow: bool,
+) -> AutoscaleReport {
+    simulate_with_hints(inst, plan, stream, policy, allow_overflow, None)
+}
+
+/// Like [`simulate`], with optional placement hints: `hints[u]` is the
+/// planned node index for stream task `u` (tried first — a scheduler
+/// executing its own plan admits the planned load by construction).
+pub fn simulate_with_hints(
+    inst: &Instance,
+    plan: &Solution,
+    stream: &[Task],
+    policy: FitPolicy,
+    allow_overflow: bool,
+    hints: Option<&[Option<usize>]>,
+) -> AutoscaleReport {
+    // Build the purchased-but-empty cluster; stream tasks are placed into
+    // it online. Stream tasks must share the instance's dimensionality.
+    let dims = inst.dims();
+    for t in stream {
+        assert_eq!(t.dims(), dims, "stream task {} dims", t.id);
+    }
+    // A synthetic instance holding the stream tasks (placement engine
+    // operates on instance task indices).
+    let horizon = inst
+        .horizon
+        .max(stream.iter().map(|t| t.end + 1).max().unwrap_or(1));
+    let sim_inst = Instance::new(stream.to_vec(), inst.node_types.clone(), horizon);
+
+    let mut nodes: Vec<NodeState> = plan
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| NodeState::new(&sim_inst, n.type_idx, i))
+        .collect();
+    let mut overflow: Vec<NodeState> = Vec::new();
+    let mut seq = nodes.len();
+
+    let mut order: Vec<usize> = (0..stream.len()).collect();
+    order.sort_by_key(|&u| (stream[u].start, u));
+
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    let mut overflow_cost = 0.0;
+
+    for u in order {
+        if let Some(hs) = hints {
+            if let Some(Some(i)) = hs.get(u) {
+                if nodes[*i].fits(&sim_inst, u) {
+                    nodes[*i].add(&sim_inst, u);
+                    admitted += 1;
+                    continue;
+                }
+            }
+        }
+        if let Some(i) = select_node(&sim_inst, &nodes, u, policy) {
+            nodes[i].add(&sim_inst, u);
+            admitted += 1;
+            continue;
+        }
+        if let Some(i) = select_node(&sim_inst, &overflow, u, policy) {
+            overflow[i].add(&sim_inst, u);
+            admitted += 1;
+            continue;
+        }
+        if allow_overflow {
+            // rent the cheapest admitting type
+            let b = (0..sim_inst.n_types())
+                .filter(|&b| sim_inst.node_types[b].admits(&stream[u].demand))
+                .min_by(|&a, &b| {
+                    sim_inst.node_types[a]
+                        .cost
+                        .partial_cmp(&sim_inst.node_types[b].cost)
+                        .unwrap()
+                });
+            match b {
+                Some(b) => {
+                    let mut node = NodeState::new(&sim_inst, b, seq);
+                    seq += 1;
+                    node.add(&sim_inst, u);
+                    overflow_cost += sim_inst.node_types[b].cost;
+                    overflow.push(node);
+                    admitted += 1;
+                }
+                None => rejected += 1,
+            }
+        } else {
+            rejected += 1;
+        }
+    }
+
+    AutoscaleReport {
+        admitted,
+        rejected,
+        overflow_nodes: overflow.len(),
+        overflow_cost,
+        planned_cost: plan.cost(inst),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::algorithms::lp_map_best;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
+    use crate::model::trim;
+
+    #[test]
+    fn planned_workload_fully_admitted() {
+        // replaying exactly the planned tasks on the planned cluster must
+        // admit everything without overflow
+        let inst = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, 2);
+        let tr = trim(&inst).instance;
+        let rep = lp_map_best(&tr, &NativePdhgSolver::default(), true).unwrap();
+        let out = simulate_with_hints(
+            &tr, &rep.solution, &tr.tasks, FitPolicy::FirstFit, false,
+            Some(&rep.solution.assignment));
+        assert_eq!(out.rejected, 0, "{out:?}");
+        assert_eq!(out.admission_rate(), 1.0);
+        assert_eq!(out.overflow_nodes, 0);
+    }
+
+    #[test]
+    fn surprise_load_needs_overflow() {
+        let inst = generate(&SynthParams { n: 60, m: 4, ..Default::default() }, 3);
+        let tr = trim(&inst).instance;
+        let rep = lp_map_best(&tr, &NativePdhgSolver::default(), true).unwrap();
+        // double the workload: the second copy is unplanned surprise load
+        let mut stream = tr.tasks.clone();
+        let base = stream.len() as u64;
+        stream.extend(tr.tasks.iter().map(|t| {
+            crate::model::Task::new(base + t.id, t.demand.clone(), t.start, t.end)
+        }));
+        let fixed = simulate(&tr, &rep.solution, &stream, FitPolicy::FirstFit, false);
+        let hybrid = simulate(&tr, &rep.solution, &stream, FitPolicy::FirstFit, true);
+        assert!(fixed.admission_rate() < 1.0, "{fixed:?}");
+        assert_eq!(hybrid.rejected, 0, "{hybrid:?}");
+        assert!(hybrid.overflow_cost > 0.0);
+        // renting overflow for a doubled load should cost less than the
+        // whole planned cluster again times some slack
+        assert!(hybrid.overflow_cost < 3.0 * hybrid.planned_cost, "{hybrid:?}");
+    }
+
+    #[test]
+    fn empty_stream() {
+        let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 4);
+        let tr = trim(&inst).instance;
+        let rep = lp_map_best(&tr, &NativePdhgSolver::default(), false).unwrap();
+        let out = simulate(&tr, &rep.solution, &[], FitPolicy::FirstFit, false);
+        assert_eq!(out.admitted + out.rejected, 0);
+        assert_eq!(out.admission_rate(), 1.0);
+    }
+}

@@ -1,0 +1,4 @@
+//! Workload replay simulator — independent solution validation.
+
+pub mod autoscale;
+pub mod replay;

@@ -1,0 +1,170 @@
+//! Event-driven workload replay — an *independent* validation path for
+//! solutions (deliberately not sharing code with Solution::verify): tasks
+//! arrive/depart as timed events, per-node loads are updated incrementally,
+//! and capacity is checked at every event point. Also produces the
+//! utilization statistics the examples report.
+
+use crate::model::{Instance, Solution};
+
+/// Per-slot cluster utilization sample.
+#[derive(Clone, Debug)]
+pub struct UtilizationSample {
+    pub timeslot: u32,
+    /// Mean over nodes of (load / capacity) averaged over dimensions.
+    pub mean_node_utilization: f64,
+    /// Max over nodes and dimensions of load / capacity.
+    pub peak_node_utilization: f64,
+    pub active_tasks: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub samples: Vec<UtilizationSample>,
+    pub overloads: usize,
+    /// Time-averaged mean node utilization.
+    pub avg_utilization: f64,
+    /// Peak concurrent active tasks.
+    pub peak_tasks: usize,
+}
+
+/// Replay the workload against a placement.
+pub fn replay(inst: &Instance, sol: &Solution) -> ReplayReport {
+    let dims = inst.dims();
+    let t_len = inst.horizon as usize;
+    let n_nodes = sol.nodes.len();
+
+    // event lists: (slot, node, task, is_start)
+    #[derive(Clone, Copy)]
+    struct Ev {
+        slot: u32,
+        node: usize,
+        task: usize,
+        start: bool,
+    }
+    let mut events: Vec<Ev> = Vec::with_capacity(inst.n_tasks() * 2);
+    for (u, assigned) in sol.assignment.iter().enumerate() {
+        let Some(node) = assigned else { continue };
+        let t = &inst.tasks[u];
+        events.push(Ev { slot: t.start, node: *node, task: u, start: true });
+        // departure processed after the last active slot
+        events.push(Ev { slot: t.end + 1, node: *node, task: u, start: false });
+    }
+    // departures before arrivals at the same slot
+    events.sort_by_key(|e| (e.slot, e.start));
+
+    let mut load = vec![0.0f64; n_nodes * dims];
+    let mut active = 0usize;
+    let mut overloads = 0usize;
+    let mut samples = Vec::with_capacity(t_len);
+    let mut ei = 0usize;
+    let mut peak_tasks = 0usize;
+
+    for slot in 0..t_len as u32 {
+        while ei < events.len() && events[ei].slot == slot {
+            let ev = events[ei];
+            let dem = &inst.tasks[ev.task].demand;
+            let sign = if ev.start { 1.0 } else { -1.0 };
+            for d in 0..dims {
+                load[ev.node * dims + d] += sign * dem[d];
+            }
+            if ev.start {
+                active += 1;
+            } else {
+                active -= 1;
+            }
+            ei += 1;
+        }
+        peak_tasks = peak_tasks.max(active);
+
+        let mut busy_nodes = 0usize;
+        let mut util_sum = 0.0;
+        let mut peak: f64 = 0.0;
+        for (ni, node) in sol.nodes.iter().enumerate() {
+            let cap = &inst.node_types[node.type_idx].capacity;
+            let mut node_util = 0.0;
+            let mut node_busy = false;
+            for d in 0..dims {
+                let frac = load[ni * dims + d] / cap[d];
+                node_util += frac / dims as f64;
+                peak = peak.max(frac);
+                if frac > 1.0 + 1e-9 {
+                    overloads += 1;
+                }
+                if frac > 1e-12 {
+                    node_busy = true;
+                }
+            }
+            if node_busy {
+                busy_nodes += 1;
+                util_sum += node_util;
+            }
+        }
+        samples.push(UtilizationSample {
+            timeslot: slot,
+            mean_node_utilization: if busy_nodes > 0 { util_sum / busy_nodes as f64 } else { 0.0 },
+            peak_node_utilization: peak,
+            active_tasks: active,
+        });
+    }
+    let avg = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().map(|s| s.mean_node_utilization).sum::<f64>() / samples.len() as f64
+    };
+    ReplayReport { samples, overloads, avg_utilization: avg, peak_tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::placement::FitPolicy;
+    use crate::algo::twophase::solve_with_mapping;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::{trim, NodeType, PlacedNode, Task};
+
+    #[test]
+    fn valid_solution_replays_clean() {
+        let inst = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, 9);
+        let tr = trim(&inst).instance;
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+        let sol = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+        let rep = replay(&tr, &sol);
+        assert_eq!(rep.overloads, 0);
+        assert!(rep.avg_utilization > 0.0 && rep.avg_utilization <= 1.0 + 1e-9);
+        assert!(rep.peak_tasks <= 80);
+        assert_eq!(rep.samples.len(), tr.horizon as usize);
+    }
+
+    #[test]
+    fn overload_caught() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.7], 0, 1), Task::new(1, vec![0.7], 1, 2)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            3,
+        );
+        let mut sol = Solution::new(2);
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 1] });
+        sol.assignment = vec![Some(0), Some(0)];
+        let rep = replay(&inst, &sol);
+        assert!(rep.overloads > 0);
+        // replay agrees with the verifier
+        assert!(sol.verify(&inst).is_err());
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.5], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            2,
+        );
+        let mut sol = Solution::new(1);
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0] });
+        sol.assignment = vec![Some(0)];
+        let rep = replay(&inst, &sol);
+        assert!((rep.samples[0].peak_node_utilization - 0.5).abs() < 1e-12);
+        assert_eq!(rep.samples[1].active_tasks, 0);
+        assert!((rep.samples[1].peak_node_utilization).abs() < 1e-12);
+    }
+}

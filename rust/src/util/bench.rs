@@ -1,0 +1,123 @@
+//! Micro-benchmark harness (criterion is not in the vendored dependency
+//! universe). Auto-calibrates iteration counts, reports mean / stddev /
+//! min over samples, and guards against dead-code elimination.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub samples: usize,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}  ±{:>10}  (min {:>12}, {} samples x {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark a closure returning any value (black-boxed). Targets
+/// ~`budget` of wall time split over `samples` samples.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // calibrate: how many iters fit in budget/samples?
+    let samples = 10usize;
+    let t0 = Instant::now();
+    black_box(f());
+    let one = t0.elapsed().as_nanos().max(1) as f64;
+    let per_sample = budget.as_nanos() as f64 / samples as f64;
+    let iters = (per_sample / one).clamp(1.0, 1_000_000.0) as u64;
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            black_box(f());
+        }
+        times.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_ns: stats::mean(&times),
+        std_ns: stats::stddev(&times),
+        min_ns: stats::min(&times),
+        samples,
+        iters_per_sample: iters,
+    };
+    println!("{}", res.report_line());
+    res
+}
+
+/// Quick variant for expensive end-to-end benches: fixed sample count,
+/// one iteration per sample.
+pub fn bench_n<T>(name: &str, samples: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        times.push(t.elapsed().as_nanos() as f64);
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        mean_ns: stats::mean(&times),
+        std_ns: stats::stddev(&times),
+        min_ns: stats::min(&times),
+        samples,
+        iters_per_sample: 1,
+    };
+    println!("{}", res.report_line());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop-add", Duration::from_millis(20), || 1u64 + 2);
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.samples, 10);
+    }
+
+    #[test]
+    fn bench_n_runs() {
+        let r = bench_n("sleepless", 3, || std::thread::sleep(Duration::from_micros(50)));
+        assert!(r.mean_ns >= 50_000.0 * 0.5);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny CLI argument parser (no clap in the vendored dependency universe).
+//!
+//! Grammar: `tlrs <subcommand> [positional...] [--flag] [--key value]...`
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding the program name).
+    pub fn parse(argv: &[String]) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(stripped.to_string(), it.next().unwrap().clone());
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect("float flag")).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().expect("integer flag")).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("solve pos1 --input x.json --seed 7 --quick");
+        assert_eq!(a.subcommand, "solve");
+        assert_eq!(a.get("input"), Some("x.json"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        // a value-less flag followed by a positional binds greedily:
+        let b = parse("solve --quick pos1");
+        assert_eq!(b.get("quick"), Some("pos1"));
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("gen --n=100 --demand=0.01,0.1");
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert_eq!(a.get("demand"), Some("0.01,0.1"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("figures all --quick");
+        assert_eq!(a.subcommand, "figures");
+        assert_eq!(a.positional, vec!["all"]);
+        assert!(a.has_flag("quick"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("bench");
+        assert_eq!(a.get_or("figure", "all"), "all");
+        assert_eq!(a.get_f64("e", 1.0), 1.0);
+    }
+}

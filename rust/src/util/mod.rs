@@ -1,0 +1,7 @@
+//! Dependency-free substrates: RNG, statistics, JSON, CLI parsing, bench.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,126 @@
+//! Integration: the four algorithms against each other, the exact optimum
+//! on tiny instances, and the paper's qualitative claims on mid-size
+//! instances.
+
+use tlrs::algo::algorithms::{penalty_map_best, run, Algorithm};
+use tlrs::algo::exact;
+use tlrs::io::gct_like;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, CostModel};
+
+#[test]
+fn approximation_quality_vs_exact_optimum() {
+    // On tiny instances every heuristic stays within a small factor of the
+    // true optimum, and LP-map-F is the best or tied-best in aggregate.
+    let solver = NativePdhgSolver::default();
+    let mut ratios = [0.0f64; 4];
+    let mut count = 0;
+    for seed in 0..8u64 {
+        let inst = generate(
+            &SynthParams {
+                n: 8,
+                m: 3,
+                dims: 2,
+                horizon: 6,
+                dem_range: (0.1, 0.45),
+                ..Default::default()
+            },
+            seed,
+        );
+        let tr = trim(&inst).instance;
+        let opt = exact::optimal(&tr).cost(&tr);
+        for (i, algo) in Algorithm::all().into_iter().enumerate() {
+            let (sol, _) = run(&tr, algo, &solver).unwrap();
+            let ratio = sol.cost(&tr) / opt;
+            assert!(ratio >= 1.0 - 1e-9, "seed {seed} {algo:?} beat optimal");
+            assert!(ratio <= 2.5 + 1e-9, "seed {seed} {algo:?} ratio {ratio}");
+            ratios[i] += ratio;
+        }
+        count += 1;
+    }
+    let avg: Vec<f64> = ratios.iter().map(|r| r / count as f64).collect();
+    println!("avg ratios vs optimal: {avg:?}");
+    assert!(avg[3] <= avg[0] + 0.02, "LP-map-F {} vs PenaltyMap {}", avg[3], avg[0]);
+}
+
+#[test]
+fn lp_map_beats_penalty_map_when_types_abound() {
+    // paper: the PenaltyMap gap grows with m; LP-map stays stable
+    let solver = NativePdhgSolver::default();
+    let mut pen_costs = Vec::new();
+    let mut lp_costs = Vec::new();
+    for seed in 0..3u64 {
+        let inst = generate(&SynthParams { n: 300, m: 12, ..Default::default() }, seed);
+        let tr = trim(&inst).instance;
+        let pen = penalty_map_best(&tr, false);
+        let (lp, rep) = run(&tr, Algorithm::LpMapF, &solver).unwrap();
+        pen_costs.push(pen.cost(&tr));
+        lp_costs.push(lp.cost(&tr));
+        let rep = rep.unwrap();
+        assert!(rep.certified_lb > 0.0);
+        // the paper's headline: LP-map-F within ~20-30% of the LB at m~12
+        assert!(
+            lp.cost(&tr) / rep.certified_lb < 1.40,
+            "seed {seed}: normalized {}",
+            lp.cost(&tr) / rep.certified_lb
+        );
+    }
+    let pen_avg: f64 = pen_costs.iter().sum::<f64>() / pen_costs.len() as f64;
+    let lp_avg: f64 = lp_costs.iter().sum::<f64>() / lp_costs.len() as f64;
+    assert!(lp_avg < pen_avg, "LP-map-F {lp_avg} should beat PenaltyMap {pen_avg}");
+}
+
+#[test]
+fn gct_scenarios_near_optimal() {
+    // paper figure 8: on the trace, LP-map lands close to the lower bound
+    let solver = NativePdhgSolver::default();
+    let trace = gct_like::generate_trace(3000, 7);
+    for seed in [1u64, 2] {
+        let mut inst = trace.sample_scenario(400, 10, seed);
+        CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+        let tr = trim(&inst).instance;
+        let (sol, rep) = run(&tr, Algorithm::LpMapF, &solver).unwrap();
+        let rep = rep.unwrap();
+        let norm = sol.cost(&tr) / rep.certified_lb;
+        assert!(norm < 1.25, "seed {seed}: normalized {norm} (paper: ~1.1 or less)");
+    }
+}
+
+#[test]
+fn interval_coloring_special_case_consistency() {
+    // with m=1, D=1 the general pipeline equals the dedicated baseline
+    use tlrs::algo::interval_coloring;
+    use tlrs::algo::penalty_map::{map_tasks, MappingPolicy};
+    use tlrs::algo::placement::FitPolicy;
+    use tlrs::algo::twophase::solve_with_mapping;
+    let inst = generate(
+        &SynthParams { n: 100, m: 1, dims: 1, horizon: 16, ..Default::default() },
+        3,
+    );
+    let tr = trim(&inst).instance;
+    let a = interval_coloring::color(&tr);
+    let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+    let b = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+    assert_eq!(a.nodes.len(), b.nodes.len());
+    assert!((a.cost(&tr) - b.cost(&tr)).abs() < 1e-12);
+    assert!(a.nodes.len() >= interval_coloring::clique_bound(&tr));
+}
+
+#[test]
+fn no_timeline_costs_more() {
+    // section VI-F: collapsing the timeline roughly doubles cluster cost
+    let solver = NativePdhgSolver::default();
+    let trace = gct_like::generate_trace(3000, 8);
+    let mut inst = trace.sample_scenario(400, 10, 5);
+    CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+
+    let tr = trim(&inst).instance;
+    let (aware, _) = run(&tr, Algorithm::LpMapF, &solver).unwrap();
+
+    let flat = trim(&inst.collapse_timeline()).instance;
+    let (agnostic, _) = run(&flat, Algorithm::LpMapF, &solver).unwrap();
+
+    let factor = agnostic.cost(&flat) / aware.cost(&tr);
+    assert!(factor > 1.3, "no-timeline factor only {factor} (paper ~2x)");
+}

@@ -1,0 +1,88 @@
+//! Integration: the `tlrs` binary end-to-end through its CLI surface
+//! (gen -> solve -> lb round-trips through real files and process exits).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn tlrs_bin() -> Option<PathBuf> {
+    // cargo builds integration tests next to the binary
+    let mut path = std::env::current_exe().ok()?;
+    path.pop(); // deps/
+    path.pop(); // debug|release/
+    path.push("tlrs");
+    path.exists().then_some(path)
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let bin = tlrs_bin().expect("tlrs binary built");
+    let out = Command::new(bin).args(args).output().expect("spawn tlrs");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn gen_solve_lb_roundtrip() {
+    if tlrs_bin().is_none() {
+        eprintln!("tlrs binary not built; skipping");
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("tlrs_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let inst = dir.join("inst.json");
+    let sol = dir.join("sol.json");
+    let csv = dir.join("trace.csv");
+
+    let (ok, stdout, stderr) = run(&[
+        "gen", "--kind", "synth", "--n", "60", "--m", "4", "--seed", "3",
+        "--out", inst.to_str().unwrap(), "--csv", csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen failed: {stderr}");
+    assert!(stdout.contains("60 tasks"));
+    assert!(inst.exists() && csv.exists());
+
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--input", inst.to_str().unwrap(), "--algo", "lp-map-f",
+        "--backend", "native", "--replay", "--out", sol.to_str().unwrap(),
+    ]);
+    assert!(ok, "solve failed: {stderr}");
+    assert!(stdout.contains("cluster cost"), "{stdout}");
+    assert!(stdout.contains("0 overloads"), "{stdout}");
+    assert!(sol.exists());
+    // solution file parses and has nodes
+    let parsed = tlrs::util::json::parse(&std::fs::read_to_string(&sol).unwrap()).unwrap();
+    assert!(parsed.get("n_nodes").as_f64().unwrap() >= 1.0);
+
+    let (ok, stdout, stderr) =
+        run(&["lb", "--input", inst.to_str().unwrap(), "--backend", "native"]);
+    assert!(ok, "lb failed: {stderr}");
+    assert!(stdout.contains("best certified LB"), "{stdout}");
+
+    let (ok, stdout, _) = run(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("tlrs"));
+
+    // unknown flags/commands fail cleanly
+    let (ok, _, stderr) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+    let (ok, _, stderr) = run(&["solve", "--input", "/nonexistent.json"]);
+    assert!(!ok);
+    assert!(stderr.contains("error"));
+}
+
+#[test]
+fn figures_tab1_runs() {
+    if tlrs_bin().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("tlrs_cli_fig_{}", std::process::id()));
+    let (ok, stdout, stderr) = run(&[
+        "figures", "tab1", "--backend", "native", "--out-dir", dir.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("Table I") || stdout.contains("tab1"));
+    assert!(dir.join("tab1.json").exists());
+}

@@ -1,0 +1,87 @@
+//! Integration: the experiment harness end-to-end on shrunken sweeps —
+//! the figure pipeline (scenario -> planner -> aggregation -> report JSON)
+//! and the special runners.
+
+use tlrs::coordinator::config::{Backend, TraceKind};
+use tlrs::coordinator::planner::Planner;
+use tlrs::harness::{report, runner, scenarios, special};
+use tlrs::util::json;
+
+fn shrink(fig: &mut scenarios::Figure) {
+    fig.seeds = vec![1];
+    for p in fig.points.iter_mut() {
+        match &mut p.trace {
+            TraceKind::Synthetic(sp) => {
+                sp.n = 50;
+                sp.m = sp.m.min(5);
+            }
+            TraceKind::GctLike { n, .. } => {
+                *n = (*n).min(80);
+            }
+        }
+    }
+    fig.points.truncate(2);
+}
+
+#[test]
+fn every_generic_figure_runs_shrunken() {
+    let planner = Planner::new(Backend::Native).unwrap();
+    for id in scenarios::all_ids() {
+        let Some(mut fig) = scenarios::figure(id, true) else { continue };
+        shrink(&mut fig);
+        let res = runner::run_figure(&planner, &fig).unwrap();
+        assert_eq!(res.rows.len(), fig.points.len(), "{id}");
+        for row in &res.rows {
+            for s in &row.normalized {
+                assert!(s.mean >= 1.0 - 1e-6, "{id}: normalized below LB: {s:?}");
+                assert!(s.mean.is_finite(), "{id}");
+            }
+            assert!(row.lower_bound.mean > 0.0, "{id}");
+        }
+        // table + JSON render
+        let table = report::render_table(&res);
+        assert!(table.contains(res.id.as_str()), "{id}");
+        let parsed = json::parse(&report::to_json(&res).to_string()).unwrap();
+        assert_eq!(parsed.get("id").as_str(), Some(id));
+    }
+}
+
+#[test]
+fn special_runners_produce_output() {
+    let planner = Planner::new(Backend::Native).unwrap();
+
+    let (text, json_out) = special::fig1(&planner).unwrap();
+    assert!(text.contains("fig1"));
+    assert_eq!(json_out.get("timeline_aware_cost").as_f64(), Some(10.0));
+    assert_eq!(json_out.get("timeline_agnostic_cost").as_f64(), Some(16.0));
+
+    let (text, _) = special::tab1();
+    assert!(text.contains("tab1"));
+
+    let (text, json_out) = special::running_time(&planner, true).unwrap();
+    assert!(text.contains("rt"));
+    assert_eq!(json_out.get("seconds").as_arr().unwrap().len(), 5);
+}
+
+#[test]
+fn near_integrality_after_crossover() {
+    // shrunken fig5: the crossover makes the LP mapping near-integral
+    use tlrs::algo::lpmap::solve_lp_mapping;
+    use tlrs::io::synth::{generate, SynthParams};
+    use tlrs::lp::solver::NativePdhgSolver;
+    use tlrs::model::trim;
+    let inst = generate(&SynthParams { n: 200, ..Default::default() }, 1);
+    let tr = trim(&inst).instance;
+    let outcome = solve_lp_mapping(&tr, &NativePdhgSolver::default()).unwrap();
+    let frac = outcome.x_max.iter().filter(|&&v| v > 0.9).count() as f64 / 200.0;
+    assert!(frac > 0.75, "only {frac} near-integral after crossover");
+}
+
+#[test]
+fn master_trace_is_cached_and_stable() {
+    let a = runner::master_trace();
+    let b = runner::master_trace();
+    assert!(std::ptr::eq(a, b));
+    assert_eq!(a.tasks.len(), 13_000);
+    assert_eq!(a.node_types.len(), 13);
+}

@@ -1,0 +1,100 @@
+//! Integration: the AOT JAX/Pallas artifacts executed through PJRT agree
+//! with the native Rust solvers. Requires `make artifacts` (skips cleanly
+//! when artifacts are absent, e.g. in a fresh checkout).
+
+use tlrs::algo::penalty_map::{penalty_matrix, MappingPolicy};
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::lp::solver::{MappingSolver, NativePdhgSolver, SimplexSolver};
+use tlrs::lp::{scaling, MappingLp};
+use tlrs::model::trim;
+use tlrs::runtime::{ArtifactSolver, Manifest};
+
+fn artifact_solver() -> Option<ArtifactSolver> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("artifacts not built; skipping runtime integration test");
+        return None;
+    }
+    Some(ArtifactSolver::from_default_dir().expect("loading artifacts"))
+}
+
+fn small_lp(seed: u64, n: usize, m: usize, dims: usize, horizon: u32) -> MappingLp {
+    let inst = generate(
+        &SynthParams { n, m, dims, horizon, dem_range: (0.05, 0.3), ..Default::default() },
+        seed,
+    );
+    let mut lp = MappingLp::from_instance(&trim(&inst).instance);
+    scaling::equilibrate(&mut lp);
+    lp
+}
+
+#[test]
+fn artifact_matches_simplex_small() {
+    let Some(solver) = artifact_solver() else { return };
+    for seed in [0u64, 1] {
+        let lp = small_lp(seed, 12, 3, 2, 8);
+        let exact = SimplexSolver.solve_mapping(&lp).unwrap();
+        let got = solver.solve_mapping(&lp).unwrap();
+        assert!(got.converged, "seed {seed}: artifact solve did not converge");
+        let rel = (got.objective - exact.objective).abs() / (1.0 + exact.objective.abs());
+        assert!(
+            rel < 5e-3,
+            "seed {seed}: artifact {} vs simplex {}",
+            got.objective,
+            exact.objective
+        );
+    }
+}
+
+#[test]
+fn artifact_matches_native_pdhg_medium() {
+    let Some(solver) = artifact_solver() else { return };
+    let lp = small_lp(7, 100, 6, 4, 24);
+    let native = NativePdhgSolver::default().solve_mapping(&lp).unwrap();
+    let got = solver.solve_mapping(&lp).unwrap();
+    assert!(got.converged);
+    let rel = (got.objective - native.objective).abs() / (1.0 + native.objective.abs());
+    assert!(rel < 5e-3, "artifact {} vs native {}", got.objective, native.objective);
+    // roundings agree for decisively-assigned tasks
+    let m = lp.m;
+    let mut agree = 0;
+    for u in 0..lp.n {
+        let arg = |x: &[f64]| {
+            (0..m).max_by(|&a, &b| x[u * m + a].partial_cmp(&x[u * m + b]).unwrap()).unwrap()
+        };
+        if arg(&got.x) == arg(&native.x) {
+            agree += 1;
+        }
+    }
+    assert!(agree as f64 >= 0.9 * lp.n as f64, "only {agree}/{} roundings agree", lp.n);
+}
+
+#[test]
+fn penalty_artifact_matches_native() {
+    let Some(solver) = artifact_solver() else { return };
+    let inst = generate(&SynthParams { n: 50, m: 5, dims: 3, horizon: 12, ..Default::default() }, 3);
+    let tr = trim(&inst).instance;
+    let (p_avg, p_max) =
+        tlrs::runtime::pdhg_exec::penalty_scores_artifact(&solver, &tr).unwrap();
+    let native_avg = penalty_matrix(&tr, MappingPolicy::HAvg);
+    let native_max = penalty_matrix(&tr, MappingPolicy::HMax);
+    for i in 0..p_avg.len() {
+        // native matrix has +inf on inadmissible pairs; kernel reports raw
+        if native_avg[i].is_finite() {
+            assert!((p_avg[i] - native_avg[i]).abs() < 1e-4 * (1.0 + native_avg[i]), "avg[{i}]");
+        }
+        if native_max[i].is_finite() {
+            assert!((p_max[i] - native_max[i]).abs() < 1e-4 * (1.0 + native_max[i]), "max[{i}]");
+        }
+    }
+}
+
+#[test]
+fn dual_bound_from_artifact_is_valid() {
+    let Some(solver) = artifact_solver() else { return };
+    let lp = small_lp(11, 14, 3, 2, 8);
+    let exact = SimplexSolver.solve_mapping(&lp).unwrap();
+    let got = solver.solve_mapping(&lp).unwrap();
+    let (lb, _) = tlrs::lp::dual::certified_bound(&lp, &got.y);
+    assert!(lb <= exact.objective + 1e-6 * (1.0 + exact.objective));
+    assert!(lb >= 0.9 * exact.objective, "lb {lb} too loose vs {}", exact.objective);
+}

@@ -1,0 +1,104 @@
+//! Integration: the TCP planning service end-to-end over a real socket.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::service;
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::util::json::{self, Json};
+
+/// Spin up a single-connection server on an ephemeral port.
+fn serve_once() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let planner = Planner::new(Backend::Native).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let _ = service::serve_connection(&planner, stream);
+    });
+    (addr, handle)
+}
+
+#[test]
+fn tcp_roundtrip_pipelined() {
+    let (addr, handle) = serve_once();
+    let mut stream = TcpStream::connect(addr).unwrap();
+
+    let inst = generate(&SynthParams { n: 30, m: 3, ..Default::default() }, 8);
+    let mk = |algo: &str| {
+        Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str(algo.into())),
+        ])
+        .to_string()
+            + "\n"
+    };
+    // pipeline three requests on one connection
+    stream.write_all(mk("penalty-map").as_bytes()).unwrap();
+    stream.write_all(mk("lp-map-f").as_bytes()).unwrap();
+    stream.write_all(b"this is not json\n").unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+
+    let reader = BufReader::new(stream);
+    let responses: Vec<Json> = reader
+        .lines()
+        .map(|l| json::parse(&l.unwrap()).unwrap())
+        .collect();
+    assert_eq!(responses.len(), 3);
+    assert_eq!(responses[0].get("ok").as_bool(), Some(true));
+    assert_eq!(responses[0].get("algorithm").as_str(), Some("penalty-map"));
+    assert_eq!(responses[1].get("ok").as_bool(), Some(true));
+    let cost_pen = responses[0].get("cost").as_f64().unwrap();
+    let cost_lpf = responses[1].get("cost").as_f64().unwrap();
+    assert!(cost_lpf <= cost_pen + 1e-9, "lp-map-f {cost_lpf} vs penalty {cost_pen}");
+    assert!(responses[1].get("normalized_cost").as_f64().unwrap() >= 1.0 - 1e-6);
+    assert_eq!(responses[2].get("ok").as_bool(), Some(false));
+
+    handle.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_are_serialized_but_served() {
+    // the service handles connections sequentially (PJRT client is not
+    // Sync) — two queued clients must both get answers
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let planner = Planner::new(Backend::Native).unwrap();
+        for _ in 0..2 {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = service::serve_connection(&planner, stream);
+        }
+    });
+
+    let inst = generate(&SynthParams { n: 20, m: 2, ..Default::default() }, 9);
+    let req = Json::obj(vec![
+        ("instance", files::instance_to_json(&inst)),
+        ("algorithm", Json::Str("penalty-map-f".into())),
+    ])
+    .to_string()
+        + "\n";
+
+    let clients: Vec<_> = (0..2)
+        .map(|_| {
+            let req = req.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.write_all(req.as_bytes()).unwrap();
+                stream.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut line = String::new();
+                BufReader::new(stream).read_line(&mut line).unwrap();
+                json::parse(&line).unwrap()
+            })
+        })
+        .collect();
+    for c in clients {
+        let resp = c.join().unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+    }
+    server.join().unwrap();
+}

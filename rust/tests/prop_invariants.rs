@@ -1,0 +1,215 @@
+//! Property-based invariant tests: randomized instance generators drive
+//! hundreds of cases through every algorithm, checking the invariants
+//! DESIGN.md section 6 lists. (Hand-rolled driver — the vendored crate
+//! universe has no proptest; shrinking is replaced by seed reporting.)
+
+use tlrs::algo::algorithms::{penalty_map_best, Algorithm};
+use tlrs::algo::lowerbound::lower_bound;
+use tlrs::algo::penalty_map::{map_tasks, min_penalties, MappingPolicy};
+use tlrs::algo::placement::FitPolicy;
+use tlrs::algo::twophase::solve_with_mapping;
+use tlrs::io::synth::{generate, CostKind, SynthParams};
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::lp::{dual, scaling, MappingLp};
+use tlrs::model::{trim, Instance};
+use tlrs::util::rng::Rng;
+
+/// Random instance parameters spanning the interesting regimes.
+fn random_params(rng: &mut Rng) -> SynthParams {
+    let dims = 1 + rng.below(6) as usize;
+    SynthParams {
+        n: 10 + rng.below(120) as usize,
+        m: 1 + rng.below(7) as usize,
+        dims,
+        horizon: 2 + rng.below(30) as u32,
+        cap_range: (0.2, 1.0),
+        dem_range: match rng.below(3) {
+            0 => (0.01, 0.05),
+            1 => (0.01, 0.2),
+            _ => (0.05, 0.5),
+        },
+        cost_model: match rng.below(3) {
+            0 => CostKind::HomogeneousLinear,
+            1 => CostKind::HeterogeneousRandom { exponent: 0.5 },
+            _ => CostKind::HeterogeneousRandom { exponent: 2.0 },
+        },
+    }
+}
+
+fn random_instance(seed: u64) -> Instance {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9));
+    let params = random_params(&mut rng);
+    generate(&params, seed)
+}
+
+const CASES: u64 = 60;
+
+#[test]
+fn trimming_preserves_cost_and_feasibility() {
+    for seed in 0..CASES {
+        let inst = random_instance(seed);
+        let tr = trim(&inst);
+        // spans map back within the original horizon
+        assert!(tr.instance.horizon as usize <= inst.n_tasks().max(1), "seed {seed}");
+        // solving trimmed and verifying is consistent; costs agree with the
+        // untrimmed instance solved with the same mapping
+        let mapping = map_tasks(&tr.instance, MappingPolicy::HAvg);
+        let sol_t = solve_with_mapping(&tr.instance, &mapping, FitPolicy::FirstFit, false);
+        assert!(sol_t.verify(&tr.instance).is_ok(), "seed {seed}");
+        let mapping_o = map_tasks(&inst, MappingPolicy::HAvg);
+        assert_eq!(mapping, mapping_o, "seed {seed}: mapping is timeline-free");
+        let sol_o = solve_with_mapping(&inst, &mapping_o, FitPolicy::FirstFit, false);
+        assert!(sol_o.verify(&inst).is_ok(), "seed {seed}");
+        assert!(
+            (sol_t.cost(&tr.instance) - sol_o.cost(&inst)).abs() < 1e-9,
+            "seed {seed}: trimmed {} vs original {}",
+            sol_t.cost(&tr.instance),
+            sol_o.cost(&inst)
+        );
+    }
+}
+
+#[test]
+fn every_algorithm_is_feasible_and_above_congestion_bound() {
+    for seed in 0..CASES {
+        let inst = random_instance(seed + 1000);
+        let tr = trim(&inst).instance;
+        let mut lp = MappingLp::from_instance(&tr);
+        scaling::equilibrate(&mut lp);
+        let cong = dual::congestion_bound(&lp);
+        for algo in [Algorithm::PenaltyMap, Algorithm::PenaltyMapF] {
+            let sol = penalty_map_best(&tr, algo == Algorithm::PenaltyMapF);
+            assert!(sol.verify(&tr).is_ok(), "seed {seed} {algo:?}");
+            assert!(
+                sol.cost(&tr) >= cong - 1e-9,
+                "seed {seed} {algo:?}: cost {} below congestion bound {cong}",
+                sol.cost(&tr)
+            );
+        }
+    }
+}
+
+#[test]
+fn mapping_respects_admissibility_and_penalties() {
+    for seed in 0..CASES {
+        let inst = random_instance(seed + 2000);
+        for policy in [MappingPolicy::HAvg, MappingPolicy::HMax] {
+            let mapping = map_tasks(&inst, policy);
+            let pstar = min_penalties(&inst, policy);
+            for (u, &b) in mapping.iter().enumerate() {
+                assert!(
+                    inst.node_types[b].admits(&inst.tasks[u].demand),
+                    "seed {seed}: task {u} mapped to inadmissible type {b}"
+                );
+                assert!(pstar[u].is_finite(), "seed {seed}: task {u}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lp_lower_bound_below_all_algorithms() {
+    // heavier: fewer cases
+    for seed in 0..15u64 {
+        let inst = random_instance(seed + 3000);
+        let tr = trim(&inst).instance;
+        let solver = NativePdhgSolver::default();
+        let lb = lower_bound(&tr, &solver).unwrap();
+        for fill in [false, true] {
+            let sol = penalty_map_best(&tr, fill);
+            assert!(
+                lb.best() <= sol.cost(&tr) + 1e-6,
+                "seed {seed}: lb {} vs penalty cost {}",
+                lb.best(),
+                sol.cost(&tr)
+            );
+        }
+        // congestion bound <= LP optimum holds exactly; lp_objective is the
+        // *approximate* primal value, so allow first-order slack
+        assert!(
+            lb.congestion_bound <= lb.lp_objective * 1.005 + 1e-6,
+            "seed {seed}: congestion {} vs approx LP {}",
+            lb.congestion_bound,
+            lb.lp_objective
+        );
+    }
+}
+
+#[test]
+fn solution_accounting_is_exact() {
+    for seed in 0..CASES {
+        let inst = random_instance(seed + 4000);
+        let tr = trim(&inst).instance;
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+        let sol = solve_with_mapping(&tr, &mapping, FitPolicy::SimilarityFit, true);
+        // cost equals sum over nodes_per_type
+        let per_type = sol.nodes_per_type(&tr);
+        let recomputed: f64 = per_type
+            .iter()
+            .enumerate()
+            .map(|(b, &c)| c as f64 * tr.node_types[b].cost)
+            .sum();
+        assert!((recomputed - sol.cost(&tr)).abs() < 1e-9, "seed {seed}");
+        // every task appears in exactly one node task list
+        let mut seen = vec![false; tr.n_tasks()];
+        for node in &sol.nodes {
+            for &u in &node.tasks {
+                assert!(!seen[u], "seed {seed}: task {u} twice");
+                seen[u] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "seed {seed}: unplaced task");
+        // replay agrees with verify
+        let rep = tlrs::sim::replay::replay(&tr, &sol);
+        assert_eq!(rep.overloads, 0, "seed {seed}");
+    }
+}
+
+#[test]
+fn pdhg_certified_bound_valid_even_unconverged() {
+    // failure injection: starve the solver of iterations; the certified
+    // dual bound must remain a valid lower bound regardless.
+    use tlrs::lp::pdhg::{self, PdhgOptions};
+    use tlrs::lp::simplex;
+    for seed in 0..10u64 {
+        let inst = generate(
+            &SynthParams {
+                n: 12,
+                m: 3,
+                dims: 2,
+                horizon: 6,
+                dem_range: (0.05, 0.3),
+                ..Default::default()
+            },
+            seed,
+        );
+        let mut lp = MappingLp::from_instance(&trim(&inst).instance);
+        scaling::equilibrate(&mut lp);
+        let exact = simplex::solve(&lp.to_dense());
+        let starved = pdhg::solve(
+            &lp,
+            &PdhgOptions { max_iters: 50, chunk: 25, ..Default::default() },
+        );
+        assert!(!starved.converged);
+        let (lb, _) = dual::certified_bound(&lp, &starved.y);
+        assert!(
+            lb <= exact.objective + 1e-7 * (1.0 + exact.objective),
+            "seed {seed}: starved lb {lb} exceeds optimum {}",
+            exact.objective
+        );
+    }
+}
+
+#[test]
+fn segregation_matches_combined_feasibility() {
+    use tlrs::algo::segregate;
+    for seed in 0..30u64 {
+        let inst = random_instance(seed + 5000);
+        let tr = trim(&inst).instance;
+        let sol = segregate::solve_segregated(&tr, |i| {
+            let mapping = map_tasks(i, MappingPolicy::HAvg);
+            solve_with_mapping(i, &mapping, FitPolicy::FirstFit, false)
+        });
+        assert!(sol.verify(&tr).is_ok(), "seed {seed}");
+    }
+}
