@@ -1,52 +1,123 @@
-//! L3 placement-engine benchmarks: the O(n·|S|·D·T) hot path of both
-//! algorithms (paper section III, Time Complexity). Regenerates the
-//! placement-side of the section VI-E running-time discussion.
+//! L3 placement-engine benchmarks: the hot path of both algorithms
+//! (paper section III, Time Complexity; section VI-E running times).
+//!
+//! Measures the indexed segment-tree path against the seed's dense
+//! reference *in the same run* across n and T sweeps, and writes the
+//! results to `BENCH_placement.json` so the perf trajectory is tracked
+//! PR over PR. `TLRS_BENCH_QUICK=1` shrinks the budgets for the
+//! `scripts/tier1.sh` smoke run.
 
 use std::time::Duration;
 
 use tlrs::algo::fill::solve_with_filling;
 use tlrs::algo::penalty_map::{map_tasks, MappingPolicy};
 use tlrs::algo::placement::FitPolicy;
-use tlrs::algo::twophase::solve_with_mapping;
+use tlrs::algo::twophase::{
+    solve_with_mapping, solve_with_mapping_ref, solve_with_mapping_sequential,
+};
 use tlrs::io::synth::{generate, SynthParams};
 use tlrs::model::trim;
-use tlrs::util::bench::bench;
+use tlrs::util::bench::{bench, fmt_ns, BenchResult};
+use tlrs::util::json::Json;
 
 fn main() {
     println!("== placement benches ==");
-    let budget = Duration::from_millis(800);
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let budget = if quick { Duration::from_millis(60) } else { Duration::from_millis(800) };
+    let gct_budget = if quick { Duration::from_millis(300) } else { Duration::from_secs(3) };
+    let mut results: Vec<BenchResult> = Vec::new();
 
     for &n in &[250usize, 1000, 4000] {
         let inst = generate(&SynthParams { n, ..Default::default() }, 1);
         let tr = trim(&inst).instance;
         let mapping = map_tasks(&tr, MappingPolicy::HAvg);
 
-        bench(&format!("first_fit/n={n}"), budget, || {
+        results.push(bench(&format!("first_fit/n={n}"), budget, || {
             solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false)
-        });
-        bench(&format!("similarity_fit/n={n}"), budget, || {
+        }));
+        results.push(bench(&format!("similarity_fit/n={n}"), budget, || {
             solve_with_mapping(&tr, &mapping, FitPolicy::SimilarityFit, false)
-        });
-        bench(&format!("cross_fill/n={n}"), budget, || {
+        }));
+        results.push(bench(&format!("cross_fill/n={n}"), budget, || {
             solve_with_filling(&tr, &mapping, FitPolicy::FirstFit)
-        });
+        }));
     }
 
     // mapping phase alone (O(n*m*D))
     let inst = generate(&SynthParams { n: 4000, ..Default::default() }, 2);
     let tr = trim(&inst).instance;
-    bench("penalty_mapping/n=4000", budget, || {
+    results.push(bench("penalty_mapping/n=4000", budget, || {
         map_tasks(&tr, MappingPolicy::HAvg)
-    });
+    }));
 
-    // GCT-like shape: long trimmed timeline
+    // T sweep: same workload over a growing (untrimmed) timeline.
+    // Three variants so the index win is separable from threading:
+    // indexed (production: parallel), indexed-seq (one thread), dense
+    // (the seed, one thread).
+    for &t in &[64u32, 512, 4096] {
+        let inst = generate(&SynthParams { n: 1000, horizon: t, ..Default::default() }, 7);
+        let mapping = map_tasks(&inst, MappingPolicy::HAvg);
+        results.push(bench(&format!("first_fit/indexed T={t}"), budget, || {
+            solve_with_mapping(&inst, &mapping, FitPolicy::FirstFit, false)
+        }));
+        results.push(bench(&format!("first_fit/indexed-seq T={t}"), budget, || {
+            solve_with_mapping_sequential(&inst, &mapping, FitPolicy::FirstFit)
+        }));
+        results.push(bench(&format!("first_fit/dense T={t}"), budget, || {
+            solve_with_mapping_ref(&inst, &mapping, FitPolicy::FirstFit)
+        }));
+    }
+
+    // GCT-like shape: long trimmed timeline (week at 5-minute slots;
+    // trimmed as every production solve path does), the acceptance
+    // comparison for the indexed placement core
+    let n_gct = if quick { 600 } else { 2000 };
     let trace = tlrs::io::gct_like::generate_trace(4000, 3);
-    let gct = trace.sample_scenario(2000, 13, 1);
-    let tr = trim(&gct).instance;
-    let mapping = map_tasks(&tr, MappingPolicy::HAvg);
-    bench(
-        &format!("first_fit/gct n=2000 T={}", tr.horizon),
-        Duration::from_secs(3),
-        || solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false),
+    let gct = trim(&trace.sample_scenario(n_gct, 13, 1)).instance;
+    let t_gct = gct.horizon;
+    let mapping = map_tasks(&gct, MappingPolicy::HAvg);
+    let indexed = bench(
+        &format!("first_fit/gct indexed n={n_gct} T={t_gct}"),
+        gct_budget,
+        || solve_with_mapping(&gct, &mapping, FitPolicy::FirstFit, false),
     );
+    let indexed_seq = bench(
+        &format!("first_fit/gct indexed-seq n={n_gct} T={t_gct}"),
+        gct_budget,
+        || solve_with_mapping_sequential(&gct, &mapping, FitPolicy::FirstFit),
+    );
+    let dense = bench(
+        &format!("first_fit/gct dense n={n_gct} T={t_gct}"),
+        gct_budget,
+        || solve_with_mapping_ref(&gct, &mapping, FitPolicy::FirstFit),
+    );
+    let speedup = dense.mean_ns / indexed.mean_ns;
+    let speedup_seq = dense.mean_ns / indexed_seq.mean_ns;
+    println!(
+        "gct first-fit speedup: {speedup:.2}x total, {speedup_seq:.2}x index-only \
+         (dense {} -> indexed {})",
+        fmt_ns(dense.mean_ns),
+        fmt_ns(indexed.mean_ns)
+    );
+    results.push(indexed);
+    results.push(indexed_seq);
+    results.push(dense);
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("placement".into())),
+        ("quick", Json::Bool(quick)),
+        ("gct_n", Json::Num(n_gct as f64)),
+        ("gct_horizon", Json::Num(t_gct as f64)),
+        ("gct_first_fit_speedup", Json::Num(speedup)),
+        ("gct_first_fit_speedup_index_only", Json::Num(speedup_seq)),
+        (
+            "results",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ]);
+    let path = "BENCH_placement.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_placement.json");
+    println!("wrote {path}");
 }

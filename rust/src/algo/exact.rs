@@ -4,7 +4,7 @@
 //! approximation ratios of the heuristics in tests. Exponential — guarded
 //! to small n.
 
-use crate::model::{Instance, PlacedNode, Solution};
+use crate::model::{Instance, LoadProfile, PlacedNode, Profile, Solution};
 
 const MAX_TASKS: usize = 12;
 
@@ -16,39 +16,24 @@ pub fn optimal(inst: &Instance) -> Solution {
         "exact solver is exponential; n={} > {MAX_TASKS}",
         inst.n_tasks()
     );
-    let dims = inst.dims();
     let t_len = inst.horizon as usize;
 
-    // State: open nodes (type, usage profile); branch each task into every
-    // open node it fits plus one new node per type.
+    // State: open nodes (type, indexed load profile); branch each task
+    // into every open node it fits plus one new node per type. Feasibility
+    // probes ride the shared [`LoadProfile`] segment trees (O(D·log T)),
+    // the same code path the heuristics and the verifier use.
     struct Node {
         type_idx: usize,
-        usage: Vec<f64>,
+        profile: LoadProfile,
         tasks: Vec<usize>,
     }
     struct Search<'a> {
         inst: &'a Instance,
-        dims: usize,
         t_len: usize,
         best_cost: f64,
         best: Option<Vec<(usize, Vec<usize>)>>,
     }
     impl<'a> Search<'a> {
-        fn fits(&self, node: &Node, u: usize) -> bool {
-            let task = &self.inst.tasks[u];
-            let cap = &self.inst.node_types[node.type_idx].capacity;
-            for t in task.start..=task.end {
-                for d in 0..self.dims {
-                    if node.usage[t as usize * self.dims + d] + task.demand[d]
-                        > cap[d] + 1e-9
-                    {
-                        return false;
-                    }
-                }
-            }
-            true
-        }
-
         fn go(&mut self, u: usize, nodes: &mut Vec<Node>, cost: f64) {
             if cost >= self.best_cost - 1e-12 {
                 return; // bound
@@ -66,10 +51,10 @@ pub fn optimal(inst: &Instance) -> Solution {
             let task = &self.inst.tasks[u];
             // existing nodes
             for i in 0..nodes.len() {
-                if self.fits(&nodes[i], u) {
-                    add(&mut nodes[i], self.inst, u, self.dims);
+                if nodes[i].profile.fits(task) {
+                    add(&mut nodes[i], self.inst, u);
                     self.go(u + 1, nodes, cost);
-                    remove(&mut nodes[i], self.inst, u, self.dims);
+                    remove(&mut nodes[i], self.inst, u);
                 }
             }
             // new node of each admitting type; skip symmetric duplicates
@@ -80,36 +65,29 @@ pub fn optimal(inst: &Instance) -> Solution {
                 }
                 let mut node = Node {
                     type_idx: b,
-                    usage: vec![0.0; self.t_len * self.dims],
+                    profile: LoadProfile::new(
+                        self.t_len,
+                        self.inst.node_types[b].capacity.clone(),
+                    ),
                     tasks: Vec::new(),
                 };
-                add(&mut node, self.inst, u, self.dims);
+                add(&mut node, self.inst, u);
                 nodes.push(node);
                 self.go(u + 1, nodes, cost + self.inst.node_types[b].cost);
                 nodes.pop();
             }
         }
     }
-    fn add(node: &mut Node, inst: &Instance, u: usize, dims: usize) {
-        let task = &inst.tasks[u];
-        for t in task.start..=task.end {
-            for d in 0..dims {
-                node.usage[t as usize * dims + d] += task.demand[d];
-            }
-        }
+    fn add(node: &mut Node, inst: &Instance, u: usize) {
+        node.profile.add_task(&inst.tasks[u]);
         node.tasks.push(u);
     }
-    fn remove(node: &mut Node, inst: &Instance, u: usize, dims: usize) {
-        let task = &inst.tasks[u];
-        for t in task.start..=task.end {
-            for d in 0..dims {
-                node.usage[t as usize * dims + d] -= task.demand[d];
-            }
-        }
+    fn remove(node: &mut Node, inst: &Instance, u: usize) {
+        node.profile.remove_task(&inst.tasks[u]);
         node.tasks.pop();
     }
 
-    let mut search = Search { inst, dims, t_len, best_cost: f64::INFINITY, best: None };
+    let mut search = Search { inst, t_len, best_cost: f64::INFINITY, best: None };
     search.go(0, &mut Vec::new(), 0.0);
     let layout = search.best.expect("feasible instance");
 

@@ -10,16 +10,17 @@
 
 use crate::model::{Instance, Solution};
 
+use super::penalty_map::h_avg_matrix;
 use super::placement::{place_group, select_node, to_solution, FitPolicy, NodeState};
 
-/// Node-type processing order: decreasing capacity per cost.
+/// Node-type processing order: decreasing capacity per cost. NaN-safe
+/// total ordering with a deterministic index tie-break.
 pub fn type_order(inst: &Instance) -> Vec<usize> {
     let mut order: Vec<usize> = (0..inst.n_types()).collect();
     order.sort_by(|&a, &b| {
         inst.node_types[b]
             .capacity_per_cost()
-            .partial_cmp(&inst.node_types[a].capacity_per_cost())
-            .unwrap()
+            .total_cmp(&inst.node_types[a].capacity_per_cost())
             .then(a.cmp(&b))
     });
     order
@@ -39,24 +40,26 @@ pub fn solve_with_filling(
     let mut remaining = vec![true; inst.n_tasks()];
     let mut placed_groups: Vec<Vec<NodeState>> = Vec::with_capacity(m);
     let mut seq = 0usize;
+    // h_avg(u|B) for every pair, computed once per solve: the seed
+    // re-derived the O(D) aggregate inside the sort comparator below,
+    // costing O(n·D·log n) per node-type.
+    let h_avg = h_avg_matrix(inst);
 
     for &b in &type_order(inst) {
         // 1. place this node-type's own still-remaining tasks
         let own: Vec<usize> =
             groups[b].iter().copied().filter(|&u| remaining[u]).collect();
-        let mut nodes = place_group(inst, b, &own, policy, &mut seq);
+        let mut nodes: Vec<NodeState> = place_group(inst, b, &own, policy, &mut seq);
         for u in &own {
             remaining[*u] = false;
         }
 
         // 2. piggy-back: all remaining tasks, cheapest-footprint first
+        // (cached h_avg key, NaN-safe, deterministic index tie-break)
         let mut rest: Vec<usize> =
             (0..inst.n_tasks()).filter(|&u| remaining[u]).collect();
         rest.sort_by(|&u, &v| {
-            inst.h_avg(u, b)
-                .partial_cmp(&inst.h_avg(v, b))
-                .unwrap()
-                .then(u.cmp(&v))
+            h_avg[u * m + b].total_cmp(&h_avg[v * m + b]).then(u.cmp(&v))
         });
         for u in rest {
             if let Some(i) = select_node(inst, &nodes, u, policy) {

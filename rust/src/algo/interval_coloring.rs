@@ -5,7 +5,7 @@
 
 use crate::model::{Instance, Solution};
 
-use super::placement::{place_group, to_solution, FitPolicy};
+use super::placement::{place_group, to_solution, FitPolicy, NodeState};
 
 /// Solve a single-node-type instance by first-fit in start order.
 /// (With m=1 the mapping phase is trivial; this is exactly the paper's
@@ -14,7 +14,7 @@ pub fn color(inst: &Instance) -> Solution {
     assert_eq!(inst.n_types(), 1, "interval coloring needs a single node-type");
     let tasks: Vec<usize> = (0..inst.n_tasks()).collect();
     let mut seq = 0;
-    let nodes = place_group(inst, 0, &tasks, FitPolicy::FirstFit, &mut seq);
+    let nodes: Vec<NodeState> = place_group(inst, 0, &tasks, FitPolicy::FirstFit, &mut seq);
     to_solution(inst, vec![nodes])
 }
 

@@ -12,77 +12,9 @@
 //! Both moves only ever reduce cost, so the loop terminates; every
 //! intermediate state is capacity-feasible.
 
-use crate::model::{Instance, PlacedNode, Solution};
+use crate::model::{Instance, PlacedNode, Profile, Solution, EPS};
 
-/// Load profile of one node, supporting add/remove/fit queries.
-struct NodeLoad {
-    type_idx: usize,
-    usage: Vec<f64>,
-    tasks: Vec<usize>,
-}
-
-impl NodeLoad {
-    fn new(inst: &Instance, node: &PlacedNode) -> Self {
-        let dims = inst.dims();
-        let mut usage = vec![0.0; inst.horizon as usize * dims];
-        for &u in &node.tasks {
-            let t = &inst.tasks[u];
-            for ts in t.start..=t.end {
-                for d in 0..dims {
-                    usage[ts as usize * dims + d] += t.demand[d];
-                }
-            }
-        }
-        NodeLoad { type_idx: node.type_idx, usage, tasks: node.tasks.clone() }
-    }
-
-    fn fits(&self, inst: &Instance, u: usize) -> bool {
-        let task = &inst.tasks[u];
-        let dims = inst.dims();
-        let cap = &inst.node_types[self.type_idx].capacity;
-        for ts in task.start..=task.end {
-            for d in 0..dims {
-                if self.usage[ts as usize * dims + d] + task.demand[d] > cap[d] + 1e-9 {
-                    return false;
-                }
-            }
-        }
-        true
-    }
-
-    fn add(&mut self, inst: &Instance, u: usize) {
-        let task = &inst.tasks[u];
-        let dims = inst.dims();
-        for ts in task.start..=task.end {
-            for d in 0..dims {
-                self.usage[ts as usize * dims + d] += task.demand[d];
-            }
-        }
-        self.tasks.push(u);
-    }
-
-    fn remove(&mut self, inst: &Instance, u: usize) {
-        let task = &inst.tasks[u];
-        let dims = inst.dims();
-        for ts in task.start..=task.end {
-            for d in 0..dims {
-                self.usage[ts as usize * dims + d] -= task.demand[d];
-            }
-        }
-        self.tasks.retain(|&t| t != u);
-    }
-
-    /// Peak usage per dimension over the timeline.
-    fn peaks(&self, dims: usize) -> Vec<f64> {
-        let mut peaks = vec![0.0f64; dims];
-        for chunk in self.usage.chunks(dims) {
-            for d in 0..dims {
-                peaks[d] = peaks[d].max(chunk[d]);
-            }
-        }
-        peaks
-    }
-}
+use super::placement::NodeState;
 
 /// Statistics from one `improve` run.
 #[derive(Clone, Debug, Default)]
@@ -96,12 +28,18 @@ pub struct LocalSearchStats {
 
 /// Improve a feasible solution in place. Returns statistics.
 pub fn improve(inst: &Instance, sol: &mut Solution, max_rounds: usize) -> LocalSearchStats {
-    let dims = inst.dims();
     let mut stats = LocalSearchStats {
         cost_before: sol.cost(inst),
         ..Default::default()
     };
-    let mut nodes: Vec<NodeLoad> = sol.nodes.iter().map(|n| NodeLoad::new(inst, n)).collect();
+    // relocation probes and peaks ride the shared indexed NodeState —
+    // the same O(D·log T) profile the placement phase uses
+    let mut nodes: Vec<NodeState> = sol
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, n)| NodeState::from_placed(inst, n, i))
+        .collect();
 
     for _round in 0..max_rounds {
         let mut changed = false;
@@ -111,12 +49,12 @@ pub fn improve(inst: &Instance, sol: &mut Solution, max_rounds: usize) -> LocalS
             if node.tasks.is_empty() {
                 continue;
             }
-            let peaks = node.peaks(dims);
+            let peaks = node.profile().peaks();
             let current_cost = inst.node_types[node.type_idx].cost;
             let mut best: Option<(usize, f64)> = None;
             for (b, ty) in inst.node_types.iter().enumerate() {
                 if ty.cost < current_cost - 1e-12
-                    && peaks.iter().zip(&ty.capacity).all(|(&p, &c)| p <= c + 1e-9)
+                    && peaks.iter().zip(&ty.capacity).all(|(&p, &c)| p <= c + EPS)
                 {
                     if best.map(|(_, c)| ty.cost < c).unwrap_or(true) {
                         best = Some((b, ty.cost));
@@ -124,26 +62,23 @@ pub fn improve(inst: &Instance, sol: &mut Solution, max_rounds: usize) -> LocalS
                 }
             }
             if let Some((b, _)) = best {
-                node.type_idx = b;
+                node.set_type(inst, b);
                 stats.nodes_downgraded += 1;
                 changed = true;
             }
         }
 
         // ---- drain pass: empty expensive low-utilization nodes ----
-        // candidate order: descending cost / peak-utilization
+        // candidate order: descending cost / peak-utilization (NaN-safe
+        // total ordering with a deterministic index tie-break)
         let mut order: Vec<usize> = (0..nodes.len()).collect();
-        let value = |nl: &NodeLoad| {
-            let cap = &inst.node_types[nl.type_idx].capacity;
-            let util = nl
-                .peaks(dims)
-                .iter()
-                .zip(cap)
-                .map(|(&p, &c)| p / c)
-                .fold(0.0f64, f64::max);
+        let value = |nl: &NodeState| {
+            let util = nl.peak_utilization();
             inst.node_types[nl.type_idx].cost * (1.0 - util)
         };
-        order.sort_by(|&a, &b| value(&nodes[b]).partial_cmp(&value(&nodes[a])).unwrap());
+        order.sort_by(|&a, &b| {
+            value(&nodes[b]).total_cmp(&value(&nodes[a])).then(a.cmp(&b))
+        });
 
         for &i in &order {
             if nodes[i].tasks.is_empty() {

@@ -14,6 +14,21 @@ pub enum MappingPolicy {
     HMax,
 }
 
+/// Dense n×m matrix of `h_avg(u|B)` values, computed once per cross-fill
+/// solve as the cached piggy-back sort key (the seed re-derived the O(D)
+/// aggregate inside the sort comparator). `penalty_matrix` below already
+/// touches each (u, B) pair exactly once and needs no shared cache.
+pub fn h_avg_matrix(inst: &Instance) -> Vec<f64> {
+    let (n, m) = (inst.n_tasks(), inst.n_types());
+    let mut h = vec![0.0f64; n * m];
+    for u in 0..n {
+        for b in 0..m {
+            h[u * m + b] = inst.h_avg(u, b);
+        }
+    }
+    h
+}
+
 /// Penalty matrix p[u*m + b] for the chosen policy. Inadmissible pairs
 /// (demand exceeding capacity in some dimension) get +inf so the argmin
 /// never maps a task onto a node-type it cannot fit alone.

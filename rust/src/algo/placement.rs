@@ -5,8 +5,30 @@
 //! (first-fit: earliest purchased; similarity-fit: highest cosine
 //! similarity between the task's normalized demand and the node's
 //! remaining capacity over the task span), else a new node is purchased.
+//!
+//! The hot path is indexed: node load profiles live in [`LoadProfile`]
+//! lazy segment trees ((max, sum, sumsq) aggregates under range-add), and
+//! `select_node` prunes candidates with an O(D) peak-headroom fast-accept
+//! before paying for an exact windowed check. Per-operation complexity
+//! (T = timeslots, D = dimensions, |S| = purchased nodes of the type,
+//! span = task span length):
+//!
+//! | operation          | dense (seed)      | indexed (current)                     |
+//! |--------------------|-------------------|---------------------------------------|
+//! | `fits`             | O(span · D)       | O(D) fast-accept, O(D · log T) exact  |
+//! | `add` / `remove`   | O(span · D)       | O(D · log T)                          |
+//! | `similarity`       | O(span · D)       | O(D · log T)                          |
+//! | `peak_utilization` | O(T · D)          | O(D)                                  |
+//! | `select_node`      | O(|S| · span · D) | O(|S| · D) + exact checks on demand   |
+//!
+//! The seed's dense scan survives as [`DenseNodeState`] /
+//! [`place_group_dense`] — the property-test reference and the benchmark
+//! baseline that `benches/placement.rs` measures the indexed path
+//! against in the same run.
 
-use crate::model::{Instance, PlacedNode, Solution};
+use std::cmp::Ordering;
+
+use crate::model::{DenseProfile, Instance, LoadProfile, PlacedNode, Profile, Solution};
 
 /// Node-selection policy among feasible already-purchased nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -19,115 +41,115 @@ pub enum FitPolicy {
     SimilarityFit,
 }
 
-/// Mutable state of one purchased node: its load profile over (t, d).
+/// Mutable state of one purchased node, generic over the load-profile
+/// backend (indexed in production, dense in reference paths).
 #[derive(Clone, Debug)]
-pub struct NodeState {
+pub struct NodeStateImpl<P: Profile> {
     pub type_idx: usize,
     pub purchase_order: usize,
     pub tasks: Vec<usize>,
-    /// usage[t*dims + d]: aggregate demand of active tasks.
-    usage: Vec<f64>,
-    /// Cached capacity vector of the node-type.
-    cap: Vec<f64>,
-    dims: usize,
+    profile: P,
 }
 
-const EPS: f64 = 1e-9;
+/// Production node state: indexed segment-tree profile.
+pub type NodeState = NodeStateImpl<LoadProfile>;
 
-impl NodeState {
+/// Reference node state over the seed's dense per-timeslot array.
+pub type DenseNodeState = NodeStateImpl<DenseProfile>;
+
+impl<P: Profile> NodeStateImpl<P> {
     pub fn new(inst: &Instance, type_idx: usize, purchase_order: usize) -> Self {
-        let dims = inst.dims();
-        NodeState {
+        NodeStateImpl {
             type_idx,
             purchase_order,
             tasks: Vec::new(),
-            usage: vec![0.0; inst.horizon as usize * dims],
-            cap: inst.node_types[type_idx].capacity.clone(),
-            dims,
+            profile: P::new(
+                inst.horizon as usize,
+                inst.node_types[type_idx].capacity.clone(),
+            ),
         }
     }
 
     /// Does task `u` fit without violating capacity anywhere in its span?
     pub fn fits(&self, inst: &Instance, u: usize) -> bool {
-        let task = &inst.tasks[u];
-        let dims = self.dims;
-        for t in task.start..=task.end {
-            let base = t as usize * dims;
-            for d in 0..dims {
-                if self.usage[base + d] + task.demand[d] > self.cap[d] + EPS {
-                    return false;
-                }
-            }
-        }
-        true
+        self.profile.fits(&inst.tasks[u])
     }
 
     /// Cosine similarity between capacity-normalized demand and remaining
     /// capacity, aggregated over the task span (paper section III,
     /// "Alternative Mapping and Fitting Policies").
     pub fn similarity(&self, inst: &Instance, u: usize) -> f64 {
-        let task = &inst.tasks[u];
-        let dims = self.dims;
-        let mut dot = 0.0;
-        let mut nrm_d = 0.0;
-        let mut nrm_r = 0.0;
-        for t in task.start..=task.end {
-            let base = t as usize * dims;
-            for d in 0..dims {
-                let dem = task.demand[d] / self.cap[d];
-                let rem = (self.cap[d] - self.usage[base + d]).max(0.0) / self.cap[d];
-                dot += dem * rem;
-                nrm_d += dem * dem;
-                nrm_r += rem * rem;
-            }
-        }
-        if nrm_d <= 0.0 || nrm_r <= 0.0 {
-            return 0.0;
-        }
-        dot / (nrm_d.sqrt() * nrm_r.sqrt())
+        self.profile.similarity(&inst.tasks[u])
     }
 
     /// Add task `u` (caller must have checked `fits`).
     pub fn add(&mut self, inst: &Instance, u: usize) {
-        let task = &inst.tasks[u];
-        let dims = self.dims;
-        for t in task.start..=task.end {
-            let base = t as usize * dims;
-            for d in 0..dims {
-                self.usage[base + d] += task.demand[d];
-            }
-        }
+        self.profile.add_task(&inst.tasks[u]);
         self.tasks.push(u);
+    }
+
+    /// Remove a previously added task `u`.
+    pub fn remove(&mut self, inst: &Instance, u: usize) {
+        self.profile.remove_task(&inst.tasks[u]);
+        self.tasks.retain(|&t| t != u);
     }
 
     /// Peak load fraction over the node's busiest (t, d).
     pub fn peak_utilization(&self) -> f64 {
-        let dims = self.dims;
-        let mut best: f64 = 0.0;
-        for chunk in self.usage.chunks(dims) {
-            for d in 0..dims {
-                best = best.max(chunk[d] / self.cap[d]);
-            }
+        self.profile.peak_utilization()
+    }
+
+    /// Read access to the underlying load profile.
+    pub fn profile(&self) -> &P {
+        &self.profile
+    }
+
+    /// Rebuild the mutable state of an already-placed node (how local
+    /// search re-enters placement state from a finished [`Solution`]).
+    pub fn from_placed(inst: &Instance, node: &PlacedNode, purchase_order: usize) -> Self {
+        let mut b = Self::new(inst, node.type_idx, purchase_order);
+        for &u in &node.tasks {
+            b.add(inst, u);
         }
-        best
+        b
+    }
+
+    /// Retype the node: the capacity changes, the load profile stays
+    /// (local search downgrade move).
+    pub fn set_type(&mut self, inst: &Instance, type_idx: usize) {
+        self.type_idx = type_idx;
+        self.profile
+            .set_cap(inst.node_types[type_idx].capacity.clone());
     }
 }
 
 /// Pick a feasible node per policy; `None` if nothing fits.
-pub fn select_node(
+///
+/// First-fit returns the earliest purchased feasible node; similarity-fit
+/// the feasible node with maximum similarity, ties broken toward the
+/// earliest index with a NaN-safe total ordering. Both scans lean on the
+/// profile's O(D) peak-headroom fast-accept (candidate pruning) and only
+/// fall back to the exact O(D·log T) windowed check when the whole
+/// timeline is too loaded to decide.
+pub fn select_node<P: Profile>(
     inst: &Instance,
-    nodes: &[NodeState],
+    nodes: &[NodeStateImpl<P>],
     u: usize,
     policy: FitPolicy,
 ) -> Option<usize> {
+    let task = &inst.tasks[u];
     match policy {
-        FitPolicy::FirstFit => nodes.iter().position(|b| b.fits(inst, u)),
+        FitPolicy::FirstFit => nodes.iter().position(|b| b.profile.fits(task)),
         FitPolicy::SimilarityFit => {
             let mut best: Option<(usize, f64)> = None;
             for (i, b) in nodes.iter().enumerate() {
-                if b.fits(inst, u) {
-                    let s = b.similarity(inst, u);
-                    if best.map(|(_, bs)| s > bs).unwrap_or(true) {
+                if b.profile.fits(task) {
+                    let s = b.profile.similarity(task);
+                    let better = match &best {
+                        None => true,
+                        Some((_, bs)) => s.total_cmp(bs) == Ordering::Greater,
+                    };
+                    if better {
                         best = Some((i, s));
                     }
                 }
@@ -140,21 +162,21 @@ pub fn select_node(
 /// Place the given tasks (already filtered to one node-type) in increasing
 /// start order, purchasing nodes of `type_idx` as needed. `purchase_seq`
 /// is the global purchase counter shared across node-types.
-pub fn place_group(
+pub fn place_group<P: Profile>(
     inst: &Instance,
     type_idx: usize,
     tasks: &[usize],
     policy: FitPolicy,
     purchase_seq: &mut usize,
-) -> Vec<NodeState> {
+) -> Vec<NodeStateImpl<P>> {
     let mut order: Vec<usize> = tasks.to_vec();
     order.sort_by_key(|&u| (inst.tasks[u].start, u));
-    let mut nodes: Vec<NodeState> = Vec::new();
+    let mut nodes: Vec<NodeStateImpl<P>> = Vec::new();
     for u in order {
         match select_node(inst, &nodes, u, policy) {
             Some(i) => nodes[i].add(inst, u),
             None => {
-                let mut b = NodeState::new(inst, type_idx, *purchase_seq);
+                let mut b = NodeStateImpl::<P>::new(inst, type_idx, *purchase_seq);
                 *purchase_seq += 1;
                 assert!(
                     b.fits(inst, u),
@@ -169,8 +191,23 @@ pub fn place_group(
     nodes
 }
 
+/// The seed's dense placement path — kept as the reference for property
+/// tests and as the baseline `benches/placement.rs` measures against.
+pub fn place_group_dense(
+    inst: &Instance,
+    type_idx: usize,
+    tasks: &[usize],
+    policy: FitPolicy,
+    purchase_seq: &mut usize,
+) -> Vec<DenseNodeState> {
+    place_group::<DenseProfile>(inst, type_idx, tasks, policy, purchase_seq)
+}
+
 /// Assemble a [`Solution`] from per-type node lists.
-pub fn to_solution(inst: &Instance, groups: Vec<Vec<NodeState>>) -> Solution {
+pub fn to_solution<P: Profile>(
+    inst: &Instance,
+    groups: Vec<Vec<NodeStateImpl<P>>>,
+) -> Solution {
     let mut sol = Solution::new(inst.n_tasks());
     for nodes in groups {
         for b in nodes {
@@ -210,7 +247,8 @@ mod tests {
     fn first_fit_reuses_after_expiry() {
         let inst = inst();
         let mut seq = 0;
-        let nodes = place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
+        let nodes: Vec<NodeState> =
+            place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
         // tasks 0,1 overlap (1.2 > 1.0) -> 2 nodes; task 2 fits node 0 later
         assert_eq!(nodes.len(), 2);
         assert_eq!(nodes[0].tasks, vec![0, 2]);
@@ -221,7 +259,8 @@ mod tests {
     fn capacity_respected() {
         let inst = inst();
         let mut seq = 0;
-        let nodes = place_group(&inst, 0, &[0, 1, 2, 3], FitPolicy::FirstFit, &mut seq);
+        let nodes: Vec<NodeState> =
+            place_group(&inst, 0, &[0, 1, 2, 3], FitPolicy::FirstFit, &mut seq);
         let sol = to_solution(&inst, vec![nodes]);
         assert!(sol.verify(&inst).is_ok());
     }
@@ -242,13 +281,15 @@ mod tests {
             1,
         );
         let mut seq = 0;
-        let sim = place_group(&inst, 0, &[0, 1, 2], FitPolicy::SimilarityFit, &mut seq);
+        let sim: Vec<NodeState> =
+            place_group(&inst, 0, &[0, 1, 2], FitPolicy::SimilarityFit, &mut seq);
         assert_eq!(sim.len(), 2);
         let node_of_2 = sim.iter().position(|b| b.tasks.contains(&2)).unwrap();
         assert!(sim[node_of_2].tasks.contains(&1), "similarity: {sim:?}");
 
         let mut seq = 0;
-        let ff = place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
+        let ff: Vec<NodeState> =
+            place_group(&inst, 0, &[0, 1, 2], FitPolicy::FirstFit, &mut seq);
         let node_of_2 = ff.iter().position(|b| b.tasks.contains(&2)).unwrap();
         assert!(ff[node_of_2].tasks.contains(&0), "first-fit: {ff:?}");
     }
@@ -279,6 +320,34 @@ mod tests {
     }
 
     #[test]
+    fn remove_undoes_add() {
+        let inst = inst();
+        let mut b = NodeState::new(&inst, 0, 0);
+        b.add(&inst, 0);
+        b.add(&inst, 3);
+        b.remove(&inst, 0);
+        assert_eq!(b.tasks, vec![3]);
+        assert!((b.peak_utilization() - 0.3).abs() < 1e-9);
+        // after removal the heavy overlapper fits again
+        assert!(b.fits(&inst, 1));
+    }
+
+    #[test]
+    fn dense_reference_places_identically() {
+        let inst = inst();
+        let mut seq_a = 0;
+        let indexed: Vec<NodeState> =
+            place_group(&inst, 0, &[0, 1, 2, 3], FitPolicy::FirstFit, &mut seq_a);
+        let mut seq_b = 0;
+        let dense = place_group_dense(&inst, 0, &[0, 1, 2, 3], FitPolicy::FirstFit, &mut seq_b);
+        assert_eq!(indexed.len(), dense.len());
+        for (a, b) in indexed.iter().zip(&dense) {
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.purchase_order, b.purchase_order);
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn inadmissible_task_panics() {
         let inst = Instance::new(
@@ -287,6 +356,6 @@ mod tests {
             1,
         );
         let mut seq = 0;
-        place_group(&inst, 0, &[0], FitPolicy::FirstFit, &mut seq);
+        let _: Vec<NodeState> = place_group(&inst, 0, &[0], FitPolicy::FirstFit, &mut seq);
     }
 }

@@ -1,11 +1,45 @@
 //! The two-phase solve framework shared by every mapping strategy
 //! (paper Figures 3 and 6): partition tasks by their mapped node-type,
 //! place each group greedily, and optionally run cross-node-type filling.
+//!
+//! Without filling the node-type groups are fully independent, so they
+//! are placed on scoped threads (`std::thread::scope` — the dependency
+//! universe has no rayon) and the per-node purchase numbers are
+//! renumbered afterwards to match the sequential counter exactly: the
+//! parallel solve is bit-identical to the sequential one.
 
-use crate::model::{Instance, Solution};
+use crate::model::{DenseProfile, Instance, LoadProfile, Profile, Solution};
 
 use super::fill;
-use super::placement::{place_group, to_solution, FitPolicy};
+use super::placement::{place_group, to_solution, FitPolicy, NodeState, NodeStateImpl};
+
+/// Below this many tasks a solve is microseconds; thread spawn overhead
+/// would dominate, so place sequentially.
+const PARALLEL_MIN_TASKS: usize = 512;
+
+/// Partition task indices by their mapped node-type.
+fn group_by_type(inst: &Instance, mapping: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(mapping.len(), inst.n_tasks());
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); inst.n_types()];
+    for (u, &b) in mapping.iter().enumerate() {
+        groups[b].push(u);
+    }
+    groups
+}
+
+/// Sequential per-type placement over any profile backend.
+fn solve_sequential<P: Profile>(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+) -> Solution {
+    let groups = group_by_type(inst, mapping);
+    let mut seq = 0usize;
+    let placed: Vec<Vec<NodeStateImpl<P>>> = (0..inst.n_types())
+        .map(|b| place_group(inst, b, &groups[b], policy, &mut seq))
+        .collect();
+    to_solution(inst, placed)
+}
 
 /// Solve with a given task -> node-type mapping.
 ///
@@ -19,20 +53,68 @@ pub fn solve_with_mapping(
     policy: FitPolicy,
     cross_fill: bool,
 ) -> Solution {
-    assert_eq!(mapping.len(), inst.n_tasks());
     if cross_fill {
+        assert_eq!(mapping.len(), inst.n_tasks());
         return fill::solve_with_filling(inst, mapping, policy);
     }
     let m = inst.n_types();
-    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); m];
-    for (u, &b) in mapping.iter().enumerate() {
-        groups[b].push(u);
+    if m <= 1 || inst.n_tasks() < PARALLEL_MIN_TASKS {
+        return solve_sequential::<LoadProfile>(inst, mapping, policy);
     }
+
+    let groups = group_by_type(inst, mapping);
+    // one scoped thread per node-type; each places with a local purchase
+    // counter starting at zero
+    let mut placed: Vec<Vec<NodeState>> = std::thread::scope(|s| {
+        let handles: Vec<_> = groups
+            .iter()
+            .enumerate()
+            .map(|(b, group)| {
+                s.spawn(move || {
+                    let mut local_seq = 0usize;
+                    place_group::<LoadProfile>(inst, b, group, policy, &mut local_seq)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("placement thread panicked"))
+            .collect()
+    });
+
+    // Renumber purchase orders to the global sequential counter: groups in
+    // type order, nodes within a group already in purchase order. This
+    // reproduces the sequential numbering exactly.
     let mut seq = 0usize;
-    let placed: Vec<_> = (0..m)
-        .map(|b| place_group(inst, b, &groups[b], policy, &mut seq))
-        .collect();
+    for nodes in placed.iter_mut() {
+        for node in nodes.iter_mut() {
+            node.purchase_order = seq;
+            seq += 1;
+        }
+    }
     to_solution(inst, placed)
+}
+
+/// Sequential *indexed* solve — same segment-tree profiles, no threads.
+/// Benchmarks use this to isolate the indexing win from the scoped-thread
+/// parallelism (which `solve_with_mapping` adds on top).
+pub fn solve_with_mapping_sequential(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+) -> Solution {
+    solve_sequential::<LoadProfile>(inst, mapping, policy)
+}
+
+/// Sequential dense-profile reference solve — the seed's exact code path,
+/// kept for property tests (cost equality with the indexed path) and as
+/// the baseline `benches/placement.rs` measures speedups against.
+pub fn solve_with_mapping_ref(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+) -> Solution {
+    solve_sequential::<DenseProfile>(inst, mapping, policy)
 }
 
 #[cfg(test)]
@@ -72,5 +154,23 @@ mod tests {
                 plain.cost(&tr)
             );
         }
+    }
+
+    #[test]
+    fn parallel_solve_matches_sequential_numbering() {
+        // n >= PARALLEL_MIN_TASKS exercises the scoped-thread branch; the
+        // dense sequential reference must agree node-for-node
+        let inst = generate(&SynthParams { n: 600, m: 6, ..Default::default() }, 9);
+        let tr = trim(&inst).instance;
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+        let par = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+        let seq = solve_with_mapping_ref(&tr, &mapping, FitPolicy::FirstFit);
+        assert_eq!(par.nodes.len(), seq.nodes.len());
+        for (a, b) in par.nodes.iter().zip(&seq.nodes) {
+            assert_eq!(a.type_idx, b.type_idx);
+            assert_eq!(a.purchase_order, b.purchase_order);
+            assert_eq!(a.tasks, b.tasks);
+        }
+        assert_eq!(par.assignment, seq.assignment);
     }
 }

@@ -1,0 +1,648 @@
+//! Shared load-profile subsystem: every consumer of a node's per-(t, d)
+//! usage — greedy placement, cross-fill, online placement, local search,
+//! exact search and `Solution::verify` — speaks to one [`Profile`]
+//! abstraction with two implementations:
+//!
+//!  * [`LoadProfile`] — the indexed production path: one lazy segment
+//!    tree per dimension maintaining `(max, sum, sumsq)` aggregates under
+//!    range-add, so feasibility checks, task add/remove, similarity
+//!    scoring and peak queries cost O(D·log T) instead of O(span·D) and
+//!    O(T·D).
+//!  * [`DenseProfile`] — the seed's dense per-timeslot array, kept as the
+//!    reference path for property tests and as the benchmark baseline.
+//!
+//! The `sumsq` aggregate is what makes cosine similarity recoverable from
+//! range queries alone: adding a constant `c` over a segment of length
+//! `len` updates `sumsq += 2c·sum + c²·len`, and for a task window of
+//! length `L` in dimension `d`,
+//! `Σ (cap-u)² = L·cap² - 2·cap·Σu + Σu²`.
+//!
+//! `DenseProfile` overrides the task-level operations (`fits`,
+//! `add_task`, `similarity`, ...) with the seed's exact t-major loops,
+//! so the property tests in `tests/prop_invariants.rs` compare the
+//! indexed code the solvers run against the seed's behavior, not
+//! against itself.
+
+use super::task::Task;
+use super::EPS;
+
+/// A node's per-dimension usage over the timeline, with the query set the
+/// placement stack needs. `lo..=hi` ranges are inclusive timeslots.
+pub trait Profile: Clone + std::fmt::Debug {
+    /// Empty profile over `n_slots` timeslots with the given capacity.
+    fn new(n_slots: usize, cap: Vec<f64>) -> Self;
+
+    /// Capacity vector of the owning node.
+    fn cap(&self) -> &[f64];
+
+    /// Replace the capacity vector (same dimensionality). Usage is kept —
+    /// local search uses this when downgrading a node's type.
+    fn set_cap(&mut self, cap: Vec<f64>);
+
+    /// Add `c` to dimension `d` over timeslots `lo..=hi`.
+    fn range_add(&mut self, d: usize, lo: usize, hi: usize, c: f64);
+
+    /// Max usage in dimension `d` over `lo..=hi`.
+    fn window_max(&self, d: usize, lo: usize, hi: usize) -> f64;
+
+    /// `(Σ usage, Σ usage²)` in dimension `d` over `lo..=hi`.
+    fn window_sums(&self, d: usize, lo: usize, hi: usize) -> (f64, f64);
+
+    /// Max usage in dimension `d` over the whole timeline. O(1) on the
+    /// indexed backend — the root of the max tree.
+    fn peak(&self, d: usize) -> f64;
+
+    /// Ascending timeslots where usage in `d` strictly exceeds
+    /// `threshold`, with their loads. Output-sensitive on the indexed
+    /// backend: only subtrees whose max exceeds the threshold are visited.
+    fn overloads(&self, d: usize, threshold: f64) -> Vec<(usize, f64)>;
+
+    // ---- derived task-level operations (shared by both backends) ----
+
+    /// Number of resource dimensions D.
+    fn dims(&self) -> usize {
+        self.cap().len()
+    }
+
+    /// Aggregate the task's demand into the profile.
+    fn add_task(&mut self, task: &Task) {
+        for d in 0..self.dims() {
+            self.range_add(d, task.start as usize, task.end as usize, task.demand[d]);
+        }
+    }
+
+    /// Remove a previously added task's demand.
+    fn remove_task(&mut self, task: &Task) {
+        for d in 0..self.dims() {
+            self.range_add(d, task.start as usize, task.end as usize, -task.demand[d]);
+        }
+    }
+
+    /// Does the task fit without violating capacity anywhere in its span?
+    ///
+    /// Fast path (candidate pruning): when the whole-timeline peak leaves
+    /// headroom for the demand in every dimension, the task surely fits —
+    /// O(D) with no windowed query. Otherwise fall back to the exact
+    /// windowed maxima, O(D·log T) on the indexed backend.
+    fn fits(&self, task: &Task) -> bool {
+        let cap = self.cap();
+        let mut sure = true;
+        for (d, &c) in cap.iter().enumerate() {
+            if task.demand[d] + self.peak(d) > c + EPS {
+                sure = false;
+                break;
+            }
+        }
+        if sure {
+            return true;
+        }
+        let (lo, hi) = (task.start as usize, task.end as usize);
+        cap.iter()
+            .enumerate()
+            .all(|(d, &c)| self.window_max(d, lo, hi) + task.demand[d] <= c + EPS)
+    }
+
+    /// Cosine similarity between the capacity-normalized demand and
+    /// remaining-capacity vectors aggregated over the task span (paper
+    /// section III, "Alternative Mapping and Fitting Policies"),
+    /// recovered from window sums: for a window of length `L`,
+    /// `Σ rem = (L·cap - Σu)/cap` and
+    /// `Σ rem² = (L·cap² - 2·cap·Σu + Σu²)/cap²`.
+    ///
+    /// The seed's dense loop (kept verbatim as `DenseProfile`'s override)
+    /// clamps per-slot remainders at zero; `fits` bounds usage to
+    /// capacity + EPS, so on the feasible profiles the solvers actually
+    /// build, clamping is inert and the two computations agree.
+    fn similarity(&self, task: &Task) -> f64 {
+        let cap = self.cap();
+        let (lo, hi) = (task.start as usize, task.end as usize);
+        let len = (hi - lo + 1) as f64;
+        let (mut dot, mut nrm_d, mut nrm_r) = (0.0f64, 0.0f64, 0.0f64);
+        for (d, &c) in cap.iter().enumerate() {
+            let (sum, sumsq) = self.window_sums(d, lo, hi);
+            let dem = task.demand[d] / c;
+            dot += dem * (len * c - sum) / c;
+            nrm_d += dem * dem * len;
+            nrm_r += (len * c * c - 2.0 * c * sum + sumsq) / (c * c);
+        }
+        if nrm_d <= 0.0 || nrm_r <= 0.0 {
+            return 0.0;
+        }
+        dot / (nrm_d.sqrt() * nrm_r.sqrt())
+    }
+
+    /// Peak load fraction over the busiest (t, d).
+    fn peak_utilization(&self) -> f64 {
+        let cap = self.cap();
+        cap.iter()
+            .enumerate()
+            .map(|(d, &c)| self.peak(d) / c)
+            .fold(0.0f64, f64::max)
+    }
+
+    /// Per-dimension peak usage over the whole timeline.
+    fn peaks(&self) -> Vec<f64> {
+        (0..self.dims()).map(|d| self.peak(d)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Indexed backend
+// ---------------------------------------------------------------------------
+
+/// Lazy segment tree over one dimension: range-add with `(max, sum,
+/// sumsq)` aggregates.
+///
+/// Conventions: aggregates stored at a node are *true* subtree values
+/// (they already include the node's own pending `lazy`); `lazy` is the
+/// uniform add not yet folded into the children's aggregates. Queries are
+/// therefore immutable — they carry the sum of ancestor lazies down the
+/// recursion instead of pushing — and only `add` rebalances the arrays.
+#[derive(Clone, Debug)]
+struct SegTree {
+    /// Number of leaves: the smallest power of two >= n_slots.
+    size: usize,
+    max: Vec<f64>,
+    sum: Vec<f64>,
+    sumsq: Vec<f64>,
+    lazy: Vec<f64>,
+}
+
+impl SegTree {
+    fn new(n_slots: usize) -> Self {
+        let size = n_slots.next_power_of_two().max(1);
+        SegTree {
+            size,
+            max: vec![0.0; 2 * size],
+            sum: vec![0.0; 2 * size],
+            sumsq: vec![0.0; 2 * size],
+            // only internal nodes (index < size) carry pending adds:
+            // leaves get them folded into their aggregates immediately
+            lazy: vec![0.0; size],
+        }
+    }
+
+    /// Apply a uniform add of `c` over all `len` slots covered by `node`.
+    /// Order matters: `sumsq` must read the pre-update `sum`.
+    fn apply(&mut self, node: usize, len: usize, c: f64) {
+        let s = self.sum[node];
+        self.sumsq[node] += 2.0 * c * s + c * c * len as f64;
+        self.sum[node] = s + c * len as f64;
+        self.max[node] += c;
+        if node < self.size {
+            self.lazy[node] += c;
+        }
+    }
+
+    fn push(&mut self, node: usize, len: usize) {
+        let c = self.lazy[node];
+        if c != 0.0 {
+            self.apply(2 * node, len / 2, c);
+            self.apply(2 * node + 1, len / 2, c);
+            self.lazy[node] = 0.0;
+        }
+    }
+
+    fn pull(&mut self, node: usize) {
+        self.max[node] = self.max[2 * node].max(self.max[2 * node + 1]);
+        self.sum[node] = self.sum[2 * node] + self.sum[2 * node + 1];
+        self.sumsq[node] = self.sumsq[2 * node] + self.sumsq[2 * node + 1];
+    }
+
+    fn add(&mut self, l: usize, r: usize, c: f64) {
+        self.add_rec(1, 0, self.size - 1, l, r, c);
+    }
+
+    fn add_rec(&mut self, node: usize, lo: usize, hi: usize, l: usize, r: usize, c: f64) {
+        if r < lo || hi < l {
+            return;
+        }
+        if l <= lo && hi <= r {
+            self.apply(node, hi - lo + 1, c);
+            return;
+        }
+        self.push(node, hi - lo + 1);
+        let mid = lo + (hi - lo) / 2;
+        self.add_rec(2 * node, lo, mid, l, r, c);
+        self.add_rec(2 * node + 1, mid + 1, hi, l, r, c);
+        self.pull(node);
+    }
+
+    fn query_max(&self, l: usize, r: usize) -> f64 {
+        self.max_rec(1, 0, self.size - 1, l, r, 0.0)
+    }
+
+    fn max_rec(&self, node: usize, lo: usize, hi: usize, l: usize, r: usize, acc: f64) -> f64 {
+        if r < lo || hi < l {
+            return f64::NEG_INFINITY;
+        }
+        if l <= lo && hi <= r {
+            return self.max[node] + acc;
+        }
+        let acc = acc + self.lazy[node];
+        let mid = lo + (hi - lo) / 2;
+        self.max_rec(2 * node, lo, mid, l, r, acc)
+            .max(self.max_rec(2 * node + 1, mid + 1, hi, l, r, acc))
+    }
+
+    fn query_sums(&self, l: usize, r: usize) -> (f64, f64) {
+        self.sums_rec(1, 0, self.size - 1, l, r, 0.0)
+    }
+
+    fn sums_rec(
+        &self,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        l: usize,
+        r: usize,
+        acc: f64,
+    ) -> (f64, f64) {
+        if r < lo || hi < l {
+            return (0.0, 0.0);
+        }
+        if l <= lo && hi <= r {
+            let len = (hi - lo + 1) as f64;
+            let s = self.sum[node];
+            return (s + acc * len, self.sumsq[node] + 2.0 * acc * s + acc * acc * len);
+        }
+        let acc = acc + self.lazy[node];
+        let mid = lo + (hi - lo) / 2;
+        let (s1, q1) = self.sums_rec(2 * node, lo, mid, l, r, acc);
+        let (s2, q2) = self.sums_rec(2 * node + 1, mid + 1, hi, l, r, acc);
+        (s1 + s2, q1 + q2)
+    }
+
+    /// Collect ascending slots with value strictly above `threshold`.
+    /// `n_slots` bounds the walk to real (non-padding) leaves.
+    fn collect_over(
+        &self,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        acc: f64,
+        threshold: f64,
+        n_slots: usize,
+        out: &mut Vec<(usize, f64)>,
+    ) {
+        if lo >= n_slots || self.max[node] + acc <= threshold {
+            return;
+        }
+        if lo == hi {
+            // leaf: its sum over one slot is the slot's value
+            out.push((lo, self.sum[node] + acc));
+            return;
+        }
+        let acc = acc + self.lazy[node];
+        let mid = lo + (hi - lo) / 2;
+        self.collect_over(2 * node, lo, mid, acc, threshold, n_slots, out);
+        self.collect_over(2 * node + 1, mid + 1, hi, acc, threshold, n_slots, out);
+    }
+}
+
+/// Indexed load profile: one lazy segment tree per dimension. All range
+/// operations are O(log T); whole-timeline peaks are O(1).
+#[derive(Clone, Debug)]
+pub struct LoadProfile {
+    cap: Vec<f64>,
+    n_slots: usize,
+    trees: Vec<SegTree>,
+}
+
+impl Profile for LoadProfile {
+    fn new(n_slots: usize, cap: Vec<f64>) -> Self {
+        assert!(n_slots > 0, "empty timeline");
+        assert!(!cap.is_empty(), "empty capacity");
+        let trees = (0..cap.len()).map(|_| SegTree::new(n_slots)).collect();
+        LoadProfile { cap, n_slots, trees }
+    }
+
+    fn cap(&self) -> &[f64] {
+        &self.cap
+    }
+
+    fn set_cap(&mut self, cap: Vec<f64>) {
+        assert_eq!(cap.len(), self.cap.len(), "capacity dims changed");
+        self.cap = cap;
+    }
+
+    fn range_add(&mut self, d: usize, lo: usize, hi: usize, c: f64) {
+        // hard assert: the dense path panics on out-of-range slots via
+        // indexing; the tree would silently clip instead, so keep the
+        // same loud failure mode (O(1) next to the O(log T) update)
+        assert!(
+            lo <= hi && hi < self.n_slots,
+            "range {lo}..={hi} outside timeline of {} slots",
+            self.n_slots
+        );
+        self.trees[d].add(lo, hi, c);
+    }
+
+    fn window_max(&self, d: usize, lo: usize, hi: usize) -> f64 {
+        self.trees[d].query_max(lo, hi)
+    }
+
+    fn window_sums(&self, d: usize, lo: usize, hi: usize) -> (f64, f64) {
+        self.trees[d].query_sums(lo, hi)
+    }
+
+    fn peak(&self, d: usize) -> f64 {
+        // Padding leaves beyond n_slots hold zero usage; real usage is
+        // non-negative, so the root max is the true timeline peak.
+        self.trees[d].max[1]
+    }
+
+    fn overloads(&self, d: usize, threshold: f64) -> Vec<(usize, f64)> {
+        let mut out = Vec::new();
+        let tree = &self.trees[d];
+        tree.collect_over(1, 0, tree.size - 1, 0.0, threshold, self.n_slots, &mut out);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense reference backend
+// ---------------------------------------------------------------------------
+
+/// Dense reference profile: the seed's per-(t, d) usage array with its
+/// exact t-major update and scan order. O(span·D) updates, O(T·D) peaks.
+/// Kept as the property-test reference and the benchmark baseline.
+#[derive(Clone, Debug)]
+pub struct DenseProfile {
+    cap: Vec<f64>,
+    n_slots: usize,
+    /// usage[t * dims + d]
+    usage: Vec<f64>,
+}
+
+impl Profile for DenseProfile {
+    fn new(n_slots: usize, cap: Vec<f64>) -> Self {
+        assert!(n_slots > 0, "empty timeline");
+        assert!(!cap.is_empty(), "empty capacity");
+        DenseProfile { usage: vec![0.0; n_slots * cap.len()], cap, n_slots }
+    }
+
+    fn cap(&self) -> &[f64] {
+        &self.cap
+    }
+
+    fn set_cap(&mut self, cap: Vec<f64>) {
+        assert_eq!(cap.len(), self.cap.len(), "capacity dims changed");
+        self.cap = cap;
+    }
+
+    fn range_add(&mut self, d: usize, lo: usize, hi: usize, c: f64) {
+        let dims = self.cap.len();
+        for t in lo..=hi {
+            self.usage[t * dims + d] += c;
+        }
+    }
+
+    fn window_max(&self, d: usize, lo: usize, hi: usize) -> f64 {
+        let dims = self.cap.len();
+        (lo..=hi)
+            .map(|t| self.usage[t * dims + d])
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    fn window_sums(&self, d: usize, lo: usize, hi: usize) -> (f64, f64) {
+        let dims = self.cap.len();
+        let (mut s, mut q) = (0.0f64, 0.0f64);
+        for t in lo..=hi {
+            let v = self.usage[t * dims + d];
+            s += v;
+            q += v * v;
+        }
+        (s, q)
+    }
+
+    fn peak(&self, d: usize) -> f64 {
+        self.window_max(d, 0, self.n_slots - 1)
+    }
+
+    fn overloads(&self, d: usize, threshold: f64) -> Vec<(usize, f64)> {
+        let dims = self.cap.len();
+        (0..self.n_slots)
+            .filter_map(|t| {
+                let v = self.usage[t * dims + d];
+                (v > threshold).then_some((t, v))
+            })
+            .collect()
+    }
+
+    /// Seed-faithful dense feasibility scan: t-major, per-slot compare,
+    /// no peak fast path (computing the peak would itself cost O(T·D)).
+    fn fits(&self, task: &Task) -> bool {
+        let dims = self.cap.len();
+        for t in task.start as usize..=task.end as usize {
+            let base = t * dims;
+            for (d, &c) in self.cap.iter().enumerate() {
+                if self.usage[base + d] + task.demand[d] > c + EPS {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Seed-faithful per-slot cosine loop with remainders clamped at
+    /// zero — the reference the indexed sum/sumsq derivation is
+    /// property-tested against. The two agree exactly on feasible
+    /// profiles (clamping can only trigger on slots loaded past capacity,
+    /// which `fits` bounds to the EPS tolerance).
+    fn similarity(&self, task: &Task) -> f64 {
+        let dims = self.cap.len();
+        let (mut dot, mut nrm_d, mut nrm_r) = (0.0f64, 0.0f64, 0.0f64);
+        for t in task.start as usize..=task.end as usize {
+            let base = t * dims;
+            for (d, &c) in self.cap.iter().enumerate() {
+                let dem = task.demand[d] / c;
+                let rem = (c - self.usage[base + d]).max(0.0) / c;
+                dot += dem * rem;
+                nrm_d += dem * dem;
+                nrm_r += rem * rem;
+            }
+        }
+        if nrm_d <= 0.0 || nrm_r <= 0.0 {
+            return 0.0;
+        }
+        dot / (nrm_d.sqrt() * nrm_r.sqrt())
+    }
+
+    /// Dense add in the seed's t-major order (FP-faithful).
+    fn add_task(&mut self, task: &Task) {
+        let dims = self.cap.len();
+        for t in task.start as usize..=task.end as usize {
+            let base = t * dims;
+            for d in 0..dims {
+                self.usage[base + d] += task.demand[d];
+            }
+        }
+    }
+
+    fn remove_task(&mut self, task: &Task) {
+        let dims = self.cap.len();
+        for t in task.start as usize..=task.end as usize {
+            let base = t * dims;
+            for d in 0..dims {
+                self.usage[base + d] -= task.demand[d];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(demand: Vec<f64>, start: u32, end: u32) -> Task {
+        Task::new(0, demand, start, end)
+    }
+
+    #[test]
+    fn segtree_matches_brute_force() {
+        // deterministic mixed add/query workload against a flat array
+        let n = 37usize; // deliberately not a power of two
+        let mut tree = SegTree::new(n);
+        let mut flat = vec![0.0f64; n];
+        let ops: [(usize, usize, f64); 7] = [
+            (0, 36, 0.25),
+            (3, 11, 1.5),
+            (11, 11, -0.5),
+            (20, 30, 0.125),
+            (0, 5, 2.0),
+            (30, 36, 0.75),
+            (5, 25, -0.125),
+        ];
+        for &(l, r, c) in &ops {
+            tree.add(l, r, c);
+            for t in l..=r {
+                flat[t] += c;
+            }
+            for &(ql, qr) in &[(0usize, n - 1), (2, 9), (10, 20), (25, 36), (7, 7)] {
+                let want_max = flat[ql..=qr].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let want_sum: f64 = flat[ql..=qr].iter().sum();
+                let want_sq: f64 = flat[ql..=qr].iter().map(|v| v * v).sum();
+                assert!((tree.query_max(ql, qr) - want_max).abs() < 1e-12, "max {ql}..={qr}");
+                let (s, q) = tree.query_sums(ql, qr);
+                assert!((s - want_sum).abs() < 1e-9, "sum {ql}..={qr}: {s} vs {want_sum}");
+                assert!((q - want_sq).abs() < 1e-9, "sumsq {ql}..={qr}: {q} vs {want_sq}");
+            }
+        }
+        // root max is the whole-array peak
+        let peak = flat.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        assert!((tree.max[1] - peak).abs() < 1e-12);
+    }
+
+    #[test]
+    fn segtree_overload_enumeration() {
+        let n = 10usize;
+        let mut tree = SegTree::new(n);
+        tree.add(2, 5, 1.0);
+        tree.add(4, 8, 1.0);
+        let mut out = Vec::new();
+        tree.collect_over(1, 0, tree.size - 1, 0.0, 1.5, n, &mut out);
+        let slots: Vec<usize> = out.iter().map(|&(t, _)| t).collect();
+        assert_eq!(slots, vec![4, 5]);
+        for &(_, v) in &out {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+        // threshold above the peak: nothing
+        out.clear();
+        tree.collect_over(1, 0, tree.size - 1, 0.0, 2.5, n, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn profiles_agree_on_scripted_ops() {
+        let cap = vec![1.0, 0.5];
+        let mut idx: LoadProfile = Profile::new(12, cap.clone());
+        let mut dense: DenseProfile = Profile::new(12, cap.clone());
+        let tasks = [
+            task(vec![0.3, 0.1], 0, 7),
+            task(vec![0.4, 0.2], 2, 4),
+            task(vec![0.2, 0.15], 4, 11),
+        ];
+        for t in &tasks {
+            idx.add_task(t);
+            dense.add_task(t);
+        }
+        let probe = task(vec![0.35, 0.2], 3, 6);
+        assert_eq!(idx.fits(&probe), dense.fits(&probe));
+        assert!((idx.similarity(&probe) - dense.similarity(&probe)).abs() < 1e-12);
+        for d in 0..2 {
+            assert!((idx.peak(d) - dense.peak(d)).abs() < 1e-12);
+            assert!((idx.window_max(d, 3, 6) - dense.window_max(d, 3, 6)).abs() < 1e-12);
+            let (s1, q1) = idx.window_sums(d, 2, 9);
+            let (s2, q2) = dense.window_sums(d, 2, 9);
+            assert!((s1 - s2).abs() < 1e-12 && (q1 - q2).abs() < 1e-12);
+        }
+        idx.remove_task(&tasks[1]);
+        dense.remove_task(&tasks[1]);
+        assert!((idx.peak(0) - dense.peak(0)).abs() < 1e-12);
+        assert_eq!(idx.fits(&probe), dense.fits(&probe));
+    }
+
+    #[test]
+    fn fits_fast_path_and_exact_path_agree() {
+        // a profile busy outside the probe window: the fast accept fails
+        // (timeline peak too high) but the windowed check must admit
+        let mut p: LoadProfile = Profile::new(16, vec![1.0]);
+        p.add_task(&task(vec![0.9], 0, 3));
+        let probe = task(vec![0.8], 8, 12);
+        assert!(p.fits(&probe));
+        // and inside the busy window it must reject
+        let clash = task(vec![0.2], 1, 2);
+        assert!(!p.fits(&clash));
+        // fast accept: empty window everywhere
+        let tiny = task(vec![0.05], 0, 15);
+        assert!(p.fits(&tiny));
+    }
+
+    #[test]
+    fn similarity_matches_seed_dense_loop() {
+        // recompute the seed's per-slot cosine loop by hand and compare
+        let cap = vec![1.0, 0.8];
+        let mut p: LoadProfile = Profile::new(8, cap.clone());
+        let held = task(vec![0.5, 0.1], 1, 5);
+        p.add_task(&held);
+        let probe = task(vec![0.2, 0.4], 0, 6);
+        let mut usage = vec![0.0f64; 8 * 2];
+        for t in 1..=5usize {
+            usage[t * 2] += 0.5;
+            usage[t * 2 + 1] += 0.1;
+        }
+        let (mut dot, mut nd, mut nr) = (0.0f64, 0.0f64, 0.0f64);
+        for t in 0..=6usize {
+            for d in 0..2 {
+                let dem = probe.demand[d] / cap[d];
+                let rem = (cap[d] - usage[t * 2 + d]).max(0.0) / cap[d];
+                dot += dem * rem;
+                nd += dem * dem;
+                nr += rem * rem;
+            }
+        }
+        let want = dot / (nd.sqrt() * nr.sqrt());
+        assert!((p.similarity(&probe) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_cap_rescales_feasibility() {
+        let mut p: LoadProfile = Profile::new(4, vec![0.5]);
+        p.add_task(&task(vec![0.4], 0, 3));
+        assert!(!p.fits(&task(vec![0.3], 1, 2)));
+        p.set_cap(vec![1.0]);
+        assert!(p.fits(&task(vec![0.3], 1, 2)));
+        assert!((p.peak_utilization() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_slot_timeline() {
+        let mut p: LoadProfile = Profile::new(1, vec![1.0]);
+        p.add_task(&task(vec![0.6], 0, 0));
+        assert!((p.peak(0) - 0.6).abs() < 1e-12);
+        assert!(p.fits(&task(vec![0.4], 0, 0)));
+        assert!(!p.fits(&task(vec![0.5], 0, 0)));
+        assert_eq!(p.overloads(0, 0.5).len(), 1);
+    }
+}

@@ -1,14 +1,22 @@
-//! Problem model: tasks, node-types, instances, timelines, solutions, costs.
+//! Problem model: tasks, node-types, instances, timelines, solutions,
+//! costs, and the shared load-profile subsystem.
 
 pub mod cost;
 pub mod instance;
+pub mod load;
 pub mod nodetype;
 pub mod solution;
 pub mod task;
 pub mod timeline;
 
+/// Feasibility tolerance shared by placement, local search, the exact
+/// solver and `Solution::verify` — one constant so the solvers and the
+/// verifier can never disagree on what "fits".
+pub const EPS: f64 = 1e-9;
+
 pub use cost::CostModel;
 pub use instance::Instance;
+pub use load::{DenseProfile, LoadProfile, Profile};
 pub use nodetype::NodeType;
 pub use solution::{PlacedNode, Solution, Violation};
 pub use task::Task;

@@ -2,6 +2,8 @@
 //! with an independent feasibility verifier.
 
 use super::instance::Instance;
+use super::load::{LoadProfile, Profile};
+use super::EPS;
 
 /// One purchased node (a replica of a node-type). `purchase_order` is the
 /// sequence number used by first-fit ("node purchased the earliest").
@@ -49,11 +51,29 @@ impl Solution {
         counts
     }
 
-    /// Full independent feasibility check (paper capacity constraint):
-    /// every task placed exactly once, assignment consistent with node task
-    /// lists, and for every node, timeslot and dimension the aggregate
-    /// demand of active tasks is within capacity.
+    /// Full feasibility check (paper capacity constraint): every task
+    /// placed exactly once, assignment consistent with node task lists,
+    /// and for every node, timeslot and dimension the aggregate demand of
+    /// active tasks is within capacity.
+    ///
+    /// Runs on the indexed [`LoadProfile`]: task aggregation is
+    /// O(tasks·D·log T) instead of O(tasks·span·D) and the capacity
+    /// sweep is output-sensitive (only overloaded subtrees are walked);
+    /// profile allocation is still Θ(T·D) per node — with a larger
+    /// constant than the seed's single usage array — so the win shows on
+    /// long timelines with long-spanned tasks, not on tiny instances.
+    /// Note this shares the segment-tree code with the solvers — for a
+    /// check that is *independent* of that code, use
+    /// `verify_with::<DenseProfile>` (the property tests cross-check both
+    /// backends on every scenario they touch).
     pub fn verify(&self, inst: &Instance) -> Result<(), Vec<Violation>> {
+        self.verify_with::<LoadProfile>(inst)
+    }
+
+    /// [`Solution::verify`] against an explicit profile backend. Property
+    /// tests run the dense reference (`DenseProfile`) to cross-check the
+    /// indexed path against the seed's scan.
+    pub fn verify_with<P: Profile>(&self, inst: &Instance) -> Result<(), Vec<Violation>> {
         let mut violations = Vec::new();
         let mut seen = vec![0usize; inst.n_tasks()];
         for (bi, node) in self.nodes.iter().enumerate() {
@@ -74,30 +94,27 @@ impl Solution {
         let dims = inst.dims();
         for (bi, node) in self.nodes.iter().enumerate() {
             let cap = &inst.node_types[node.type_idx].capacity;
-            // load profile over (t, d) for this node
-            let t_len = inst.horizon as usize;
-            let mut load = vec![0.0f64; t_len * dims];
+            let mut profile = P::new(inst.horizon as usize, cap.clone());
             for &u in &node.tasks {
-                let task = &inst.tasks[u];
-                for t in task.start..=task.end {
-                    for d in 0..dims {
-                        load[t as usize * dims + d] += task.demand[d];
-                    }
+                profile.add_task(&inst.tasks[u]);
+            }
+            // collect overloads per dimension, then report them in the
+            // seed's (t, d)-ascending order
+            let mut over: Vec<(usize, usize, f64)> = Vec::new();
+            for d in 0..dims {
+                for (t, load) in profile.overloads(d, cap[d] + EPS) {
+                    over.push((t, d, load));
                 }
             }
-            for t in 0..t_len {
-                for d in 0..dims {
-                    let l = load[t * dims + d];
-                    if l > cap[d] + 1e-9 {
-                        violations.push(Violation::CapacityExceeded {
-                            node: bi,
-                            timeslot: t as u32,
-                            dim: d,
-                            load: l,
-                            cap: cap[d],
-                        });
-                    }
-                }
+            over.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+            for (t, d, load) in over {
+                violations.push(Violation::CapacityExceeded {
+                    node: bi,
+                    timeslot: t as u32,
+                    dim: d,
+                    load,
+                    cap: cap[d],
+                });
             }
         }
         if violations.is_empty() {
@@ -111,20 +128,11 @@ impl Solution {
     pub fn node_peak_utilization(&self, inst: &Instance, node_idx: usize) -> f64 {
         let node = &self.nodes[node_idx];
         let cap = &inst.node_types[node.type_idx].capacity;
-        let dims = inst.dims();
-        let mut best: f64 = 0.0;
-        for t in 0..inst.horizon {
-            for d in 0..dims {
-                let load: f64 = node
-                    .tasks
-                    .iter()
-                    .filter(|&&u| inst.tasks[u].active_at(t))
-                    .map(|&u| inst.tasks[u].demand[d])
-                    .sum();
-                best = best.max(load / cap[d]);
-            }
+        let mut profile = LoadProfile::new(inst.horizon as usize, cap.clone());
+        for &u in &node.tasks {
+            profile.add_task(&inst.tasks[u]);
         }
-        best
+        profile.peak_utilization()
     }
 }
 

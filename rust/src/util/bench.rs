@@ -5,6 +5,7 @@
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 #[derive(Clone, Debug)]
@@ -28,6 +29,18 @@ impl BenchResult {
             self.samples,
             self.iters_per_sample
         )
+    }
+
+    /// Machine-readable form for `BENCH_*.json` artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mean_ns", Json::Num(self.mean_ns)),
+            ("std_ns", Json::Num(self.std_ns)),
+            ("min_ns", Json::Num(self.min_ns)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+        ])
     }
 }
 
@@ -111,6 +124,15 @@ mod tests {
         let r = bench_n("sleepless", 3, || std::thread::sleep(Duration::from_micros(50)));
         assert!(r.mean_ns >= 50_000.0 * 0.5);
         assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn to_json_has_fields() {
+        let r = bench("json-probe", Duration::from_millis(5), || 2u64 * 3);
+        let j = r.to_json();
+        assert_eq!(j.get("name").as_str(), Some("json-probe"));
+        assert!(j.get("mean_ns").as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("samples").as_usize(), Some(10));
     }
 
     #[test]

@@ -7,11 +7,11 @@ use tlrs::algo::algorithms::{penalty_map_best, Algorithm};
 use tlrs::algo::lowerbound::lower_bound;
 use tlrs::algo::penalty_map::{map_tasks, min_penalties, MappingPolicy};
 use tlrs::algo::placement::FitPolicy;
-use tlrs::algo::twophase::solve_with_mapping;
+use tlrs::algo::twophase::{solve_with_mapping, solve_with_mapping_ref};
 use tlrs::io::synth::{generate, CostKind, SynthParams};
 use tlrs::lp::solver::NativePdhgSolver;
 use tlrs::lp::{dual, scaling, MappingLp};
-use tlrs::model::{trim, Instance};
+use tlrs::model::{trim, DenseProfile, Instance, LoadProfile, Profile, Task};
 use tlrs::util::rng::Rng;
 
 /// Random instance parameters spanning the interesting regimes.
@@ -197,6 +197,180 @@ fn pdhg_certified_bound_valid_even_unconverged() {
             "seed {seed}: starved lb {lb} exceeds optimum {}",
             exact.objective
         );
+    }
+}
+
+#[test]
+fn indexed_profile_matches_dense_reference() {
+    // randomized add/remove/probe workloads: the segment-tree profile and
+    // the seed's dense array must agree on every query the solvers issue
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed.wrapping_mul(0xA24B_AED7).wrapping_add(11));
+        let t_len = 1 + rng.below(120) as usize;
+        let dims = 1 + rng.below(4) as usize;
+        let cap: Vec<f64> = (0..dims).map(|_| rng.uniform(0.3, 1.0)).collect();
+        let mut idx: LoadProfile = Profile::new(t_len, cap.clone());
+        let mut dense: DenseProfile = Profile::new(t_len, cap.clone());
+        let mut live: Vec<Task> = Vec::new();
+        for step in 0..160u64 {
+            let op = rng.below(4);
+            if live.is_empty() || op == 0 {
+                let s = rng.below(t_len as u64) as u32;
+                let e = s + rng.below(t_len as u64 - s as u64) as u32;
+                let dem: Vec<f64> = (0..dims).map(|_| rng.uniform(0.01, 0.4)).collect();
+                let task = Task::new(step, dem, s, e);
+                // mirror the solvers' invariant: profiles are fits-guarded,
+                // so the clamped (dense/seed) and unclamped (indexed)
+                // similarity computations stay comparable
+                if dense.fits(&task) {
+                    idx.add_task(&task);
+                    dense.add_task(&task);
+                    live.push(task);
+                }
+            } else if op == 1 {
+                let k = rng.below(live.len() as u64) as usize;
+                let task = live.swap_remove(k);
+                idx.remove_task(&task);
+                dense.remove_task(&task);
+            } else {
+                let s = rng.below(t_len as u64) as u32;
+                let e = s + rng.below(t_len as u64 - s as u64) as u32;
+                let dem: Vec<f64> = (0..dims).map(|_| rng.uniform(0.01, 0.6)).collect();
+                let probe = Task::new(1_000_000 + step, dem, s, e);
+                assert_eq!(
+                    idx.fits(&probe),
+                    dense.fits(&probe),
+                    "seed {seed} step {step}: fits diverges"
+                );
+                let (si, sd) = (idx.similarity(&probe), dense.similarity(&probe));
+                assert!(
+                    (si - sd).abs() <= 1e-9 * (1.0 + sd.abs()),
+                    "seed {seed} step {step}: similarity {si} vs {sd}"
+                );
+                let (lo, hi) = (s as usize, e as usize);
+                for d in 0..dims {
+                    let (ma, mb) = (idx.window_max(d, lo, hi), dense.window_max(d, lo, hi));
+                    assert!((ma - mb).abs() <= 1e-9, "seed {seed} step {step} dim {d}: max");
+                    let (s1, q1) = idx.window_sums(d, lo, hi);
+                    let (s2, q2) = dense.window_sums(d, lo, hi);
+                    assert!(
+                        (s1 - s2).abs() <= 1e-9 * (1.0 + s2.abs()),
+                        "seed {seed} step {step} dim {d}: sum {s1} vs {s2}"
+                    );
+                    assert!(
+                        (q1 - q2).abs() <= 1e-9 * (1.0 + q2.abs()),
+                        "seed {seed} step {step} dim {d}: sumsq {q1} vs {q2}"
+                    );
+                    assert!(
+                        (idx.peak(d) - dense.peak(d)).abs() <= 1e-9,
+                        "seed {seed} step {step} dim {d}: peak"
+                    );
+                }
+                // overload enumeration agrees slot-for-slot
+                let thr = rng.uniform(0.0, 1.5);
+                for d in 0..dims {
+                    let (a, b) = (idx.overloads(d, thr), dense.overloads(d, thr));
+                    assert_eq!(a.len(), b.len(), "seed {seed} step {step} dim {d}: overloads");
+                    for (&(ta, va), &(tb, vb)) in a.iter().zip(&b) {
+                        assert_eq!(ta, tb, "seed {seed} step {step} dim {d}");
+                        assert!((va - vb).abs() <= 1e-9, "seed {seed} step {step} dim {d}");
+                    }
+                }
+            }
+        }
+        assert!(
+            (idx.peak_utilization() - dense.peak_utilization()).abs() <= 1e-9,
+            "seed {seed}: peak_utilization"
+        );
+    }
+}
+
+#[test]
+fn indexed_placement_matches_dense_reference_costs() {
+    // the indexed core is an exact optimization: solver outputs must
+    // coincide with the seed's dense path, not just stay feasible
+    for seed in 0..20u64 {
+        let inst = random_instance(seed + 6000);
+        let tr = trim(&inst).instance;
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+        for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+            let indexed = solve_with_mapping(&tr, &mapping, policy, false);
+            let dense = solve_with_mapping_ref(&tr, &mapping, policy);
+            assert!(indexed.verify(&tr).is_ok(), "seed {seed} {policy:?}");
+            // the dense verifier is independent of the segment-tree code
+            // the solver ran on — both backends must pass
+            assert!(
+                indexed.verify_with::<DenseProfile>(&tr).is_ok(),
+                "seed {seed} {policy:?}: dense verify"
+            );
+            assert!(dense.verify(&tr).is_ok(), "seed {seed} {policy:?}");
+            assert_eq!(
+                indexed.nodes.len(),
+                dense.nodes.len(),
+                "seed {seed} {policy:?}: node count"
+            );
+            assert!(
+                (indexed.cost(&tr) - dense.cost(&tr)).abs() < 1e-12,
+                "seed {seed} {policy:?}: cost {} vs {}",
+                indexed.cost(&tr),
+                dense.cost(&tr)
+            );
+            // first-fit decisions carry an EPS-wide margin, so the two
+            // backends must agree placement-for-placement; similarity-fit
+            // argmaxes can sit within an ulp on near-ties, so for it only
+            // the node count and cost equality above are asserted
+            if policy == FitPolicy::FirstFit {
+                for (a, b) in indexed.nodes.iter().zip(&dense.nodes) {
+                    assert_eq!(a.type_idx, b.type_idx, "seed {seed} {policy:?}");
+                    assert_eq!(a.tasks, b.tasks, "seed {seed} {policy:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_solvers_clean_on_synth_and_gct_scenarios() {
+    fn check_all_solvers(tr: &Instance, label: &str) {
+        let mapping = map_tasks(tr, MappingPolicy::HAvg);
+        for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+            for fill in [false, true] {
+                let sol = solve_with_mapping(tr, &mapping, policy, fill);
+                assert!(sol.verify(tr).is_ok(), "{label} {policy:?} fill={fill}");
+                // indexed and dense verifiers must agree
+                assert!(
+                    sol.verify_with::<DenseProfile>(tr).is_ok(),
+                    "{label} {policy:?} fill={fill}: dense verify"
+                );
+            }
+            let sol = tlrs::algo::online::solve_online(tr, policy);
+            assert!(sol.verify(tr).is_ok(), "{label} online {policy:?}");
+            assert!(
+                sol.verify_with::<DenseProfile>(tr).is_ok(),
+                "{label} online {policy:?}: dense verify"
+            );
+        }
+        let mut sol = solve_with_mapping(tr, &mapping, FitPolicy::FirstFit, false);
+        let before = sol.cost(tr);
+        tlrs::algo::local_search::improve(tr, &mut sol, 8);
+        assert!(sol.verify(tr).is_ok(), "{label} local-search");
+        assert!(
+            sol.verify_with::<DenseProfile>(tr).is_ok(),
+            "{label} local-search: dense verify"
+        );
+        assert!(sol.cost(tr) <= before + 1e-9, "{label} local-search cost");
+    }
+
+    for seed in 0..5u64 {
+        let inst = generate(&SynthParams { n: 160, m: 6, ..Default::default() }, seed + 70);
+        let tr = trim(&inst).instance;
+        check_all_solvers(&tr, &format!("synth seed {seed}"));
+    }
+    let trace = tlrs::io::gct_like::generate_trace(1200, 5);
+    for seed in 0..2u64 {
+        let gct = trace.sample_scenario(300, 9, seed + 1);
+        let tr = trim(&gct).instance;
+        check_all_solvers(&tr, &format!("gct seed {seed}"));
     }
 }
 

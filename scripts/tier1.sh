@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite + placement-bench smoke.
+#
+# The bench smoke runs in quick mode (TLRS_BENCH_QUICK=1) under a time
+# budget and leaves rust/BENCH_placement.json behind so the placement
+# perf trajectory (indexed vs dense, GCT speedup) is tracked per PR.
+#
+#   TIER1_BENCH_TIMEOUT   seconds allowed for the bench smoke (default 300)
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+echo "== tier1: placement bench smoke =="
+TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+    cargo bench --bench placement
+
+echo "== tier1: BENCH_placement.json =="
+test -f BENCH_placement.json
+head -c 400 BENCH_placement.json
+echo
+echo "== tier1 OK =="
