@@ -6,8 +6,7 @@
 //!
 //! Run with: cargo run --release --example batch_windows
 
-use tlrs::algo::algorithms::lp_map_best;
-use tlrs::algo::local_search;
+use tlrs::algo::pipeline::{preset, CrossFill, LocalSearch, Lp, Pipeline};
 use tlrs::algo::placement::FitPolicy;
 use tlrs::io::patterns::{mixed_workload, WEEK_HOURS};
 use tlrs::lp::solver::NativePdhgSolver;
@@ -33,18 +32,24 @@ fn main() -> anyhow::Result<()> {
     println!("timeline trimmed to {} slots", tr.horizon);
 
     // 2. rightsize
+    // One pipeline: LP mapping, cross-fill, then local search refining
+    // every candidate — the combo no pre-pipeline preset could reach.
     let solver = NativePdhgSolver::default();
-    let rep = lp_map_best(&tr, &solver, true)?;
-    let mut plan = rep.solution.clone();
-    let stats = local_search::improve(&tr, &mut plan, 8);
+    let rep = Pipeline::new()
+        .map(Lp)
+        .refine(CrossFill)
+        .refine(LocalSearch::default())
+        .label("lp+fill+ls")
+        .run(&tr, &solver)?;
+    let plan = &rep.solution;
     plan.verify(&tr).expect("feasible");
     println!(
-        "\nplan: ${:.2} -> ${:.2} after local search ({} drained, {} downgraded); LB ${:.2}",
-        stats.cost_before,
-        stats.cost_after,
-        stats.nodes_drained,
-        stats.nodes_downgraded,
-        rep.certified_lb
+        "\nplan: ${:.2} via {} ({} candidates; stages: {}); LB ${:.2}",
+        rep.cost,
+        rep.label,
+        rep.candidates,
+        rep.stage_summary(),
+        rep.certified_lb.expect("LP pipelines certify a bound")
     );
     for (b, c) in plan.nodes_per_type(&tr).iter().enumerate() {
         if *c > 0 {
@@ -69,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     surprise = joint.tasks.clone();
 
     // re-plan cluster on the joint trimmed timeline for a fair replay
-    let joint_rep = lp_map_best(&joint, &solver, true)?;
+    let joint_rep = preset("lp-map-f").unwrap().run(&joint, &solver)?;
     let fixed = autoscale::simulate(&joint, &rep_plan_on(&joint, &joint_rep.solution), &surprise, FitPolicy::FirstFit, false);
     let hybrid = autoscale::simulate(&joint, &plan_shell(&joint, &plan), &surprise, FitPolicy::FirstFit, true);
     println!(

@@ -59,19 +59,21 @@ fn main() -> anyhow::Result<()> {
             let row = planner.evaluate(&inst)?;
             println!(
                 "n={n:<5} m={m:<5} {seed:>6} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10}",
-                row.normalized[0],
-                row.normalized[1],
-                row.normalized[2],
-                row.normalized[3],
+                row.algos[0].normalized,
+                row.algos[1].normalized,
+                row.algos[2].normalized,
+                row.algos[3].normalized,
                 row.backend_used
             );
-            norm_pen.push(row.normalized[0]);
-            norm_lpf.push(row.normalized[3]);
+            norm_pen.push(row.get("PenaltyMap").unwrap().normalized);
+            norm_lpf.push(row.get("LP-map-F").unwrap().normalized);
 
             // independent validation: verify + event replay of LP-map-F
             let tr = trim(&inst).instance;
             let (solver, _) = planner.solver_for(&tr);
-            let rep = tlrs::algo::algorithms::lp_map_best(&tr, solver.as_ref(), true)?;
+            let rep = tlrs::algo::pipeline::preset("lp-map-f")
+                .unwrap()
+                .run(&tr, solver.as_ref())?;
             rep.solution.verify(&tr).expect("feasible");
             let sim = replay(&tr, &rep.solution);
             anyhow::ensure!(sim.overloads == 0, "replay found overloads");

@@ -9,7 +9,7 @@
 //!
 //! Run with: cargo run --release --example edge_cloud_sizing
 
-use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+use tlrs::algo::pipeline::{preset, Portfolio};
 use tlrs::io::pricing;
 use tlrs::io::synth::{generate, CostKind, SynthParams};
 use tlrs::lp::solver::NativePdhgSolver;
@@ -45,8 +45,14 @@ fn main() -> anyhow::Result<()> {
         let inst = generate(&params, 11);
         let tr = trim(&inst).instance;
 
-        let pen = penalty_map_best(&tr, true);
-        let lp = lp_map_best(&tr, &solver, true)?;
+        // race both filling presets in parallel on one shared LP solve
+        let race = Portfolio::new()
+            .add(preset("penalty-map-f").unwrap())
+            .add(preset("lp-map-f").unwrap())
+            .run(&tr, &solver)?;
+        let pen = race.get("PenaltyMap-F").unwrap();
+        let lp = race.get("LP-map-F").unwrap();
+        let lb = lp.certified_lb.expect("LP pipelines certify a bound");
         lp.solution.verify(&tr).expect("feasible");
 
         let mix: Vec<String> = lp
@@ -60,10 +66,10 @@ fn main() -> anyhow::Result<()> {
         println!(
             "{:<6} {:>13.2}$ {:>13.2}$ {:>11.2}$ {:>10.3}  {}",
             e,
-            pen.cost(&tr),
-            lp.solution.cost(&tr),
-            lp.certified_lb,
-            lp.solution.cost(&tr) / lp.certified_lb,
+            pen.cost,
+            lp.cost,
+            lb,
+            lp.cost / lb,
             mix.join(" ")
         );
     }

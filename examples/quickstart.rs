@@ -1,9 +1,16 @@
-//! Quickstart: rightsizing a tiny cluster — the paper's Figure 1 instance.
+//! Quickstart: rightsizing a tiny cluster — the paper's Figure 1 instance
+//! — through the composable pipeline API.
+//!
+//! A solve is a pipeline: `.map(..)` picks the task -> node-type mapping
+//! strategy, `.fit(..)` the within-type placement policy (omit it to race
+//! both), `.refine(..)` appends post-passes (cross-fill, local search).
+//! The four paper algorithms are named presets over the same builder, and
+//! a `Portfolio` races pipelines in parallel on one shared LP solve.
 //!
 //! Run with: cargo run --release --example quickstart
 
-use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
 use tlrs::algo::exact;
+use tlrs::algo::pipeline::{preset, CrossFill, LocalSearch, Lp, Penalty, Pipeline, Portfolio};
 use tlrs::harness::scenarios::figure1_instance;
 use tlrs::lp::solver::NativePdhgSolver;
 use tlrs::model::trim;
@@ -28,23 +35,47 @@ fn main() -> anyhow::Result<()> {
     let trimmed = trim(&inst);
     println!("\ntimeline trimmed: T={} -> T={}", inst.horizon, trimmed.instance.horizon);
     let tr = trimmed.instance;
-
-    // Step 2: the baseline PenaltyMap and the LP-based mapping.
     let solver = NativePdhgSolver::default();
-    let pen = penalty_map_best(&tr, false);
-    let lp = lp_map_best(&tr, &solver, true)?;
-    println!("\nPenaltyMap  cost: ${:.2}", pen.cost(&tr));
+
+    // Step 2: build pipelines. The baseline penalty mapping...
+    let pen = Pipeline::new().map(Penalty::both()).run(&tr, &solver)?;
+    println!("\nPenaltyMap  cost: ${:.2}  (stages: {})", pen.cost, pen.stage_summary());
+
+    // ...and the LP mapping with cross-fill — the same pipeline the
+    // "lp-map-f" preset names.
+    let lp = Pipeline::new()
+        .map(Lp)
+        .refine(CrossFill)
+        .label("LP-map-F")
+        .run(&tr, &solver)?;
     println!(
         "LP-map-F    cost: ${:.2}  (LP lower bound ${:.2})",
-        lp.solution.cost(&tr),
-        lp.certified_lb
+        lp.cost,
+        lp.certified_lb.expect("LP pipelines certify a bound")
     );
 
-    // Step 3: check against the exact optimum (tiny instance).
+    // Step 3: race a portfolio — all four presets plus a combo no preset
+    // reaches (LP + fill + local search) — sharing ONE LP solve.
+    let mut portfolio = Portfolio::presets();
+    portfolio = portfolio.add(
+        Pipeline::new()
+            .map(Lp)
+            .refine(CrossFill)
+            .refine(LocalSearch::default())
+            .label("lp+fill+ls"),
+    );
+    let race = portfolio.run(&tr, &solver)?;
+    println!("\nportfolio race (one LP solve, {} pipelines):", race.reports.len());
+    for (i, r) in race.reports.iter().enumerate() {
+        let marker = if i == race.winner { "  <- winner" } else { "" };
+        println!("  {:<14} ${:.2}{marker}", r.label, r.cost);
+    }
+
+    // Step 4: check against the exact optimum (tiny instance).
     let opt = exact::optimal(&tr);
     println!("exact optimum   : ${:.2}", opt.cost(&tr));
 
-    // Step 4: what ignoring the timeline would cost.
+    // Step 5: what ignoring the timeline would cost.
     let collapsed = inst.collapse_timeline();
     let opt_flat = exact::optimal(&collapsed);
     println!(
@@ -52,8 +83,10 @@ fn main() -> anyhow::Result<()> {
         opt_flat.cost(&collapsed)
     );
 
-    // Every solution is independently verified.
-    lp.solution.verify(&tr).expect("feasible");
+    // Every solution is independently verified; presets are also
+    // reachable by name: preset("lp-map-f") == the pipeline above.
+    race.best().solution.verify(&tr).expect("feasible");
+    assert!(preset("lp-map-f").is_some());
     println!("\nsolution verified: every (node, timeslot, dimension) within capacity");
     Ok(())
 }

@@ -9,7 +9,7 @@
 //!
 //! Run with: cargo run --release --example stock_market_week
 
-use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+use tlrs::algo::pipeline::{preset, Portfolio};
 use tlrs::harness::scenarios::figure2_tasks;
 use tlrs::lp::solver::NativePdhgSolver;
 use tlrs::model::{trim, Instance, NodeType, Task};
@@ -52,15 +52,21 @@ fn main() -> anyhow::Result<()> {
     let tr = trim(&inst).instance;
     println!("trimmed timeline: {} -> {} slots", inst.horizon, tr.horizon);
 
+    // Race the two filling presets as a portfolio (one LP solve).
     let solver = NativePdhgSolver::default();
-    let pen = penalty_map_best(&tr, true);
-    let lp = lp_map_best(&tr, &solver, true)?;
-    println!("\nPenaltyMap-F cluster cost : ${:.2}", pen.cost(&tr));
+    let race = Portfolio::new()
+        .add(preset("penalty-map-f").unwrap())
+        .add(preset("lp-map-f").unwrap())
+        .run(&tr, &solver)?;
+    let pen = race.get("PenaltyMap-F").unwrap();
+    let lp = race.get("LP-map-F").unwrap();
+    let lb = lp.certified_lb.expect("LP pipelines certify a bound");
+    println!("\nPenaltyMap-F cluster cost : ${:.2}", pen.cost);
     println!(
         "LP-map-F     cluster cost : ${:.2}   (lower bound ${:.2}, normalized {:.3})",
-        lp.solution.cost(&tr),
-        lp.certified_lb,
-        lp.solution.cost(&tr) / lp.certified_lb
+        lp.cost,
+        lb,
+        lp.cost / lb
     );
     let per_type = lp.solution.nodes_per_type(&tr);
     for (b, count) in per_type.iter().enumerate() {
@@ -81,11 +87,11 @@ fn main() -> anyhow::Result<()> {
     // Contrast with a plan that treats every task as always-on.
     let flat = inst.collapse_timeline();
     let flat_tr = trim(&flat).instance;
-    let flat_lp = lp_map_best(&flat_tr, &solver, true)?;
+    let flat_lp = preset("lp-map-f").unwrap().run(&flat_tr, &solver)?;
     println!(
         "\nignoring the timeline, the same workload plans at ${:.2} ({:.2}x)",
-        flat_lp.solution.cost(&flat_tr),
-        flat_lp.solution.cost(&flat_tr) / lp.solution.cost(&tr)
+        flat_lp.cost,
+        flat_lp.cost / lp.cost
     );
     Ok(())
 }

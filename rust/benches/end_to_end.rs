@@ -1,51 +1,119 @@
-//! End-to-end benchmarks: full planner evaluations (all four algorithms +
-//! lower bound) and single planning-service requests — the numbers behind
+//! End-to-end benchmarks: full planner evaluations (preset portfolio +
+//! lower bound), single planning-service requests, and the parallel
+//! portfolio race vs the sequential best-of-4 fold — the numbers behind
 //! EXPERIMENTS.md section Perf and the section VI-E reproduction.
+//!
+//! Writes `BENCH_pipeline.json` (same schema conventions as
+//! `BENCH_placement.json`) so the portfolio-racing speedup is tracked
+//! PR over PR. `TLRS_BENCH_QUICK=1` shrinks the workload for smoke runs.
 
+use tlrs::algo::pipeline::Portfolio;
 use tlrs::coordinator::config::Backend;
 use tlrs::coordinator::planner::Planner;
 use tlrs::coordinator::service::handle_request;
 use tlrs::io::files;
 use tlrs::io::synth::{generate, SynthParams};
-use tlrs::util::bench::bench_n;
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::trim;
+use tlrs::util::bench::{bench_n, fmt_ns, BenchResult};
 use tlrs::util::json::Json;
 
 fn main() {
     println!("== end-to-end benches ==");
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let samples = if quick { 2 } else { 3 };
+    let mut results: Vec<BenchResult> = Vec::new();
 
     let planner = Planner::new(Backend::Auto).unwrap();
 
     // paper-default synthetic scenario
-    let inst = generate(&SynthParams::default(), 1);
-    bench_n("planner_evaluate/synth n=1000,m=10,D=5", 3, || {
-        planner.evaluate(&inst).unwrap()
-    });
+    let n_synth = if quick { 400 } else { 1000 };
+    let inst = generate(&SynthParams { n: n_synth, ..Default::default() }, 1);
+    results.push(bench_n(
+        &format!("planner_evaluate/synth n={n_synth},m=10,D=5"),
+        samples,
+        || planner.evaluate(&inst).unwrap(),
+    ));
 
     // GCT-like scenario (long timeline -> native backend)
+    let n_gct = if quick { 400 } else { 1000 };
     let trace = tlrs::io::gct_like::generate_trace(4000, 5);
-    let mut gct = trace.sample_scenario(1000, 10, 1);
+    let mut gct = trace.sample_scenario(n_gct, 10, 1);
     tlrs::model::CostModel::homogeneous(gct.dims()).apply(&mut gct.node_types);
-    bench_n("planner_evaluate/gct n=1000,m=10", 3, || {
+    results.push(bench_n(&format!("planner_evaluate/gct n={n_gct},m=10"), samples, || {
         planner.evaluate(&gct).unwrap()
-    });
+    }));
+
+    // parallel portfolio race vs sequential best-of-4 fold: identical
+    // work (one shared LP solve + four preset placements) with and
+    // without the scoped-thread race.
+    let solver = NativePdhgSolver::default();
+    let tr = trim(&inst).instance;
+    let parallel = bench_n(
+        &format!("portfolio/parallel-race n={n_synth}"),
+        samples,
+        || Portfolio::presets().run(&tr, &solver).unwrap(),
+    );
+    let sequential = bench_n(
+        &format!("portfolio/sequential-fold n={n_synth}"),
+        samples,
+        || Portfolio::presets().run_sequential(&tr, &solver).unwrap(),
+    );
+    let gct_tr = trim(&gct).instance;
+    let parallel_gct = bench_n(
+        &format!("portfolio/parallel-race gct n={n_gct}"),
+        samples,
+        || Portfolio::presets().run(&gct_tr, &solver).unwrap(),
+    );
+    let sequential_gct = bench_n(
+        &format!("portfolio/sequential-fold gct n={n_gct}"),
+        samples,
+        || Portfolio::presets().run_sequential(&gct_tr, &solver).unwrap(),
+    );
+    let speedup = sequential.mean_ns / parallel.mean_ns;
+    let speedup_gct = sequential_gct.mean_ns / parallel_gct.mean_ns;
+    println!(
+        "portfolio race speedup: {speedup:.2}x synth, {speedup_gct:.2}x gct \
+         (sequential {} -> parallel {})",
+        fmt_ns(sequential.mean_ns),
+        fmt_ns(parallel.mean_ns)
+    );
 
     // single service request (lp-map-f), via the same codepath as TCP
     let small = generate(&SynthParams { n: 200, m: 5, ..Default::default() }, 2);
-    let req = Json::obj(vec![
-        ("instance", files::instance_to_json(&small)),
-        ("algorithm", Json::Str("lp-map-f".into())),
-    ])
-    .to_string();
-    bench_n("service_request/lp-map-f n=200", 5, || handle_request(&planner, &req));
-
-    bench_n("service_request/penalty-map-f n=200", 5, || {
+    for algo in ["lp-map-f", "penalty-map-f", "lp+fill+ls"] {
         let req = Json::obj(vec![
             ("instance", files::instance_to_json(&small)),
-            ("algorithm", Json::Str("penalty-map-f".into())),
+            ("algorithm", Json::Str(algo.into())),
         ])
         .to_string();
-        handle_request(&planner, &req)
-    });
+        results.push(bench_n(&format!("service_request/{algo} n=200"), 5, || {
+            handle_request(&planner, &req)
+        }));
+    }
+
+    results.push(parallel);
+    results.push(sequential);
+    results.push(parallel_gct);
+    results.push(sequential_gct);
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("pipeline".into())),
+        ("quick", Json::Bool(quick)),
+        ("synth_n", Json::Num(n_synth as f64)),
+        ("gct_n", Json::Num(n_gct as f64)),
+        ("portfolio_race_speedup", Json::Num(speedup)),
+        ("portfolio_race_speedup_gct", Json::Num(speedup_gct)),
+        (
+            "results",
+            Json::Arr(results.iter().map(BenchResult::to_json).collect()),
+        ),
+    ]);
+    let path = "BENCH_pipeline.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_pipeline.json");
+    println!("wrote {path}");
 
     println!("\n--- planner metrics ---\n{}", planner.metrics.report());
 }

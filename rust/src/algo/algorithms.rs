@@ -2,6 +2,11 @@
 //! reporting convention (section VI-A): PenaltyMap and PenaltyMap-F take
 //! the minimum over {h_avg, h_max} x {first-fit, similarity-fit};
 //! LP-map and LP-map-F over the two fitting policies.
+//!
+//! [`Algorithm`] is a thin shim over the named pipeline presets in
+//! [`super::pipeline`]; the free functions below are the original direct
+//! code paths, kept as the reference implementations the preset
+//! property tests (`tests/prop_pipeline.rs`) pin bit-identity against.
 
 use anyhow::Result;
 
@@ -39,16 +44,32 @@ impl Algorithm {
     pub fn all() -> [Algorithm; 4] {
         [Algorithm::PenaltyMap, Algorithm::PenaltyMapF, Algorithm::LpMap, Algorithm::LpMapF]
     }
+
+    /// Name of the pipeline preset this algorithm is a shim over.
+    pub fn preset_name(&self) -> &'static str {
+        match self {
+            Algorithm::PenaltyMap => "penalty-map",
+            Algorithm::PenaltyMapF => "penalty-map-f",
+            Algorithm::LpMap => "lp-map",
+            Algorithm::LpMapF => "lp-map-f",
+        }
+    }
+
+    /// The equivalent composable pipeline (see [`super::pipeline`]).
+    pub fn pipeline(&self) -> super::pipeline::Pipeline {
+        super::pipeline::preset(self.preset_name()).expect("preset exists")
+    }
 }
 
 const FITS: [FitPolicy; 2] = [FitPolicy::FirstFit, FitPolicy::SimilarityFit];
 const MAPS: [MappingPolicy; 2] = [MappingPolicy::HAvg, MappingPolicy::HMax];
 
-fn best_solution(inst: &Instance, candidates: Vec<Solution>) -> Solution {
-    candidates
-        .into_iter()
-        .min_by(|a, b| a.cost(inst).partial_cmp(&b.cost(inst)).unwrap())
-        .expect("at least one candidate")
+/// First-wins minimum: the earliest candidate with the (NaN-safe) least
+/// cost — the same shared selection rule the pipeline layer uses.
+fn best_solution(inst: &Instance, mut candidates: Vec<Solution>) -> Solution {
+    let i = crate::util::stats::argmin_f64(candidates.iter().map(|s| s.cost(inst)))
+        .expect("at least one candidate");
+    candidates.swap_remove(i)
 }
 
 /// PenaltyMap / PenaltyMap-F: min over four policy combinations.
@@ -98,23 +119,25 @@ pub fn lp_map_best(
 }
 
 /// Dispatch by algorithm enum; returns (solution, optional LP report).
+/// A thin shim over the pipeline presets: the enum names a pipeline,
+/// the pipeline does the work.
 pub fn run(
     inst: &Instance,
     algo: Algorithm,
     solver: &dyn MappingSolver,
 ) -> Result<(Solution, Option<LpMapReport>)> {
-    Ok(match algo {
-        Algorithm::PenaltyMap => (penalty_map_best(inst, false), None),
-        Algorithm::PenaltyMapF => (penalty_map_best(inst, true), None),
-        Algorithm::LpMap => {
-            let rep = lp_map_best(inst, solver, false)?;
-            (rep.solution.clone(), Some(rep))
-        }
-        Algorithm::LpMapF => {
-            let rep = lp_map_best(inst, solver, true)?;
-            (rep.solution.clone(), Some(rep))
-        }
-    })
+    let rep = algo.pipeline().run(inst, solver)?;
+    let (solution, certified_lb, lp) = (rep.solution, rep.certified_lb, rep.lp);
+    let lp_report = lp.map(|stats| LpMapReport {
+        solution: solution.clone(),
+        mapping: stats.mapping,
+        lp_objective: stats.objective,
+        certified_lb: certified_lb.expect("LP pipelines certify a bound"),
+        x_max: stats.x_max,
+        solver_iterations: stats.iterations,
+        solver_converged: stats.converged,
+    });
+    Ok((solution, lp_report))
 }
 
 #[cfg(test)]

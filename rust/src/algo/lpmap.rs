@@ -81,19 +81,21 @@ fn top_k_mass_mappings(inst: &Instance, x: &[f64]) -> Vec<Vec<usize>> {
     let mut mass: Vec<(usize, f64)> = (0..m)
         .map(|b| (b, (0..n).map(|u| x[u * m + b]).sum()))
         .collect();
-    mass.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    mass.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
     let mut out = Vec::new();
     for k in 1..=3usize.min(m) {
         let allowed: Vec<usize> = mass[..k].iter().map(|&(b, _)| b).collect();
         let mapping: Vec<usize> = (0..n)
             .map(|u| {
+                // NaN-safe; ties keep max_by's last-wins over the
+                // mass-ordered candidate list (the seed's tie behavior —
+                // an index tie-break here would pick a different type
+                // whenever x-values tie, e.g. at 0.0)
                 let pick = allowed
                     .iter()
                     .copied()
                     .filter(|&b| inst.node_types[b].admits(&inst.tasks[u].demand))
-                    .max_by(|&a, &b| {
-                        x[u * m + a].partial_cmp(&x[u * m + b]).unwrap()
-                    });
+                    .max_by(|&a, &b| x[u * m + a].total_cmp(&x[u * m + b]));
                 match pick {
                     Some(b) => b,
                     None => {
@@ -103,7 +105,7 @@ fn top_k_mass_mappings(inst: &Instance, x: &[f64]) -> Vec<Vec<usize>> {
                                 inst.node_types[b].admits(&inst.tasks[u].demand)
                             })
                             .max_by(|&a, &b| {
-                                x[u * m + a].partial_cmp(&x[u * m + b]).unwrap()
+                                x[u * m + a].total_cmp(&x[u * m + b]).then(a.cmp(&b))
                             })
                             .expect("task fits some type")
                     }

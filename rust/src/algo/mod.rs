@@ -9,9 +9,11 @@ pub mod lowerbound;
 pub mod lpmap;
 pub mod online;
 pub mod penalty_map;
+pub mod pipeline;
 pub mod placement;
 pub mod segregate;
 pub mod twophase;
 
 pub use algorithms::Algorithm;
+pub use pipeline::{Pipeline, Portfolio, SolveReport};
 pub use placement::FitPolicy;

@@ -1,0 +1,978 @@
+//! Composable solver pipelines: the contribution layer as an *open*
+//! strategy space instead of a closed four-variant enum.
+//!
+//! Every paper algorithm is an instance of one shape — map tasks to
+//! node-types, place per type, refine — so the pieces are first-class:
+//!
+//!   * [`MappingStrategy`] produces candidate task → node-type mappings
+//!     (penalty argmin over `h_avg`/`h_max`, the LP rounding with its
+//!     alternates, or an [`Oracle`] escape hatch for custom mappings),
+//!   * [`FitPolicy`] picks the node within a type (shared with
+//!     `placement.rs`),
+//!   * [`RefinePass`] post-processes a placed candidate ([`CrossFill`]
+//!     re-places with cross-node-type filling, [`LocalSearch`] runs the
+//!     drain/downgrade loop no preset could previously reach),
+//!   * [`Pipeline`] chains them (`Pipeline::new().map(..).fit(..)
+//!     .refine(..)`) and evaluates every (mapping × fit) candidate,
+//!     keeping the cheapest with a deterministic first-wins tie-break,
+//!   * [`Portfolio`] races pipelines on scoped threads, sharing one LP
+//!     outcome across every LP-based pipeline (one solve, N placements —
+//!     the same contract `lp_place_best` had) and picking the min-cost
+//!     winner with an index tie-break, so the result is independent of
+//!     thread scheduling.
+//!
+//! The four paper algorithms are named [`preset`]s; [`parse`] accepts
+//! both preset names and a spec grammar (`lp+fill+ls`, `penalty:ff`,
+//! ...), which is what the CLI `--algo` flag and the planning service
+//! speak. Preset outputs are bit-identical to the pre-pipeline
+//! `Algorithm::run` paths — `tests/prop_pipeline.rs` pins that down —
+//! because candidate enumeration preserves each seed path's loop order
+//! and every selection uses the same strict-less / first-wins rule.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::lp::solver::MappingSolver;
+use crate::model::{Instance, Solution};
+
+use super::local_search;
+use super::lpmap::{solve_lp_mapping, LpOutcome};
+use super::penalty_map::{map_tasks, MappingPolicy};
+use super::placement::FitPolicy;
+use super::twophase::solve_with_mapping;
+
+/// Order in which (mapping × fit) candidates are enumerated. Selection
+/// keeps the *first* cheapest candidate, so the order decides cost ties;
+/// each strategy declares the order its pre-pipeline code path used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CandidateOrder {
+    /// `for mapping { for fit }` — the penalty-map convention.
+    MappingMajor,
+    /// `for fit { for mapping }` — the LP-map convention (one placement
+    /// pass per fit policy over the primary mapping and its alternates).
+    FitMajor,
+}
+
+/// Phase 1 of the two-phase shape: produce candidate mappings.
+pub trait MappingStrategy: Send + Sync {
+    /// Short stage name used in spec strings and reports.
+    fn label(&self) -> String;
+
+    /// Whether this strategy consumes a mapping-LP outcome. Pipelines
+    /// solve the LP once per run; portfolios share one outcome across
+    /// all LP-based member pipelines.
+    fn needs_lp(&self) -> bool {
+        false
+    }
+
+    fn candidate_order(&self) -> CandidateOrder {
+        CandidateOrder::MappingMajor
+    }
+
+    /// Candidate mappings (each `n_tasks` long). `lp` is `Some` exactly
+    /// when [`MappingStrategy::needs_lp`] returned true.
+    fn mappings(&self, inst: &Instance, lp: Option<&LpOutcome>) -> Result<Vec<Vec<usize>>>;
+}
+
+/// Penalty mapping (paper section III): one candidate mapping per
+/// configured policy, enumerated mapping-major like `penalty_map_best`.
+pub struct Penalty {
+    pub policies: Vec<MappingPolicy>,
+}
+
+impl Penalty {
+    /// Both `h_avg` and `h_max` — the paper's best-of reporting set.
+    pub fn both() -> Self {
+        Penalty { policies: vec![MappingPolicy::HAvg, MappingPolicy::HMax] }
+    }
+
+    pub fn single(policy: MappingPolicy) -> Self {
+        Penalty { policies: vec![policy] }
+    }
+}
+
+impl MappingStrategy for Penalty {
+    fn label(&self) -> String {
+        match self.policies.as_slice() {
+            [MappingPolicy::HAvg] => "penalty-havg".into(),
+            [MappingPolicy::HMax] => "penalty-hmax".into(),
+            _ => "penalty".into(),
+        }
+    }
+
+    fn mappings(&self, inst: &Instance, _lp: Option<&LpOutcome>) -> Result<Vec<Vec<usize>>> {
+        ensure!(!self.policies.is_empty(), "penalty strategy has no policies");
+        Ok(self.policies.iter().map(|&p| map_tasks(inst, p)).collect())
+    }
+}
+
+/// LP mapping (paper section V): the crossover-rounded primary mapping
+/// plus the top-k-mass alternates, enumerated fit-major like
+/// `lp_place_best` (one LP solve feeds every placement).
+pub struct Lp;
+
+impl MappingStrategy for Lp {
+    fn label(&self) -> String {
+        "lp".into()
+    }
+
+    fn needs_lp(&self) -> bool {
+        true
+    }
+
+    fn candidate_order(&self) -> CandidateOrder {
+        CandidateOrder::FitMajor
+    }
+
+    fn mappings(&self, _inst: &Instance, lp: Option<&LpOutcome>) -> Result<Vec<Vec<usize>>> {
+        let outcome = lp.context("LP strategy requires a mapping-LP outcome")?;
+        let mut out = Vec::with_capacity(1 + outcome.alternates.len());
+        out.push(outcome.mapping.clone());
+        out.extend(outcome.alternates.iter().cloned());
+        Ok(out)
+    }
+}
+
+/// Escape hatch: a caller-supplied mapping (externally computed, replayed
+/// from a previous run, or hand-crafted). Validated against admissibility
+/// so an impossible mapping fails with an error instead of a placement
+/// panic.
+pub struct Oracle {
+    pub name: String,
+    pub mapping: Vec<usize>,
+}
+
+impl Oracle {
+    pub fn new(name: impl Into<String>, mapping: Vec<usize>) -> Self {
+        Oracle { name: name.into(), mapping }
+    }
+}
+
+impl MappingStrategy for Oracle {
+    fn label(&self) -> String {
+        self.name.clone()
+    }
+
+    fn mappings(&self, inst: &Instance, _lp: Option<&LpOutcome>) -> Result<Vec<Vec<usize>>> {
+        ensure!(
+            self.mapping.len() == inst.n_tasks(),
+            "oracle mapping '{}' has {} entries for {} tasks",
+            self.name,
+            self.mapping.len(),
+            inst.n_tasks()
+        );
+        for (u, &b) in self.mapping.iter().enumerate() {
+            ensure!(
+                b < inst.n_types(),
+                "oracle mapping '{}': task {u} mapped to nonexistent type {b}",
+                self.name
+            );
+            ensure!(
+                inst.node_types[b].admits(&inst.tasks[u].demand),
+                "oracle mapping '{}': task {u} does not fit node-type {b} alone",
+                self.name
+            );
+        }
+        Ok(vec![self.mapping.clone()])
+    }
+}
+
+/// Phase 3: refine one placed candidate. Passes run per candidate,
+/// *before* the cheapest candidate is selected (the paper's best-of
+/// convention applies to the refined costs).
+pub trait RefinePass: Send + Sync {
+    /// Short stage name used in spec strings and telemetry.
+    fn name(&self) -> &'static str;
+
+    /// True when the pass rebuilds the placement from the mapping itself;
+    /// the plain placement is skipped when such a pass runs first.
+    fn replaces_placement(&self) -> bool {
+        false
+    }
+
+    fn refine(&self, inst: &Instance, mapping: &[usize], fit: FitPolicy, sol: &mut Solution);
+}
+
+/// Cross-node-type filling (paper section V-D): re-places the candidate's
+/// mapping with leftover-capacity piggy-backing. Replaces the placement,
+/// exactly like the `cross_fill: true` solves did.
+pub struct CrossFill;
+
+impl RefinePass for CrossFill {
+    fn name(&self) -> &'static str {
+        "fill"
+    }
+
+    fn replaces_placement(&self) -> bool {
+        true
+    }
+
+    fn refine(&self, inst: &Instance, mapping: &[usize], fit: FitPolicy, sol: &mut Solution) {
+        *sol = solve_with_mapping(inst, mapping, fit, true);
+    }
+}
+
+/// Drain/downgrade local search (paper section VII) as a pipeline stage —
+/// previously dead weight no preset could reach.
+pub struct LocalSearch {
+    pub max_rounds: usize,
+}
+
+impl Default for LocalSearch {
+    fn default() -> Self {
+        LocalSearch { max_rounds: 8 }
+    }
+}
+
+impl RefinePass for LocalSearch {
+    fn name(&self) -> &'static str {
+        "ls"
+    }
+
+    fn refine(&self, inst: &Instance, _mapping: &[usize], _fit: FitPolicy, sol: &mut Solution) {
+        local_search::improve(inst, sol, self.max_rounds);
+    }
+}
+
+/// Wall time of one pipeline stage, aggregated over candidates.
+#[derive(Clone, Debug)]
+pub struct StageTime {
+    pub stage: String,
+    pub seconds: f64,
+}
+
+/// Diagnostics carried over from the mapping-LP solve.
+#[derive(Clone, Debug)]
+pub struct LpStats {
+    /// Primary rounded mapping (the crossover argmax).
+    pub mapping: Vec<usize>,
+    pub objective: f64,
+    /// Figure-5 series `x_max(u)`.
+    pub x_max: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Result of one pipeline run: the winning solution plus per-stage
+/// telemetry (replacing the positional `[f64; 4]`/`[f64; 5]` arrays the
+/// planner used to hardcode).
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Display label (preset name, spec string, or custom label).
+    pub label: String,
+    pub solution: Solution,
+    pub cost: f64,
+    /// Certified dual lower bound, when the pipeline consumed an LP.
+    pub certified_lb: Option<f64>,
+    pub lp: Option<LpStats>,
+    /// Per-stage wall time in execution order. A shared LP solve done by
+    /// a [`Portfolio`] is *not* included here (see
+    /// [`PortfolioReport::lp_seconds`]); a pipeline-local solve is, as
+    /// the leading `lp-solve` stage.
+    pub stages: Vec<StageTime>,
+    /// Number of (mapping × fit) candidates evaluated.
+    pub candidates: usize,
+}
+
+impl SolveReport {
+    /// Total wall seconds across recorded stages.
+    pub fn total_seconds(&self) -> f64 {
+        self.stages.iter().map(|s| s.seconds).sum()
+    }
+
+    pub fn stage_seconds(&self, stage: &str) -> f64 {
+        self.stages
+            .iter()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.seconds)
+            .sum()
+    }
+
+    /// `"lp-solve 0.52s, place 0.11s, fill 0.07s"` — for report lines.
+    pub fn stage_summary(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| format!("{} {:.3}s", s.stage, s.seconds))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+}
+
+/// A composable solve pipeline. Build with
+/// `Pipeline::new().map(..).fit(..).refine(..)`; omitting `.fit(..)`
+/// races both fitting policies (the paper's best-of convention).
+pub struct Pipeline {
+    strategy: Option<Box<dyn MappingStrategy>>,
+    fits: Vec<FitPolicy>,
+    refines: Vec<Box<dyn RefinePass>>,
+    label: Option<String>,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline::new()
+    }
+}
+
+impl Pipeline {
+    pub fn new() -> Self {
+        Pipeline { strategy: None, fits: Vec::new(), refines: Vec::new(), label: None }
+    }
+
+    /// Set the mapping strategy (phase 1). Required.
+    pub fn map(mut self, strategy: impl MappingStrategy + 'static) -> Self {
+        self.strategy = Some(Box::new(strategy));
+        self
+    }
+
+    /// Add a fitting policy candidate (phase 2). May be called multiple
+    /// times; with no call, both policies are raced.
+    pub fn fit(mut self, fit: FitPolicy) -> Self {
+        self.fits.push(fit);
+        self
+    }
+
+    /// Append a refinement pass (phase 3); passes run per candidate in
+    /// the order added.
+    pub fn refine(mut self, pass: impl RefinePass + 'static) -> Self {
+        self.refines.push(Box::new(pass));
+        self
+    }
+
+    /// Override the display label (defaults to [`Pipeline::spec`]).
+    pub fn label(mut self, label: impl Into<String>) -> Self {
+        self.label = Some(label.into());
+        self
+    }
+
+    pub fn needs_lp(&self) -> bool {
+        self.strategy.as_ref().map(|s| s.needs_lp()).unwrap_or(false)
+    }
+
+    /// Canonical spec string, e.g. `lp:ff+fill+ls`.
+    pub fn spec(&self) -> String {
+        let mut out = self
+            .strategy
+            .as_ref()
+            .map(|s| s.label())
+            .unwrap_or_else(|| "<unmapped>".into());
+        match self.fits.as_slice() {
+            [] => {}
+            [FitPolicy::FirstFit] => out.push_str(":ff"),
+            [FitPolicy::SimilarityFit] => out.push_str(":sim"),
+            _ => {}
+        }
+        for pass in &self.refines {
+            out.push('+');
+            out.push_str(pass.name());
+        }
+        out
+    }
+
+    pub fn display_label(&self) -> String {
+        self.label.clone().unwrap_or_else(|| self.spec())
+    }
+
+    /// Structural validation: a placement-replacing pass (cross-fill)
+    /// anywhere but first would silently discard the passes before it.
+    fn validate(&self) -> Result<()> {
+        if let Some(pos) = self.refines.iter().skip(1).position(|p| p.replaces_placement()) {
+            anyhow::bail!(
+                "refine stage '{}' rebuilds the placement from the mapping and must be \
+                 the first refine stage — the work of every pass before it would be \
+                 silently discarded",
+                self.refines[pos + 1].name()
+            );
+        }
+        Ok(())
+    }
+
+    /// Run the pipeline, solving the mapping LP first when the strategy
+    /// needs one. To share one LP outcome across several pipelines, use
+    /// [`Pipeline::run_shared`] (or a [`Portfolio`]).
+    pub fn run(&self, inst: &Instance, solver: &dyn MappingSolver) -> Result<SolveReport> {
+        if !self.needs_lp() {
+            return self.run_shared(inst, None);
+        }
+        let t0 = Instant::now();
+        let outcome = solve_lp_mapping(inst, solver)?;
+        let lp_seconds = t0.elapsed().as_secs_f64();
+        let mut rep = self.run_shared(inst, Some(&outcome))?;
+        rep.stages.insert(0, StageTime { stage: "lp-solve".into(), seconds: lp_seconds });
+        Ok(rep)
+    }
+
+    /// Run against a pre-solved LP outcome (`None` for LP-free
+    /// strategies). The shared-LP contract of the old `lp_place_best`:
+    /// one solve, any number of placements.
+    pub fn run_shared(&self, inst: &Instance, lp: Option<&LpOutcome>) -> Result<SolveReport> {
+        self.validate()?;
+        let strategy = self
+            .strategy
+            .as_ref()
+            .context("pipeline has no mapping strategy (call .map(..))")?;
+        ensure!(
+            !strategy.needs_lp() || lp.is_some(),
+            "strategy '{}' needs an LP outcome but none was provided",
+            strategy.label()
+        );
+
+        let t0 = Instant::now();
+        let mappings = strategy.mappings(inst, lp)?;
+        ensure!(!mappings.is_empty(), "strategy '{}' produced no mappings", strategy.label());
+        for m in &mappings {
+            ensure!(
+                m.len() == inst.n_tasks(),
+                "strategy '{}' produced a mapping of length {} for {} tasks",
+                strategy.label(),
+                m.len(),
+                inst.n_tasks()
+            );
+        }
+        let map_seconds = t0.elapsed().as_secs_f64();
+
+        let fits: Vec<FitPolicy> = if self.fits.is_empty() {
+            vec![FitPolicy::FirstFit, FitPolicy::SimilarityFit]
+        } else {
+            self.fits.clone()
+        };
+
+        // Enumeration preserves each strategy's pre-pipeline loop order so
+        // that first-wins cost ties reproduce the seed paths exactly.
+        let candidates: Vec<(&Vec<usize>, FitPolicy)> = match strategy.candidate_order() {
+            CandidateOrder::MappingMajor => mappings
+                .iter()
+                .flat_map(|m| fits.iter().map(move |&f| (m, f)))
+                .collect(),
+            CandidateOrder::FitMajor => fits
+                .iter()
+                .flat_map(|&f| mappings.iter().map(move |m| (m, f)))
+                .collect(),
+        };
+
+        // When the first refine pass rebuilds the placement (cross-fill),
+        // the plain placement would be thrown away — skip it.
+        let skip_place =
+            self.refines.first().map(|p| p.replaces_placement()).unwrap_or(false);
+
+        let mut place_seconds = 0.0f64;
+        let mut refine_seconds = vec![0.0f64; self.refines.len()];
+        let mut solved: Vec<(Solution, f64)> = Vec::with_capacity(candidates.len());
+        for &(mapping, fit) in &candidates {
+            let mut sol;
+            let first_pass = if skip_place {
+                let t = Instant::now();
+                sol = Solution::new(inst.n_tasks());
+                self.refines[0].refine(inst, mapping, fit, &mut sol);
+                refine_seconds[0] += t.elapsed().as_secs_f64();
+                1
+            } else {
+                let t = Instant::now();
+                sol = solve_with_mapping(inst, mapping, fit, false);
+                place_seconds += t.elapsed().as_secs_f64();
+                0
+            };
+            for (i, pass) in self.refines.iter().enumerate().skip(first_pass) {
+                let t = Instant::now();
+                pass.refine(inst, mapping, fit, &mut sol);
+                refine_seconds[i] += t.elapsed().as_secs_f64();
+            }
+            let cost = sol.cost(inst);
+            solved.push((sol, cost));
+        }
+        // shared first-wins selection rule (see util::stats::argmin_f64)
+        let wi = crate::util::stats::argmin_f64(solved.iter().map(|(_, c)| *c))
+            .expect("at least one candidate");
+        let (solution, cost) = solved.swap_remove(wi);
+
+        let mut stages = vec![StageTime { stage: "map".into(), seconds: map_seconds }];
+        if !skip_place {
+            stages.push(StageTime { stage: "place".into(), seconds: place_seconds });
+        }
+        for (pass, &secs) in self.refines.iter().zip(&refine_seconds) {
+            stages.push(StageTime { stage: pass.name().into(), seconds: secs });
+        }
+
+        let lp_used = strategy.needs_lp();
+        Ok(SolveReport {
+            label: self.display_label(),
+            solution,
+            cost,
+            certified_lb: if lp_used { lp.map(|o| o.certified_lb) } else { None },
+            lp: if lp_used {
+                lp.map(|o| LpStats {
+                    mapping: o.mapping.clone(),
+                    objective: o.lp_objective,
+                    x_max: o.x_max.clone(),
+                    iterations: o.solver_iterations,
+                    converged: o.solver_converged,
+                })
+            } else {
+                None
+            },
+            stages,
+            candidates: candidates.len(),
+        })
+    }
+}
+
+/// The four paper algorithms as named pipelines (figure legend labels).
+pub const PRESET_NAMES: [&str; 4] = ["penalty-map", "penalty-map-f", "lp-map", "lp-map-f"];
+
+pub fn preset(name: &str) -> Option<Pipeline> {
+    match name {
+        "penalty-map" => Some(Pipeline::new().map(Penalty::both()).label("PenaltyMap")),
+        "penalty-map-f" => {
+            Some(Pipeline::new().map(Penalty::both()).refine(CrossFill).label("PenaltyMap-F"))
+        }
+        "lp-map" => Some(Pipeline::new().map(Lp).label("LP-map")),
+        "lp-map-f" => Some(Pipeline::new().map(Lp).refine(CrossFill).label("LP-map-F")),
+        _ => None,
+    }
+}
+
+/// The `--algo` / service spec grammar (also printed by parse errors).
+pub const SPEC_GRAMMAR: &str = "\
+  algo    := <spec>[,<spec>]...      (multiple specs race in parallel as
+                                      a portfolio on one shared LP solve)
+  spec    := portfolio | <head>[:<fit>][+<refine>]...
+             ('portfolio' expands to the four presets)
+  head    := <preset> | <map>        (a preset keeps its refine chain)
+  preset  := penalty-map | penalty-map-f | lp-map | lp-map-f
+  map     := penalty | penalty-havg | penalty-hmax | lp
+  fit     := ff | sim | best            (default: best = race both)
+  refine  := fill | ls[:<max_rounds>]   (fill must be the first refine;
+             e.g. lp+fill+ls, lp-map-f+ls, penalty:ff+ls:16)";
+
+fn spec_error(spec: &str, why: String) -> anyhow::Error {
+    anyhow::anyhow!(
+        "unknown algorithm or pipeline spec '{spec}': {why}\nvalid specs:\n{SPEC_GRAMMAR}"
+    )
+}
+
+/// Parse a preset name or pipeline spec (see [`SPEC_GRAMMAR`]). Presets
+/// compose with extra stages (`lp-map-f+ls` = the preset plus a local
+/// search pass). Errors list the valid presets and the grammar.
+pub fn parse(spec: &str) -> Result<Pipeline> {
+    if let Some(p) = preset(spec) {
+        // echo the client's token as the label so race winners can be
+        // matched back against the submitted spec strings
+        return Ok(p.label(spec));
+    }
+    if spec == "portfolio" {
+        return Err(spec_error(
+            spec,
+            "'portfolio' expands to four pipelines, not one — it is valid inside an \
+             --algo/algorithm value (see parse_portfolio), not as a single pipeline"
+                .into(),
+        ));
+    }
+    let mut parts = spec.split('+');
+    let head = parts.next().unwrap_or_default();
+    let (map_name, fit_name) = match head.split_once(':') {
+        Some((m, f)) => (m, Some(f)),
+        None => (head, None),
+    };
+    // a preset head keeps its refine chain and composes with the rest
+    let mut p = if let Some(base) = preset(map_name) {
+        base
+    } else {
+        match map_name {
+            "penalty" => Pipeline::new().map(Penalty::both()),
+            "penalty-havg" => Pipeline::new().map(Penalty::single(MappingPolicy::HAvg)),
+            "penalty-hmax" => Pipeline::new().map(Penalty::single(MappingPolicy::HMax)),
+            "lp" => Pipeline::new().map(Lp),
+            other => {
+                return Err(spec_error(
+                    spec,
+                    format!("'{other}' is not a preset or mapping stage"),
+                ))
+            }
+        }
+    };
+    match fit_name {
+        None | Some("best") => {}
+        Some("ff") => p = p.fit(FitPolicy::FirstFit),
+        Some("sim") => p = p.fit(FitPolicy::SimilarityFit),
+        Some(other) => {
+            return Err(spec_error(spec, format!("'{other}' is not a fit policy")))
+        }
+    }
+    for stage in parts {
+        let (name, arg) = match stage.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (stage, None),
+        };
+        match (name, arg) {
+            ("fill", None) => p = p.refine(CrossFill),
+            ("ls", None) => p = p.refine(LocalSearch::default()),
+            ("ls", Some(rounds)) => {
+                let max_rounds: usize = rounds.parse().map_err(|_| {
+                    spec_error(spec, format!("'{rounds}' is not a round count"))
+                })?;
+                p = p.refine(LocalSearch { max_rounds });
+            }
+            _ => {
+                return Err(spec_error(
+                    spec,
+                    format!("'{stage}' is not a refine stage"),
+                ))
+            }
+        }
+    }
+    p.validate().map_err(|e| spec_error(spec, e.to_string()))?;
+    Ok(p.label(spec))
+}
+
+/// Most pipelines one parsed `--algo` / `algorithm` value may race.
+/// Each member gets a scoped thread, and the spec string reaches the
+/// planning service from untrusted clients — the cap keeps a hostile
+/// `portfolio,portfolio,...` list from exhausting process threads.
+pub const MAX_PORTFOLIO_SPECS: usize = 16;
+
+/// Parse a full `--algo` / service `algorithm` value: a comma-separated
+/// list of specs raced as one portfolio. The token `portfolio` expands
+/// to the four presets; a single spec yields a one-member portfolio.
+/// The CLI and the planning service both call this, so they accept the
+/// exact same language.
+pub fn parse_portfolio(specs: &str) -> Result<Portfolio> {
+    let mut members: Vec<Pipeline> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for tok in specs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let expanded: Vec<Pipeline> = if tok == "portfolio" {
+            PRESET_NAMES
+                .iter()
+                // label with the spec token (not the figure-legend name)
+                // so race winners are resubmittable spec strings
+                .map(|&name| preset(name).expect("preset exists").label(name))
+                .collect()
+        } else {
+            vec![parse(tok)?]
+        };
+        for p in expanded {
+            // duplicates (e.g. "lp-map-f,portfolio") would race the same
+            // work twice and make the label-keyed winner ambiguous
+            if !seen.insert(p.display_label()) {
+                continue;
+            }
+            members.push(p);
+            if members.len() > MAX_PORTFOLIO_SPECS {
+                return Err(spec_error(
+                    specs,
+                    format!("expands to more than {MAX_PORTFOLIO_SPECS} distinct pipelines"),
+                ));
+            }
+        }
+    }
+    if members.is_empty() {
+        return Err(spec_error(specs, "no pipeline specs given".into()));
+    }
+    Ok(Portfolio { pipelines: members })
+}
+
+/// Result of racing a portfolio of pipelines on one instance.
+#[derive(Clone, Debug)]
+pub struct PortfolioReport {
+    /// One report per member pipeline, in portfolio order.
+    pub reports: Vec<SolveReport>,
+    /// Index of the min-cost report (ties break toward the lower index,
+    /// so the winner is independent of thread scheduling).
+    pub winner: usize,
+    /// The shared mapping-LP outcome, when any member needed one.
+    pub lp: Option<LpOutcome>,
+    /// Wall seconds of the shared LP solve (0 when no member needed it).
+    pub lp_seconds: f64,
+}
+
+impl PortfolioReport {
+    pub fn best(&self) -> &SolveReport {
+        &self.reports[self.winner]
+    }
+
+    /// Report for a member pipeline by display label.
+    pub fn get(&self, label: &str) -> Option<&SolveReport> {
+        self.reports.iter().find(|r| r.label == label)
+    }
+
+    /// Certified lower bound for the instance: the winner's own bound
+    /// when it consumed the LP, else the shared LP solve's bound (which
+    /// is valid regardless of which member won the race).
+    pub fn certified_lb(&self) -> Option<f64> {
+        self.best()
+            .certified_lb
+            .or_else(|| self.lp.as_ref().map(|o| o.certified_lb))
+    }
+}
+
+/// A set of candidate pipelines raced on scoped threads. The mapping LP
+/// is solved once up front and shared by reference with every LP-based
+/// member — one LP solve, N placements.
+pub struct Portfolio {
+    pub pipelines: Vec<Pipeline>,
+}
+
+impl Default for Portfolio {
+    fn default() -> Self {
+        Portfolio::new()
+    }
+}
+
+impl Portfolio {
+    pub fn new() -> Self {
+        Portfolio { pipelines: Vec::new() }
+    }
+
+    pub fn add(mut self, pipeline: Pipeline) -> Self {
+        self.pipelines.push(pipeline);
+        self
+    }
+
+    /// All four paper presets, in figure-legend order.
+    pub fn presets() -> Self {
+        Portfolio {
+            pipelines: PRESET_NAMES
+                .iter()
+                .map(|n| preset(n).expect("preset exists"))
+                .collect(),
+        }
+    }
+
+    fn shared_lp(
+        &self,
+        inst: &Instance,
+        solver: &dyn MappingSolver,
+    ) -> Result<(Option<LpOutcome>, f64)> {
+        if !self.pipelines.iter().any(|p| p.needs_lp()) {
+            return Ok((None, 0.0));
+        }
+        let t0 = Instant::now();
+        let outcome = solve_lp_mapping(inst, solver)?;
+        Ok((Some(outcome), t0.elapsed().as_secs_f64()))
+    }
+
+    /// Race the member pipelines on scoped worker threads (at most one
+    /// per hardware thread — each pipeline may itself spawn per-type
+    /// placement threads, so an unbounded fan-out would oversubscribe).
+    /// The result is deterministic and thread-count independent: each
+    /// pipeline is deterministic, results are stored by member index,
+    /// and the winner uses an index tie-break (`run_sequential` must and
+    /// does agree).
+    pub fn run(&self, inst: &Instance, solver: &dyn MappingSolver) -> Result<PortfolioReport> {
+        ensure!(!self.pipelines.is_empty(), "empty portfolio");
+        let (lp, lp_seconds) = self.shared_lp(inst, solver)?;
+        let lp_ref = lp.as_ref();
+        let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let results = crate::util::pool::run_indexed(self.pipelines.len(), workers, |i| {
+            self.pipelines[i].run_shared(inst, lp_ref)
+        });
+        Self::assemble(results, lp, lp_seconds)
+    }
+
+    /// Sequential fold over the same members — the reference the property
+    /// tests compare the parallel race against, and the baseline
+    /// `benches/end_to_end.rs` measures the racing speedup from.
+    pub fn run_sequential(
+        &self,
+        inst: &Instance,
+        solver: &dyn MappingSolver,
+    ) -> Result<PortfolioReport> {
+        ensure!(!self.pipelines.is_empty(), "empty portfolio");
+        let (lp, lp_seconds) = self.shared_lp(inst, solver)?;
+        let results: Vec<Result<SolveReport>> = self
+            .pipelines
+            .iter()
+            .map(|p| p.run_shared(inst, lp.as_ref()))
+            .collect();
+        Self::assemble(results, lp, lp_seconds)
+    }
+
+    fn assemble(
+        results: Vec<Result<SolveReport>>,
+        lp: Option<LpOutcome>,
+        lp_seconds: f64,
+    ) -> Result<PortfolioReport> {
+        let mut reports = Vec::with_capacity(results.len());
+        for r in results {
+            reports.push(r?);
+        }
+        let winner = crate::util::stats::argmin_f64(reports.iter().map(|r| r.cost))
+            .expect("non-empty portfolio");
+        Ok(PortfolioReport { reports, winner, lp, lp_seconds })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
+    use crate::model::trim;
+
+    fn tiny() -> Instance {
+        let inst = generate(&SynthParams { n: 60, m: 4, ..Default::default() }, 17);
+        trim(&inst).instance
+    }
+
+    #[test]
+    fn builder_runs_and_verifies() {
+        let tr = tiny();
+        let solver = NativePdhgSolver::default();
+        let rep = Pipeline::new()
+            .map(Penalty::both())
+            .fit(FitPolicy::FirstFit)
+            .refine(CrossFill)
+            .refine(LocalSearch::default())
+            .run(&tr, &solver)
+            .unwrap();
+        assert!(rep.solution.verify(&tr).is_ok());
+        assert!((rep.cost - rep.solution.cost(&tr)).abs() < 1e-12);
+        assert_eq!(rep.candidates, 2); // two mappings x one fit
+        assert!(rep.certified_lb.is_none());
+        // stages: map, fill (place skipped: fill replaces it), ls
+        let names: Vec<&str> = rep.stages.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, vec!["map", "fill", "ls"]);
+    }
+
+    #[test]
+    fn missing_strategy_is_an_error() {
+        let tr = tiny();
+        let err = Pipeline::new()
+            .run(&tr, &NativePdhgSolver::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mapping strategy"), "{err}");
+    }
+
+    #[test]
+    fn presets_exist_and_label_like_the_enum() {
+        for name in PRESET_NAMES {
+            assert!(preset(name).is_some(), "{name}");
+        }
+        assert_eq!(preset("lp-map-f").unwrap().display_label(), "LP-map-F");
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn parse_accepts_presets_specs_and_rejects_garbage() {
+        assert!(parse("penalty-map-f").is_ok());
+        assert!(parse("lp+fill+ls").is_ok());
+        assert!(parse("penalty:ff+ls:16").is_ok());
+        assert!(parse("penalty-hmax:sim").is_ok());
+        for bad in ["magic", "lp:xx", "lp+frob", "lp+ls:many", ""] {
+            let err = parse(bad).unwrap_err().to_string();
+            assert!(err.contains("unknown algorithm"), "{bad}: {err}");
+            // the error teaches the valid names and grammar
+            assert!(err.contains("penalty-map"), "{bad}: {err}");
+            assert!(err.contains("fill | ls"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_labels() {
+        let p = parse("lp:ff+fill+ls").unwrap();
+        assert_eq!(p.spec(), "lp:ff+fill+ls");
+        assert_eq!(p.display_label(), "lp:ff+fill+ls");
+        assert!(p.needs_lp());
+    }
+
+    #[test]
+    fn parse_portfolio_expands_lists_and_the_portfolio_token() {
+        assert_eq!(parse_portfolio("lp-map-f").unwrap().pipelines.len(), 1);
+        assert_eq!(parse_portfolio("portfolio").unwrap().pipelines.len(), 4);
+        let mixed = parse_portfolio("lp+fill+ls, portfolio").unwrap();
+        assert_eq!(mixed.pipelines.len(), 5);
+        // every member label is a resubmittable spec token
+        assert_eq!(mixed.pipelines[0].display_label(), "lp+fill+ls");
+        assert_eq!(mixed.pipelines[1].display_label(), "penalty-map");
+        assert_eq!(parse("lp-map-f").unwrap().display_label(), "lp-map-f");
+        for bad in ["", " , ", "portfolio,magic"] {
+            let err = parse_portfolio(bad).unwrap_err().to_string();
+            assert!(err.contains("unknown algorithm"), "{bad}: {err}");
+        }
+        // duplicates dedup instead of racing the same work twice with
+        // ambiguous labels
+        let dup = parse_portfolio("lp-map-f,portfolio,portfolio").unwrap();
+        assert_eq!(dup.pipelines.len(), 4);
+        // client-controlled spec lists cannot spawn unbounded threads:
+        // distinct pipelines beyond the cap are rejected
+        let bomb = (1..=17).map(|i| format!("lp+ls:{i}")).collect::<Vec<_>>().join(",");
+        let err = parse_portfolio(&bomb).unwrap_err().to_string();
+        assert!(err.contains("more than"), "{err}");
+        // 'portfolio' is a list-level token, not a single pipeline
+        let err = parse("portfolio").unwrap_err().to_string();
+        assert!(err.contains("expands to four pipelines"), "{err}");
+    }
+
+    #[test]
+    fn presets_compose_with_extra_stages() {
+        // a preset head keeps its refine chain: lp-map-f+ls = lp+fill+ls
+        let p = parse("lp-map-f+ls").unwrap();
+        assert!(p.needs_lp());
+        assert_eq!(p.spec(), "lp+fill+ls");
+        assert_eq!(p.display_label(), "lp-map-f+ls");
+    }
+
+    #[test]
+    fn fill_must_be_the_first_refine_stage() {
+        // spec level: local-search work before a fill would be discarded
+        let err = parse("lp+ls+fill").unwrap_err().to_string();
+        assert!(err.contains("must be the first refine stage"), "{err}");
+        // builder level: same rule, caught at run time
+        let tr = tiny();
+        let err = Pipeline::new()
+            .map(Penalty::both())
+            .refine(LocalSearch::default())
+            .refine(CrossFill)
+            .run(&tr, &NativePdhgSolver::default())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must be the first refine stage"), "{err}");
+    }
+
+    #[test]
+    fn oracle_mapping_validated() {
+        let tr = tiny();
+        let solver = NativePdhgSolver::default();
+        // wrong length
+        let err = Pipeline::new()
+            .map(Oracle::new("bad", vec![0; 3]))
+            .run(&tr, &solver)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("3 entries"), "{err}");
+        // a valid custom mapping runs end to end
+        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+        let rep = Pipeline::new()
+            .map(Oracle::new("havg-oracle", mapping.clone()))
+            .run(&tr, &solver)
+            .unwrap();
+        assert!(rep.solution.verify(&tr).is_ok());
+        // equals the best-of-fits fold over the same mapping
+        let ff = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+        let sim = solve_with_mapping(&tr, &mapping, FitPolicy::SimilarityFit, false);
+        let want = ff.cost(&tr).min(sim.cost(&tr));
+        assert!((rep.cost - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn portfolio_race_matches_sequential() {
+        let tr = tiny();
+        let solver = NativePdhgSolver::default();
+        let par = Portfolio::presets().run(&tr, &solver).unwrap();
+        let seq = Portfolio::presets().run_sequential(&tr, &solver).unwrap();
+        assert_eq!(par.winner, seq.winner);
+        assert_eq!(par.reports.len(), 4);
+        for (a, b) in par.reports.iter().zip(&seq.reports) {
+            assert_eq!(a.label, b.label);
+            assert!((a.cost - b.cost).abs() < 1e-12, "{}", a.label);
+            assert_eq!(a.solution.assignment, b.solution.assignment, "{}", a.label);
+        }
+        assert!(par.best().solution.verify(&tr).is_ok());
+        assert!(par.lp.is_some());
+        // winner is the min-cost member with the lowest index
+        let min = par.reports.iter().map(|r| r.cost).fold(f64::INFINITY, f64::min);
+        assert!((par.best().cost - min).abs() < 1e-12);
+        assert!(par.reports[..par.winner].iter().all(|r| r.cost > min));
+    }
+}

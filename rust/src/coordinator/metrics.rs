@@ -28,12 +28,17 @@ impl Metrics {
     pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
         let t0 = Instant::now();
         let r = f();
-        let dt = t0.elapsed().as_secs_f64();
+        self.observe(name, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Record an externally measured duration (e.g. a stage time reported
+    /// by a pipeline run on another thread).
+    pub fn observe(&self, name: &str, seconds: f64) {
         let mut timers = self.timers.lock().unwrap();
         let e = timers.entry(name.to_string()).or_insert((0.0, 0));
-        e.0 += dt;
+        e.0 += seconds;
         e.1 += 1;
-        r
     }
 
     pub fn timer_total(&self, name: &str) -> f64 {

@@ -1,13 +1,12 @@
 //! The planning coordinator: backend selection, full-instance evaluation
-//! (all four algorithms + lower bound), and a worker pool for scenario
+//! (a pipeline portfolio + lower bound), and a worker pool for scenario
 //! sweeps. This is the L3 entry point both the CLI and the service use.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::algo::algorithms::{lp_place_best, penalty_map_best};
-use crate::algo::lpmap::solve_lp_mapping;
+use crate::algo::pipeline::{Portfolio, StageTime};
 use crate::lp::dual;
 use crate::lp::scaling;
 use crate::lp::solver::{MappingSolver, NativePdhgSolver, SimplexSolver};
@@ -18,20 +17,51 @@ use crate::runtime::ArtifactSolver;
 use super::config::Backend;
 use super::metrics::Metrics;
 
-/// Evaluation of one instance: absolute and LB-normalized costs for the
-/// four algorithms, plus diagnostics.
+/// One algorithm's evaluation on one instance.
+#[derive(Clone, Debug)]
+pub struct AlgoEval {
+    /// Pipeline display label (figure legend name for the presets).
+    pub label: String,
+    pub cost: f64,
+    /// Cost normalized by the certified lower bound.
+    pub normalized: f64,
+    /// Total wall seconds attributed to this algorithm; pipelines that
+    /// consumed the shared LP solve include its time (the old
+    /// `t_solve + t_place` convention). Under [`Planner::evaluate`] the
+    /// pipelines race concurrently, so these are contended wall times;
+    /// use [`Planner::evaluate_sequential`] for isolated measurements.
+    pub seconds: f64,
+    /// Per-stage wall times from the pipeline run.
+    pub stages: Vec<StageTime>,
+}
+
+/// Evaluation of one instance: LB-normalized costs for a portfolio of
+/// pipelines (by default the four paper presets), plus diagnostics.
 #[derive(Clone, Debug)]
 pub struct EvalRow {
-    /// [PenaltyMap, PenaltyMap-F, LP-map, LP-map-F]
-    pub costs: [f64; 4],
+    /// One entry per portfolio member, in portfolio order.
+    pub algos: Vec<AlgoEval>,
     pub lower_bound: f64,
-    pub normalized: [f64; 4],
-    /// Figure-5 series from the LP-map solve.
+    /// Wall seconds spent on the lower-bound extras (congestion bound).
+    pub lb_seconds: f64,
+    /// Figure-5 series from the shared LP solve.
     pub x_max: Vec<f64>,
-    /// Wall seconds: [penalty, penalty_f, lp, lp_f, lb]
-    pub seconds: [f64; 5],
     pub backend_used: &'static str,
     pub lp_converged: bool,
+}
+
+impl EvalRow {
+    /// Look up one algorithm's evaluation by display label.
+    pub fn get(&self, label: &str) -> Option<&AlgoEval> {
+        self.algos.iter().find(|a| a.label == label)
+    }
+
+    /// The cheapest algorithm (shared first-wins selection rule).
+    pub fn best(&self) -> &AlgoEval {
+        let i = crate::util::stats::argmin_f64(self.algos.iter().map(|a| a.cost))
+            .expect("non-empty evaluation");
+        &self.algos[i]
+    }
 }
 
 /// Planner: owns the (optional) artifact engine and dispatches solves.
@@ -99,36 +129,60 @@ impl Planner {
         }
     }
 
-    /// Evaluate all four algorithms + lower bound on a raw instance
-    /// (timeline trimming applied here).
+    /// Evaluate the four preset pipelines + lower bound on a raw instance
+    /// (timeline trimming applied here). The presets race on scoped
+    /// threads sharing one LP solve, so per-algorithm `seconds` are
+    /// contended wall times — see [`Planner::evaluate_sequential`].
     pub fn evaluate(&self, inst: &Instance) -> Result<EvalRow> {
+        self.eval_inner(inst, Portfolio::presets(), true)
+    }
+
+    /// [`Planner::evaluate`] with a sequential fold instead of the race:
+    /// identical results, uncontended per-algorithm timings (the variant
+    /// the section VI-E running-time report uses).
+    pub fn evaluate_sequential(&self, inst: &Instance) -> Result<EvalRow> {
+        self.eval_inner(inst, Portfolio::presets(), false)
+    }
+
+    /// Evaluate an arbitrary pipeline portfolio + lower bound. The
+    /// members race on scoped threads and share one LP solve; the LB
+    /// comes from the shared LP's certified dual bound floored by the
+    /// congestion bound (both certified in f64), so the portfolio must
+    /// contain at least one LP-based pipeline.
+    pub fn evaluate_portfolio(
+        &self,
+        inst: &Instance,
+        portfolio: Portfolio,
+    ) -> Result<EvalRow> {
+        self.eval_inner(inst, portfolio, true)
+    }
+
+    fn eval_inner(
+        &self,
+        inst: &Instance,
+        portfolio: Portfolio,
+        parallel: bool,
+    ) -> Result<EvalRow> {
         let tr = trim(inst).instance;
         let (solver, backend_used) = self.solver_for(&tr);
         let m = &self.metrics;
 
-        let t0 = std::time::Instant::now();
-        let pen = m.time("penalty_map", || penalty_map_best(&tr, false));
-        let t_pen = t0.elapsed().as_secs_f64();
+        anyhow::ensure!(
+            portfolio.pipelines.iter().any(|p| p.needs_lp()),
+            "portfolio needs an LP-based pipeline to certify the lower bound"
+        );
+        let race = m.time("portfolio_race", || {
+            if parallel {
+                portfolio.run(&tr, solver.as_ref())
+            } else {
+                portfolio.run_sequential(&tr, solver.as_ref())
+            }
+        })?;
+        let outcome = race.lp.as_ref().expect("portfolio solved the shared LP");
+        m.observe("lp_solve", race.lp_seconds);
 
-        let t0 = std::time::Instant::now();
-        let pen_f = m.time("penalty_map_f", || penalty_map_best(&tr, true));
-        let t_pen_f = t0.elapsed().as_secs_f64();
-
-        // One LP solve feeds LP-map, LP-map-F and the lower bound.
-        let t0 = std::time::Instant::now();
-        let outcome = m.time("lp_solve", || solve_lp_mapping(&tr, solver.as_ref()))?;
-        let t_solve = t0.elapsed().as_secs_f64();
-
-        let t0 = std::time::Instant::now();
-        let lp_sol = m.time("lp_map_place", || lp_place_best(&tr, &outcome, false));
-        let t_lp = t_solve + t0.elapsed().as_secs_f64();
-
-        let t0 = std::time::Instant::now();
-        let lp_f_sol = m.time("lp_map_f_place", || lp_place_best(&tr, &outcome, true));
-        let t_lp_f = t_solve + t0.elapsed().as_secs_f64();
-
-        // Lower bound: certified dual bound from the LP solve, floored by
-        // the congestion bound; both certified in f64.
+        // Lower bound: certified dual bound from the shared LP solve,
+        // floored by the congestion bound.
         let t0 = std::time::Instant::now();
         let cong = {
             let mut lp = MappingLp::from_instance(&tr);
@@ -136,22 +190,31 @@ impl Planner {
             dual::congestion_bound(&lp)
         };
         let lb = outcome.certified_lb.max(cong);
-        let t_lb = t0.elapsed().as_secs_f64();
+        let lb_seconds = t0.elapsed().as_secs_f64();
         anyhow::ensure!(lb > 0.0, "degenerate lower bound {lb}");
 
-        let costs = [
-            pen.cost(&tr),
-            pen_f.cost(&tr),
-            lp_sol.cost(&tr),
-            lp_f_sol.cost(&tr),
-        ];
+        let algos: Vec<AlgoEval> = race
+            .reports
+            .iter()
+            .map(|r| {
+                let lp_share = if r.lp.is_some() { race.lp_seconds } else { 0.0 };
+                let seconds = r.total_seconds() + lp_share;
+                m.observe(&format!("pipeline.{}", r.label), seconds);
+                AlgoEval {
+                    label: r.label.clone(),
+                    cost: r.cost,
+                    normalized: r.cost / lb,
+                    seconds,
+                    stages: r.stages.clone(),
+                }
+            })
+            .collect();
         m.inc("instances_evaluated", 1);
         Ok(EvalRow {
-            costs,
+            algos,
             lower_bound: lb,
-            normalized: [costs[0] / lb, costs[1] / lb, costs[2] / lb, costs[3] / lb],
-            x_max: outcome.x_max,
-            seconds: [t_pen, t_pen_f, t_lp, t_lp_f, t_lb],
+            lb_seconds,
+            x_max: outcome.x_max.clone(),
             backend_used,
             lp_converged: outcome.solver_converged,
         })
@@ -169,24 +232,7 @@ impl Planner {
         T: Sync,
         R: Send,
     {
-        let n = jobs.len();
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        let slots = std::sync::Mutex::new(&mut results);
-        let workers = workers.max(1).min(n.max(1));
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                    if i >= n {
-                        break;
-                    }
-                    let r = f(&jobs[i]);
-                    slots.lock().unwrap()[i] = Some(r);
-                });
-            }
-        });
-        results.into_iter().map(|r| r.expect("job completed")).collect()
+        crate::util::pool::run_indexed(jobs.len(), workers, |i| f(&jobs[i]))
     }
 }
 
@@ -214,12 +260,20 @@ mod tests {
         let inst = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, 2);
         let row = planner.evaluate(&inst).unwrap();
         assert!(row.lower_bound > 0.0);
-        for (i, &nc) in row.normalized.iter().enumerate() {
-            assert!(nc >= 1.0 - 1e-6, "algo {i} beat the lower bound: {nc}");
-            assert!(nc < 5.0, "algo {i} way off: {nc}");
+        assert_eq!(row.algos.len(), 4);
+        for a in &row.algos {
+            assert!(a.normalized >= 1.0 - 1e-6, "{} beat the lower bound: {}", a.label, a.normalized);
+            assert!(a.normalized < 5.0, "{} way off: {}", a.label, a.normalized);
+            assert!(!a.stages.is_empty(), "{} has no stage telemetry", a.label);
         }
         // LP-map should not lose to PenaltyMap by much on defaults
-        assert!(row.normalized[2] <= row.normalized[0] + 0.25);
+        let lp = row.get("LP-map").unwrap();
+        let pen = row.get("PenaltyMap").unwrap();
+        assert!(lp.normalized <= pen.normalized + 0.25);
+        // LP pipelines carry the shared solve time; the best() helper
+        // picks a member at least as cheap as every other
+        assert!(lp.seconds > 0.0);
+        assert!(row.algos.iter().all(|a| row.best().cost <= a.cost + 1e-12));
         assert_eq!(row.backend_used, "pdhg-native");
     }
 

@@ -2,9 +2,16 @@
 //!
 //! Request (one line):
 //!   {"instance": {<io::files instance format>}, "algorithm": "lp-map-f"}
+//! `algorithm` accepts the same language as the CLI `--algo` flag
+//! (both call `algo::pipeline::parse_portfolio`): preset names,
+//! compositions like "lp+fill+ls", the token "portfolio", and
+//! comma-separated lists that race in parallel on one LP solve —
+//! see `algo::pipeline::SPEC_GRAMMAR`. For a multi-pipeline race the
+//! response describes the winner, plus a "raced" array of member costs.
 //! Response (one line):
 //!   {"ok": true, "cost": ..., "normalized_cost": ..., "n_nodes": ...,
-//!    "nodes_per_type": [...], "backend": "...", "seconds": ...}
+//!    "nodes_per_type": [...], "backend": "...", "seconds": ...,
+//!    "stages": [{"stage": "...", "seconds": ...}, ...]}
 //! or {"ok": false, "error": "..."}.
 //!
 //! Python never serves requests; this loop is the deployable L3 artifact.
@@ -42,20 +49,11 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
 
     let tr = trim(&inst).instance;
     let (solver, backend) = planner.solver_for(&tr);
-    use crate::algo::algorithms::{lp_map_best, penalty_map_best};
-    let (solution, lb) = match algo {
-        "penalty-map" => (penalty_map_best(&tr, false), None),
-        "penalty-map-f" => (penalty_map_best(&tr, true), None),
-        "lp-map" => {
-            let rep = lp_map_best(&tr, solver.as_ref(), false)?;
-            (rep.solution.clone(), Some(rep.certified_lb))
-        }
-        "lp-map-f" => {
-            let rep = lp_map_best(&tr, solver.as_ref(), true)?;
-            (rep.solution.clone(), Some(rep.certified_lb))
-        }
-        other => anyhow::bail!("unknown algorithm '{other}'"),
-    };
+    let portfolio = crate::algo::pipeline::parse_portfolio(algo)?;
+    let race = portfolio.run(&tr, solver.as_ref())?;
+    let rep = race.best();
+    let lb = race.certified_lb();
+    let solution = &rep.solution;
     solution
         .verify(&tr)
         .map_err(|v| anyhow::anyhow!("internal: infeasible solution: {v:?}"))?;
@@ -80,10 +78,42 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
         ),
         ("backend", Json::Str(backend.to_string())),
         ("seconds", Json::Num(seconds)),
+        (
+            // array, not an object: a spec may repeat a stage (ls:2+ls:8)
+            "stages",
+            Json::Arr(
+                rep.stages
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("stage", Json::Str(s.stage.clone())),
+                            ("seconds", Json::Num(s.seconds)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ];
     if let Some(lb) = lb {
         fields.push(("lower_bound", Json::Num(lb)));
         fields.push(("normalized_cost", Json::Num(cost / lb.max(1e-12))));
+    }
+    if race.reports.len() > 1 {
+        fields.push(("winner", Json::Str(rep.label.clone())));
+        fields.push((
+            "raced",
+            Json::Arr(
+                race.reports
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("algorithm", Json::Str(r.label.clone())),
+                            ("cost", Json::Num(r.cost)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
     }
     Ok(Json::obj(fields))
 }
@@ -158,6 +188,28 @@ mod tests {
             let resp = handle_request(&p, bad);
             let v = json::parse(&resp).unwrap();
             assert_eq!(v.get("ok").as_bool(), Some(false), "input {bad}: {resp}");
+        }
+    }
+
+    #[test]
+    fn comma_list_races_and_reports_the_winner() {
+        let p = planner();
+        let inst = generate(&SynthParams { n: 30, m: 3, ..Default::default() }, 6);
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("penalty-map-f,lp-map-f".into())),
+        ]);
+        let resp = handle_request(&p, &req.to_string());
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{resp}");
+        let raced = v.get("raced").as_arr().unwrap();
+        assert_eq!(raced.len(), 2);
+        assert!(v.get("winner").as_str().is_some());
+        // the penalty winner case still certifies the shared-LP bound
+        assert!(v.get("lower_bound").as_f64().unwrap() > 0.0);
+        let cost = v.get("cost").as_f64().unwrap();
+        for r in raced {
+            assert!(cost <= r.get("cost").as_f64().unwrap() + 1e-9);
         }
     }
 

@@ -11,10 +11,9 @@
 
 use anyhow::Result;
 
-use crate::algo::algorithms::{lp_map_best, penalty_map_best};
-use crate::algo::local_search;
 use crate::algo::online;
 use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+use crate::algo::pipeline::{self, CrossFill, LocalSearch, Oracle, Pipeline};
 use crate::algo::placement::FitPolicy;
 use crate::algo::segregate;
 use crate::algo::twophase::solve_with_mapping;
@@ -47,9 +46,21 @@ pub fn run(quick: bool) -> Result<String> {
             let tr = trim(&inst).instance;
             let solver = NativePdhgSolver::default();
 
-            // reference: LP-map-F + its certified LB
-            let rep = lp_map_best(&tr, &solver, true)?;
-            let lb = rep.certified_lb;
+            // reference: the LP-map-F preset + the A5 combo pipeline,
+            // raced on one shared LP solve; LB from the certified dual
+            let race = pipeline::Portfolio::new()
+                .add(pipeline::preset("lp-map-f").unwrap())
+                .add(
+                    Pipeline::new()
+                        .map(pipeline::Lp)
+                        .refine(CrossFill)
+                        .refine(LocalSearch::default())
+                        .label("lp+fill+ls"),
+                )
+                .run(&tr, &solver)?;
+            let rep = &race.reports[0];
+            let a5 = &race.reports[1];
+            let lb = rep.certified_lb.expect("LP pipelines certify a bound");
             anyhow::ensure!(lb > 0.0);
 
             // A1: omega adaptation (solver-level; measure iterations)
@@ -63,29 +74,35 @@ pub fn run(quick: bool) -> Result<String> {
             lp_iters_plain.push(plain.iterations as f64);
             lp_iters_adapt.push(adapt.iterations as f64);
 
-            // A2: rounding without alternates/crossover = raw argmax
+            // A2: rounding without alternates/crossover — the raw argmax
+            // mapping fed back through the Oracle escape hatch
             let raw = {
                 use crate::algo::lpmap::round_mapping;
                 let sol = solver_solution(&lp, &solver)?;
                 let (mapping, _) = round_mapping(&tr, &sol);
-                solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, true)
+                Pipeline::new()
+                    .map(Oracle::new("raw-argmax", mapping))
+                    .fit(FitPolicy::FirstFit)
+                    .refine(CrossFill)
+                    .run(&tr, &solver)?
             };
 
             // variants: [lp-map-f, raw-rounding, penalty-f, seg, local, online, pen]
-            norm[0].push(rep.solution.cost(&tr) / lb);
-            norm[1].push(raw.cost(&tr) / lb);
-            let pen_f = penalty_map_best(&tr, true);
-            norm[2].push(pen_f.cost(&tr) / lb);
+            norm[0].push(rep.cost / lb);
+            norm[1].push(raw.cost / lb);
+            let pen_f = pipeline::preset("penalty-map-f").unwrap().run(&tr, &solver)?;
+            norm[2].push(pen_f.cost / lb);
             let seg = segregate::solve_segregated(&tr, |i| {
                 let mapping = map_tasks(i, MappingPolicy::HAvg);
                 solve_with_mapping(i, &mapping, FitPolicy::FirstFit, true)
             });
             norm[3].push(seg.cost(&tr) / lb);
-            let mut ls = rep.solution.clone();
-            local_search::improve(&tr, &mut ls, 8);
-            norm[4].push(ls.cost(&tr) / lb);
+            // A5: the previously-unreachable combo (local search refines
+            // every fill candidate), evaluated on the shared LP outcome
+            norm[4].push(a5.cost / lb);
             norm[5].push(online::solve_online(&tr, FitPolicy::FirstFit).cost(&tr) / lb);
-            norm[6].push(penalty_map_best(&tr, false).cost(&tr) / lb);
+            let pen = pipeline::preset("penalty-map").unwrap().run(&tr, &solver)?;
+            norm[6].push(pen.cost / lb);
         }
         out.push_str(&format!("\n[{tname}]\n"));
         out.push_str(&format!(
@@ -100,7 +117,7 @@ pub fn run(quick: bool) -> Result<String> {
         out.push_str(&row("A2 raw argmax rounding", &norm[1]));
         out.push_str(&row("PenaltyMap-F", &norm[2]));
         out.push_str(&row("A4 segregated PenaltyMapF", &norm[3]));
-        out.push_str(&row("A5 LP-map-F + local search", &norm[4]));
+        out.push_str(&row("A5 lp+fill+ls pipeline", &norm[4]));
         out.push_str(&row("A6 online first-fit", &norm[5]));
         out.push_str(&row("PenaltyMap (no fill)", &norm[6]));
     }

@@ -15,37 +15,40 @@ fn fmt_summary(s: &Summary) -> String {
 }
 
 /// Render one figure as an aligned text table (normalized costs,
-/// mean ± std over seeds; 1.000 = LP lower bound).
+/// mean ± std over seeds; 1.000 = LP lower bound). Columns follow the
+/// rows' label-keyed algorithm set — any pipeline portfolio renders.
 pub fn render_table(res: &FigureResult) -> String {
     let mut out = String::new();
     out.push_str(&format!("== {} — {} ==\n", res.id, res.title));
-    out.push_str(&format!(
-        "{:<14} {:>14} {:>14} {:>14} {:>14} {:>12} {:>10}\n",
-        res.x_name, "PenaltyMap", "PenaltyMap-F", "LP-map", "LP-map-F", "LB(abs)", "backend"
-    ));
-    for row in &res.rows {
-        out.push_str(&format!(
-            "{:<14} {:>14} {:>14} {:>14} {:>14} {:>12.3} {:>10}\n",
-            row.label,
-            fmt_summary(&row.normalized[0]),
-            fmt_summary(&row.normalized[1]),
-            fmt_summary(&row.normalized[2]),
-            fmt_summary(&row.normalized[3]),
-            row.lower_bound.mean,
-            row.backend,
-        ));
+    let algos: &[String] = res.rows.first().map(|r| r.algos.as_slice()).unwrap_or(&[]);
+    out.push_str(&format!("{:<14}", res.x_name));
+    for a in algos {
+        out.push_str(&format!(" {a:>14}"));
     }
-    // paper-style gain lines
-    if !res.rows.is_empty() {
+    out.push_str(&format!(" {:>12} {:>10}\n", "LB(abs)", "backend"));
+    for row in &res.rows {
+        out.push_str(&format!("{:<14}", row.label));
+        for s in &row.normalized {
+            out.push_str(&format!(" {:>14}", fmt_summary(s)));
+        }
+        out.push_str(&format!(" {:>12.3} {:>10}\n", row.lower_bound.mean, row.backend));
+    }
+    // paper-style gain lines (when both headline algorithms are present)
+    let has = |label: &str| res.rows.iter().all(|r| r.get(label).is_some());
+    if !res.rows.is_empty() && has("PenaltyMap") && has("LP-map-F") {
         let max_gain = res
             .rows
             .iter()
-            .map(|r| (r.normalized[0].mean - r.normalized[3].mean) / r.normalized[3].mean)
+            .map(|r| {
+                let pen = r.get("PenaltyMap").unwrap().mean;
+                let lpf = r.get("LP-map-F").unwrap().mean;
+                (pen - lpf) / lpf
+            })
             .fold(f64::NEG_INFINITY, f64::max);
         let worst_lpf = res
             .rows
             .iter()
-            .map(|r| r.normalized[3].mean)
+            .map(|r| r.get("LP-map-F").unwrap().mean)
             .fold(f64::NEG_INFINITY, f64::max);
         out.push_str(&format!(
             "-- LP-map-F vs PenaltyMap: up to {:.0}% cheaper; LP-map-F stays within {:.0}% of LB\n",
@@ -66,6 +69,21 @@ fn summary_json(s: &Summary) -> Json {
     ])
 }
 
+/// Stable JSON key for an algorithm display label. The four paper
+/// presets keep their historical keys; other labels are sanitized.
+pub fn json_key(label: &str) -> String {
+    match label {
+        "PenaltyMap" => "penalty_map".into(),
+        "PenaltyMap-F" => "penalty_map_f".into(),
+        "LP-map" => "lp_map".into(),
+        "LP-map-F" => "lp_map_f".into(),
+        other => other
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect(),
+    }
+}
+
 pub fn to_json(res: &FigureResult) -> Json {
     Json::obj(vec![
         ("id", Json::Str(res.id.clone())),
@@ -77,16 +95,36 @@ pub fn to_json(res: &FigureResult) -> Json {
                 res.rows
                     .iter()
                     .map(|r| {
-                        Json::obj(vec![
-                            ("label", Json::Str(r.label.clone())),
-                            ("penalty_map", summary_json(&r.normalized[0])),
-                            ("penalty_map_f", summary_json(&r.normalized[1])),
-                            ("lp_map", summary_json(&r.normalized[2])),
-                            ("lp_map_f", summary_json(&r.normalized[3])),
-                            ("lower_bound", summary_json(&r.lower_bound)),
-                            ("seconds", Json::arr_f64(&r.seconds)),
-                            ("backend", Json::Str(r.backend.to_string())),
-                        ])
+                        let mut obj = std::collections::BTreeMap::new();
+                        obj.insert("label".to_string(), Json::Str(r.label.clone()));
+                        obj.insert(
+                            "algorithms".to_string(),
+                            Json::Arr(r.algos.iter().map(|a| Json::Str(a.clone())).collect()),
+                        );
+                        obj.insert("lower_bound".to_string(), summary_json(&r.lower_bound));
+                        obj.insert("seconds".to_string(), Json::arr_f64(&r.seconds));
+                        // sweeps race the portfolio, so per-algorithm
+                        // seconds are contended wall times (see Row)
+                        obj.insert(
+                            "timing".to_string(),
+                            Json::Str("parallel-race".into()),
+                        );
+                        obj.insert("lb_seconds".to_string(), Json::Num(r.lb_seconds));
+                        obj.insert("backend".to_string(), Json::Str(r.backend.to_string()));
+                        // algorithm keys last, deduplicated against the
+                        // structural keys above and each other: two labels
+                        // sanitizing identically must not drop a column
+                        for (a, s) in r.algos.iter().zip(&r.normalized) {
+                            let base = json_key(a);
+                            let mut key = base.clone();
+                            let mut n = 2;
+                            while obj.contains_key(&key) {
+                                key = format!("{base}_{n}");
+                                n += 1;
+                            }
+                            obj.insert(key, summary_json(s));
+                        }
+                        Json::Obj(obj)
                     })
                     .collect(),
             ),
@@ -114,14 +152,21 @@ mod tests {
             x_name: "m".into(),
             rows: vec![Row {
                 label: "m=5".into(),
-                normalized: [
+                algos: vec![
+                    "PenaltyMap".into(),
+                    "PenaltyMap-F".into(),
+                    "LP-map".into(),
+                    "LP-map-F".into(),
+                ],
+                normalized: vec![
                     Summary::of(&[1.4, 1.5]),
                     Summary::of(&[1.3, 1.4]),
                     Summary::of(&[1.2, 1.3]),
                     Summary::of(&[1.1, 1.2]),
                 ],
                 lower_bound: Summary::of(&[10.0, 11.0]),
-                seconds: [0.1, 0.1, 0.5, 0.5, 0.0],
+                seconds: vec![0.1, 0.1, 0.5, 0.5],
+                lb_seconds: 0.01,
                 backend: "pdhg-native",
             }],
         }
@@ -143,6 +188,27 @@ mod tests {
         let rows = parsed.get("rows").as_arr().unwrap();
         assert_eq!(rows.len(), 1);
         assert!(rows[0].get("lp_map_f").get("mean").as_f64().unwrap() > 1.0);
+    }
+
+    #[test]
+    fn colliding_labels_keep_every_column() {
+        let mut res = sample();
+        // "lp fill ls" and "lp+fill+ls" both sanitize to lp_fill_ls;
+        // "backend" collides with a structural key
+        res.rows[0].algos = vec![
+            "lp fill ls".into(),
+            "lp+fill+ls".into(),
+            "backend".into(),
+            "LP-map-F".into(),
+        ];
+        let parsed = crate::util::json::parse(&to_json(&res).to_string()).unwrap();
+        let row = &parsed.get("rows").as_arr().unwrap()[0];
+        assert!(row.get("lp_fill_ls").get("mean").as_f64().is_some());
+        assert!(row.get("lp_fill_ls_2").get("mean").as_f64().is_some());
+        // the structural backend string survives; the algo got a suffix
+        assert!(row.get("backend").as_str().is_some());
+        assert!(row.get("backend_2").get("mean").as_f64().is_some());
+        assert!(row.get("lp_map_f").get("mean").as_f64().is_some());
     }
 
     #[test]

@@ -36,16 +36,34 @@ pub fn instantiate(trace: &TraceKind, seed: u64) -> Instance {
     }
 }
 
-/// Aggregated results for one figure point.
+/// Aggregated results for one figure point. Algorithm columns are
+/// label-keyed and positionally aligned across `algos`, `normalized`
+/// and `seconds` (the planner's portfolio order — by default the four
+/// paper presets in figure-legend order).
 #[derive(Clone, Debug)]
 pub struct Row {
     pub label: String,
-    /// Normalized-cost summaries: [PenaltyMap, PenaltyMap-F, LP-map, LP-map-F].
-    pub normalized: [Summary; 4],
+    /// Algorithm display labels, one per column.
+    pub algos: Vec<String>,
+    /// Normalized-cost summary per algorithm column.
+    pub normalized: Vec<Summary>,
     pub lower_bound: Summary,
-    /// Mean wall seconds [penalty, penalty_f, lp, lp_f, lb].
-    pub seconds: [f64; 5],
+    /// Mean wall seconds per algorithm column. Sweeps race the portfolio
+    /// (`Planner::evaluate`), so these are contended race wall times —
+    /// not comparable to isolated sequential timings; the `rt` special
+    /// runner measures those via `Planner::evaluate_sequential`. The
+    /// figure JSON carries a `timing: parallel-race` marker for this.
+    pub seconds: Vec<f64>,
+    /// Mean wall seconds of the lower-bound extras.
+    pub lb_seconds: f64,
     pub backend: &'static str,
+}
+
+impl Row {
+    /// Normalized-cost summary for one algorithm by label.
+    pub fn get(&self, label: &str) -> Option<&Summary> {
+        self.algos.iter().position(|a| a == label).map(|i| &self.normalized[i])
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -60,42 +78,51 @@ pub struct FigureResult {
 pub fn run_figure(planner: &Planner, fig: &Figure) -> Result<FigureResult> {
     let mut rows = Vec::with_capacity(fig.points.len());
     for point in &fig.points {
-        let mut normalized: [Vec<f64>; 4] = Default::default();
+        let mut algos: Vec<String> = Vec::new();
+        let mut normalized: Vec<Vec<f64>> = Vec::new();
+        let mut secs: Vec<f64> = Vec::new();
         let mut lbs = Vec::new();
-        let mut secs = [0.0f64; 5];
+        let mut lb_seconds = 0.0f64;
         let mut backend = "";
         for &seed in &fig.seeds {
             let inst = instantiate(&point.trace, seed);
             let row = planner.evaluate(&inst)?;
-            for k in 0..4 {
-                normalized[k].push(row.normalized[k]);
+            if algos.is_empty() {
+                algos = row.algos.iter().map(|a| a.label.clone()).collect();
+                normalized = vec![Vec::new(); algos.len()];
+                secs = vec![0.0; algos.len()];
+            }
+            anyhow::ensure!(
+                row.algos.len() == algos.len(),
+                "portfolio shape changed mid-sweep"
+            );
+            for (k, a) in row.algos.iter().enumerate() {
+                normalized[k].push(a.normalized);
+                secs[k] += a.seconds / fig.seeds.len() as f64;
             }
             lbs.push(row.lower_bound);
-            for k in 0..5 {
-                secs[k] += row.seconds[k] / fig.seeds.len() as f64;
-            }
+            lb_seconds += row.lb_seconds / fig.seeds.len() as f64;
             backend = row.backend_used;
         }
         eprintln!(
-            "  [{}] {}: pen={:.3} penF={:.3} lp={:.3} lpF={:.3} ({})",
+            "  [{}] {}: {} ({})",
             fig.id,
             point.label,
-            crate::util::stats::mean(&normalized[0]),
-            crate::util::stats::mean(&normalized[1]),
-            crate::util::stats::mean(&normalized[2]),
-            crate::util::stats::mean(&normalized[3]),
+            algos
+                .iter()
+                .zip(&normalized)
+                .map(|(a, n)| format!("{a}={:.3}", crate::util::stats::mean(n)))
+                .collect::<Vec<_>>()
+                .join(" "),
             backend,
         );
         rows.push(Row {
             label: point.label.clone(),
-            normalized: [
-                Summary::of(&normalized[0]),
-                Summary::of(&normalized[1]),
-                Summary::of(&normalized[2]),
-                Summary::of(&normalized[3]),
-            ],
+            algos,
+            normalized: normalized.iter().map(|n| Summary::of(n)).collect(),
             lower_bound: Summary::of(&lbs),
             seconds: secs,
+            lb_seconds,
             backend,
         });
     }

@@ -21,7 +21,7 @@ use super::scenarios;
 pub fn fig1(planner: &Planner) -> Result<(String, Json)> {
     let inst = scenarios::figure1_instance();
     let row = planner.evaluate(&inst)?;
-    let aware_cost = row.costs.iter().copied().fold(f64::INFINITY, f64::min);
+    let aware_cost = row.algos.iter().map(|a| a.cost).fold(f64::INFINITY, f64::min);
 
     let collapsed = inst.collapse_timeline();
     let opt = crate::algo::exact::optimal(&collapsed);
@@ -51,7 +51,7 @@ pub fn fig5(planner: &Planner) -> Result<(String, Json)> {
     let (solver, backend) = planner.solver_for(&tr);
     let outcome = solve_lp_mapping(&tr, solver.as_ref())?;
     let mut xs = outcome.x_max.clone();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(f64::total_cmp);
 
     let n = xs.len() as f64;
     let frac_ge = |t: f64| xs.iter().filter(|&&v| v >= t).count() as f64 / n;
@@ -109,22 +109,33 @@ pub fn tab1() -> (String, Json) {
 pub fn running_time(planner: &Planner, quick: bool) -> Result<(String, Json)> {
     let n = if quick { 500 } else { 2000 };
     let inst = instantiate(&TraceKind::GctLike { n, m: 13, priced: true }, 1);
-    let row = planner.evaluate(&inst)?;
-    let text = format!(
+    // sequential fold: per-algorithm seconds must be uncontended here
+    let row = planner.evaluate_sequential(&inst)?;
+    let mut text = format!(
         "== rt — running time, GCT-like n={n}, m=13 (paper section VI-E) ==\n\
-         backend          : {}\n\
-         PenaltyMap       : {:7.2}s   (paper: ~1s)\n\
-         PenaltyMap-F     : {:7.2}s\n\
-         LP-map (solve+place) : {:7.2}s   (paper: LP solver ~15min + ~1s mapping)\n\
-         LP-map-F         : {:7.2}s\n\
-         lower bound extra: {:7.3}s\n",
-        row.backend_used, row.seconds[0], row.seconds[1], row.seconds[2], row.seconds[3],
-        row.seconds[4]
+         backend          : {}\n",
+        row.backend_used
     );
+    for a in &row.algos {
+        text.push_str(&format!(
+            "         {:<17}: {:7.2}s   ({})\n",
+            a.label,
+            a.seconds,
+            a.stages
+                .iter()
+                .map(|s| format!("{} {:.2}s", s.stage, s.seconds))
+                .collect::<Vec<_>>()
+                .join(", ")
+        ));
+    }
+    text.push_str(&format!("         lower bound extra: {:7.3}s\n", row.lb_seconds));
+    // per-algorithm wall seconds + the LB extra, in portfolio order
+    let mut seconds: Vec<f64> = row.algos.iter().map(|a| a.seconds).collect();
+    seconds.push(row.lb_seconds);
     let json = Json::obj(vec![
         ("id", Json::Str("rt".into())),
         ("n", Json::Num(n as f64)),
-        ("seconds", Json::arr_f64(&row.seconds)),
+        ("seconds", Json::arr_f64(&seconds)),
         ("backend", Json::Str(row.backend_used.to_string())),
     ]);
     Ok((text, json))
@@ -138,7 +149,7 @@ pub fn no_timeline(planner: &Planner, quick: bool) -> Result<(String, Json)> {
         let inst = instantiate(&TraceKind::GctLike { n: 1000, m: 10, priced: false }, seed);
         // timeline-aware LP-map-F cost
         let row = planner.evaluate(&inst)?;
-        let aware = row.costs[3];
+        let aware = row.get("LP-map-F").expect("preset portfolio").cost;
         // timeline-agnostic *lower bound* (paper compares against an LB)
         let collapsed = trim(&inst.collapse_timeline()).instance;
         let (solver, _) = planner.solver_for(&collapsed);

@@ -150,7 +150,7 @@ mod tests {
         let tr = generate_trace(2000, 2);
         let med_cpu = {
             let mut v: Vec<f64> = tr.tasks.iter().map(|t| t.demand[0]).collect();
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(f64::total_cmp);
             v[v.len() / 2]
         };
         assert!(med_cpu < 0.05, "median cpu demand {med_cpu}");

@@ -83,7 +83,8 @@ pub fn generate(params: &SynthParams, seed: u64) -> Instance {
         .max_by(|&a, &b| {
             let min_a = node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
             let min_b = node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
-            min_a.partial_cmp(&min_b).unwrap()
+            // NaN-safe with an index tie-break (last max wins, as before)
+            min_a.total_cmp(&min_b).then(a.cmp(&b))
         })
         .expect("m >= 1");
     let anchor_cap = node_types[anchor].capacity.clone();

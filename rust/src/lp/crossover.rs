@@ -98,7 +98,7 @@ pub fn crossover(lp: &MappingLp, x: &[f64], alpha: &[f64], tol: f64) -> (Vec<f64
     let mut type_order: Vec<usize> = (0..m).collect();
     let mass: Vec<f64> =
         (0..m).map(|b| (0..n).map(|u| x[u * m + b]).sum()).collect();
-    type_order.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap().then(a.cmp(&b)));
+    type_order.sort_by(|&a, &b| mass[b].total_cmp(&mass[a]).then(a.cmp(&b)));
 
     let mut load = Load::new(lp);
     let mut out = vec![0.0; n * m];
@@ -109,7 +109,7 @@ pub fn crossover(lp: &MappingLp, x: &[f64], alpha: &[f64], tol: f64) -> (Vec<f64
         let mut tasks: Vec<usize> =
             (0..n).filter(|&u| !assigned[u] && x[u * m + b] > 1e-9).collect();
         tasks.sort_by(|&u, &v| {
-            x[v * m + b].partial_cmp(&x[u * m + b]).unwrap().then(u.cmp(&v))
+            x[v * m + b].total_cmp(&x[u * m + b]).then(u.cmp(&v))
         });
         for u in tasks {
             if load.fits(lp, u, b, 1.0, &cap) {
@@ -127,10 +127,7 @@ pub fn crossover(lp: &MappingLp, x: &[f64], alpha: &[f64], tol: f64) -> (Vec<f64
         }
         let mut types: Vec<usize> = (0..m).collect();
         types.sort_by(|&a, &b| {
-            x[u * m + b]
-                .partial_cmp(&x[u * m + a])
-                .unwrap()
-                .then(a.cmp(&b))
+            x[u * m + b].total_cmp(&x[u * m + a]).then(a.cmp(&b))
         });
         {
             // Split across types by remaining slack (descending x order,

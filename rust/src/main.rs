@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use tlrs::algo::pipeline;
 use tlrs::coordinator::config::Backend;
 use tlrs::coordinator::planner::Planner;
 use tlrs::coordinator::service;
@@ -31,7 +32,7 @@ const USAGE: &str = "\
 tlrs — cold-start cluster rightsizing for time-limited tasks (CLOUD'21)
 
 USAGE:
-  tlrs solve   --input inst.json [--algo penalty-map|penalty-map-f|lp-map|lp-map-f]
+  tlrs solve   --input inst.json [--algo <spec>[,<spec>...]]
                [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
   tlrs gen     --kind synth|gct [--n 1000] [--m 10] [--dims 5] [--horizon 24]
                [--seed 1] [--priced] --out inst.json [--csv trace.csv]
@@ -41,6 +42,19 @@ USAGE:
   tlrs ablations [--quick]
   tlrs serve   [--addr 127.0.0.1:7077] [--backend ...]
   tlrs info
+
+ALGO SPECS (--algo, and the service's 'algorithm' field):
+  A preset, a pipeline spec, or several specs separated by commas —
+  multiple specs race in parallel as a portfolio sharing one LP solve,
+  and the min-cost solution wins. The spec token 'portfolio' expands
+  to all four presets and may appear inside comma lists.
+  spec    := portfolio | <head>[:<fit>][+<refine>]...
+  head    := penalty-map | penalty-map-f | lp-map | lp-map-f
+           | penalty | penalty-havg | penalty-hmax | lp
+  fit     := ff | sim | best            (default: best = race both)
+  refine  := fill | ls[:<max_rounds>]   (fill must be the first refine)
+  examples: --algo lp+fill+ls    --algo penalty:ff+ls:16
+            --algo portfolio     --algo lp-map-f+ls,portfolio
 ";
 
 fn main() {
@@ -85,28 +99,30 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
     let tr = trim(&inst).instance;
     let (solver, backend) = planner.solver_for(&tr);
-    use tlrs::algo::algorithms::{lp_map_best, penalty_map_best};
+
+    // --algo: one spec runs a single pipeline; 'portfolio' and/or a
+    // comma-separated list races the specs in parallel on one LP solve
+    // (the service accepts the identical language).
+    let portfolio = pipeline::parse_portfolio(&algo)?;
+
     let t0 = std::time::Instant::now();
-    let (solution, lb) = match algo.as_str() {
-        "penalty-map" => (penalty_map_best(&tr, false), None),
-        "penalty-map-f" => (penalty_map_best(&tr, true), None),
-        "lp-map" => {
-            let r = lp_map_best(&tr, solver.as_ref(), false)?;
-            (r.solution.clone(), Some(r.certified_lb))
-        }
-        "lp-map-f" => {
-            let r = lp_map_best(&tr, solver.as_ref(), true)?;
-            (r.solution.clone(), Some(r.certified_lb))
-        }
-        other => bail!("unknown --algo '{other}'"),
-    };
+    let race = portfolio.run(&tr, solver.as_ref())?;
     let dt = t0.elapsed();
+    let report = race.best();
+    let solution = &report.solution;
+    let lb = race.certified_lb();
     solution
         .verify(&tr)
         .map_err(|v| anyhow::anyhow!("infeasible solution produced: {v:?}"))?;
 
-    let cost = solution.cost(&tr);
-    println!("algorithm      : {algo} ({backend})");
+    let cost = report.cost;
+    println!("algorithm      : {} ({backend})", report.label);
+    if race.reports.len() > 1 {
+        for (i, r) in race.reports.iter().enumerate() {
+            let marker = if i == race.winner { " <- winner" } else { "" };
+            println!("  raced        : {:<24} cost {:.4}{marker}", r.label, r.cost);
+        }
+    }
     println!("tasks / types  : {} / {}", tr.n_tasks(), tr.n_types());
     println!("trimmed T      : {}", tr.horizon);
     println!("nodes purchased: {}", solution.nodes.len());
@@ -114,6 +130,14 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(lb) = lb {
         println!("lower bound    : {lb:.4}  (normalized cost {:.3})", cost / lb);
     }
+    if race.lp_seconds > 0.0 {
+        println!(
+            "lp solve       : {:.3}s (shared across {} pipeline(s))",
+            race.lp_seconds,
+            race.reports.len()
+        );
+    }
+    println!("stage times    : {}", report.stage_summary());
     println!("solve time     : {dt:?}");
     if args.has_flag("replay") {
         let rep = replay(&tr, &solution);

@@ -115,8 +115,8 @@ pub fn simulate_with_hints(
                 .min_by(|&a, &b| {
                     sim_inst.node_types[a]
                         .cost
-                        .partial_cmp(&sim_inst.node_types[b].cost)
-                        .unwrap()
+                        .total_cmp(&sim_inst.node_types[b].cost)
+                        .then(a.cmp(&b))
                 });
             match b {
                 Some(b) => {

@@ -117,23 +117,26 @@ pub fn replay(inst: &Instance, sol: &Solution) -> ReplayReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+    use crate::algo::pipeline::{Penalty, Pipeline};
     use crate::algo::placement::FitPolicy;
-    use crate::algo::twophase::solve_with_mapping;
     use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
     use crate::model::{trim, NodeType, PlacedNode, Task};
 
     #[test]
     fn valid_solution_replays_clean() {
         let inst = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, 9);
         let tr = trim(&inst).instance;
-        let mapping = map_tasks(&tr, MappingPolicy::HAvg);
-        let sol = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
-        let rep = replay(&tr, &sol);
-        assert_eq!(rep.overloads, 0);
-        assert!(rep.avg_utilization > 0.0 && rep.avg_utilization <= 1.0 + 1e-9);
-        assert!(rep.peak_tasks <= 80);
-        assert_eq!(rep.samples.len(), tr.horizon as usize);
+        let rep = Pipeline::new()
+            .map(Penalty::both())
+            .fit(FitPolicy::FirstFit)
+            .run(&tr, &NativePdhgSolver::default())
+            .unwrap();
+        let rr = replay(&tr, &rep.solution);
+        assert_eq!(rr.overloads, 0);
+        assert!(rr.avg_utilization > 0.0 && rr.avg_utilization <= 1.0 + 1e-9);
+        assert!(rr.peak_tasks <= 80);
+        assert_eq!(rr.samples.len(), tr.horizon as usize);
     }
 
     #[test]

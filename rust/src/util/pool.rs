@@ -1,0 +1,50 @@
+//! Scoped-thread worker pool: index-ordered fan-out over a job list.
+//! One subtle concurrency pattern (ticket counter + slot mutex +
+//! `thread::scope`), one home — the portfolio racer and the planner's
+//! sweep pool both run on it.
+
+/// Run `f(i)` for every index in `0..n` on at most `workers` scoped
+/// threads and return the results in index order. Work is distributed
+/// by an atomic ticket counter; output order (and therefore every
+/// downstream index tie-break) is independent of scheduling.
+pub fn run_indexed<R, F>(n: usize, workers: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_keep_index_order() {
+        let out = run_indexed(17, 4, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 0, |i| i + 1), vec![1]);
+        assert_eq!(run_indexed(3, 64, |i| i), vec![0, 1, 2]);
+    }
+}

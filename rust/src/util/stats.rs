@@ -18,11 +18,29 @@ pub fn stddev(xs: &[f64]) -> f64 {
         .sqrt()
 }
 
+/// Index of the first minimum under the NaN-safe total order — the
+/// single first-wins selection rule the pipeline candidate fold, the
+/// portfolio racer and the evaluation layers all share (their
+/// determinism contract requires them to agree on tie direction).
+pub fn argmin_f64(xs: impl IntoIterator<Item = f64>) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, x) in xs.into_iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some((_, b)) => x.total_cmp(&b) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
 /// Linear-interpolated percentile, p in [0, 100].
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -95,5 +113,15 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn argmin_first_wins_and_nan_safe() {
+        assert_eq!(argmin_f64([3.0, 1.0, 2.0]), Some(1));
+        // ties keep the earliest index — the determinism contract
+        assert_eq!(argmin_f64([2.0, 1.0, 1.0, 5.0]), Some(1));
+        assert_eq!(argmin_f64(std::iter::empty::<f64>()), None);
+        // NaN orders greatest under total_cmp, never masking a real min
+        assert_eq!(argmin_f64([f64::NAN, 4.0, 4.0]), Some(1));
     }
 }

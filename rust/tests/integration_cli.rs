@@ -55,6 +55,35 @@ fn gen_solve_lb_roundtrip() {
     let parsed = tlrs::util::json::parse(&std::fs::read_to_string(&sol).unwrap()).unwrap();
     assert!(parsed.get("n_nodes").as_f64().unwrap() >= 1.0);
 
+    // pipeline-spec grammar: a combo no preset reaches runs end-to-end
+    // (LP mapping + cross-fill + local search) and verifies feasible
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--input", inst.to_str().unwrap(), "--algo", "lp+fill+ls",
+        "--backend", "native", "--replay",
+    ]);
+    assert!(ok, "combo solve failed: {stderr}");
+    assert!(stdout.contains("algorithm      : lp+fill+ls"), "{stdout}");
+    assert!(stdout.contains("0 overloads"), "{stdout}");
+    assert!(stdout.contains("stage times"), "{stdout}");
+
+    // comma-separated specs race as a portfolio and report the winner
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--input", inst.to_str().unwrap(),
+        "--algo", "penalty-map-f,lp-map-f", "--backend", "native",
+    ]);
+    assert!(ok, "portfolio solve failed: {stderr}");
+    assert!(stdout.contains("<- winner"), "{stdout}");
+
+    // parse errors teach the valid presets and grammar
+    let (ok, _, stderr) = run(&[
+        "solve", "--input", inst.to_str().unwrap(), "--algo", "magic",
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown algorithm"), "{stderr}");
+    assert!(stderr.contains("penalty-map-f"), "{stderr}");
+    assert!(stderr.contains("lp-map-f"), "{stderr}");
+    assert!(stderr.contains("fill | ls"), "{stderr}");
+
     let (ok, stdout, stderr) =
         run(&["lb", "--input", inst.to_str().unwrap(), "--backend", "native"]);
     assert!(ok, "lb failed: {stderr}");

@@ -1,0 +1,159 @@
+//! Property tests for the pipeline layer: every named preset must
+//! reproduce the seed `Algorithm::run` code path *bit-identically*
+//! (same cost, same assignment, same purchase numbering) on synthetic
+//! and GCT-like scenarios, and the parallel [`Portfolio`] race must
+//! equal the sequential fold member-for-member.
+
+use tlrs::algo::algorithms::{lp_map_best, penalty_map_best, run, Algorithm};
+use tlrs::algo::pipeline::{self, Portfolio};
+use tlrs::io::gct_like;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, Instance, Solution};
+
+fn assert_identical(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{label}: node count");
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(x.type_idx, y.type_idx, "{label}: node {i} type");
+        assert_eq!(x.purchase_order, y.purchase_order, "{label}: node {i} purchase order");
+        assert_eq!(x.tasks, y.tasks, "{label}: node {i} tasks");
+    }
+    assert_eq!(a.assignment, b.assignment, "{label}: assignment");
+}
+
+fn synth_cases() -> Vec<(String, Instance)> {
+    let mut cases = Vec::new();
+    for seed in [3u64, 47] {
+        let inst = generate(&SynthParams { n: 110, m: 6, ..Default::default() }, seed);
+        cases.push((format!("synth seed {seed}"), trim(&inst).instance));
+    }
+    cases
+}
+
+fn gct_cases() -> Vec<(String, Instance)> {
+    let trace = gct_like::generate_trace(1500, 11);
+    let mut cases = Vec::new();
+    for seed in [1u64, 4] {
+        let gct = trace.sample_scenario(220, 9, seed);
+        cases.push((format!("gct seed {seed}"), trim(&gct).instance));
+    }
+    cases
+}
+
+#[test]
+fn penalty_presets_reproduce_seed_path_bit_identically() {
+    for (label, tr) in synth_cases().into_iter().chain(gct_cases()) {
+        for (preset, fill) in [("penalty-map", false), ("penalty-map-f", true)] {
+            let seed_sol = penalty_map_best(&tr, fill);
+            let rep = pipeline::preset(preset)
+                .unwrap()
+                .run(&tr, &NativePdhgSolver::default())
+                .unwrap();
+            assert!(
+                (rep.cost - seed_sol.cost(&tr)).abs() < 1e-12,
+                "{label} {preset}: cost {} vs seed {}",
+                rep.cost,
+                seed_sol.cost(&tr)
+            );
+            assert_identical(&rep.solution, &seed_sol, &format!("{label} {preset}"));
+            assert!(rep.solution.verify(&tr).is_ok(), "{label} {preset}");
+            assert!(rep.certified_lb.is_none(), "{label} {preset}: no LP, no bound");
+        }
+    }
+}
+
+#[test]
+fn lp_presets_reproduce_seed_path_bit_identically() {
+    let solver = NativePdhgSolver::default();
+    for (label, tr) in synth_cases().into_iter().chain(gct_cases()) {
+        for (preset, fill) in [("lp-map", false), ("lp-map-f", true)] {
+            let seed_rep = lp_map_best(&tr, &solver, fill).unwrap();
+            let rep = pipeline::preset(preset).unwrap().run(&tr, &solver).unwrap();
+            assert!(
+                (rep.cost - seed_rep.solution.cost(&tr)).abs() < 1e-12,
+                "{label} {preset}: cost {} vs seed {}",
+                rep.cost,
+                seed_rep.solution.cost(&tr)
+            );
+            assert_identical(&rep.solution, &seed_rep.solution, &format!("{label} {preset}"));
+            // LP diagnostics carry over unchanged
+            let lb = rep.certified_lb.expect("LP preset certifies a bound");
+            assert!((lb - seed_rep.certified_lb).abs() < 1e-12, "{label} {preset}");
+            let stats = rep.lp.as_ref().expect("LP preset keeps stats");
+            assert_eq!(stats.mapping, seed_rep.mapping, "{label} {preset}");
+            assert_eq!(stats.x_max, seed_rep.x_max, "{label} {preset}");
+            assert_eq!(stats.converged, seed_rep.solver_converged, "{label} {preset}");
+        }
+    }
+}
+
+#[test]
+fn algorithm_enum_is_a_faithful_shim() {
+    let solver = NativePdhgSolver::default();
+    let inst = generate(&SynthParams { n: 90, m: 5, ..Default::default() }, 77);
+    let tr = trim(&inst).instance;
+    for algo in Algorithm::all() {
+        let (sol, lp_rep) = run(&tr, algo, &solver).unwrap();
+        let seed_sol = match algo {
+            Algorithm::PenaltyMap => penalty_map_best(&tr, false),
+            Algorithm::PenaltyMapF => penalty_map_best(&tr, true),
+            Algorithm::LpMap => lp_map_best(&tr, &solver, false).unwrap().solution,
+            Algorithm::LpMapF => lp_map_best(&tr, &solver, true).unwrap().solution,
+        };
+        assert_identical(&sol, &seed_sol, &format!("{algo:?}"));
+        assert_eq!(lp_rep.is_some(), algo.uses_lp(), "{algo:?}");
+        if let Some(rep) = lp_rep {
+            assert!(rep.certified_lb > 0.0, "{algo:?}");
+            assert!(rep.certified_lb <= sol.cost(&tr) + 1e-6, "{algo:?}");
+        }
+    }
+}
+
+#[test]
+fn portfolio_race_equals_sequential_fold() {
+    let solver = NativePdhgSolver::default();
+    for (label, tr) in [synth_cases().remove(1), gct_cases().remove(0)] {
+        let par = Portfolio::presets().run(&tr, &solver).unwrap();
+        let seq = Portfolio::presets().run_sequential(&tr, &solver).unwrap();
+        assert_eq!(par.winner, seq.winner, "{label}");
+        assert_eq!(par.reports.len(), seq.reports.len(), "{label}");
+        for (a, b) in par.reports.iter().zip(&seq.reports) {
+            assert_eq!(a.label, b.label, "{label}");
+            assert!((a.cost - b.cost).abs() < 1e-12, "{label} {}", a.label);
+            assert_identical(&a.solution, &b.solution, &format!("{label} {}", a.label));
+        }
+        // the race winner is exactly the sequential best-of fold
+        let fold = seq
+            .reports
+            .iter()
+            .map(|r| r.cost)
+            .fold(f64::INFINITY, f64::min);
+        assert!((par.best().cost - fold).abs() < 1e-12, "{label}");
+        assert!(par.best().solution.verify(&tr).is_ok(), "{label}");
+    }
+}
+
+#[test]
+fn previously_unreachable_combo_runs_and_never_hurts() {
+    // lp+fill+ls: local search refines every fill candidate, so the
+    // raced minimum can only improve on the plain LP-map-F preset
+    let solver = NativePdhgSolver::default();
+    let inst = generate(&SynthParams { n: 130, m: 6, ..Default::default() }, 5);
+    let tr = trim(&inst).instance;
+    let race = Portfolio::new()
+        .add(pipeline::preset("lp-map-f").unwrap())
+        .add(pipeline::parse("lp+fill+ls").unwrap())
+        .run(&tr, &solver)
+        .unwrap();
+    let lpf = &race.reports[0];
+    let combo = &race.reports[1];
+    assert!(combo.solution.verify(&tr).is_ok());
+    assert!(
+        combo.cost <= lpf.cost + 1e-9,
+        "ls made it worse: {} vs {}",
+        combo.cost,
+        lpf.cost
+    );
+    let lb = combo.certified_lb.expect("combo consumed the shared LP");
+    assert!(lb <= combo.cost + 1e-6);
+}

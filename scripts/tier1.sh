@@ -12,6 +12,11 @@ cd "$(dirname "$0")/../rust"
 echo "== tier1: cargo build --release =="
 cargo build --release
 
+echo "== tier1: cargo build --release --examples --benches =="
+# examples and benches are consumers of the public API: compiling them
+# here makes API drift fail the gate instead of rotting silently
+cargo build --release --examples --benches
+
 echo "== tier1: cargo test -q =="
 cargo test -q
 
