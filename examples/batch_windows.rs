@@ -1,39 +1,37 @@
-//! Mixed-archetype workload planning + headroom analysis: builds a
-//! workload from the paper's motivating patterns (always-on baselines,
-//! weekday bursts, nightly batch windows, deadline jobs, duty-cycled
-//! sensors), rightsizes a cluster for it, then stress-tests the plan with
-//! the admission/auto-scaling simulator (the paper's future-work hook).
+//! Mixed-archetype workload planning + headroom analysis through the
+//! unified workload subsystem: one spec string builds the workload (the
+//! paper's motivating archetypes — always-on baselines, weekday bursts,
+//! nightly batch windows, deadline jobs, duty-cycled sensors), a pipeline
+//! rightsizes a cluster for it, and `sim::autoscale::stress` hits the
+//! plan with surprise load drawn from another registered family.
 //!
 //! Run with: cargo run --release --example batch_windows
 
-use tlrs::algo::pipeline::{preset, CrossFill, LocalSearch, Lp, Pipeline};
+use tlrs::algo::pipeline::{CrossFill, LocalSearch, Lp, Pipeline};
 use tlrs::algo::placement::FitPolicy;
-use tlrs::io::patterns::{mixed_workload, WEEK_HOURS};
+use tlrs::io::workload::parse_workload;
 use tlrs::lp::solver::NativePdhgSolver;
-use tlrs::model::{trim, Instance, NodeType, Task};
+use tlrs::model::trim;
 use tlrs::sim::autoscale;
 
 fn main() -> anyhow::Result<()> {
-    // 1. compose the workload from archetypes
-    let tasks = mixed_workload(120, 7);
+    // 1. one spec names the whole workload — same grammar the CLI
+    //    (--workload) and the planning service speak
+    let spec = "mixed:services=120,m=4,dims=2,cap=0.35..1.0,dem=0.02..0.2";
+    let source = parse_workload(spec)?;
+    let inst = source.generate(7)?;
+    println!("workload: {}", source.describe());
     println!(
-        "workload: {} time-limited tasks from 120 services over a {}-hour week",
-        tasks.len(),
-        WEEK_HOURS
+        "  {} tasks on {} node-types over {} slots",
+        inst.n_tasks(),
+        inst.n_types(),
+        inst.horizon
     );
 
-    let catalog = vec![
-        NodeType::new("edge-small", vec![0.35, 0.40], 3.0),
-        NodeType::new("edge-med", vec![0.60, 0.60], 5.0),
-        NodeType::new("dc-large", vec![1.0, 1.0], 8.5),
-    ];
-    let inst = Instance::new(tasks, catalog, WEEK_HOURS);
     let tr = trim(&inst).instance;
     println!("timeline trimmed to {} slots", tr.horizon);
 
-    // 2. rightsize
-    // One pipeline: LP mapping, cross-fill, then local search refining
-    // every candidate — the combo no pre-pipeline preset could reach.
+    // 2. rightsize with LP mapping + cross-fill + local search
     let solver = NativePdhgSolver::default();
     let rep = Pipeline::new()
         .map(Lp)
@@ -57,57 +55,28 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // 3. stress: replay planned load, then +30% surprise bursts
-    let planned = autoscale::simulate(&tr, &plan, &tr.tasks, FitPolicy::FirstFit, false);
+    // 3. stress: replay the planned load, then add a heavy-tailed spiky
+    //    surprise workload from another family in the same registry
+    let surprise = parse_workload(&format!(
+        "spiky:services=30,dims=2,horizon={},dem=0.02..0.15",
+        tr.horizon
+    ))?;
+    let out = autoscale::stress(&tr, plan, surprise.as_ref(), 99, FitPolicy::FirstFit)?;
+    println!("\nsurprise: {} ({} tasks)", out.surprise, out.surprise_tasks);
     println!(
-        "\nplanned load : {:.1}% admitted (expected 100%)",
-        planned.admission_rate() * 100.0
-    );
-
-    let mut surprise = tr.tasks.clone();
-    let extra = mixed_workload(36, 99);
-    let base = surprise.len() as u64;
-    // surprise tasks live on the original hourly timeline; retrim jointly
-    let mut all = inst.tasks.clone();
-    all.extend(extra.iter().map(|t| Task::new(base + t.id, t.demand.clone(), t.start, t.end)));
-    let joint = trim(&Instance::new(all, inst.node_types.clone(), WEEK_HOURS)).instance;
-    surprise = joint.tasks.clone();
-
-    // re-plan cluster on the joint trimmed timeline for a fair replay
-    let joint_rep = preset("lp-map-f").unwrap().run(&joint, &solver)?;
-    let fixed = autoscale::simulate(&joint, &rep_plan_on(&joint, &joint_rep.solution), &surprise, FitPolicy::FirstFit, false);
-    let hybrid = autoscale::simulate(&joint, &plan_shell(&joint, &plan), &surprise, FitPolicy::FirstFit, true);
-    println!(
-        "joint replan : ${:.2} for planned+surprise load",
-        joint_rep.solution.cost(&joint)
+        "planned load : {:.1}% admitted (expected 100%)",
+        out.planned.admission_rate() * 100.0
     );
     println!(
-        "fixed replan cluster admits {:.1}% of planned+surprise arrivals",
-        fixed.admission_rate() * 100.0
+        "fixed cluster: {:.1}% of planned+surprise arrivals admitted",
+        out.fixed.admission_rate() * 100.0
     );
     println!(
-        "original plan + rented overflow: {:.1}% admitted, ${:.2} overflow rent ({} nodes)",
-        hybrid.admission_rate() * 100.0,
-        hybrid.overflow_cost,
-        hybrid.overflow_nodes
+        "hybrid mode  : {:.1}% admitted, ${:.2} overflow rent ({} nodes, {:.1}% of plan)",
+        out.hybrid.admission_rate() * 100.0,
+        out.hybrid.overflow_cost,
+        out.hybrid.overflow_nodes,
+        100.0 * out.hybrid.overflow_cost / out.hybrid.planned_cost
     );
     Ok(())
-}
-
-/// Use a solution's purchased nodes as an empty shell on another instance
-/// with the same node-type catalog.
-fn plan_shell(inst: &Instance, plan: &tlrs::model::Solution) -> tlrs::model::Solution {
-    let mut shell = tlrs::model::Solution::new(inst.n_tasks());
-    for (i, node) in plan.nodes.iter().enumerate() {
-        shell.nodes.push(tlrs::model::PlacedNode {
-            type_idx: node.type_idx,
-            purchase_order: i,
-            tasks: Vec::new(),
-        });
-    }
-    shell
-}
-
-fn rep_plan_on(inst: &Instance, sol: &tlrs::model::Solution) -> tlrs::model::Solution {
-    plan_shell(inst, sol)
 }

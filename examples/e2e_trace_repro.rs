@@ -15,9 +15,10 @@
 
 use tlrs::coordinator::config::Backend;
 use tlrs::coordinator::planner::Planner;
-use tlrs::harness::runner::master_trace;
+use tlrs::harness::runner::{instantiate, master_trace};
 use tlrs::io::files;
-use tlrs::model::{trim, CostModel};
+use tlrs::io::workload::WorkloadSpec;
+use tlrs::model::trim;
 use tlrs::sim::replay::replay;
 use tlrs::util::stats;
 
@@ -53,9 +54,11 @@ fn main() -> anyhow::Result<()> {
         "scenario", "seed", "PenaltyMap", "PenaltyMap-F", "LP-map", "LP-map-F", "backend"
     );
     for &(n, m) in scenarios {
+        // scenarios are workload specs — the same strings the CLI
+        // --workload flag and the service JSON API accept
+        let spec = WorkloadSpec::parse(&format!("gct:n={n},m={m}"))?;
         for &seed in seeds {
-            let mut inst = trace.sample_scenario(n, m, seed);
-            CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+            let inst = instantiate(&spec, seed)?;
             let row = planner.evaluate(&inst)?;
             println!(
                 "n={n:<5} m={m:<5} {seed:>6} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>10}",

@@ -11,7 +11,7 @@
 
 use tlrs::algo::pipeline::{preset, Portfolio};
 use tlrs::io::pricing;
-use tlrs::io::synth::{generate, CostKind, SynthParams};
+use tlrs::io::workload::parse_workload;
 use tlrs::lp::solver::NativePdhgSolver;
 use tlrs::model::trim;
 
@@ -30,19 +30,12 @@ fn main() -> anyhow::Result<()> {
     );
 
     for e in [0.5, 1.0, 2.0] {
-        let params = SynthParams {
-            n: 400,
-            m: 8,
-            dims: 2,
-            horizon: 24,
-            dem_range: (0.02, 0.15),
-            cost_model: CostKind::Fixed {
-                coefficients: pricing::gcp_coefficients(2),
-                exponent: e,
-            },
-            ..Default::default()
-        };
-        let inst = generate(&params, 11);
+        // one workload spec per exponent — `cost=gcp` composes the GCE
+        // rate card onto the synthetic family
+        let source = parse_workload(&format!(
+            "synth:n=400,m=8,dims=2,horizon=24,dem=0.02..0.15,cost=gcp,e={e}"
+        ))?;
+        let inst = source.generate(11)?;
         let tr = trim(&inst).instance;
 
         // race both filling presets in parallel on one shared LP solve

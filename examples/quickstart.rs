@@ -88,5 +88,18 @@ fn main() -> anyhow::Result<()> {
     race.best().solution.verify(&tr).expect("feasible");
     assert!(preset("lp-map-f").is_some());
     println!("\nsolution verified: every (node, timeslot, dimension) within capacity");
+
+    // Step 6: workloads are spec strings too — the same grammar the CLI
+    // --workload flag, the figures and the planning service parse.
+    let source = tlrs::io::workload::parse_workload("mixed:services=40,m=3")?;
+    let mixed = trim(&source.generate(1)?).instance;
+    let rep = preset("lp-map-f").unwrap().run(&mixed, &solver)?;
+    println!(
+        "\nworkload '{}' ({}):\n  {} tasks planned at ${:.2}",
+        source.label(),
+        source.describe(),
+        mixed.n_tasks(),
+        rep.cost
+    );
     Ok(())
 }

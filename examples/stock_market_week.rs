@@ -11,26 +11,26 @@
 
 use tlrs::algo::pipeline::{preset, Portfolio};
 use tlrs::harness::scenarios::figure2_tasks;
+use tlrs::io::patterns::{Pattern, Timeline};
 use tlrs::lp::solver::NativePdhgSolver;
-use tlrs::model::{trim, Instance, NodeType, Task};
+use tlrs::model::{trim, Instance, NodeType};
 use tlrs::sim::replay::replay;
 
 fn main() -> anyhow::Result<()> {
     // Figure 2's six tasks: T1 baseline all week, T2-T6 market-hours bursts.
     let mut tasks = figure2_tasks();
 
-    // Plus overnight batch analytics: 2:00-5:00 every night.
+    // Plus overnight batch analytics: three shards, 2:00-5:00 every
+    // night, expressed with the pattern library on the hourly week.
+    let week = Timeline::hourly_week();
     let mut next_id = 100u64;
-    for day in 0..7u32 {
-        for shard in 0..3 {
-            tasks.push(Task::new(
-                next_id,
-                vec![0.20 + 0.05 * shard as f64, 0.15],
-                day * 24 + 2,
-                day * 24 + 4,
-            ));
-            next_id += 1;
-        }
+    for shard in 0..3 {
+        let batch = Pattern::NightlyBatch {
+            demand: vec![0.20 + 0.05 * shard as f64, 0.15],
+            start_hour: 2,
+            duration: 3,
+        };
+        tasks.extend(batch.expand(week, &mut next_id)?);
     }
 
     // Node catalog: a big general-purpose shape and a small edge shape.

@@ -52,6 +52,25 @@ fn main() {
         map_tasks(&tr, MappingPolicy::HAvg)
     }));
 
+    // mixed-pattern point: a non-uniform timeline (bursts, batch windows,
+    // duty cycles) from the workload registry, so BENCH numbers cover the
+    // shaped loads the pattern families generate
+    let mixed = tlrs::io::workload::parse_workload(
+        "mixed:services=300,m=6,dims=5,horizon=168",
+    )
+    .expect("registered family")
+    .generate(4)
+    .expect("feasible mixed workload");
+    let mixed = trim(&mixed).instance;
+    let n_mixed = mixed.n_tasks();
+    let mapping = map_tasks(&mixed, MappingPolicy::HAvg);
+    results.push(bench(&format!("first_fit/mixed n={n_mixed}"), budget, || {
+        solve_with_mapping(&mixed, &mapping, FitPolicy::FirstFit, false)
+    }));
+    results.push(bench(&format!("cross_fill/mixed n={n_mixed}"), budget, || {
+        solve_with_filling(&mixed, &mapping, FitPolicy::FirstFit)
+    }));
+
     // T sweep: same workload over a growing (untrimmed) timeline.
     // Three variants so the index win is separable from threading:
     // indexed (production: parallel), indexed-seq (one thread), dense

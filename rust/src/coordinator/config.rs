@@ -1,8 +1,13 @@
 //! Experiment/scenario configuration (Table I defaults + JSON overrides).
+//!
+//! Workloads are named by `io::workload` spec strings everywhere; the old
+//! closed [`TraceKind`] enum survives only as a shim that renders itself
+//! into a spec for the shared parser.
 
 use anyhow::{bail, Result};
 
-use crate::io::synth::{CostKind, SynthParams};
+use crate::io::synth::SynthParams;
+use crate::io::workload::{self, WorkloadSpec};
 use crate::util::json::Json;
 
 /// Which LP backend the coordinator should use.
@@ -36,7 +41,9 @@ impl Backend {
     }
 }
 
-/// Source of the workload.
+/// Source of the workload — SHIM ONLY. The two historic variants render
+/// into `io::workload` specs; new code should hold a [`WorkloadSpec`]
+/// (any registered family) instead of this closed enum.
 #[derive(Clone, Debug)]
 pub enum TraceKind {
     Synthetic(SynthParams),
@@ -44,11 +51,29 @@ pub enum TraceKind {
     GctLike { n: usize, m: usize, priced: bool },
 }
 
+impl TraceKind {
+    /// Render into the spec grammar the rest of the system speaks.
+    pub fn to_spec(&self) -> WorkloadSpec {
+        match self {
+            TraceKind::Synthetic(p) => workload::spec_of_synth(p),
+            TraceKind::GctLike { n, m, priced } => {
+                let mut spec = WorkloadSpec::parse("gct").expect("gct is registered");
+                spec.set("n", n.to_string());
+                spec.set("m", m.to_string());
+                if *priced {
+                    spec.set("priced", "");
+                }
+                spec
+            }
+        }
+    }
+}
+
 /// One experiment scenario (a figure data point before seeding).
 #[derive(Clone, Debug)]
 pub struct Scenario {
     pub label: String,
-    pub trace: TraceKind,
+    pub workload: WorkloadSpec,
     pub seeds: Vec<u64>,
 }
 
@@ -58,41 +83,11 @@ pub fn table1_defaults() -> SynthParams {
 }
 
 /// Parse a synthetic-scenario override from JSON, starting at defaults.
+/// Thin shim over [`workload::synth_params_from_json`]: accepts the
+/// `"cost_model": "fixed"` + `"coefficients"` form and rejects unknown
+/// keys instead of silently ignoring them.
 pub fn synth_from_json(v: &Json) -> Result<SynthParams> {
-    let mut p = table1_defaults();
-    if let Some(n) = v.get("n").as_usize() {
-        p.n = n;
-    }
-    if let Some(m) = v.get("m").as_usize() {
-        p.m = m;
-    }
-    if let Some(d) = v.get("dims").as_usize() {
-        p.dims = d;
-    }
-    if let Some(t) = v.get("horizon").as_usize() {
-        p.horizon = t as u32;
-    }
-    if let Some(r) = v.get("dem_range").to_f64_vec() {
-        if r.len() != 2 {
-            bail!("dem_range needs two entries");
-        }
-        p.dem_range = (r[0], r[1]);
-    }
-    if let Some(r) = v.get("cap_range").to_f64_vec() {
-        if r.len() != 2 {
-            bail!("cap_range needs two entries");
-        }
-        p.cap_range = (r[0], r[1]);
-    }
-    match v.get("cost_model").as_str() {
-        None | Some("homogeneous") => {}
-        Some("heterogeneous") => {
-            let e = v.get("exponent").as_f64().unwrap_or(1.0);
-            p.cost_model = CostKind::HeterogeneousRandom { exponent: e };
-        }
-        Some(other) => bail!("unknown cost_model '{other}'"),
-    }
-    Ok(p)
+    workload::synth_params_from_json(v)
 }
 
 /// Default seed list: 5 random inputs per scenario (paper section VI-A).
@@ -107,6 +102,7 @@ pub fn default_seeds(quick: bool) -> Vec<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::io::synth::CostKind;
     use crate::util::json;
 
     #[test]
@@ -135,12 +131,55 @@ mod tests {
     }
 
     #[test]
+    fn json_fixed_cost_model() {
+        let v = json::parse(
+            r#"{"n": 40, "dims": 2, "cost_model": "fixed",
+                "coefficients": [0.7, 0.3], "exponent": 0.5}"#,
+        )
+        .unwrap();
+        let p = synth_from_json(&v).unwrap();
+        assert!(matches!(
+            &p.cost_model,
+            CostKind::Fixed { coefficients, exponent }
+                if coefficients == &vec![0.7, 0.3] && *exponent == 0.5
+        ));
+    }
+
+    #[test]
     fn bad_configs_rejected() {
         assert!(Backend::parse("quantum").is_err());
         let v = json::parse(r#"{"dem_range": [0.1]}"#).unwrap();
         assert!(synth_from_json(&v).is_err());
         let v = json::parse(r#"{"cost_model": "mystery"}"#).unwrap();
         assert!(synth_from_json(&v).is_err());
+        // unknown keys no longer silently ignored
+        let v = json::parse(r#"{"n": 10, "horizons": 5}"#).unwrap();
+        let err = synth_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("unknown key 'horizons'"), "{err}");
+        // fixed without coefficients
+        let v = json::parse(r#"{"cost_model": "fixed"}"#).unwrap();
+        assert!(synth_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn trace_kind_shim_renders_specs() {
+        let spec = TraceKind::GctLike { n: 500, m: 7, priced: true }.to_spec();
+        assert_eq!(spec.render(), "gct:m=7,n=500,priced");
+        let mut p = SynthParams::default();
+        p.dims = 7;
+        let spec = TraceKind::Synthetic(p).to_spec();
+        assert_eq!(spec.render(), "synth:dims=7");
+        // the rendered shim spec round-trips through the shared parser
+        assert!(spec.source().is_ok());
+        // fixed-coefficient cost models render to cost=fixed,coef=... and
+        // still parse (the grammar is complete over SynthParams)
+        let mut p = SynthParams::default();
+        p.dims = 2;
+        p.cost_model =
+            CostKind::Fixed { coefficients: vec![0.7, 0.3], exponent: 2.0 };
+        let spec = TraceKind::Synthetic(p).to_spec();
+        assert_eq!(spec.render(), "synth:coef=0.7;0.3,cost=fixed,dims=2,e=2");
+        assert!(spec.source().is_ok());
     }
 
     #[test]

@@ -2,12 +2,17 @@
 //!
 //! Request (one line):
 //!   {"instance": {<io::files instance format>}, "algorithm": "lp-map-f"}
-//! `algorithm` accepts the same language as the CLI `--algo` flag
-//! (both call `algo::pipeline::parse_portfolio`): preset names,
-//! compositions like "lp+fill+ls", the token "portfolio", and
-//! comma-separated lists that race in parallel on one LP solve —
-//! see `algo::pipeline::SPEC_GRAMMAR`. For a multi-pipeline race the
-//! response describes the winner, plus a "raced" array of member costs.
+//! or, generating the workload server-side through the shared registry:
+//!   {"workload": "gct:n=500,m=10,priced", "seed": 3, "algorithm": ...}
+//! `workload` accepts the same spec language as the CLI `--workload`
+//! flag (any registered family; see `io::workload::WORKLOAD_GRAMMAR`) or
+//! a JSON object form `{"family": ..., <keys>...}`. `algorithm` accepts
+//! the same language as the CLI `--algo` flag (both call
+//! `algo::pipeline::parse_portfolio`): preset names, compositions like
+//! "lp+fill+ls", the token "portfolio", and comma-separated lists that
+//! race in parallel on one LP solve — see `algo::pipeline::SPEC_GRAMMAR`.
+//! For a multi-pipeline race the response describes the winner, plus a
+//! "raced" array of member costs.
 //! Response (one line):
 //!   {"ok": true, "cost": ..., "normalized_cost": ..., "n_nodes": ...,
 //!    "nodes_per_type": [...], "backend": "...", "seconds": ...,
@@ -42,7 +47,29 @@ pub fn handle_request(planner: &Planner, line: &str) -> String {
 
 fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
     let req = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let inst = files::instance_from_json(req.get("instance")).context("instance")?;
+    // either an inline instance or a server-side generated workload
+    let mut workload_used: Option<(String, u64)> = None;
+    let inst = match (req.get("instance"), req.get("workload")) {
+        (Json::Null, Json::Null) => {
+            anyhow::bail!("request needs an 'instance' or a 'workload'")
+        }
+        (inst_json, Json::Null) => {
+            files::instance_from_json(inst_json).context("instance")?
+        }
+        (Json::Null, w) => {
+            let source = crate::io::workload::source_from_json(w)?;
+            let seed = match req.get("seed") {
+                Json::Null => 1,
+                s => s
+                    .as_usize()
+                    .context("'seed' must be a non-negative integer")?
+                    as u64,
+            };
+            workload_used = Some((source.label(), seed));
+            source.generate(seed)?
+        }
+        _ => anyhow::bail!("request has both 'instance' and 'workload'"),
+    };
     anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
     let t0 = std::time::Instant::now();
@@ -94,6 +121,10 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
             ),
         ),
     ];
+    if let Some((label, seed)) = workload_used {
+        fields.push(("workload", Json::Str(label)));
+        fields.push(("seed", Json::Num(seed as f64)));
+    }
     if let Some(lb) = lb {
         fields.push(("lower_bound", Json::Num(lb)));
         fields.push(("normalized_cost", Json::Num(cost / lb.max(1e-12))));
@@ -211,6 +242,71 @@ mod tests {
         for r in raced {
             assert!(cost <= r.get("cost").as_f64().unwrap() + 1e-9);
         }
+    }
+
+    #[test]
+    fn workload_spec_requests() {
+        let p = planner();
+        // spec-string form, any registered family
+        let req = Json::obj(vec![
+            ("workload", Json::Str("mixed:services=15,m=3".into())),
+            ("seed", Json::Num(4.0)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+        ]);
+        let resp = handle_request(&p, &req.to_string());
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{resp}");
+        assert_eq!(v.get("workload").as_str(), Some("mixed:m=3,services=15"));
+        assert_eq!(v.get("seed").as_usize(), Some(4));
+        // the generated instance matches a client-side generation
+        let inst = crate::io::workload::parse_workload("mixed:services=15,m=3")
+            .unwrap()
+            .generate(4)
+            .unwrap();
+        let req2 = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+        ]);
+        let v2 = json::parse(&handle_request(&p, &req2.to_string())).unwrap();
+        assert_eq!(v.get("cost").as_f64(), v2.get("cost").as_f64(), "{resp}");
+
+        // JSON object form with the fixed cost model
+        let req = Json::obj(vec![
+            (
+                "workload",
+                json::parse(
+                    r#"{"family": "synth", "n": 30, "m": 3, "dims": 2,
+                        "cost_model": "fixed", "coefficients": [2.0, 1.0]}"#,
+                )
+                .unwrap(),
+            ),
+            ("algorithm", Json::Str("penalty-map-f".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+
+        // non-integer seeds are rejected, not silently defaulted
+        let req = Json::obj(vec![
+            ("workload", Json::Str("synth:n=10,m=2".into())),
+            ("seed", Json::Str("7".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("seed"), "{v:?}");
+
+        // bad specs fail with the family catalog, not a crash
+        let req = Json::obj(vec![("workload", Json::Str("warp:n=3".into()))]);
+        let resp = handle_request(&p, &req.to_string());
+        let v = json::parse(&resp).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("invalid workload spec"));
+        // both instance and workload is ambiguous
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("workload", Json::Str("synth".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
     }
 
     #[test]

@@ -17,8 +17,7 @@ use crate::algo::pipeline::{self, CrossFill, LocalSearch, Oracle, Pipeline};
 use crate::algo::placement::FitPolicy;
 use crate::algo::segregate;
 use crate::algo::twophase::solve_with_mapping;
-use crate::coordinator::config::TraceKind;
-use crate::io::synth::SynthParams;
+use crate::io::workload::WorkloadSpec;
 use crate::lp::pdhg::{self, PdhgOptions};
 use crate::lp::solver::NativePdhgSolver;
 use crate::lp::{scaling, MappingLp};
@@ -31,10 +30,12 @@ pub fn run(quick: bool) -> Result<String> {
     let seeds: Vec<u64> = if quick { vec![1, 2] } else { vec![1, 2, 3, 4, 5] };
     let mut out = String::from("== ablations (normalized cost / iterations) ==\n");
 
-    // workloads: synthetic default + GCT-like
+    // workloads: synthetic default + GCT-like, as specs through the
+    // shared workload parser
+    let n = if quick { 300 } else { 1000 };
     let traces = [
-        ("synth", TraceKind::Synthetic(SynthParams { n: if quick { 300 } else { 1000 }, ..Default::default() })),
-        ("gct", TraceKind::GctLike { n: if quick { 300 } else { 1000 }, m: 10, priced: false }),
+        ("synth", WorkloadSpec::parse(&format!("synth:n={n}"))?),
+        ("gct", WorkloadSpec::parse(&format!("gct:n={n},m=10"))?),
     ];
 
     for (tname, trace) in &traces {
@@ -42,7 +43,7 @@ pub fn run(quick: bool) -> Result<String> {
         let mut lp_iters_plain = Vec::new();
         let mut norm = vec![Vec::new(); 7]; // variants below
         for &seed in &seeds {
-            let inst = instantiate(trace, seed);
+            let inst = instantiate(trace, seed)?;
             let tr = trim(&inst).instance;
             let solver = NativePdhgSolver::default();
 

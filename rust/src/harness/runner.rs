@@ -1,39 +1,26 @@
 //! Figure runner: instantiates scenarios, evaluates all algorithms over
 //! the seed set, and aggregates paper-style rows.
 
-use std::sync::OnceLock;
-
 use anyhow::Result;
 
-use crate::coordinator::config::TraceKind;
 use crate::coordinator::planner::Planner;
-use crate::io::gct_like::{self, Trace};
-use crate::io::synth;
-use crate::model::{CostModel, Instance};
+use crate::io::gct_like::Trace;
+use crate::io::workload::{self, WorkloadSpec};
+use crate::model::Instance;
 use crate::util::stats::Summary;
 
 use super::scenarios::Figure;
 
 /// Master GCT-like trace: ~13K tasks, 13 shapes (paper section VI-A),
-/// generated once per process.
+/// generated once per process (cached by `io::workload`).
 pub fn master_trace() -> &'static Trace {
-    static TRACE: OnceLock<Trace> = OnceLock::new();
-    TRACE.get_or_init(|| gct_like::generate_trace(13_000, 0x6c7_2019))
+    workload::master_trace()
 }
 
-/// Materialize the instance for a trace kind and seed.
-pub fn instantiate(trace: &TraceKind, seed: u64) -> Instance {
-    match trace {
-        TraceKind::Synthetic(params) => synth::generate(params, seed),
-        TraceKind::GctLike { n, m, priced } => {
-            let mut inst = master_trace().sample_scenario(*n, *m, seed);
-            if !priced {
-                // homogeneous-linear experiments re-price cap-sum = cost
-                CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
-            }
-            inst
-        }
-    }
+/// Materialize the instance for a workload spec and seed, through the
+/// same registry every other entry point uses.
+pub fn instantiate(spec: &WorkloadSpec, seed: u64) -> Result<Instance> {
+    spec.source()?.generate(seed)
 }
 
 /// Aggregated results for one figure point. Algorithm columns are
@@ -85,7 +72,7 @@ pub fn run_figure(planner: &Planner, fig: &Figure) -> Result<FigureResult> {
         let mut lb_seconds = 0.0f64;
         let mut backend = "";
         for &seed in &fig.seeds {
-            let inst = instantiate(&point.trace, seed);
+            let inst = instantiate(&point.workload, seed)?;
             let row = planner.evaluate(&inst)?;
             if algos.is_empty() {
                 algos = row.algos.iter().map(|a| a.label.clone()).collect();
@@ -141,23 +128,29 @@ mod tests {
     use crate::harness::scenarios;
 
     #[test]
-    fn instantiate_both_kinds() {
-        let s = instantiate(
-            &TraceKind::Synthetic(synth::SynthParams { n: 30, m: 3, ..Default::default() }),
-            1,
-        );
-        assert_eq!(s.n_tasks(), 30);
-        let g = instantiate(&TraceKind::GctLike { n: 50, m: 5, priced: false }, 1);
+    fn instantiate_specs() {
+        let spec = WorkloadSpec::parse("synth:n=30,m=3").unwrap();
+        assert_eq!(instantiate(&spec, 1).unwrap().n_tasks(), 30);
+        let g = instantiate(&WorkloadSpec::parse("gct:n=50,m=5").unwrap(), 1).unwrap();
         assert_eq!(g.n_tasks(), 50);
         // homogeneous re-pricing: cost == capacity sum
         for b in &g.node_types {
             let sum: f64 = b.capacity.iter().sum();
             assert!((b.cost - sum).abs() < 1e-12);
         }
-        let gp = instantiate(&TraceKind::GctLike { n: 50, m: 5, priced: true }, 1);
+        let gp =
+            instantiate(&WorkloadSpec::parse("gct:n=50,m=5,priced").unwrap(), 1).unwrap();
         for b in &gp.node_types {
             assert!(b.cost > 0.0);
         }
+        // pattern families flow through the same entry point
+        let mixed =
+            instantiate(&WorkloadSpec::parse("mixed:services=10,m=3").unwrap(), 2).unwrap();
+        assert!(mixed.is_feasible());
+        // bad specs error instead of aborting the process
+        let mut bad = WorkloadSpec::parse("synth").unwrap();
+        bad.set("n", "zero");
+        assert!(instantiate(&bad, 1).is_err());
     }
 
     #[test]
@@ -167,10 +160,8 @@ mod tests {
         let mut fig = scenarios::figure("fig7a", true).unwrap();
         fig.seeds = vec![1];
         for p in fig.points.iter_mut() {
-            if let TraceKind::Synthetic(sp) = &mut p.trace {
-                sp.n = 60;
-                sp.m = 4;
-            }
+            p.workload.set("n", "60");
+            p.workload.set("m", "4");
         }
         fig.points.truncate(2);
         let res = run_figure(&planner, &fig).unwrap();

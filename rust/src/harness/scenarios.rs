@@ -1,15 +1,19 @@
 //! Scenario definitions for every figure/table in the paper's evaluation
 //! (DESIGN.md section 5 maps each id to the paper artifact).
+//!
+//! Every figure point names its workload with an `io::workload` spec
+//! string, parsed by the same parser the CLI `--workload` flag and the
+//! service JSON API use — figures are just another spec consumer.
 
-use crate::coordinator::config::{default_seeds, TraceKind};
-use crate::io::synth::{CostKind, SynthParams};
+use crate::coordinator::config::default_seeds;
+use crate::io::workload::WorkloadSpec;
 use crate::model::{Instance, NodeType, Task};
 
 /// One figure data point (x-axis value), evaluated over several seeds.
 #[derive(Clone, Debug)]
 pub struct Point {
     pub label: String,
-    pub trace: TraceKind,
+    pub workload: WorkloadSpec,
 }
 
 /// A figure: an ordered list of points plus presentation metadata.
@@ -22,10 +26,14 @@ pub struct Figure {
     pub seeds: Vec<u64>,
 }
 
-fn synth(f: impl FnOnce(&mut SynthParams)) -> TraceKind {
-    let mut p = SynthParams::default();
-    f(&mut p);
-    TraceKind::Synthetic(p)
+/// Parse a figure workload spec (figure definitions are code, so a bad
+/// spec is a programmer error worth failing loudly on).
+fn w(spec: &str) -> WorkloadSpec {
+    WorkloadSpec::parse(spec).unwrap_or_else(|e| panic!("figure spec '{spec}': {e:#}"))
+}
+
+fn point(label: String, spec: &str) -> Point {
+    Point { label, workload: w(spec) }
 }
 
 /// All figure ids, in paper order.
@@ -45,10 +53,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "D",
             points: [2usize, 5, 7]
                 .iter()
-                .map(|&d| Point {
-                    label: format!("D={d}"),
-                    trace: synth(|p| p.dims = d),
-                })
+                .map(|&d| point(format!("D={d}"), &format!("synth:dims={d}")))
                 .collect(),
             seeds,
         },
@@ -58,10 +63,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "m",
             points: [5usize, 10, 15]
                 .iter()
-                .map(|&m| Point {
-                    label: format!("m={m}"),
-                    trace: synth(|p| p.m = m),
-                })
+                .map(|&m| point(format!("m={m}"), &format!("synth:m={m}")))
                 .collect(),
             seeds,
         },
@@ -71,9 +73,11 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "demand",
             points: [(0.01, 0.05), (0.01, 0.1), (0.01, 0.2)]
                 .iter()
-                .map(|&r| Point {
-                    label: format!("[{},{}]", r.0, r.1),
-                    trace: synth(|p| p.dem_range = r),
+                .map(|&r| {
+                    point(
+                        format!("[{},{}]", r.0, r.1),
+                        &format!("synth:dem={}..{}", r.0, r.1),
+                    )
                 })
                 .collect(),
             seeds,
@@ -84,10 +88,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "n",
             points: if quick { vec![250usize, 1000] } else { vec![250, 500, 1000, 1500, 2000] }
                 .into_iter()
-                .map(|n| Point {
-                    label: format!("n={n}"),
-                    trace: TraceKind::GctLike { n, m: 10, priced: false },
-                })
+                .map(|n| point(format!("n={n}"), &format!("gct:n={n},m=10")))
                 .collect(),
             seeds,
         },
@@ -97,10 +98,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "m",
             points: [4usize, 7, 10, 13]
                 .iter()
-                .map(|&m| Point {
-                    label: format!("m={m}"),
-                    trace: TraceKind::GctLike { n: 1000, m, priced: false },
-                })
+                .map(|&m| point(format!("m={m}"), &format!("gct:n=1000,m={m}")))
                 .collect(),
             seeds,
         },
@@ -110,12 +108,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "e",
             points: [0.33f64, 0.5, 1.0, 2.0, 3.0]
                 .iter()
-                .map(|&e| Point {
-                    label: format!("e={e}"),
-                    trace: synth(|p| {
-                        p.cost_model = CostKind::HeterogeneousRandom { exponent: e }
-                    }),
-                })
+                .map(|&e| point(format!("e={e}"), &format!("synth:cost=het,e={e}")))
                 .collect(),
             seeds,
         },
@@ -125,10 +118,7 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             x_name: "m",
             points: [4usize, 7, 10, 13]
                 .iter()
-                .map(|&m| Point {
-                    label: format!("m={m}"),
-                    trace: TraceKind::GctLike { n: 1000, m, priced: true },
-                })
+                .map(|&m| point(format!("m={m}"), &format!("gct:n=1000,m={m},priced")))
                 .collect(),
             seeds,
         },
@@ -139,20 +129,14 @@ pub fn figure(id: &str, quick: bool) -> Option<Figure> {
             points: {
                 let mut pts: Vec<Point> = Vec::new();
                 for n in if quick { vec![250usize, 1000] } else { vec![250, 500, 1000, 1500, 2000] } {
-                    pts.push(Point {
-                        label: format!("hom n={n}"),
-                        trace: TraceKind::GctLike { n, m: 10, priced: false },
-                    });
+                    pts.push(point(format!("hom n={n}"), &format!("gct:n={n},m=10")));
                 }
                 for m in [4usize, 7, 13] {
-                    pts.push(Point {
-                        label: format!("hom m={m}"),
-                        trace: TraceKind::GctLike { n: 1000, m, priced: false },
-                    });
-                    pts.push(Point {
-                        label: format!("priced m={m}"),
-                        trace: TraceKind::GctLike { n: 1000, m, priced: true },
-                    });
+                    pts.push(point(format!("hom m={m}"), &format!("gct:n=1000,m={m}")));
+                    pts.push(point(
+                        format!("priced m={m}"),
+                        &format!("gct:n=1000,m={m},priced"),
+                    ));
                 }
                 pts
             },
@@ -211,6 +195,12 @@ mod tests {
                 let f = figure(id, false).unwrap();
                 assert!(!f.points.is_empty(), "{id}");
                 assert_eq!(f.id, id);
+                // every point's spec builds through the shared parser
+                for p in &f.points {
+                    p.workload.source().unwrap_or_else(|e| {
+                        panic!("{id} point {}: {e:#}", p.label)
+                    });
+                }
             }
         }
     }

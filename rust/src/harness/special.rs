@@ -6,9 +6,9 @@ use anyhow::Result;
 
 use crate::algo::lpmap::solve_lp_mapping;
 use crate::algo::lowerbound;
-use crate::coordinator::config::TraceKind;
 use crate::coordinator::planner::Planner;
 use crate::io::synth::SynthParams;
+use crate::io::workload::WorkloadSpec;
 use crate::model::trim;
 use crate::util::json::Json;
 
@@ -43,10 +43,7 @@ pub fn fig1(planner: &Planner) -> Result<(String, Json)> {
 /// Figure 5: x_max(u) distribution on the paper's sample configuration
 /// (n=500, m=10, D=5, T=24).
 pub fn fig5(planner: &Planner) -> Result<(String, Json)> {
-    let inst = instantiate(
-        &TraceKind::Synthetic(SynthParams { n: 500, ..Default::default() }),
-        1,
-    );
+    let inst = instantiate(&WorkloadSpec::parse("synth:n=500")?, 1)?;
     let tr = trim(&inst).instance;
     let (solver, backend) = planner.solver_for(&tr);
     let outcome = solve_lp_mapping(&tr, solver.as_ref())?;
@@ -108,7 +105,7 @@ pub fn tab1() -> (String, Json) {
 /// Section VI-E: running-time profile on the largest GCT configuration.
 pub fn running_time(planner: &Planner, quick: bool) -> Result<(String, Json)> {
     let n = if quick { 500 } else { 2000 };
-    let inst = instantiate(&TraceKind::GctLike { n, m: 13, priced: true }, 1);
+    let inst = instantiate(&WorkloadSpec::parse(&format!("gct:n={n},m=13,priced"))?, 1)?;
     // sequential fold: per-algorithm seconds must be uncontended here
     let row = planner.evaluate_sequential(&inst)?;
     let mut text = format!(
@@ -145,8 +142,9 @@ pub fn running_time(planner: &Planner, quick: bool) -> Result<(String, Json)> {
 pub fn no_timeline(planner: &Planner, quick: bool) -> Result<(String, Json)> {
     let seeds: Vec<u64> = if quick { vec![1] } else { vec![1, 2, 3] };
     let mut factors = Vec::new();
+    let spec = WorkloadSpec::parse("gct:n=1000,m=10")?;
     for &seed in &seeds {
-        let inst = instantiate(&TraceKind::GctLike { n: 1000, m: 10, priced: false }, seed);
+        let inst = instantiate(&spec, seed)?;
         // timeline-aware LP-map-F cost
         let row = planner.evaluate(&inst)?;
         let aware = row.get("LP-map-F").expect("preset portfolio").cost;

@@ -1,8 +1,10 @@
-//! Loaders and generators: synthetic benchmark, GCT-like trace, pricing,
-//! and on-disk formats.
+//! Loaders and generators: the unified workload subsystem (spec grammar +
+//! family registry), synthetic benchmark, GCT-like trace, the pattern
+//! library, pricing, and on-disk formats.
 
 pub mod files;
 pub mod gct_like;
 pub mod patterns;
 pub mod pricing;
 pub mod synth;
+pub mod workload;

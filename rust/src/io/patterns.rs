@@ -1,15 +1,52 @@
 //! Workload pattern library — the task archetypes the paper's introduction
 //! motivates: load bursts during peak hours, nightly batch windows,
 //! deadline jobs, duty-cycled sensors and always-on baselines. Patterns
-//! compose into mixed workloads for the examples and ablation studies.
+//! expand on any [`Timeline`] (arbitrary horizon, arbitrary day length)
+//! and any demand dimensionality, and compose into the first-class
+//! workload families `io::workload` registers.
+//!
+//! Infeasible parameters (a deadline job that cannot fit its window, a
+//! duty cycle longer than its period) are *data* errors, not programmer
+//! errors: expansion returns `Result` so bad CLI/service input surfaces
+//! as a parse-style error instead of aborting the process.
+
+use anyhow::{bail, ensure, Result};
 
 use crate::model::Task;
 use crate::util::rng::Rng;
 
-/// Hourly slots over one week.
+/// Hourly slots over one week (the classic pattern timeline).
 pub const WEEK_HOURS: u32 = 7 * 24;
 
-/// A parametric workload pattern on an hourly one-week timeline.
+/// The discrete timeline patterns expand on: `horizon` timeslots total,
+/// `slots_per_day` slots to one diurnal period (24 for hourly slots,
+/// 288 for 5-minute slots, ...).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timeline {
+    pub horizon: u32,
+    pub slots_per_day: u32,
+}
+
+impl Timeline {
+    pub fn new(horizon: u32, slots_per_day: u32) -> Result<Timeline> {
+        ensure!(horizon > 0, "timeline needs a positive horizon");
+        ensure!(slots_per_day > 0, "timeline needs a positive day length");
+        Ok(Timeline { horizon, slots_per_day })
+    }
+
+    /// One week of hourly slots — the timeline the original examples used.
+    pub fn hourly_week() -> Timeline {
+        Timeline { horizon: WEEK_HOURS, slots_per_day: 24 }
+    }
+
+    /// Number of (possibly partial) days on the timeline.
+    pub fn days(&self) -> u32 {
+        self.horizon.div_ceil(self.slots_per_day)
+    }
+}
+
+/// A parametric workload pattern. Hours are slots within a day
+/// (`0..slots_per_day`); expansion clips every task to the horizon.
 #[derive(Clone, Debug)]
 pub enum Pattern {
     /// Always-on service baseline.
@@ -18,107 +55,235 @@ pub enum Pattern {
     DailyBurst { demand: Vec<f64>, start_hour: u32, end_hour: u32, weekdays_only: bool },
     /// Nightly batch window: fixed start hour and duration, every day.
     NightlyBatch { demand: Vec<f64>, start_hour: u32, duration: u32 },
-    /// One-shot deadline job: release and deadline hours; runs for
-    /// `duration` hours placed as late as possible (paper: scheduled
+    /// One-shot deadline job: release and deadline slots; runs for
+    /// `duration` slots placed as late as possible (paper: scheduled
     /// tasks with deadlines in edge settings).
     DeadlineJob { demand: Vec<f64>, release: u32, deadline: u32, duration: u32 },
-    /// Duty-cycled sensor: `on` hours every `period` hours.
+    /// Duty-cycled sensor: `on` slots every `period` slots.
     DutyCycle { demand: Vec<f64>, period: u32, on: u32 },
 }
 
 impl Pattern {
-    /// Expand the pattern into time-limited tasks over the week,
-    /// allocating ids starting at `next_id` (updated in place).
-    pub fn expand(&self, next_id: &mut u64) -> Vec<Task> {
+    /// Validate the pattern against a timeline. Expansion calls this, so
+    /// callers only need it to fail early with a better context.
+    pub fn validate(&self, tl: Timeline) -> Result<()> {
+        let spd = tl.slots_per_day;
+        match self {
+            Pattern::Baseline { .. } => {}
+            Pattern::DailyBurst { start_hour, end_hour, .. } => {
+                ensure!(
+                    start_hour < end_hour,
+                    "daily burst: start hour {start_hour} must precede end hour {end_hour}"
+                );
+                ensure!(
+                    *end_hour <= spd,
+                    "daily burst: end hour {end_hour} exceeds the {spd}-slot day"
+                );
+            }
+            Pattern::NightlyBatch { start_hour, duration, .. } => {
+                ensure!(*duration > 0, "nightly batch: zero duration");
+                ensure!(
+                    *start_hour < spd,
+                    "nightly batch: start hour {start_hour} exceeds the {spd}-slot day"
+                );
+            }
+            Pattern::DeadlineJob { release, deadline, duration, .. } => {
+                ensure!(*duration > 0, "deadline job: zero duration");
+                ensure!(
+                    release + duration <= *deadline,
+                    "deadline job: release {release} + duration {duration} overruns \
+                     deadline {deadline}"
+                );
+                ensure!(
+                    *deadline <= tl.horizon,
+                    "deadline job: deadline {deadline} beyond horizon {}",
+                    tl.horizon
+                );
+            }
+            Pattern::DutyCycle { period, on, .. } => {
+                ensure!(*period > 0, "duty cycle: zero period");
+                ensure!(
+                    *on >= 1 && on <= period,
+                    "duty cycle: on-time {on} must lie in [1, period {period}]"
+                );
+            }
+        }
+        let demand = match self {
+            Pattern::Baseline { demand }
+            | Pattern::DailyBurst { demand, .. }
+            | Pattern::NightlyBatch { demand, .. }
+            | Pattern::DeadlineJob { demand, .. }
+            | Pattern::DutyCycle { demand, .. } => demand,
+        };
+        if demand.is_empty() {
+            bail!("pattern has an empty demand vector");
+        }
+        Ok(())
+    }
+
+    /// Expand the pattern into time-limited tasks on `tl`, allocating ids
+    /// starting at `next_id` (updated in place). Errors on infeasible
+    /// parameters instead of panicking.
+    pub fn expand(&self, tl: Timeline, next_id: &mut u64) -> Result<Vec<Task>> {
+        self.validate(tl)?;
+        let horizon = tl.horizon;
+        let spd = tl.slots_per_day;
         let mut out = Vec::new();
         let mut push = |id: &mut u64, demand: &Vec<f64>, s: u32, e: u32| {
-            out.push(Task::new(*id, demand.clone(), s, e.min(WEEK_HOURS - 1)));
-            *id += 1;
+            if s < horizon {
+                out.push(Task::new(*id, demand.clone(), s, e.min(horizon - 1)));
+                *id += 1;
+            }
         };
         match self {
-            Pattern::Baseline { demand } => push(next_id, demand, 0, WEEK_HOURS - 1),
+            Pattern::Baseline { demand } => push(next_id, demand, 0, horizon - 1),
             Pattern::DailyBurst { demand, start_hour, end_hour, weekdays_only } => {
-                let days = if *weekdays_only { 0..5 } else { 0..7 };
-                for day in days {
-                    let s = day * 24 + start_hour;
-                    let e = day * 24 + end_hour - 1;
+                for day in 0..tl.days() {
+                    if *weekdays_only && day % 7 >= 5 {
+                        continue;
+                    }
+                    let s = day * spd + start_hour;
+                    let e = day * spd + end_hour - 1;
                     push(next_id, demand, s, e);
                 }
             }
             Pattern::NightlyBatch { demand, start_hour, duration } => {
-                for day in 0..7 {
-                    let s = day * 24 + start_hour;
+                for day in 0..tl.days() {
+                    let s = day * spd + start_hour;
                     push(next_id, demand, s, s + duration - 1);
                 }
             }
-            Pattern::DeadlineJob { demand, release, deadline, duration } => {
-                assert!(release + duration <= *deadline, "infeasible deadline job");
+            Pattern::DeadlineJob { demand, deadline, duration, .. } => {
                 let s = deadline - duration; // as late as possible
                 push(next_id, demand, s, deadline - 1);
             }
             Pattern::DutyCycle { demand, period, on } => {
-                assert!(on <= period && *period > 0);
                 let mut s = 0;
-                while s < WEEK_HOURS {
+                while s < horizon {
                     push(next_id, demand, s, s + on - 1);
                     s += period;
                 }
             }
         }
-        out
+        Ok(out)
     }
 }
 
-/// A randomized mixed workload of the paper's motivating archetypes.
-pub fn mixed_workload(n_services: usize, seed: u64) -> Vec<Task> {
-    let mut rng = Rng::new(seed);
+/// Demand vector drawn from a sub-range `[lo + a*w, lo + b*w]` of a
+/// demand interval, `w = hi - lo` — keeps baselines light and batch
+/// windows heavy while respecting the configured bounds.
+pub fn sub_range_demand(
+    rng: &mut Rng,
+    dims: usize,
+    (lo, hi): (f64, f64),
+    a: f64,
+    b: f64,
+) -> Vec<f64> {
+    let w = hi - lo;
+    (0..dims).map(|_| rng.uniform(lo + a * w, lo + b * w)).collect()
+}
+
+/// Draw a daily peak-hours burst shape on `tl` (demand supplied by the
+/// caller). The parameters are always feasible: the start stays below
+/// the day, so `start + 1` is a valid end.
+pub fn draw_burst(rng: &mut Rng, demand: Vec<f64>, tl: Timeline) -> Pattern {
+    let spd = tl.slots_per_day as u64;
+    let start = spd / 3 + rng.below((spd / 8).max(1));
+    let end = (2 * spd / 3 + rng.below((spd / 6).max(1))).clamp(start + 1, spd);
+    Pattern::DailyBurst {
+        demand,
+        start_hour: start as u32,
+        end_hour: end as u32,
+        weekdays_only: rng.f64() < 0.6,
+    }
+}
+
+/// Draw a nightly batch-window shape on `tl`.
+pub fn draw_batch(rng: &mut Rng, demand: Vec<f64>, tl: Timeline) -> Pattern {
+    let spd = tl.slots_per_day as u64;
+    Pattern::NightlyBatch {
+        demand,
+        start_hour: rng.below((spd / 6).max(1)) as u32,
+        duration: (1 + rng.below((spd / 6).max(2))) as u32,
+    }
+}
+
+/// Draw a one-shot deadline-job shape within `tl`'s horizon.
+pub fn draw_deadline(rng: &mut Rng, demand: Vec<f64>, tl: Timeline) -> Pattern {
+    let horizon = tl.horizon as u64;
+    let duration = 1 + rng.below((horizon / 8).max(1));
+    let release = rng.below((horizon + 1 - duration).max(1));
+    let deadline = (release + duration + rng.below((horizon / 4).max(1))).min(horizon);
+    Pattern::DeadlineJob {
+        demand,
+        release: release as u32,
+        deadline: deadline as u32,
+        duration: duration as u32,
+    }
+}
+
+/// Draw a duty-cycle shape with a period scaled to `tl`'s day length.
+pub fn draw_duty(rng: &mut Rng, demand: Vec<f64>, tl: Timeline) -> Pattern {
+    let spd = tl.slots_per_day as u64;
+    let period = 2 + rng.below((spd / 3).max(2));
+    Pattern::DutyCycle {
+        demand,
+        period: period as u32,
+        on: (1 + rng.below((period - 1).max(1))) as u32,
+    }
+}
+
+/// A randomized mixed workload of the paper's motivating archetypes on an
+/// arbitrary timeline and dimensionality. Deterministic in `seed`; demand
+/// components are drawn from `dem_range` (pattern-specific sub-ranges
+/// keep baselines light and batch windows heavy, as the originals did).
+pub fn mixed_tasks(
+    n_services: usize,
+    dims: usize,
+    tl: Timeline,
+    dem_range: (f64, f64),
+    rng: &mut Rng,
+) -> Result<Vec<Task>> {
+    ensure!(dims > 0, "mixed workload needs at least one dimension");
+    let (lo, hi) = dem_range;
+    ensure!(lo > 0.0 && hi >= lo, "mixed workload: bad demand range [{lo}, {hi}]");
     let mut next_id = 0u64;
     let mut tasks = Vec::new();
     for _ in 0..n_services {
-        let d2 = |rng: &mut Rng, lo: f64, hi: f64| vec![rng.uniform(lo, hi), rng.uniform(lo, hi)];
         let pattern = match rng.below(5) {
-            0 => Pattern::Baseline { demand: d2(&mut rng, 0.01, 0.06) },
-            1 => Pattern::DailyBurst {
-                demand: d2(&mut rng, 0.05, 0.2),
-                start_hour: 8 + rng.below(3) as u32,
-                end_hour: 16 + rng.below(4) as u32,
-                weekdays_only: rng.f64() < 0.6,
+            0 => Pattern::Baseline {
+                demand: sub_range_demand(rng, dims, dem_range, 0.0, 0.25),
             },
-            2 => Pattern::NightlyBatch {
-                demand: d2(&mut rng, 0.1, 0.3),
-                start_hour: 0 + rng.below(4) as u32,
-                duration: 2 + rng.below(4) as u32,
-            },
-            3 => {
-                let release = rng.below(100) as u32;
-                let duration = 2 + rng.below(20) as u32;
-                let deadline = (release + duration + rng.below(40) as u32).min(WEEK_HOURS);
-                Pattern::DeadlineJob {
-                    demand: d2(&mut rng, 0.05, 0.25),
-                    release,
-                    deadline,
-                    duration,
-                }
-            }
-            _ => Pattern::DutyCycle {
-                demand: d2(&mut rng, 0.02, 0.1),
-                period: 4 + rng.below(8) as u32,
-                on: 1 + rng.below(3) as u32,
-            },
+            1 => draw_burst(rng, sub_range_demand(rng, dims, dem_range, 0.2, 1.0), tl),
+            2 => draw_batch(rng, sub_range_demand(rng, dims, dem_range, 0.5, 1.0), tl),
+            3 => draw_deadline(rng, sub_range_demand(rng, dims, dem_range, 0.2, 1.0), tl),
+            _ => draw_duty(rng, sub_range_demand(rng, dims, dem_range, 0.0, 0.5), tl),
         };
-        tasks.extend(pattern.expand(&mut next_id));
+        tasks.extend(pattern.expand(tl, &mut next_id)?);
     }
-    tasks
+    Ok(tasks)
+}
+
+/// The original examples-facing helper: a 2-dimensional mixed workload on
+/// the hourly one-week timeline. Thin shim over [`mixed_tasks`].
+pub fn mixed_workload(n_services: usize, seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed);
+    mixed_tasks(n_services, 2, Timeline::hourly_week(), (0.01, 0.3), &mut rng)
+        .expect("hourly-week mixed workload parameters are always feasible")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn week() -> Timeline {
+        Timeline::hourly_week()
+    }
+
     #[test]
     fn baseline_spans_week() {
         let mut id = 0;
-        let t = Pattern::Baseline { demand: vec![0.1] }.expand(&mut id);
+        let t = Pattern::Baseline { demand: vec![0.1] }.expand(week(), &mut id).unwrap();
         assert_eq!(t.len(), 1);
         assert_eq!((t[0].start, t[0].end), (0, WEEK_HOURS - 1));
     }
@@ -132,7 +297,8 @@ mod tests {
             end_hour: 17,
             weekdays_only: true,
         }
-        .expand(&mut id);
+        .expand(week(), &mut id)
+        .unwrap();
         assert_eq!(t.len(), 5);
         assert_eq!(t[0].start, 9);
         assert_eq!(t[0].end, 16);
@@ -143,10 +309,13 @@ mod tests {
     fn nightly_batch_and_duty_cycle() {
         let mut id = 0;
         let t = Pattern::NightlyBatch { demand: vec![0.3], start_hour: 2, duration: 3 }
-            .expand(&mut id);
+            .expand(week(), &mut id)
+            .unwrap();
         assert_eq!(t.len(), 7);
         assert_eq!((t[0].start, t[0].end), (2, 4));
-        let t = Pattern::DutyCycle { demand: vec![0.1], period: 6, on: 2 }.expand(&mut id);
+        let t = Pattern::DutyCycle { demand: vec![0.1], period: 6, on: 2 }
+            .expand(week(), &mut id)
+            .unwrap();
         assert_eq!(t.len(), (WEEK_HOURS as usize).div_ceil(6));
         assert_eq!((t[0].start, t[0].end), (0, 1));
     }
@@ -155,16 +324,52 @@ mod tests {
     fn deadline_placed_late() {
         let mut id = 0;
         let t = Pattern::DeadlineJob { demand: vec![0.2], release: 10, deadline: 30, duration: 5 }
-            .expand(&mut id);
+            .expand(week(), &mut id)
+            .unwrap();
         assert_eq!((t[0].start, t[0].end), (25, 29));
     }
 
     #[test]
-    #[should_panic]
-    fn infeasible_deadline_rejected() {
+    fn infeasible_parameters_are_errors_not_panics() {
         let mut id = 0;
-        Pattern::DeadlineJob { demand: vec![0.2], release: 10, deadline: 12, duration: 5 }
-            .expand(&mut id);
+        let err = Pattern::DeadlineJob { demand: vec![0.2], release: 10, deadline: 12, duration: 5 }
+            .expand(week(), &mut id)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overruns deadline"), "{err}");
+        let err = Pattern::DutyCycle { demand: vec![0.1], period: 4, on: 9 }
+            .expand(week(), &mut id)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("period"), "{err}");
+        let err = Pattern::DailyBurst {
+            demand: vec![0.1],
+            start_hour: 9,
+            end_hour: 40,
+            weekdays_only: false,
+        }
+        .expand(week(), &mut id)
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exceeds"), "{err}");
+        assert!(Pattern::Baseline { demand: vec![] }.expand(week(), &mut id).is_err());
+        assert_eq!(id, 0, "failed expansions must not consume ids");
+    }
+
+    #[test]
+    fn generalized_timelines() {
+        // two 12-slot days
+        let tl = Timeline::new(24, 12).unwrap();
+        let mut id = 0;
+        let t = Pattern::NightlyBatch { demand: vec![0.2, 0.1], start_hour: 10, duration: 4 }
+            .expand(tl, &mut id)
+            .unwrap();
+        // both windows clip to the horizon
+        assert_eq!(t.len(), 2);
+        assert_eq!((t[0].start, t[0].end), (10, 13));
+        assert_eq!((t[1].start, t[1].end), (22, 23));
+        assert!(Timeline::new(0, 24).is_err());
+        assert!(Timeline::new(24, 0).is_err());
     }
 
     #[test]
@@ -174,8 +379,22 @@ mod tests {
         for t in &tasks {
             assert!(t.end < WEEK_HOURS);
             assert_eq!(t.dims(), 2);
+            assert!(t.demand.iter().all(|&d| d > 0.0));
         }
         // deterministic
         assert_eq!(tasks, mixed_workload(50, 3));
+    }
+
+    #[test]
+    fn mixed_tasks_respects_dims_and_horizon() {
+        let tl = Timeline::new(48, 24).unwrap();
+        let mut rng = Rng::new(5);
+        let tasks = mixed_tasks(30, 4, tl, (0.01, 0.2), &mut rng).unwrap();
+        assert!(!tasks.is_empty());
+        for t in &tasks {
+            assert_eq!(t.dims(), 4);
+            assert!(t.end < 48);
+            assert!(t.demand.iter().all(|&d| (0.01..=0.2 + 1e-12).contains(&d)));
+        }
     }
 }

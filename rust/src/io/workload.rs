@@ -1,0 +1,1310 @@
+//! Unified workload subsystem: every scenario generator in the system
+//! behind one [`WorkloadSource`] trait, one registry of named families,
+//! and one spec grammar (`<family>[:k=v,...]`) shared verbatim by the
+//! CLI (`gen`/`solve --workload`), the planning service's JSON API and
+//! the figure definitions — the workload-side mirror of the
+//! `algo::pipeline` spec grammar.
+//!
+//! Registered families:
+//!
+//! | family     | shape                                                    |
+//! |------------|----------------------------------------------------------|
+//! | `synth`    | paper Table I uniform generator (section VI-A)           |
+//! | `gct`      | GCT-2019-like trace scenario sampling                    |
+//! | `mixed`    | random mix of the paper's motivating archetypes          |
+//! | `burst`    | always-on baselines + daily peak-hour bursts             |
+//! | `batch`    | nightly batch windows                                    |
+//! | `deadline` | one-shot deadline jobs placed as late as possible        |
+//! | `duty`     | edge fleet of duty-cycled sensors                        |
+//! | `spiky`    | heavy-tailed spiky load (lognormal demand multipliers)   |
+//! | `waves`    | arrival waves with lognormal durations (DVBP-like, cf.   |
+//! |            | arXiv 2304.08648's arrival/departure-shaped traces)      |
+//!
+//! Every source is deterministic in its seed; `CostKind` pricing
+//! (`cost=hom|het|gcp|fixed`, `e=<exponent>`, `coef=...`) composes onto
+//! every generated family (all but `gct`, whose catalog prices via its
+//! `priced` flag). Bad specs fail with an error that lists the grammar
+//! and the registered families, exactly like the `--algo` parse errors.
+
+use std::fmt::Write as _;
+use std::sync::OnceLock;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::{CostModel, Instance, NodeType, Task};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::gct_like::{self, Trace, MACHINE_SHAPES};
+use super::patterns::{
+    draw_batch, draw_burst, draw_deadline, draw_duty, mixed_tasks, sub_range_demand,
+    Pattern, Timeline, WEEK_HOURS,
+};
+use super::pricing;
+use super::synth::{self, CostKind, SynthParams};
+
+// ---------- the trait ----------------------------------------------------
+
+/// A named, parameterized scenario generator. Implementations must be
+/// deterministic in `seed`: two calls with the same seed yield identical
+/// instances (the property tests pin this for every registered family).
+pub trait WorkloadSource: Send + Sync {
+    /// Canonical, re-parseable spec string for this source.
+    fn label(&self) -> String;
+
+    /// One human-readable sentence describing the generated workload.
+    fn describe(&self) -> String;
+
+    /// Generate the instance for `seed`.
+    fn generate(&self, seed: u64) -> Result<Instance>;
+}
+
+// ---------- the master GCT-like trace ------------------------------------
+
+/// Size and seed of the master GCT-2019-like trace pool (paper: ~13K
+/// tasks sampled from cluster "a").
+pub const MASTER_TRACE_TASKS: usize = 13_000;
+pub const MASTER_TRACE_SEED: u64 = 0x6c7_2019;
+
+/// Upper bounds on generator size parameters. Workload specs reach the
+/// planning service from untrusted clients (like `--algo` specs, cf.
+/// `pipeline::MAX_PORTFOLIO_SPECS`), so a few bytes of spec must never
+/// demand unbounded server memory/CPU. The caps are far above any real
+/// experiment (the paper's largest scenario is n=2000 over a 2016-slot
+/// week).
+pub const MAX_SPEC_TASKS: usize = 5_000_000;
+pub const MAX_SPEC_HORIZON: u32 = 2_000_000;
+pub const MAX_SPEC_DIMS: usize = 64;
+pub const MAX_SPEC_TYPES: usize = 4096;
+
+/// Master GCT-like trace, generated once per process. Every `gct` spec
+/// with the default pool samples scenarios from this cached trace.
+pub fn master_trace() -> &'static Trace {
+    static TRACE: OnceLock<Trace> = OnceLock::new();
+    TRACE.get_or_init(|| gct_like::generate_trace(MASTER_TRACE_TASKS, MASTER_TRACE_SEED))
+}
+
+// ---------- spec grammar --------------------------------------------------
+
+/// The `--workload` / service / figure spec grammar (printed by errors).
+pub const WORKLOAD_GRAMMAR: &str = "\
+  workload := <family>[:<key>=<value>[,<key>=<value>|<flag>]...]
+  range    := <lo>..<hi>            (e.g. dem=0.01..0.2, cap=0.3..1.0)
+  cost     := hom | het | gcp | fixed   with e=<exponent>: 'hom' is the
+              unit rate card, 'het' draws random coefficients, 'gcp'
+              prices with the public GCE rates (io::pricing), 'fixed'
+              takes explicit coef=<c0;c1;...>
+  examples : synth:n=2000,dims=7    gct:n=1000,priced    spiky
+             mixed:services=200,horizon=336    burst:day=48,services=50
+             synth:dims=2,cost=fixed,coef=2;1,e=0.5";
+
+/// A parsed workload spec: family name plus key=value parameters
+/// (flags carry an empty value). Canonical rendering sorts the keys, so
+/// `parse(render(s)) == parse(s)` for every valid spec.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkloadSpec {
+    pub family: String,
+    pub params: std::collections::BTreeMap<String, String>,
+}
+
+fn workload_error(spec: &str, why: impl std::fmt::Display) -> anyhow::Error {
+    let mut catalog = String::new();
+    for f in families() {
+        let _ = writeln!(catalog, "  {:<9} {}", f.name, f.summary);
+    }
+    anyhow::anyhow!(
+        "invalid workload spec '{spec}': {why}\nspec grammar:\n{WORKLOAD_GRAMMAR}\n\
+         registered families:\n{catalog}"
+    )
+}
+
+impl WorkloadSpec {
+    /// Parse `<family>[:k=v,...]`, validating the family name and its
+    /// keys against the registry. Errors teach the grammar and catalog.
+    pub fn parse(spec: &str) -> Result<WorkloadSpec> {
+        let trimmed = spec.trim();
+        if trimmed.is_empty() {
+            return Err(workload_error(spec, "empty spec"));
+        }
+        let (family, rest) = trimmed.split_once(':').unwrap_or((trimmed, ""));
+        let mut out = WorkloadSpec {
+            family: family.to_string(),
+            params: std::collections::BTreeMap::new(),
+        };
+        for tok in rest.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (k, v) = tok.split_once('=').unwrap_or((tok, ""));
+            let (k, v) = (k.trim(), v.trim());
+            if out.params.insert(k.to_string(), v.to_string()).is_some() {
+                return Err(workload_error(spec, format!("duplicate key '{k}'")));
+            }
+        }
+        out.validate_keys().map_err(|e| workload_error(spec, e))?;
+        Ok(out)
+    }
+
+    /// Canonical spec string: family, then sorted `k=v` pairs (flags bare).
+    pub fn render(&self) -> String {
+        let mut out = self.family.clone();
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            out.push(if i == 0 { ':' } else { ',' });
+            out.push_str(k);
+            if !v.is_empty() {
+                out.push('=');
+                out.push_str(v);
+            }
+        }
+        out
+    }
+
+    /// Family metadata from the registry (errors on unknown families).
+    pub fn family_info(&self) -> Result<&'static Family> {
+        families()
+            .iter()
+            .find(|f| f.name == self.family)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload family '{}'", self.family))
+    }
+
+    /// Check the family exists and every key is one it accepts.
+    pub fn validate_keys(&self) -> Result<()> {
+        let fam = self.family_info()?;
+        for k in self.params.keys() {
+            if !fam.keys.iter().any(|(name, _)| name == k) {
+                bail!(
+                    "unknown key '{k}' for family '{}' (valid keys: {})",
+                    self.family,
+                    fam.keys.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the generator this spec names (re-validates keys + values).
+    pub fn source(&self) -> Result<Box<dyn WorkloadSource>> {
+        let rendered = self.render();
+        self.validate_keys().map_err(|e| workload_error(&rendered, e))?;
+        let fam = self.family_info().expect("validated above");
+        (fam.build)(self).map_err(|e| workload_error(&rendered, e))
+    }
+
+    /// Set or override one parameter (used by harness shrink hooks and
+    /// the JSON form). Key/value validity is checked at `source()` time.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.params.insert(key.to_string(), value.into());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.params.get(key).map(String::as_str)
+    }
+
+    // -- typed accessors (parse errors name the key and value) -----------
+
+    /// Bare flag lookup. A flag with an explicit value is rejected:
+    /// `priced=false` would otherwise silently mean `priced`.
+    pub fn flag(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("") => Ok(true),
+            Some(v) => bail!("key '{key}' is a flag, not a value key; drop '={v}'"),
+        }
+    }
+
+    fn value_of(&self, key: &str) -> Result<Option<&str>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some("") => bail!("key '{key}' needs a value"),
+            Some(v) => Ok(Some(v)),
+        }
+    }
+
+    pub fn usize_of(&self, key: &str, default: usize) -> Result<usize> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("key '{key}': '{v}' is not a count")),
+        }
+    }
+
+    pub fn u32_of(&self, key: &str, default: u32) -> Result<u32> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("key '{key}': '{v}' is not a count")),
+        }
+    }
+
+    pub fn f64_of(&self, key: &str, default: f64) -> Result<f64> {
+        match self.value_of(key)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("key '{key}': '{v}' is not a number")),
+        }
+    }
+
+    /// `lo..hi` range values (e.g. `dem=0.01..0.2`).
+    pub fn range_of(&self, key: &str, default: (f64, f64)) -> Result<(f64, f64)> {
+        let Some(v) = self.value_of(key)? else { return Ok(default) };
+        let parsed = v.split_once("..").and_then(|(a, b)| {
+            Some((a.trim().parse::<f64>().ok()?, b.trim().parse::<f64>().ok()?))
+        });
+        let (lo, hi) =
+            parsed.with_context(|| format!("key '{key}': '{v}' is not a <lo>..<hi> range"))?;
+        ensure!(
+            lo > 0.0 && hi >= lo && hi.is_finite(),
+            "key '{key}': range [{lo}, {hi}] must satisfy 0 < lo <= hi"
+        );
+        Ok((lo, hi))
+    }
+}
+
+/// Parse a workload spec and build its generator — the single entry point
+/// the CLI, the service and the figure definitions share.
+pub fn parse_workload(spec: &str) -> Result<Box<dyn WorkloadSource>> {
+    WorkloadSpec::parse(spec)?.source()
+}
+
+// ---------- the registry --------------------------------------------------
+
+/// One registered workload family.
+pub struct Family {
+    pub name: &'static str,
+    /// One-line summary for the catalog listing.
+    pub summary: &'static str,
+    /// Accepted spec keys with one-line help each.
+    pub keys: &'static [(&'static str, &'static str)],
+    /// A small spec used by the tier-1 generator smoke loop.
+    pub smoke_spec: &'static str,
+    build: fn(&WorkloadSpec) -> Result<Box<dyn WorkloadSource>>,
+}
+
+const SIZE_KEYS: &[(&str, &str)] = &[
+    ("services", "number of services expanded into tasks (default 200)"),
+    ("m", "node-types in the catalog (default 6)"),
+    ("dims", "resource dimensions D (default 2)"),
+    ("horizon", "timeslots T (default 168)"),
+    ("cap", "capacity range lo..hi (default 0.3..1.0)"),
+    ("dem", "demand range lo..hi (default 0.01..0.2)"),
+    ("cost", "cost model: hom | het | gcp | fixed (default hom)"),
+    ("e", "cost exponent (default 1)"),
+    ("coef", "fixed cost coefficients c0;c1;... (with cost=fixed)"),
+];
+
+const DAY_KEY: (&str, &str) = ("day", "slots per diurnal period (default 24)");
+
+macro_rules! pattern_keys {
+    () => {
+        &[
+            SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3], DAY_KEY,
+            SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+        ]
+    };
+}
+
+static FAMILIES: &[Family] = &[
+    Family {
+        name: "synth",
+        summary: "uniform synthetic benchmark (paper Table I)",
+        keys: &[
+            ("n", "tasks (default 1000)"),
+            ("m", "node-types (default 10)"),
+            ("dims", "resource dimensions D (default 5)"),
+            ("horizon", "timeslots T (default 24)"),
+            ("cap", "capacity range lo..hi (default 0.2..1.0)"),
+            ("dem", "demand range lo..hi (default 0.01..0.1)"),
+            ("cost", "cost model: hom | het | gcp | fixed (default hom)"),
+            ("e", "cost exponent (default 1)"),
+            ("coef", "fixed cost coefficients c0;c1;... (with cost=fixed)"),
+        ],
+        smoke_spec: "synth:n=80,m=4",
+        build: build_synth,
+    },
+    Family {
+        name: "gct",
+        summary: "GCT-2019-like trace scenario (n tasks, m machine shapes)",
+        keys: &[
+            ("n", "tasks sampled from the trace pool (default 1000)"),
+            ("m", "machine shapes sampled, <= 13 (default 10)"),
+            ("pool", "trace pool size (default 13000, the cached master trace)"),
+            ("priced", "flag: keep GCE rate-card costs instead of homogeneous"),
+        ],
+        smoke_spec: "gct:n=80,m=5,pool=400",
+        build: build_gct,
+    },
+    Family {
+        name: "mixed",
+        summary: "random mix of the paper's five motivating archetypes",
+        keys: pattern_keys!(),
+        smoke_spec: "mixed:services=25,m=3",
+        build: |s| build_pattern(s, PatternFamily::Mixed),
+    },
+    Family {
+        name: "burst",
+        summary: "always-on baselines plus daily peak-hour bursts",
+        keys: pattern_keys!(),
+        smoke_spec: "burst:services=20,m=3",
+        build: |s| build_pattern(s, PatternFamily::Burst),
+    },
+    Family {
+        name: "batch",
+        summary: "nightly batch windows",
+        keys: pattern_keys!(),
+        smoke_spec: "batch:services=30,m=3",
+        build: |s| build_pattern(s, PatternFamily::Batch),
+    },
+    Family {
+        name: "deadline",
+        summary: "one-shot deadline jobs placed as late as possible",
+        keys: pattern_keys!(),
+        smoke_spec: "deadline:services=40,m=3",
+        build: |s| build_pattern(s, PatternFamily::Deadline),
+    },
+    Family {
+        name: "duty",
+        summary: "edge fleet of duty-cycled sensors",
+        keys: pattern_keys!(),
+        smoke_spec: "duty:services=25,m=3",
+        build: |s| build_pattern(s, PatternFamily::Duty),
+    },
+    Family {
+        name: "spiky",
+        summary: "heavy-tailed spiky load (lognormal demand multipliers)",
+        keys: &[
+            SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3],
+            SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+        ],
+        smoke_spec: "spiky:services=60,m=4",
+        build: |s| build_pattern(s, PatternFamily::Spiky),
+    },
+    Family {
+        name: "waves",
+        summary: "arrival waves with lognormal durations (DVBP-like)",
+        keys: &[
+            SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3],
+            ("waves", "number of arrival waves (default 8)"),
+            SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+        ],
+        smoke_spec: "waves:services=60,m=4",
+        build: |s| build_pattern(s, PatternFamily::Waves),
+    },
+];
+
+/// All registered workload families, in catalog order.
+pub fn families() -> &'static [Family] {
+    FAMILIES
+}
+
+// ---------- cost composition ---------------------------------------------
+
+/// Parse the `cost`/`e`/`coef` keys shared by every family into a
+/// [`CostKind`].
+fn cost_kind(spec: &WorkloadSpec, dims: usize) -> Result<CostKind> {
+    let e = spec.f64_of("e", 1.0)?;
+    ensure!(e > 0.0 && e.is_finite(), "key 'e': exponent must be positive");
+    let cost = spec.get("cost").unwrap_or("hom");
+    ensure!(
+        cost == "fixed" || spec.get("coef").is_none(),
+        "key 'coef' needs cost=fixed"
+    );
+    Ok(match cost {
+        "hom" if e == 1.0 => CostKind::HomogeneousLinear,
+        // unit coefficients with a non-unit exponent: still "homogeneous",
+        // but needs the general fixed form
+        "hom" => CostKind::Fixed { coefficients: vec![1.0; dims], exponent: e },
+        "het" => CostKind::HeterogeneousRandom { exponent: e },
+        "gcp" => CostKind::Fixed { coefficients: pricing::gcp_coefficients(dims), exponent: e },
+        "fixed" => {
+            let raw = match spec.value_of("coef")? {
+                Some(v) => v,
+                None => bail!("cost=fixed needs coef=<c0;c1;...> (one per dimension)"),
+            };
+            let coefficients: Vec<f64> = raw
+                .split(';')
+                .map(|t| t.trim().parse::<f64>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| {
+                    anyhow::anyhow!("key 'coef': '{raw}' is not a ';'-separated number list")
+                })?;
+            ensure!(
+                coefficients.len() == dims,
+                "key 'coef': {} coefficients for dims={dims}",
+                coefficients.len()
+            );
+            ensure!(
+                coefficients.iter().all(|&c| c > 0.0 && c.is_finite()),
+                "key 'coef': coefficients must be positive"
+            );
+            CostKind::Fixed { coefficients, exponent: e }
+        }
+        other => bail!("key 'cost': '{other}' is not hom, het, gcp or fixed"),
+    })
+}
+
+// ---------- synth family --------------------------------------------------
+
+struct SynthSource {
+    spec: WorkloadSpec,
+    params: SynthParams,
+}
+
+impl WorkloadSource for SynthSource {
+    fn label(&self) -> String {
+        self.spec.render()
+    }
+
+    fn describe(&self) -> String {
+        let p = &self.params;
+        format!(
+            "uniform synthetic benchmark: {} tasks over {} slots, {} node-types, D={}",
+            p.n, p.horizon, p.m, p.dims
+        )
+    }
+
+    fn generate(&self, seed: u64) -> Result<Instance> {
+        Ok(synth::generate(&self.params, seed))
+    }
+}
+
+fn build_synth(spec: &WorkloadSpec) -> Result<Box<dyn WorkloadSource>> {
+    let mut p = SynthParams::default();
+    p.n = spec.usize_of("n", p.n)?;
+    p.m = spec.usize_of("m", p.m)?;
+    p.dims = spec.usize_of("dims", p.dims)?;
+    p.horizon = spec.u32_of("horizon", p.horizon)?;
+    p.cap_range = spec.range_of("cap", p.cap_range)?;
+    p.dem_range = spec.range_of("dem", p.dem_range)?;
+    p.cost_model = cost_kind(spec, p.dims)?;
+    validate_synth_params(&p)?;
+    Ok(Box::new(SynthSource { spec: spec.clone(), params: p }))
+}
+
+/// Shared validation for [`SynthParams`] regardless of entry form (spec
+/// string, JSON object, `TraceKind` shim) — untrusted parameters must
+/// hit the same caps and sanity checks on every path.
+pub fn validate_synth_params(p: &SynthParams) -> Result<()> {
+    ensure!(
+        (1..=MAX_SPEC_TASKS).contains(&p.n),
+        "n must be in 1..={MAX_SPEC_TASKS}"
+    );
+    ensure!(
+        (1..=MAX_SPEC_TYPES).contains(&p.m),
+        "m must be in 1..={MAX_SPEC_TYPES}"
+    );
+    ensure!(
+        (1..=MAX_SPEC_DIMS).contains(&p.dims),
+        "dims must be in 1..={MAX_SPEC_DIMS}"
+    );
+    ensure!(
+        (1..=MAX_SPEC_HORIZON).contains(&p.horizon),
+        "horizon must be in 1..={MAX_SPEC_HORIZON}"
+    );
+    let (clo, chi) = p.cap_range;
+    ensure!(
+        clo > 0.0 && chi >= clo && chi <= 1.0,
+        "cap range [{clo}, {chi}] must satisfy 0 < lo <= hi <= 1"
+    );
+    let (dlo, dhi) = p.dem_range;
+    ensure!(
+        dlo > 0.0 && dhi >= dlo && dhi.is_finite(),
+        "demand range [{dlo}, {dhi}] must satisfy 0 < lo <= hi"
+    );
+    match &p.cost_model {
+        CostKind::HomogeneousLinear => {}
+        CostKind::HeterogeneousRandom { exponent } => {
+            ensure!(
+                *exponent > 0.0 && exponent.is_finite(),
+                "cost exponent must be positive"
+            );
+        }
+        CostKind::Fixed { coefficients, exponent } => {
+            ensure!(
+                *exponent > 0.0 && exponent.is_finite(),
+                "cost exponent must be positive"
+            );
+            ensure!(
+                coefficients.len() == p.dims,
+                "{} cost coefficients for dims={}",
+                coefficients.len(),
+                p.dims
+            );
+            ensure!(
+                coefficients.iter().all(|&c| c > 0.0 && c.is_finite()),
+                "cost coefficients must be positive"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Canonical spec for explicit [`SynthParams`] (the `TraceKind` shim and
+/// the JSON form use this for labels). Only non-default keys render.
+pub fn spec_of_synth(p: &SynthParams) -> WorkloadSpec {
+    let d = SynthParams::default();
+    let mut spec = WorkloadSpec {
+        family: "synth".into(),
+        params: std::collections::BTreeMap::new(),
+    };
+    if p.n != d.n {
+        spec.set("n", p.n.to_string());
+    }
+    if p.m != d.m {
+        spec.set("m", p.m.to_string());
+    }
+    if p.dims != d.dims {
+        spec.set("dims", p.dims.to_string());
+    }
+    if p.horizon != d.horizon {
+        spec.set("horizon", p.horizon.to_string());
+    }
+    if p.cap_range != d.cap_range {
+        spec.set("cap", format!("{}..{}", p.cap_range.0, p.cap_range.1));
+    }
+    if p.dem_range != d.dem_range {
+        spec.set("dem", format!("{}..{}", p.dem_range.0, p.dem_range.1));
+    }
+    match &p.cost_model {
+        CostKind::HomogeneousLinear => {}
+        CostKind::HeterogeneousRandom { exponent } => {
+            spec.set("cost", "het");
+            if *exponent != 1.0 {
+                spec.set("e", exponent.to_string());
+            }
+        }
+        CostKind::Fixed { coefficients, exponent } => {
+            if coefficients == &pricing::gcp_coefficients(p.dims) {
+                spec.set("cost", "gcp");
+            } else if coefficients.iter().all(|&c| c == 1.0) {
+                spec.set("cost", "hom");
+            } else {
+                spec.set("cost", "fixed");
+                spec.set(
+                    "coef",
+                    coefficients
+                        .iter()
+                        .map(f64::to_string)
+                        .collect::<Vec<_>>()
+                        .join(";"),
+                );
+            }
+            if *exponent != 1.0 {
+                spec.set("e", exponent.to_string());
+            }
+        }
+    }
+    spec
+}
+
+/// Parse the JSON-object form of a synth workload (the service's
+/// `"workload": {...}` and the config-layer scenario overrides). Starts
+/// from Table I defaults; unknown keys are errors, and `"cost_model":
+/// "fixed"` takes an explicit `"coefficients"` array.
+pub fn synth_params_from_json(v: &Json) -> Result<SynthParams> {
+    let obj = v.as_obj().context("synth workload JSON must be an object")?;
+    const KNOWN: &[&str] = &[
+        "family", "n", "m", "dims", "horizon", "dem_range", "cap_range",
+        "cost_model", "exponent", "coefficients",
+    ];
+    for k in obj.keys() {
+        if !KNOWN.contains(&k.as_str()) {
+            bail!(
+                "unknown key '{k}' in synth workload JSON (known keys: {})",
+                KNOWN.join(", ")
+            );
+        }
+    }
+    if let Some(fam) = v.get("family").as_str() {
+        ensure!(fam == "synth", "synth workload JSON with family '{fam}'");
+    }
+    let mut p = SynthParams::default();
+    if let Some(n) = v.get("n").as_usize() {
+        p.n = n;
+    }
+    if let Some(m) = v.get("m").as_usize() {
+        p.m = m;
+    }
+    if let Some(d) = v.get("dims").as_usize() {
+        p.dims = d;
+    }
+    if let Some(t) = v.get("horizon").as_usize() {
+        p.horizon = t as u32;
+    }
+    if let Some(r) = v.get("dem_range").to_f64_vec() {
+        ensure!(r.len() == 2, "dem_range needs two entries");
+        p.dem_range = (r[0], r[1]);
+    }
+    if let Some(r) = v.get("cap_range").to_f64_vec() {
+        ensure!(r.len() == 2, "cap_range needs two entries");
+        p.cap_range = (r[0], r[1]);
+    }
+    let exponent = v.get("exponent").as_f64();
+    match v.get("cost_model").as_str() {
+        None | Some("homogeneous") => {
+            ensure!(
+                exponent.is_none() || exponent == Some(1.0),
+                "'exponent' needs cost_model 'heterogeneous' or 'fixed'"
+            );
+            ensure!(
+                matches!(v.get("coefficients"), Json::Null),
+                "'coefficients' needs cost_model 'fixed'"
+            );
+        }
+        Some("heterogeneous") => {
+            p.cost_model =
+                CostKind::HeterogeneousRandom { exponent: exponent.unwrap_or(1.0) };
+        }
+        Some("fixed") => {
+            let coefficients = v
+                .get("coefficients")
+                .to_f64_vec()
+                .context("cost_model 'fixed' needs a 'coefficients' array")?;
+            ensure!(
+                coefficients.len() == p.dims,
+                "coefficients has {} entries for dims={}",
+                coefficients.len(),
+                p.dims
+            );
+            ensure!(
+                coefficients.iter().all(|&c| c > 0.0 && c.is_finite()),
+                "coefficients must be positive"
+            );
+            p.cost_model =
+                CostKind::Fixed { coefficients, exponent: exponent.unwrap_or(1.0) };
+        }
+        Some(other) => bail!("unknown cost_model '{other}'"),
+    }
+    validate_synth_params(&p)?;
+    Ok(p)
+}
+
+// ---------- gct family ----------------------------------------------------
+
+struct GctSource {
+    spec: WorkloadSpec,
+    n: usize,
+    m: usize,
+    pool: usize,
+    priced: bool,
+    /// Lazily generated non-default pool (the trace depends only on the
+    /// pool size, so multi-seed scenario sampling reuses it).
+    pool_trace: OnceLock<Trace>,
+}
+
+impl GctSource {
+    fn trace(&self) -> &Trace {
+        if self.pool == MASTER_TRACE_TASKS {
+            master_trace()
+        } else {
+            self.pool_trace
+                .get_or_init(|| gct_like::generate_trace(self.pool, MASTER_TRACE_SEED))
+        }
+    }
+}
+
+impl WorkloadSource for GctSource {
+    fn label(&self) -> String {
+        self.spec.render()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "GCT-2019-like scenario: {} tasks and {} machine shapes sampled from a \
+             {}-task trace pool ({} pricing)",
+            self.n,
+            self.m,
+            self.pool,
+            if self.priced { "GCE rate-card" } else { "homogeneous" }
+        )
+    }
+
+    fn generate(&self, seed: u64) -> Result<Instance> {
+        let mut inst = self.trace().sample_scenario(self.n, self.m, seed);
+        if !self.priced {
+            // homogeneous-linear experiments re-price cap-sum = cost
+            CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+        }
+        Ok(inst)
+    }
+}
+
+fn build_gct(spec: &WorkloadSpec) -> Result<Box<dyn WorkloadSource>> {
+    let n = spec.usize_of("n", 1000)?;
+    let m = spec.usize_of("m", 10)?;
+    let pool = spec.usize_of("pool", MASTER_TRACE_TASKS)?;
+    ensure!(
+        (1..=MAX_SPEC_TASKS).contains(&pool),
+        "key 'pool': need 1..={MAX_SPEC_TASKS} trace tasks"
+    );
+    ensure!(n >= 1, "key 'n': need at least one task");
+    ensure!(
+        n <= pool,
+        "key 'n': scenario n={n} exceeds the {pool}-task trace pool"
+    );
+    ensure!(
+        (1..=MACHINE_SHAPES.len()).contains(&m),
+        "key 'm': the GCT-like trace has {} machine shapes",
+        MACHINE_SHAPES.len()
+    );
+    Ok(Box::new(GctSource {
+        spec: spec.clone(),
+        n,
+        m,
+        pool,
+        priced: spec.flag("priced")?,
+        pool_trace: OnceLock::new(),
+    }))
+}
+
+// ---------- pattern families ----------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PatternFamily {
+    Mixed,
+    Burst,
+    Batch,
+    Deadline,
+    Duty,
+    Spiky,
+    Waves,
+}
+
+/// Shared parameters of the pattern-backed families.
+#[derive(Clone, Debug)]
+struct PatternParams {
+    services: usize,
+    m: usize,
+    dims: usize,
+    horizon: u32,
+    day: u32,
+    waves: usize,
+    cap_range: (f64, f64),
+    dem_range: (f64, f64),
+    cost: CostKind,
+}
+
+struct PatternSource {
+    spec: WorkloadSpec,
+    family: PatternFamily,
+    name: &'static str,
+    params: PatternParams,
+}
+
+fn build_pattern(spec: &WorkloadSpec, family: PatternFamily) -> Result<Box<dyn WorkloadSource>> {
+    let dims = spec.usize_of("dims", 2)?;
+    ensure!(
+        (1..=MAX_SPEC_DIMS).contains(&dims),
+        "key 'dims': need 1..={MAX_SPEC_DIMS} dimensions"
+    );
+    let p = PatternParams {
+        services: spec.usize_of("services", 200)?,
+        m: spec.usize_of("m", 6)?,
+        dims,
+        horizon: spec.u32_of("horizon", WEEK_HOURS)?,
+        day: spec.u32_of("day", 24)?,
+        waves: spec.usize_of("waves", 8)?,
+        cap_range: spec.range_of("cap", (0.3, 1.0))?,
+        dem_range: spec.range_of("dem", (0.01, 0.2))?,
+        cost: cost_kind(spec, dims)?,
+    };
+    ensure!(p.services >= 1, "key 'services': need at least one service");
+    ensure!(
+        (1..=MAX_SPEC_TYPES).contains(&p.m),
+        "key 'm': need 1..={MAX_SPEC_TYPES} node-types"
+    );
+    ensure!(
+        (1..=MAX_SPEC_HORIZON).contains(&p.horizon),
+        "key 'horizon': need 1..={MAX_SPEC_HORIZON} timeslots"
+    );
+    ensure!(p.cap_range.1 <= 1.0, "key 'cap': capacities are normalized to (0, 1]");
+    ensure!(p.waves >= 1, "key 'waves': need at least one wave");
+    // surfaces bad horizon/day combinations at parse time
+    Timeline::new(p.horizon, p.day)?;
+    // worst-case expansion bound: an untrusted few-byte spec must not
+    // demand unbounded generation work (duty/mixed expand each service
+    // into up to horizon/2 tasks, daily patterns into one per day)
+    let days = (p.horizon / p.day.max(1)) as usize + 2;
+    let est_tasks = match family {
+        PatternFamily::Spiky | PatternFamily::Waves | PatternFamily::Deadline => p.services,
+        PatternFamily::Batch | PatternFamily::Burst => p.services.saturating_mul(days),
+        PatternFamily::Mixed | PatternFamily::Duty => {
+            p.services.saturating_mul(((p.horizon as usize) / 2).max(days))
+        }
+    };
+    ensure!(
+        est_tasks <= MAX_SPEC_TASKS,
+        "spec would expand to ~{est_tasks} tasks (cap {MAX_SPEC_TASKS}); \
+         lower services/horizon"
+    );
+    let name = spec.family_info().expect("registered family").name;
+    Ok(Box::new(PatternSource { spec: spec.clone(), family, name, params: p }))
+}
+
+impl WorkloadSource for PatternSource {
+    fn label(&self) -> String {
+        self.spec.render()
+    }
+
+    fn describe(&self) -> String {
+        let p = &self.params;
+        let shape = match self.family {
+            PatternFamily::Mixed => "a random mix of the five archetypes",
+            PatternFamily::Burst => "baseline + daily peak-hour burst services",
+            PatternFamily::Batch => "nightly batch windows",
+            PatternFamily::Deadline => "one-shot deadline jobs",
+            PatternFamily::Duty => "duty-cycled sensors",
+            PatternFamily::Spiky => "heavy-tailed spiky tasks",
+            PatternFamily::Waves => "tasks arriving in waves",
+        };
+        format!(
+            "{} services of {shape} over {} slots ({} per day), {} node-types, D={}",
+            p.services, p.horizon, p.day, p.m, p.dims
+        )
+    }
+
+    fn generate(&self, seed: u64) -> Result<Instance> {
+        let p = &self.params;
+        let mut rng = Rng::new(seed);
+        let d = p.dims;
+
+        // catalog drawn like synth's: capacities first, then (for the
+        // heterogeneous model) cost coefficients from the same stream
+        let mut node_types: Vec<NodeType> = (0..p.m)
+            .map(|i| {
+                let cap: Vec<f64> = (0..d)
+                    .map(|_| rng.uniform(p.cap_range.0, p.cap_range.1))
+                    .collect();
+                NodeType::new(format!("{}-{i}", self.name), cap, 1.0)
+            })
+            .collect();
+        let model = match &p.cost {
+            CostKind::HomogeneousLinear => CostModel::homogeneous(d),
+            CostKind::HeterogeneousRandom { exponent } => {
+                let coeff: Vec<f64> = (0..d).map(|_| rng.uniform(0.3, 1.0)).collect();
+                CostModel::new(coeff, *exponent)
+            }
+            CostKind::Fixed { coefficients, exponent } => {
+                CostModel::new(coefficients.clone(), *exponent)
+            }
+        };
+        model.apply(&mut node_types);
+
+        // anchor clamp (same argument as synth::generate): the type whose
+        // weakest dimension is largest admits every clamped task
+        let anchor = (0..p.m)
+            .max_by(|&a, &b| {
+                let min_a =
+                    node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
+                let min_b =
+                    node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
+                min_a.total_cmp(&min_b).then(a.cmp(&b))
+            })
+            .expect("m >= 1");
+        let anchor_cap = node_types[anchor].capacity.clone();
+
+        let tl = Timeline::new(p.horizon, p.day)?;
+        let mut tasks = match self.family {
+            PatternFamily::Mixed => {
+                mixed_tasks(p.services, d, tl, p.dem_range, &mut rng)?
+            }
+            PatternFamily::Burst
+            | PatternFamily::Batch
+            | PatternFamily::Deadline
+            | PatternFamily::Duty => archetype_tasks(self.family, p, tl, &mut rng)?,
+            PatternFamily::Spiky => spiky_tasks(p, &mut rng),
+            PatternFamily::Waves => wave_tasks(p, &mut rng),
+        };
+        ensure!(
+            !tasks.is_empty(),
+            "workload '{}' expanded to zero tasks on this timeline/seed — \
+             the horizon ({} slots, {}-slot days) is too short for its \
+             patterns; raise horizon or lower day",
+            self.spec.render(),
+            p.horizon,
+            p.day
+        );
+        for t in &mut tasks {
+            for (x, &cap) in t.demand.iter_mut().zip(&anchor_cap) {
+                *x = x.min(cap);
+            }
+        }
+        Ok(Instance::new(tasks, node_types, p.horizon))
+    }
+}
+
+/// Single-archetype families: every service expands one pattern (plus a
+/// light baseline for `burst`, which models a peak over an always-on
+/// service rather than a bare burst). Shape draws and demand sub-ranges
+/// are the shared `io::patterns` helpers, so these families and the
+/// `mixed` family can never disagree about what an archetype looks like.
+fn archetype_tasks(
+    family: PatternFamily,
+    p: &PatternParams,
+    tl: Timeline,
+    rng: &mut Rng,
+) -> Result<Vec<Task>> {
+    let mut next_id = 0u64;
+    let mut tasks = Vec::new();
+    for _ in 0..p.services {
+        let pattern = match family {
+            PatternFamily::Burst => {
+                let base = Pattern::Baseline {
+                    demand: sub_range_demand(rng, p.dims, p.dem_range, 0.0, 0.25),
+                };
+                tasks.extend(base.expand(tl, &mut next_id)?);
+                draw_burst(rng, sub_range_demand(rng, p.dims, p.dem_range, 0.2, 1.0), tl)
+            }
+            PatternFamily::Batch => {
+                draw_batch(rng, sub_range_demand(rng, p.dims, p.dem_range, 0.5, 1.0), tl)
+            }
+            PatternFamily::Deadline => {
+                draw_deadline(rng, sub_range_demand(rng, p.dims, p.dem_range, 0.2, 1.0), tl)
+            }
+            PatternFamily::Duty => {
+                draw_duty(rng, sub_range_demand(rng, p.dims, p.dem_range, 0.0, 0.5), tl)
+            }
+            _ => unreachable!("archetype_tasks only handles single-pattern families"),
+        };
+        tasks.extend(pattern.expand(tl, &mut next_id)?);
+    }
+    Ok(tasks)
+}
+
+/// Heavy-tailed spiky load: short tasks whose demand is a lognormal
+/// multiple of the configured range, so a few tasks dominate — the load
+/// shape flash crowds and tail-heavy batch queues produce.
+fn spiky_tasks(p: &PatternParams, rng: &mut Rng) -> Vec<Task> {
+    let horizon = p.horizon as u64;
+    (0..p.services as u64)
+        .map(|id| {
+            let base = sub_range_demand(rng, p.dims, p.dem_range, 0.0, 1.0);
+            // multiplier median 1, sigma 1 => ~8x spikes in the tail
+            let mult = rng.lognormal(0.0, 1.0).clamp(0.25, 8.0);
+            let dem: Vec<f64> = base.iter().map(|&x| (x * mult).min(0.95)).collect();
+            let dur = rng
+                .lognormal(((horizon as f64 / 16.0).max(1.0)).ln(), 1.0)
+                .clamp(1.0, horizon as f64) as u64;
+            let start = rng.below((horizon + 1 - dur).max(1));
+            Task::new(id, dem, start as u32, (start + dur - 1) as u32)
+        })
+        .collect()
+}
+
+/// DVBP-like arrival waves: task starts cluster around wave centers with
+/// lognormal durations, producing the arrival/departure-shaped traces
+/// dynamic vector bin packing evaluates on (arXiv 2304.08648).
+fn wave_tasks(p: &PatternParams, rng: &mut Rng) -> Vec<Task> {
+    let horizon = p.horizon as f64;
+    let k = p.waves as f64;
+    (0..p.services as u64)
+        .map(|id| {
+            let dem = sub_range_demand(rng, p.dims, p.dem_range, 0.0, 1.0);
+            let wave = rng.below(p.waves as u64) as f64;
+            let center = (wave + 0.5) * horizon / k;
+            let jitter = rng.normal() * horizon / (4.0 * k);
+            let start = (center + jitter).clamp(0.0, horizon - 1.0) as u64;
+            let dur = rng
+                .lognormal((horizon / 10.0).max(1.0).ln(), 0.8)
+                .clamp(1.0, horizon) as u64;
+            let end = (start + dur - 1).min(p.horizon as u64 - 1);
+            Task::new(id, dem, start as u32, end as u32)
+        })
+        .collect()
+}
+
+// ---------- JSON form -----------------------------------------------------
+
+/// Build a source from the service's JSON `workload` field: either a
+/// spec string (the shared grammar) or an object `{"family": ..., ...}`.
+/// Object keys follow the spec keys for every family; `synth` objects
+/// using any config-layer name (`dem_range`, `cap_range`, `cost_model`,
+/// `exponent`, explicit fixed `coefficients`) take the
+/// [`synth_params_from_json`] route instead. Unknown keys are errors,
+/// never silently ignored, and both routes hit the same size caps.
+pub fn source_from_json(v: &Json) -> Result<Box<dyn WorkloadSource>> {
+    match v {
+        Json::Str(s) => parse_workload(s),
+        Json::Obj(obj) => {
+            // a present-but-non-string family must not silently fall back
+            let family = match v.get("family") {
+                Json::Null => "synth".to_string(),
+                f => f
+                    .as_str()
+                    .context("workload 'family' must be a string")?
+                    .to_string(),
+            };
+            const CONFIG_KEYS: &[&str] =
+                &["dem_range", "cap_range", "cost_model", "exponent", "coefficients"];
+            if family == "synth" && obj.keys().any(|k| CONFIG_KEYS.contains(&k.as_str())) {
+                let params =
+                    synth_params_from_json(v).map_err(|e| workload_error("synth", e))?;
+                let spec = spec_of_synth(&params);
+                return Ok(Box::new(SynthSource { spec, params }));
+            }
+            let mut spec = WorkloadSpec {
+                family: family.clone(),
+                params: std::collections::BTreeMap::new(),
+            };
+            // validate the family before converting values
+            let fam = spec.family_info().map_err(|e| workload_error(&family, e))?;
+            for (k, val) in obj {
+                if k == "family" {
+                    continue;
+                }
+                // key membership first, so even false-valued flags cannot
+                // smuggle an unknown key past validation
+                if !fam.keys.iter().any(|(name, _)| name == k) {
+                    return Err(workload_error(
+                        &family,
+                        format!(
+                            "unknown key '{k}' for family '{family}' (valid keys: {})",
+                            fam.keys.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", ")
+                        ),
+                    ));
+                }
+                let rendered = match val {
+                    Json::Num(_) => val.to_string(),
+                    Json::Str(s) => s.clone(),
+                    Json::Bool(true) => String::new(), // flag
+                    Json::Bool(false) => continue,
+                    Json::Arr(xs) if xs.len() == 2 => {
+                        let r = val
+                            .to_f64_vec()
+                            .with_context(|| format!("key '{k}': bad range array"))?;
+                        format!("{}..{}", r[0], r[1])
+                    }
+                    _ => bail!("key '{k}': unsupported JSON value {val:?}"),
+                };
+                spec.set(k, rendered);
+            }
+            spec.source()
+        }
+        _ => bail!("workload must be a spec string or an object"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_family_has_a_valid_smoke_spec() {
+        for fam in families() {
+            let src = parse_workload(fam.smoke_spec).unwrap_or_else(|e| {
+                panic!("{}: smoke spec '{}' invalid: {e:#}", fam.name, fam.smoke_spec)
+            });
+            let inst = src.generate(1).unwrap();
+            assert!(inst.n_tasks() > 0, "{}", fam.name);
+            assert!(inst.is_feasible(), "{}", fam.name);
+            assert!(!src.describe().is_empty());
+            // bare family names are valid specs too
+            parse_workload(fam.name).unwrap();
+        }
+    }
+
+    #[test]
+    fn spec_parse_render_roundtrip() {
+        for s in [
+            "synth",
+            "synth:n=2000,dims=7",
+            "gct:n=1000,priced",
+            "mixed:horizon=336,services=200",
+            "burst:day=48",
+            "spiky:dem=0.01..0.3",
+            "waves:waves=4",
+        ] {
+            let spec = WorkloadSpec::parse(s).unwrap();
+            let back = WorkloadSpec::parse(&spec.render()).unwrap();
+            assert_eq!(spec, back, "{s}");
+        }
+        // rendering canonicalizes key order
+        assert_eq!(
+            WorkloadSpec::parse("gct:priced,n=5").unwrap().render(),
+            "gct:n=5,priced"
+        );
+    }
+
+    #[test]
+    fn errors_teach_grammar_and_catalog() {
+        for bad in [
+            "",
+            "warp",
+            "synth:frobs=3",
+            "synth:n=x",
+            "synth:dem=0.1",
+            "synth:n=0",
+            "gct:m=99",
+            "gct:n=900,pool=100",
+            "mixed:day=0",
+            "synth:cost=quadratic",
+            "gct:n=5,priced=false",                // flags must be bare
+            "synth:cost=fixed",                    // coef required
+            "synth:dims=2,cost=fixed,coef=1;2;3",  // coef arity != dims
+            "synth:coef=1;2",                      // coef needs cost=fixed
+            "deadline:services=1,horizon=0",
+            // untrusted size parameters are capped
+            "synth:n=4000000000",
+            "gct:pool=2000000000",
+            "duty:services=400000,horizon=100000",
+        ] {
+            let err = match parse_workload(bad) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("'{bad}' should not parse"),
+            };
+            assert!(err.contains("invalid workload spec"), "{bad}: {err}");
+            assert!(err.contains("spec grammar"), "{bad}: {err}");
+            // the catalog names every family
+            for fam in families() {
+                assert!(err.contains(fam.name), "{bad}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn synth_spec_matches_direct_generator() {
+        let via_spec = parse_workload("synth:n=120,m=5,dims=3").unwrap().generate(7).unwrap();
+        let direct = synth::generate(
+            &SynthParams { n: 120, m: 5, dims: 3, ..Default::default() },
+            7,
+        );
+        assert_eq!(via_spec.tasks, direct.tasks);
+        assert_eq!(via_spec.node_types, direct.node_types);
+    }
+
+    #[test]
+    fn gct_spec_matches_master_trace_sampling() {
+        let via_spec = parse_workload("gct:n=150,m=7").unwrap().generate(3).unwrap();
+        let mut direct = master_trace().sample_scenario(150, 7, 3);
+        CostModel::homogeneous(direct.dims()).apply(&mut direct.node_types);
+        assert_eq!(via_spec.tasks, direct.tasks);
+        assert_eq!(via_spec.node_types, direct.node_types);
+        // priced keeps the rate-card costs
+        let priced = parse_workload("gct:n=150,m=7,priced").unwrap().generate(3).unwrap();
+        assert_eq!(priced.tasks, via_spec.tasks);
+        assert!(priced.node_types.iter().zip(&via_spec.node_types).any(|(a, b)| a.cost != b.cost));
+    }
+
+    #[test]
+    fn pricing_composes_onto_any_family() {
+        let inst = parse_workload("duty:services=10,m=3,cost=gcp,e=2")
+            .unwrap()
+            .generate(5)
+            .unwrap();
+        let coeff = pricing::gcp_coefficients(2);
+        for b in &inst.node_types {
+            let want: f64 = b
+                .capacity
+                .iter()
+                .zip(&coeff)
+                .map(|(&c, &k)| k * c.powf(2.0))
+                .sum();
+            assert!((b.cost - want).abs() < 1e-12);
+        }
+        // hom with an exponent prices with unit coefficients
+        let inst = parse_workload("batch:services=5,m=2,e=0.5").unwrap().generate(1).unwrap();
+        for b in &inst.node_types {
+            let want: f64 = b.capacity.iter().map(|&c| c.sqrt()).sum();
+            assert!((b.cost - want).abs() < 1e-12);
+        }
+        // explicit fixed coefficients via coef=
+        let inst = parse_workload("synth:n=10,m=2,dims=2,cost=fixed,coef=2;0.5,e=2")
+            .unwrap()
+            .generate(1)
+            .unwrap();
+        for b in &inst.node_types {
+            let want = 2.0 * b.capacity[0].powi(2) + 0.5 * b.capacity[1].powi(2);
+            assert!((b.cost - want).abs() < 1e-12);
+        }
+        // and the synth-params renderer round-trips them through the parser
+        let p = SynthParams {
+            dims: 2,
+            cost_model: CostKind::Fixed { coefficients: vec![2.0, 0.5], exponent: 2.0 },
+            ..Default::default()
+        };
+        let spec = spec_of_synth(&p);
+        assert_eq!(spec.get("coef"), Some("2;0.5"));
+        assert!(spec.source().is_ok());
+    }
+
+    #[test]
+    fn synth_json_fixed_cost_and_unknown_keys() {
+        let v = crate::util::json::parse(
+            r#"{"n": 20, "dims": 2, "cost_model": "fixed",
+                "coefficients": [2.0, 1.0], "exponent": 2.0}"#,
+        )
+        .unwrap();
+        let p = synth_params_from_json(&v).unwrap();
+        match &p.cost_model {
+            CostKind::Fixed { coefficients, exponent } => {
+                assert_eq!(coefficients, &vec![2.0, 1.0]);
+                assert_eq!(*exponent, 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // unknown keys are errors, not silently ignored
+        let v = crate::util::json::parse(r#"{"n": 20, "tasks": 5}"#).unwrap();
+        let err = synth_params_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("unknown key 'tasks'"), "{err}");
+        // coefficient arity must match dims
+        let v = crate::util::json::parse(
+            r#"{"dims": 3, "cost_model": "fixed", "coefficients": [1.0]}"#,
+        )
+        .unwrap();
+        assert!(synth_params_from_json(&v).is_err());
+    }
+
+    #[test]
+    fn json_object_form_builds_any_family() {
+        let v = crate::util::json::parse(
+            r#"{"family": "waves", "services": 30, "m": 3, "waves": 4,
+                "dem": [0.02, 0.1], "priced_flag_unused": false}"#,
+        )
+        .unwrap();
+        // unknown key is rejected through the same validation
+        assert!(source_from_json(&v).is_err());
+        let v = crate::util::json::parse(
+            r#"{"family": "waves", "services": 30, "m": 3, "waves": 4,
+                "dem": [0.02, 0.1]}"#,
+        )
+        .unwrap();
+        let src = source_from_json(&v).unwrap();
+        let inst = src.generate(2).unwrap();
+        assert_eq!(
+            inst.tasks,
+            parse_workload("waves:services=30,m=3,waves=4,dem=0.02..0.1")
+                .unwrap()
+                .generate(2)
+                .unwrap()
+                .tasks
+        );
+        // string form goes through the shared parser
+        let v = Json::Str("gct:n=50,m=4,pool=200".into());
+        assert!(source_from_json(&v).unwrap().generate(1).unwrap().n_tasks() == 50);
+        // a present-but-non-string family is an error, not a synth fallback
+        let v = crate::util::json::parse(r#"{"family": 42, "n": 10}"#).unwrap();
+        let err = source_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("family"), "{err}");
+        // synth objects accept the spec-key vocabulary like every family
+        let v = crate::util::json::parse(
+            r#"{"family": "synth", "n": 25, "m": 3, "dem": [0.02, 0.1]}"#,
+        )
+        .unwrap();
+        let inst = source_from_json(&v).unwrap().generate(3).unwrap();
+        assert_eq!(
+            inst.tasks,
+            parse_workload("synth:n=25,m=3,dem=0.02..0.1")
+                .unwrap()
+                .generate(3)
+                .unwrap()
+                .tasks
+        );
+        // size caps hold on both object routes (spec-key and config-key)
+        let v = crate::util::json::parse(r#"{"family": "synth", "horizon": 0}"#).unwrap();
+        assert!(source_from_json(&v).is_err());
+        let v = crate::util::json::parse(
+            r#"{"n": 4000000000, "cost_model": "heterogeneous"}"#,
+        )
+        .unwrap();
+        assert!(source_from_json(&v).is_err());
+    }
+}

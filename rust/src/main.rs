@@ -1,13 +1,15 @@
 //! tlrs — TL-Rightsizing CLI (the L3 leader entrypoint).
 //!
 //! Subcommands:
-//!   solve    --input inst.json [--algo lp-map-f] [--backend auto] [--replay]
-//!   gen      --kind synth|gct [--n N] [--m M] [--dims D] [--horizon T]
-//!            [--seed S] --out inst.json [--csv trace.csv]
-//!   lb       --input inst.json [--backend auto]
-//!   figures  <id|all> [--quick] [--backend auto] [--out-dir bench_results]
-//!   serve    [--addr 127.0.0.1:7077] [--backend auto]
-//!   info     print artifact manifest and PJRT platform
+//!   solve     (--input inst.json | --workload <spec>) [--algo lp-map-f]
+//!             [--backend auto] [--replay]
+//!   gen       --workload <spec> [--seed S] --out inst.json [--csv trace.csv]
+//!   workloads list the registered workload families (--names | --smoke)
+//!   stress    --workload <spec> [--surprise <spec>] plan + surprise-load sim
+//!   lb        --input inst.json [--backend auto]
+//!   figures   <id|all> [--quick] [--backend auto] [--out-dir bench_results]
+//!   serve     [--addr 127.0.0.1:7077] [--backend auto]
+//!   info      print artifact manifest and PJRT platform
 //!   help
 
 use std::path::{Path, PathBuf};
@@ -21,9 +23,9 @@ use tlrs::coordinator::planner::Planner;
 use tlrs::coordinator::service;
 use tlrs::harness::{report, runner, scenarios, special};
 use tlrs::io::files;
-use tlrs::io::gct_like;
-use tlrs::io::synth::{self, SynthParams};
+use tlrs::io::workload;
 use tlrs::model::trim;
+use tlrs::sim::autoscale;
 use tlrs::sim::replay::replay;
 use tlrs::util::cli::Args;
 use tlrs::util::json::Json;
@@ -32,16 +34,31 @@ const USAGE: &str = "\
 tlrs — cold-start cluster rightsizing for time-limited tasks (CLOUD'21)
 
 USAGE:
-  tlrs solve   --input inst.json [--algo <spec>[,<spec>...]]
+  tlrs solve   (--input inst.json | --workload <wspec> [--seed 1])
+               [--algo <spec>[,<spec>...]]
                [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
-  tlrs gen     --kind synth|gct [--n 1000] [--m 10] [--dims 5] [--horizon 24]
-               [--seed 1] [--priced] --out inst.json [--csv trace.csv]
+  tlrs gen     --workload <wspec> [--seed 1] --out inst.json [--csv trace.csv]
+               (legacy: --kind synth|gct [--n ...] [--m ...] [--dims ...]
+                [--horizon ...] [--priced])
+  tlrs workloads [--names | --smoke]   list the registered workload families
+  tlrs stress  --workload <wspec> [--surprise <wspec>] [--seed 1]
+               [--algo <spec>] [--backend ...]
   tlrs lb      --input inst.json [--backend ...]
   tlrs figures <fig1|fig5|fig7a|fig7b|fig7c|fig8a|fig8b|fig9|fig10|fig11|tab1|rt|ntl|all>
                [--quick] [--backend ...] [--out-dir bench_results]
   tlrs ablations [--quick]
   tlrs serve   [--addr 127.0.0.1:7077] [--backend ...]
   tlrs info
+
+WORKLOAD SPECS (--workload, gen/solve/stress, and the service's 'workload' field):
+  workload := <family>[:<key>=<value>[,<key>=<value>|<flag>]...]
+  families := synth | gct | mixed | burst | batch | deadline | duty
+            | spiky | waves                  (run 'tlrs workloads' for the
+                                              full key catalog)
+  cost     := hom | het | gcp | fixed with e=<exponent>; composes onto
+              every generated family (gct prices via its 'priced' flag)
+  examples : --workload synth:n=2000,dims=7    --workload gct:n=1000,priced
+             --workload mixed:services=200,horizon=336    --workload spiky
 
 ALGO SPECS (--algo, and the service's 'algorithm' field):
   A preset, a pipeline spec, or several specs separated by commas —
@@ -74,6 +91,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "solve" => cmd_solve(args),
         "gen" => cmd_gen(args),
+        "workloads" => cmd_workloads(args),
+        "stress" => cmd_stress(args),
         "lb" => cmd_lb(args),
         "figures" => cmd_figures(args),
         "ablations" => {
@@ -91,9 +110,20 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// Load the instance a command operates on: an on-disk file (`--input`)
+/// or a generated workload (`--workload <spec>` + `--seed`).
+fn instance_from(args: &Args) -> Result<tlrs::model::Instance> {
+    match (args.get("input"), args.get("workload")) {
+        (Some(path), None) => files::load_instance(Path::new(path)),
+        (None, Some(spec)) => {
+            workload::parse_workload(spec)?.generate(args.get_u64("seed", 1))
+        }
+        _ => bail!("exactly one of --input or --workload is required"),
+    }
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
-    let input = args.get("input").context("--input required")?;
-    let inst = files::load_instance(Path::new(input))?;
+    let inst = instance_from(args)?;
     let planner = planner_from(args)?;
     let algo = args.get_or("algo", "lp-map-f");
 
@@ -155,38 +185,158 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Translate the legacy `--kind synth|gct` flags into a [`WorkloadSpec`]
+/// built with the shared grammar machinery, forwarding only the keys
+/// each kind historically understood (a gct `--dims` or a synth
+/// `--priced` was silently ignored before the registry existed, and
+/// still is — old scripts keep working).
+fn legacy_gen_spec(args: &Args) -> Result<workload::WorkloadSpec> {
+    let kind = args.get_or("kind", "synth");
+    let keys: &[&str] = match kind.as_str() {
+        "synth" => &["n", "m", "dims", "horizon"],
+        "gct" => &["n", "m"],
+        other => bail!(
+            "unknown --kind '{other}' (use --workload <spec>; run 'tlrs workloads' \
+             for the family catalog)"
+        ),
+    };
+    let mut spec = workload::WorkloadSpec::parse(&kind)?;
+    for key in keys {
+        if let Some(v) = args.get(key) {
+            spec.set(key, v);
+        }
+    }
+    if kind == "gct" && args.has_flag("priced") {
+        spec.set("priced", "");
+    }
+    Ok(spec)
+}
+
 fn cmd_gen(args: &Args) -> Result<()> {
     let out = args.get("out").context("--out required")?;
     let seed = args.get_u64("seed", 1);
-    let kind = args.get_or("kind", "synth");
-    let inst = match kind.as_str() {
-        "synth" => {
-            let mut p = SynthParams::default();
-            p.n = args.get_usize("n", p.n);
-            p.m = args.get_usize("m", p.m);
-            p.dims = args.get_usize("dims", p.dims);
-            p.horizon = args.get_usize("horizon", p.horizon as usize) as u32;
-            synth::generate(&p, seed)
+    let source = match args.get("workload") {
+        Some(w) => {
+            // mixing the forms would silently ignore the legacy flags
+            let legacy_given = ["kind", "n", "m", "dims", "horizon"]
+                .iter()
+                .any(|k| args.get(k).is_some())
+                || args.has_flag("priced");
+            anyhow::ensure!(
+                !legacy_given,
+                "--workload carries its own parameters; do not combine it with \
+                 the legacy --kind/--n/--m/--dims/--horizon/--priced flags"
+            );
+            workload::parse_workload(w)?
         }
-        "gct" => {
-            let trace = gct_like::generate_trace(13_000, 0x6c7_2019);
-            let n = args.get_usize("n", 1000);
-            let m = args.get_usize("m", 10);
-            let mut inst = trace.sample_scenario(n, m, seed);
-            if !args.has_flag("priced") {
-                tlrs::model::CostModel::homogeneous(inst.dims())
-                    .apply(&mut inst.node_types);
-            }
-            inst
-        }
-        other => bail!("unknown --kind '{other}'"),
+        None => legacy_gen_spec(args)?.source()?,
     };
+    let inst = source.generate(seed)?;
     files::save_instance(&inst, Path::new(out))?;
-    println!("wrote {} ({} tasks, {} node-types)", out, inst.n_tasks(), inst.n_types());
+    println!(
+        "wrote {} ({} tasks, {} node-types) from '{}' seed {}",
+        out,
+        inst.n_tasks(),
+        inst.n_types(),
+        source.label(),
+        seed
+    );
     if let Some(csv) = args.get("csv") {
         files::save_trace_csv(&inst.tasks, Path::new(csv))?;
         println!("wrote {csv}");
     }
+    Ok(())
+}
+
+/// List the registered workload families: full catalog by default,
+/// `--names` for scripting, `--smoke` for the tier-1 generator smoke loop.
+fn cmd_workloads(args: &Args) -> Result<()> {
+    for fam in workload::families() {
+        if args.has_flag("names") {
+            println!("{}", fam.name);
+        } else if args.has_flag("smoke") {
+            println!("{}", fam.smoke_spec);
+        } else {
+            println!("{:<9} {}", fam.name, fam.summary);
+            for (key, help) in fam.keys {
+                println!("    {key:<9} {help}");
+            }
+        }
+    }
+    if !args.has_flag("names") && !args.has_flag("smoke") {
+        println!("\nspec grammar:\n{}", workload::WORKLOAD_GRAMMAR);
+    }
+    Ok(())
+}
+
+/// Plan a workload, then stress the plan with surprise load through the
+/// admission/auto-scaling simulator (the paper's future-work hook).
+fn cmd_stress(args: &Args) -> Result<()> {
+    let spec = args.get("workload").context("--workload required")?;
+    let source = workload::parse_workload(spec)?;
+    let seed = args.get_u64("seed", 1);
+    let inst = source.generate(seed)?;
+    // the plan lives on the trimmed (rank-compacted) timeline, so the
+    // surprise load must be generated on that horizon too — otherwise
+    // every late arrival would clip onto the final trimmed slot
+    let tr = trim(&inst).instance;
+    // default surprise: a spiky burst of ~25% extra services
+    let surprise = match args.get("surprise") {
+        Some(s) => {
+            let mut spec = workload::WorkloadSpec::parse(s)?;
+            // align the surprise timeline with the plan unless the spec
+            // pins its own horizon (families without one, e.g. gct, are
+            // left as-is and rejected by sim::autoscale::stress if long)
+            if spec.get("horizon").is_none()
+                && spec.family_info()?.keys.iter().any(|(k, _)| *k == "horizon")
+            {
+                spec.set("horizon", tr.horizon.to_string());
+            }
+            spec.source()?
+        }
+        None => workload::parse_workload(&format!(
+            "spiky:services={},dims={},horizon={}",
+            (tr.n_tasks() / 4).max(1),
+            tr.dims(),
+            tr.horizon
+        ))?,
+    };
+
+    let planner = planner_from(args)?;
+    let (solver, backend) = planner.solver_for(&tr);
+    let portfolio = pipeline::parse_portfolio(&args.get_or("algo", "lp-map-f"))?;
+    let race = portfolio.run(&tr, solver.as_ref())?;
+    let plan = &race.best().solution;
+    plan.verify(&tr)
+        .map_err(|v| anyhow::anyhow!("infeasible plan produced: {v:?}"))?;
+
+    let out = autoscale::stress(
+        &tr,
+        plan,
+        surprise.as_ref(),
+        seed ^ 0x5712e55,
+        tlrs::algo::placement::FitPolicy::FirstFit,
+    )?;
+    println!("workload       : {} ({})", source.label(), source.describe());
+    println!("plan           : {} on {backend}, cost {:.4}", race.best().label, race.best().cost);
+    println!("surprise       : {} ({} tasks)", out.surprise, out.surprise_tasks);
+    println!(
+        "planned load   : {:.1}% admitted",
+        out.planned.admission_rate() * 100.0
+    );
+    println!(
+        "fixed cluster  : {:.1}% of planned+surprise admitted ({} rejected)",
+        out.fixed.admission_rate() * 100.0,
+        out.fixed.rejected
+    );
+    println!(
+        "hybrid overflow: {:.1}% admitted, {} rented nodes, ${:.4} overflow \
+         ({:.1}% of plan cost)",
+        out.hybrid.admission_rate() * 100.0,
+        out.hybrid.overflow_nodes,
+        out.hybrid.overflow_cost,
+        100.0 * out.hybrid.overflow_cost / out.hybrid.planned_cost.max(1e-12)
+    );
     Ok(())
 }
 

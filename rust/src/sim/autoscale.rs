@@ -9,7 +9,10 @@
 //! nodes on demand (public-cloud hybrid). Reports admission rate and
 //! overflow spend — quantifying how much headroom a plan really has.
 
+use anyhow::{ensure, Result};
+
 use crate::algo::placement::{select_node, FitPolicy, NodeState};
+use crate::io::workload::WorkloadSource;
 use crate::model::{Instance, Solution, Task};
 
 #[derive(Clone, Debug)]
@@ -32,6 +35,79 @@ impl AutoscaleReport {
             self.admitted as f64 / total as f64
         }
     }
+}
+
+/// Stress-test report: the planned workload replayed on its own cluster,
+/// then the planned + surprise load in fixed and hybrid modes.
+#[derive(Clone, Debug)]
+pub struct StressReport {
+    /// The surprise workload's label.
+    pub surprise: String,
+    pub surprise_tasks: usize,
+    /// Planned load on the planned cluster (admission should be 100%).
+    pub planned: AutoscaleReport,
+    /// Planned + surprise load, rejections allowed (fixed edge cluster).
+    pub fixed: AutoscaleReport,
+    /// Planned + surprise load with rented overflow (hybrid cloud).
+    pub hybrid: AutoscaleReport,
+}
+
+/// Stress the plan for `inst` with surprise load drawn from any
+/// registered workload source — the sim-side consumer of the unified
+/// workload subsystem. The surprise source must produce instances with
+/// the same dimensionality; its tasks are re-id'd after the planned ones.
+pub fn stress(
+    inst: &Instance,
+    plan: &Solution,
+    surprise: &dyn WorkloadSource,
+    seed: u64,
+    policy: FitPolicy,
+) -> Result<StressReport> {
+    let extra = surprise.generate(seed)?;
+    ensure!(
+        extra.dims() == inst.dims(),
+        "surprise workload '{}' has D={}, plan has D={}",
+        surprise.label(),
+        extra.dims(),
+        inst.dims()
+    );
+    // both loads must live on one timeline; silently clipping late
+    // arrivals would pile them onto the final slot as an artificial
+    // mega-spike, so a longer surprise horizon is an error instead
+    ensure!(
+        extra.horizon <= inst.horizon,
+        "surprise workload '{}' spans {} slots but the plan's timeline has {} — \
+         set horizon={} on the surprise spec",
+        surprise.label(),
+        extra.horizon,
+        inst.horizon,
+        inst.horizon
+    );
+    let planned = simulate_with_hints(
+        inst,
+        plan,
+        &inst.tasks,
+        policy,
+        false,
+        Some(&plan.assignment),
+    );
+    let mut stream = inst.tasks.clone();
+    let base = stream.len() as u64;
+    stream.extend(
+        extra
+            .tasks
+            .iter()
+            .map(|t| Task::new(base + t.id, t.demand.clone(), t.start, t.end)),
+    );
+    let fixed = simulate(inst, plan, &stream, policy, false);
+    let hybrid = simulate(inst, plan, &stream, policy, true);
+    Ok(StressReport {
+        surprise: surprise.label(),
+        surprise_tasks: extra.tasks.len(),
+        planned,
+        fixed,
+        hybrid,
+    })
 }
 
 /// Simulate serving `stream` on the cluster purchased by `plan`.
@@ -185,6 +261,44 @@ mod tests {
         // renting overflow for a doubled load should cost less than the
         // whole planned cluster again times some slack
         assert!(hybrid.overflow_cost < 3.0 * hybrid.planned_cost, "{hybrid:?}");
+    }
+
+    #[test]
+    fn stress_with_workload_source() {
+        use crate::io::workload::parse_workload;
+        let source = parse_workload("synth:n=60,m=4,dims=5,horizon=24").unwrap();
+        let inst = source.generate(2).unwrap();
+        let tr = trim(&inst).instance;
+        let rep = lp_map_best(&tr, &NativePdhgSolver::default(), true).unwrap();
+        // spiky surprise load on the planned cluster, through the
+        // registry, generated on the plan's (trimmed) timeline
+        let surprise = parse_workload(&format!(
+            "spiky:services=40,dims=5,horizon={},dem=0.01..0.1",
+            tr.horizon
+        ))
+        .unwrap();
+        let out = stress(&tr, &rep.solution, surprise.as_ref(), 9, FitPolicy::FirstFit)
+            .unwrap();
+        assert_eq!(out.planned.rejected, 0, "{out:?}");
+        assert_eq!(out.surprise_tasks, 40);
+        assert!(out.surprise.starts_with("spiky"));
+        // hybrid mode admits everything the fixed cluster cannot
+        assert_eq!(out.hybrid.rejected, 0, "{out:?}");
+        assert!(out.fixed.admitted + out.fixed.rejected == 60 + 40);
+        // dimension mismatches error instead of panicking
+        let bad = parse_workload("spiky:services=5,dims=2").unwrap();
+        assert!(stress(&tr, &rep.solution, bad.as_ref(), 1, FitPolicy::FirstFit).is_err());
+        // a surprise timeline longer than the plan's is an error, not a
+        // silent clip onto the final slot
+        let long = parse_workload(&format!(
+            "spiky:services=5,dims=5,horizon={}",
+            tr.horizon + 10
+        ))
+        .unwrap();
+        let err = stress(&tr, &rep.solution, long.as_ref(), 1, FitPolicy::FirstFit)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("set horizon="), "{err}");
     }
 
     #[test]

@@ -41,7 +41,38 @@ fn gen_solve_lb_roundtrip() {
     ]);
     assert!(ok, "gen failed: {stderr}");
     assert!(stdout.contains("60 tasks"));
+    // the legacy flags compile down to a workload spec
+    assert!(stdout.contains("synth:m=4,n=60"), "{stdout}");
     assert!(inst.exists() && csv.exists());
+
+    // --workload generates the identical instance through the same parser
+    let inst2 = dir.join("inst2.json");
+    let (ok, stdout, stderr) = run(&[
+        "gen", "--workload", "synth:n=60,m=4", "--seed", "3",
+        "--out", inst2.to_str().unwrap(),
+    ]);
+    assert!(ok, "gen --workload failed: {stderr}");
+    assert!(stdout.contains("60 tasks"));
+    assert_eq!(
+        std::fs::read_to_string(&inst).unwrap(),
+        std::fs::read_to_string(&inst2).unwrap(),
+        "legacy flags and --workload must generate byte-identical files"
+    );
+
+    // legacy flags that never applied to a kind stay ignored (old scripts
+    // passed --dims to gct and it was dropped), not errors
+    let inst3 = dir.join("inst3.json");
+    let (ok, _, stderr) = run(&[
+        "gen", "--kind", "gct", "--n", "40", "--m", "4", "--dims", "3",
+        "--out", inst3.to_str().unwrap(),
+    ]);
+    assert!(ok, "legacy gct gen failed: {stderr}");
+    // but mixing --workload with legacy flags is an explicit error
+    let (ok, _, stderr) = run(&[
+        "gen", "--workload", "synth", "--n", "500", "--out", inst3.to_str().unwrap(),
+    ]);
+    assert!(!ok);
+    assert!(stderr.contains("legacy"), "{stderr}");
 
     let (ok, stdout, stderr) = run(&[
         "solve", "--input", inst.to_str().unwrap(), "--algo", "lp-map-f",
@@ -89,6 +120,27 @@ fn gen_solve_lb_roundtrip() {
     assert!(ok, "lb failed: {stderr}");
     assert!(stdout.contains("best certified LB"), "{stdout}");
 
+    // solve straight from a workload spec, no file needed
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--workload", "duty:services=20,m=3", "--seed", "2",
+        "--algo", "penalty-map-f", "--backend", "native", "--replay",
+    ]);
+    assert!(ok, "solve --workload failed: {stderr}");
+    assert!(stdout.contains("cluster cost"), "{stdout}");
+    assert!(stdout.contains("0 overloads"), "{stdout}");
+
+    // bad workload specs teach the grammar and the family catalog
+    let (ok, _, stderr) = run(&["solve", "--workload", "warp:n=2"]);
+    assert!(!ok);
+    assert!(stderr.contains("invalid workload spec"), "{stderr}");
+    assert!(stderr.contains("spec grammar"), "{stderr}");
+    assert!(stderr.contains("spiky"), "{stderr}");
+    assert!(stderr.contains("gct"), "{stderr}");
+    // infeasible pattern parameters are parse-style errors, not aborts
+    let (ok, _, stderr) = run(&["gen", "--workload", "mixed:day=0", "--out", "/dev/null"]);
+    assert!(!ok);
+    assert!(stderr.contains("invalid workload spec"), "{stderr}");
+
     let (ok, stdout, _) = run(&["info"]);
     assert!(ok);
     assert!(stdout.contains("tlrs"));
@@ -100,6 +152,41 @@ fn gen_solve_lb_roundtrip() {
     let (ok, _, stderr) = run(&["solve", "--input", "/nonexistent.json"]);
     assert!(!ok);
     assert!(stderr.contains("error"));
+}
+
+#[test]
+fn workloads_catalog_and_stress() {
+    if tlrs_bin().is_none() {
+        return;
+    }
+    // catalog lists every family with keys and the grammar
+    let (ok, stdout, _) = run(&["workloads"]);
+    assert!(ok);
+    for fam in ["synth", "gct", "mixed", "burst", "batch", "deadline", "duty", "spiky", "waves"] {
+        assert!(stdout.contains(fam), "catalog missing {fam}: {stdout}");
+    }
+    assert!(stdout.contains("spec grammar"), "{stdout}");
+
+    // --names / --smoke are machine-readable (one entry per line)
+    let (ok, names, _) = run(&["workloads", "--names"]);
+    assert!(ok);
+    let names: Vec<&str> = names.lines().collect();
+    assert!(names.contains(&"waves"), "{names:?}");
+    let (ok, smoke, _) = run(&["workloads", "--smoke"]);
+    assert!(ok);
+    for line in smoke.lines() {
+        assert!(line.contains(':'), "smoke spec '{line}' has no parameters");
+    }
+    assert_eq!(smoke.lines().count(), names.len());
+
+    // stress: plan a workload, hit it with surprise load
+    let (ok, stdout, stderr) = run(&[
+        "stress", "--workload", "burst:services=15,m=3", "--surprise",
+        "spiky:services=10,dims=2", "--backend", "native", "--algo", "penalty-map-f",
+    ]);
+    assert!(ok, "stress failed: {stderr}");
+    assert!(stdout.contains("planned load"), "{stdout}");
+    assert!(stdout.contains("hybrid overflow"), "{stdout}");
 }
 
 #[test]

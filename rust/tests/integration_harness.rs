@@ -2,7 +2,7 @@
 //! the figure pipeline (scenario -> planner -> aggregation -> report JSON)
 //! and the special runners.
 
-use tlrs::coordinator::config::{Backend, TraceKind};
+use tlrs::coordinator::config::Backend;
 use tlrs::coordinator::planner::Planner;
 use tlrs::harness::{report, runner, scenarios, special};
 use tlrs::util::json;
@@ -10,14 +10,20 @@ use tlrs::util::json;
 fn shrink(fig: &mut scenarios::Figure) {
     fig.seeds = vec![1];
     for p in fig.points.iter_mut() {
-        match &mut p.trace {
-            TraceKind::Synthetic(sp) => {
-                sp.n = 50;
-                sp.m = sp.m.min(5);
+        // every point is a workload spec now: shrink by overriding keys
+        match p.workload.family.as_str() {
+            "synth" => {
+                p.workload.set("n", "50");
+                let m: usize =
+                    p.workload.get("m").and_then(|v| v.parse().ok()).unwrap_or(10);
+                p.workload.set("m", m.min(5).to_string());
             }
-            TraceKind::GctLike { n, .. } => {
-                *n = (*n).min(80);
+            "gct" => {
+                let n: usize =
+                    p.workload.get("n").and_then(|v| v.parse().ok()).unwrap_or(1000);
+                p.workload.set("n", n.min(80).to_string());
             }
+            other => panic!("unexpected figure family {other}"),
         }
     }
     fig.points.truncate(2);

@@ -1,0 +1,183 @@
+//! Property tests over the unified workload subsystem: every registered
+//! family, across seeds and dimension overrides, must be deterministic in
+//! its seed, feasible, within-horizon and spec-round-trippable — and the
+//! `synth`/`gct` families must reproduce the pre-refactor generators
+//! byte-for-byte on the figure seeds (the figure scenarios regenerate
+//! bit-identical instances through the new registry).
+
+use tlrs::io::gct_like;
+use tlrs::io::synth::{self, CostKind, SynthParams};
+use tlrs::io::workload::{self, WorkloadSpec};
+use tlrs::model::CostModel;
+
+const SEEDS: [u64; 3] = [1, 2, 42];
+
+/// Small test specs per family: the bare name, the registry's smoke spec,
+/// and (where the family takes `dims`) a higher-dimensional override.
+fn test_specs() -> Vec<String> {
+    let mut specs = Vec::new();
+    for fam in workload::families() {
+        specs.push(fam.name.to_string());
+        specs.push(fam.smoke_spec.to_string());
+        // smoke specs always carry parameters, so extend with ','
+        assert!(fam.smoke_spec.contains(':'), "{}", fam.name);
+        if fam.keys.iter().any(|(k, _)| *k == "dims") {
+            specs.push(format!("{},dims=4", fam.smoke_spec));
+        }
+        if fam.keys.iter().any(|(k, _)| *k == "cost") {
+            specs.push(format!("{},cost=het,e=2", fam.smoke_spec));
+            specs.push(format!("{},cost=gcp", fam.smoke_spec));
+        }
+    }
+    specs
+}
+
+#[test]
+fn every_family_is_deterministic_feasible_and_in_horizon() {
+    for spec_str in test_specs() {
+        let source = workload::parse_workload(&spec_str)
+            .unwrap_or_else(|e| panic!("'{spec_str}': {e:#}"));
+        for &seed in &SEEDS {
+            let a = source.generate(seed).unwrap_or_else(|e| panic!("'{spec_str}': {e:#}"));
+            let b = source.generate(seed).unwrap();
+            // deterministic in seed
+            assert_eq!(a.tasks, b.tasks, "'{spec_str}' seed {seed}");
+            assert_eq!(a.node_types, b.node_types, "'{spec_str}' seed {seed}");
+            assert_eq!(a.horizon, b.horizon, "'{spec_str}' seed {seed}");
+            // structurally valid
+            assert!(a.n_tasks() > 0, "'{spec_str}' seed {seed}: no tasks");
+            assert!(a.is_feasible(), "'{spec_str}' seed {seed}: infeasible");
+            let dims = a.dims();
+            for t in &a.tasks {
+                assert!(t.end < a.horizon, "'{spec_str}' seed {seed}: task beyond horizon");
+                assert_eq!(t.dims(), dims, "'{spec_str}' seed {seed}");
+                assert!(
+                    t.demand.iter().all(|&d| d > 0.0 && d <= 1.0),
+                    "'{spec_str}' seed {seed}: demand out of (0, 1]"
+                );
+            }
+            for nt in &a.node_types {
+                assert!(nt.cost > 0.0, "'{spec_str}' seed {seed}: free node-type");
+            }
+        }
+        // distinct seeds give distinct instances (families are random)
+        let a = source.generate(SEEDS[0]).unwrap();
+        let b = source.generate(SEEDS[1]).unwrap();
+        assert_ne!(a.tasks, b.tasks, "'{spec_str}': seed-independent generator");
+    }
+}
+
+#[test]
+fn specs_round_trip_through_render() {
+    for spec_str in test_specs() {
+        let spec = WorkloadSpec::parse(&spec_str).unwrap();
+        let rendered = spec.render();
+        let back = WorkloadSpec::parse(&rendered).unwrap();
+        assert_eq!(spec, back, "'{spec_str}' -> '{rendered}'");
+        // rendering is a fixpoint
+        assert_eq!(back.render(), rendered, "'{spec_str}'");
+        // and the rendered spec names the same generator
+        let a = spec.source().unwrap().generate(7).unwrap();
+        let b = back.source().unwrap().generate(7).unwrap();
+        assert_eq!(a.tasks, b.tasks, "'{spec_str}'");
+        assert_eq!(a.node_types, b.node_types, "'{spec_str}'");
+    }
+}
+
+#[test]
+fn synth_specs_reproduce_pre_refactor_generator() {
+    // the figure configurations: dims, m and demand sweeps plus the
+    // heterogeneous cost exponents (fig7a/b/c, fig9, fig5/tab1 defaults)
+    let het = |e: f64| SynthParams {
+        cost_model: CostKind::HeterogeneousRandom { exponent: e },
+        ..Default::default()
+    };
+    let cases: Vec<(String, SynthParams)> = vec![
+        ("synth".into(), SynthParams::default()),
+        ("synth:dims=2".into(), SynthParams { dims: 2, ..Default::default() }),
+        ("synth:dims=7".into(), SynthParams { dims: 7, ..Default::default() }),
+        ("synth:m=5".into(), SynthParams { m: 5, ..Default::default() }),
+        ("synth:m=15".into(), SynthParams { m: 15, ..Default::default() }),
+        (
+            "synth:dem=0.01..0.05".into(),
+            SynthParams { dem_range: (0.01, 0.05), ..Default::default() },
+        ),
+        (
+            "synth:dem=0.01..0.2".into(),
+            SynthParams { dem_range: (0.01, 0.2), ..Default::default() },
+        ),
+        ("synth:n=500".into(), SynthParams { n: 500, ..Default::default() }),
+        ("synth:cost=het,e=0.33".into(), het(0.33)),
+        ("synth:cost=het,e=3".into(), het(3.0)),
+    ];
+    for (spec, params) in cases {
+        let source = workload::parse_workload(&spec).unwrap();
+        for seed in 1..=5u64 {
+            // the pre-refactor path: synth::generate on explicit params
+            let want = synth::generate(&params, seed);
+            let got = source.generate(seed).unwrap();
+            assert_eq!(got.tasks, want.tasks, "'{spec}' seed {seed}");
+            assert_eq!(got.node_types, want.node_types, "'{spec}' seed {seed}");
+            assert_eq!(got.horizon, want.horizon, "'{spec}' seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn gct_specs_reproduce_pre_refactor_sampling() {
+    // the pre-refactor path: a fresh 13K master trace (NOT the registry's
+    // cached one) sampled exactly as harness::runner::instantiate did
+    let trace = gct_like::generate_trace(13_000, 0x6c7_2019);
+    let cases: [(usize, usize, bool); 5] =
+        [(250, 10, false), (2000, 10, false), (1000, 4, false), (1000, 13, true), (500, 7, true)];
+    for (n, m, priced) in cases {
+        let spec = format!("gct:n={n},m={m}{}", if priced { ",priced" } else { "" });
+        let source = workload::parse_workload(&spec).unwrap();
+        for seed in 1..=5u64 {
+            let mut want = trace.sample_scenario(n, m, seed);
+            if !priced {
+                CostModel::homogeneous(want.dims()).apply(&mut want.node_types);
+            }
+            let got = source.generate(seed).unwrap();
+            assert_eq!(got.tasks, want.tasks, "'{spec}' seed {seed}");
+            assert_eq!(got.node_types, want.node_types, "'{spec}' seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn figure_points_build_and_regenerate_identically() {
+    // every generic figure's points materialize through the registry and
+    // are reproducible: two instantiations agree byte-for-byte
+    use tlrs::harness::{runner, scenarios};
+    for id in scenarios::all_ids() {
+        let Some(fig) = scenarios::figure(id, true) else { continue };
+        for p in &fig.points {
+            let a = runner::instantiate(&p.workload, fig.seeds[0]).unwrap();
+            let b = runner::instantiate(&p.workload, fig.seeds[0]).unwrap();
+            assert_eq!(a.tasks, b.tasks, "{id} {}", p.label);
+            assert_eq!(a.node_types, b.node_types, "{id} {}", p.label);
+        }
+    }
+}
+
+#[test]
+fn every_registered_family_reaches_a_solver() {
+    // end-to-end: each family's smoke instance solves and verifies with
+    // the penalty pipeline (no LP needed, keeps the test fast)
+    use tlrs::algo::pipeline::{Penalty, Pipeline};
+    use tlrs::algo::placement::FitPolicy;
+    use tlrs::lp::solver::NativePdhgSolver;
+    use tlrs::model::trim;
+    for fam in workload::families() {
+        let inst = workload::parse_workload(fam.smoke_spec).unwrap().generate(3).unwrap();
+        let tr = trim(&inst).instance;
+        let rep = Pipeline::new()
+            .map(Penalty::both())
+            .fit(FitPolicy::FirstFit)
+            .run(&tr, &NativePdhgSolver::default())
+            .unwrap();
+        assert!(rep.solution.verify(&tr).is_ok(), "{}", fam.name);
+        assert!(rep.cost > 0.0, "{}", fam.name);
+    }
+}

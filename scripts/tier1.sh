@@ -20,6 +20,24 @@ cargo build --release --examples --benches
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+echo "== tier1: workload generator smoke =="
+# gen + solve every registered family through the spec parser, so an
+# unregistered, panicking or infeasible family fails the gate
+TLRS=target/release/tlrs
+GEN_DIR=$(mktemp -d)
+trap 'rm -rf "$GEN_DIR"' EXIT
+"$TLRS" workloads --smoke | while read -r spec; do
+    fam="${spec%%:*}"
+    echo "-- $spec"
+    "$TLRS" gen --workload "$spec" --seed 1 --out "$GEN_DIR/$fam.json"
+    "$TLRS" solve --input "$GEN_DIR/$fam.json" --algo lp+fill --backend native \
+        > /dev/null
+done
+N_FAMILIES=$("$TLRS" workloads --names | wc -l)
+N_GENERATED=$(ls "$GEN_DIR" | wc -l)
+test "$N_FAMILIES" -eq "$N_GENERATED"
+echo "smoked $N_GENERATED workload families"
+
 echo "== tier1: placement bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
     cargo bench --bench placement
