@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
         inst.horizon
     );
     for u in &inst.tasks {
-        println!("  task {} demand {:?} active [{}, {}]", u.id, u.demand, u.start, u.end);
+        println!("  task {} demand {:?} active [{}, {}]", u.id, u.peak(), u.start, u.end);
     }
     for b in &inst.node_types {
         println!("  type {:8} capacity {:?} cost ${}", b.name, b.capacity, b.cost);

@@ -71,6 +71,56 @@ fn main() {
         solve_with_filling(&mixed, &mapping, FitPolicy::FirstFit)
     }));
 
+    // shaped-demand point (piecewise profiles): the same diurnal workload
+    // expressed as first-class demand segments vs. split into one flat
+    // task per segment (the pre-profile workaround, which inflates n and
+    // hides within-task reuse from the mapper). Both solve end-to-end.
+    let shaped = tlrs::io::workload::parse_workload(
+        "mixed:services=300,m=6,dims=5,horizon=168,shape=diurnal",
+    )
+    .expect("registered family")
+    .generate(4)
+    .expect("feasible shaped workload");
+    let shaped_tr = trim(&shaped).instance;
+    let mut next_id = 0u64;
+    let split_tasks: Vec<tlrs::model::Task> = shaped_tr
+        .tasks
+        .iter()
+        .flat_map(|t| {
+            t.segments().iter().map(|seg| {
+                let id = next_id;
+                next_id += 1;
+                tlrs::model::Task::new(id, seg.demand.clone(), seg.start, seg.end)
+            })
+            .collect::<Vec<_>>()
+        })
+        .collect();
+    let split = tlrs::model::Instance::new(
+        split_tasks,
+        shaped_tr.node_types.clone(),
+        shaped_tr.horizon,
+    );
+    let (n_shaped, n_split) = (shaped_tr.n_tasks(), split.n_tasks());
+    let shaped_mapping = map_tasks(&shaped_tr, MappingPolicy::HAvg);
+    let split_mapping = map_tasks(&split, MappingPolicy::HAvg);
+    let shaped_bench = bench(
+        &format!("first_fit/shaped segments n={n_shaped}"),
+        budget,
+        || solve_with_mapping(&shaped_tr, &shaped_mapping, FitPolicy::FirstFit, false),
+    );
+    let split_bench = bench(
+        &format!("first_fit/shaped flat-split n={n_split}"),
+        budget,
+        || solve_with_mapping(&split, &split_mapping, FitPolicy::FirstFit, false),
+    );
+    let shaped_speedup = split_bench.mean_ns / shaped_bench.mean_ns;
+    println!(
+        "shaped first-fit: segments ({n_shaped} tasks) {} vs flat-split \
+         ({n_split} tasks) {} -> {shaped_speedup:.2}x",
+        fmt_ns(shaped_bench.mean_ns),
+        fmt_ns(split_bench.mean_ns)
+    );
+
     // T sweep: same workload over a growing (untrimmed) timeline.
     // Three variants so the index win is separable from threading:
     // indexed (production: parallel), indexed-seq (one thread), dense
@@ -123,6 +173,8 @@ fn main() {
     results.push(indexed);
     results.push(indexed_seq);
     results.push(dense);
+    results.push(shaped_bench);
+    results.push(split_bench);
 
     let json = Json::obj(vec![
         ("bench", Json::Str("placement".into())),
@@ -131,6 +183,9 @@ fn main() {
         ("gct_horizon", Json::Num(t_gct as f64)),
         ("gct_first_fit_speedup", Json::Num(speedup)),
         ("gct_first_fit_speedup_index_only", Json::Num(speedup_seq)),
+        ("shaped_n_segments_tasks", Json::Num(n_shaped as f64)),
+        ("shaped_n_split_tasks", Json::Num(n_split as f64)),
+        ("shaped_vs_flat_split_speedup", Json::Num(shaped_speedup)),
         (
             "results",
             Json::Arr(results.iter().map(BenchResult::to_json).collect()),

@@ -60,7 +60,7 @@ pub fn optimal(inst: &Instance) -> Solution {
             // new node of each admitting type; skip symmetric duplicates
             // (only open a new node of type b if no empty node of b exists)
             for b in 0..self.inst.n_types() {
-                if !self.inst.node_types[b].admits(&task.demand) {
+                if !self.inst.node_types[b].admits(task.peak()) {
                     continue;
                 }
                 let mut node = Node {

@@ -19,7 +19,8 @@ pub fn color(inst: &Instance) -> Solution {
 }
 
 /// Clique-load lower bound: at any timeslot, total demand / capacity
-/// (rounded up) nodes are needed.
+/// (rounded up) nodes are needed. Shaped tasks contribute their exact
+/// per-slot demand (the segment covering `t`), so the bound stays exact.
 pub fn clique_bound(inst: &Instance) -> usize {
     assert_eq!(inst.n_types(), 1);
     let dims = inst.dims();
@@ -30,8 +31,8 @@ pub fn clique_bound(inst: &Instance) -> usize {
             let load: f64 = inst
                 .tasks
                 .iter()
-                .filter(|u| u.active_at(t))
-                .map(|u| u.demand[d])
+                .filter_map(|u| u.demand_at(t))
+                .map(|dem| dem[d])
                 .sum();
             best = best.max((load / cap[d] - 1e-9).ceil() as usize);
         }

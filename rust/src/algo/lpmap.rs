@@ -94,7 +94,7 @@ fn top_k_mass_mappings(inst: &Instance, x: &[f64]) -> Vec<Vec<usize>> {
                 let pick = allowed
                     .iter()
                     .copied()
-                    .filter(|&b| inst.node_types[b].admits(&inst.tasks[u].demand))
+                    .filter(|&b| inst.node_types[b].admits(inst.tasks[u].peak()))
                     .max_by(|&a, &b| x[u * m + a].total_cmp(&x[u * m + b]));
                 match pick {
                     Some(b) => b,
@@ -102,7 +102,7 @@ fn top_k_mass_mappings(inst: &Instance, x: &[f64]) -> Vec<Vec<usize>> {
                         // fall back to the global admissible argmax
                         (0..m)
                             .filter(|&b| {
-                                inst.node_types[b].admits(&inst.tasks[u].demand)
+                                inst.node_types[b].admits(inst.tasks[u].peak())
                             })
                             .max_by(|&a, &b| {
                                 x[u * m + a].total_cmp(&x[u * m + b]).then(a.cmp(&b))
@@ -128,7 +128,7 @@ pub fn round_mapping(inst: &Instance, x: &[f64]) -> (Vec<usize>, Vec<f64>) {
         let mut arg = usize::MAX;
         let mut best = f64::NEG_INFINITY;
         for b in 0..m {
-            if !inst.node_types[b].admits(&inst.tasks[u].demand) {
+            if !inst.node_types[b].admits(inst.tasks[u].peak()) {
                 continue;
             }
             let v = x[u * m + b];

@@ -2,7 +2,12 @@
 //!
 //! Mapping phase: each task goes to the node-type minimizing the penalty
 //! `p(u|B) = cost(B) * h(u|B)` where the relative demand `h` is either the
-//! dimension-average (`h_avg`) or the dimension-max (`h_max`).
+//! dimension-average (`h_avg`) or the dimension-max (`h_max`). With
+//! piecewise demand profiles the two aggregates generalize naturally:
+//! `h_avg` uses the *time-averaged* demand (a task's expected congestion
+//! contribution) and `h_max` the *peak* demand (its worst-case
+//! footprint); both reduce to the seed's constant-demand formulas on flat
+//! tasks. Admissibility is always a peak property.
 //! Placement phase: per node-type greedy placement (placement.rs).
 
 use crate::model::Instance;
@@ -37,7 +42,7 @@ pub fn penalty_matrix(inst: &Instance, policy: MappingPolicy) -> Vec<f64> {
     let mut p = vec![f64::INFINITY; n * m];
     for u in 0..n {
         for b in 0..m {
-            if !inst.node_types[b].admits(&inst.tasks[u].demand) {
+            if !inst.node_types[b].admits(inst.tasks[u].peak()) {
                 continue;
             }
             let h = match policy {

@@ -169,7 +169,7 @@ impl MappingStrategy for Oracle {
                 self.name
             );
             ensure!(
-                inst.node_types[b].admits(&inst.tasks[u].demand),
+                inst.node_types[b].admits(inst.tasks[u].peak()),
                 "oracle mapping '{}': task {u} does not fit node-type {b} alone",
                 self.name
             );
@@ -668,16 +668,25 @@ pub fn parse_portfolio(specs: &str) -> Result<Portfolio> {
     if members.is_empty() {
         return Err(spec_error(specs, "no pipeline specs given".into()));
     }
-    Ok(Portfolio { pipelines: members })
+    // the CLI/service race path: skip members the certified shared-LP
+    // bound proves cannot beat a finished incumbent (figure sweeps build
+    // their portfolios directly and keep every member's cost)
+    Ok(Portfolio { pipelines: members, early_abort: true })
 }
 
 /// Result of racing a portfolio of pipelines on one instance.
 #[derive(Clone, Debug)]
 pub struct PortfolioReport {
-    /// One report per member pipeline, in portfolio order.
+    /// One report per *completed* member pipeline, in portfolio order.
+    /// Without early abort every member completes; with it, members the
+    /// shared-LP bound proved non-winners may be skipped (see `skipped`).
     pub reports: Vec<SolveReport>,
-    /// Index of the min-cost report (ties break toward the lower index,
-    /// so the winner is independent of thread scheduling).
+    /// Display labels of members skipped by LB early abort: a finished
+    /// lower-index member already matched the certified bound, so they
+    /// could not have produced a strictly cheaper solution.
+    pub skipped: Vec<String>,
+    /// Index into `reports` of the winning member (ties break toward the
+    /// lower index, so the winner is independent of thread scheduling).
     pub winner: usize,
     /// The shared mapping-LP outcome, when any member needed one.
     pub lp: Option<LpOutcome>,
@@ -710,6 +719,13 @@ impl PortfolioReport {
 /// member — one LP solve, N placements.
 pub struct Portfolio {
     pub pipelines: Vec<Pipeline>,
+    /// Lower-bound early abort (ROADMAP Architecture lever): when a
+    /// member finishes with cost within FP tolerance of the certified
+    /// shared-LP bound, members that have not started yet are skipped —
+    /// no feasible solution can cost less than the bound, so they cannot
+    /// *beat* the incumbent. Off by default (figure sweeps need every
+    /// member's cost); the CLI/service `--algo` path enables it.
+    pub early_abort: bool,
 }
 
 impl Default for Portfolio {
@@ -718,13 +734,27 @@ impl Default for Portfolio {
     }
 }
 
+/// The provable-optimality threshold for `cost` against a certified
+/// lower bound `lb`: `cost <= lb·(1+eps) + eps`. Any feasible cost is
+/// `>= lb` exactly, so a member at the threshold is optimal up to FP
+/// noise and later members can tie it at best.
+fn abort_bound(lb: f64) -> f64 {
+    lb + 1e-9 * lb.abs() + 1e-9
+}
+
 impl Portfolio {
     pub fn new() -> Self {
-        Portfolio { pipelines: Vec::new() }
+        Portfolio { pipelines: Vec::new(), early_abort: false }
     }
 
     pub fn add(mut self, pipeline: Pipeline) -> Self {
         self.pipelines.push(pipeline);
+        self
+    }
+
+    /// Enable or disable lower-bound early abort (default off).
+    pub fn with_early_abort(mut self, on: bool) -> Self {
+        self.early_abort = on;
         self
     }
 
@@ -735,6 +765,7 @@ impl Portfolio {
                 .iter()
                 .map(|n| preset(n).expect("preset exists"))
                 .collect(),
+            early_abort: false,
         }
     }
 
@@ -758,20 +789,49 @@ impl Portfolio {
     /// pipeline is deterministic, results are stored by member index,
     /// and the winner uses an index tie-break (`run_sequential` must and
     /// does agree).
+    ///
+    /// With `early_abort` on, a member is skipped iff some *lower-index*
+    /// member already finished with cost within [`abort_bound`] of the
+    /// certified shared-LP bound. The winner — cost and label — is still
+    /// timing-independent: the lowest-index member that would reach the
+    /// bound is claimed before any member it could suppress (the pool
+    /// claims indices in order), so it always completes, and the winner
+    /// rule picks the first bound-matching report. Which *other* members
+    /// got skipped may vary with scheduling; only `skipped` reflects
+    /// that, never the winner.
     pub fn run(&self, inst: &Instance, solver: &dyn MappingSolver) -> Result<PortfolioReport> {
         ensure!(!self.pipelines.is_empty(), "empty portfolio");
         let (lp, lp_seconds) = self.shared_lp(inst, solver)?;
         let lp_ref = lp.as_ref();
+        let bound = if self.early_abort {
+            lp.as_ref().map(|o| abort_bound(o.certified_lb))
+        } else {
+            None
+        };
         let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let first_optimal = std::sync::atomic::AtomicUsize::new(usize::MAX);
         let results = crate::util::pool::run_indexed(self.pipelines.len(), workers, |i| {
-            self.pipelines[i].run_shared(inst, lp_ref)
+            use std::sync::atomic::Ordering::SeqCst;
+            if bound.is_some() && first_optimal.load(SeqCst) < i {
+                return None; // a finished lower-index member is provably unbeatable
+            }
+            let r = self.pipelines[i].run_shared(inst, lp_ref);
+            if let (Some(b), Ok(rep)) = (bound, &r) {
+                if rep.cost <= b {
+                    first_optimal.fetch_min(i, SeqCst);
+                }
+            }
+            Some(r)
         });
-        Self::assemble(results, lp, lp_seconds)
+        self.assemble(results, lp, lp_seconds, bound)
     }
 
     /// Sequential fold over the same members — the reference the property
     /// tests compare the parallel race against, and the baseline
-    /// `benches/end_to_end.rs` measures the racing speedup from.
+    /// `benches/end_to_end.rs` measures the racing speedup from. With
+    /// `early_abort` on it skips maximally (everything after the first
+    /// bound-matching member), the deterministic upper envelope of what
+    /// the parallel race may skip.
     pub fn run_sequential(
         &self,
         inst: &Instance,
@@ -779,26 +839,55 @@ impl Portfolio {
     ) -> Result<PortfolioReport> {
         ensure!(!self.pipelines.is_empty(), "empty portfolio");
         let (lp, lp_seconds) = self.shared_lp(inst, solver)?;
-        let results: Vec<Result<SolveReport>> = self
+        let bound = if self.early_abort {
+            lp.as_ref().map(|o| abort_bound(o.certified_lb))
+        } else {
+            None
+        };
+        let mut first_optimal = usize::MAX;
+        let results: Vec<Option<Result<SolveReport>>> = self
             .pipelines
             .iter()
-            .map(|p| p.run_shared(inst, lp.as_ref()))
+            .enumerate()
+            .map(|(i, p)| {
+                if bound.is_some() && first_optimal < i {
+                    return None;
+                }
+                let r = p.run_shared(inst, lp.as_ref());
+                if let (Some(b), Ok(rep)) = (bound, &r) {
+                    if rep.cost <= b {
+                        first_optimal = first_optimal.min(i);
+                    }
+                }
+                Some(r)
+            })
             .collect();
-        Self::assemble(results, lp, lp_seconds)
+        self.assemble(results, lp, lp_seconds, bound)
     }
 
     fn assemble(
-        results: Vec<Result<SolveReport>>,
+        &self,
+        results: Vec<Option<Result<SolveReport>>>,
         lp: Option<LpOutcome>,
         lp_seconds: f64,
+        bound: Option<f64>,
     ) -> Result<PortfolioReport> {
         let mut reports = Vec::with_capacity(results.len());
-        for r in results {
-            reports.push(r?);
+        let mut skipped = Vec::new();
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Some(r) => reports.push(r?),
+                None => skipped.push(self.pipelines[i].display_label()),
+            }
         }
-        let winner = crate::util::stats::argmin_f64(reports.iter().map(|r| r.cost))
-            .expect("non-empty portfolio");
-        Ok(PortfolioReport { reports, winner, lp, lp_seconds })
+        // member 0 is never skipped, so completed reports exist
+        let winner = bound
+            .and_then(|b| reports.iter().position(|r| r.cost <= b))
+            .unwrap_or_else(|| {
+                crate::util::stats::argmin_f64(reports.iter().map(|r| r.cost))
+                    .expect("non-empty portfolio")
+            });
+        Ok(PortfolioReport { reports, skipped, winner, lp, lp_seconds })
     }
 }
 
@@ -953,6 +1042,56 @@ mod tests {
         let sim = solve_with_mapping(&tr, &mapping, FitPolicy::SimilarityFit, false);
         let want = ff.cost(&tr).min(sim.cost(&tr));
         assert!((rep.cost - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_abort_skips_provably_beaten_members() {
+        use crate::lp::solver::SimplexSolver;
+        use crate::model::{NodeType, Task};
+        // four half-capacity tasks on one slot: the LP bound (2 nodes) is
+        // tight, and the exact simplex backend certifies it exactly, so
+        // the lp member finishes at the bound and later members skip
+        let inst = Instance::new(
+            (0..4).map(|i| Task::new(i, vec![0.5], 0, 1)).collect(),
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            2,
+        );
+        let tr = crate::model::trim(&inst).instance;
+        let portfolio = parse_portfolio("lp:ff,penalty:ff,penalty:ff+ls").unwrap();
+        assert!(portfolio.early_abort, "parse_portfolio enables early abort");
+        let seq = portfolio.run_sequential(&tr, &SimplexSolver).unwrap();
+        // member 0 matched the certified bound; the rest were skipped
+        assert_eq!(seq.reports.len(), 1, "skipped: {:?}", seq.skipped);
+        assert_eq!(seq.skipped, vec!["penalty:ff", "penalty:ff+ls"]);
+        assert_eq!(seq.best().label, "lp:ff");
+        assert!((seq.best().cost - 2.0).abs() < 1e-9);
+        // the parallel race picks the same winner at the same cost, no
+        // matter which members its scheduling let through
+        let par = portfolio.run(&tr, &SimplexSolver).unwrap();
+        assert_eq!(par.best().label, "lp:ff");
+        assert!((par.best().cost - seq.best().cost).abs() < 1e-12);
+        assert!(par.best().solution.verify(&tr).is_ok());
+        // with early abort off, every member runs and the winner agrees
+        let full = parse_portfolio("lp:ff,penalty:ff,penalty:ff+ls")
+            .unwrap()
+            .with_early_abort(false)
+            .run_sequential(&tr, &SimplexSolver)
+            .unwrap();
+        assert_eq!(full.reports.len(), 3);
+        assert!(full.skipped.is_empty());
+        assert!((full.best().cost - seq.best().cost).abs() < 1e-12);
+    }
+
+    #[test]
+    fn early_abort_never_fires_without_a_bound_match() {
+        // LP-free portfolio: no certified bound, nothing can be skipped
+        let tr = tiny();
+        let race = parse_portfolio("penalty-map,penalty-map-f")
+            .unwrap()
+            .run_sequential(&tr, &NativePdhgSolver::default())
+            .unwrap();
+        assert_eq!(race.reports.len(), 2);
+        assert!(race.skipped.is_empty());
     }
 
     #[test]

@@ -33,10 +33,7 @@ pub fn sub_instance(inst: &Instance, keep: &[usize]) -> Instance {
     let tasks = keep
         .iter()
         .enumerate()
-        .map(|(new_id, &u)| {
-            let t = &inst.tasks[u];
-            crate::model::Task::new(new_id as u64, t.demand.clone(), t.start, t.end)
-        })
+        .map(|(new_id, &u)| inst.tasks[u].with_id(new_id as u64))
         .collect();
     Instance::new(tasks, inst.node_types.clone(), inst.horizon)
 }

@@ -101,7 +101,11 @@ impl Planner {
                 (Box::new(ArcSolver(s)), "pdhg-artifact")
             }
             Backend::Auto => {
-                if let Some(a) = &self.artifact {
+                // the compiled artifact factors the constraint matrix as
+                // (activity x per-task ratios): it cannot express per-slot
+                // (shaped) coefficients, so shaped instances route native
+                let flat = inst.tasks.iter().all(|u| u.is_flat());
+                if let (Some(a), true) = (&self.artifact, flat) {
                     // probe bucket fit using the logical LP shape
                     let probe = MappingLp {
                         n,
@@ -109,7 +113,9 @@ impl Planner {
                         dims: d,
                         t,
                         spans: vec![],
-                        ratios: vec![],
+                        seg_off: vec![],
+                        seg_spans: vec![],
+                        seg_ratios: vec![],
                         costs: vec![],
                         rho: vec![],
                     };

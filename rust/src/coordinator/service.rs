@@ -12,7 +12,14 @@
 //! "lp+fill+ls", the token "portfolio", and comma-separated lists that
 //! race in parallel on one LP solve — see `algo::pipeline::SPEC_GRAMMAR`.
 //! For a multi-pipeline race the response describes the winner, plus a
-//! "raced" array of member costs.
+//! "raced" array of member costs and (when the certified LP bound let
+//! the race abort members early) a "skipped" array of member labels.
+//! Workload specs accept the `shape=flat|ramp|diurnal|spike` key on
+//! every family (time-varying demand within a task), and inline
+//! instances may give any task a piecewise profile via a "segments"
+//! array (see `io::files`). The `csv` family is CLI-only: accepting it
+//! here would hand untrusted clients server-local file reads, so
+//! `source_from_json` rejects it — submit the tasks inline instead.
 //! Response (one line):
 //!   {"ok": true, "cost": ..., "normalized_cost": ..., "n_nodes": ...,
 //!    "nodes_per_type": [...], "backend": "...", "seconds": ...,
@@ -129,7 +136,7 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
         fields.push(("lower_bound", Json::Num(lb)));
         fields.push(("normalized_cost", Json::Num(cost / lb.max(1e-12))));
     }
-    if race.reports.len() > 1 {
+    if race.reports.len() + race.skipped.len() > 1 {
         fields.push(("winner", Json::Str(rep.label.clone())));
         fields.push((
             "raced",
@@ -145,6 +152,14 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
                     .collect(),
             ),
         ));
+        if !race.skipped.is_empty() {
+            // members the certified LP bound proved could not beat a
+            // finished incumbent (early abort) — no cost to report
+            fields.push((
+                "skipped",
+                Json::Arr(race.skipped.iter().map(|l| Json::Str(l.clone())).collect()),
+            ));
+        }
     }
     Ok(Json::obj(fields))
 }

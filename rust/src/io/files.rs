@@ -2,14 +2,23 @@
 //!
 //! The CSV trace format mirrors the processed GCT-2019 table the paper
 //! builds from BigQuery: one task per line, `id,start,end,dem0,dem1,...`.
-//! Node-type catalogs live in the JSON instance format.
+//! Tasks with piecewise-constant demand profiles write one row per
+//! segment: the first segment as a normal task row, each further segment
+//! as a continuation row `+,start,end,dem0,...` immediately after it.
+//! Node-type catalogs live in the JSON instance format; shaped tasks
+//! there carry a `"segments"` array instead of a flat `"demand"`.
+//!
+//! External data is *validated before construction*: a malformed row
+//! (inverted span, non-finite demand, a continuation with a gap) returns
+//! the loader's `Result` error instead of tripping `Task::new`'s
+//! programmer-error panic.
 
 use std::fs;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::{Instance, NodeType, Solution, Task};
+use crate::model::{DemandSeg, Instance, NodeType, Solution, Task};
 use crate::util::json::{self, Json};
 
 // ---------- JSON instance format ----------------------------------------
@@ -38,12 +47,32 @@ pub fn instance_to_json(inst: &Instance) -> Json {
                 inst.tasks
                     .iter()
                     .map(|u| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("id", Json::Num(u.id as f64)),
-                            ("demand", Json::arr_f64(&u.demand)),
-                            ("start", Json::Num(u.start as f64)),
-                            ("end", Json::Num(u.end as f64)),
-                        ])
+                        ];
+                        if u.is_flat() {
+                            // flat tasks keep the seed's exact format
+                            fields.push(("demand", Json::arr_f64(u.peak())));
+                        } else {
+                            fields.push((
+                                "segments",
+                                Json::Arr(
+                                    u.segments()
+                                        .iter()
+                                        .map(|s| {
+                                            Json::obj(vec![
+                                                ("start", Json::Num(s.start as f64)),
+                                                ("end", Json::Num(s.end as f64)),
+                                                ("demand", Json::arr_f64(&s.demand)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ));
+                        }
+                        fields.push(("start", Json::Num(u.start as f64)));
+                        fields.push(("end", Json::Num(u.end as f64)));
+                        Json::obj(fields)
                     })
                     .collect(),
             ),
@@ -66,18 +95,43 @@ pub fn instance_from_json(v: &Json) -> Result<Instance> {
     }
     let mut tasks = Vec::new();
     for t in v.get("tasks").as_arr().context("instance: tasks")? {
+        let id = t.get("id").as_f64().context("task id")? as u64;
         let start = t.get("start").as_usize().context("task start")? as u32;
         let end = t.get("end").as_usize().context("task end")? as u32;
-        let demand = t.get("demand").to_f64_vec().context("task demand")?;
-        if end < start || demand.is_empty() {
-            bail!("task with invalid span [{start},{end}] or empty demand");
-        }
-        tasks.push(Task::new(
-            t.get("id").as_f64().context("task id")? as u64,
-            demand,
-            start,
-            end,
-        ));
+        let task = match t.get("segments") {
+            Json::Null => {
+                let demand = t.get("demand").to_f64_vec().context("task demand")?;
+                if end < start || demand.is_empty() {
+                    bail!("task {id} with invalid span [{start},{end}] or empty demand");
+                }
+                validate_demand(id, &demand)?;
+                Task::new(id, demand, start, end)
+            }
+            segs_json => {
+                let mut segs = Vec::new();
+                for s in segs_json.as_arr().context("task segments")? {
+                    let demand = s.get("demand").to_f64_vec().context("segment demand")?;
+                    validate_demand(id, &demand)?;
+                    segs.push(DemandSeg {
+                        start: s.get("start").as_usize().context("segment start")? as u32,
+                        end: s.get("end").as_usize().context("segment end")? as u32,
+                        demand,
+                    });
+                }
+                let task = Task::try_piecewise(id, segs)
+                    .map_err(|e| anyhow::anyhow!("invalid segments: {e}"))?;
+                if (task.start, task.end) != (start, end) {
+                    bail!(
+                        "task {id}: declared span [{start},{end}] does not match its \
+                         segments [{},{}]",
+                        task.start,
+                        task.end
+                    );
+                }
+                task
+            }
+        };
+        tasks.push(task);
     }
     // Validate before Instance::new, which treats violations as programmer
     // errors (panics) — external input must fail gracefully instead.
@@ -104,6 +158,15 @@ pub fn instance_from_json(v: &Json) -> Result<Instance> {
     Ok(Instance::new(tasks, node_types, horizon))
 }
 
+/// Demand values from external sources must be finite and non-negative —
+/// a NaN would silently disable the verifier's comparisons downstream.
+fn validate_demand(id: u64, demand: &[f64]) -> Result<()> {
+    if demand.iter().any(|d| !d.is_finite() || *d < 0.0) {
+        bail!("task {id}: demand components must be finite and non-negative");
+    }
+    Ok(())
+}
+
 pub fn save_instance(inst: &Instance, path: &Path) -> Result<()> {
     fs::write(path, instance_to_json(inst).to_string())
         .with_context(|| format!("writing {}", path.display()))
@@ -118,7 +181,9 @@ pub fn load_instance(path: &Path) -> Result<Instance> {
 
 // ---------- CSV trace format ---------------------------------------------
 
-/// Write tasks as `id,start,end,dem0,dem1,...` with a header line.
+/// Write tasks as `id,start,end,dem0,dem1,...` with a header line. A
+/// shaped task writes its first segment as the task row and each further
+/// segment as a `+,start,end,dem...` continuation row.
 pub fn save_trace_csv(tasks: &[Task], path: &Path) -> Result<()> {
     let dims = tasks.first().map(|t| t.dims()).unwrap_or(0);
     let mut out = String::from("id,start,end");
@@ -127,17 +192,26 @@ pub fn save_trace_csv(tasks: &[Task], path: &Path) -> Result<()> {
     }
     out.push('\n');
     for t in tasks {
-        out.push_str(&format!("{},{},{}", t.id, t.start, t.end));
-        for &x in &t.demand {
-            out.push_str(&format!(",{x}"));
+        for (i, seg) in t.segments().iter().enumerate() {
+            if i == 0 {
+                out.push_str(&format!("{},{},{}", t.id, seg.start, seg.end));
+            } else {
+                out.push_str(&format!("+,{},{}", seg.start, seg.end));
+            }
+            for &x in &seg.demand {
+                out.push_str(&format!(",{x}"));
+            }
+            out.push('\n');
         }
-        out.push('\n');
     }
     fs::write(path, out).with_context(|| format!("writing {}", path.display()))
 }
 
 /// Load tasks from the CSV trace format. Rows with missing fields are
-/// rejected (the paper purges them from the sampled trace).
+/// rejected (the paper purges them from the sampled trace), and so are
+/// semantically malformed rows — `end < start`, non-finite demand, or a
+/// `+` continuation row that does not extend the previous task
+/// contiguously. External data never reaches `Task::new`'s panics.
 pub fn load_trace_csv(path: &Path) -> Result<Vec<Task>> {
     let text = fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -145,27 +219,78 @@ pub fn load_trace_csv(path: &Path) -> Result<Vec<Task>> {
     let header = lines.next().context("empty trace file")?;
     let dims = header.split(',').count().saturating_sub(3);
     if dims == 0 {
-        bail!("trace header has no demand columns: {header}");
+        // deliberately does not echo the line: loader errors can end up
+        // in logs/responses, and the "file" may not be a trace at all
+        bail!(
+            "trace header has {} column(s), need at least 4 (id,start,end,dem0,...)",
+            header.split(',').count()
+        );
     }
-    let mut tasks = Vec::new();
+    // (id, accumulated segments) of the task being assembled
+    let mut pending: Option<(u64, Vec<DemandSeg>)> = None;
+    let mut tasks: Vec<Task> = Vec::new();
+    let flush = |pending: &mut Option<(u64, Vec<DemandSeg>)>,
+                 tasks: &mut Vec<Task>|
+     -> Result<()> {
+        if let Some((id, segs)) = pending.take() {
+            let task = Task::try_piecewise(id, segs)
+                .map_err(|e| anyhow::anyhow!("invalid trace rows: {e}"))?;
+            tasks.push(task);
+        }
+        Ok(())
+    };
     for (lineno, line) in lines.enumerate() {
         if line.trim().is_empty() {
             continue;
         }
+        let row = lineno + 2;
         let fields: Vec<&str> = line.split(',').collect();
         if fields.len() != dims + 3 {
-            bail!("line {}: expected {} fields, got {}", lineno + 2, dims + 3, fields.len());
+            bail!("line {row}: expected {} fields, got {}", dims + 3, fields.len());
         }
-        let id: u64 = fields[0].parse().with_context(|| format!("line {}: id", lineno + 2))?;
-        let start: u32 = fields[1].parse().context("start")?;
-        let end: u32 = fields[2].parse().context("end")?;
+        let start: u32 = fields[1]
+            .parse()
+            .with_context(|| format!("line {row}: start"))?;
+        let end: u32 = fields[2].parse().with_context(|| format!("line {row}: end"))?;
         let demand: Vec<f64> = fields[3..]
             .iter()
             .map(|f| f.parse::<f64>())
             .collect::<Result<_, _>>()
-            .with_context(|| format!("line {}: demand", lineno + 2))?;
-        tasks.push(Task::new(id, demand, start, end));
+            .with_context(|| format!("line {row}: demand"))?;
+        // validate *before* any Task construction: loader errors, not panics
+        if end < start {
+            bail!("line {row}: end {end} < start {start}");
+        }
+        // keep end + 1 representable: the contiguity check below and every
+        // horizon derivation downstream compute it
+        if end == u32::MAX {
+            bail!("line {row}: end {end} out of range");
+        }
+        if demand.iter().any(|d| !d.is_finite() || *d < 0.0) {
+            bail!("line {row}: demand components must be finite and non-negative");
+        }
+        let seg = DemandSeg { start, end, demand };
+        if fields[0] == "+" {
+            let Some((_, segs)) = pending.as_mut() else {
+                bail!("line {row}: '+' continuation row without a preceding task row");
+            };
+            let prev_end = segs.last().expect("pending has a segment").end;
+            if start != prev_end + 1 {
+                bail!(
+                    "line {row}: continuation starts at {start} but the previous \
+                     segment ends at {prev_end} (segments must be contiguous)"
+                );
+            }
+            segs.push(seg);
+        } else {
+            flush(&mut pending, &mut tasks)?;
+            let id: u64 = fields[0]
+                .parse()
+                .with_context(|| format!("line {row}: id"))?;
+            pending = Some((id, vec![seg]));
+        }
     }
+    flush(&mut pending, &mut tasks)?;
     Ok(tasks)
 }
 
@@ -211,6 +336,21 @@ mod tests {
     use super::*;
     use crate::io::synth::{generate, SynthParams};
 
+    fn shaped_tasks() -> Vec<Task> {
+        vec![
+            Task::new(0, vec![0.2, 0.1], 0, 4),
+            Task::piecewise(
+                1,
+                vec![
+                    DemandSeg { start: 1, end: 2, demand: vec![0.1, 0.3] },
+                    DemandSeg { start: 3, end: 5, demand: vec![0.4, 0.05] },
+                    DemandSeg { start: 6, end: 6, demand: vec![0.05, 0.05] },
+                ],
+            ),
+            Task::new(2, vec![0.3, 0.3], 5, 6),
+        ]
+    }
+
     #[test]
     fn instance_json_roundtrip() {
         let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 5);
@@ -219,6 +359,20 @@ mod tests {
         assert_eq!(inst.tasks, back.tasks);
         assert_eq!(inst.node_types, back.node_types);
         assert_eq!(inst.horizon, back.horizon);
+    }
+
+    #[test]
+    fn shaped_instance_json_roundtrip() {
+        let inst = Instance::new(
+            shaped_tasks(),
+            vec![NodeType::new("a", vec![1.0, 1.0], 1.0)],
+            7,
+        );
+        let v = instance_to_json(&inst);
+        let back = instance_from_json(&json::parse(&v.to_string()).unwrap()).unwrap();
+        assert_eq!(inst.tasks, back.tasks);
+        assert!(!back.tasks[1].is_flat());
+        assert_eq!(back.tasks[1].segments().len(), 3);
     }
 
     #[test]
@@ -233,12 +387,86 @@ mod tests {
     }
 
     #[test]
+    fn shaped_csv_roundtrip() {
+        let tasks = shaped_tasks();
+        let dir = std::env::temp_dir().join("tlrs_test_csv_shaped");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        save_trace_csv(&tasks, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // one continuation row per extra segment
+        assert_eq!(text.lines().filter(|l| l.starts_with('+')).count(), 2, "{text}");
+        let back = load_trace_csv(&path).unwrap();
+        assert_eq!(tasks, back);
+    }
+
+    #[test]
     fn csv_rejects_malformed() {
         let dir = std::env::temp_dir().join("tlrs_test_csv2");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.csv");
         std::fs::write(&path, "id,start,end,dem0\n1,2\n").unwrap();
         assert!(load_trace_csv(&path).is_err());
+    }
+
+    #[test]
+    fn csv_malformed_rows_error_not_panic() {
+        let dir = std::env::temp_dir().join("tlrs_test_csv3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases: &[(&str, &str)] = &[
+            // the seed panicked on this one inside Task::new
+            ("id,start,end,dem0\n1,5,4,0.1\n", "end 4 < start 5"),
+            ("id,start,end,dem0\n1,0,2,NaN\n", "finite"),
+            // end + 1 must stay representable (horizon = last end + 1)
+            ("id,start,end,dem0\n1,0,4294967295,0.1\n", "out of range"),
+            ("id,start,end,dem0\n1,0,2,-0.5\n", "finite"),
+            // continuation without a task row
+            ("id,start,end,dem0\n+,0,2,0.1\n", "without a preceding"),
+            // continuation with a gap
+            ("id,start,end,dem0\n1,0,2,0.1\n+,4,5,0.2\n", "contiguous"),
+            // continuation overlapping its predecessor
+            ("id,start,end,dem0\n1,0,2,0.1\n+,2,5,0.2\n", "contiguous"),
+        ];
+        for (i, (content, needle)) in cases.iter().enumerate() {
+            let path = dir.join(format!("bad{i}.csv"));
+            std::fs::write(&path, content).unwrap();
+            let err = match load_trace_csv(&path) {
+                Err(e) => format!("{e:#}"),
+                Ok(t) => panic!("case {i} parsed: {t:?}"),
+            };
+            assert!(err.contains(needle), "case {i}: {err}");
+        }
+    }
+
+    #[test]
+    fn json_rejects_malformed_tasks() {
+        // invalid flat span
+        let v = json::parse(
+            r#"{"horizon": 4, "node_types": [{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks": [{"id":0,"demand":[0.1],"start":3,"end":1}]}"#,
+        )
+        .unwrap();
+        assert!(instance_from_json(&v).is_err());
+        // gap between segments
+        let v = json::parse(
+            r#"{"horizon": 8, "node_types": [{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks": [{"id":0,"start":0,"end":5,"segments":[
+                    {"start":0,"end":1,"demand":[0.1]},
+                    {"start":3,"end":5,"demand":[0.2]}]}]}"#,
+        )
+        .unwrap();
+        let err = instance_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("contiguous"), "{err}");
+        // declared span disagreeing with segments
+        let v = json::parse(
+            r#"{"horizon": 8, "node_types": [{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks": [{"id":0,"start":0,"end":5,"segments":[
+                    {"start":0,"end":1,"demand":[0.1]},
+                    {"start":2,"end":4,"demand":[0.2]}]}]}"#,
+        )
+        .unwrap();
+        let err = instance_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
     }
 
     #[test]

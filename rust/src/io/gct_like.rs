@@ -111,10 +111,7 @@ impl Trace {
         let tasks: Vec<Task> = ti
             .iter()
             .enumerate()
-            .map(|(new_id, &i)| {
-                let t = &self.tasks[i];
-                Task::new(new_id as u64, t.demand.clone(), t.start, t.end)
-            })
+            .map(|(new_id, &i)| self.tasks[i].with_id(new_id as u64))
             .collect();
         // Guarantee feasibility: the largest machine admits any clipped task.
         Instance::new(tasks, types, self.horizon)
@@ -133,7 +130,7 @@ mod tests {
         for u in &tr.tasks {
             assert_eq!(u.dims(), 2);
             assert!(u.end < WEEK_SLOTS);
-            assert!(u.demand.iter().all(|&d| (1e-3..=0.25).contains(&d)));
+            assert!(u.peak().iter().all(|&d| (1e-3..=0.25).contains(&d)));
         }
     }
 
@@ -149,7 +146,7 @@ mod tests {
         // paper: "task demands are fixed and small compared to capacities"
         let tr = generate_trace(2000, 2);
         let med_cpu = {
-            let mut v: Vec<f64> = tr.tasks.iter().map(|t| t.demand[0]).collect();
+            let mut v: Vec<f64> = tr.tasks.iter().map(|t| t.peak()[0]).collect();
             v.sort_by(f64::total_cmp);
             v[v.len() / 2]
         };

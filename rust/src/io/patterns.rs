@@ -379,7 +379,7 @@ mod tests {
         for t in &tasks {
             assert!(t.end < WEEK_HOURS);
             assert_eq!(t.dims(), 2);
-            assert!(t.demand.iter().all(|&d| d > 0.0));
+            assert!(t.peak().iter().all(|&d| d > 0.0));
         }
         // deterministic
         assert_eq!(tasks, mixed_workload(50, 3));
@@ -394,7 +394,7 @@ mod tests {
         for t in &tasks {
             assert_eq!(t.dims(), 4);
             assert!(t.end < 48);
-            assert!(t.demand.iter().all(|&d| (0.01..=0.2 + 1e-12).contains(&d)));
+            assert!(t.peak().iter().all(|&d| (0.01..=0.2 + 1e-12).contains(&d)));
         }
     }
 }

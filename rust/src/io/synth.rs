@@ -48,46 +48,74 @@ impl Default for SynthParams {
     }
 }
 
-/// Generate a synthetic instance. Fully deterministic in `seed`.
-pub fn generate(params: &SynthParams, seed: u64) -> Instance {
-    let mut rng = Rng::new(seed);
-    let d = params.dims;
-
-    let mut node_types: Vec<NodeType> = (0..params.m)
+/// Draw an m-type catalog skeleton: capacities uniform per dimension
+/// from `cap_range`, cost 1.0 until [`price_catalog`] runs. One shared
+/// implementation for every catalog-drawing family (synth, the pattern
+/// families, csv import) — the draw order is a generator contract:
+/// changing it changes every pinned instance.
+pub fn draw_capacities(
+    rng: &mut Rng,
+    m: usize,
+    dims: usize,
+    cap_range: (f64, f64),
+    prefix: &str,
+) -> Vec<NodeType> {
+    (0..m)
         .map(|i| {
-            let cap: Vec<f64> = (0..d)
-                .map(|_| rng.uniform(params.cap_range.0, params.cap_range.1))
+            let cap: Vec<f64> = (0..dims)
+                .map(|_| rng.uniform(cap_range.0, cap_range.1))
                 .collect();
-            NodeType::new(format!("synth-{i}"), cap, 1.0)
+            NodeType::new(format!("{prefix}-{i}"), cap, 1.0)
         })
-        .collect();
+        .collect()
+}
 
-    let model = match &params.cost_model {
-        CostKind::HomogeneousLinear => CostModel::homogeneous(d),
+/// Price a drawn catalog. The heterogeneous model draws its coefficients
+/// from the same stream — after the capacities, the seed's order.
+pub fn price_catalog(
+    rng: &mut Rng,
+    node_types: &mut [NodeType],
+    dims: usize,
+    cost_model: &CostKind,
+) {
+    let model = match cost_model {
+        CostKind::HomogeneousLinear => CostModel::homogeneous(dims),
         CostKind::HeterogeneousRandom { exponent } => {
-            let coeff: Vec<f64> = (0..d).map(|_| rng.uniform(0.3, 1.0)).collect();
+            let coeff: Vec<f64> = (0..dims).map(|_| rng.uniform(0.3, 1.0)).collect();
             CostModel::new(coeff, *exponent)
         }
         CostKind::Fixed { coefficients, exponent } => {
             CostModel::new(coefficients.clone(), *exponent)
         }
     };
-    model.apply(&mut node_types);
+    model.apply(node_types);
+}
 
-    // Demands must be placeable on at least one node-type. Clamping each
-    // dimension against the per-dimension max over *all* types is not
-    // enough (the maxima may come from different types), so clamp against
-    // the single type whose weakest dimension is largest — that one type
-    // then admits every task.
-    let anchor = (0..params.m)
+/// Index of the catalog's *anchor*: the type whose weakest dimension is
+/// largest (NaN-safe, last max wins — the seed's tie direction). Tasks
+/// clamped to the anchor's capacity are admissible on it by
+/// construction; clamping against the per-dimension max over *all*
+/// types would not be enough (the maxima may come from different types).
+pub fn anchor_index(node_types: &[NodeType]) -> usize {
+    (0..node_types.len())
         .max_by(|&a, &b| {
-            let min_a = node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
-            let min_b = node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
-            // NaN-safe with an index tie-break (last max wins, as before)
+            let min_a =
+                node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
+            let min_b =
+                node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
             min_a.total_cmp(&min_b).then(a.cmp(&b))
         })
-        .expect("m >= 1");
-    let anchor_cap = node_types[anchor].capacity.clone();
+        .expect("at least one node-type")
+}
+
+/// Generate a synthetic instance. Fully deterministic in `seed`.
+pub fn generate(params: &SynthParams, seed: u64) -> Instance {
+    let mut rng = Rng::new(seed);
+    let d = params.dims;
+
+    let mut node_types = draw_capacities(&mut rng, params.m, d, params.cap_range, "synth");
+    price_catalog(&mut rng, &mut node_types, d, &params.cost_model);
+    let anchor_cap = node_types[anchor_index(&node_types)].capacity.clone();
 
     let tasks: Vec<Task> = (0..params.n)
         .map(|i| {
@@ -133,7 +161,7 @@ mod tests {
         }
         for u in &inst.tasks {
             assert!(u.end < 24);
-            for &x in &u.demand {
+            for &x in u.peak() {
                 assert!(x >= 0.01 - 1e-12 && x <= 0.1 + 1e-12);
             }
         }

@@ -31,7 +31,7 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::model::{CostModel, Instance, NodeType, Task};
+use crate::model::{CostModel, DemandSeg, Instance, Task};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -94,8 +94,18 @@ pub const WORKLOAD_GRAMMAR: &str = "\
               unit rate card, 'het' draws random coefficients, 'gcp'
               prices with the public GCE rates (io::pricing), 'fixed'
               takes explicit coef=<c0;c1;...>
+  shape    := flat | ramp | diurnal | spike   (every family): reshape each
+              task's demand into a piecewise-constant profile over its
+              span — 'ramp' climbs to the drawn demand, 'diurnal'
+              oscillates with the day period, 'spike' concentrates it in
+              a short burst. The drawn demand becomes the task's *peak*;
+              'flat' (the default) keeps the constant-demand model.
+  csv      := csv:path=<trace.csv> imports an on-disk trace through
+              io::files ('+'-prefixed rows carry extra demand segments)
+              and draws a priced node-type catalog around it
   examples : synth:n=2000,dims=7    gct:n=1000,priced    spiky
-             mixed:services=200,horizon=336    burst:day=48,services=50
+             mixed:services=200,shape=diurnal    burst:day=48,services=50
+             csv:path=trace.csv,m=6,cost=gcp
              synth:dims=2,cost=fixed,coef=2;1,e=0.5";
 
 /// A parsed workload spec: family name plus key=value parameters
@@ -180,11 +190,29 @@ impl WorkloadSpec {
     }
 
     /// Build the generator this spec names (re-validates keys + values).
+    /// A non-flat `shape` key wraps the family's generator in the demand
+    /// reshaper ([`Shape`]): the family draws its tasks as usual, then
+    /// each flat task becomes a piecewise profile whose peak is the drawn
+    /// demand — so admissibility and clamping guarantees carry over.
     pub fn source(&self) -> Result<Box<dyn WorkloadSource>> {
         let rendered = self.render();
         self.validate_keys().map_err(|e| workload_error(&rendered, e))?;
         let fam = self.family_info().expect("validated above");
-        (fam.build)(self).map_err(|e| workload_error(&rendered, e))
+        let shape = Shape::parse(self.get("shape"))
+            .map_err(|e| workload_error(&rendered, e))?;
+        let inner = (fam.build)(self).map_err(|e| workload_error(&rendered, e))?;
+        if shape == Shape::Flat {
+            // bit-identical to omitting the key (no wrapper at all)
+            return Ok(inner);
+        }
+        let day = if fam.keys.iter().any(|(k, _)| *k == "day") {
+            self.u32_of("day", 24).map_err(|e| workload_error(&rendered, e))?
+        } else if self.family == "gct" {
+            288 // the GCT-like trace runs at 5-minute slots
+        } else {
+            24
+        };
+        Ok(Box::new(ShapedSource { inner, shape, day }))
     }
 
     /// Set or override one parameter (used by harness shrink hooks and
@@ -294,11 +322,17 @@ const SIZE_KEYS: &[(&str, &str)] = &[
 
 const DAY_KEY: (&str, &str) = ("day", "slots per diurnal period (default 24)");
 
+/// Every family accepts `shape=` — the tentpole lever: time-varying
+/// demand *within* a task, as a piecewise-constant profile.
+const SHAPE_KEY: (&str, &str) =
+    ("shape", "demand shape: flat | ramp | diurnal | spike (default flat)");
+
 macro_rules! pattern_keys {
     () => {
         &[
             SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3], DAY_KEY,
             SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+            SHAPE_KEY,
         ]
     };
 }
@@ -317,6 +351,7 @@ static FAMILIES: &[Family] = &[
             ("cost", "cost model: hom | het | gcp | fixed (default hom)"),
             ("e", "cost exponent (default 1)"),
             ("coef", "fixed cost coefficients c0;c1;... (with cost=fixed)"),
+            SHAPE_KEY,
         ],
         smoke_spec: "synth:n=80,m=4",
         build: build_synth,
@@ -329,6 +364,7 @@ static FAMILIES: &[Family] = &[
             ("m", "machine shapes sampled, <= 13 (default 10)"),
             ("pool", "trace pool size (default 13000, the cached master trace)"),
             ("priced", "flag: keep GCE rate-card costs instead of homogeneous"),
+            SHAPE_KEY,
         ],
         smoke_spec: "gct:n=80,m=5,pool=400",
         build: build_gct,
@@ -374,6 +410,7 @@ static FAMILIES: &[Family] = &[
         keys: &[
             SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3],
             SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+            SHAPE_KEY,
         ],
         smoke_spec: "spiky:services=60,m=4",
         build: |s| build_pattern(s, PatternFamily::Spiky),
@@ -385,9 +422,26 @@ static FAMILIES: &[Family] = &[
             SIZE_KEYS[0], SIZE_KEYS[1], SIZE_KEYS[2], SIZE_KEYS[3],
             ("waves", "number of arrival waves (default 8)"),
             SIZE_KEYS[4], SIZE_KEYS[5], SIZE_KEYS[6], SIZE_KEYS[7], SIZE_KEYS[8],
+            SHAPE_KEY,
         ],
         smoke_spec: "waves:services=60,m=4",
         build: |s| build_pattern(s, PatternFamily::Waves),
+    },
+    Family {
+        name: "csv",
+        summary: "import an on-disk CSV trace (io::files format) as a workload",
+        keys: &[
+            ("path", "path to the trace CSV (required; io::files format)"),
+            ("m", "node-types drawn around the trace (default 6)"),
+            ("cap", "capacity range lo..hi (default 0.3..1.0)"),
+            ("horizon", "timeline override (default: last task end + 1)"),
+            ("cost", "cost model: hom | het | gcp | fixed (default hom)"),
+            ("e", "cost exponent (default 1)"),
+            ("coef", "fixed cost coefficients c0;c1;... (with cost=fixed)"),
+            SHAPE_KEY,
+        ],
+        smoke_spec: "csv:path=target/tlrs-smoke-trace.csv",
+        build: build_csv,
     },
 ];
 
@@ -867,40 +921,14 @@ impl WorkloadSource for PatternSource {
         let mut rng = Rng::new(seed);
         let d = p.dims;
 
-        // catalog drawn like synth's: capacities first, then (for the
-        // heterogeneous model) cost coefficients from the same stream
-        let mut node_types: Vec<NodeType> = (0..p.m)
-            .map(|i| {
-                let cap: Vec<f64> = (0..d)
-                    .map(|_| rng.uniform(p.cap_range.0, p.cap_range.1))
-                    .collect();
-                NodeType::new(format!("{}-{i}", self.name), cap, 1.0)
-            })
-            .collect();
-        let model = match &p.cost {
-            CostKind::HomogeneousLinear => CostModel::homogeneous(d),
-            CostKind::HeterogeneousRandom { exponent } => {
-                let coeff: Vec<f64> = (0..d).map(|_| rng.uniform(0.3, 1.0)).collect();
-                CostModel::new(coeff, *exponent)
-            }
-            CostKind::Fixed { coefficients, exponent } => {
-                CostModel::new(coefficients.clone(), *exponent)
-            }
-        };
-        model.apply(&mut node_types);
-
-        // anchor clamp (same argument as synth::generate): the type whose
-        // weakest dimension is largest admits every clamped task
-        let anchor = (0..p.m)
-            .max_by(|&a, &b| {
-                let min_a =
-                    node_types[a].capacity.iter().copied().fold(f64::INFINITY, f64::min);
-                let min_b =
-                    node_types[b].capacity.iter().copied().fold(f64::INFINITY, f64::min);
-                min_a.total_cmp(&min_b).then(a.cmp(&b))
-            })
-            .expect("m >= 1");
-        let anchor_cap = node_types[anchor].capacity.clone();
+        // catalog drawn exactly like synth's (shared helpers: capacities
+        // first, then the heterogeneous coefficients from the same
+        // stream); clamping against the anchor keeps every task
+        // admissible somewhere
+        let mut node_types =
+            synth::draw_capacities(&mut rng, p.m, d, p.cap_range, self.name);
+        synth::price_catalog(&mut rng, &mut node_types, d, &p.cost);
+        let anchor_cap = node_types[synth::anchor_index(&node_types)].capacity.clone();
 
         let tl = Timeline::new(p.horizon, p.day)?;
         let mut tasks = match self.family {
@@ -924,9 +952,7 @@ impl WorkloadSource for PatternSource {
             p.day
         );
         for t in &mut tasks {
-            for (x, &cap) in t.demand.iter_mut().zip(&anchor_cap) {
-                *x = x.min(cap);
-            }
+            t.clamp_demand(&anchor_cap);
         }
         Ok(Instance::new(tasks, node_types, p.horizon))
     }
@@ -1012,6 +1038,332 @@ fn wave_tasks(p: &PatternParams, rng: &mut Rng) -> Vec<Task> {
         .collect()
 }
 
+// ---------- demand shapes (tentpole: time-varying demand per task) --------
+
+/// How a family's drawn (flat) demand is reshaped into a piecewise
+/// profile over each task's span. The drawn demand always becomes the
+/// task's *peak* (some window keeps the exact vector), so the families'
+/// admissibility/clamping guarantees hold unchanged for shaped tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    /// Constant demand — the pre-profile model; applying it is a no-op.
+    Flat,
+    /// Demand climbs in up to four steps from a fraction of the drawn
+    /// vector to the full vector (fan-out ramps, warming caches).
+    Ramp,
+    /// Full demand during each day's peak-hour window, a drawn off-peak
+    /// fraction otherwise (the paper's business-hours motivation).
+    Diurnal,
+    /// Full demand over one short burst window, a drawn low fraction
+    /// elsewhere (flash crowds over an always-on baseline).
+    Spike,
+}
+
+impl Shape {
+    /// Parse the `shape=` spec value (`None` means flat).
+    pub fn parse(value: Option<&str>) -> Result<Shape> {
+        Ok(match value {
+            None | Some("flat") => Shape::Flat,
+            Some("ramp") => Shape::Ramp,
+            Some("diurnal") => Shape::Diurnal,
+            Some("spike") => Shape::Spike,
+            Some("") => bail!("key 'shape' needs a value"),
+            Some(other) => {
+                bail!("key 'shape': '{other}' is not flat, ramp, diurnal or spike")
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Shape::Flat => "flat",
+            Shape::Ramp => "ramp",
+            Shape::Diurnal => "diurnal",
+            Shape::Spike => "spike",
+        }
+    }
+}
+
+/// Salt separating the shape RNG stream from the family's draw stream.
+const SHAPE_SALT: u64 = 0x5a4d_e11e_5eed;
+
+/// Wraps any family's generator and reshapes its tasks' demand. The
+/// underlying family is untouched (same catalog, same spans, same drawn
+/// peaks) — only the within-task load profile changes.
+struct ShapedSource {
+    inner: Box<dyn WorkloadSource>,
+    shape: Shape,
+    day: u32,
+}
+
+impl WorkloadSource for ShapedSource {
+    fn label(&self) -> String {
+        // the inner source's spec already carries the shape key
+        self.inner.label()
+    }
+
+    fn describe(&self) -> String {
+        format!("{} — {} demand shape", self.inner.describe(), self.shape.name())
+    }
+
+    fn generate(&self, seed: u64) -> Result<Instance> {
+        let inst = self.inner.generate(seed)?;
+        let tasks: Vec<Task> = inst
+            .tasks
+            .into_iter()
+            .map(|t| shape_task(t, self.shape, self.day, seed))
+            .collect();
+        Ok(Instance::new(tasks, inst.node_types, inst.horizon))
+    }
+}
+
+/// Reshape one flat task. Deterministic in (seed, task id) — independent
+/// of task order — and the identity on single-slot or already-shaped
+/// tasks. Every multiplier lies in (0, 1] and at least one window uses
+/// exactly 1.0, so the reshaped peak *is* the drawn demand vector.
+fn shape_task(t: Task, shape: Shape, day: u32, seed: u64) -> Task {
+    let span = t.span_len() as u64;
+    if span < 2 || !t.is_flat() || shape == Shape::Flat {
+        return t;
+    }
+    let base = t.peak().to_vec();
+    let mut rng = Rng::new(seed ^ SHAPE_SALT ^ t.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    // (inclusive window, multiplier) list covering [t.start, t.end]
+    let windows: Vec<(u32, u32, f64)> = match shape {
+        Shape::Flat => unreachable!("handled above"),
+        Shape::Ramp => {
+            let k = span.min(4);
+            let low = rng.uniform(0.3, 0.7);
+            (0..k)
+                .map(|i| {
+                    let s = t.start + (span * i / k) as u32;
+                    let e = t.start + (span * (i + 1) / k) as u32 - 1;
+                    let mult = if i + 1 == k {
+                        1.0 // the final step is exactly the drawn demand
+                    } else {
+                        low + (1.0 - low) * i as f64 / (k - 1) as f64
+                    };
+                    (s, e, mult)
+                })
+                .collect()
+        }
+        Shape::Diurnal => {
+            // peak window [day/3, 2*day/3) within each day; days shorter
+            // than 3 slots cannot express a within-day shape
+            if day < 3 {
+                return t;
+            }
+            let (ps, pe) = (day / 3, 2 * day / 3);
+            let in_peak = |slot: u32| {
+                let h = slot % day;
+                h >= ps && h < pe
+            };
+            if !(t.start..=t.end).any(in_peak) {
+                return t; // span misses every peak window: stays flat
+            }
+            let off = rng.uniform(0.3, 0.6);
+            let mut out: Vec<(u32, u32, f64)> = Vec::new();
+            for slot in t.start..=t.end {
+                let mult = if in_peak(slot) { 1.0 } else { off };
+                match out.last_mut() {
+                    Some((_, e, m)) if *m == mult && *e + 1 == slot => *e = slot,
+                    _ => out.push((slot, slot, mult)),
+                }
+            }
+            out
+        }
+        Shape::Spike => {
+            let burst = (span / 8).max(1);
+            let start = t.start + rng.below(span - burst + 1) as u32;
+            let end = start + burst as u32 - 1;
+            let low = rng.uniform(0.2, 0.5);
+            let mut out = Vec::new();
+            if start > t.start {
+                out.push((t.start, start - 1, low));
+            }
+            out.push((start, end, 1.0));
+            if end < t.end {
+                out.push((end + 1, t.end, low));
+            }
+            out
+        }
+    };
+    let segs: Vec<DemandSeg> = windows
+        .into_iter()
+        .map(|(s, e, mult)| DemandSeg {
+            start: s,
+            end: e,
+            // mult == 1.0 reproduces the drawn vector bit-exactly
+            demand: if mult == 1.0 {
+                base.clone()
+            } else {
+                base.iter().map(|&x| x * mult).collect()
+            },
+        })
+        .collect();
+    Task::piecewise(t.id, segs)
+}
+
+// ---------- csv import family ---------------------------------------------
+
+/// Trace import (ROADMAP Scenarios lever): an on-disk CSV trace becomes a
+/// first-class workload. The tasks come verbatim from the file (including
+/// piecewise `+` continuation rows); the node-type catalog is drawn like
+/// synth's from `cap`/`cost` (deterministic in the seed), with the anchor
+/// type's capacity raised to the trace's per-dimension peak so every
+/// imported task is admissible.
+struct CsvSource {
+    spec: WorkloadSpec,
+    path: String,
+    m: usize,
+    cap_range: (f64, f64),
+    horizon_override: Option<u32>,
+}
+
+impl WorkloadSource for CsvSource {
+    fn label(&self) -> String {
+        self.spec.render()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "CSV trace import from '{}' with {} drawn node-types",
+            self.path, self.m
+        )
+    }
+
+    fn generate(&self, seed: u64) -> Result<Instance> {
+        let tasks = crate::io::files::load_trace_csv(std::path::Path::new(&self.path))
+            .with_context(|| format!("key 'path': loading trace '{}'", self.path))?;
+        ensure!(!tasks.is_empty(), "trace '{}' has no tasks", self.path);
+        ensure!(
+            tasks.len() <= MAX_SPEC_TASKS,
+            "trace '{}' has {} tasks (cap {MAX_SPEC_TASKS})",
+            self.path,
+            tasks.len()
+        );
+        let dims = tasks[0].dims();
+        ensure!(
+            (1..=MAX_SPEC_DIMS).contains(&dims),
+            "trace '{}': need 1..={MAX_SPEC_DIMS} dimensions",
+            self.path
+        );
+        for u in &tasks {
+            ensure!(
+                u.dims() == dims,
+                "trace '{}': task {} has {} dims, expected {dims}",
+                self.path,
+                u.id,
+                u.dims()
+            );
+        }
+        let last_end = tasks.iter().map(|u| u.end).max().expect("non-empty");
+        let horizon = match self.horizon_override {
+            Some(h) => {
+                ensure!(
+                    h > last_end,
+                    "key 'horizon': {h} does not cover the trace (last end {last_end})"
+                );
+                h
+            }
+            // the loader guarantees end < u32::MAX, so this cannot wrap
+            None => last_end
+                .checked_add(1)
+                .context("trace end out of range")?,
+        };
+        ensure!(
+            horizon <= MAX_SPEC_HORIZON,
+            "trace horizon {horizon} exceeds the {MAX_SPEC_HORIZON}-slot cap"
+        );
+        // per-dimension peak over the trace: the anchor type must admit it
+        let mut need = vec![0.0f64; dims];
+        for u in &tasks {
+            for (nd, &p) in need.iter_mut().zip(u.peak()) {
+                *nd = nd.max(p);
+            }
+        }
+        ensure!(
+            need.iter().all(|&x| x > 0.0 && x <= 1.0),
+            "trace demands must lie in (0, 1] (capacities are normalized); \
+             per-dimension peaks {need:?}"
+        );
+
+        // catalog drawn with the shared synth helpers; the anchor
+        // (largest weakest-dimension type) is raised to the trace peak
+        // *before* pricing, so costs reflect the real capacity and the
+        // import is always feasible
+        let mut rng = Rng::new(seed);
+        let mut node_types =
+            synth::draw_capacities(&mut rng, self.m, dims, self.cap_range, "csv");
+        let anchor = synth::anchor_index(&node_types);
+        for (c, &nd) in node_types[anchor].capacity.iter_mut().zip(&need) {
+            *c = c.max(nd);
+        }
+        let cost = cost_kind(&self.spec, dims)?;
+        synth::price_catalog(&mut rng, &mut node_types, dims, &cost);
+        Ok(Instance::new(tasks, node_types, horizon))
+    }
+}
+
+fn build_csv(spec: &WorkloadSpec) -> Result<Box<dyn WorkloadSource>> {
+    let path = match spec.get("path") {
+        Some(p) if !p.is_empty() => p.to_string(),
+        _ => bail!("the csv family needs path=<trace.csv>"),
+    };
+    let m = spec.usize_of("m", 6)?;
+    ensure!(
+        (1..=MAX_SPEC_TYPES).contains(&m),
+        "key 'm': need 1..={MAX_SPEC_TYPES} node-types"
+    );
+    let cap_range = spec.range_of("cap", (0.3, 1.0))?;
+    ensure!(cap_range.1 <= 1.0, "key 'cap': capacities are normalized to (0, 1]");
+    let horizon_override = match spec.get("horizon") {
+        None => None,
+        Some(_) => {
+            let h = spec.u32_of("horizon", 0)?;
+            ensure!(
+                (1..=MAX_SPEC_HORIZON).contains(&h),
+                "key 'horizon': need 1..={MAX_SPEC_HORIZON} timeslots"
+            );
+            Some(h)
+        }
+    };
+    // cost/e/coef syntax is validated here (arity against the file's
+    // dimensionality only at generate time, when the file is read)
+    if let Some(c) = spec.get("cost") {
+        ensure!(
+            matches!(c, "hom" | "het" | "gcp" | "fixed"),
+            "key 'cost': '{c}' is not hom, het, gcp or fixed"
+        );
+    }
+    Ok(Box::new(CsvSource {
+        spec: spec.clone(),
+        path,
+        m,
+        cap_range,
+        horizon_override,
+    }))
+}
+
+/// Write the deterministic fixture trace the `csv` family's smoke spec
+/// points at (`target/tlrs-smoke-trace.csv`, relative to the crate root
+/// both `cargo test` and `scripts/tier1.sh` run from). Tests call this
+/// before exercising the smoke spec; returns the path.
+pub fn csv_smoke_fixture() -> &'static str {
+    const PATH: &str = "target/tlrs-smoke-trace.csv";
+    static WRITTEN: OnceLock<()> = OnceLock::new();
+    WRITTEN.get_or_init(|| {
+        let inst = synth::generate(
+            &SynthParams { n: 40, m: 3, dims: 2, horizon: 24, ..Default::default() },
+            1,
+        );
+        std::fs::create_dir_all("target").ok();
+        crate::io::files::save_trace_csv(&inst.tasks, std::path::Path::new(PATH))
+            .expect("writing the csv smoke fixture");
+    });
+    PATH
+}
+
 // ---------- JSON form -----------------------------------------------------
 
 /// Build a source from the service's JSON `workload` field: either a
@@ -1022,8 +1374,24 @@ fn wave_tasks(p: &PatternParams, rng: &mut Rng) -> Vec<Task> {
 /// [`synth_params_from_json`] route instead. Unknown keys are errors,
 /// never silently ignored, and both routes hit the same size caps.
 pub fn source_from_json(v: &Json) -> Result<Box<dyn WorkloadSource>> {
+    // The csv family reads server-local files: reachable from the
+    // service's untrusted `workload` field it would hand remote clients
+    // arbitrary-path reads (and file-existence probing through error
+    // text). It stays CLI-only; the service takes inline instances.
+    fn reject_csv(family: &str) -> Result<()> {
+        ensure!(
+            family != "csv",
+            "the csv family reads server-local files and is not accepted \
+             over the service API; submit the tasks as an inline 'instance'"
+        );
+        Ok(())
+    }
     match v {
-        Json::Str(s) => parse_workload(s),
+        Json::Str(s) => {
+            let spec = WorkloadSpec::parse(s)?;
+            reject_csv(&spec.family).map_err(|e| workload_error(s, e))?;
+            spec.source()
+        }
         Json::Obj(obj) => {
             // a present-but-non-string family must not silently fall back
             let family = match v.get("family") {
@@ -1041,6 +1409,7 @@ pub fn source_from_json(v: &Json) -> Result<Box<dyn WorkloadSource>> {
                 let spec = spec_of_synth(&params);
                 return Ok(Box::new(SynthSource { spec, params }));
             }
+            reject_csv(&family).map_err(|e| workload_error(&family, e))?;
             let mut spec = WorkloadSpec {
                 family: family.clone(),
                 params: std::collections::BTreeMap::new(),
@@ -1089,6 +1458,7 @@ mod tests {
 
     #[test]
     fn every_family_has_a_valid_smoke_spec() {
+        csv_smoke_fixture();
         for fam in families() {
             let src = parse_workload(fam.smoke_spec).unwrap_or_else(|e| {
                 panic!("{}: smoke spec '{}' invalid: {e:#}", fam.name, fam.smoke_spec)
@@ -1097,9 +1467,117 @@ mod tests {
             assert!(inst.n_tasks() > 0, "{}", fam.name);
             assert!(inst.is_feasible(), "{}", fam.name);
             assert!(!src.describe().is_empty());
-            // bare family names are valid specs too
-            parse_workload(fam.name).unwrap();
+            if fam.name == "csv" {
+                // csv requires path=, so the bare name is an error
+                assert!(parse_workload(fam.name).is_err());
+            } else {
+                // bare family names are valid specs too
+                parse_workload(fam.name).unwrap();
+            }
         }
+    }
+
+    #[test]
+    fn shapes_compose_onto_every_family() {
+        csv_smoke_fixture();
+        for fam in families() {
+            for shape in ["ramp", "diurnal", "spike"] {
+                let spec = format!("{},shape={shape}", fam.smoke_spec);
+                let src = parse_workload(&spec)
+                    .unwrap_or_else(|e| panic!("'{spec}': {e:#}"));
+                let a = src.generate(5).unwrap_or_else(|e| panic!("'{spec}': {e:#}"));
+                let b = src.generate(5).unwrap();
+                assert_eq!(a.tasks, b.tasks, "'{spec}' not deterministic");
+                assert!(a.is_feasible(), "'{spec}'");
+                // nightly batch windows never intersect the diurnal peak
+                // hours, so that one combination legitimately stays flat
+                if !(fam.name == "batch" && shape == "diurnal") {
+                    assert!(
+                        a.tasks.iter().any(|t| !t.is_flat()),
+                        "'{spec}' produced no shaped task"
+                    );
+                }
+                // the flat instance is the same workload at its peaks:
+                // shaping never moves spans or raises demand
+                let flat = parse_workload(fam.smoke_spec).unwrap().generate(5).unwrap();
+                assert_eq!(flat.n_tasks(), a.n_tasks(), "'{spec}'");
+                for (s, f) in a.tasks.iter().zip(&flat.tasks) {
+                    assert_eq!((s.start, s.end, s.id), (f.start, f.end, f.id), "'{spec}'");
+                    assert_eq!(s.peak(), f.peak(), "'{spec}' task {}", s.id);
+                }
+                assert_eq!(a.node_types, flat.node_types, "'{spec}'");
+            }
+            // shape=flat is bit-identical to omitting the key
+            let spec = format!("{},shape=flat", fam.smoke_spec);
+            let shaped = parse_workload(&spec).unwrap().generate(3).unwrap();
+            let plain = parse_workload(fam.smoke_spec).unwrap().generate(3).unwrap();
+            assert_eq!(shaped.tasks, plain.tasks, "'{spec}'");
+            assert_eq!(shaped.node_types, plain.node_types, "'{spec}'");
+        }
+        // bad shape values teach the grammar
+        let err = parse_workload("synth:shape=wavy").unwrap_err().to_string();
+        assert!(err.contains("not flat, ramp, diurnal or spike"), "{err}");
+    }
+
+    #[test]
+    fn csv_family_imports_and_rejects() {
+        use crate::io::files;
+        let path = csv_smoke_fixture();
+        // round-trip: the imported tasks are the file's tasks verbatim
+        let spec = format!("csv:path={path},m=4");
+        let src = parse_workload(&spec).unwrap();
+        let inst = src.generate(2).unwrap();
+        let direct = files::load_trace_csv(std::path::Path::new(path)).unwrap();
+        assert_eq!(inst.tasks, direct);
+        assert_eq!(inst.n_types(), 4);
+        assert!(inst.is_feasible());
+        assert_eq!(
+            inst.horizon,
+            direct.iter().map(|t| t.end).max().unwrap() + 1
+        );
+        // deterministic in seed; different seeds redraw the catalog only
+        let again = src.generate(2).unwrap();
+        assert_eq!(inst.tasks, again.tasks);
+        assert_eq!(inst.node_types, again.node_types);
+        let other = src.generate(3).unwrap();
+        assert_eq!(inst.tasks, other.tasks);
+        assert_ne!(inst.node_types, other.node_types);
+        // spec round-trips through render
+        let parsed = WorkloadSpec::parse(&spec).unwrap();
+        assert_eq!(WorkloadSpec::parse(&parsed.render()).unwrap(), parsed);
+        // cost composes like on every family
+        let priced = parse_workload(&format!("csv:path={path},m=3,cost=gcp"))
+            .unwrap()
+            .generate(1)
+            .unwrap();
+        let coeff = pricing::gcp_coefficients(2);
+        for b in &priced.node_types {
+            let want: f64 =
+                b.capacity.iter().zip(&coeff).map(|(&c, &k)| k * c).sum();
+            assert!((b.cost - want).abs() < 1e-12);
+        }
+        // rejections: missing path, missing file, bad horizon override
+        assert!(parse_workload("csv").is_err());
+        assert!(parse_workload("csv:path=").is_err());
+        let missing = parse_workload("csv:path=/nonexistent/trace.csv").unwrap();
+        assert!(missing.generate(1).is_err());
+        let short = parse_workload(&format!("csv:path={path},horizon=2")).unwrap();
+        let err = short.generate(1).unwrap_err().to_string();
+        assert!(err.contains("does not cover"), "{err}");
+        // unknown keys are rejected like every family's
+        assert!(parse_workload(&format!("csv:path={path},frobs=3")).is_err());
+        // the service's JSON entry point rejects csv in both forms: a
+        // remote client must not get server-local file reads
+        let err = source_from_json(&Json::Str(format!("csv:path={path}")))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not accepted over the service"), "{err}");
+        let v = crate::util::json::parse(&format!(
+            r#"{{"family": "csv", "path": "{path}"}}"#
+        ))
+        .unwrap();
+        let err = source_from_json(&v).unwrap_err().to_string();
+        assert!(err.contains("not accepted over the service"), "{err}");
     }
 
     #[test]

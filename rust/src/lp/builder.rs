@@ -3,14 +3,24 @@
 //!
 //! ```text
 //!     min  sum_B cost(B) * alpha_B
-//!     s.t. sum_B x(u,B) = 1                          for every task u
-//!          sum_{u~t} x(u,B) * r(u,B,d) <= alpha_B    for every (B,t,d)
+//!     s.t. sum_B x(u,B) = 1                            for every task u
+//!          sum_{u~t} x(u,B) * r(u,B,d,t) <= alpha_B    for every (B,t,d)
 //!          x, alpha >= 0
 //! ```
 //!
+//! With piecewise-constant demand profiles the congestion coefficient
+//! `r(u,B,d,t) = dem(u,d,t)/cap(B,d)` varies over the task's span, but
+//! only at *segment* boundaries — so the LP stores one ratio block per
+//! demand segment and every operator keeps its interval sparsity: a task
+//! contributes one difference-array update (or prefix-sum read) per
+//! segment instead of one per task. Flat tasks have exactly one segment,
+//! reproducing the seed LP coefficient-for-coefficient. The per-slot
+//! aggregates mean the certified dual bound remains a true lower bound on
+//! cost(opt) for shaped instances (the Lemma-1 argument is per-timeslot).
+//!
 //! The constraint matrix is never materialized on the solve path (PDHG
-//! applies it through interval prefix-sums / the Pallas kernel); the dense
-//! export exists for the exact simplex cross-check on small instances.
+//! applies it through per-segment prefix-sums); the dense export exists
+//! for the exact simplex cross-check on small instances.
 
 use crate::model::Instance;
 
@@ -25,8 +35,14 @@ pub struct MappingLp {
     pub t: usize,
     /// Per-task inclusive spans on the trimmed timeline.
     pub spans: Vec<(u32, u32)>,
-    /// r[u,B,d] = dem(u,d)/cap(B,d), layout `u*m*dims + b*dims + d`.
-    pub ratios: Vec<f64>,
+    /// Segment offsets: task `u`'s demand segments are
+    /// `seg_spans[seg_off[u]..seg_off[u+1]]` (length n+1; flat instances
+    /// have exactly one segment per task).
+    pub seg_off: Vec<usize>,
+    /// Inclusive windows of every demand segment, task-major.
+    pub seg_spans: Vec<(u32, u32)>,
+    /// Per-segment demand/capacity ratios, layout `(s*m + b)*dims + d`.
+    pub seg_ratios: Vec<f64>,
     /// Node-type prices.
     pub costs: Vec<f64>,
     /// Row scaling rho[B,d] (uniform over t; see scaling.rs). The scaled
@@ -36,16 +52,24 @@ pub struct MappingLp {
 
 impl MappingLp {
     /// Build from an instance. The instance should already be
-    /// timeline-trimmed (T <= n); an untrimmed one still works, just larger.
+    /// timeline-trimmed (T <= segment count); an untrimmed one still
+    /// works, just larger.
     pub fn from_instance(inst: &Instance) -> Self {
         let (n, m, dims) = (inst.n_tasks(), inst.n_types(), inst.dims());
-        let mut ratios = vec![0.0; n * m * dims];
-        for u in 0..n {
-            for b in 0..m {
-                for d in 0..dims {
-                    ratios[(u * m + b) * dims + d] = inst.ratio(u, b, d);
+        let mut seg_off = Vec::with_capacity(n + 1);
+        seg_off.push(0usize);
+        let mut seg_spans: Vec<(u32, u32)> = Vec::with_capacity(n);
+        let mut seg_ratios: Vec<f64> = Vec::with_capacity(n * m * dims);
+        for u in &inst.tasks {
+            for seg in u.segments() {
+                seg_spans.push((seg.start, seg.end));
+                for b in 0..m {
+                    for d in 0..dims {
+                        seg_ratios.push(seg.demand[d] / inst.node_types[b].capacity[d]);
+                    }
                 }
             }
+            seg_off.push(seg_spans.len());
         }
         MappingLp {
             n,
@@ -53,15 +77,36 @@ impl MappingLp {
             dims,
             t: inst.horizon as usize,
             spans: inst.tasks.iter().map(|u| (u.start, u.end)).collect(),
-            ratios: ratios,
+            seg_off,
+            seg_spans,
+            seg_ratios,
             costs: inst.node_types.iter().map(|b| b.cost).collect(),
             rho: vec![1.0; m * dims],
         }
     }
 
+    /// Ratio of segment `s` (an index into [`MappingLp::seg_spans`]) on
+    /// node-type `b`, dimension `d`.
     #[inline]
-    pub fn ratio(&self, u: usize, b: usize, d: usize) -> f64 {
-        self.ratios[(u * self.m + b) * self.dims + d]
+    pub fn seg_ratio(&self, s: usize, b: usize, d: usize) -> f64 {
+        self.seg_ratios[(s * self.m + b) * self.dims + d]
+    }
+
+    /// Segment index range of task `u`.
+    #[inline]
+    pub fn segs_of(&self, u: usize) -> std::ops::Range<usize> {
+        self.seg_off[u]..self.seg_off[u + 1]
+    }
+
+    /// Total number of demand segments across all tasks.
+    pub fn n_segments(&self) -> usize {
+        self.seg_spans.len()
+    }
+
+    /// Every task has constant demand (one segment)? Fixed-shape
+    /// backends (the AOT artifact) only support this case.
+    pub fn is_flat(&self) -> bool {
+        self.seg_spans.len() == self.n
     }
 
     #[inline]
@@ -82,8 +127,9 @@ impl MappingLp {
     /// Dense export for the exact simplex backend. Variable layout:
     /// `x(u,B) = u*m + B`, `alpha_B = n*m + B`. Only constraint rows for
     /// timeslots where some task is active are emitted (empty rows are
-    /// trivially satisfied). Row scaling is intentionally *not* applied:
-    /// the dense path is the unscaled ground truth.
+    /// trivially satisfied); the coefficient at (u, t) is the ratio of
+    /// the segment covering t. Row scaling is intentionally *not*
+    /// applied: the dense path is the unscaled ground truth.
     pub fn to_dense(&self) -> DenseLp {
         let (n, m, dims, t) = (self.n, self.m, self.dims, self.t);
         let nv = self.n_vars();
@@ -97,11 +143,14 @@ impl MappingLp {
             }
         }
 
-        // active task lists per timeslot
-        let mut active: Vec<Vec<usize>> = vec![Vec::new(); t];
-        for (u, &(s, e)) in self.spans.iter().enumerate() {
-            for ts in s..=e {
-                active[ts as usize].push(u);
+        // active (task, segment) lists per timeslot
+        let mut active: Vec<Vec<(usize, usize)>> = vec![Vec::new(); t];
+        for u in 0..n {
+            for s in self.segs_of(u) {
+                let (ss, se) = self.seg_spans[s];
+                for ts in ss..=se {
+                    active[ts as usize].push((u, s));
+                }
             }
         }
         let live: Vec<usize> = (0..t).filter(|&ts| !active[ts].is_empty()).collect();
@@ -111,8 +160,8 @@ impl MappingLp {
         for b in 0..m {
             for &ts in &live {
                 for d in 0..dims {
-                    for &u in &active[ts] {
-                        a_ub.set(row, u * m + b, self.ratio(u, b, d));
+                    for &(u, s) in &active[ts] {
+                        a_ub.set(row, u * m + b, self.seg_ratio(s, b, d));
                     }
                     a_ub.set(row, n * m + b, -1.0);
                     row += 1;
@@ -128,7 +177,7 @@ mod tests {
     use super::*;
     use crate::io::synth::{generate, SynthParams};
     use crate::lp::simplex;
-    use crate::model::trim;
+    use crate::model::{trim, DemandSeg, NodeType, Task};
 
     #[test]
     fn shapes_and_layout() {
@@ -136,8 +185,46 @@ mod tests {
         let lp = MappingLp::from_instance(&inst);
         assert_eq!(lp.n, 12);
         assert_eq!(lp.m, 3);
-        assert_eq!(lp.ratios.len(), 12 * 3 * 2);
-        assert!((lp.ratio(3, 1, 0) - inst.ratio(3, 1, 0)).abs() < 1e-15);
+        // flat instance: one segment per task, seed ratios preserved
+        assert!(lp.is_flat());
+        assert_eq!(lp.n_segments(), 12);
+        assert_eq!(lp.seg_ratios.len(), 12 * 3 * 2);
+        assert!((lp.seg_ratio(3, 1, 0) - inst.ratio_avg(3, 1, 0)).abs() < 1e-15);
+        assert_eq!(lp.segs_of(3), 3..4);
+        assert_eq!(lp.seg_spans[3], lp.spans[3]);
+    }
+
+    #[test]
+    fn piecewise_segments_materialize() {
+        let inst = Instance::new(
+            vec![
+                Task::piecewise(
+                    0,
+                    vec![
+                        DemandSeg { start: 0, end: 1, demand: vec![0.2] },
+                        DemandSeg { start: 2, end: 3, demand: vec![0.8] },
+                    ],
+                ),
+                Task::new(1, vec![0.5], 1, 2),
+            ],
+            vec![NodeType::new("a", vec![1.0], 1.0), NodeType::new("b", vec![0.8], 0.9)],
+            4,
+        );
+        let lp = MappingLp::from_instance(&inst);
+        assert!(!lp.is_flat());
+        assert_eq!(lp.n_segments(), 3);
+        assert_eq!(lp.segs_of(0), 0..2);
+        assert_eq!(lp.segs_of(1), 2..3);
+        assert!((lp.seg_ratio(0, 0, 0) - 0.2).abs() < 1e-15);
+        assert!((lp.seg_ratio(1, 1, 0) - 1.0).abs() < 1e-15); // 0.8/0.8
+        assert!((lp.seg_ratio(2, 0, 0) - 0.5).abs() < 1e-15);
+
+        // dense export carries per-slot coefficients: on type 0, slot 0
+        // uses 0.2 and slot 3 uses 0.8 for task 0
+        let dense = lp.to_dense();
+        // rows are (b-major, live-ts, d); all 4 slots live here
+        assert!((dense.a_ub.at(0, 0) - 0.2).abs() < 1e-15, "slot 0");
+        assert!((dense.a_ub.at(3, 0) - 0.8).abs() < 1e-15, "slot 3");
     }
 
     #[test]

@@ -32,26 +32,30 @@ impl Load {
         (b * self.t + ts) * self.dims + d
     }
 
-    /// Add `frac` of task `u` on type `b`.
+    /// Add `frac` of task `u` on type `b` (per-segment coefficients).
     fn add(&mut self, lp: &MappingLp, u: usize, b: usize, frac: f64) {
-        let (s, e) = lp.spans[u];
-        for ts in s as usize..=e as usize {
-            for d in 0..self.dims {
-                let i = self.idx(b, ts, d);
-                self.data[i] += frac * lp.ratio(u, b, d);
+        for s in lp.segs_of(u) {
+            let (ss, se) = lp.seg_spans[s];
+            for ts in ss as usize..=se as usize {
+                for d in 0..self.dims {
+                    let i = self.idx(b, ts, d);
+                    self.data[i] += frac * lp.seg_ratio(s, b, d);
+                }
             }
         }
     }
 
     /// Would adding `frac` of task `u` on `b` keep load within `cap[b,d]`?
     fn fits(&self, lp: &MappingLp, u: usize, b: usize, frac: f64, cap: &[f64]) -> bool {
-        let (s, e) = lp.spans[u];
-        for ts in s as usize..=e as usize {
-            for d in 0..self.dims {
-                if self.data[self.idx(b, ts, d)] + frac * lp.ratio(u, b, d)
-                    > cap[b * self.dims + d]
-                {
-                    return false;
+        for s in lp.segs_of(u) {
+            let (ss, se) = lp.seg_spans[s];
+            for ts in ss as usize..=se as usize {
+                for d in 0..self.dims {
+                    if self.data[self.idx(b, ts, d)] + frac * lp.seg_ratio(s, b, d)
+                        > cap[b * self.dims + d]
+                    {
+                        return false;
+                    }
                 }
             }
         }
@@ -60,14 +64,17 @@ impl Load {
 
     /// Largest fraction of task `u` that fits on type `b` right now.
     fn max_fraction(&self, lp: &MappingLp, u: usize, b: usize, cap: &[f64]) -> f64 {
-        let (s, e) = lp.spans[u];
         let mut frac = f64::INFINITY;
-        for ts in s as usize..=e as usize {
-            for d in 0..self.dims {
-                let r = lp.ratio(u, b, d);
-                if r > 0.0 {
-                    let slack = cap[b * self.dims + d] - self.data[self.idx(b, ts, d)];
-                    frac = frac.min(slack / r);
+        for s in lp.segs_of(u) {
+            let (ss, se) = lp.seg_spans[s];
+            for ts in ss as usize..=se as usize {
+                for d in 0..self.dims {
+                    let r = lp.seg_ratio(s, b, d);
+                    if r > 0.0 {
+                        let slack =
+                            cap[b * self.dims + d] - self.data[self.idx(b, ts, d)];
+                        frac = frac.min(slack / r);
+                    }
                 }
             }
         }

@@ -56,14 +56,18 @@ pub fn certified_bound(lp: &MappingLp, y: &[f64]) -> (f64, Vec<f64>) {
     let mut w = vec![0.0f64; n];
     let mut total = 0.0;
     for u in 0..n {
-        let (s, e) = lp.spans[u];
         let mut best = f64::INFINITY;
         for b in 0..m {
             let mut acc = 0.0;
             for d in 0..dims {
                 let base = (b * dims + d) * (t + 1);
-                acc += (pref[base + e as usize + 1] - pref[base + s as usize])
-                    * lp.ratio(u, b, d);
+                // per-slot coefficients: the x-column of task u sums
+                // rho*y weighted by the demand segment covering each slot
+                for s in lp.segs_of(u) {
+                    let (ss, se) = lp.seg_spans[s];
+                    acc += (pref[base + se as usize + 1] - pref[base + ss as usize])
+                        * lp.seg_ratio(s, b, d);
+                }
             }
             best = best.min(acc);
         }
@@ -77,20 +81,25 @@ pub fn certified_bound(lp: &MappingLp, y: &[f64]) -> (f64, Vec<f64>) {
 
 /// Combinatorial congestion lower bound (paper Lemma 1): the maximum over
 /// timeslots of the aggregate minimum penalty of active tasks,
-/// `max_t sum_{u~t} p*_avg(u)`. Cheap (no LP solve) and used as a sanity
-/// floor alongside the certified dual bound.
+/// `max_t sum_{u~t} p*_avg(u, t)`. With shaped tasks the per-slot penalty
+/// uses the demand of the segment covering the slot (Lemma 1's argument
+/// is per-timeslot, so the bound stays exact). Cheap (no LP solve) and
+/// used as a sanity floor alongside the certified dual bound.
 pub fn congestion_bound(lp: &MappingLp) -> f64 {
     let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
     let mut diff = vec![0.0f64; t + 1];
     for u in 0..n {
-        let mut pstar = f64::INFINITY;
-        for b in 0..m {
-            let h: f64 = (0..dims).map(|d| lp.ratio(u, b, d)).sum::<f64>() / dims as f64;
-            pstar = pstar.min(lp.costs[b] * h);
+        for s in lp.segs_of(u) {
+            let mut pstar = f64::INFINITY;
+            for b in 0..m {
+                let h: f64 =
+                    (0..dims).map(|d| lp.seg_ratio(s, b, d)).sum::<f64>() / dims as f64;
+                pstar = pstar.min(lp.costs[b] * h);
+            }
+            let (ss, se) = lp.seg_spans[s];
+            diff[ss as usize] += pstar;
+            diff[se as usize + 1] -= pstar;
         }
-        let (s, e) = lp.spans[u];
-        diff[s as usize] += pstar;
-        diff[e as usize + 1] -= pstar;
     }
     let mut acc = 0.0;
     let mut best: f64 = 0.0;
@@ -148,6 +157,52 @@ mod tests {
             assert!(cong <= exact.objective + 1e-7, "cong {cong} vs lp {}", exact.objective);
             assert!(cong > 0.0);
         }
+    }
+
+    #[test]
+    fn shaped_bounds_stay_valid() {
+        use crate::model::{DemandSeg, Instance, NodeType, Task};
+        // piecewise tasks: the certified bound and the congestion bound
+        // must still lower-bound the per-slot LP optimum
+        let inst = Instance::new(
+            vec![
+                Task::piecewise(
+                    0,
+                    vec![
+                        DemandSeg { start: 0, end: 2, demand: vec![0.1, 0.25] },
+                        DemandSeg { start: 3, end: 5, demand: vec![0.3, 0.05] },
+                    ],
+                ),
+                Task::new(1, vec![0.2, 0.2], 1, 4),
+                Task::piecewise(
+                    2,
+                    vec![
+                        DemandSeg { start: 2, end: 3, demand: vec![0.25, 0.1] },
+                        DemandSeg { start: 4, end: 5, demand: vec![0.05, 0.3] },
+                    ],
+                ),
+            ],
+            vec![
+                NodeType::new("a", vec![1.0, 1.0], 2.0),
+                NodeType::new("b", vec![0.5, 0.5], 1.0),
+            ],
+            6,
+        );
+        let mut lp = MappingLp::from_instance(&trim(&inst).instance);
+        scaling::equilibrate(&mut lp);
+        let exact = simplex::solve(&lp.to_dense());
+        assert_eq!(exact.status, simplex::SimplexStatus::Optimal);
+        let r = pdhg::solve(&lp, &PdhgOptions::default());
+        let (lb, _) = certified_bound(&lp, &r.y);
+        assert!(
+            lb <= exact.objective + 1e-7 * (1.0 + exact.objective),
+            "lb {lb} > shaped optimum {}",
+            exact.objective
+        );
+        assert!(lb > 0.0);
+        let cong = congestion_bound(&lp);
+        assert!(cong <= exact.objective + 1e-7, "cong {cong} vs {}", exact.objective);
+        assert!(cong > 0.0);
     }
 
     #[test]

@@ -60,20 +60,28 @@ pub struct PdhgResult {
 /// The structured operator with scratch buffers.
 ///
 /// Perf note (EXPERIMENTS.md section Perf): the public x/gx layout is
-/// task-major `[u*m + b]` and ratios are `[(u*m + b)*dims + d]`, so the
+/// task-major `[u*m + b]` and ratios are `[(s*m + b)*dims + d]`, so the
 /// per-(b,d) inner loops over tasks would stride by m / m*dims. The
-/// operator therefore keeps a (b,d)-major copy of the ratios and span
-/// endpoints, and transposes x/gx through scratch buffers once per
-/// application — O(nm) copies against O(nmD) strided reads saved.
+/// operator therefore keeps a (b,d)-major copy of the per-*segment*
+/// ratios and window endpoints, and transposes x/gx through scratch
+/// buffers once per application — O(nm) copies against O(SmD) strided
+/// reads saved. Piecewise demand keeps the interval sparsity: each task
+/// contributes one diff-array update (forward) or prefix-sum read
+/// (adjoint) per demand segment, so an application costs
+/// O(m·D·(S + T)) where S is the total segment count (= n when flat).
 pub struct Operator<'a> {
     lp: &'a MappingLp,
     /// prefix/diff scratch, length t+1
     scratch: Vec<f64>,
-    /// ratios in (b,d)-major layout: ratios_bd[(b*dims + d)*n + u]
+    /// per-segment ratios in (b,d)-major layout over the *permuted*
+    /// segment order: ratios_bd[(b*dims + d)*S + j]
     ratios_bd: Vec<f64>,
-    /// span endpoints as usize (avoids u32 -> usize in the hot loop)
-    starts: Vec<usize>,
-    ends: Vec<usize>,
+    /// segment window endpoints as usize, permuted-task-major
+    seg_starts: Vec<usize>,
+    seg_ends: Vec<usize>,
+    /// segment offsets per permuted task: permuted task i owns segments
+    /// off[i]..off[i+1] of the arrays above (length n+1)
+    off: Vec<usize>,
     /// x transposed to type-major: xt[b*n + u]
     xt: Vec<f64>,
     /// gx accumulator in type-major layout
@@ -91,11 +99,26 @@ impl<'a> Operator<'a> {
         // EXPERIMENTS.md section Perf).
         let mut perm: Vec<usize> = (0..n).collect();
         perm.sort_by_key(|&u| lp.spans[u].0);
-        let mut ratios_bd = vec![0.0; m * dims * n];
-        for (i, &u) in perm.iter().enumerate() {
+        let s_total = lp.n_segments();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        let mut seg_starts = Vec::with_capacity(s_total);
+        let mut seg_ends = Vec::with_capacity(s_total);
+        // original segment index of each permuted segment slot
+        let mut perm_segs = Vec::with_capacity(s_total);
+        for &u in &perm {
+            for s in lp.segs_of(u) {
+                seg_starts.push(lp.seg_spans[s].0 as usize);
+                seg_ends.push(lp.seg_spans[s].1 as usize);
+                perm_segs.push(s);
+            }
+            off.push(seg_starts.len());
+        }
+        let mut ratios_bd = vec![0.0; m * dims * s_total];
+        for (j, &s) in perm_segs.iter().enumerate() {
             for b in 0..m {
                 for d in 0..dims {
-                    ratios_bd[(b * dims + d) * n + i] = lp.ratio(u, b, d);
+                    ratios_bd[(b * dims + d) * s_total + j] = lp.seg_ratio(s, b, d);
                 }
             }
         }
@@ -103,8 +126,9 @@ impl<'a> Operator<'a> {
             lp,
             scratch: vec![0.0; lp.t + 1],
             ratios_bd,
-            starts: perm.iter().map(|&u| lp.spans[u].0 as usize).collect(),
-            ends: perm.iter().map(|&u| lp.spans[u].1 as usize).collect(),
+            seg_starts,
+            seg_ends,
+            off,
             xt: vec![0.0; n * m],
             gxt: vec![0.0; n * m],
             perm,
@@ -130,19 +154,24 @@ impl<'a> Operator<'a> {
     pub fn forward_tm(&mut self, xt: &[f64], alpha: &[f64], out: &mut [f64]) {
         let lp = self.lp;
         let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+        let s_total = lp.n_segments();
         debug_assert_eq!(out.len(), m * t * dims);
         for b in 0..m {
             let xb = &xt[b * n..(b + 1) * n];
             for d in 0..dims {
                 let rho = lp.rho_at(b, d);
-                let rat = &self.ratios_bd[(b * dims + d) * n..(b * dims + d + 1) * n];
+                let rat = &self.ratios_bd
+                    [(b * dims + d) * s_total..(b * dims + d + 1) * s_total];
                 let diff = &mut self.scratch;
                 diff[..=t].fill(0.0);
                 for u in 0..n {
-                    let w = xb[u] * rat[u];
-                    if w != 0.0 {
-                        diff[self.starts[u]] += w;
-                        diff[self.ends[u] + 1] -= w;
+                    let x = xb[u];
+                    for j in self.off[u]..self.off[u + 1] {
+                        let w = x * rat[j];
+                        if w != 0.0 {
+                            diff[self.seg_starts[j]] += w;
+                            diff[self.seg_ends[j] + 1] -= w;
+                        }
                     }
                 }
                 let mut acc = 0.0;
@@ -175,13 +204,15 @@ impl<'a> Operator<'a> {
     pub fn adjoint_tm(&mut self, y: &[f64], gxt: &mut [f64], ga: &mut [f64]) {
         let lp = self.lp;
         let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
+        let s_total = lp.n_segments();
         gxt.fill(0.0);
         ga.fill(0.0);
         for b in 0..m {
             let gxb = &mut gxt[b * n..(b + 1) * n];
             for d in 0..dims {
                 let rho = lp.rho_at(b, d);
-                let rat = &self.ratios_bd[(b * dims + d) * n..(b * dims + d + 1) * n];
+                let rat = &self.ratios_bd
+                    [(b * dims + d) * s_total..(b * dims + d + 1) * s_total];
                 // prefix[ts] = sum of rho*y[b,0..ts,d]
                 let prefix = &mut self.scratch;
                 prefix[0] = 0.0;
@@ -190,8 +221,10 @@ impl<'a> Operator<'a> {
                 }
                 ga[b] += prefix[t];
                 for u in 0..n {
-                    let seg = prefix[self.ends[u] + 1] - prefix[self.starts[u]];
-                    gxb[u] += seg * rat[u];
+                    for j in self.off[u]..self.off[u + 1] {
+                        let seg = prefix[self.seg_ends[j] + 1] - prefix[self.seg_starts[j]];
+                        gxb[u] += seg * rat[j];
+                    }
                 }
             }
         }
@@ -520,6 +553,84 @@ mod tests {
             let rel = (r.objective - exact.objective).abs() / (1.0 + exact.objective.abs());
             assert!(rel < 1e-4, "seed {seed}: pdhg {} vs simplex {}", r.objective, exact.objective);
         }
+    }
+
+    #[test]
+    fn shaped_operator_adjointness_and_optimum() {
+        use crate::model::{DemandSeg, Instance, NodeType, Task};
+        use crate::util::rng::Rng;
+        // piecewise tasks: the operator applies per-segment coefficients
+        let inst = Instance::new(
+            vec![
+                Task::piecewise(
+                    0,
+                    vec![
+                        DemandSeg { start: 0, end: 2, demand: vec![0.1, 0.3] },
+                        DemandSeg { start: 3, end: 5, demand: vec![0.4, 0.1] },
+                    ],
+                ),
+                Task::new(1, vec![0.2, 0.2], 1, 4),
+                Task::piecewise(
+                    2,
+                    vec![
+                        DemandSeg { start: 2, end: 3, demand: vec![0.3, 0.05] },
+                        DemandSeg { start: 4, end: 5, demand: vec![0.05, 0.3] },
+                    ],
+                ),
+            ],
+            vec![
+                NodeType::new("a", vec![1.0, 1.0], 2.0),
+                NodeType::new("b", vec![0.6, 0.6], 1.0),
+            ],
+            6,
+        );
+        let lp = MappingLp::from_instance(&trim(&inst).instance);
+        assert!(!lp.is_flat());
+        // <K x, y> == <x, K^T y>
+        let mut op = Operator::new(&lp);
+        let mut rng = Rng::new(6);
+        let x: Vec<f64> = (0..lp.n * lp.m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> =
+            (0..lp.m * lp.t * lp.dims).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let alpha = vec![0.0; lp.m];
+        let mut kx = vec![0.0; y.len()];
+        op.forward(&x, &alpha, &mut kx);
+        let lhs: f64 = kx.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let mut gx = vec![0.0; x.len()];
+        let mut ga = vec![0.0; lp.m];
+        op.adjoint(&y, &mut gx, &mut ga);
+        let rhs: f64 = gx.iter().zip(&x).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+        // forward against a hand-built dense K x at a one-hot x
+        let mut x1 = vec![0.0; lp.n * lp.m];
+        for u in 0..lp.n {
+            x1[u * lp.m] = 1.0; // everything on type 0
+        }
+        op.forward(&x1, &vec![0.0; lp.m], &mut kx);
+        let dense = lp.to_dense();
+        for ts in 0..lp.t {
+            for d in 0..lp.dims {
+                // recompute congestion at (type 0, ts, d) from segments
+                let mut want = 0.0;
+                for u in 0..lp.n {
+                    for s in lp.segs_of(u) {
+                        let (ss, se) = lp.seg_spans[s];
+                        if ts as u32 >= ss && ts as u32 <= se {
+                            want += lp.seg_ratio(s, 0, d);
+                        }
+                    }
+                }
+                let got = kx[(0 * lp.t + ts) * lp.dims + d];
+                assert!((got - want).abs() < 1e-12, "ts {ts} d {d}: {got} vs {want}");
+            }
+        }
+        // PDHG matches the exact simplex optimum on the shaped LP
+        let exact = simplex::solve(&dense);
+        assert_eq!(exact.status, simplex::SimplexStatus::Optimal);
+        let r = solve(&lp, &PdhgOptions { tol: 1e-7, gap_tol: 1e-7, ..Default::default() });
+        assert!(r.converged, "{:?}", r.residuals);
+        let rel = (r.objective - exact.objective).abs() / (1.0 + exact.objective.abs());
+        assert!(rel < 1e-4, "pdhg {} vs simplex {}", r.objective, exact.objective);
     }
 
     #[test]

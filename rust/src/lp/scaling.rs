@@ -12,13 +12,14 @@ use super::builder::MappingLp;
 
 /// Compute and install row scaling on the LP. Returns the scale factors.
 pub fn equilibrate(lp: &mut MappingLp) -> Vec<f64> {
-    let (n, m, dims) = (lp.n, lp.m, lp.dims);
+    let (m, dims) = (lp.m, lp.dims);
+    let s_total = lp.n_segments();
     let mut rho = vec![1.0; m * dims];
     for b in 0..m {
         for d in 0..dims {
             let mut row_max: f64 = 0.0;
-            for u in 0..n {
-                row_max = row_max.max(lp.ratio(u, b, d));
+            for s in 0..s_total {
+                row_max = row_max.max(lp.seg_ratio(s, b, d));
             }
             // Row also contains the -1 alpha entry: its norm is at least 1.
             let norm = row_max.max(1.0);

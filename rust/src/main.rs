@@ -53,18 +53,30 @@ USAGE:
 WORKLOAD SPECS (--workload, gen/solve/stress, and the service's 'workload' field):
   workload := <family>[:<key>=<value>[,<key>=<value>|<flag>]...]
   families := synth | gct | mixed | burst | batch | deadline | duty
-            | spiky | waves                  (run 'tlrs workloads' for the
+            | spiky | waves | csv           (run 'tlrs workloads' for the
                                               full key catalog)
+  shape    := flat | ramp | diurnal | spike  — every family accepts
+              shape=<...>: tasks get piecewise-constant demand profiles
+              (time-varying load within one task) whose peak equals the
+              family's drawn demand; 'flat' (default) is the constant-
+              demand model, bit-identical to omitting the key
   cost     := hom | het | gcp | fixed with e=<exponent>; composes onto
               every generated family (gct prices via its 'priced' flag)
+  csv      := csv:path=<trace.csv> imports an on-disk trace (io::files
+              format, '+'-prefixed continuation rows carry extra demand
+              segments) and draws a priced catalog around it. CLI-only:
+              the service rejects it (server-local file reads)
   examples : --workload synth:n=2000,dims=7    --workload gct:n=1000,priced
-             --workload mixed:services=200,horizon=336    --workload spiky
+             --workload mixed:services=200,shape=diurnal
+             --workload csv:path=trace.csv,m=6,cost=gcp
 
 ALGO SPECS (--algo, and the service's 'algorithm' field):
   A preset, a pipeline spec, or several specs separated by commas —
   multiple specs race in parallel as a portfolio sharing one LP solve,
-  and the min-cost solution wins. The spec token 'portfolio' expands
-  to all four presets and may appear inside comma lists.
+  and the min-cost solution wins; racers that a finished member's
+  certified LP bound proves unbeatable are skipped (reported as such).
+  The spec token 'portfolio' expands to all four presets and may appear
+  inside comma lists.
   spec    := portfolio | <head>[:<fit>][+<refine>]...
   head    := penalty-map | penalty-map-f | lp-map | lp-map-f
            | penalty | penalty-havg | penalty-hmax | lp
@@ -147,10 +159,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
 
     let cost = report.cost;
     println!("algorithm      : {} ({backend})", report.label);
-    if race.reports.len() > 1 {
+    if race.reports.len() + race.skipped.len() > 1 {
         for (i, r) in race.reports.iter().enumerate() {
             let marker = if i == race.winner { " <- winner" } else { "" };
             println!("  raced        : {:<24} cost {:.4}{marker}", r.label, r.cost);
+        }
+        for label in &race.skipped {
+            println!("  raced        : {label:<24} skipped (LP bound reached)");
         }
     }
     println!("tasks / types  : {} / {}", tr.n_tasks(), tr.n_types());

@@ -45,30 +45,44 @@ impl Instance {
         self.node_types.len()
     }
 
-    /// Demand/capacity ratio `r(u,B,d) = dem(u,d)/cap(B,d)`.
+    /// Time-averaged demand/capacity ratio
+    /// `r_avg(u,B,d) = avg_dem(u,d)/cap(B,d)`. For flat tasks the average
+    /// is the demand itself, so this is the seed's `ratio`.
     #[inline]
-    pub fn ratio(&self, u: usize, b: usize, d: usize) -> f64 {
-        self.tasks[u].demand[d] / self.node_types[b].capacity[d]
+    pub fn ratio_avg(&self, u: usize, b: usize, d: usize) -> f64 {
+        self.tasks[u].avg()[d] / self.node_types[b].capacity[d]
     }
 
-    /// Relative demand `h_avg(u|B)` (paper section III).
+    /// Peak demand/capacity ratio `r_peak(u,B,d) = peak_dem(u,d)/cap(B,d)`.
+    #[inline]
+    pub fn ratio_peak(&self, u: usize, b: usize, d: usize) -> f64 {
+        self.tasks[u].peak()[d] / self.node_types[b].capacity[d]
+    }
+
+    /// Relative demand `h_avg(u|B)` (paper section III), generalized to
+    /// shaped tasks as the *time-averaged* relative demand — the natural
+    /// reading of the penalty as expected congestion contribution.
     pub fn h_avg(&self, u: usize, b: usize) -> f64 {
         let d = self.dims();
-        (0..d).map(|k| self.ratio(u, b, k)).sum::<f64>() / d as f64
+        (0..d).map(|k| self.ratio_avg(u, b, k)).sum::<f64>() / d as f64
     }
 
-    /// Relative demand `h_max(u|B)` (alternative mapping policy).
+    /// Relative demand `h_max(u|B)` (alternative mapping policy),
+    /// generalized to shaped tasks as the *peak* relative demand —
+    /// `h_max` bounds the worst-case footprint, which a shaped task hits
+    /// only at its peak.
     pub fn h_max(&self, u: usize, b: usize) -> f64 {
         (0..self.dims())
-            .map(|k| self.ratio(u, b, k))
+            .map(|k| self.ratio_peak(u, b, k))
             .fold(f64::NEG_INFINITY, f64::max)
     }
 
     /// Can every task fit on at least one node-type alone? (feasibility
     /// precondition; loaders guarantee it, algorithms assert it).
+    /// Admissibility is a peak-demand property.
     pub fn is_feasible(&self) -> bool {
         self.tasks.iter().all(|u| {
-            self.node_types.iter().any(|b| b.admits(&u.demand))
+            self.node_types.iter().any(|b| b.admits(u.peak()))
         })
     }
 
@@ -86,12 +100,14 @@ impl Instance {
     }
 
     /// Treat every task as perpetually active (paper section VI-F,
-    /// "no-timeline" comparison): all spans become [0, 0], horizon 1.
+    /// "no-timeline" comparison): all spans become [0, 0], horizon 1. A
+    /// shaped task collapses to its *peak* demand — the capacity a
+    /// timeline-agnostic sizer would have to reserve for it.
     pub fn collapse_timeline(&self) -> Instance {
         let tasks = self
             .tasks
             .iter()
-            .map(|u| Task::new(u.id, u.demand.clone(), 0, 0))
+            .map(|u| Task::new(u.id, u.peak().to_vec(), 0, 0))
             .collect();
         Instance::new(tasks, self.node_types.clone(), 1)
     }
@@ -121,7 +137,8 @@ mod tests {
         assert_eq!(inst.dims(), 2);
         assert_eq!(inst.n_tasks(), 2);
         assert_eq!(inst.n_types(), 2);
-        assert!((inst.ratio(0, 1, 1) - 0.8).abs() < 1e-12);
+        assert!((inst.ratio_avg(0, 1, 1) - 0.8).abs() < 1e-12);
+        assert!((inst.ratio_peak(0, 1, 1) - 0.8).abs() < 1e-12);
         assert!((inst.h_avg(0, 0) - 0.3).abs() < 1e-12);
         assert!((inst.h_max(0, 0) - 0.4).abs() < 1e-12);
         assert!((inst.catalog_cost() - 16.0).abs() < 1e-12);
@@ -134,6 +151,30 @@ mod tests {
         assert_eq!(inst.active_at(0), vec![0]);
         assert_eq!(inst.active_at(3), vec![1]);
         assert!(inst.active_at(6.min(inst.horizon - 1)).len() <= 2);
+    }
+
+    #[test]
+    fn shaped_penalties_split_avg_vs_peak() {
+        use crate::model::task::DemandSeg;
+        // demand 0.2 for 2 slots then 0.6 for 2 slots: avg 0.4, peak 0.6
+        let inst = Instance::new(
+            vec![Task::piecewise(
+                0,
+                vec![
+                    DemandSeg { start: 0, end: 1, demand: vec![0.2] },
+                    DemandSeg { start: 2, end: 3, demand: vec![0.6] },
+                ],
+            )],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            4,
+        );
+        assert!((inst.h_avg(0, 0) - 0.4).abs() < 1e-12);
+        assert!((inst.h_max(0, 0) - 0.6).abs() < 1e-12);
+        assert!(inst.is_feasible());
+        // collapsing reserves the peak
+        let c = inst.collapse_timeline();
+        assert_eq!(c.tasks[0].peak(), &[0.6]);
+        assert!(c.tasks[0].is_flat());
     }
 
     #[test]

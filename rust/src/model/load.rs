@@ -17,6 +17,12 @@
 //! length `L` in dimension `d`,
 //! `Σ (cap-u)² = L·cap² - 2·cap·Σu + Σu²`.
 //!
+//! Tasks carry piecewise-constant [`DemandProfile`]s (`model::task`):
+//! every task-level operation below iterates the task's demand segments
+//! and issues one range operation per (segment, dimension) — O(S·D·log T)
+//! on the indexed backend, where the flat case S = 1 reproduces the
+//! original flat-task arithmetic operation-for-operation.
+//!
 //! `DenseProfile` overrides the task-level operations (`fits`,
 //! `add_task`, `similarity`, ...) with the seed's exact t-major loops,
 //! so the property tests in `tests/prop_invariants.rs` compare the
@@ -64,31 +70,39 @@ pub trait Profile: Clone + std::fmt::Debug {
         self.cap().len()
     }
 
-    /// Aggregate the task's demand into the profile.
+    /// Aggregate the task's demand into the profile: one range-add per
+    /// (segment, dimension) — O(S·D·log T) on the indexed backend, which
+    /// for the flat case (S = 1) is the seed's O(D·log T).
     fn add_task(&mut self, task: &Task) {
-        for d in 0..self.dims() {
-            self.range_add(d, task.start as usize, task.end as usize, task.demand[d]);
+        for seg in task.segments() {
+            for d in 0..self.dims() {
+                self.range_add(d, seg.start as usize, seg.end as usize, seg.demand[d]);
+            }
         }
     }
 
     /// Remove a previously added task's demand.
     fn remove_task(&mut self, task: &Task) {
-        for d in 0..self.dims() {
-            self.range_add(d, task.start as usize, task.end as usize, -task.demand[d]);
+        for seg in task.segments() {
+            for d in 0..self.dims() {
+                self.range_add(d, seg.start as usize, seg.end as usize, -seg.demand[d]);
+            }
         }
     }
 
     /// Does the task fit without violating capacity anywhere in its span?
     ///
     /// Fast path (candidate pruning): when the whole-timeline peak leaves
-    /// headroom for the demand in every dimension, the task surely fits —
-    /// O(D) with no windowed query. Otherwise fall back to the exact
-    /// windowed maxima, O(D·log T) on the indexed backend.
+    /// headroom for the task's *peak* demand in every dimension, the task
+    /// surely fits — O(D) with no windowed query. Otherwise fall back to
+    /// the exact per-segment windowed maxima (each segment checked
+    /// against its own demand), O(S·D·log T) on the indexed backend.
     fn fits(&self, task: &Task) -> bool {
         let cap = self.cap();
+        let peak_dem = task.peak();
         let mut sure = true;
         for (d, &c) in cap.iter().enumerate() {
-            if task.demand[d] + self.peak(d) > c + EPS {
+            if peak_dem[d] + self.peak(d) > c + EPS {
                 sure = false;
                 break;
             }
@@ -96,10 +110,12 @@ pub trait Profile: Clone + std::fmt::Debug {
         if sure {
             return true;
         }
-        let (lo, hi) = (task.start as usize, task.end as usize);
-        cap.iter()
-            .enumerate()
-            .all(|(d, &c)| self.window_max(d, lo, hi) + task.demand[d] <= c + EPS)
+        task.segments().iter().all(|seg| {
+            let (lo, hi) = (seg.start as usize, seg.end as usize);
+            cap.iter()
+                .enumerate()
+                .all(|(d, &c)| self.window_max(d, lo, hi) + seg.demand[d] <= c + EPS)
+        })
     }
 
     /// Cosine similarity between the capacity-normalized demand and
@@ -115,15 +131,20 @@ pub trait Profile: Clone + std::fmt::Debug {
     /// build, clamping is inert and the two computations agree.
     fn similarity(&self, task: &Task) -> f64 {
         let cap = self.cap();
-        let (lo, hi) = (task.start as usize, task.end as usize);
-        let len = (hi - lo + 1) as f64;
         let (mut dot, mut nrm_d, mut nrm_r) = (0.0f64, 0.0f64, 0.0f64);
         for (d, &c) in cap.iter().enumerate() {
-            let (sum, sumsq) = self.window_sums(d, lo, hi);
-            let dem = task.demand[d] / c;
-            dot += dem * (len * c - sum) / c;
-            nrm_d += dem * dem * len;
-            nrm_r += (len * c * c - 2.0 * c * sum + sumsq) / (c * c);
+            // one windowed-sum query per segment: the demand is constant
+            // within a segment, so the per-slot cosine terms aggregate
+            // exactly as in the flat derivation, window by window
+            for seg in task.segments() {
+                let (lo, hi) = (seg.start as usize, seg.end as usize);
+                let len = (hi - lo + 1) as f64;
+                let (sum, sumsq) = self.window_sums(d, lo, hi);
+                let dem = seg.demand[d] / c;
+                dot += dem * (len * c - sum) / c;
+                nrm_d += dem * dem * len;
+                nrm_r += (len * c * c - 2.0 * c * sum + sumsq) / (c * c);
+            }
         }
         if nrm_d <= 0.0 || nrm_r <= 0.0 {
             return 0.0;
@@ -430,15 +451,18 @@ impl Profile for DenseProfile {
             .collect()
     }
 
-    /// Seed-faithful dense feasibility scan: t-major, per-slot compare,
-    /// no peak fast path (computing the peak would itself cost O(T·D)).
+    /// Seed-faithful dense feasibility scan: t-major within each segment,
+    /// per-slot compare, no peak fast path (computing the peak would
+    /// itself cost O(T·D)).
     fn fits(&self, task: &Task) -> bool {
         let dims = self.cap.len();
-        for t in task.start as usize..=task.end as usize {
-            let base = t * dims;
-            for (d, &c) in self.cap.iter().enumerate() {
-                if self.usage[base + d] + task.demand[d] > c + EPS {
-                    return false;
+        for seg in task.segments() {
+            for t in seg.start as usize..=seg.end as usize {
+                let base = t * dims;
+                for (d, &c) in self.cap.iter().enumerate() {
+                    if self.usage[base + d] + seg.demand[d] > c + EPS {
+                        return false;
+                    }
                 }
             }
         }
@@ -453,14 +477,16 @@ impl Profile for DenseProfile {
     fn similarity(&self, task: &Task) -> f64 {
         let dims = self.cap.len();
         let (mut dot, mut nrm_d, mut nrm_r) = (0.0f64, 0.0f64, 0.0f64);
-        for t in task.start as usize..=task.end as usize {
-            let base = t * dims;
-            for (d, &c) in self.cap.iter().enumerate() {
-                let dem = task.demand[d] / c;
-                let rem = (c - self.usage[base + d]).max(0.0) / c;
-                dot += dem * rem;
-                nrm_d += dem * dem;
-                nrm_r += rem * rem;
+        for seg in task.segments() {
+            for t in seg.start as usize..=seg.end as usize {
+                let base = t * dims;
+                for (d, &c) in self.cap.iter().enumerate() {
+                    let dem = seg.demand[d] / c;
+                    let rem = (c - self.usage[base + d]).max(0.0) / c;
+                    dot += dem * rem;
+                    nrm_d += dem * dem;
+                    nrm_r += rem * rem;
+                }
             }
         }
         if nrm_d <= 0.0 || nrm_r <= 0.0 {
@@ -472,20 +498,24 @@ impl Profile for DenseProfile {
     /// Dense add in the seed's t-major order (FP-faithful).
     fn add_task(&mut self, task: &Task) {
         let dims = self.cap.len();
-        for t in task.start as usize..=task.end as usize {
-            let base = t * dims;
-            for d in 0..dims {
-                self.usage[base + d] += task.demand[d];
+        for seg in task.segments() {
+            for t in seg.start as usize..=seg.end as usize {
+                let base = t * dims;
+                for d in 0..dims {
+                    self.usage[base + d] += seg.demand[d];
+                }
             }
         }
     }
 
     fn remove_task(&mut self, task: &Task) {
         let dims = self.cap.len();
-        for t in task.start as usize..=task.end as usize {
-            let base = t * dims;
-            for d in 0..dims {
-                self.usage[base + d] -= task.demand[d];
+        for seg in task.segments() {
+            for t in seg.start as usize..=seg.end as usize {
+                let base = t * dims;
+                for d in 0..dims {
+                    self.usage[base + d] -= seg.demand[d];
+                }
             }
         }
     }
@@ -615,7 +645,7 @@ mod tests {
         let (mut dot, mut nd, mut nr) = (0.0f64, 0.0f64, 0.0f64);
         for t in 0..=6usize {
             for d in 0..2 {
-                let dem = probe.demand[d] / cap[d];
+                let dem = probe.peak()[d] / cap[d];
                 let rem = (cap[d] - usage[t * 2 + d]).max(0.0) / cap[d];
                 dot += dem * rem;
                 nd += dem * dem;
@@ -634,6 +664,70 @@ mod tests {
         p.set_cap(vec![1.0]);
         assert!(p.fits(&task(vec![0.3], 1, 2)));
         assert!((p.peak_utilization() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn piecewise_task_matches_flat_split() {
+        use crate::model::task::DemandSeg;
+        // a shaped task must load the profile exactly like the equivalent
+        // set of flat per-segment tasks, on both backends
+        let shaped = Task::piecewise(
+            0,
+            vec![
+                DemandSeg { start: 1, end: 3, demand: vec![0.2, 0.5] },
+                DemandSeg { start: 4, end: 6, demand: vec![0.7, 0.1] },
+            ],
+        );
+        let split = [
+            task(vec![0.2, 0.5], 1, 3),
+            task(vec![0.7, 0.1], 4, 6),
+        ];
+        let cap = vec![1.0, 1.0];
+        let mut a: LoadProfile = Profile::new(8, cap.clone());
+        let mut b: LoadProfile = Profile::new(8, cap.clone());
+        let mut d: DenseProfile = Profile::new(8, cap.clone());
+        a.add_task(&shaped);
+        d.add_task(&shaped);
+        for t in &split {
+            b.add_task(t);
+        }
+        for dim in 0..2 {
+            for t in 0..8 {
+                let (sa, _) = a.window_sums(dim, t, t);
+                let (sb, _) = b.window_sums(dim, t, t);
+                let (sd, _) = d.window_sums(dim, t, t);
+                assert!((sa - sb).abs() < 1e-12, "dim {dim} slot {t}");
+                assert!((sa - sd).abs() < 1e-12, "dim {dim} slot {t}");
+            }
+        }
+        // per-segment feasibility: a probe clashing only with the second
+        // window is rejected, one fitting beside the peak is accepted
+        assert!(!a.fits(&task(vec![0.4, 0.4], 4, 5)));
+        assert!(a.fits(&task(vec![0.4, 0.4], 1, 3)));
+        // shaped probe against a loaded profile: fits iff every segment fits
+        let probe = Task::piecewise(
+            1,
+            vec![
+                DemandSeg { start: 1, end: 3, demand: vec![0.7, 0.4] },
+                DemandSeg { start: 4, end: 6, demand: vec![0.2, 0.4] },
+            ],
+        );
+        assert!(a.fits(&probe));
+        assert_eq!(a.fits(&probe), d.fits(&probe));
+        let clash = Task::piecewise(
+            2,
+            vec![
+                DemandSeg { start: 1, end: 3, demand: vec![0.7, 0.4] },
+                DemandSeg { start: 4, end: 6, demand: vec![0.4, 0.4] },
+            ],
+        );
+        assert!(!a.fits(&clash));
+        assert_eq!(a.fits(&clash), d.fits(&clash));
+        // similarity agrees across backends on shaped probes too
+        assert!((a.similarity(&probe) - d.similarity(&probe)).abs() < 1e-9);
+        // remove restores the empty profile
+        a.remove_task(&shaped);
+        assert!(a.peak(0).abs() < 1e-12 && a.peak(1).abs() < 1e-12);
     }
 
     #[test]

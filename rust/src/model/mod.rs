@@ -19,5 +19,5 @@ pub use instance::Instance;
 pub use load::{DenseProfile, LoadProfile, Profile};
 pub use nodetype::NodeType;
 pub use solution::{PlacedNode, Solution, Violation};
-pub use task::Task;
+pub use task::{DemandProfile, DemandSeg, Task};
 pub use timeline::{trim, Trimmed};

@@ -54,7 +54,11 @@ impl Solution {
     /// Full feasibility check (paper capacity constraint): every task
     /// placed exactly once, assignment consistent with node task lists,
     /// and for every node, timeslot and dimension the aggregate demand of
-    /// active tasks is within capacity.
+    /// active tasks is within capacity. Shaped tasks contribute their
+    /// exact per-slot (segment) demand, so the check is strictly per-slot
+    /// — a profile whose peaks never coincide passes where a peak-sum
+    /// approximation would reject, and an overlap of two high windows is
+    /// caught even when each task's average load looks harmless.
     ///
     /// Runs on the indexed [`LoadProfile`]: task aggregation is
     /// O(tasks·D·log T) instead of O(tasks·span·D) and the capacity
@@ -200,6 +204,72 @@ mod tests {
         let errs = s.verify(&inst).unwrap_err();
         assert!(errs.iter().any(|v| matches!(v, Violation::DoublyPlaced { task: 2 })
             || matches!(v, Violation::InconsistentAssignment { task: 2 })));
+    }
+
+    #[test]
+    fn shaped_overload_is_per_slot() {
+        use crate::model::task::DemandSeg;
+        // task 0 ramps up (0.3 then 0.8), task 1 is flat 0.3: the only
+        // overload is at slots 2..3 (0.8 + 0.3 > 1.0). A peak-only check
+        // would flag the whole joint span; per-slot verification pins the
+        // exact slots.
+        let inst = Instance::new(
+            vec![
+                Task::piecewise(
+                    0,
+                    vec![
+                        DemandSeg { start: 0, end: 1, demand: vec![0.3] },
+                        DemandSeg { start: 2, end: 3, demand: vec![0.8] },
+                    ],
+                ),
+                Task::new(1, vec![0.3], 0, 3),
+            ],
+            vec![NodeType::new("a", vec![1.0], 5.0)],
+            4,
+        );
+        let mut s = Solution::new(2);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 1] });
+        s.assignment = vec![Some(0), Some(0)];
+        let errs = s.verify(&inst).unwrap_err();
+        let slots: Vec<u32> = errs
+            .iter()
+            .filter_map(|v| match v {
+                Violation::CapacityExceeded { timeslot, .. } => Some(*timeslot),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(slots, vec![2, 3], "{errs:?}");
+        // the dense reference verifier agrees
+        let dense_errs = s.verify_with::<crate::model::DenseProfile>(&inst).unwrap_err();
+        assert_eq!(errs.len(), dense_errs.len());
+    }
+
+    #[test]
+    fn complementary_shapes_share_a_node() {
+        use crate::model::task::DemandSeg;
+        // two tasks whose peaks alternate: per-slot load is exactly 1.0,
+        // so one node suffices — the reuse a constant-peak model cannot
+        // see (0.8 + 0.8 would exceed capacity).
+        let mk = |id, hi_first: bool| {
+            let (a, b) = if hi_first { (0.8, 0.2) } else { (0.2, 0.8) };
+            Task::piecewise(
+                id,
+                vec![
+                    DemandSeg { start: 0, end: 1, demand: vec![a] },
+                    DemandSeg { start: 2, end: 3, demand: vec![b] },
+                ],
+            )
+        };
+        let inst = Instance::new(
+            vec![mk(0, true), mk(1, false)],
+            vec![NodeType::new("a", vec![1.0], 5.0)],
+            4,
+        );
+        let mut s = Solution::new(2);
+        s.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 1] });
+        s.assignment = vec![Some(0), Some(0)];
+        assert!(s.verify(&inst).is_ok());
+        assert!((s.node_peak_utilization(&inst, 0) - 1.0).abs() < 1e-12);
     }
 
     #[test]

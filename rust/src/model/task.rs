@@ -1,29 +1,292 @@
-//! Tasks: D-dimensional resource demands over a closed timeslot interval.
+//! Tasks: D-dimensional resource demands over a closed timeslot interval,
+//! generalized from a constant demand vector to a piecewise-constant
+//! [`DemandProfile`].
+//!
+//! The paper's core motivation is that real tasks "may be active only
+//! during specific time-periods or may have *dynamic load profiles*": a
+//! diurnal service needs its peak capacity only during business hours, a
+//! ramping batch job grows as it fans out. Modeling that load shape as a
+//! first-class profile — ordered segments `(window, demand)` covering the
+//! task's span — lets the optimizer reuse the same node for two tasks
+//! whose *peaks* never coincide, where a constant-demand model would have
+//! to reserve both peaks simultaneously (or fake the shape by splitting
+//! the task into many flat tasks, inflating n and hiding the reuse from
+//! per-task mapping).
+//!
+//! The flat case is exactly one segment spanning `[start, end]` and is
+//! represented canonically (a single-segment piecewise construction
+//! normalizes to it), so every pre-profile code path — placement, LP,
+//! verification — remains bit-identical on constant-demand instances.
+//!
+//! Aggregates the solver stack uses:
+//!   * [`Task::peak`] — per-dimension maximum demand; drives
+//!     admissibility ([`crate::model::NodeType::admits`]), smallness and
+//!     the `h_max` penalty,
+//!   * [`Task::avg`] — per-dimension time-averaged demand; drives the
+//!     `h_avg` penalty (the time-weighted generalization of the paper's
+//!     relative demand),
+//!   * [`Task::demand_at`] — the exact demand at one timeslot; drives
+//!     per-slot feasibility (load profiles, `Solution::verify`, the
+//!     mapping LP's congestion rows).
 
-/// A time-limited task (paper section II): demand vector `dem(u,d)` and an
-/// inclusive active span `[start, end]` in discrete timeslots.
+/// One piecewise-constant window of demand: `demand` holds over the
+/// inclusive timeslot interval `[start, end]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DemandSeg {
+    /// First timeslot of the window (inclusive).
+    pub start: u32,
+    /// Last timeslot of the window (inclusive); `end >= start`.
+    pub end: u32,
+    /// Demand along each dimension over the window, normalized to [0, 1].
+    pub demand: Vec<f64>,
+}
+
+/// A piecewise-constant demand profile: ordered, contiguous segments.
+/// Invariants (enforced by [`DemandProfile::new`]):
+///   * at least one segment, every demand vector non-empty and of one
+///     shared dimensionality,
+///   * each window is a valid inclusive interval,
+///   * consecutive windows are contiguous
+///     (`segs[i+1].start == segs[i].end + 1`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DemandProfile {
+    segs: Vec<DemandSeg>,
+}
+
+impl DemandProfile {
+    /// Constant demand over `[start, end]` — the seed model's task shape.
+    pub fn flat(demand: Vec<f64>, start: u32, end: u32) -> DemandProfile {
+        assert!(end >= start, "flat profile: end {end} < start {start}");
+        assert!(!demand.is_empty(), "flat profile: empty demand");
+        DemandProfile { segs: vec![DemandSeg { start, end, demand }] }
+    }
+
+    /// Validate and build a piecewise profile. Errors (not panics) so
+    /// loaders can reject malformed external data gracefully.
+    pub fn new(segs: Vec<DemandSeg>) -> Result<DemandProfile, String> {
+        let Some(first) = segs.first() else {
+            return Err("profile has no segments".into());
+        };
+        let dims = first.demand.len();
+        if dims == 0 {
+            return Err("profile segment has an empty demand".into());
+        }
+        for (i, seg) in segs.iter().enumerate() {
+            if seg.end < seg.start {
+                return Err(format!(
+                    "segment {i}: end {} < start {}",
+                    seg.end, seg.start
+                ));
+            }
+            if seg.demand.len() != dims {
+                return Err(format!(
+                    "segment {i}: {} dims, expected {dims}",
+                    seg.demand.len()
+                ));
+            }
+            if i > 0 {
+                let prev_end = segs[i - 1].end;
+                if seg.start != prev_end + 1 {
+                    return Err(format!(
+                        "segment {i} starts at {} but the previous window ends at \
+                         {prev_end} (segments must be contiguous)",
+                        seg.start
+                    ));
+                }
+            }
+        }
+        Ok(DemandProfile { segs })
+    }
+
+    /// The ordered segments covering `[start(), end()]`.
+    pub fn segments(&self) -> &[DemandSeg] {
+        &self.segs
+    }
+
+    /// First active timeslot.
+    pub fn start(&self) -> u32 {
+        self.segs[0].start
+    }
+
+    /// Last active timeslot (inclusive).
+    pub fn end(&self) -> u32 {
+        self.segs[self.segs.len() - 1].end
+    }
+
+    pub fn dims(&self) -> usize {
+        self.segs[0].demand.len()
+    }
+
+    /// One segment — the constant-demand case every seed path handles.
+    pub fn is_flat(&self) -> bool {
+        self.segs.len() == 1
+    }
+
+    /// Demand vector at timeslot `t`, `None` when inactive.
+    pub fn demand_at(&self, t: u32) -> Option<&[f64]> {
+        // segments are ordered by start; find the window containing t
+        let i = match self.segs.binary_search_by(|s| s.start.cmp(&t)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let seg = &self.segs[i];
+        (t <= seg.end).then(|| seg.demand.as_slice())
+    }
+
+    /// Per-dimension maximum demand over the whole span.
+    pub fn peak_vec(&self) -> Vec<f64> {
+        let mut peak = self.segs[0].demand.clone();
+        for seg in &self.segs[1..] {
+            for (p, &x) in peak.iter_mut().zip(&seg.demand) {
+                *p = p.max(x);
+            }
+        }
+        peak
+    }
+
+    /// Per-dimension time-averaged demand (window-length weighted).
+    pub fn avg_vec(&self) -> Vec<f64> {
+        let dims = self.dims();
+        let mut acc = vec![0.0f64; dims];
+        let mut total = 0.0f64;
+        for seg in &self.segs {
+            let len = (seg.end - seg.start + 1) as f64;
+            total += len;
+            for (a, &x) in acc.iter_mut().zip(&seg.demand) {
+                *a += x * len;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= total;
+        }
+        acc
+    }
+}
+
+/// A time-limited task (paper section II): a demand profile over an
+/// inclusive active span `[start, end]` in discrete timeslots. Construct
+/// flat tasks with [`Task::new`] (the seed signature) and shaped tasks
+/// with [`Task::piecewise`] / [`Task::try_piecewise`].
 #[derive(Clone, Debug, PartialEq)]
 pub struct Task {
     /// Stable external identifier (index into the source trace).
     pub id: u64,
-    /// Demand along each of the D dimensions, normalized to [0, 1].
-    pub demand: Vec<f64>,
     /// First active timeslot (0-based).
     pub start: u32,
     /// Last active timeslot, inclusive; `end >= start`.
     pub end: u32,
+    /// Piecewise-constant demand covering exactly `[start, end]`.
+    profile: DemandProfile,
+    /// Cached per-dimension peak; empty for flat tasks (the single
+    /// segment's demand *is* the peak — no second allocation).
+    peak: Vec<f64>,
+    /// Cached per-dimension time-averaged demand; empty for flat tasks.
+    avg: Vec<f64>,
 }
 
 impl Task {
+    /// Constant demand over `[start, end]` — same signature and panics as
+    /// the pre-profile model, so every generator and test constructs flat
+    /// tasks unchanged.
     pub fn new(id: u64, demand: Vec<f64>, start: u32, end: u32) -> Self {
         assert!(end >= start, "task {id}: end {end} < start {start}");
         assert!(!demand.is_empty(), "task {id}: empty demand");
-        Task { id, demand, start, end }
+        Task {
+            id,
+            start,
+            end,
+            profile: DemandProfile::flat(demand, start, end),
+            peak: Vec::new(),
+            avg: Vec::new(),
+        }
+    }
+
+    /// Build a shaped task from a validated profile. A single-segment
+    /// profile normalizes to the flat representation, so "piecewise with
+    /// one segment" and "flat" are the same value (bit-identical
+    /// downstream).
+    pub fn from_profile(id: u64, profile: DemandProfile) -> Self {
+        let (start, end) = (profile.start(), profile.end());
+        let (peak, avg) = if profile.is_flat() {
+            (Vec::new(), Vec::new())
+        } else {
+            (profile.peak_vec(), profile.avg_vec())
+        };
+        Task { id, start, end, profile, peak, avg }
+    }
+
+    /// Validate segments and build a shaped task; errors on malformed
+    /// external data instead of panicking.
+    pub fn try_piecewise(id: u64, segs: Vec<DemandSeg>) -> Result<Self, String> {
+        let profile = DemandProfile::new(segs).map_err(|e| format!("task {id}: {e}"))?;
+        Ok(Task::from_profile(id, profile))
+    }
+
+    /// [`Task::try_piecewise`] for programmatic construction: panics on
+    /// invalid segments (programmer error, like [`Task::new`]).
+    pub fn piecewise(id: u64, segs: Vec<DemandSeg>) -> Self {
+        Task::try_piecewise(id, segs).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Same task under a new id (trace re-labeling: scenario sampling,
+    /// sub-instances, surprise-load streams).
+    pub fn with_id(&self, id: u64) -> Self {
+        Task { id, ..self.clone() }
+    }
+
+    /// The piecewise-constant demand segments (one for flat tasks).
+    pub fn segments(&self) -> &[DemandSeg] {
+        self.profile.segments()
+    }
+
+    /// Constant-demand task (single segment)?
+    pub fn is_flat(&self) -> bool {
+        self.profile.is_flat()
+    }
+
+    /// Per-dimension *peak* demand: the vector admissibility, smallness
+    /// and `h_max` reason about. For flat tasks this is the demand itself.
+    pub fn peak(&self) -> &[f64] {
+        if self.peak.is_empty() {
+            &self.profile.segments()[0].demand
+        } else {
+            &self.peak
+        }
+    }
+
+    /// Per-dimension *time-averaged* demand: the `h_avg` aggregate. For
+    /// flat tasks this is the demand itself (exactly — no re-derivation).
+    pub fn avg(&self) -> &[f64] {
+        if self.avg.is_empty() {
+            &self.profile.segments()[0].demand
+        } else {
+            &self.avg
+        }
+    }
+
+    /// Demand vector at timeslot `t`, `None` when the task is inactive.
+    pub fn demand_at(&self, t: u32) -> Option<&[f64]> {
+        self.profile.demand_at(t)
+    }
+
+    /// Clamp every segment's demand component to `cap` (generators use
+    /// this to keep drawn demands admissible on the anchor node-type).
+    pub fn clamp_demand(&mut self, cap: &[f64]) {
+        for seg in self.profile.segs.iter_mut() {
+            for (x, &c) in seg.demand.iter_mut().zip(cap) {
+                *x = x.min(c);
+            }
+        }
+        if !self.peak.is_empty() {
+            self.peak = self.profile.peak_vec();
+            self.avg = self.profile.avg_vec();
+        }
     }
 
     /// Number of resource dimensions.
     pub fn dims(&self) -> usize {
-        self.demand.len()
+        self.profile.dims()
     }
 
     /// Is the task active at timeslot `t` (paper: `u ~ t`)?
@@ -42,10 +305,12 @@ impl Task {
         self.start <= other.end && other.start <= self.end
     }
 
-    /// A task is *small* w.r.t. a capacity vector if every demand component
-    /// is at most half the capacity (paper section III analysis).
+    /// A task is *small* w.r.t. a capacity vector if every *peak* demand
+    /// component is at most half the capacity (paper section III
+    /// analysis; a shaped task never exceeds its peak, so the bin-packing
+    /// argument carries over).
     pub fn is_small_for(&self, capacity: &[f64]) -> bool {
-        self.demand.iter().zip(capacity).all(|(&d, &c)| d <= c / 2.0)
+        self.peak().iter().zip(capacity).all(|(&d, &c)| d <= c / 2.0)
     }
 }
 
@@ -55,6 +320,17 @@ mod tests {
 
     fn t(s: u32, e: u32) -> Task {
         Task::new(0, vec![0.1], s, e)
+    }
+
+    fn shaped() -> Task {
+        Task::piecewise(
+            7,
+            vec![
+                DemandSeg { start: 2, end: 3, demand: vec![0.2, 0.1] },
+                DemandSeg { start: 4, end: 7, demand: vec![0.6, 0.3] },
+                DemandSeg { start: 8, end: 9, demand: vec![0.1, 0.4] },
+            ],
+        )
     }
 
     #[test]
@@ -86,5 +362,100 @@ mod tests {
         let u = Task::new(0, vec![0.3, 0.1], 0, 0);
         assert!(u.is_small_for(&[0.6, 0.2]));
         assert!(!u.is_small_for(&[0.5, 0.2]));
+        // shaped: smallness is a peak property
+        let s = shaped();
+        assert!(s.is_small_for(&[1.2, 0.8]));
+        assert!(!s.is_small_for(&[1.1, 0.7]));
+    }
+
+    #[test]
+    fn flat_task_is_single_segment_with_shared_aggregates() {
+        let u = Task::new(3, vec![0.25, 0.5], 1, 4);
+        assert!(u.is_flat());
+        assert_eq!(u.segments().len(), 1);
+        assert_eq!(u.peak(), &[0.25, 0.5]);
+        assert_eq!(u.avg(), &[0.25, 0.5]);
+        assert_eq!(u.demand_at(1), Some(&[0.25, 0.5][..]));
+        assert_eq!(u.demand_at(0), None);
+        assert_eq!(u.demand_at(5), None);
+    }
+
+    #[test]
+    fn single_segment_piecewise_normalizes_to_flat() {
+        let flat = Task::new(5, vec![0.2, 0.3], 2, 6);
+        let pw = Task::piecewise(
+            5,
+            vec![DemandSeg { start: 2, end: 6, demand: vec![0.2, 0.3] }],
+        );
+        assert_eq!(flat, pw);
+        assert!(pw.is_flat());
+    }
+
+    #[test]
+    fn shaped_span_and_aggregates() {
+        let s = shaped();
+        assert_eq!((s.start, s.end), (2, 9));
+        assert_eq!(s.span_len(), 8);
+        assert!(!s.is_flat());
+        assert_eq!(s.peak(), &[0.6, 0.4]);
+        // avg: (0.2*2 + 0.6*4 + 0.1*2)/8 = 0.375; (0.1*2 + 0.3*4 + 0.4*2)/8 = 0.275
+        assert!((s.avg()[0] - 0.375).abs() < 1e-12);
+        assert!((s.avg()[1] - 0.275).abs() < 1e-12);
+        assert_eq!(s.demand_at(3), Some(&[0.2, 0.1][..]));
+        assert_eq!(s.demand_at(4), Some(&[0.6, 0.3][..]));
+        assert_eq!(s.demand_at(9), Some(&[0.1, 0.4][..]));
+        assert_eq!(s.demand_at(1), None);
+        assert_eq!(s.demand_at(10), None);
+    }
+
+    #[test]
+    fn malformed_profiles_are_errors() {
+        // gap between windows
+        let err = Task::try_piecewise(
+            1,
+            vec![
+                DemandSeg { start: 0, end: 1, demand: vec![0.1] },
+                DemandSeg { start: 3, end: 4, demand: vec![0.1] },
+            ],
+        )
+        .unwrap_err();
+        assert!(err.contains("contiguous"), "{err}");
+        // inverted window
+        assert!(Task::try_piecewise(
+            1,
+            vec![DemandSeg { start: 5, end: 4, demand: vec![0.1] }],
+        )
+        .is_err());
+        // dims mismatch
+        assert!(Task::try_piecewise(
+            1,
+            vec![
+                DemandSeg { start: 0, end: 1, demand: vec![0.1, 0.2] },
+                DemandSeg { start: 2, end: 3, demand: vec![0.1] },
+            ],
+        )
+        .is_err());
+        // empty
+        assert!(Task::try_piecewise(1, vec![]).is_err());
+        assert!(Task::try_piecewise(
+            1,
+            vec![DemandSeg { start: 0, end: 0, demand: vec![] }],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn relabel_and_clamp() {
+        let s = shaped().with_id(99);
+        assert_eq!(s.id, 99);
+        assert_eq!(s.peak(), &[0.6, 0.4]);
+        let mut c = shaped();
+        c.clamp_demand(&[0.5, 1.0]);
+        assert_eq!(c.peak(), &[0.5, 0.4]);
+        assert_eq!(c.demand_at(4), Some(&[0.5, 0.3][..]));
+        // flat clamp matches the seed's component-wise min
+        let mut f = Task::new(0, vec![0.8, 0.2], 0, 1);
+        f.clamp_demand(&[0.5, 0.5]);
+        assert_eq!(f.peak(), &[0.5, 0.2]);
     }
 }

@@ -1,13 +1,17 @@
-//! Timeline trimming (paper section II): only task start slots matter.
+//! Timeline trimming (paper section II): only demand-increase slots matter.
 //!
 //! For capacity constraints, the aggregate load within a node only changes
-//! at task start times — between consecutive starts the active set can only
-//! shrink. Remapping every slot to the rank of the latest start <= slot
-//! therefore preserves the feasible-solution set exactly while shrinking
-//! T to at most n distinct values.
+//! upward when some demand *segment* begins — a task's start is its first
+//! segment's start, and between consecutive segment starts the active
+//! demand can only shrink (tasks end, or step to their next window at a
+//! slot that is itself a segment start). Remapping every slot to the rank
+//! of the latest segment start <= slot therefore preserves the
+//! feasible-solution set exactly while shrinking T to at most the number
+//! of distinct segment starts (= n for flat instances, where this is the
+//! seed's distinct-task-start trim, bit-identically).
 
 use super::instance::Instance;
-use super::task::Task;
+use super::task::{DemandSeg, Task};
 
 /// Result of trimming: the rewritten instance plus the sorted original
 /// start slots (`slots[k]` is the original timeslot of trimmed slot `k`),
@@ -18,12 +22,13 @@ pub struct Trimmed {
     pub slots: Vec<u32>,
 }
 
-/// Trim the timeline of `inst` to distinct task start slots.
+/// Trim the timeline of `inst` to distinct demand-segment start slots.
 ///
-/// Each task's interval `[s, e]` becomes `[rank(s), rank'(e)]` where
-/// `rank` is the index of `s` among sorted distinct starts and `rank'`
-/// maps `e` to the latest start `<= e`. Tasks always contain their own
-/// start, so the image interval is non-empty.
+/// Each segment window `[s, e]` becomes `[rank(s), rank'(e)]` where
+/// `rank` is the index of `s` among sorted distinct segment starts and
+/// `rank'` maps `e` to the latest start `<= e`. Windows always contain
+/// their own start, so every image window is non-empty, and adjacent
+/// segments stay contiguous (the successor's start is itself a slot).
 pub fn trim(inst: &Instance) -> Trimmed {
     if inst.tasks.is_empty() {
         return Trimmed {
@@ -31,14 +36,18 @@ pub fn trim(inst: &Instance) -> Trimmed {
             slots: vec![0],
         };
     }
-    let mut slots: Vec<u32> = inst.tasks.iter().map(|u| u.start).collect();
+    let mut slots: Vec<u32> = inst
+        .tasks
+        .iter()
+        .flat_map(|u| u.segments().iter().map(|s| s.start))
+        .collect();
     slots.sort_unstable();
     slots.dedup();
 
     let rank_of_start = |s: u32| -> u32 {
         slots.binary_search(&s).expect("start must be a slot") as u32
     };
-    // latest start <= e; every task has start <= e so this never underflows
+    // latest start <= e; every window has start <= e so this never underflows
     let rank_of_end = |e: u32| -> u32 {
         match slots.binary_search(&e) {
             Ok(i) => i as u32,
@@ -49,7 +58,29 @@ pub fn trim(inst: &Instance) -> Trimmed {
     let tasks: Vec<Task> = inst
         .tasks
         .iter()
-        .map(|u| Task::new(u.id, u.demand.clone(), rank_of_start(u.start), rank_of_end(u.end)))
+        .map(|u| {
+            if u.is_flat() {
+                // the seed's flat path, unchanged
+                let seg = &u.segments()[0];
+                Task::new(
+                    u.id,
+                    seg.demand.clone(),
+                    rank_of_start(u.start),
+                    rank_of_end(u.end),
+                )
+            } else {
+                let segs: Vec<DemandSeg> = u
+                    .segments()
+                    .iter()
+                    .map(|s| DemandSeg {
+                        start: rank_of_start(s.start),
+                        end: rank_of_end(s.end),
+                        demand: s.demand.clone(),
+                    })
+                    .collect();
+                Task::piecewise(u.id, segs)
+            }
+        })
         .collect();
     let horizon = slots.len() as u32;
     Trimmed {
@@ -131,5 +162,57 @@ mod tests {
         let inst = Instance::new(vec![], types(), 5);
         let tr = trim(&inst);
         assert_eq!(tr.instance.horizon, 1);
+    }
+
+    #[test]
+    fn segment_boundaries_become_slots() {
+        // A shaped task whose demand *rises* mid-span: the rise slot must
+        // survive trimming, or the trimmed instance would hide the peak
+        // overlap with task 1.
+        let shaped = Task::piecewise(
+            0,
+            vec![
+                DemandSeg { start: 2, end: 49, demand: vec![0.2] },
+                DemandSeg { start: 50, end: 99, demand: vec![0.8] },
+            ],
+        );
+        let inst = Instance::new(
+            vec![shaped, Task::new(1, vec![0.5], 60, 80)],
+            types(),
+            100,
+        );
+        let tr = trim(&inst);
+        assert_eq!(tr.slots, vec![2, 50, 60]);
+        let t0 = &tr.instance.tasks[0];
+        assert!(!t0.is_flat());
+        // windows: [2,49] -> [0,0], [50,99] -> [1,2]
+        assert_eq!(
+            t0.segments()
+                .iter()
+                .map(|s| (s.start, s.end))
+                .collect::<Vec<_>>(),
+            vec![(0, 0), (1, 2)]
+        );
+        // demand at the trimmed slots reproduces the original shape
+        assert_eq!(t0.demand_at(0), Some(&[0.2][..]));
+        assert_eq!(t0.demand_at(1), Some(&[0.8][..]));
+        assert_eq!(t0.demand_at(2), Some(&[0.8][..]));
+        // task 1 overlaps the peak window on the trimmed timeline:
+        // 0.8 + 0.5 > 1.0 must still be detectable per-slot
+        let t1 = &tr.instance.tasks[1];
+        assert_eq!((t1.start, t1.end), (2, 2));
+    }
+
+    #[test]
+    fn flat_instances_trim_exactly_as_before() {
+        // flat tasks contribute exactly their start slots — the seed rule
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.1], 7, 30), Task::new(1, vec![0.1], 12, 20)],
+            types(),
+            31,
+        );
+        let tr = trim(&inst);
+        assert_eq!(tr.slots, vec![7, 12]);
+        assert!(tr.instance.tasks.iter().all(|t| t.is_flat()));
     }
 }

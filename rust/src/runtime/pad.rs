@@ -25,6 +25,10 @@ pub fn pad(lp: &MappingLp, bucket: &Bucket) -> PaddedLp {
     let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
     let (pn, pm, pt, pd) = (bucket.n, bucket.m, bucket.t, bucket.d);
     assert!(bucket.fits(n, m, t, dims), "bucket too small");
+    // The artifact's (act, r) factorization assumes one constant ratio
+    // block per task; shaped (multi-segment) LPs must use the native
+    // backend (ArtifactSolver bails before reaching here).
+    assert!(lp.is_flat(), "artifact padding requires flat demand profiles");
 
     let mut act = vec![0.0f32; pt * pn];
     for (u, &(s, e)) in lp.spans.iter().enumerate() {
@@ -34,9 +38,10 @@ pub fn pad(lp: &MappingLp, bucket: &Bucket) -> PaddedLp {
     }
     let mut r = vec![0.0f32; pn * pm * pd];
     for u in 0..n {
+        let s = lp.seg_off[u]; // single segment per task (flat)
         for b in 0..m {
             for d in 0..dims {
-                r[(u * pm + b) * pd + d] = lp.ratio(u, b, d) as f32;
+                r[(u * pm + b) * pd + d] = lp.seg_ratio(s, b, d) as f32;
             }
         }
     }

@@ -72,6 +72,15 @@ fn score(diag: &[f32]) -> f32 {
 
 impl MappingSolver for ArtifactSolver {
     fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        // The compiled artifact multiplies a per-task ratio tensor by a
+        // 0/1 activity matrix, which cannot express per-slot (segment)
+        // coefficients. The planner's Auto mode never routes shaped
+        // instances here; an explicit --backend artifact gets this error.
+        anyhow::ensure!(
+            lp.is_flat(),
+            "artifact backend supports constant (flat) demand profiles only; \
+             shaped tasks need --backend native"
+        );
         let bucket = self
             .bucket_for(lp)
             .with_context(|| {
@@ -172,10 +181,14 @@ pub fn penalty_scores_artifact(
         .context("no bucket for penalty scoring")?
         .clone();
     let (pn, pm, pd) = (bucket.n, bucket.m, bucket.d);
+    anyhow::ensure!(
+        inst.tasks.iter().all(|t| t.is_flat()),
+        "penalty artifact cross-check supports flat demand profiles only"
+    );
     let mut dem = vec![0.0f32; pn * pd];
     for u in 0..n {
         for d in 0..dims {
-            dem[u * pd + d] = inst.tasks[u].demand[d] as f32;
+            dem[u * pd + d] = inst.tasks[u].peak()[d] as f32;
         }
     }
     // capinv for padded types/dims: zero => zero scores (harmless)

@@ -97,7 +97,7 @@ pub fn stress(
         extra
             .tasks
             .iter()
-            .map(|t| Task::new(base + t.id, t.demand.clone(), t.start, t.end)),
+            .map(|t| t.with_id(base + t.id)),
     );
     let fixed = simulate(inst, plan, &stream, policy, false);
     let hybrid = simulate(inst, plan, &stream, policy, true);
@@ -187,7 +187,7 @@ pub fn simulate_with_hints(
         if allow_overflow {
             // rent the cheapest admitting type
             let b = (0..sim_inst.n_types())
-                .filter(|&b| sim_inst.node_types[b].admits(&stream[u].demand))
+                .filter(|&b| sim_inst.node_types[b].admits(stream[u].peak()))
                 .min_by(|&a, &b| {
                     sim_inst.node_types[a]
                         .cost
@@ -251,7 +251,7 @@ mod tests {
         let mut stream = tr.tasks.clone();
         let base = stream.len() as u64;
         stream.extend(tr.tasks.iter().map(|t| {
-            crate::model::Task::new(base + t.id, t.demand.clone(), t.start, t.end)
+            t.with_id(base + t.id)
         }));
         let fixed = simulate(&tr, &rep.solution, &stream, FitPolicy::FirstFit, false);
         let hybrid = simulate(&tr, &rep.solution, &stream, FitPolicy::FirstFit, true);

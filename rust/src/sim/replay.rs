@@ -33,21 +33,26 @@ pub fn replay(inst: &Instance, sol: &Solution) -> ReplayReport {
     let t_len = inst.horizon as usize;
     let n_nodes = sol.nodes.len();
 
-    // event lists: (slot, node, task, is_start)
+    // event lists: (slot, node, (task, segment), is_start) — one
+    // arrival/departure pair per demand *segment*, so shaped tasks load
+    // and unload their exact per-window demand (flat tasks emit the same
+    // two events they always did)
     #[derive(Clone, Copy)]
     struct Ev {
         slot: u32,
         node: usize,
         task: usize,
+        seg: usize,
         start: bool,
     }
     let mut events: Vec<Ev> = Vec::with_capacity(inst.n_tasks() * 2);
     for (u, assigned) in sol.assignment.iter().enumerate() {
         let Some(node) = assigned else { continue };
-        let t = &inst.tasks[u];
-        events.push(Ev { slot: t.start, node: *node, task: u, start: true });
-        // departure processed after the last active slot
-        events.push(Ev { slot: t.end + 1, node: *node, task: u, start: false });
+        for (si, seg) in inst.tasks[u].segments().iter().enumerate() {
+            events.push(Ev { slot: seg.start, node: *node, task: u, seg: si, start: true });
+            // departure processed after the last active slot
+            events.push(Ev { slot: seg.end + 1, node: *node, task: u, seg: si, start: false });
+        }
     }
     // departures before arrivals at the same slot
     events.sort_by_key(|e| (e.slot, e.start));
@@ -62,11 +67,14 @@ pub fn replay(inst: &Instance, sol: &Solution) -> ReplayReport {
     for slot in 0..t_len as u32 {
         while ei < events.len() && events[ei].slot == slot {
             let ev = events[ei];
-            let dem = &inst.tasks[ev.task].demand;
+            let dem = &inst.tasks[ev.task].segments()[ev.seg].demand;
             let sign = if ev.start { 1.0 } else { -1.0 };
             for d in 0..dims {
                 load[ev.node * dims + d] += sign * dem[d];
             }
+            // contiguous segments depart/arrive at the same slot
+            // (departures first), so the running count stays the number
+            // of active *tasks*
             if ev.start {
                 active += 1;
             } else {
@@ -153,6 +161,47 @@ mod tests {
         assert!(rep.overloads > 0);
         // replay agrees with the verifier
         assert!(sol.verify(&inst).is_err());
+    }
+
+    #[test]
+    fn shaped_tasks_replay_per_segment() {
+        use crate::model::DemandSeg;
+        // complementary shapes share a node at exactly full utilization;
+        // the replay tracks the segment demands, not the peaks
+        let mk = |id, hi_first: bool| {
+            let (a, b) = if hi_first { (0.8, 0.2) } else { (0.2, 0.8) };
+            Task::piecewise(
+                id,
+                vec![
+                    DemandSeg { start: 0, end: 1, demand: vec![a] },
+                    DemandSeg { start: 2, end: 3, demand: vec![b] },
+                ],
+            )
+        };
+        let inst = Instance::new(
+            vec![mk(0, true), mk(1, false)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            4,
+        );
+        let mut sol = Solution::new(2);
+        sol.nodes.push(PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0, 1] });
+        sol.assignment = vec![Some(0), Some(0)];
+        let rep = replay(&inst, &sol);
+        assert_eq!(rep.overloads, 0, "{rep:?}");
+        for s in &rep.samples {
+            assert!((s.peak_node_utilization - 1.0).abs() < 1e-12, "{s:?}");
+            assert_eq!(s.active_tasks, 2);
+        }
+        assert_eq!(rep.peak_tasks, 2);
+        // and an actual per-slot overlap of high windows is caught
+        let inst2 = Instance::new(
+            vec![mk(0, true), mk(1, true)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            4,
+        );
+        let rep2 = replay(&inst2, &sol);
+        assert!(rep2.overloads > 0);
+        assert!(sol.verify(&inst2).is_err());
     }
 
     #[test]

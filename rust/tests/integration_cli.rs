@@ -141,6 +141,48 @@ fn gen_solve_lb_roundtrip() {
     assert!(!ok);
     assert!(stderr.contains("invalid workload spec"), "{stderr}");
 
+    // acceptance: a shaped workload solves end-to-end through the CLI
+    // with verify-clean output (solve verifies and replays) and a valid
+    // certified lower bound line
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--workload", "mixed:services=20,m=3,shape=diurnal", "--seed", "2",
+        "--algo", "lp+fill+ls", "--backend", "native", "--replay",
+    ]);
+    assert!(ok, "shaped solve failed: {stderr}");
+    assert!(stdout.contains("cluster cost"), "{stdout}");
+    assert!(stdout.contains("0 overloads"), "{stdout}");
+    assert!(stdout.contains("lower bound"), "{stdout}");
+    // shape=flat is accepted and identical in meaning to omitting it
+    let (ok, _, stderr) = run(&[
+        "solve", "--workload", "duty:services=10,m=3,shape=flat", "--seed", "2",
+        "--algo", "penalty-map", "--backend", "native",
+    ]);
+    assert!(ok, "{stderr}");
+    // bad shapes teach the grammar
+    let (ok, _, stderr) = run(&["gen", "--workload", "synth:shape=wavy", "--out", "/dev/null"]);
+    assert!(!ok);
+    assert!(stderr.contains("not flat, ramp, diurnal or spike"), "{stderr}");
+
+    // csv import family: gen a trace, re-import it as a workload, solve
+    let csv2 = dir.join("import.csv");
+    let (ok, _, stderr) = run(&[
+        "gen", "--workload", "synth:n=30,m=3,dims=2", "--seed", "5",
+        "--out", dir.join("csvsrc.json").to_str().unwrap(),
+        "--csv", csv2.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    let spec = format!("csv:path={}", csv2.to_str().unwrap());
+    let (ok, stdout, stderr) = run(&[
+        "solve", "--workload", &spec, "--algo", "penalty-map-f",
+        "--backend", "native", "--replay",
+    ]);
+    assert!(ok, "csv solve failed: {stderr}");
+    assert!(stdout.contains("0 overloads"), "{stdout}");
+    // a missing file fails like a parse-style error, not a panic
+    let (ok, _, stderr) = run(&["solve", "--workload", "csv:path=/nonexistent.csv"]);
+    assert!(!ok);
+    assert!(stderr.contains("error"), "{stderr}");
+
     let (ok, stdout, _) = run(&["info"]);
     assert!(ok);
     assert!(stdout.contains("tlrs"));
@@ -162,10 +204,15 @@ fn workloads_catalog_and_stress() {
     // catalog lists every family with keys and the grammar
     let (ok, stdout, _) = run(&["workloads"]);
     assert!(ok);
-    for fam in ["synth", "gct", "mixed", "burst", "batch", "deadline", "duty", "spiky", "waves"] {
+    for fam in
+        ["synth", "gct", "mixed", "burst", "batch", "deadline", "duty", "spiky", "waves", "csv"]
+    {
         assert!(stdout.contains(fam), "catalog missing {fam}: {stdout}");
     }
     assert!(stdout.contains("spec grammar"), "{stdout}");
+    // the shape grammar is taught by the catalog and on every family
+    assert!(stdout.contains("shape"), "{stdout}");
+    assert!(stdout.contains("flat | ramp | diurnal | spike"), "{stdout}");
 
     // --names / --smoke are machine-readable (one entry per line)
     let (ok, names, _) = run(&["workloads", "--names"]);

@@ -62,6 +62,75 @@ fn tcp_roundtrip_pipelined() {
 }
 
 #[test]
+fn shaped_workload_served_with_valid_bound() {
+    // acceptance: a shaped spec solves end-to-end through the service
+    // with verify-clean output (the service verifies before answering)
+    // and lower_bound <= cost
+    let (addr, handle) = serve_once();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = Json::obj(vec![
+        ("workload", Json::Str("mixed:services=15,m=3,shape=diurnal".into())),
+        ("seed", Json::Num(4.0)),
+        ("algorithm", Json::Str("lp-map-f".into())),
+    ])
+    .to_string()
+        + "\n";
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(
+        v.get("workload").as_str(),
+        Some("mixed:m=3,services=15,shape=diurnal")
+    );
+    let cost = v.get("cost").as_f64().unwrap();
+    let lb = v.get("lower_bound").as_f64().unwrap();
+    assert!(lb > 0.0 && lb <= cost + 1e-6, "{line}");
+    assert!(v.get("normalized_cost").as_f64().unwrap() >= 1.0 - 1e-6);
+    handle.join().unwrap();
+}
+
+#[test]
+fn shaped_inline_instance_roundtrips_segments() {
+    use tlrs::model::{DemandSeg, Instance, NodeType, Task};
+    let (addr, handle) = serve_once();
+    let mut stream = TcpStream::connect(addr).unwrap();
+    // two complementary shaped tasks fit one node — something a
+    // peak-demand model would price at two
+    let mk = |id: u64, hi_first: bool| {
+        let (a, b) = if hi_first { (0.8, 0.2) } else { (0.2, 0.8) };
+        Task::piecewise(
+            id,
+            vec![
+                DemandSeg { start: 0, end: 1, demand: vec![a] },
+                DemandSeg { start: 2, end: 3, demand: vec![b] },
+            ],
+        )
+    };
+    let inst = Instance::new(
+        vec![mk(0, true), mk(1, false)],
+        vec![NodeType::new("a", vec![1.0], 1.0)],
+        4,
+    );
+    let req = Json::obj(vec![
+        ("instance", files::instance_to_json(&inst)),
+        ("algorithm", Json::Str("penalty-map".into())),
+    ])
+    .to_string()
+        + "\n";
+    stream.write_all(req.as_bytes()).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    let v = json::parse(&line).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(v.get("n_nodes").as_f64(), Some(1.0), "{line}");
+    handle.join().unwrap();
+}
+
+#[test]
 fn concurrent_clients_are_serialized_but_served() {
     // the service handles connections sequentially (PJRT client is not
     // Sync) — two queued clients must both get answers

@@ -11,8 +11,42 @@ use tlrs::algo::twophase::{solve_with_mapping, solve_with_mapping_ref};
 use tlrs::io::synth::{generate, CostKind, SynthParams};
 use tlrs::lp::solver::NativePdhgSolver;
 use tlrs::lp::{dual, scaling, MappingLp};
-use tlrs::model::{trim, DenseProfile, Instance, LoadProfile, Profile, Task};
+use tlrs::model::{trim, DemandSeg, DenseProfile, Instance, LoadProfile, Profile, Task};
 use tlrs::util::rng::Rng;
+
+/// Random task over `[s, e]`: flat, or (when `shaped` and the span
+/// allows) piecewise with 2-3 demand segments.
+fn random_task(
+    rng: &mut Rng,
+    id: u64,
+    s: u32,
+    e: u32,
+    dims: usize,
+    dem: (f64, f64),
+    shaped: bool,
+) -> Task {
+    let draw = |rng: &mut Rng| -> Vec<f64> {
+        (0..dims).map(|_| rng.uniform(dem.0, dem.1)).collect()
+    };
+    let span = (e - s + 1) as u64;
+    if !shaped || span < 2 || rng.below(10) < 4 {
+        return Task::new(id, draw(rng), s, e);
+    }
+    let k = 2 + rng.below((span - 1).min(2)) as u32; // 2 or 3 segments
+    let mut cuts: Vec<u32> = (1..k)
+        .map(|_| s + 1 + rng.below(span - 1) as u32)
+        .collect();
+    cuts.sort_unstable();
+    cuts.dedup();
+    let mut segs = Vec::new();
+    let mut lo = s;
+    for &c in &cuts {
+        segs.push(DemandSeg { start: lo, end: c - 1, demand: draw(rng) });
+        lo = c;
+    }
+    segs.push(DemandSeg { start: lo, end: e, demand: draw(rng) });
+    Task::piecewise(id, segs)
+}
 
 /// Random instance parameters spanning the interesting regimes.
 fn random_params(rng: &mut Rng) -> SynthParams {
@@ -98,7 +132,7 @@ fn mapping_respects_admissibility_and_penalties() {
             let pstar = min_penalties(&inst, policy);
             for (u, &b) in mapping.iter().enumerate() {
                 assert!(
-                    inst.node_types[b].admits(&inst.tasks[u].demand),
+                    inst.node_types[b].admits(inst.tasks[u].peak()),
                     "seed {seed}: task {u} mapped to inadmissible type {b}"
                 );
                 assert!(pstar[u].is_finite(), "seed {seed}: task {u}");
@@ -217,8 +251,8 @@ fn indexed_profile_matches_dense_reference() {
             if live.is_empty() || op == 0 {
                 let s = rng.below(t_len as u64) as u32;
                 let e = s + rng.below(t_len as u64 - s as u64) as u32;
-                let dem: Vec<f64> = (0..dims).map(|_| rng.uniform(0.01, 0.4)).collect();
-                let task = Task::new(step, dem, s, e);
+                // shaped tasks exercise the per-segment range operations
+                let task = random_task(&mut rng, step, s, e, dims, (0.01, 0.4), true);
                 // mirror the solvers' invariant: profiles are fits-guarded,
                 // so the clamped (dense/seed) and unclamped (indexed)
                 // similarity computations stay comparable
@@ -235,8 +269,7 @@ fn indexed_profile_matches_dense_reference() {
             } else {
                 let s = rng.below(t_len as u64) as u32;
                 let e = s + rng.below(t_len as u64 - s as u64) as u32;
-                let dem: Vec<f64> = (0..dims).map(|_| rng.uniform(0.01, 0.6)).collect();
-                let probe = Task::new(1_000_000 + step, dem, s, e);
+                let probe = random_task(&mut rng, 1_000_000 + step, s, e, dims, (0.01, 0.6), true);
                 assert_eq!(
                     idx.fits(&probe),
                     dense.fits(&probe),

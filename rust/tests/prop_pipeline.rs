@@ -134,6 +134,79 @@ fn portfolio_race_equals_sequential_fold() {
 }
 
 #[test]
+fn early_abort_is_deterministic_and_cost_preserving() {
+    use tlrs::lp::solver::SimplexSolver;
+    use tlrs::model::NodeType;
+    use tlrs::model::Task;
+
+    // A bound-tight instance: four half-capacity tasks over one slot pack
+    // into exactly two nodes, which is also the LP optimum — so the lp
+    // member finishes *at* the certified bound and later members are
+    // provably unable to beat it.
+    let inst = Instance::new(
+        (0..4).map(|i| Task::new(i, vec![0.5], 0, 1)).collect(),
+        vec![NodeType::new("a", vec![1.0], 1.0)],
+        2,
+    );
+    let tr = trim(&inst).instance;
+    let specs = "lp:ff,penalty:ff,penalty:ff+ls";
+    let portfolio = pipeline::parse_portfolio(specs).unwrap();
+    assert!(portfolio.early_abort);
+
+    // sequential reference: maximal deterministic skipping
+    let seq = portfolio.run_sequential(&tr, &SimplexSolver).unwrap();
+    assert_eq!(seq.reports.len(), 1, "skipped {:?}", seq.skipped);
+    assert_eq!(seq.skipped, vec!["penalty:ff", "penalty:ff+ls"]);
+    assert_eq!(seq.best().label, "lp:ff");
+    assert!((seq.best().cost - 2.0).abs() < 1e-9);
+    assert!(seq.best().solution.verify(&tr).is_ok());
+
+    // the parallel race may let some members through, but the winner —
+    // label and cost — must be identical run after run
+    for _ in 0..4 {
+        let par = portfolio.run(&tr, &SimplexSolver).unwrap();
+        assert_eq!(par.best().label, seq.best().label);
+        assert!((par.best().cost - seq.best().cost).abs() < 1e-12);
+        // every skipped member provably could not have beaten the bound
+        let lb = par.lp.as_ref().unwrap().certified_lb;
+        assert!(par.best().cost <= lb + 1e-9 * lb.abs() + 1e-9);
+        // completed + skipped account for every member, in order
+        assert_eq!(par.reports.len() + par.skipped.len(), 3);
+    }
+
+    // disabling early abort runs everything and lands on the same cost
+    let full = pipeline::parse_portfolio(specs)
+        .unwrap()
+        .with_early_abort(false)
+        .run(&tr, &SimplexSolver)
+        .unwrap();
+    assert_eq!(full.reports.len(), 3);
+    assert!(full.skipped.is_empty());
+    assert!((full.best().cost - seq.best().cost).abs() < 1e-12);
+
+    // on a non-tight instance nothing is ever skipped: heuristic costs sit
+    // strictly above the LP bound, so the race degenerates to the plain
+    // portfolio and matches its sequential fold member-for-member
+    let loose = synth_cases().remove(0).1;
+    let par = pipeline::parse_portfolio("portfolio")
+        .unwrap()
+        .run(&loose, &NativePdhgSolver::default())
+        .unwrap();
+    let seq = pipeline::parse_portfolio("portfolio")
+        .unwrap()
+        .run_sequential(&loose, &NativePdhgSolver::default())
+        .unwrap();
+    assert!(par.skipped.is_empty(), "{:?}", par.skipped);
+    assert!(seq.skipped.is_empty(), "{:?}", seq.skipped);
+    assert_eq!(par.winner, seq.winner);
+    for (a, b) in par.reports.iter().zip(&seq.reports) {
+        assert_eq!(a.label, b.label);
+        assert!((a.cost - b.cost).abs() < 1e-12);
+        assert_identical(&a.solution, &b.solution, &a.label);
+    }
+}
+
+#[test]
 fn previously_unreachable_combo_runs_and_never_hurts() {
     // lp+fill+ls: local search refines every fill candidate, so the
     // raced minimum can only improve on the plain LP-map-F preset

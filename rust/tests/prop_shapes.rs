@@ -1,0 +1,186 @@
+//! Property tests for piecewise demand profiles (the DemandProfile
+//! tentpole): the flat embedding is bit-identical to the pre-profile
+//! model, shaped instances solve end-to-end with certified bounds, and
+//! per-slot verification sees exactly what the profiles say.
+
+use tlrs::algo::pipeline::{self, Portfolio};
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::io::workload;
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, DemandSeg, DenseProfile, Instance, Solution, Task};
+
+fn assert_identical(a: &Solution, b: &Solution, label: &str) {
+    assert_eq!(a.nodes.len(), b.nodes.len(), "{label}: node count");
+    for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+        assert_eq!(x.type_idx, y.type_idx, "{label}: node {i} type");
+        assert_eq!(x.purchase_order, y.purchase_order, "{label}: node {i} order");
+        assert_eq!(x.tasks, y.tasks, "{label}: node {i} tasks");
+    }
+    assert_eq!(a.assignment, b.assignment, "{label}: assignment");
+}
+
+/// Rebuild every task as an explicit single-segment piecewise profile.
+fn single_segment_embedding(inst: &Instance) -> Instance {
+    let tasks = inst
+        .tasks
+        .iter()
+        .map(|u| {
+            Task::try_piecewise(
+                u.id,
+                vec![DemandSeg {
+                    start: u.start,
+                    end: u.end,
+                    demand: u.peak().to_vec(),
+                }],
+            )
+            .expect("valid single segment")
+        })
+        .collect();
+    Instance::new(tasks, inst.node_types.clone(), inst.horizon)
+}
+
+/// Split every flat task into two equal-demand segments (mathematically
+/// the same workload, exercising the multi-segment code paths).
+fn equal_demand_split(inst: &Instance) -> Instance {
+    let tasks = inst
+        .tasks
+        .iter()
+        .map(|u| {
+            if u.span_len() < 2 {
+                return u.clone();
+            }
+            let mid = u.start + u.span_len() / 2;
+            Task::piecewise(
+                u.id,
+                vec![
+                    DemandSeg { start: u.start, end: mid - 1, demand: u.peak().to_vec() },
+                    DemandSeg { start: mid, end: u.end, demand: u.peak().to_vec() },
+                ],
+            )
+        })
+        .collect();
+    Instance::new(tasks, inst.node_types.clone(), inst.horizon)
+}
+
+#[test]
+fn single_segment_embedding_is_bit_identical_across_presets() {
+    let solver = NativePdhgSolver::default();
+    // figure seeds 1..=5 on a shrunken Table-I configuration
+    for seed in 1..=5u64 {
+        let flat = generate(&SynthParams { n: 90, m: 5, ..Default::default() }, seed);
+        let embedded = single_segment_embedding(&flat);
+        // the embedding *is* the flat representation (canonical form)
+        assert_eq!(flat.tasks, embedded.tasks, "seed {seed}");
+        let (tf, te) = (trim(&flat).instance, trim(&embedded).instance);
+        assert_eq!(tf.tasks, te.tasks, "seed {seed}: trim");
+        for spec in ["penalty-map", "penalty-map-f", "lp-map", "lp-map-f", "lp+fill+ls"] {
+            let a = pipeline::parse(spec).unwrap().run(&tf, &solver).unwrap();
+            let b = pipeline::parse(spec).unwrap().run(&te, &solver).unwrap();
+            assert!((a.cost - b.cost).abs() < 1e-12, "seed {seed} {spec}");
+            assert_identical(&a.solution, &b.solution, &format!("seed {seed} {spec}"));
+        }
+    }
+}
+
+#[test]
+fn equal_demand_split_solves_identically_under_first_fit() {
+    use tlrs::algo::penalty_map::{map_tasks, MappingPolicy};
+    use tlrs::algo::placement::FitPolicy;
+    use tlrs::algo::twophase::solve_with_mapping;
+    for seed in 1..=4u64 {
+        let flat = generate(&SynthParams { n: 80, m: 4, ..Default::default() }, seed + 30);
+        let split = equal_demand_split(&flat);
+        let (tf, ts) = (trim(&flat).instance, trim(&split).instance);
+        // peak and average demand are unchanged, so both penalty mappings
+        // agree exactly
+        for policy in [MappingPolicy::HAvg, MappingPolicy::HMax] {
+            assert_eq!(
+                map_tasks(&tf, policy),
+                map_tasks(&ts, policy),
+                "seed {seed} {policy:?}"
+            );
+        }
+        let mapping = map_tasks(&tf, MappingPolicy::HAvg);
+        let a = solve_with_mapping(&tf, &mapping, FitPolicy::FirstFit, false);
+        let b = solve_with_mapping(&ts, &mapping, FitPolicy::FirstFit, false);
+        assert!((a.cost(&tf) - b.cost(&ts)).abs() < 1e-12, "seed {seed}");
+        assert_eq!(a.assignment, b.assignment, "seed {seed}");
+        assert!(b.verify(&ts).is_ok(), "seed {seed}");
+        assert!(b.verify_with::<DenseProfile>(&ts).is_ok(), "seed {seed}");
+    }
+}
+
+#[test]
+fn shaped_instances_solve_with_certified_bounds() {
+    let solver = NativePdhgSolver::default();
+    for spec in [
+        "mixed:services=30,m=4,shape=diurnal",
+        "synth:n=70,m=4,shape=ramp",
+        "gct:n=90,m=5,pool=400,shape=spike",
+    ] {
+        let inst = workload::parse_workload(spec).unwrap().generate(2).unwrap();
+        assert!(
+            inst.tasks.iter().any(|t| !t.is_flat()),
+            "{spec}: nothing shaped"
+        );
+        let tr = trim(&inst).instance;
+        let race = Portfolio::presets()
+            .add(pipeline::parse("lp+fill+ls").unwrap())
+            .run(&tr, &solver)
+            .unwrap();
+        let lb = race.certified_lb().expect("LP members certify a bound");
+        assert!(lb > 0.0, "{spec}");
+        for rep in &race.reports {
+            assert!(rep.solution.verify(&tr).is_ok(), "{spec} {}", rep.label);
+            // independent dense verifier agrees slot-for-slot
+            assert!(
+                rep.solution.verify_with::<DenseProfile>(&tr).is_ok(),
+                "{spec} {}",
+                rep.label
+            );
+            assert!(
+                lb <= rep.cost + 1e-6,
+                "{spec} {}: lower bound {lb} above cost {}",
+                rep.label,
+                rep.cost
+            );
+        }
+    }
+}
+
+#[test]
+fn complementary_shapes_pack_tighter_than_their_peaks() {
+    use tlrs::algo::placement::FitPolicy;
+    use tlrs::algo::twophase::solve_with_mapping;
+    use tlrs::model::NodeType;
+    // n tasks alternate between "high early" and "high late" profiles.
+    // Shaped: each pair shares one node (per-slot load 1.0). Peak-flat:
+    // every task needs most of a node, so the flat relaxation of the same
+    // workload buys ~2x the cluster — the capability the tentpole adds.
+    let mk = |id: u64, hi_first: bool| {
+        let (a, b) = if hi_first { (0.8, 0.2) } else { (0.2, 0.8) };
+        Task::piecewise(
+            id,
+            vec![
+                DemandSeg { start: 0, end: 3, demand: vec![a] },
+                DemandSeg { start: 4, end: 7, demand: vec![b] },
+            ],
+        )
+    };
+    let n = 12u64;
+    let shaped = Instance::new(
+        (0..n).map(|i| mk(i, i % 2 == 0)).collect(),
+        vec![NodeType::new("a", vec![1.0], 1.0)],
+        8,
+    );
+    let peaks = shaped.collapse_timeline(); // every task at its 0.8 peak
+    let mapping = vec![0usize; n as usize];
+    let tr = trim(&shaped).instance;
+    let shaped_sol = solve_with_mapping(&tr, &mapping, FitPolicy::FirstFit, false);
+    assert!(shaped_sol.verify(&tr).is_ok());
+    let flat_sol = solve_with_mapping(&peaks, &mapping, FitPolicy::FirstFit, false);
+    assert!(flat_sol.verify(&peaks).is_ok());
+    assert_eq!(shaped_sol.nodes.len(), (n / 2) as usize, "pairs share nodes");
+    assert_eq!(flat_sol.nodes.len(), n as usize, "peaks cannot share");
+    assert!(shaped_sol.cost(&tr) * 1.9 <= flat_sol.cost(&peaks));
+}

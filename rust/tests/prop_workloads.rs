@@ -17,7 +17,10 @@ const SEEDS: [u64; 3] = [1, 2, 42];
 fn test_specs() -> Vec<String> {
     let mut specs = Vec::new();
     for fam in workload::families() {
-        specs.push(fam.name.to_string());
+        // bare names are valid for every family except csv (path required)
+        if fam.name != "csv" {
+            specs.push(fam.name.to_string());
+        }
         specs.push(fam.smoke_spec.to_string());
         // smoke specs always carry parameters, so extend with ','
         assert!(fam.smoke_spec.contains(':'), "{}", fam.name);
@@ -34,6 +37,7 @@ fn test_specs() -> Vec<String> {
 
 #[test]
 fn every_family_is_deterministic_feasible_and_in_horizon() {
+    workload::csv_smoke_fixture();
     for spec_str in test_specs() {
         let source = workload::parse_workload(&spec_str)
             .unwrap_or_else(|e| panic!("'{spec_str}': {e:#}"));
@@ -52,23 +56,39 @@ fn every_family_is_deterministic_feasible_and_in_horizon() {
                 assert!(t.end < a.horizon, "'{spec_str}' seed {seed}: task beyond horizon");
                 assert_eq!(t.dims(), dims, "'{spec_str}' seed {seed}");
                 assert!(
-                    t.demand.iter().all(|&d| d > 0.0 && d <= 1.0),
-                    "'{spec_str}' seed {seed}: demand out of (0, 1]"
+                    t.peak().iter().all(|&d| d > 0.0 && d <= 1.0),
+                    "'{spec_str}' seed {seed}: peak demand out of (0, 1]"
                 );
+                // every segment's demand obeys the same bounds and never
+                // exceeds the task's peak
+                for seg in t.segments() {
+                    for (x, p) in seg.demand.iter().zip(t.peak()) {
+                        assert!(
+                            *x > 0.0 && x <= p,
+                            "'{spec_str}' seed {seed}: segment demand {x} vs peak {p}"
+                        );
+                    }
+                }
             }
             for nt in &a.node_types {
                 assert!(nt.cost > 0.0, "'{spec_str}' seed {seed}: free node-type");
             }
         }
-        // distinct seeds give distinct instances (families are random)
+        // distinct seeds give distinct instances (families are random; the
+        // csv importer's tasks are fixed by the file, but its catalog is
+        // still seed-drawn)
         let a = source.generate(SEEDS[0]).unwrap();
         let b = source.generate(SEEDS[1]).unwrap();
-        assert_ne!(a.tasks, b.tasks, "'{spec_str}': seed-independent generator");
+        assert!(
+            a.tasks != b.tasks || a.node_types != b.node_types,
+            "'{spec_str}': seed-independent generator"
+        );
     }
 }
 
 #[test]
 fn specs_round_trip_through_render() {
+    workload::csv_smoke_fixture();
     for spec_str in test_specs() {
         let spec = WorkloadSpec::parse(&spec_str).unwrap();
         let rendered = spec.render();
@@ -169,15 +189,20 @@ fn every_registered_family_reaches_a_solver() {
     use tlrs::algo::placement::FitPolicy;
     use tlrs::lp::solver::NativePdhgSolver;
     use tlrs::model::trim;
+    workload::csv_smoke_fixture();
     for fam in workload::families() {
-        let inst = workload::parse_workload(fam.smoke_spec).unwrap().generate(3).unwrap();
-        let tr = trim(&inst).instance;
-        let rep = Pipeline::new()
-            .map(Penalty::both())
-            .fit(FitPolicy::FirstFit)
-            .run(&tr, &NativePdhgSolver::default())
-            .unwrap();
-        assert!(rep.solution.verify(&tr).is_ok(), "{}", fam.name);
-        assert!(rep.cost > 0.0, "{}", fam.name);
+        // the flat smoke spec and one shaped variant both reach a solver
+        for spec in [fam.smoke_spec.to_string(), format!("{},shape=diurnal", fam.smoke_spec)]
+        {
+            let inst = workload::parse_workload(&spec).unwrap().generate(3).unwrap();
+            let tr = trim(&inst).instance;
+            let rep = Pipeline::new()
+                .map(Penalty::both())
+                .fit(FitPolicy::FirstFit)
+                .run(&tr, &NativePdhgSolver::default())
+                .unwrap();
+            assert!(rep.solution.verify(&tr).is_ok(), "'{spec}'");
+            assert!(rep.cost > 0.0, "'{spec}'");
+        }
     }
 }

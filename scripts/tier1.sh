@@ -21,22 +21,45 @@ echo "== tier1: cargo test -q =="
 cargo test -q
 
 echo "== tier1: workload generator smoke =="
-# gen + solve every registered family through the spec parser, so an
-# unregistered, panicking or infeasible family fails the gate
+# gen + solve every registered family through the spec parser — once flat
+# and once with a piecewise demand shape — so an unregistered, panicking
+# or infeasible family (or a shape regression) fails the gate
 TLRS=target/release/tlrs
 GEN_DIR=$(mktemp -d)
 trap 'rm -rf "$GEN_DIR"' EXIT
+# the csv family's smoke spec imports this fixture trace
+"$TLRS" gen --workload synth:n=40,m=3,dims=2 --seed 1 \
+    --out "$GEN_DIR/csv-fixture.json" --csv target/tlrs-smoke-trace.csv
+rm "$GEN_DIR/csv-fixture.json"
 "$TLRS" workloads --smoke | while read -r spec; do
     fam="${spec%%:*}"
     echo "-- $spec"
     "$TLRS" gen --workload "$spec" --seed 1 --out "$GEN_DIR/$fam.json"
     "$TLRS" solve --input "$GEN_DIR/$fam.json" --algo lp+fill --backend native \
         > /dev/null
+    echo "-- $spec,shape=diurnal"
+    "$TLRS" gen --workload "$spec,shape=diurnal" --seed 1 \
+        --out "$GEN_DIR/$fam-shaped.json"
+    "$TLRS" solve --input "$GEN_DIR/$fam-shaped.json" --algo lp+fill \
+        --backend native > /dev/null
 done
 N_FAMILIES=$("$TLRS" workloads --names | wc -l)
-N_GENERATED=$(ls "$GEN_DIR" | wc -l)
+N_GENERATED=$(ls "$GEN_DIR" | grep -v -- -shaped | wc -l)
 test "$N_FAMILIES" -eq "$N_GENERATED"
-echo "smoked $N_GENERATED workload families"
+N_SHAPED=$(ls "$GEN_DIR" | grep -c -- -shaped)
+test "$N_FAMILIES" -eq "$N_SHAPED"
+echo "smoked $N_GENERATED workload families (flat + shaped)"
+
+echo "== tier1: csv trace import round-trip =="
+# export a generated trace to CSV, re-import it through the csv family,
+# and solve the import — the importer must reproduce the tasks verbatim
+"$TLRS" gen --workload synth:n=60,m=4,dims=2 --seed 2 \
+    --out "$GEN_DIR/rt-src.json" --csv "$GEN_DIR/rt-trace.csv"
+"$TLRS" gen --workload "csv:path=$GEN_DIR/rt-trace.csv,m=4" --seed 2 \
+    --out "$GEN_DIR/rt-import.json"
+"$TLRS" solve --workload "csv:path=$GEN_DIR/rt-trace.csv,m=4" --seed 2 \
+    --algo lp+fill --backend native > /dev/null
+rm "$GEN_DIR/rt-src.json" "$GEN_DIR/rt-trace.csv" "$GEN_DIR/rt-import.json"
 
 echo "== tier1: placement bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
