@@ -1,0 +1,181 @@
+//! Session benchmarks: incremental delta re-solve vs from-scratch
+//! re-solve on a GCT-like trace (week-long timeline, real machine
+//! shapes).
+//!
+//! A ≥100-delta admit/retire/reshape stream is replayed through a
+//! `PlanSession` (pure incremental mode — the speedup being measured is
+//! repair + LB refresh + per-slot verify against what a sessionless
+//! deployment must do per delta: rebuild and re-solve the whole
+//! instance). Writes `BENCH_session.json` with
+//! `incremental_vs_scratch_speedup` so the win is tracked PR over PR.
+//! `TLRS_BENCH_QUICK=1` shrinks the workload for the tier-1 smoke.
+
+use tlrs::algo::pipeline::parse_portfolio;
+use tlrs::coordinator::session::{PlanSession, SessionConfig};
+use tlrs::io::gct_like;
+use tlrs::lp::solver::NativePdhgSolver;
+use tlrs::model::{trim, Delta, Instance, Task};
+use tlrs::util::bench::{fmt_ns, BenchResult};
+use tlrs::util::rng::Rng;
+use tlrs::util::stats;
+
+/// Deterministic admit/retire/reshape stream over the live id set.
+fn delta_stream(inst: &Instance, spare: &[Task], seed: u64, len: usize) -> Vec<Delta> {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<u64> = inst.tasks.iter().map(|t| t.id).collect();
+    let mut spare_iter = spare.iter();
+    let mut out = Vec::with_capacity(len);
+    for _ in 0..len {
+        let roll = rng.below(10);
+        if (roll < 5 || live.len() < 20) && spare_iter.len() > 0 {
+            let t = spare_iter.next().unwrap().clone();
+            live.push(t.id);
+            out.push(Delta::Admit { tasks: vec![t] });
+        } else if roll < 8 {
+            let i = rng.below(live.len() as u64) as usize;
+            let id = live.swap_remove(i);
+            out.push(Delta::Retire { ids: vec![id] });
+        } else {
+            let i = rng.below(live.len() as u64) as usize;
+            let id = live[i];
+            // shrink-or-grow reshape within the trace's demand bounds
+            let f = rng.uniform(0.5, 1.5);
+            let u = inst.tasks.iter().chain(spare).find(|t| t.id == id);
+            let span = u.map(|t| (t.start, t.end)).unwrap_or((0, 0));
+            let demand: Vec<f64> = u
+                .map(|t| t.peak().iter().map(|d| (d * f).clamp(2e-3, 0.25)).collect())
+                .unwrap_or_else(|| vec![0.05, 0.05]);
+            out.push(Delta::Reshape { task: Task::new(id, demand, span.0, span.1) });
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== session benches ==");
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let n = if quick { 160 } else { 260 };
+    let n_deltas = 120; // the acceptance floor is a >= 100-delta stream
+    let scratch_samples = if quick { 3 } else { 8 };
+    let algo = "lp-map-f";
+
+    // GCT-like scenario on the full week timeline, plus spare trace
+    // tasks for admits (re-id'd above the live range)
+    let trace = gct_like::generate_trace(2 * n + 400, 7);
+    let mut inst = trace.sample_scenario(n, 8, 1);
+    tlrs::model::CostModel::homogeneous(inst.dims()).apply(&mut inst.node_types);
+    let spare: Vec<Task> = trace
+        .sample_scenario(2 * n, 8, 2)
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(i, t)| t.with_id((n + i) as u64))
+        .collect();
+    let deltas = delta_stream(&inst, &spare, 99, n_deltas);
+
+    // --- incremental: one session, the whole delta stream ---------------
+    let cfg = SessionConfig { algo: algo.into(), escalate_ratio: None, ..Default::default() };
+    let t_open = std::time::Instant::now();
+    let (mut session, open) = PlanSession::open(inst.clone(), cfg).unwrap();
+    println!(
+        "session open: {} tasks, cost {:.4}, LB {:.4} in {}",
+        open.n_tasks,
+        open.cost,
+        open.lower_bound,
+        fmt_ns(t_open.elapsed().as_nanos() as f64)
+    );
+    let mut per_delta_ns: Vec<f64> = Vec::with_capacity(n_deltas);
+    let mut checkpoints: Vec<(usize, Instance)> = Vec::new();
+    for (i, d) in deltas.iter().enumerate() {
+        let t0 = std::time::Instant::now();
+        let rep = session.apply(d).unwrap(); // apply() verifies per slot
+        per_delta_ns.push(t0.elapsed().as_nanos() as f64);
+        assert!(
+            rep.cost >= rep.lower_bound - 1e-6,
+            "delta {i}: cost {} below certified LB {}",
+            rep.cost,
+            rep.lower_bound
+        );
+        if (i + 1) % (n_deltas / scratch_samples).max(1) == 0 {
+            checkpoints.push((i, session.instance().clone()));
+        }
+    }
+    let incr_mean = stats::mean(&per_delta_ns);
+    let incremental = BenchResult {
+        name: format!("session/incremental-delta gct n~{n} T=2016"),
+        mean_ns: incr_mean,
+        std_ns: stats::stddev(&per_delta_ns),
+        min_ns: stats::min(&per_delta_ns),
+        samples: per_delta_ns.len(),
+        iters_per_sample: 1,
+    };
+    println!("{}", incremental.report_line());
+    let final_cost = session.cost();
+    let final_lb = session.lower_bound();
+    println!(
+        "final: cost {final_cost:.4}, LB {final_lb:.4} (x{:.3}), {} nodes, {} tasks",
+        final_cost / final_lb.max(1e-12),
+        session.n_nodes(),
+        session.n_tasks()
+    );
+
+    // --- from-scratch: full one-shot re-solve at sampled checkpoints ----
+    // (what a sessionless deployment pays per delta: trim + portfolio)
+    let solver = NativePdhgSolver::default();
+    let mut scratch_ns: Vec<f64> = Vec::with_capacity(checkpoints.len());
+    for (i, snapshot) in &checkpoints {
+        let t0 = std::time::Instant::now();
+        let tr = trim(snapshot).instance;
+        let race = parse_portfolio(algo).unwrap().run(&tr, &solver).unwrap();
+        let rep = race.best();
+        rep.solution.verify(&tr).unwrap();
+        scratch_ns.push(t0.elapsed().as_nanos() as f64);
+        let _ = i;
+    }
+    let scratch_mean = stats::mean(&scratch_ns);
+    let scratch = BenchResult {
+        name: format!("session/from-scratch-resolve gct n~{n}"),
+        mean_ns: scratch_mean,
+        std_ns: stats::stddev(&scratch_ns),
+        min_ns: stats::min(&scratch_ns),
+        samples: scratch_ns.len(),
+        iters_per_sample: 1,
+    };
+    println!("{}", scratch.report_line());
+
+    let speedup = scratch_mean / incr_mean.max(1.0);
+    println!(
+        "incremental vs from-scratch speedup: {speedup:.1}x \
+         (scratch {} -> incremental {})",
+        fmt_ns(scratch_mean),
+        fmt_ns(incr_mean)
+    );
+    if speedup < 5.0 {
+        eprintln!("WARNING: incremental speedup {speedup:.1}x below the 5x target");
+    }
+
+    let (nd, repairs, resolves) = session.delta_counts();
+    let json = tlrs::util::json::Json::obj(vec![
+        ("bench", tlrs::util::json::Json::Str("session".into())),
+        ("quick", tlrs::util::json::Json::Bool(quick)),
+        ("n", tlrs::util::json::Json::Num(n as f64)),
+        ("n_deltas", tlrs::util::json::Json::Num(nd as f64)),
+        ("repairs", tlrs::util::json::Json::Num(repairs as f64)),
+        ("resolves", tlrs::util::json::Json::Num(resolves as f64)),
+        ("final_cost", tlrs::util::json::Json::Num(final_cost)),
+        ("final_lower_bound", tlrs::util::json::Json::Num(final_lb)),
+        (
+            "incremental_vs_scratch_speedup",
+            tlrs::util::json::Json::Num(speedup),
+        ),
+        (
+            "results",
+            tlrs::util::json::Json::Arr(vec![incremental.to_json(), scratch.to_json()]),
+        ),
+    ]);
+    let path = "BENCH_session.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_session.json");
+    println!("wrote {path}");
+}

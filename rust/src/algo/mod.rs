@@ -11,6 +11,7 @@ pub mod online;
 pub mod penalty_map;
 pub mod pipeline;
 pub mod placement;
+pub mod repair;
 pub mod segregate;
 pub mod twophase;
 

@@ -8,34 +8,33 @@
 //! Serves as an ablation anchor: how much of the offline algorithms' win
 //! comes from seeing the whole workload up front.
 
+use anyhow::{Context, Result};
+
 use crate::model::{Instance, Solution};
 
-use super::penalty_map::{map_tasks, MappingPolicy};
-use super::placement::{select_node, to_solution, FitPolicy, NodeState};
+use super::penalty_map::{best_type, MappingPolicy};
+use super::placement::FitPolicy;
+use super::repair::Pool;
 
 /// Place tasks online (start order, ties by index). Cross-type reuse is
 /// allowed on arrival — the online player may use any open node.
-pub fn solve_online(inst: &Instance, policy: FitPolicy) -> Solution {
-    let mapping = map_tasks(inst, MappingPolicy::HAvg);
+///
+/// Runs on the shared [`Pool`] repair engine, so an arrival no node-type
+/// admits is an `Err` instead of a process-aborting assert — this path
+/// serves inside the planning service, where bad input must never take
+/// the process down.
+pub fn solve_online(inst: &Instance, policy: FitPolicy) -> Result<Solution> {
     let mut order: Vec<usize> = (0..inst.n_tasks()).collect();
     order.sort_by_key(|&u| (inst.tasks[u].start, u));
 
-    let mut nodes: Vec<NodeState> = Vec::new();
-    let mut seq = 0usize;
+    let mut pool = Pool::new();
     for u in order {
-        match select_node(inst, &nodes, u, policy) {
-            Some(i) => nodes[i].add(inst, u),
-            None => {
-                let b = mapping[u];
-                let mut node = NodeState::new(inst, b, seq);
-                seq += 1;
-                assert!(node.fits(inst, u), "mapping must admit task {u}");
-                node.add(inst, u);
-                nodes.push(node);
-            }
-        }
+        let b = best_type(inst, u, MappingPolicy::HAvg)
+            .with_context(|| format!("task {} (id {}) fits no node-type", u, inst.tasks[u].id))?;
+        pool.admit_or_buy(inst, u, b, policy)
+            .with_context(|| format!("online admission of task {u}"))?;
     }
-    to_solution(inst, vec![nodes])
+    Ok(pool.to_solution(inst))
 }
 
 #[cfg(test)]
@@ -51,10 +50,24 @@ mod tests {
             let inst = generate(&SynthParams { n: 100, m: 5, ..Default::default() }, seed);
             let tr = trim(&inst).instance;
             for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
-                let sol = solve_online(&tr, policy);
+                let sol = solve_online(&tr, policy).unwrap();
                 assert!(sol.verify(&tr).is_ok(), "seed {seed} {policy:?}");
             }
         }
+    }
+
+    #[test]
+    fn inadmissible_arrival_is_an_error_not_an_abort() {
+        use crate::model::{NodeType, Task};
+        // the second arrival exceeds every capacity: a service must get
+        // an Err back, not a process abort
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.5], 0, 0), Task::new(1, vec![1.5], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            1,
+        );
+        let err = solve_online(&inst, FitPolicy::FirstFit).unwrap_err().to_string();
+        assert!(err.contains("fits no node-type"), "{err}");
     }
 
     #[test]
@@ -66,7 +79,7 @@ mod tests {
         for seed in 0..5u64 {
             let inst = generate(&SynthParams { n: 150, m: 6, ..Default::default() }, seed + 10);
             let tr = trim(&inst).instance;
-            online_total += solve_online(&tr, FitPolicy::FirstFit).cost(&tr);
+            online_total += solve_online(&tr, FitPolicy::FirstFit).unwrap().cost(&tr);
             offline_total += penalty_map_best(&tr, true).cost(&tr);
         }
         assert!(

@@ -34,6 +34,22 @@ pub fn h_avg_matrix(inst: &Instance) -> Vec<f64> {
     h
 }
 
+/// One penalty cell `p(u|B) = cost(B) * h(u|B)` — the single source of
+/// the mapping rule shared by the matrix (preset paths) and the per-task
+/// argmin (online/session admit paths). `+inf` when node-type `b` cannot
+/// admit the task alone (a peak-demand property).
+#[inline]
+pub fn penalty(inst: &Instance, u: usize, b: usize, policy: MappingPolicy) -> f64 {
+    if !inst.node_types[b].admits(inst.tasks[u].peak()) {
+        return f64::INFINITY;
+    }
+    let h = match policy {
+        MappingPolicy::HAvg => inst.h_avg(u, b),
+        MappingPolicy::HMax => inst.h_max(u, b),
+    };
+    inst.node_types[b].cost * h
+}
+
 /// Penalty matrix p[u*m + b] for the chosen policy. Inadmissible pairs
 /// (demand exceeding capacity in some dimension) get +inf so the argmin
 /// never maps a task onto a node-type it cannot fit alone.
@@ -42,14 +58,7 @@ pub fn penalty_matrix(inst: &Instance, policy: MappingPolicy) -> Vec<f64> {
     let mut p = vec![f64::INFINITY; n * m];
     for u in 0..n {
         for b in 0..m {
-            if !inst.node_types[b].admits(inst.tasks[u].peak()) {
-                continue;
-            }
-            let h = match policy {
-                MappingPolicy::HAvg => inst.h_avg(u, b),
-                MappingPolicy::HMax => inst.h_max(u, b),
-            };
-            p[u * m + b] = inst.node_types[b].cost * h;
+            p[u * m + b] = penalty(inst, u, b, policy);
         }
     }
     p
@@ -63,6 +72,23 @@ pub fn min_penalties(inst: &Instance, policy: MappingPolicy) -> Vec<f64> {
         .chunks(m)
         .map(|row| row.iter().copied().fold(f64::INFINITY, f64::min))
         .collect()
+}
+
+/// Penalty-argmin node-type for a single task — the per-arrival variant
+/// of [`map_tasks`] (identical strict-less / first-wins rule), used by
+/// the incremental admit path where recomputing the full n×m matrix per
+/// delta would be wasteful. `None` when no node-type admits the task.
+pub fn best_type(inst: &Instance, u: usize, policy: MappingPolicy) -> Option<usize> {
+    let mut best = f64::INFINITY;
+    let mut arg = None;
+    for b in 0..inst.n_types() {
+        let p = penalty(inst, u, b, policy);
+        if p < best {
+            best = p;
+            arg = Some(b);
+        }
+    }
+    arg
 }
 
 /// The penalty-based mapping: task -> argmin_B p(u|B).
@@ -152,6 +178,24 @@ mod tests {
             1,
         );
         assert_eq!(map_tasks(&inst, MappingPolicy::HAvg), vec![1]);
+    }
+
+    #[test]
+    fn best_type_matches_map_tasks() {
+        let inst = inst();
+        for policy in [MappingPolicy::HAvg, MappingPolicy::HMax] {
+            let full = map_tasks(&inst, policy);
+            for u in 0..inst.n_tasks() {
+                assert_eq!(best_type(&inst, u, policy), Some(full[u]), "{policy:?} task {u}");
+            }
+        }
+        // a task nothing admits maps to None instead of panicking
+        let tight = Instance::new(
+            vec![Task::new(0, vec![2.0], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            1,
+        );
+        assert_eq!(best_type(&tight, 0, MappingPolicy::HAvg), None);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Incremental repair engine: a live pool of purchased nodes whose load
+//! profiles survive across admissions, retirements and reshapes.
+//!
+//! The one-shot solvers rebuild every node profile per solve; a plan
+//! *session* (and the admission simulator, and the online baseline)
+//! instead keeps [`NodeState`]s alive and repairs only the nodes a delta
+//! touches: an admit is one first-fit scan (O(|nodes|·D) fast-accepts +
+//! one O(D·log T) insert), a retirement one profile subtraction, a
+//! reshape an eviction followed by a re-admit. This is the code path the
+//! planning service's `delta` verb, `sim::autoscale` and
+//! `algo::online::solve_online` all share — the sim exercises exactly
+//! what the service serves.
+//!
+//! Admission failures are `Result` errors (or honest `None`s), never
+//! asserts: these entry points run inside a long-lived service process
+//! fed by untrusted deltas, where aborting on bad input is unacceptable.
+
+use anyhow::{ensure, Result};
+
+use crate::model::{Instance, PlacedNode, Solution};
+
+use super::placement::{select_node, FitPolicy, NodeState};
+
+/// A live pool of purchased nodes over one instance's timeline. Node
+/// order is purchase order (what first-fit scans), and `purchase_order`
+/// labels survive node drops so reports stay stable.
+#[derive(Clone, Default)]
+pub struct Pool {
+    pub nodes: Vec<NodeState>,
+    /// Next purchase sequence number.
+    seq: usize,
+}
+
+impl Pool {
+    pub fn new() -> Self {
+        Pool { nodes: Vec::new(), seq: 0 }
+    }
+
+    /// Rebuild the live pool of an existing solution (profiles restored
+    /// from the task lists). Node order and purchase numbers are kept.
+    pub fn from_solution(inst: &Instance, sol: &Solution) -> Self {
+        let nodes: Vec<NodeState> = sol
+            .nodes
+            .iter()
+            .map(|n| NodeState::from_placed(inst, n, n.purchase_order))
+            .collect();
+        let seq = nodes.iter().map(|n| n.purchase_order + 1).max().unwrap_or(0);
+        Pool { nodes, seq }
+    }
+
+    /// The purchased-but-empty cluster of a plan: same node multiset, no
+    /// load — the admission simulator's starting state. `inst` here is
+    /// the instance whose tasks will be streamed in (it only needs to
+    /// share the plan's node-type catalog and horizon).
+    pub fn empty_from_plan(inst: &Instance, plan: &Solution) -> Self {
+        let nodes: Vec<NodeState> = plan
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| NodeState::new(inst, n.type_idx, i))
+            .collect();
+        let seq = nodes.len();
+        Pool { nodes, seq }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total purchase cost of the pool.
+    pub fn cost(&self, inst: &Instance) -> f64 {
+        self.nodes.iter().map(|b| inst.node_types[b.type_idx].cost).sum()
+    }
+
+    /// Admit task `u` into an already-purchased node: the `hint` node is
+    /// tried first (a scheduler executing its own plan admits planned
+    /// load by construction), then the policy's scan. Returns the node
+    /// index, or `None` when nothing fits — never buys.
+    pub fn try_admit(
+        &mut self,
+        inst: &Instance,
+        u: usize,
+        policy: FitPolicy,
+        hint: Option<usize>,
+    ) -> Option<usize> {
+        if let Some(h) = hint {
+            if h < self.nodes.len() && self.nodes[h].fits(inst, u) {
+                self.nodes[h].add(inst, u);
+                return Some(h);
+            }
+        }
+        let i = select_node(inst, &self.nodes, u, policy)?;
+        self.nodes[i].add(inst, u);
+        Some(i)
+    }
+
+    /// Purchase a fresh node of type `b` and place task `u` in it. Errors
+    /// (instead of asserting) when the task cannot fit even an empty node
+    /// of that type — the service-path contract.
+    pub fn buy_and_place(&mut self, inst: &Instance, u: usize, b: usize) -> Result<usize> {
+        ensure!(b < inst.n_types(), "node-type {b} does not exist");
+        let mut node = NodeState::new(inst, b, self.seq);
+        ensure!(
+            node.fits(inst, u),
+            "task {} (id {}) does not fit an empty '{}' node",
+            u,
+            inst.tasks[u].id,
+            inst.node_types[b].name
+        );
+        self.seq += 1;
+        node.add(inst, u);
+        self.nodes.push(node);
+        Ok(self.nodes.len() - 1)
+    }
+
+    /// [`Pool::try_admit`] falling back to a purchase of type `b`.
+    pub fn admit_or_buy(
+        &mut self,
+        inst: &Instance,
+        u: usize,
+        b: usize,
+        policy: FitPolicy,
+    ) -> Result<usize> {
+        match self.try_admit(inst, u, policy, None) {
+            Some(i) => Ok(i),
+            None => self.buy_and_place(inst, u, b),
+        }
+    }
+
+    /// Evict task `u` from node `node_idx` (profile subtraction).
+    pub fn evict(&mut self, inst: &Instance, u: usize, node_idx: usize) {
+        self.nodes[node_idx].remove(inst, u);
+    }
+
+    /// Drop nodes that hold no tasks (a retirement may empty a node; the
+    /// session sheds the spend immediately). Returns how many were
+    /// dropped. Node indices compact; purchase numbers are preserved.
+    pub fn drop_empty(&mut self) -> usize {
+        let before = self.nodes.len();
+        self.nodes.retain(|n| !n.tasks.is_empty());
+        before - self.nodes.len()
+    }
+
+    /// Remap the task indices stored in every node (after the session
+    /// compacts its task vector over a retirement). `new_idx[u]` is the
+    /// task's new index, `usize::MAX` for removed tasks — callers must
+    /// have evicted those first.
+    pub fn remap_tasks(&mut self, new_idx: &[usize]) {
+        for node in self.nodes.iter_mut() {
+            for u in node.tasks.iter_mut() {
+                debug_assert!(new_idx[*u] != usize::MAX, "remapping an evicted task");
+                *u = new_idx[*u];
+            }
+        }
+    }
+
+    /// Per-task node assignment derived from the node task lists.
+    pub fn assignment(&self, n_tasks: usize) -> Vec<Option<usize>> {
+        let mut a = vec![None; n_tasks];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &u in &node.tasks {
+                a[u] = Some(i);
+            }
+        }
+        a
+    }
+
+    /// Snapshot the pool as a [`Solution`] (what `verify`, costing and
+    /// the wire responses consume).
+    pub fn to_solution(&self, inst: &Instance) -> Solution {
+        let mut sol = Solution::new(inst.n_tasks());
+        for node in &self.nodes {
+            let idx = sol.nodes.len();
+            for &u in &node.tasks {
+                sol.assignment[u] = Some(idx);
+            }
+            sol.nodes.push(PlacedNode {
+                type_idx: node.type_idx,
+                purchase_order: node.purchase_order,
+                tasks: node.tasks.clone(),
+            });
+        }
+        sol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NodeType, Task};
+
+    fn inst() -> Instance {
+        Instance::new(
+            vec![
+                Task::new(0, vec![0.6], 0, 2),
+                Task::new(1, vec![0.6], 1, 3),
+                Task::new(2, vec![0.6], 4, 5),
+                Task::new(3, vec![0.3], 0, 5),
+            ],
+            vec![NodeType::new("a", vec![1.0], 2.0)],
+            6,
+        )
+    }
+
+    #[test]
+    fn admit_buy_evict_roundtrip() {
+        let inst = inst();
+        let mut pool = Pool::new();
+        assert_eq!(pool.try_admit(&inst, 0, FitPolicy::FirstFit, None), None);
+        pool.buy_and_place(&inst, 0, 0).unwrap();
+        // task 1 overlaps task 0 at 1.2 > 1.0 -> needs a second node
+        assert_eq!(pool.admit_or_buy(&inst, 1, 0, FitPolicy::FirstFit).unwrap(), 1);
+        // task 2 reuses node 0 after task 0's span
+        assert_eq!(pool.try_admit(&inst, 2, FitPolicy::FirstFit, None), Some(0));
+        assert_eq!(pool.len(), 2);
+        assert!((pool.cost(&inst) - 4.0).abs() < 1e-12);
+        let sol = pool.to_solution(&inst);
+        assert_eq!(sol.assignment[..3], [Some(0), Some(1), Some(0)]);
+
+        // evicting task 1 empties node 1; drop_empty sheds it
+        pool.evict(&inst, 1, 1);
+        assert_eq!(pool.drop_empty(), 1);
+        assert_eq!(pool.len(), 1);
+        assert!((pool.cost(&inst) - 2.0).abs() < 1e-12);
+        // the freed overlap now fits node 0? no — task 0 still loads it
+        assert_eq!(pool.try_admit(&inst, 1, FitPolicy::FirstFit, None), None);
+    }
+
+    #[test]
+    fn hint_is_tried_first() {
+        let inst = inst();
+        let mut pool = Pool::new();
+        pool.buy_and_place(&inst, 0, 0).unwrap(); // node 0: task 0
+        pool.buy_and_place(&inst, 3, 0).unwrap(); // node 1: task 3 (0.3)
+        // task 2 fits both; the hint overrides first-fit's node 0
+        assert_eq!(pool.try_admit(&inst, 2, FitPolicy::FirstFit, Some(1)), Some(1));
+        // stale hints (out of range / full) fall back to the scan
+        pool.evict(&inst, 2, 1);
+        assert_eq!(pool.try_admit(&inst, 2, FitPolicy::FirstFit, Some(9)), Some(0));
+    }
+
+    #[test]
+    fn buy_of_unfitting_task_is_an_error_not_a_panic() {
+        let inst = Instance::new(
+            vec![Task::new(0, vec![1.5], 0, 0)],
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            1,
+        );
+        let mut pool = Pool::new();
+        let err = pool.buy_and_place(&inst, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("does not fit an empty"), "{err}");
+        assert!(pool.is_empty());
+    }
+
+    #[test]
+    fn from_solution_restores_profiles() {
+        let inst = inst();
+        let mut pool = Pool::new();
+        for u in 0..4 {
+            pool.admit_or_buy(&inst, u, 0, FitPolicy::FirstFit).unwrap();
+        }
+        let sol = pool.to_solution(&inst);
+        assert!(sol.verify(&inst).is_ok());
+        let rebuilt = Pool::from_solution(&inst, &sol);
+        assert_eq!(rebuilt.len(), pool.len());
+        // the rebuilt profiles refuse exactly what the live ones refuse
+        for (a, b) in rebuilt.nodes.iter().zip(&pool.nodes) {
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.purchase_order, b.purchase_order);
+            assert!((a.peak_utilization() - b.peak_utilization()).abs() < 1e-12);
+        }
+        assert_eq!(rebuilt.assignment(4), sol.assignment);
+    }
+
+    #[test]
+    fn remap_compacts_after_retirement() {
+        let inst = inst();
+        let mut pool = Pool::new();
+        for u in 0..4 {
+            pool.admit_or_buy(&inst, u, 0, FitPolicy::FirstFit).unwrap();
+        }
+        let assignment = pool.assignment(4);
+        // retire task 1 (its own node): evict, compact indices 2->1, 3->2
+        pool.evict(&inst, 1, assignment[1].unwrap());
+        pool.drop_empty();
+        let new_idx = [0, usize::MAX, 1, 2];
+        pool.remap_tasks(&new_idx);
+        let a = pool.assignment(3);
+        assert!(a.iter().all(|x| x.is_some()));
+        let tasks: Vec<usize> = pool.nodes.iter().flat_map(|n| n.tasks.clone()).collect();
+        let mut sorted = tasks.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+    }
+}

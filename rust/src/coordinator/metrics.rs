@@ -1,14 +1,70 @@
-//! Lightweight metrics registry: counters and wall-time accumulators,
-//! shared across the planner's worker threads.
+//! Lightweight metrics registry: counters and latency histograms, shared
+//! across the planner's worker threads and the service's session verbs.
+//!
+//! Timers used to fold every observation into a bare (total, count)
+//! pair, which erased the distribution — a per-delta latency series with
+//! one slow escalation looked identical to a uniformly slow one. Each
+//! timer now keeps count/total/max plus a bounded ring of recent samples
+//! from which `report()` and the service `stats` verb surface p50/p95.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::util::stats::percentile;
+
+/// How many recent observations a timer retains for percentile
+/// estimation. Bounded so a long-lived service cannot grow without
+/// limit; p50/p95 are over this sliding window, max is over all time.
+const TIMER_WINDOW: usize = 512;
+
+/// One timer's accumulated state.
+#[derive(Clone, Debug, Default)]
+pub struct TimerStat {
+    pub total: f64,
+    pub count: u64,
+    /// Largest observation ever recorded.
+    pub max: f64,
+    /// Ring buffer of the most recent observations (cap TIMER_WINDOW).
+    window: Vec<f64>,
+    /// Next ring slot to overwrite once the window is full.
+    pos: usize,
+}
+
+impl TimerStat {
+    fn observe(&mut self, seconds: f64) {
+        self.total += seconds;
+        self.count += 1;
+        self.max = self.max.max(seconds);
+        if self.window.len() < TIMER_WINDOW {
+            self.window.push(seconds);
+        } else {
+            self.window[self.pos] = seconds;
+            self.pos = (self.pos + 1) % TIMER_WINDOW;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count > 0 {
+            self.total / self.count as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Percentile over the retained window (p in [0, 100]).
+    pub fn pct(&self, p: f64) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.window, p)
+    }
+}
+
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
-    timers: Mutex<BTreeMap<String, (f64, u64)>>,
+    timers: Mutex<BTreeMap<String, TimerStat>>,
 }
 
 impl Metrics {
@@ -35,18 +91,35 @@ impl Metrics {
     /// Record an externally measured duration (e.g. a stage time reported
     /// by a pipeline run on another thread).
     pub fn observe(&self, name: &str, seconds: f64) {
-        let mut timers = self.timers.lock().unwrap();
-        let e = timers.entry(name.to_string()).or_insert((0.0, 0));
-        e.0 += seconds;
-        e.1 += 1;
+        self.timers
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .observe(seconds);
     }
 
     pub fn timer_total(&self, name: &str) -> f64 {
-        self.timers.lock().unwrap().get(name).map(|e| e.0).unwrap_or(0.0)
+        self.timers.lock().unwrap().get(name).map(|e| e.total).unwrap_or(0.0)
     }
 
     pub fn timer_count(&self, name: &str) -> u64 {
-        self.timers.lock().unwrap().get(name).map(|e| e.1).unwrap_or(0)
+        self.timers.lock().unwrap().get(name).map(|e| e.count).unwrap_or(0)
+    }
+
+    /// Full distribution snapshot for one timer.
+    pub fn timer_stats(&self, name: &str) -> Option<TimerStat> {
+        self.timers.lock().unwrap().get(name).cloned()
+    }
+
+    /// Snapshot every counter (sorted by name).
+    pub fn counters_snapshot(&self) -> Vec<(String, u64)> {
+        self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect()
+    }
+
+    /// Snapshot every timer (sorted by name).
+    pub fn timers_snapshot(&self) -> Vec<(String, TimerStat)> {
+        self.timers.lock().unwrap().iter().map(|(k, v)| (k.clone(), v.clone())).collect()
     }
 
     /// Human-readable dump, sorted by key.
@@ -55,10 +128,16 @@ impl Metrics {
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {k:<40} {v}\n"));
         }
-        for (k, (total, count)) in self.timers.lock().unwrap().iter() {
-            let avg_ms = if *count > 0 { total / *count as f64 * 1e3 } else { 0.0 };
+        for (k, t) in self.timers.lock().unwrap().iter() {
             out.push_str(&format!(
-                "timer   {k:<40} total {total:>9.3}s  n={count:<6} avg {avg_ms:.2}ms\n"
+                "timer   {k:<40} total {:>9.3}s  n={:<6} avg {:.2}ms  p50 {:.2}ms  \
+                 p95 {:.2}ms  max {:.2}ms\n",
+                t.total,
+                t.count,
+                t.mean() * 1e3,
+                t.pct(50.0) * 1e3,
+                t.pct(95.0) * 1e3,
+                t.max * 1e3
             ));
         }
         out
@@ -81,6 +160,54 @@ mod tests {
         assert!(m.timer_total("work") >= 0.0);
         let rep = m.report();
         assert!(rep.contains("solves") && rep.contains("work"));
+        assert!(rep.contains("p50") && rep.contains("p95") && rep.contains("max"));
+    }
+
+    #[test]
+    fn timers_keep_distribution_shape() {
+        let m = Metrics::new();
+        // 99 fast observations and one slow one: the old (total, count)
+        // fold reported avg ~0.03s and nothing else; the histogram keeps
+        // the tail visible
+        for _ in 0..99 {
+            m.observe("delta", 0.01);
+        }
+        m.observe("delta", 2.0);
+        let t = m.timer_stats("delta").unwrap();
+        assert_eq!(t.count, 100);
+        assert!((t.max - 2.0).abs() < 1e-12);
+        assert!((t.pct(50.0) - 0.01).abs() < 1e-9, "p50 {}", t.pct(50.0));
+        assert!(t.pct(95.0) <= 2.0 + 1e-12);
+        assert!(t.mean() > 0.01 && t.mean() < 0.05);
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(TIMER_WINDOW * 3) {
+            m.observe("w", i as f64);
+        }
+        let t = m.timer_stats("w").unwrap();
+        assert_eq!(t.count as usize, TIMER_WINDOW * 3);
+        assert_eq!(t.window.len(), TIMER_WINDOW);
+        // the retained window is the most recent observations, so p50
+        // reflects the tail of the stream, max the whole stream
+        assert!(t.pct(50.0) >= TIMER_WINDOW as f64);
+        assert!((t.max - (TIMER_WINDOW * 3 - 1) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshots_are_sorted_and_complete() {
+        let m = Metrics::new();
+        m.inc("b", 1);
+        m.inc("a", 2);
+        m.observe("t1", 0.5);
+        let c = m.counters_snapshot();
+        assert_eq!(c, vec![("a".into(), 2), ("b".into(), 1)]);
+        let t = m.timers_snapshot();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].0, "t1");
+        assert_eq!(t[0].1.count, 1);
     }
 
     #[test]

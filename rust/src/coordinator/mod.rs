@@ -1,7 +1,8 @@
-//! L3 coordination: configuration, planning, metrics, and the TCP
-//! planning service.
+//! L3 coordination: configuration, planning, metrics, stateful plan
+//! sessions, and the TCP planning service.
 
 pub mod config;
 pub mod metrics;
 pub mod planner;
 pub mod service;
+pub mod session;

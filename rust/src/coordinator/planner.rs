@@ -16,6 +16,7 @@ use crate::runtime::ArtifactSolver;
 
 use super::config::Backend;
 use super::metrics::Metrics;
+use super::session::SessionRegistry;
 
 /// One algorithm's evaluation on one instance.
 #[derive(Clone, Debug)]
@@ -65,10 +66,13 @@ impl EvalRow {
 }
 
 /// Planner: owns the (optional) artifact engine and dispatches solves.
+/// Also hosts the plan-session registry, shared by every service
+/// connection (sessions outlive the connection that opened them).
 pub struct Planner {
     backend: Backend,
     artifact: Option<Arc<ArtifactSolver>>,
     pub metrics: Arc<Metrics>,
+    pub sessions: SessionRegistry,
 }
 
 impl Planner {
@@ -86,7 +90,12 @@ impl Planner {
             },
             _ => None,
         };
-        Ok(Planner { backend, artifact, metrics: Arc::new(Metrics::new()) })
+        Ok(Planner {
+            backend,
+            artifact,
+            metrics: Arc::new(Metrics::new()),
+            sessions: SessionRegistry::new(),
+        })
     }
 
     /// Pick the solver for a (trimmed) instance shape and report its name.

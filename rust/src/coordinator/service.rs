@@ -1,6 +1,8 @@
 //! The planning service: a line-delimited JSON-over-TCP request loop.
 //!
-//! Request (one line):
+//! ## One-shot solves (the legacy request shape, unchanged)
+//!
+//! A request without an `"op"` field is a one-shot solve:
 //!   {"instance": {<io::files instance format>}, "algorithm": "lp-map-f"}
 //! or, generating the workload server-side through the shared registry:
 //!   {"workload": "gct:n=500,m=10,priced", "seed": 3, "algorithm": ...}
@@ -26,19 +28,55 @@
 //!    "stages": [{"stage": "...", "seconds": ...}, ...]}
 //! or {"ok": false, "error": "..."}.
 //!
+//! ## Plan sessions (the `"op"` verb layer)
+//!
+//! A request with an `"op"` field speaks to the stateful session layer
+//! (`coordinator::session`): open a plan once, then answer workload
+//! *deltas* incrementally instead of re-solving from scratch.
+//!
+//!   {"op": "open", "instance"|"workload": ..., ["seed": S,]
+//!    ["algorithm": <spec>,] ["escalate": 1.5 | "off",] ["fit": "ff"|"sim"]}
+//!       -> {"ok": true, "op": "open", "session": <id>, "cost": ...,
+//!           "lower_bound": ..., "n_tasks": ..., "n_nodes": ...}
+//!   {"op": "delta", "session": <id>, "deltas": <delta> | [<delta>...]}
+//!       applies each delta in order; see `io::delta::DELTA_GRAMMAR` for
+//!       the delta objects (admit / retire / reshape / reprice). Each is
+//!       answered incrementally — untouched placements kept, affected
+//!       nodes repaired — escalating to a full warm-started re-solve
+//!       when the incremental cost drifts past `escalate` × the
+//!       refreshed certified LB (the knob set at open; default 1.5,
+//!       "off" disables). Every delta's answer is per-slot verified.
+//!       -> {"ok": true, "op": "delta", "applied": [{"op", "decision":
+//!           "repair"|"resolve", "cost", "lower_bound", ...}...], ...}
+//!       On a mid-batch error the response is {"ok": false, ...} and
+//!       names how many deltas of the batch were already applied (they
+//!       stay applied — deltas are not transactional across a batch).
+//!   {"op": "query", "session": <id>, "delta": <delta>}
+//!       what-if: prices the delta on a copy of the session without
+//!       committing it.
+//!   {"op": "close", "session": <id>}   -> final summary, frees the id.
+//!   {"op": "stats"}                    -> `Metrics::report()` counters
+//!       and latency histograms (p50/p95/max) plus open-session count —
+//!       the deployed server's introspection endpoint.
+//!
+//! Sessions are shared across connections (per-session locking) and
+//! capped at `session::MAX_SESSIONS`.
+//!
 //! Python never serves requests; this loop is the deployable L3 artifact.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::io::delta as iodelta;
 use crate::io::files;
-use crate::model::trim;
+use crate::model::{trim, Instance};
 use crate::util::json::{self, Json};
 
 use super::planner::Planner;
+use super::session::{self, DeltaReport, PlanSession, SessionConfig};
 
 /// Handle one request line; always returns a JSON response line.
 pub fn handle_request(planner: &Planner, line: &str) -> String {
@@ -54,7 +92,33 @@ pub fn handle_request(planner: &Planner, line: &str) -> String {
 
 fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
     let req = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
-    // either an inline instance or a server-side generated workload
+    match req.get("op") {
+        // no 'op': the legacy one-shot solve, byte-identical to pre-
+        // session behavior
+        Json::Null => handle_solve(planner, &req),
+        op => {
+            let op = op
+                .as_str()
+                .context("'op' must be a string (open|delta|query|close|stats)")?;
+            match op {
+                "open" => op_open(planner, &req),
+                "delta" => op_delta(planner, &req),
+                "query" => op_query(planner, &req),
+                "close" => op_close(planner, &req),
+                "stats" => op_stats(planner),
+                other => anyhow::bail!(
+                    "unknown op '{other}' (session verbs: open, delta, query, close, \
+                     stats; omit 'op' for a one-shot solve)"
+                ),
+            }
+        }
+    }
+}
+
+/// Resolve the instance a request operates on: inline `instance` or a
+/// server-side generated `workload` (+ `seed`). Returns the workload
+/// label/seed for response echo when generated.
+fn resolve_instance(req: &Json) -> Result<(Instance, Option<(String, u64)>)> {
     let mut workload_used: Option<(String, u64)> = None;
     let inst = match (req.get("instance"), req.get("workload")) {
         (Json::Null, Json::Null) => {
@@ -77,6 +141,12 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
         }
         _ => anyhow::bail!("request has both 'instance' and 'workload'"),
     };
+    Ok((inst, workload_used))
+}
+
+/// The legacy one-shot solve path (requests without an 'op' field).
+fn handle_solve(planner: &Planner, req: &Json) -> Result<Json> {
+    let (inst, workload_used) = resolve_instance(req)?;
     anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
     let t0 = std::time::Instant::now();
@@ -162,6 +232,235 @@ fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
         }
     }
     Ok(Json::obj(fields))
+}
+
+// ----- session verbs ------------------------------------------------------
+
+/// One per-delta report as a wire object.
+fn delta_report_json(rep: &DeltaReport) -> Json {
+    let mut fields = vec![
+        ("op", Json::Str(rep.op.to_string())),
+        ("decision", Json::Str(rep.decision.as_str().to_string())),
+        ("cost", Json::Num(rep.cost)),
+        ("lower_bound", Json::Num(rep.lower_bound)),
+        ("n_tasks", Json::Num(rep.n_tasks as f64)),
+        ("n_nodes", Json::Num(rep.n_nodes as f64)),
+        ("seconds", Json::Num(rep.seconds)),
+    ];
+    if let Some(reason) = &rep.reason {
+        fields.push(("reason", Json::Str(reason.clone())));
+    }
+    Json::obj(fields)
+}
+
+/// Session config from request knobs (`algorithm`, `escalate`, `fit`).
+fn session_config(req: &Json) -> Result<SessionConfig> {
+    let mut cfg = SessionConfig::default();
+    if let Some(algo) = req.get("algorithm").as_str() {
+        cfg.algo = algo.to_string();
+    }
+    match req.get("escalate") {
+        Json::Null => {}
+        Json::Num(r) => {
+            anyhow::ensure!(
+                r.is_finite() && *r >= 1.0,
+                "escalate ratio must be >= 1, got {r}"
+            );
+            cfg.escalate_ratio = Some(*r);
+        }
+        Json::Str(s) => cfg.escalate_ratio = session::parse_escalate(s)?,
+        _ => anyhow::bail!("'escalate' must be a ratio >= 1 or \"off\""),
+    }
+    match req.get("fit") {
+        Json::Null => {}
+        Json::Str(s) => cfg.fit = session::parse_fit(s)?,
+        _ => anyhow::bail!("'fit' must be \"ff\" or \"sim\""),
+    }
+    Ok(cfg)
+}
+
+fn session_id(req: &Json) -> Result<u64> {
+    Ok(req
+        .get("session")
+        .as_usize()
+        .context("'session' must be the id returned by open")? as u64)
+}
+
+fn session_handle(
+    planner: &Planner,
+    req: &Json,
+) -> Result<(u64, Arc<std::sync::Mutex<PlanSession>>)> {
+    let id = session_id(req)?;
+    let handle = planner
+        .sessions
+        .get(id)
+        .ok_or_else(|| anyhow!("no open session {id}"))?;
+    Ok((id, handle))
+}
+
+fn op_open(planner: &Planner, req: &Json) -> Result<Json> {
+    // cheap early reject: the cap must bound *compute*, not just memory —
+    // the authoritative re-check happens inside sessions.insert()
+    anyhow::ensure!(
+        planner.sessions.count() < session::MAX_SESSIONS,
+        "too many open sessions ({}); close one first",
+        session::MAX_SESSIONS
+    );
+    let (inst, workload_used) = resolve_instance(req)?;
+    let cfg = session_config(req)?;
+    let algo = cfg.algo.clone();
+    let (session, open) =
+        planner.metrics.time("session_open", || PlanSession::open(inst, cfg))?;
+    let id = planner.sessions.insert(session)?;
+    planner.metrics.inc("sessions_opened", 1);
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("open".into())),
+        ("session", Json::Num(id as f64)),
+        ("algorithm", Json::Str(algo)),
+        ("winner", Json::Str(open.label.clone())),
+        ("cost", Json::Num(open.cost)),
+        ("lower_bound", Json::Num(open.lower_bound)),
+        ("n_tasks", Json::Num(open.n_tasks as f64)),
+        ("n_nodes", Json::Num(open.n_nodes as f64)),
+        ("seconds", Json::Num(open.seconds)),
+    ];
+    if let Some((label, seed)) = workload_used {
+        fields.push(("workload", Json::Str(label)));
+        fields.push(("seed", Json::Num(seed as f64)));
+    }
+    Ok(Json::obj(fields))
+}
+
+fn op_delta(planner: &Planner, req: &Json) -> Result<Json> {
+    let (id, handle) = session_handle(planner, req)?;
+    let deltas_json = match (req.get("deltas"), req.get("delta")) {
+        (Json::Null, Json::Null) => anyhow::bail!(
+            "the delta op needs a 'deltas' field (one delta object or an array)"
+        ),
+        (Json::Null, d) => d,
+        (d, _) => d,
+    };
+    let deltas = iodelta::deltas_from_json(deltas_json)?;
+    let mut session = handle.lock().unwrap();
+    let mut applied = Vec::with_capacity(deltas.len());
+    for (i, d) in deltas.iter().enumerate() {
+        let rep = session.apply(d).map_err(|e| {
+            anyhow!(
+                "delta {i} ({}): {e:#} — the {} earlier delta(s) of this batch \
+                 stay applied",
+                d.op(),
+                i
+            )
+        })?;
+        planner.metrics.inc("session_deltas", 1);
+        planner.metrics.inc(
+            match rep.decision {
+                session::Decision::Repair => "session_deltas_incremental",
+                session::Decision::Resolve => "session_deltas_resolved",
+            },
+            1,
+        );
+        planner.metrics.observe("session_delta", rep.seconds);
+        planner.metrics.observe(&format!("session_delta.{}", rep.op), rep.seconds);
+        applied.push(delta_report_json(&rep));
+    }
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("delta".into())),
+        ("session", Json::Num(id as f64)),
+        ("applied", Json::Arr(applied)),
+        ("cost", Json::Num(session.cost())),
+        ("lower_bound", Json::Num(session.lower_bound())),
+        ("n_tasks", Json::Num(session.n_tasks() as f64)),
+        ("n_nodes", Json::Num(session.n_nodes() as f64)),
+    ]))
+}
+
+fn op_query(planner: &Planner, req: &Json) -> Result<Json> {
+    let (id, handle) = session_handle(planner, req)?;
+    let delta_json = match req.get("delta") {
+        Json::Null => anyhow::bail!("the query op needs a 'delta' field (one delta object)"),
+        d => d,
+    };
+    let delta = iodelta::delta_from_json(delta_json)?;
+    let session = handle.lock().unwrap();
+    let current = session.cost();
+    let rep = session.quote(&delta)?;
+    planner.metrics.inc("session_queries", 1);
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("query".into())),
+        ("session", Json::Num(id as f64)),
+        ("cost", Json::Num(current)),
+        ("cost_if", Json::Num(rep.cost)),
+        ("delta_cost", Json::Num(rep.cost - current)),
+        ("would", delta_report_json(&rep)),
+    ]))
+}
+
+fn op_close(planner: &Planner, req: &Json) -> Result<Json> {
+    let id = session_id(req)?;
+    let handle = planner
+        .sessions
+        .close(id)
+        .ok_or_else(|| anyhow!("no open session {id}"))?;
+    let session = handle.lock().unwrap();
+    let (n_deltas, repairs, resolves) = session.delta_counts();
+    planner.metrics.inc("sessions_closed", 1);
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("close".into())),
+        ("session", Json::Num(id as f64)),
+        ("cost", Json::Num(session.cost())),
+        ("lower_bound", Json::Num(session.lower_bound())),
+        ("n_tasks", Json::Num(session.n_tasks() as f64)),
+        ("deltas", Json::Num(n_deltas as f64)),
+        ("repairs", Json::Num(repairs as f64)),
+        ("resolves", Json::Num(resolves as f64)),
+    ]))
+}
+
+/// `{"op": "stats"}` — the deployed server's introspection endpoint:
+/// every counter, every latency histogram (p50/p95/max over the recent
+/// window), open-session count, and the human-readable report text.
+fn op_stats(planner: &Planner) -> Result<Json> {
+    let counters = Json::Obj(
+        planner
+            .metrics
+            .counters_snapshot()
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect(),
+    );
+    let timers = Json::Obj(
+        planner
+            .metrics
+            .timers_snapshot()
+            .into_iter()
+            .map(|(k, t)| {
+                (
+                    k,
+                    Json::obj(vec![
+                        ("count", Json::Num(t.count as f64)),
+                        ("total", Json::Num(t.total)),
+                        ("mean", Json::Num(t.mean())),
+                        ("p50", Json::Num(t.pct(50.0))),
+                        ("p95", Json::Num(t.pct(95.0))),
+                        ("max", Json::Num(t.max)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("stats".into())),
+        ("counters", counters),
+        ("timers", timers),
+        ("sessions_open", Json::Num(planner.sessions.count() as f64)),
+        ("report", Json::Str(planner.metrics.report())),
+    ]))
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7077"). Connections are
@@ -321,6 +620,155 @@ mod tests {
             ("workload", Json::Str("synth".into())),
         ]);
         let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn legacy_solve_response_shape_is_unchanged() {
+        // pre-session responses must stay byte-compatible: exactly this
+        // key set, nothing session-related leaking in
+        let p = planner();
+        let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 5);
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        let keys: Vec<&str> = v.as_obj().unwrap().keys().map(String::as_str).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "algorithm",
+                "backend",
+                "cost",
+                "lower_bound",
+                "n_nodes",
+                "nodes_per_type",
+                "normalized_cost",
+                "ok",
+                "seconds",
+                "stages"
+            ],
+            "{v:?}"
+        );
+    }
+
+    #[test]
+    fn session_verbs_roundtrip() {
+        let p = planner();
+        // open on a server-side generated workload
+        let open = Json::obj(vec![
+            ("op", Json::Str("open".into())),
+            ("workload", Json::Str("synth:n=30,m=3,dims=2".into())),
+            ("seed", Json::Num(2.0)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+            ("escalate", Json::Num(1.5)),
+        ]);
+        let v = json::parse(&handle_request(&p, &open.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("op").as_str(), Some("open"));
+        let sid = v.get("session").as_usize().unwrap();
+        let open_cost = v.get("cost").as_f64().unwrap();
+        assert!(v.get("lower_bound").as_f64().unwrap() <= open_cost + 1e-6);
+        assert_eq!(v.get("n_tasks").as_usize(), Some(30));
+
+        // query a retire without committing
+        let query = format!(
+            r#"{{"op":"query","session":{sid},"delta":{{"op":"retire","ids":[0,1]}}}}"#
+        );
+        let v = json::parse(&handle_request(&p, &query)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert!(v.get("cost_if").as_f64().unwrap() <= open_cost + 1e-9);
+        assert!(v.get("delta_cost").as_f64().unwrap() <= 1e-9);
+
+        // the query did not commit: a delta batch still sees 30 tasks
+        let batch = format!(
+            r#"{{"op":"delta","session":{sid},"deltas":[
+                {{"op":"admit","tasks":[{{"id":900,"demand":[0.1,0.1],"start":0,"end":3}}]}},
+                {{"op":"reshape","id":900,"demand":[0.2,0.05],"start":0,"end":2}},
+                {{"op":"retire","ids":[900]}}]}}"#
+        );
+        let v = json::parse(&handle_request(&p, &batch)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        let applied = v.get("applied").as_arr().unwrap();
+        assert_eq!(applied.len(), 3);
+        assert_eq!(applied[0].get("op").as_str(), Some("admit"));
+        assert_eq!(applied[0].get("n_tasks").as_usize(), Some(31));
+        assert_eq!(applied[2].get("n_tasks").as_usize(), Some(30));
+        for a in applied {
+            let cost = a.get("cost").as_f64().unwrap();
+            let lb = a.get("lower_bound").as_f64().unwrap();
+            assert!(lb <= cost + 1e-6, "{a:?}");
+            assert!(a.get("decision").as_str().is_some());
+        }
+
+        // a bad delta mid-batch reports partial application; earlier
+        // deltas stay applied
+        let bad = format!(
+            r#"{{"op":"delta","session":{sid},"deltas":[
+                {{"op":"admit","tasks":[{{"id":901,"demand":[0.1,0.1],"start":0,"end":3}}]}},
+                {{"op":"retire","ids":[424242]}}]}}"#
+        );
+        let v = json::parse(&handle_request(&p, &bad)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        let err = v.get("error").as_str().unwrap();
+        assert!(err.contains("delta 1") && err.contains("stay applied"), "{err}");
+
+        // close reports the summary and frees the id
+        let close = format!(r#"{{"op":"close","session":{sid}}}"#);
+        let v = json::parse(&handle_request(&p, &close)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("n_tasks").as_usize(), Some(31)); // 901 stayed
+        assert_eq!(v.get("deltas").as_usize(), Some(4));
+        let v = json::parse(&handle_request(&p, &close)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("no open session"));
+    }
+
+    #[test]
+    fn stats_op_exposes_counters_and_histograms() {
+        let p = planner();
+        // one legacy solve + one open/close to move the counters
+        let inst = generate(&SynthParams { n: 15, m: 2, ..Default::default() }, 3);
+        let req = Json::obj(vec![("instance", files::instance_to_json(&inst))]);
+        assert!(handle_request(&p, &req.to_string()).contains("\"ok\":true"));
+        let open = Json::obj(vec![
+            ("op", Json::Str("open".into())),
+            ("instance", files::instance_to_json(&inst)),
+        ]);
+        let v = json::parse(&handle_request(&p, &open.to_string())).unwrap();
+        let sid = v.get("session").as_usize().unwrap();
+
+        let v = json::parse(&handle_request(&p, r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        let counters = v.get("counters");
+        assert_eq!(counters.get("service_requests").as_usize(), Some(1));
+        assert_eq!(counters.get("sessions_opened").as_usize(), Some(1));
+        assert_eq!(v.get("sessions_open").as_usize(), Some(1));
+        let timers = v.get("timers");
+        let open_t = timers.get("session_open");
+        assert_eq!(open_t.get("count").as_usize(), Some(1));
+        assert!(open_t.get("p95").as_f64().unwrap() >= 0.0);
+        assert!(open_t.get("max").as_f64().unwrap() > 0.0);
+        assert!(v.get("report").as_str().unwrap().contains("sessions_opened"));
+
+        let _ = handle_request(&p, &format!(r#"{{"op":"close","session":{sid}}}"#));
+    }
+
+    #[test]
+    fn unknown_ops_and_bad_session_ids_error() {
+        let p = planner();
+        let v = json::parse(&handle_request(&p, r#"{"op":"frobnicate"}"#)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("unknown op"));
+        let v = json::parse(&handle_request(
+            &p,
+            r#"{"op":"delta","session":99,"deltas":{"op":"retire","ids":[1]}}"#,
+        ))
+        .unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("no open session"));
+        let v = json::parse(&handle_request(&p, r#"{"op":3}"#)).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(false));
     }
 

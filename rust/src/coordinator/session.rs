@@ -1,0 +1,951 @@
+//! Stateful plan sessions: incremental re-solve over a typed delta
+//! stream.
+//!
+//! The paper's cold-start rightsizing answers one frozen workload with
+//! one solve; a deployed planner watches that workload drift — tasks
+//! arrive, retire and reshape (the dynamic arrival/departure setting of
+//! DVBP, arXiv 2304.08648, and Eva's continuous reconfiguration loop,
+//! arXiv 2503.07437). A [`PlanSession`] keeps everything a cheap
+//! incremental answer needs alive between requests:
+//!
+//!   * the live instance (untrimmed — the timeline is fixed at open so
+//!     retained LP iterates stay shape-compatible across deltas),
+//!   * the live node pool ([`crate::algo::repair::Pool`]: load profiles
+//!     that survive deltas, so an admit is one first-fit scan and a
+//!     retirement one profile subtraction),
+//!   * the last PDHG primal/dual iterates keyed by task id, which (a)
+//!     refresh a certified lower bound per delta without an LP solve
+//!     (`dual::certified_bound` repairs any dual point) and (b) warm-
+//!     start the full re-solve when escalation fires.
+//!
+//! Each [`Delta`] is answered by incremental repair — untouched
+//! placements are kept; only affected nodes change — and the session
+//! escalates to a full warm-started re-solve (through the same
+//! pipeline/portfolio API as one-shot solves) only when the incremental
+//! cost drifts past `escalate_ratio` × the refreshed certified LB, or a
+//! catalog change invalidates the placement outright. Every delta ends
+//! with a full per-slot `Solution::verify`: the session never holds an
+//! infeasible plan.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::algo::penalty_map::{best_type, MappingPolicy};
+use crate::algo::pipeline::parse_portfolio;
+use crate::algo::placement::FitPolicy;
+use crate::algo::repair::Pool;
+use crate::lp::dual;
+use crate::lp::pdhg::{self, PdhgOptions, PdhgResult, WarmIterates};
+use crate::lp::scaling;
+use crate::lp::solver::{MappingSolution, MappingSolver};
+use crate::lp::MappingLp;
+use crate::model::{Delta, Instance, Solution, Task};
+
+/// Sessions keep per-slot structures on the *untrimmed* timeline (fixed
+/// horizon = stable LP dual shape); a pathological horizon would make
+/// every per-delta LB refresh scan millions of slots.
+pub const MAX_SESSION_HORIZON: u32 = 100_000;
+
+/// Most live tasks one session may hold (at open or grown via admit
+/// deltas). Untrusted clients drive the delta surface, and every delta
+/// pays O(n·m·D) for the LB refresh — unbounded growth would wedge the
+/// service (cf. `MAX_SPEC_TASKS` on the workload-spec surface).
+pub const MAX_SESSION_TASKS: usize = 1_000_000;
+
+/// How a session answered one delta.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Incremental repair: untouched placements kept, affected nodes
+    /// patched.
+    Repair,
+    /// Full warm-started re-solve (escalation fired or the catalog
+    /// changed shape).
+    Resolve,
+}
+
+impl Decision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Decision::Repair => "repair",
+            Decision::Resolve => "resolve",
+        }
+    }
+}
+
+/// Per-delta answer: what happened, what the plan costs now, and the
+/// refreshed certified lower bound it is measured against.
+#[derive(Clone, Debug)]
+pub struct DeltaReport {
+    pub op: &'static str,
+    pub decision: Decision,
+    /// Why a full re-solve fired (None for repairs).
+    pub reason: Option<String>,
+    pub cost: f64,
+    /// Refreshed certified LB (congestion bound ⊔ re-certified retained
+    /// duals; tight dual bound after a re-solve). 0 for an empty session.
+    pub lower_bound: f64,
+    pub n_tasks: usize,
+    pub n_nodes: usize,
+    pub seconds: f64,
+}
+
+/// Result of opening a session (the initial full solve).
+#[derive(Clone, Debug)]
+pub struct OpenReport {
+    /// Winning pipeline's display label.
+    pub label: String,
+    pub cost: f64,
+    pub lower_bound: f64,
+    pub n_tasks: usize,
+    pub n_nodes: usize,
+    pub seconds: f64,
+}
+
+/// Session tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Pipeline/portfolio spec for full solves (the `--algo` language).
+    pub algo: String,
+    /// Fit policy the incremental repair path scans with.
+    pub fit: FitPolicy,
+    /// Escalate to a full re-solve when `cost > ratio * refreshed LB`;
+    /// `None` never escalates (pure incremental mode).
+    pub escalate_ratio: Option<f64>,
+    /// Warm-start escalated re-solves from the retained PDHG iterates
+    /// (disable to force bit-identical cold re-solves, e.g. in tests).
+    pub warm: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            algo: "lp-map-f".into(),
+            fit: FitPolicy::FirstFit,
+            escalate_ratio: Some(1.5),
+            warm: true,
+        }
+    }
+}
+
+/// Parse an `escalate` knob value: a ratio >= 1, or "off".
+pub fn parse_escalate(s: &str) -> Result<Option<f64>> {
+    if s == "off" {
+        return Ok(None);
+    }
+    let r: f64 = s
+        .parse()
+        .map_err(|_| anyhow!("escalate must be a ratio >= 1 or 'off', got '{s}'"))?;
+    ensure!(r.is_finite() && r >= 1.0, "escalate ratio must be >= 1, got {r}");
+    Ok(Some(r))
+}
+
+/// Parse a repair fit-policy token (the `--algo` fit names).
+pub fn parse_fit(s: &str) -> Result<FitPolicy> {
+    match s {
+        "ff" => Ok(FitPolicy::FirstFit),
+        "sim" => Ok(FitPolicy::SimilarityFit),
+        other => Err(anyhow!("fit must be 'ff' or 'sim', got '{other}'")),
+    }
+}
+
+/// Retained PDHG state, keyed by task id so rows survive index
+/// compaction across retirements.
+#[derive(Clone, Debug)]
+struct WarmState {
+    /// Task ids aligned with the x rows / w entries of `iterates`.
+    ids: Vec<u64>,
+    iterates: WarmIterates,
+    m: usize,
+    t: usize,
+    dims: usize,
+}
+
+/// Native-PDHG mapping solver that (a) resumes from retained iterates
+/// when they fit the LP shape and (b) captures the full result so the
+/// session can retain the new iterates. The portfolio solves its shared
+/// LP on the calling thread, so the capture slot sees no contention.
+struct WarmSolver {
+    opts: PdhgOptions,
+    warm: Option<WarmIterates>,
+    captured: Mutex<Option<PdhgResult>>,
+}
+
+impl WarmSolver {
+    fn new(warm: Option<WarmIterates>) -> Self {
+        WarmSolver { opts: PdhgOptions::default(), warm, captured: Mutex::new(None) }
+    }
+
+    fn take_captured(&self) -> Option<PdhgResult> {
+        self.captured.lock().unwrap().take()
+    }
+}
+
+impl MappingSolver for WarmSolver {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        let r = match &self.warm {
+            Some(w) if w.fits_shape(lp) => pdhg::solve_resume(lp, &self.opts, w),
+            _ => pdhg::solve(lp, &self.opts),
+        };
+        let sol = MappingSolution {
+            x: r.x.clone(),
+            y: r.y.clone(),
+            objective: r.objective,
+            converged: r.converged,
+            iterations: r.iterations,
+        };
+        *self.captured.lock().unwrap() = Some(r);
+        Ok(sol)
+    }
+
+    fn name(&self) -> &'static str {
+        "pdhg-native"
+    }
+}
+
+/// A live plan under a delta stream. See the module doc.
+#[derive(Clone)]
+pub struct PlanSession {
+    inst: Instance,
+    pool: Pool,
+    cfg: SessionConfig,
+    warm: Option<WarmState>,
+    /// Latest refreshed certified lower bound.
+    lb: f64,
+    id_index: BTreeMap<u64, usize>,
+    n_deltas: usize,
+    n_repairs: usize,
+    n_resolves: usize,
+}
+
+impl PlanSession {
+    /// Open a session: full initial solve of `inst` through the existing
+    /// pipeline/portfolio API (`cfg.algo` spec, native PDHG backend so
+    /// iterates can be retained), on the session's fixed untrimmed
+    /// timeline.
+    pub fn open(inst: Instance, cfg: SessionConfig) -> Result<(PlanSession, OpenReport)> {
+        let t0 = Instant::now();
+        ensure!(inst.n_tasks() > 0, "cannot open a session on an empty instance");
+        ensure!(
+            inst.n_tasks() <= MAX_SESSION_TASKS,
+            "session would hold {} tasks, over the {MAX_SESSION_TASKS}-task cap",
+            inst.n_tasks()
+        );
+        ensure!(
+            inst.horizon <= MAX_SESSION_HORIZON,
+            "session horizon {} exceeds the {MAX_SESSION_HORIZON}-slot cap",
+            inst.horizon
+        );
+        ensure!(
+            inst.is_feasible(),
+            "some task fits no node-type alone — the instance is unplannable"
+        );
+        {
+            let mut seen = BTreeMap::new();
+            for (u, t) in inst.tasks.iter().enumerate() {
+                if let Some(prev) = seen.insert(t.id, u) {
+                    anyhow::bail!(
+                        "tasks {prev} and {u} share id {} — session deltas address \
+                         tasks by id, which must be unique",
+                        t.id
+                    );
+                }
+            }
+        }
+        let portfolio = parse_portfolio(&cfg.algo)?;
+        let solver = WarmSolver::new(None);
+        let race = portfolio.run(&inst, &solver)?;
+        let rep = race.best();
+        rep.solution
+            .verify(&inst)
+            .map_err(|v| anyhow!("internal: initial solve infeasible: {v:?}"))?;
+        let pool = Pool::from_solution(&inst, &rep.solution);
+        let id_index = inst.tasks.iter().enumerate().map(|(u, t)| (t.id, u)).collect();
+        let mut session = PlanSession {
+            inst,
+            pool,
+            cfg,
+            warm: None,
+            lb: 0.0,
+            id_index,
+            n_deltas: 0,
+            n_repairs: 0,
+            n_resolves: 0,
+        };
+        session.retain_iterates(solver.take_captured());
+        session.lb = {
+            let lp = MappingLp::from_instance(&session.inst);
+            let mut lb = dual::congestion_bound(&lp);
+            if let Some(clb) = race.certified_lb() {
+                lb = lb.max(clb);
+            }
+            lb
+        };
+        let report = OpenReport {
+            label: rep.label.clone(),
+            cost: session.cost(),
+            lower_bound: session.lb,
+            n_tasks: session.inst.n_tasks(),
+            n_nodes: session.pool.len(),
+            seconds: t0.elapsed().as_secs_f64(),
+        };
+        Ok((session, report))
+    }
+
+    // ----- accessors -------------------------------------------------------
+
+    pub fn instance(&self) -> &Instance {
+        &self.inst
+    }
+
+    pub fn config(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    /// Current plan cost.
+    pub fn cost(&self) -> f64 {
+        self.pool.cost(&self.inst)
+    }
+
+    /// Latest refreshed certified lower bound.
+    pub fn lower_bound(&self) -> f64 {
+        self.lb
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.inst.n_tasks()
+    }
+
+    /// (deltas applied, answered by repair, answered by full re-solve).
+    pub fn delta_counts(&self) -> (usize, usize, usize) {
+        (self.n_deltas, self.n_repairs, self.n_resolves)
+    }
+
+    /// Snapshot the current placement as a [`Solution`].
+    pub fn solution(&self) -> Solution {
+        self.pool.to_solution(&self.inst)
+    }
+
+    // ----- the delta entry point ------------------------------------------
+
+    /// Apply one delta: incremental repair, LB refresh, optional
+    /// escalation to a full warm-started re-solve, per-slot verification.
+    /// On `Err` the delta was rejected *before* any state change (input
+    /// validation happens first), except for internal-invariant errors
+    /// which are labeled as such.
+    pub fn apply(&mut self, delta: &Delta) -> Result<DeltaReport> {
+        let t0 = Instant::now();
+        let force = match delta {
+            Delta::Admit { tasks } => {
+                self.apply_admit(tasks)?;
+                false
+            }
+            Delta::Retire { ids } => {
+                self.apply_retire(ids)?;
+                false
+            }
+            Delta::Reshape { task } => {
+                self.apply_reshape(task)?;
+                false
+            }
+            Delta::Reprice { node_types } => self.apply_reprice(node_types)?,
+        };
+        self.n_deltas += 1;
+        self.refresh_lb();
+
+        let mut decision = Decision::Repair;
+        let mut reason = None;
+        // NOTE: when `force` is set the catalog changed shape, so the
+        // stale pool's type indices may be out of range — do not cost it
+        let drifted = if force {
+            false
+        } else {
+            let cost = self.cost();
+            match self.cfg.escalate_ratio {
+                Some(r) if cost > r * self.lb + 1e-9 => {
+                    reason = Some(format!(
+                        "incremental cost {cost:.4} > {r:.2} x refreshed LB {:.4}",
+                        self.lb
+                    ));
+                    true
+                }
+                _ => false,
+            }
+        };
+        if (force || drifted) && self.inst.n_tasks() > 0 {
+            if force {
+                reason = Some(
+                    "catalog shape changed — incremental placement invalidated".to_string(),
+                );
+            }
+            self.full_resolve()?;
+            decision = Decision::Resolve;
+            self.n_resolves += 1;
+        } else {
+            self.n_repairs += 1;
+        }
+
+        // per-slot verification after every delta: the session never
+        // holds (or answers from) an infeasible plan
+        self.solution().verify(&self.inst).map_err(|v| {
+            anyhow!(
+                "internal: session state infeasible after {} ({} violations, first: {:?})",
+                delta.op(),
+                v.len(),
+                v.first()
+            )
+        })?;
+
+        Ok(DeltaReport {
+            op: delta.op(),
+            decision,
+            reason,
+            cost: self.cost(),
+            lower_bound: self.lb,
+            n_tasks: self.inst.n_tasks(),
+            n_nodes: self.pool.len(),
+            seconds: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// What-if: price a delta without committing it. The session state is
+    /// untouched; the returned report describes the hypothetical plan.
+    pub fn quote(&self, delta: &Delta) -> Result<DeltaReport> {
+        let mut probe = self.clone();
+        probe.apply(delta)
+    }
+
+    // ----- per-kind incremental repair ------------------------------------
+
+    fn validate_new_task(&self, t: &Task, verb: &str) -> Result<()> {
+        let dims = self.inst.dims();
+        ensure!(
+            t.dims() == dims,
+            "{verb}: task {} has {} dims, the session has {dims}",
+            t.id,
+            t.dims()
+        );
+        ensure!(
+            t.end < self.inst.horizon,
+            "{verb}: task {} ends at {} but the session timeline is fixed at {} slots",
+            t.id,
+            t.end,
+            self.inst.horizon
+        );
+        for seg in t.segments() {
+            ensure!(
+                seg.demand.iter().all(|d| d.is_finite() && *d >= 0.0),
+                "{verb}: task {}: demand must be finite and non-negative",
+                t.id
+            );
+        }
+        ensure!(
+            self.inst.node_types.iter().any(|b| b.admits(t.peak())),
+            "{verb}: task {} fits no node-type alone",
+            t.id
+        );
+        Ok(())
+    }
+
+    fn apply_admit(&mut self, tasks: &[Task]) -> Result<()> {
+        ensure!(!tasks.is_empty(), "admit: no tasks given");
+        ensure!(
+            self.inst.n_tasks() + tasks.len() <= MAX_SESSION_TASKS,
+            "admit: session would grow to {} tasks, over the {MAX_SESSION_TASKS}-task cap",
+            self.inst.n_tasks() + tasks.len()
+        );
+        // validate the whole batch before touching any state
+        let mut fresh = BTreeMap::new();
+        for t in tasks {
+            self.validate_new_task(t, "admit")?;
+            ensure!(
+                !self.id_index.contains_key(&t.id),
+                "admit: task id {} is already live",
+                t.id
+            );
+            ensure!(
+                fresh.insert(t.id, ()).is_none(),
+                "admit: duplicate task id {} within the batch",
+                t.id
+            );
+        }
+        for t in tasks {
+            let u = self.inst.tasks.len();
+            self.inst.tasks.push(t.clone());
+            self.id_index.insert(t.id, u);
+            if self.pool.try_admit(&self.inst, u, self.cfg.fit, None).is_none() {
+                let b = best_type(&self.inst, u, MappingPolicy::HAvg)
+                    .expect("validated admissible above");
+                self.pool.buy_and_place(&self.inst, u, b)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_retire(&mut self, ids: &[u64]) -> Result<()> {
+        ensure!(!ids.is_empty(), "retire: no ids given");
+        let mut batch = BTreeMap::new();
+        for &id in ids {
+            ensure!(self.id_index.contains_key(&id), "retire: no live task with id {id}");
+            ensure!(
+                batch.insert(id, ()).is_none(),
+                "retire: duplicate id {id} within the batch"
+            );
+        }
+        let n = self.inst.n_tasks();
+        let assignment = self.pool.assignment(n);
+        let mut removed = vec![false; n];
+        for &id in ids {
+            let u = self.id_index[&id];
+            removed[u] = true;
+            if let Some(bi) = assignment[u] {
+                self.pool.evict(&self.inst, u, bi);
+            }
+        }
+        // compact the task vector; node task lists follow
+        let mut new_idx = vec![usize::MAX; n];
+        let mut kept = Vec::with_capacity(n - ids.len());
+        for (u, task) in std::mem::take(&mut self.inst.tasks).into_iter().enumerate() {
+            if !removed[u] {
+                new_idx[u] = kept.len();
+                kept.push(task);
+            }
+        }
+        self.inst.tasks = kept;
+        self.pool.remap_tasks(&new_idx);
+        self.pool.drop_empty();
+        self.id_index = self.inst.tasks.iter().enumerate().map(|(u, t)| (t.id, u)).collect();
+        Ok(())
+    }
+
+    fn apply_reshape(&mut self, task: &Task) -> Result<()> {
+        ensure!(
+            self.id_index.contains_key(&task.id),
+            "reshape: no live task with id {}",
+            task.id
+        );
+        self.validate_new_task(task, "reshape")?;
+        let u = self.id_index[&task.id];
+        // eviction-and-refill: subtract the OLD profile, swap the task,
+        // then re-admit preferring the node it lived in
+        let old_node = self.pool.assignment(self.inst.n_tasks())[u];
+        if let Some(bi) = old_node {
+            self.pool.evict(&self.inst, u, bi);
+        }
+        self.inst.tasks[u] = task.clone();
+        if self.pool.try_admit(&self.inst, u, self.cfg.fit, old_node).is_none() {
+            let b = best_type(&self.inst, u, MappingPolicy::HAvg)
+                .expect("validated admissible above");
+            self.pool.buy_and_place(&self.inst, u, b)?;
+        }
+        self.pool.drop_empty();
+        Ok(())
+    }
+
+    /// Returns true when the catalog changed *shape* (count or
+    /// capacities) and the placement must be rebuilt by a full re-solve;
+    /// a pure price change keeps the placement valid.
+    fn apply_reprice(&mut self, node_types: &[crate::model::NodeType]) -> Result<bool> {
+        ensure!(!node_types.is_empty(), "reprice: empty node-type catalog");
+        let dims = self.inst.dims();
+        for b in node_types {
+            ensure!(
+                b.dims() == dims,
+                "reprice: node-type '{}' has {} dims, the session has {dims}",
+                b.name,
+                b.dims()
+            );
+        }
+        for t in &self.inst.tasks {
+            ensure!(
+                node_types.iter().any(|b| b.admits(t.peak())),
+                "reprice: live task {} fits no node-type in the new catalog",
+                t.id
+            );
+        }
+        let same_shape = node_types.len() == self.inst.node_types.len()
+            && node_types
+                .iter()
+                .zip(&self.inst.node_types)
+                .all(|(a, b)| a.capacity == b.capacity);
+        self.inst.node_types = node_types.to_vec();
+        Ok(!same_shape)
+    }
+
+    // ----- LB refresh and escalation --------------------------------------
+
+    /// Refresh the certified lower bound without an LP solve: the
+    /// combinatorial congestion bound (Lemma 1) floored-up by
+    /// re-certifying the retained dual iterates against the *current*
+    /// LP (`dual::certified_bound` repairs any dual point into
+    /// feasibility, so the result is a true bound for the new instance).
+    fn refresh_lb(&mut self) {
+        if self.inst.n_tasks() == 0 {
+            self.lb = 0.0;
+            return;
+        }
+        let mut lp = MappingLp::from_instance(&self.inst);
+        let mut lb = dual::congestion_bound(&lp);
+        if let Some(w) = &self.warm {
+            if w.m == lp.m && w.t == lp.t && w.dims == lp.dims {
+                scaling::equilibrate(&mut lp);
+                lb = lb.max(dual::certified_bound(&lp, &w.iterates.y).0);
+            }
+        }
+        self.lb = lb;
+    }
+
+    /// Map the retained iterates onto the current task order (rows
+    /// follow ids; fresh tasks start at zero and are pulled in by the
+    /// PDHG projections). None when the dual shape no longer matches.
+    fn warm_for_current(&self) -> Option<WarmIterates> {
+        let w = self.warm.as_ref()?;
+        let (n, m) = (self.inst.n_tasks(), self.inst.n_types());
+        if w.m != m || w.t != self.inst.horizon as usize || w.dims != self.inst.dims() {
+            return None;
+        }
+        let old_pos: BTreeMap<u64, usize> =
+            w.ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        let mut x = vec![0.0; n * m];
+        let mut ww = vec![0.0; n];
+        for (u, task) in self.inst.tasks.iter().enumerate() {
+            if let Some(&j) = old_pos.get(&task.id) {
+                x[u * m..(u + 1) * m].copy_from_slice(&w.iterates.x[j * m..(j + 1) * m]);
+                ww[u] = w.iterates.w[j];
+            }
+        }
+        Some(WarmIterates {
+            x,
+            alpha: w.iterates.alpha.clone(),
+            y: w.iterates.y.clone(),
+            w: ww,
+        })
+    }
+
+    fn retain_iterates(&mut self, captured: Option<PdhgResult>) {
+        if let Some(r) = captured {
+            self.warm = Some(WarmState {
+                ids: self.inst.tasks.iter().map(|t| t.id).collect(),
+                iterates: WarmIterates::from(&r),
+                m: self.inst.n_types(),
+                t: self.inst.horizon as usize,
+                dims: self.inst.dims(),
+            });
+        }
+    }
+
+    /// Full re-solve of the current instance through the portfolio API,
+    /// warm-started from the retained iterates (unless `cfg.warm` is
+    /// off). Retains the new iterates and the tight refreshed LB.
+    fn full_resolve(&mut self) -> Result<()> {
+        let portfolio = parse_portfolio(&self.cfg.algo)?;
+        let warm = if self.cfg.warm { self.warm_for_current() } else { None };
+        let solver = WarmSolver::new(warm);
+        let race = portfolio
+            .run(&self.inst, &solver)
+            .context("escalated full re-solve")?;
+        let rep = race.best();
+        self.pool = Pool::from_solution(&self.inst, &rep.solution);
+        self.retain_iterates(solver.take_captured());
+        let lp = MappingLp::from_instance(&self.inst);
+        let mut lb = dual::congestion_bound(&lp);
+        if let Some(clb) = race.certified_lb() {
+            lb = lb.max(clb);
+        }
+        self.lb = lb;
+        Ok(())
+    }
+}
+
+// ----- registry -----------------------------------------------------------
+
+/// Most concurrently open sessions one service process accepts — each
+/// holds live profiles over its whole timeline, and session ops arrive
+/// from untrusted clients.
+pub const MAX_SESSIONS: usize = 64;
+
+/// Sessions idle longer than this are evicted when a full registry
+/// receives a new open: clients crash and disconnect without closing,
+/// and sessions deliberately outlive connections, so without an idle
+/// bound 64 leaked opens would deny the session layer to everyone until
+/// a process restart. Active sessions are never evicted.
+pub const SESSION_IDLE_TIMEOUT: std::time::Duration =
+    std::time::Duration::from_secs(30 * 60);
+
+/// Shared session table with per-session locking: ops on different
+/// sessions never contend on each other's solves, only on the brief map
+/// lookup. Each entry tracks its last-touched instant for idle eviction.
+#[derive(Default)]
+pub struct SessionRegistry {
+    inner: Mutex<BTreeMap<u64, (Arc<Mutex<PlanSession>>, Instant)>>,
+    next: AtomicU64,
+}
+
+impl SessionRegistry {
+    pub fn new() -> Self {
+        SessionRegistry::default()
+    }
+
+    /// Register a session, returning its id. A full registry first
+    /// evicts sessions idle past [`SESSION_IDLE_TIMEOUT`] (abandoned by
+    /// crashed/disconnected clients); live ones are never evicted.
+    pub fn insert(&self, session: PlanSession) -> Result<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.len() >= MAX_SESSIONS {
+            let now = Instant::now();
+            inner.retain(|_, (_, touched)| now.duration_since(*touched) < SESSION_IDLE_TIMEOUT);
+        }
+        ensure!(
+            inner.len() < MAX_SESSIONS,
+            "too many open sessions ({MAX_SESSIONS}); close one first"
+        );
+        let id = self.next.fetch_add(1, Ordering::SeqCst) + 1;
+        inner.insert(id, (Arc::new(Mutex::new(session)), Instant::now()));
+        Ok(id)
+    }
+
+    /// Handle to a live session (lock it to operate). Touches the entry,
+    /// keeping actively-used sessions clear of idle eviction.
+    pub fn get(&self, id: u64) -> Option<Arc<Mutex<PlanSession>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.get_mut(&id).map(|(s, touched)| {
+            *touched = Instant::now();
+            s.clone()
+        })
+    }
+
+    /// Remove and return a session.
+    pub fn close(&self, id: u64) -> Option<Arc<Mutex<PlanSession>>> {
+        self.inner.lock().unwrap().remove(&id).map(|(s, _)| s)
+    }
+
+    /// Evict sessions idle at least `ttl`; returns how many were
+    /// dropped. `insert` calls this implicitly with
+    /// [`SESSION_IDLE_TIMEOUT`] when the registry is full.
+    pub fn sweep_idle(&self, ttl: std::time::Duration) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.len();
+        let now = Instant::now();
+        inner.retain(|_, (_, touched)| now.duration_since(*touched) < ttl);
+        before - inner.len()
+    }
+
+    pub fn count(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::model::{DemandSeg, NodeType};
+
+    fn small(seed: u64) -> Instance {
+        generate(&SynthParams { n: 40, m: 3, ..Default::default() }, seed)
+    }
+
+    fn extra_tasks(inst: &Instance, seed: u64, k: usize) -> Vec<Task> {
+        // fresh tasks drawn from another seed, re-id'd above the live ids
+        let base = inst.tasks.iter().map(|t| t.id).max().unwrap_or(0) + 1;
+        let donor = generate(
+            &SynthParams { n: k, m: 3, horizon: inst.horizon, ..Default::default() },
+            seed,
+        );
+        donor.tasks.iter().enumerate().map(|(i, t)| t.with_id(base + i as u64)).collect()
+    }
+
+    #[test]
+    fn open_admit_reshape_retire_close_flow() {
+        let inst = small(11);
+        let (mut s, open) = PlanSession::open(inst, SessionConfig::default()).unwrap();
+        assert!(open.cost > 0.0);
+        assert!(open.lower_bound > 0.0 && open.lower_bound <= open.cost + 1e-6);
+        assert_eq!(open.n_tasks, 40);
+
+        // admit two fresh tasks
+        let fresh = extra_tasks(s.instance(), 99, 2);
+        let ids: Vec<u64> = fresh.iter().map(|t| t.id).collect();
+        let r = s.apply(&Delta::Admit { tasks: fresh }).unwrap();
+        assert_eq!(r.op, "admit");
+        assert_eq!(r.n_tasks, 42);
+        assert!(r.cost >= open.cost - 1e-9, "admits never shrink the plan");
+        assert!(r.lower_bound <= r.cost + 1e-6);
+
+        // reshape the first admitted task to a two-segment profile
+        let dims = s.instance().dims();
+        let reshaped = Task::piecewise(
+            ids[0],
+            vec![
+                DemandSeg { start: 0, end: 1, demand: vec![0.05; dims] },
+                DemandSeg { start: 2, end: 3, demand: vec![0.1; dims] },
+            ],
+        );
+        let r = s.apply(&Delta::Reshape { task: reshaped }).unwrap();
+        assert_eq!(r.op, "reshape");
+        assert_eq!(r.n_tasks, 42);
+
+        // retire both admitted tasks: cost returns to (at most) the
+        // opening plan's cost
+        let r = s.apply(&Delta::Retire { ids }).unwrap();
+        assert_eq!(r.n_tasks, 40);
+        assert!(r.cost <= open.cost + 1e-9, "retire must not inflate the plan");
+        let (n, rep, res) = s.delta_counts();
+        assert_eq!(n, 3);
+        assert_eq!(rep + res, 3);
+        assert!(s.solution().verify(s.instance()).is_ok());
+    }
+
+    #[test]
+    fn bad_deltas_are_rejected_without_state_change() {
+        let inst = small(12);
+        let (mut s, open) = PlanSession::open(inst, SessionConfig::default()).unwrap();
+        let cost0 = s.cost();
+        let dims = s.instance().dims();
+
+        // duplicate id
+        let live_id = s.instance().tasks[0].id;
+        let dup = Task::new(live_id, vec![0.1; dims], 0, 1);
+        assert!(s.apply(&Delta::Admit { tasks: vec![dup] }).is_err());
+        // unknown retire id
+        assert!(s.apply(&Delta::Retire { ids: vec![9_999_999] }).is_err());
+        // reshape of an unknown id
+        let ghost = Task::new(9_999_999, vec![0.1; dims], 0, 1);
+        assert!(s.apply(&Delta::Reshape { task: ghost }).is_err());
+        // admit past the fixed horizon
+        let late = Task::new(7_777_777, vec![0.1; dims], 0, s.instance().horizon + 5);
+        assert!(s.apply(&Delta::Admit { tasks: vec![late] }).is_err());
+        // admit that fits no node-type
+        let huge = Task::new(8_888_888, vec![50.0; dims], 0, 1);
+        assert!(s.apply(&Delta::Admit { tasks: vec![huge] }).is_err());
+        // reprice that strands a live task
+        let tiny_cat = vec![NodeType::new("nano", vec![1e-6; dims], 0.1)];
+        assert!(s.apply(&Delta::Reprice { node_types: tiny_cat }).is_err());
+
+        assert_eq!(s.cost(), cost0);
+        assert_eq!(s.n_tasks(), open.n_tasks);
+        assert_eq!(s.delta_counts().0, 0);
+    }
+
+    #[test]
+    fn escalation_fires_on_tight_ratio_and_quote_does_not_commit() {
+        let inst = small(13);
+        let cfg = SessionConfig { escalate_ratio: Some(1.0), ..Default::default() };
+        let (mut s, _) = PlanSession::open(inst, cfg).unwrap();
+        let fresh = extra_tasks(s.instance(), 5, 4);
+
+        // a quote prices the delta without committing
+        let before = (s.cost(), s.n_tasks(), s.delta_counts());
+        let q = s.quote(&Delta::Admit { tasks: fresh.clone() }).unwrap();
+        assert_eq!(q.n_tasks, before.1 + 4);
+        assert_eq!((s.cost(), s.n_tasks(), s.delta_counts()), before);
+
+        // ratio 1.0: any strictly-above-LB incremental cost escalates
+        let r = s.apply(&Delta::Admit { tasks: fresh }).unwrap();
+        if r.decision == Decision::Resolve {
+            assert!(r.reason.is_some());
+        }
+        assert!(r.cost >= r.lower_bound - 1e-6);
+        assert!(s.solution().verify(s.instance()).is_ok());
+    }
+
+    #[test]
+    fn reprice_cost_change_repairs_capacity_change_resolves() {
+        let inst = small(14);
+        let (mut s, _) = PlanSession::open(inst, SessionConfig::default()).unwrap();
+        // pure price change: placement is kept, decision is repair
+        let mut repriced = s.instance().node_types.clone();
+        for b in repriced.iter_mut() {
+            b.cost *= 2.0;
+        }
+        let c0 = s.cost();
+        let r = s.apply(&Delta::Reprice { node_types: repriced }).unwrap();
+        assert_eq!(r.decision, Decision::Repair);
+        assert!((r.cost - 2.0 * c0).abs() < 1e-6, "{} vs {}", r.cost, 2.0 * c0);
+
+        // capacity change: forced full re-solve
+        let mut reshaped_cat = s.instance().node_types.clone();
+        for b in reshaped_cat.iter_mut() {
+            for c in b.capacity.iter_mut() {
+                *c = (*c * 1.1).min(1.0);
+            }
+        }
+        let r = s.apply(&Delta::Reprice { node_types: reshaped_cat }).unwrap();
+        assert_eq!(r.decision, Decision::Resolve);
+        assert!(s.solution().verify(s.instance()).is_ok());
+    }
+
+    #[test]
+    fn retire_everything_and_repopulate() {
+        let inst = small(15);
+        let cfg = SessionConfig { escalate_ratio: None, ..Default::default() };
+        let (mut s, _) = PlanSession::open(inst, cfg).unwrap();
+        let ids: Vec<u64> = s.instance().tasks.iter().map(|t| t.id).collect();
+        let r = s.apply(&Delta::Retire { ids }).unwrap();
+        assert_eq!(r.n_tasks, 0);
+        assert_eq!(r.n_nodes, 0);
+        assert_eq!(r.cost, 0.0);
+        assert_eq!(r.lower_bound, 0.0);
+        // an empty session still accepts admits
+        let fresh = extra_tasks(s.instance(), 21, 3);
+        let r = s.apply(&Delta::Admit { tasks: fresh }).unwrap();
+        assert_eq!(r.n_tasks, 3);
+        assert!(r.cost > 0.0);
+        assert!(s.solution().verify(s.instance()).is_ok());
+    }
+
+    #[test]
+    fn registry_caps_and_isolates() {
+        let reg = SessionRegistry::new();
+        let (a, _) = PlanSession::open(small(1), SessionConfig::default()).unwrap();
+        let (b, _) = PlanSession::open(small(2), SessionConfig::default()).unwrap();
+        let ia = reg.insert(a).unwrap();
+        let ib = reg.insert(b).unwrap();
+        assert_ne!(ia, ib);
+        assert_eq!(reg.count(), 2);
+        let ha = reg.get(ia).unwrap();
+        let cost_a = ha.lock().unwrap().cost();
+        assert!(cost_a > 0.0);
+        assert!(reg.get(777).is_none());
+        assert!(reg.close(ia).is_some());
+        assert!(reg.get(ia).is_none());
+        assert_eq!(reg.count(), 1);
+    }
+
+    #[test]
+    fn registry_sweeps_idle_sessions() {
+        let reg = SessionRegistry::new();
+        let (a, _) = PlanSession::open(small(3), SessionConfig::default()).unwrap();
+        let (b, _) = PlanSession::open(small(4), SessionConfig::default()).unwrap();
+        let ia = reg.insert(a).unwrap();
+        let _ib = reg.insert(b).unwrap();
+        // nothing is older than a generous ttl
+        assert_eq!(reg.sweep_idle(std::time::Duration::from_secs(3600)), 0);
+        assert_eq!(reg.count(), 2);
+        // touch session a, then sweep with a zero ttl: everything idle
+        // "at least 0" goes — including just-touched entries — proving
+        // the ttl comparison is exercised; a real deployment uses
+        // SESSION_IDLE_TIMEOUT via insert's full-registry path
+        assert!(reg.get(ia).is_some());
+        assert_eq!(reg.sweep_idle(std::time::Duration::ZERO), 2);
+        assert_eq!(reg.count(), 0);
+    }
+
+    #[test]
+    fn knob_parsers() {
+        assert_eq!(parse_escalate("off").unwrap(), None);
+        assert_eq!(parse_escalate("1.5").unwrap(), Some(1.5));
+        assert!(parse_escalate("0.5").is_err());
+        assert!(parse_escalate("nan").is_err());
+        assert!(matches!(parse_fit("ff").unwrap(), FitPolicy::FirstFit));
+        assert!(matches!(parse_fit("sim").unwrap(), FitPolicy::SimilarityFit));
+        assert!(parse_fit("bogus").is_err());
+    }
+}

@@ -101,7 +101,7 @@ pub fn run(quick: bool) -> Result<String> {
             // A5: the previously-unreachable combo (local search refines
             // every fill candidate), evaluated on the shared LP outcome
             norm[4].push(a5.cost / lb);
-            norm[5].push(online::solve_online(&tr, FitPolicy::FirstFit).cost(&tr) / lb);
+            norm[5].push(online::solve_online(&tr, FitPolicy::FirstFit)?.cost(&tr) / lb);
             let pen = pipeline::preset("penalty-map").unwrap().run(&tr, &solver)?;
             norm[6].push(pen.cost / lb);
         }

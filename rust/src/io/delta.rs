@@ -1,0 +1,386 @@
+//! Wire grammar for session deltas: one JSON object per delta, shared by
+//! the service's `delta`/`query` verbs and the CLI's `tlrs session`
+//! JSON-lines files.
+//!
+//! ```text
+//!   {"op": "admit",   "tasks": [<task>, ...]}       task = instance format:
+//!                                                   {"id", "start", "end",
+//!                                                    "demand": [...]} or a
+//!                                                   "segments" array
+//!   {"op": "retire",  "ids": [3, 17, ...]}
+//!   {"op": "reshape", "id": 3, "demand": [...], "start": s, "end": e}
+//!   {"op": "reshape", "id": 3, "segments": [{"start","end","demand"}, ...]}
+//!   {"op": "reprice", "node_types": [{"name","capacity","cost"}, ...]}
+//! ```
+//!
+//! Everything is validated before model construction (spans, finiteness,
+//! dimensionality against the session happens later in the session
+//! layer) — malformed wire data is an error, never a panic.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Delta, Task};
+use crate::util::json::{self, Json};
+
+use super::files;
+
+/// Grammar summary printed by CLI/service errors.
+pub const DELTA_GRAMMAR: &str = "\
+  delta := {\"op\": \"admit\",   \"tasks\": [<task>...]}
+         | {\"op\": \"retire\",  \"ids\": [<id>...]}
+         | {\"op\": \"reshape\", \"id\": <id>, \"demand\": [...], \"start\": s, \"end\": e}
+         | {\"op\": \"reshape\", \"id\": <id>, \"segments\": [{start,end,demand}...]}
+         | {\"op\": \"reprice\", \"node_types\": [{name,capacity,cost}...]}
+  task  := the instance-file task format (flat \"demand\" or \"segments\")";
+
+fn grammar_err(why: impl std::fmt::Display) -> anyhow::Error {
+    anyhow::anyhow!("invalid delta: {why}\nvalid deltas:\n{DELTA_GRAMMAR}")
+}
+
+/// Parse one delta object.
+pub fn delta_from_json(v: &Json) -> Result<Delta> {
+    let op = v
+        .get("op")
+        .as_str()
+        .ok_or_else(|| grammar_err("missing 'op' field"))?;
+    match op {
+        "admit" => {
+            let arr = v
+                .get("tasks")
+                .as_arr()
+                .ok_or_else(|| grammar_err("admit needs a 'tasks' array"))?;
+            if arr.is_empty() {
+                return Err(grammar_err("admit with an empty 'tasks' array"));
+            }
+            for t in arr {
+                // ids address tasks across the session's lifetime:
+                // reject negative/fractional ids instead of letting the
+                // (legacy-lenient) task parser coerce them
+                if t.get("id").as_usize().is_none() {
+                    return Err(grammar_err(
+                        "admit task ids must be non-negative integers",
+                    ));
+                }
+            }
+            let tasks: Vec<Task> = arr
+                .iter()
+                .map(files::task_from_json)
+                .collect::<Result<_>>()
+                .context("admit")?;
+            Ok(Delta::Admit { tasks })
+        }
+        "retire" => {
+            let arr = v
+                .get("ids")
+                .as_arr()
+                .ok_or_else(|| grammar_err("retire needs an 'ids' array"))?;
+            if arr.is_empty() {
+                return Err(grammar_err("retire with an empty 'ids' array"));
+            }
+            let ids: Vec<u64> = arr
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .map(|v| v as u64)
+                        .ok_or_else(|| grammar_err("retire ids must be non-negative integers"))
+                })
+                .collect::<Result<_>>()?;
+            Ok(Delta::Retire { ids })
+        }
+        "reshape" => {
+            // the replacement task reuses the task grammar; the delta's
+            // 'id' doubles as the task id
+            if v.get("id").as_usize().is_none() {
+                return Err(grammar_err("reshape needs an integer 'id'"));
+            }
+            let mut obj = v.as_obj().expect("op implies object").clone();
+            // flat reshape may omit start/end only if segments given
+            if obj.get("segments").is_none()
+                && (obj.get("start").is_none() || obj.get("end").is_none())
+            {
+                return Err(grammar_err(
+                    "flat reshape needs 'demand', 'start' and 'end'",
+                ));
+            }
+            // derive the declared span from the segments so the task
+            // grammar's span cross-check passes
+            let derived = match obj.get("segments") {
+                Some(segs) if !obj.contains_key("start") && !obj.contains_key("end") => {
+                    let arr = segs
+                        .as_arr()
+                        .ok_or_else(|| grammar_err("'segments' must be an array"))?;
+                    let first = arr.first().ok_or_else(|| grammar_err("empty 'segments'"))?;
+                    let last = arr.last().expect("non-empty");
+                    Some((first.get("start").clone(), last.get("end").clone()))
+                }
+                _ => None,
+            };
+            if let Some((s, e)) = derived {
+                obj.insert("start".into(), s);
+                obj.insert("end".into(), e);
+            }
+            let task = files::task_from_json(&Json::Obj(obj)).context("reshape")?;
+            Ok(Delta::Reshape { task })
+        }
+        "reprice" => {
+            let arr = v
+                .get("node_types")
+                .as_arr()
+                .ok_or_else(|| grammar_err("reprice needs a 'node_types' array"))?;
+            if arr.is_empty() {
+                return Err(grammar_err("reprice with an empty 'node_types' array"));
+            }
+            let node_types = arr
+                .iter()
+                .map(files::node_type_from_json)
+                .collect::<Result<_>>()
+                .context("reprice")?;
+            Ok(Delta::Reprice { node_types })
+        }
+        other => Err(grammar_err(format!("unknown op '{other}'"))),
+    }
+}
+
+/// Serialize a delta back to its wire object (round-trip tests, echo).
+pub fn delta_to_json(d: &Delta) -> Json {
+    match d {
+        Delta::Admit { tasks } => Json::obj(vec![
+            ("op", Json::Str("admit".into())),
+            ("tasks", Json::Arr(tasks.iter().map(files::task_to_json).collect())),
+        ]),
+        Delta::Retire { ids } => Json::obj(vec![
+            ("op", Json::Str("retire".into())),
+            ("ids", Json::Arr(ids.iter().map(|&i| Json::Num(i as f64)).collect())),
+        ]),
+        Delta::Reshape { task } => {
+            let mut obj = match files::task_to_json(task) {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            obj.insert("op".into(), Json::Str("reshape".into()));
+            Json::Obj(obj)
+        }
+        Delta::Reprice { node_types } => Json::obj(vec![
+            ("op", Json::Str("reprice".into())),
+            (
+                "node_types",
+                Json::Arr(node_types.iter().map(files::node_type_to_json).collect()),
+            ),
+        ]),
+    }
+}
+
+/// Parse a `"deltas"` field: a single delta object or an array of them.
+pub fn deltas_from_json(v: &Json) -> Result<Vec<Delta>> {
+    match v {
+        Json::Arr(items) => {
+            if items.is_empty() {
+                return Err(grammar_err("'deltas' array is empty"));
+            }
+            items.iter().map(delta_from_json).collect()
+        }
+        Json::Obj(_) => Ok(vec![delta_from_json(v)?]),
+        _ => Err(grammar_err("'deltas' must be a delta object or an array of them")),
+    }
+}
+
+/// Load a JSON-lines delta stream (one delta per line; blank lines and
+/// `#` comment lines are skipped) — the `tlrs session --deltas` format.
+pub fn load_delta_stream(path: &Path) -> Result<Vec<Delta>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        out.push(
+            delta_from_json(&v)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))?,
+        );
+    }
+    if out.is_empty() {
+        bail!("{}: no deltas found", path.display());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{DemandSeg, NodeType};
+
+    #[test]
+    fn parse_all_ops() {
+        let admit = json::parse(
+            r#"{"op":"admit","tasks":[{"id":7,"demand":[0.2,0.1],"start":0,"end":3}]}"#,
+        )
+        .unwrap();
+        match delta_from_json(&admit).unwrap() {
+            Delta::Admit { tasks } => {
+                assert_eq!(tasks.len(), 1);
+                assert_eq!(tasks[0].id, 7);
+                assert!(tasks[0].is_flat());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let retire = json::parse(r#"{"op":"retire","ids":[3,5]}"#).unwrap();
+        match delta_from_json(&retire).unwrap() {
+            Delta::Retire { ids } => assert_eq!(ids, vec![3, 5]),
+            other => panic!("{other:?}"),
+        }
+
+        let reshape_flat = json::parse(
+            r#"{"op":"reshape","id":3,"demand":[0.4],"start":1,"end":4}"#,
+        )
+        .unwrap();
+        match delta_from_json(&reshape_flat).unwrap() {
+            Delta::Reshape { task } => {
+                assert_eq!(task.id, 3);
+                assert_eq!((task.start, task.end), (1, 4));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // piecewise reshape may omit the declared span (derived)
+        let reshape_segs = json::parse(
+            r#"{"op":"reshape","id":9,"segments":[
+                {"start":0,"end":1,"demand":[0.1]},
+                {"start":2,"end":5,"demand":[0.6]}]}"#,
+        )
+        .unwrap();
+        match delta_from_json(&reshape_segs).unwrap() {
+            Delta::Reshape { task } => {
+                assert!(!task.is_flat());
+                assert_eq!((task.start, task.end), (0, 5));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let reprice = json::parse(
+            r#"{"op":"reprice","node_types":[{"name":"a","capacity":[1.0],"cost":2.5}]}"#,
+        )
+        .unwrap();
+        match delta_from_json(&reprice).unwrap() {
+            Delta::Reprice { node_types } => {
+                assert_eq!(node_types.len(), 1);
+                assert_eq!(node_types[0].cost, 2.5);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_deltas_error_with_grammar() {
+        for bad in [
+            r#"{"tasks":[]}"#,
+            r#"{"op":"warp"}"#,
+            r#"{"op":"admit","tasks":[]}"#,
+            r#"{"op":"admit"}"#,
+            r#"{"op":"retire","ids":[]}"#,
+            r#"{"op":"retire","ids":[-1]}"#,
+            r#"{"op":"retire","ids":["x"]}"#,
+            r#"{"op":"reshape","id":1}"#,
+            r#"{"op":"reshape","id":1,"demand":[0.1]}"#,
+            r#"{"op":"reprice","node_types":[]}"#,
+            r#"{"op":"reprice","node_types":[{"name":"a","capacity":[],"cost":1}]}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let err = format!("{:#}", delta_from_json(&v).unwrap_err());
+            assert!(
+                err.contains("invalid delta")
+                    || err.contains("capacity")
+                    || err.contains("task"),
+                "{bad}: {err}"
+            );
+        }
+        // inverted spans / non-finite demand surface the task validators
+        let v = json::parse(
+            r#"{"op":"admit","tasks":[{"id":1,"demand":[0.1],"start":5,"end":2}]}"#,
+        )
+        .unwrap();
+        assert!(delta_from_json(&v).is_err());
+        // ids are addressing keys: negative/fractional ids are rejected
+        // here even though the legacy-lenient task parser would coerce
+        for bad_id in ["-7", "1.5"] {
+            let v = json::parse(&format!(
+                r#"{{"op":"admit","tasks":[{{"id":{bad_id},"demand":[0.1],"start":0,"end":1}}]}}"#
+            ))
+            .unwrap();
+            let err = format!("{:#}", delta_from_json(&v).unwrap_err());
+            assert!(err.contains("non-negative integers"), "{bad_id}: {err}");
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let deltas = vec![
+            Delta::Admit {
+                tasks: vec![
+                    Task::new(11, vec![0.3, 0.2], 2, 6),
+                    Task::piecewise(
+                        12,
+                        vec![
+                            DemandSeg { start: 0, end: 2, demand: vec![0.1, 0.1] },
+                            DemandSeg { start: 3, end: 4, demand: vec![0.5, 0.2] },
+                        ],
+                    ),
+                ],
+            },
+            Delta::Retire { ids: vec![4, 9] },
+            Delta::Reshape { task: Task::new(11, vec![0.6, 0.1], 1, 3) },
+            Delta::Reprice {
+                node_types: vec![NodeType::new("a", vec![1.0, 1.0], 3.0)],
+            },
+        ];
+        for d in &deltas {
+            let j = delta_to_json(d);
+            let back = delta_from_json(&j).unwrap();
+            assert_eq!(delta_to_json(&back).to_string(), j.to_string(), "{d:?}");
+            assert_eq!(back.op(), d.op());
+        }
+    }
+
+    #[test]
+    fn jsonl_stream_loads_and_reports_line_numbers() {
+        let dir = std::env::temp_dir().join(format!("tlrs-delta-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jsonl");
+        std::fs::write(
+            &path,
+            "# a comment\n\
+             {\"op\":\"admit\",\"tasks\":[{\"id\":1,\"demand\":[0.1],\"start\":0,\"end\":1}]}\n\
+             \n\
+             {\"op\":\"retire\",\"ids\":[1]}\n",
+        )
+        .unwrap();
+        let ds = load_delta_stream(&path).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].op(), "admit");
+        assert_eq!(ds[1].op(), "retire");
+
+        std::fs::write(&path, "{\"op\":\"retire\",\"ids\":[]}\n").unwrap();
+        let err = format!("{:#}", load_delta_stream(&path).unwrap_err());
+        assert!(err.contains(":1"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deltas_field_accepts_object_or_array() {
+        let single = json::parse(r#"{"op":"retire","ids":[1]}"#).unwrap();
+        assert_eq!(deltas_from_json(&single).unwrap().len(), 1);
+        let arr = json::parse(
+            r#"[{"op":"retire","ids":[1]},{"op":"retire","ids":[2]}]"#,
+        )
+        .unwrap();
+        assert_eq!(deltas_from_json(&arr).unwrap().len(), 2);
+        assert!(deltas_from_json(&Json::Num(3.0)).is_err());
+        assert!(deltas_from_json(&Json::Arr(vec![])).is_err());
+    }
+}

@@ -23,61 +23,120 @@ use crate::util::json::{self, Json};
 
 // ---------- JSON instance format ----------------------------------------
 
+/// Serialize one node-type (the instance-format object shape).
+pub fn node_type_to_json(b: &NodeType) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(b.name.clone())),
+        ("capacity", Json::arr_f64(&b.capacity)),
+        ("cost", Json::Num(b.cost)),
+    ])
+}
+
+/// Serialize one task (flat `"demand"` or `"segments"` — the shared
+/// grammar of instance files, service requests and session deltas).
+pub fn task_to_json(u: &Task) -> Json {
+    let mut fields = vec![
+        ("id", Json::Num(u.id as f64)),
+    ];
+    if u.is_flat() {
+        // flat tasks keep the seed's exact format
+        fields.push(("demand", Json::arr_f64(u.peak())));
+    } else {
+        fields.push((
+            "segments",
+            Json::Arr(
+                u.segments()
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("start", Json::Num(s.start as f64)),
+                            ("end", Json::Num(s.end as f64)),
+                            ("demand", Json::arr_f64(&s.demand)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    fields.push(("start", Json::Num(u.start as f64)));
+    fields.push(("end", Json::Num(u.end as f64)));
+    Json::obj(fields)
+}
+
 pub fn instance_to_json(inst: &Instance) -> Json {
     Json::obj(vec![
         ("horizon", Json::Num(inst.horizon as f64)),
         (
             "node_types",
-            Json::Arr(
-                inst.node_types
-                    .iter()
-                    .map(|b| {
-                        Json::obj(vec![
-                            ("name", Json::Str(b.name.clone())),
-                            ("capacity", Json::arr_f64(&b.capacity)),
-                            ("cost", Json::Num(b.cost)),
-                        ])
-                    })
-                    .collect(),
-            ),
+            Json::Arr(inst.node_types.iter().map(node_type_to_json).collect()),
         ),
         (
             "tasks",
-            Json::Arr(
-                inst.tasks
-                    .iter()
-                    .map(|u| {
-                        let mut fields = vec![
-                            ("id", Json::Num(u.id as f64)),
-                        ];
-                        if u.is_flat() {
-                            // flat tasks keep the seed's exact format
-                            fields.push(("demand", Json::arr_f64(u.peak())));
-                        } else {
-                            fields.push((
-                                "segments",
-                                Json::Arr(
-                                    u.segments()
-                                        .iter()
-                                        .map(|s| {
-                                            Json::obj(vec![
-                                                ("start", Json::Num(s.start as f64)),
-                                                ("end", Json::Num(s.end as f64)),
-                                                ("demand", Json::arr_f64(&s.demand)),
-                                            ])
-                                        })
-                                        .collect(),
-                                ),
-                            ));
-                        }
-                        fields.push(("start", Json::Num(u.start as f64)));
-                        fields.push(("end", Json::Num(u.end as f64)));
-                        Json::obj(fields)
-                    })
-                    .collect(),
-            ),
+            Json::Arr(inst.tasks.iter().map(task_to_json).collect()),
         ),
     ])
+}
+
+/// Parse one node-type object (`{"name", "capacity", "cost"}`),
+/// validating before construction so malformed external data errors
+/// instead of tripping `NodeType::new`'s programmer-error asserts.
+pub fn node_type_from_json(b: &Json) -> Result<NodeType> {
+    let name = b.get("name").as_str().unwrap_or("unnamed");
+    let capacity = b.get("capacity").to_f64_vec().context("node_type capacity")?;
+    let cost = b.get("cost").as_f64().context("node_type cost")?;
+    if capacity.is_empty() || capacity.iter().any(|c| !c.is_finite() || *c <= 0.0) {
+        bail!("node-type {name}: capacity must be non-empty, finite and positive");
+    }
+    if !cost.is_finite() || cost < 0.0 {
+        bail!("node-type {name}: cost must be finite and non-negative");
+    }
+    Ok(NodeType::new(name, capacity, cost))
+}
+
+/// Parse one task object — a flat `"demand"` or a `"segments"` array
+/// (the same grammar instance files, service requests and session
+/// deltas all share).
+pub fn task_from_json(t: &Json) -> Result<Task> {
+    // NOTE: the id cast is deliberately lenient (the seed's behavior —
+    // legacy one-shot responses are pinned byte-identical). Surfaces
+    // where ids are an addressing key (session deltas) enforce strict
+    // non-negative-integer ids before calling this (see io::delta).
+    let id = t.get("id").as_f64().context("task id")? as u64;
+    let start = t.get("start").as_usize().context("task start")? as u32;
+    let end = t.get("end").as_usize().context("task end")? as u32;
+    match t.get("segments") {
+        Json::Null => {
+            let demand = t.get("demand").to_f64_vec().context("task demand")?;
+            if end < start || demand.is_empty() {
+                bail!("task {id} with invalid span [{start},{end}] or empty demand");
+            }
+            validate_demand(id, &demand)?;
+            Ok(Task::new(id, demand, start, end))
+        }
+        segs_json => {
+            let mut segs = Vec::new();
+            for s in segs_json.as_arr().context("task segments")? {
+                let demand = s.get("demand").to_f64_vec().context("segment demand")?;
+                validate_demand(id, &demand)?;
+                segs.push(DemandSeg {
+                    start: s.get("start").as_usize().context("segment start")? as u32,
+                    end: s.get("end").as_usize().context("segment end")? as u32,
+                    demand,
+                });
+            }
+            let task = Task::try_piecewise(id, segs)
+                .map_err(|e| anyhow::anyhow!("invalid segments: {e}"))?;
+            if (task.start, task.end) != (start, end) {
+                bail!(
+                    "task {id}: declared span [{start},{end}] does not match its \
+                     segments [{},{}]",
+                    task.start,
+                    task.end
+                );
+            }
+            Ok(task)
+        }
+    }
 }
 
 pub fn instance_from_json(v: &Json) -> Result<Instance> {
@@ -87,51 +146,11 @@ pub fn instance_from_json(v: &Json) -> Result<Instance> {
         .context("instance: missing horizon")? as u32;
     let mut node_types = Vec::new();
     for b in v.get("node_types").as_arr().context("instance: node_types")? {
-        node_types.push(NodeType::new(
-            b.get("name").as_str().unwrap_or("unnamed"),
-            b.get("capacity").to_f64_vec().context("node_type capacity")?,
-            b.get("cost").as_f64().context("node_type cost")?,
-        ));
+        node_types.push(node_type_from_json(b)?);
     }
     let mut tasks = Vec::new();
     for t in v.get("tasks").as_arr().context("instance: tasks")? {
-        let id = t.get("id").as_f64().context("task id")? as u64;
-        let start = t.get("start").as_usize().context("task start")? as u32;
-        let end = t.get("end").as_usize().context("task end")? as u32;
-        let task = match t.get("segments") {
-            Json::Null => {
-                let demand = t.get("demand").to_f64_vec().context("task demand")?;
-                if end < start || demand.is_empty() {
-                    bail!("task {id} with invalid span [{start},{end}] or empty demand");
-                }
-                validate_demand(id, &demand)?;
-                Task::new(id, demand, start, end)
-            }
-            segs_json => {
-                let mut segs = Vec::new();
-                for s in segs_json.as_arr().context("task segments")? {
-                    let demand = s.get("demand").to_f64_vec().context("segment demand")?;
-                    validate_demand(id, &demand)?;
-                    segs.push(DemandSeg {
-                        start: s.get("start").as_usize().context("segment start")? as u32,
-                        end: s.get("end").as_usize().context("segment end")? as u32,
-                        demand,
-                    });
-                }
-                let task = Task::try_piecewise(id, segs)
-                    .map_err(|e| anyhow::anyhow!("invalid segments: {e}"))?;
-                if (task.start, task.end) != (start, end) {
-                    bail!(
-                        "task {id}: declared span [{start},{end}] does not match its \
-                         segments [{},{}]",
-                        task.start,
-                        task.end
-                    );
-                }
-                task
-            }
-        };
-        tasks.push(task);
+        tasks.push(task_from_json(t)?);
     }
     // Validate before Instance::new, which treats violations as programmer
     // errors (panics) — external input must fail gracefully instead.

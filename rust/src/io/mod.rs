@@ -2,6 +2,7 @@
 //! family registry), synthetic benchmark, GCT-like trace, the pattern
 //! library, pricing, and on-disk formats.
 
+pub mod delta;
 pub mod files;
 pub mod gct_like;
 pub mod patterns;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   solve     (--input inst.json | --workload <spec>) [--algo lp-map-f]
 //!             [--backend auto] [--replay]
+//!   session   (--input inst.json | --workload <spec>) --deltas deltas.jsonl
+//!             open a plan session and replay a delta stream incrementally
 //!   gen       --workload <spec> [--seed S] --out inst.json [--csv trace.csv]
 //!   workloads list the registered workload families (--names | --smoke)
 //!   stress    --workload <spec> [--surprise <spec>] plan + surprise-load sim
@@ -37,6 +39,9 @@ USAGE:
   tlrs solve   (--input inst.json | --workload <wspec> [--seed 1])
                [--algo <spec>[,<spec>...]]
                [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
+  tlrs session (--input inst.json | --workload <wspec> [--seed 1])
+               --deltas deltas.jsonl [--algo <spec>] [--escalate 1.5|off]
+               [--fit ff|sim] [--check]
   tlrs gen     --workload <wspec> [--seed 1] --out inst.json [--csv trace.csv]
                (legacy: --kind synth|gct [--n ...] [--m ...] [--dims ...]
                 [--horizon ...] [--priced])
@@ -84,6 +89,25 @@ ALGO SPECS (--algo, and the service's 'algorithm' field):
   refine  := fill | ls[:<max_rounds>]   (fill must be the first refine)
   examples: --algo lp+fill+ls    --algo penalty:ff+ls:16
             --algo portfolio     --algo lp-map-f+ls,portfolio
+
+PLAN SESSIONS (tlrs session, and the service's 'op' verbs):
+  A session opens a plan once (full solve via --algo) and then answers a
+  stream of workload deltas incrementally: untouched placements are kept
+  and only affected nodes are repaired, escalating to a full re-solve
+  (PDHG warm-started from the retained iterates) only when the
+  incremental cost drifts past --escalate x the refreshed certified LB
+  ('off' never escalates). Every delta's plan is per-slot verified.
+  --deltas is JSON-lines, one delta per line ('#' comments allowed):
+    {\"op\": \"admit\",   \"tasks\": [{\"id\",\"demand\",\"start\",\"end\"} | segments...]}
+    {\"op\": \"retire\",  \"ids\": [3, 17]}
+    {\"op\": \"reshape\", \"id\": 3, \"demand\": [...], \"start\": s, \"end\": e}
+    {\"op\": \"reshape\", \"id\": 3, \"segments\": [{start,end,demand}...]}
+    {\"op\": \"reprice\", \"node_types\": [{name,capacity,cost}...]}
+  --check asserts per-delta invariants (cost >= certified LB) and exits
+  non-zero on violation. The service speaks the same layer over TCP:
+  {\"op\": \"open\"|\"delta\"|\"query\"|\"close\"|\"stats\"} — 'query' prices a
+  delta without committing it, 'stats' dumps counters and latency
+  histograms. See coordinator::service docs.
 ";
 
 fn main() {
@@ -102,6 +126,7 @@ fn planner_from(args: &Args) -> Result<Planner> {
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "solve" => cmd_solve(args),
+        "session" => cmd_session(args),
         "gen" => cmd_gen(args),
         "workloads" => cmd_workloads(args),
         "stress" => cmd_stress(args),
@@ -196,6 +221,85 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(out) = args.get("out") {
         std::fs::write(out, files::solution_to_json(&solution, &tr).to_string())?;
         println!("solution       : wrote {out}");
+    }
+    Ok(())
+}
+
+/// Open a plan session and replay a JSON-lines delta stream through the
+/// incremental re-solve path, printing one line per delta (repair vs
+/// full-re-solve decision, cost, refreshed certified LB).
+fn cmd_session(args: &Args) -> Result<()> {
+    use tlrs::coordinator::session::{self, PlanSession, SessionConfig};
+    use tlrs::io::delta::load_delta_stream;
+
+    let inst = instance_from(args)?;
+    let deltas_path = args.get("deltas").context(
+        "--deltas <file.jsonl> required (one delta object per line; see USAGE)",
+    )?;
+    let deltas = load_delta_stream(Path::new(deltas_path))?;
+    let check = args.has_flag("check");
+
+    let cfg = SessionConfig {
+        algo: args.get_or("algo", "lp-map-f"),
+        fit: session::parse_fit(&args.get_or("fit", "ff"))?,
+        escalate_ratio: session::parse_escalate(&args.get_or("escalate", "1.5"))?,
+        warm: true,
+    };
+    let escalate_desc = match cfg.escalate_ratio {
+        Some(r) => format!("{r:.2} x LB"),
+        None => "off".into(),
+    };
+    let (mut session, open) = PlanSession::open(inst, cfg)?;
+    println!(
+        "open           : {} tasks, cost {:.4}, LB {:.4}, {} nodes ({} in {:.3}s, \
+         escalate {})",
+        open.n_tasks, open.cost, open.lower_bound, open.n_nodes, open.label,
+        open.seconds, escalate_desc
+    );
+
+    let mut violations = 0usize;
+    for (i, delta) in deltas.iter().enumerate() {
+        let rep = session
+            .apply(delta)
+            .with_context(|| format!("delta {} ({})", i + 1, delta.op()))?;
+        let ratio = if rep.lower_bound > 0.0 { rep.cost / rep.lower_bound } else { 1.0 };
+        println!(
+            "#{:<4} {:<8} {:<8} cost {:>10.4}  lb {:>10.4}  x{:<6.3} nodes {:<5} \
+             tasks {:<6} {:.3}s{}",
+            i + 1,
+            rep.op,
+            rep.decision.as_str(),
+            rep.cost,
+            rep.lower_bound,
+            ratio,
+            rep.n_nodes,
+            rep.n_tasks,
+            rep.seconds,
+            rep.reason.as_deref().map(|r| format!("  ({r})")).unwrap_or_default()
+        );
+        if check && rep.cost < rep.lower_bound - 1e-6 {
+            eprintln!("CHECK FAILED: cost {} below certified LB {}", rep.cost, rep.lower_bound);
+            violations += 1;
+        }
+    }
+    let (n, repairs, resolves) = session.delta_counts();
+    println!(
+        "session        : {n} deltas ({repairs} incremental repairs, {resolves} full \
+         re-solves), final cost {:.4}, LB {:.4}, {} nodes",
+        session.cost(),
+        session.lower_bound(),
+        session.n_nodes()
+    );
+    if check {
+        // every intermediate state was already per-slot verified by the
+        // session; re-verify the final state with the independent dense
+        // backend as a belt-and-suspenders gate
+        session
+            .solution()
+            .verify_with::<tlrs::model::DenseProfile>(session.instance())
+            .map_err(|v| anyhow::anyhow!("final state fails dense verify: {v:?}"))?;
+        anyhow::ensure!(violations == 0, "{violations} check violation(s)");
+        println!("session check  : OK (all deltas verify-clean, cost >= certified LB)");
     }
     Ok(())
 }

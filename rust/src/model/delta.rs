@@ -1,0 +1,77 @@
+//! Workload deltas: the typed mutations a plan session replays onto a
+//! live instance.
+//!
+//! The paper's cold-start formulation freezes the workload before the
+//! single solve; deployed clusters live in the dynamic arrival/departure
+//! setting (DVBP, arXiv 2304.08648) and the continuous reconfiguration
+//! loop of Eva (arXiv 2503.07437): tasks arrive (`Admit`), leave
+//! (`Retire`), change shape or window (`Reshape`), and the purchasable
+//! catalog itself gets repriced (`Reprice`). Each variant carries fully
+//! validated model values — `Task`s and `NodeType`s, not raw JSON — so
+//! the session layer applies them without re-parsing; the wire grammar
+//! lives in `io::delta`.
+//!
+//! Tasks are addressed by their stable [`Task::id`] (never by instance
+//! index, which reshuffles when the session compacts over a retirement).
+
+use super::nodetype::NodeType;
+use super::task::Task;
+
+/// One mutation of a live instance.
+#[derive(Clone, Debug)]
+pub enum Delta {
+    /// New tasks enter the workload (flat or piecewise profiles). Ids
+    /// must be fresh: no collision with a live task or with each other.
+    Admit { tasks: Vec<Task> },
+    /// Live tasks leave; their capacity is released immediately.
+    Retire { ids: Vec<u64> },
+    /// A live task's demand profile and/or active window is replaced;
+    /// the replacement task carries the same id.
+    Reshape { task: Task },
+    /// The node-type catalog is replaced (prices and/or capacities).
+    Reprice { node_types: Vec<NodeType> },
+}
+
+impl Delta {
+    /// Wire/report verb for this delta kind.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Delta::Admit { .. } => "admit",
+            Delta::Retire { .. } => "retire",
+            Delta::Reshape { .. } => "reshape",
+            Delta::Reprice { .. } => "reprice",
+        }
+    }
+
+    /// How many tasks the delta touches (catalog changes touch none).
+    pub fn n_touched(&self) -> usize {
+        match self {
+            Delta::Admit { tasks } => tasks.len(),
+            Delta::Retire { ids } => ids.len(),
+            Delta::Reshape { .. } => 1,
+            Delta::Reprice { .. } => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_and_counts() {
+        let admit = Delta::Admit { tasks: vec![Task::new(7, vec![0.1], 0, 1)] };
+        assert_eq!(admit.op(), "admit");
+        assert_eq!(admit.n_touched(), 1);
+        let retire = Delta::Retire { ids: vec![1, 2, 3] };
+        assert_eq!(retire.op(), "retire");
+        assert_eq!(retire.n_touched(), 3);
+        let reshape = Delta::Reshape { task: Task::new(1, vec![0.2], 0, 0) };
+        assert_eq!(reshape.op(), "reshape");
+        assert_eq!(reshape.n_touched(), 1);
+        let reprice =
+            Delta::Reprice { node_types: vec![NodeType::new("a", vec![1.0], 2.0)] };
+        assert_eq!(reprice.op(), "reprice");
+        assert_eq!(reprice.n_touched(), 0);
+    }
+}

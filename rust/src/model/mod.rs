@@ -2,6 +2,7 @@
 //! costs, and the shared load-profile subsystem.
 
 pub mod cost;
+pub mod delta;
 pub mod instance;
 pub mod load;
 pub mod nodetype;
@@ -15,6 +16,7 @@ pub mod timeline;
 pub const EPS: f64 = 1e-9;
 
 pub use cost::CostModel;
+pub use delta::Delta;
 pub use instance::Instance;
 pub use load::{DenseProfile, LoadProfile, Profile};
 pub use nodetype::NodeType;

@@ -8,10 +8,16 @@
 //! either rejected (fixed edge cluster) or served by renting overflow
 //! nodes on demand (public-cloud hybrid). Reports admission rate and
 //! overflow spend — quantifying how much headroom a plan really has.
+//!
+//! Admission runs on the plan-session repair engine
+//! ([`crate::algo::repair::Pool`]) — the exact code path the planning
+//! service's session `delta` verb admits through — so what the sim
+//! predicts is what the deployed admission path does.
 
 use anyhow::{ensure, Result};
 
-use crate::algo::placement::{select_node, FitPolicy, NodeState};
+use crate::algo::placement::FitPolicy;
+use crate::algo::repair::Pool;
 use crate::io::workload::WorkloadSource;
 use crate::model::{Instance, Solution, Task};
 
@@ -148,14 +154,10 @@ pub fn simulate_with_hints(
         .max(stream.iter().map(|t| t.end + 1).max().unwrap_or(1));
     let sim_inst = Instance::new(stream.to_vec(), inst.node_types.clone(), horizon);
 
-    let mut nodes: Vec<NodeState> = plan
-        .nodes
-        .iter()
-        .enumerate()
-        .map(|(i, n)| NodeState::new(&sim_inst, n.type_idx, i))
-        .collect();
-    let mut overflow: Vec<NodeState> = Vec::new();
-    let mut seq = nodes.len();
+    // the purchased-but-empty planned pool, plus a rented overflow pool
+    // — both driven through the session repair engine's admit path
+    let mut pool = Pool::empty_from_plan(&sim_inst, plan);
+    let mut overflow = Pool::new();
 
     let mut order: Vec<usize> = (0..stream.len()).collect();
     order.sort_by_key(|&u| (stream[u].start, u));
@@ -165,22 +167,10 @@ pub fn simulate_with_hints(
     let mut overflow_cost = 0.0;
 
     for u in order {
-        if let Some(hs) = hints {
-            if let Some(Some(i)) = hs.get(u) {
-                if nodes[*i].fits(&sim_inst, u) {
-                    nodes[*i].add(&sim_inst, u);
-                    admitted += 1;
-                    continue;
-                }
-            }
-        }
-        if let Some(i) = select_node(&sim_inst, &nodes, u, policy) {
-            nodes[i].add(&sim_inst, u);
-            admitted += 1;
-            continue;
-        }
-        if let Some(i) = select_node(&sim_inst, &overflow, u, policy) {
-            overflow[i].add(&sim_inst, u);
+        let hint = hints.and_then(|hs| hs.get(u).copied().flatten());
+        if pool.try_admit(&sim_inst, u, policy, hint).is_some()
+            || overflow.try_admit(&sim_inst, u, policy, None).is_some()
+        {
             admitted += 1;
             continue;
         }
@@ -196,11 +186,10 @@ pub fn simulate_with_hints(
                 });
             match b {
                 Some(b) => {
-                    let mut node = NodeState::new(&sim_inst, b, seq);
-                    seq += 1;
-                    node.add(&sim_inst, u);
+                    overflow
+                        .buy_and_place(&sim_inst, u, b)
+                        .expect("admits() pre-checked the empty node");
                     overflow_cost += sim_inst.node_types[b].cost;
-                    overflow.push(node);
                     admitted += 1;
                 }
                 None => rejected += 1,

@@ -131,6 +131,80 @@ fn shaped_inline_instance_roundtrips_segments() {
 }
 
 #[test]
+fn two_concurrent_sessions_over_one_connection_pool() {
+    // one server, one shared planner (= one session registry), two
+    // clients on separate connections each driving their own session
+    // concurrently: sessions must stay isolated (task counts, costs) and
+    // survive across the pooled connections
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let planner = Arc::new(Planner::new(Backend::Native).unwrap());
+    let server = {
+        let planner = planner.clone();
+        std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (stream, _) = listener.accept().unwrap();
+                let planner = planner.clone();
+                // pooled connections: each served on its own thread so
+                // the two sessions genuinely interleave
+                std::thread::spawn(move || {
+                    let _ = service::serve_connection(&planner, stream);
+                });
+            }
+        })
+    };
+
+    fn drive(addr: std::net::SocketAddr, n_tasks: usize, seed: u64, fresh_id: u64) -> usize {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let send = |stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: String| {
+            stream.write_all(line.as_bytes()).unwrap();
+            stream.write_all(b"\n").unwrap();
+            stream.flush().unwrap();
+            let mut resp = String::new();
+            reader.read_line(&mut resp).unwrap();
+            json::parse(&resp).unwrap()
+        };
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let open = format!(
+            r#"{{"op":"open","workload":"synth:n={n_tasks},m=3,dims=2","seed":{seed}}}"#
+        );
+        let v = send(&mut stream, &mut reader, open);
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        let sid = v.get("session").as_usize().unwrap();
+        assert_eq!(v.get("n_tasks").as_usize(), Some(n_tasks));
+
+        // admit a fresh task, then retire it again
+        let admit = format!(
+            r#"{{"op":"delta","session":{sid},"deltas":{{"op":"admit","tasks":[{{"id":{fresh_id},"demand":[0.05,0.05],"start":0,"end":2}}]}}}}"#
+        );
+        let v = send(&mut stream, &mut reader, admit);
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("n_tasks").as_usize(), Some(n_tasks + 1));
+
+        let retire = format!(
+            r#"{{"op":"delta","session":{sid},"deltas":{{"op":"retire","ids":[{fresh_id}]}}}}"#
+        );
+        let v = send(&mut stream, &mut reader, retire);
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("n_tasks").as_usize(), Some(n_tasks));
+
+        let v = send(&mut stream, &mut reader, format!(r#"{{"op":"close","session":{sid}}}"#));
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("deltas").as_usize(), Some(2));
+        stream.shutdown(std::net::Shutdown::Both).ok();
+        sid
+    }
+
+    let a = std::thread::spawn(move || drive(addr, 20, 3, 700));
+    let b = std::thread::spawn(move || drive(addr, 26, 4, 800));
+    let sid_a = a.join().unwrap();
+    let sid_b = b.join().unwrap();
+    assert_ne!(sid_a, sid_b, "sessions must get distinct ids");
+    assert_eq!(planner.sessions.count(), 0, "both sessions closed");
+    server.join().unwrap();
+}
+
+#[test]
 fn concurrent_clients_are_serialized_but_served() {
     // the service handles connections sequentially (PJRT client is not
     // Sync) — two queued clients must both get answers

@@ -376,7 +376,7 @@ fn all_solvers_clean_on_synth_and_gct_scenarios() {
                     "{label} {policy:?} fill={fill}: dense verify"
                 );
             }
-            let sol = tlrs::algo::online::solve_online(tr, policy);
+            let sol = tlrs::algo::online::solve_online(tr, policy).unwrap();
             assert!(sol.verify(tr).is_ok(), "{label} online {policy:?}");
             assert!(
                 sol.verify_with::<DenseProfile>(tr).is_ok(),

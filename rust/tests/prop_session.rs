@@ -1,0 +1,188 @@
+//! Session properties: delta replay vs cold solves, per-delta
+//! feasibility on an independent verifier backend, and warm-start
+//! consistency.
+
+use tlrs::coordinator::session::{Decision, PlanSession, SessionConfig};
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::model::{Delta, DemandSeg, DenseProfile, Instance, Task};
+use tlrs::util::rng::Rng;
+
+fn base_instance(seed: u64, n: usize) -> Instance {
+    generate(&SynthParams { n, m: 4, dims: 3, ..Default::default() }, seed)
+}
+
+/// A deterministic mixed delta stream: admits (flat and shaped), retires
+/// of random live ids, reshapes of random live ids.
+fn delta_stream(inst: &Instance, seed: u64, len: usize) -> Vec<Delta> {
+    let mut rng = Rng::new(seed);
+    let dims = inst.dims();
+    let horizon = inst.horizon;
+    let mut live: Vec<u64> = inst.tasks.iter().map(|t| t.id).collect();
+    let mut next_id = live.iter().copied().max().unwrap_or(0) + 1;
+    let mut out = Vec::with_capacity(len);
+    for k in 0..len {
+        let roll = rng.below(10);
+        if roll < 5 || live.len() < 8 {
+            // admit 1-2 fresh tasks; every third admit is piecewise
+            let count = 1 + (rng.below(2) as usize);
+            let mut tasks = Vec::new();
+            for _ in 0..count {
+                let a = rng.below(horizon as u64) as u32;
+                let b = rng.below(horizon as u64) as u32;
+                let (start, end) = (a.min(b), a.max(b));
+                let demand: Vec<f64> =
+                    (0..dims).map(|_| rng.uniform(0.01, 0.12)).collect();
+                let task = if k % 3 == 0 && end > start {
+                    let mid = start + (end - start) / 2;
+                    let low: Vec<f64> = demand.iter().map(|d| d * 0.4).collect();
+                    Task::piecewise(
+                        next_id,
+                        vec![
+                            DemandSeg { start, end: mid, demand: low },
+                            DemandSeg { start: mid + 1, end, demand },
+                        ],
+                    )
+                } else {
+                    Task::new(next_id, demand, start, end)
+                };
+                live.push(next_id);
+                next_id += 1;
+                tasks.push(task);
+            }
+            out.push(Delta::Admit { tasks });
+        } else if roll < 8 {
+            let i = rng.below(live.len() as u64) as usize;
+            let id = live.swap_remove(i);
+            out.push(Delta::Retire { ids: vec![id] });
+        } else {
+            let i = rng.below(live.len() as u64) as usize;
+            let id = live[i];
+            let a = rng.below(horizon as u64) as u32;
+            let b = rng.below(horizon as u64) as u32;
+            let demand: Vec<f64> = (0..dims).map(|_| rng.uniform(0.01, 0.15)).collect();
+            out.push(Delta::Reshape {
+                task: Task::new(id, demand, a.min(b), a.max(b)),
+            });
+        }
+    }
+    out
+}
+
+#[test]
+fn forced_cold_resolve_is_bit_identical_to_a_cold_solve_of_the_final_instance() {
+    // warm-starting off + a final capacity reprice (which forces a full
+    // re-solve) => the session's last answer runs exactly the cold solve
+    // path on the final instance; opening a fresh session on that
+    // instance must reproduce it bit for bit.
+    let inst = base_instance(31, 50);
+    let cfg = SessionConfig { warm: false, escalate_ratio: None, ..Default::default() };
+    let (mut s, _) = PlanSession::open(inst.clone(), cfg.clone()).unwrap();
+    for d in delta_stream(&inst, 77, 24) {
+        s.apply(&d).unwrap();
+    }
+    // final delta: nudge every capacity (catalog shape change => forced
+    // full re-solve, cold because warm=false)
+    let mut cat = s.instance().node_types.clone();
+    for b in cat.iter_mut() {
+        for c in b.capacity.iter_mut() {
+            *c = (*c * 0.97).max(1e-3);
+        }
+    }
+    let rep = s.apply(&Delta::Reprice { node_types: cat }).unwrap();
+    assert_eq!(rep.decision, Decision::Resolve, "{rep:?}");
+
+    let final_inst = s.instance().clone();
+    let (cold, cold_open) = PlanSession::open(final_inst.clone(), cfg).unwrap();
+    assert_eq!(s.cost().to_bits(), cold_open.cost.to_bits(), "cost must match bit for bit");
+    let a = s.solution();
+    let b = cold.solution();
+    assert_eq!(a.assignment, b.assignment);
+    assert_eq!(a.nodes.len(), b.nodes.len());
+    for (x, y) in a.nodes.iter().zip(&b.nodes) {
+        assert_eq!(x.type_idx, y.type_idx);
+        assert_eq!(x.tasks, y.tasks);
+    }
+}
+
+#[test]
+fn every_intermediate_incremental_solution_is_verify_clean() {
+    // pure incremental mode (no escalation): after every delta the
+    // session state passes the independent dense-profile verifier and
+    // never dips below the refreshed certified LB
+    for seed in [1u64, 2, 3] {
+        let inst = base_instance(seed, 40);
+        let cfg = SessionConfig { escalate_ratio: None, ..Default::default() };
+        let (mut s, open) = PlanSession::open(inst.clone(), cfg).unwrap();
+        assert!(open.lower_bound <= open.cost + 1e-6);
+        for (i, d) in delta_stream(&inst, seed * 13 + 5, 40).iter().enumerate() {
+            let rep = s.apply(d).unwrap();
+            assert_eq!(rep.decision, Decision::Repair, "escalation is off");
+            let sol = s.solution();
+            assert!(
+                sol.verify_with::<DenseProfile>(s.instance()).is_ok(),
+                "seed {seed} delta {i} ({}) fails dense verify",
+                d.op()
+            );
+            assert!(
+                rep.cost >= rep.lower_bound - 1e-6,
+                "seed {seed} delta {i}: cost {} below certified LB {}",
+                rep.cost,
+                rep.lower_bound
+            );
+        }
+        let (n, repairs, resolves) = s.delta_counts();
+        assert_eq!(n, 40);
+        assert_eq!(repairs, 40);
+        assert_eq!(resolves, 0);
+    }
+}
+
+#[test]
+fn warm_started_escalation_stays_near_the_cold_answer() {
+    // aggressive escalation with warm starts: the session must stay
+    // verify-clean and land within a modest factor of a cold solve of
+    // the final instance (warm-started PDHG may round to a slightly
+    // different mapping — near-optimality, not bit-identity)
+    let inst = base_instance(9, 45);
+    let cfg = SessionConfig { escalate_ratio: Some(1.0), warm: true, ..Default::default() };
+    let (mut s, _) = PlanSession::open(inst.clone(), cfg.clone()).unwrap();
+    let mut resolves = 0usize;
+    for d in delta_stream(&inst, 41, 20) {
+        let rep = s.apply(&d).unwrap();
+        if rep.decision == Decision::Resolve {
+            resolves += 1;
+        }
+        assert!(rep.cost >= rep.lower_bound - 1e-6);
+    }
+    assert!(resolves > 0, "ratio 1.0 should escalate at least once in 20 deltas");
+    let (cold, cold_open) = PlanSession::open(s.instance().clone(), cfg).unwrap();
+    let _ = cold;
+    assert!(
+        s.cost() <= cold_open.cost * 1.25 + 1e-9,
+        "warm final {} vs cold {}",
+        s.cost(),
+        cold_open.cost
+    );
+    assert!(s.solution().verify_with::<DenseProfile>(s.instance()).is_ok());
+}
+
+#[test]
+fn replayed_delta_stream_matches_an_equivalent_cold_instance_when_escalated() {
+    // escalation ratio 1.0 with warm=false: every delta that escalates
+    // re-solves cold, so after a delta whose decision was Resolve the
+    // session equals a cold open of its current instance
+    let inst = base_instance(17, 35);
+    let cfg = SessionConfig { warm: false, escalate_ratio: Some(1.0), ..Default::default() };
+    let (mut s, _) = PlanSession::open(inst.clone(), cfg.clone()).unwrap();
+    let mut checked = 0usize;
+    for d in delta_stream(&inst, 23, 16) {
+        let rep = s.apply(&d).unwrap();
+        if rep.decision == Decision::Resolve && checked < 3 {
+            let (cold, cold_open) = PlanSession::open(s.instance().clone(), cfg.clone()).unwrap();
+            assert_eq!(s.cost().to_bits(), cold_open.cost.to_bits());
+            assert_eq!(s.solution().assignment, cold.solution().assignment);
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no escalation fired — widen the stream");
+}

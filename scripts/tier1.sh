@@ -61,6 +61,37 @@ echo "== tier1: csv trace import round-trip =="
     --algo lp+fill --backend native > /dev/null
 rm "$GEN_DIR/rt-src.json" "$GEN_DIR/rt-trace.csv" "$GEN_DIR/rt-import.json"
 
+echo "== tier1: plan-session smoke =="
+# open -> admit -> reshape -> retire -> close through the incremental
+# session path; --check asserts per-delta cost >= certified LB and an
+# independent dense-backend verify of the final state
+"$TLRS" gen --workload synth:n=50,m=4,dims=2 --seed 3 --out "$GEN_DIR/sess.json"
+cat > "$GEN_DIR/sess-deltas.jsonl" <<'EOF'
+# tier1 session smoke: admit two tasks (one piecewise), reshape, retire
+{"op":"admit","tasks":[{"id":9001,"demand":[0.08,0.05],"start":0,"end":6},{"id":9002,"segments":[{"start":2,"end":4,"demand":[0.02,0.02]},{"start":5,"end":9,"demand":[0.09,0.04]}],"start":2,"end":9}]}
+{"op":"reshape","id":9001,"demand":[0.12,0.1],"start":1,"end":8}
+{"op":"reprice","node_types":[]}
+{"op":"retire","ids":[9001,9002]}
+EOF
+# the deliberately-invalid reprice line must fail the stream loader...
+if "$TLRS" session --input "$GEN_DIR/sess.json" --deltas "$GEN_DIR/sess-deltas.jsonl" \
+    --check > /dev/null 2>&1; then
+    echo "session smoke: invalid delta was not rejected"; exit 1
+fi
+# ...and without it the stream must replay clean
+grep -v reprice "$GEN_DIR/sess-deltas.jsonl" > "$GEN_DIR/sess-deltas-ok.jsonl"
+"$TLRS" session --input "$GEN_DIR/sess.json" --deltas "$GEN_DIR/sess-deltas-ok.jsonl" \
+    --check --escalate 1.5 | tee "$GEN_DIR/sess.out"
+grep -q "session check  : OK" "$GEN_DIR/sess.out"
+grep -q "retire" "$GEN_DIR/sess.out"
+
+echo "== tier1: session bench smoke =="
+TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+    cargo bench --bench session
+test -f BENCH_session.json
+head -c 400 BENCH_session.json
+echo
+
 echo "== tier1: placement bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
     cargo bench --bench placement
