@@ -9,15 +9,19 @@
 
 use std::time::Duration;
 
+use tlrs::algo::decompose::{parse_decompose, solve_decomposed};
 use tlrs::algo::fill::solve_with_filling;
 use tlrs::algo::penalty_map::{map_tasks, MappingPolicy};
+use tlrs::algo::pipeline::parse_portfolio;
 use tlrs::algo::placement::FitPolicy;
 use tlrs::algo::twophase::{
-    solve_with_mapping, solve_with_mapping_ref, solve_with_mapping_sequential,
+    solve_with_mapping, solve_with_mapping_ref, solve_with_mapping_scan,
+    solve_with_mapping_sequential,
 };
 use tlrs::io::synth::{generate, SynthParams};
+use tlrs::lp::solver::{MappingSolver, NativePdhgSolver};
 use tlrs::model::trim;
-use tlrs::util::bench::{bench, fmt_ns, BenchResult};
+use tlrs::util::bench::{bench, bench_n, fmt_ns, BenchResult};
 use tlrs::util::json::Json;
 
 fn main() {
@@ -176,6 +180,98 @@ fn main() {
     results.push(shaped_bench);
     results.push(split_bench);
 
+    // hot-path lever A/B at a fixed moderate n, all single-threaded so
+    // the deltas are separable:
+    //   dense    -> scan        isolates the SoA segment-tree store
+    //   scan     -> indexed-seq isolates the bucketed-headroom index
+    let n_ab = if quick { 2_000 } else { 8_000 };
+    let ab = generate(&SynthParams { n: n_ab, ..Default::default() }, 21);
+    let ab = trim(&ab).instance;
+    let ab_mapping = map_tasks(&ab, MappingPolicy::HAvg);
+    let ab_dense = bench(&format!("first_fit/ab dense n={n_ab}"), gct_budget, || {
+        solve_with_mapping_ref(&ab, &ab_mapping, FitPolicy::FirstFit)
+    });
+    let ab_scan = bench(&format!("first_fit/ab scan n={n_ab}"), gct_budget, || {
+        solve_with_mapping_scan(&ab, &ab_mapping, FitPolicy::FirstFit)
+    });
+    let ab_indexed = bench(&format!("first_fit/ab indexed n={n_ab}"), gct_budget, || {
+        solve_with_mapping_sequential(&ab, &ab_mapping, FitPolicy::FirstFit)
+    });
+    let soa_speedup = ab_dense.mean_ns / ab_scan.mean_ns;
+    let index_speedup = ab_scan.mean_ns / ab_indexed.mean_ns;
+    println!(
+        "levers at n={n_ab}: SoA segment store {soa_speedup:.2}x over dense, \
+         bucketed index {index_speedup:.2}x over scan (dense {} -> scan {} -> indexed {})",
+        fmt_ns(ab_dense.mean_ns),
+        fmt_ns(ab_scan.mean_ns),
+        fmt_ns(ab_indexed.mean_ns)
+    );
+    results.push(ab_dense);
+    results.push(ab_scan);
+    results.push(ab_indexed);
+
+    // decomposed vs monolithic, n sweep up to 10^6. The penalty-based
+    // portfolio keeps both arms LP-free (a mapping LP at n=10^6 is the
+    // memory wall the decomposition exists to avoid), so the comparison
+    // isolates the partition fan-out + stitch against one monolithic
+    // two-phase solve over the identical instance.
+    let portfolio = parse_portfolio("penalty-map").expect("preset");
+    let factory: &(dyn Fn() -> Box<dyn MappingSolver> + Sync) =
+        &|| Box::new(NativePdhgSolver::default());
+    let sweep: &[usize] = if quick { &[2_000, 20_000] } else { &[10_000, 100_000, 1_000_000] };
+    let mut decomposed_speedup = 0.0f64;
+    let mut decomposed_norm_cost = 0.0f64;
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    for &n in sweep {
+        let samples = if n >= 100_000 { 1 } else { 3 };
+        let inst = generate(&SynthParams { n, m: 5, ..Default::default() }, 31);
+        let tr = trim(&inst).instance;
+        let solver = NativePdhgSolver::default();
+        let mono = bench_n(&format!("solve/monolithic n={n}"), samples, || {
+            portfolio.run_sequential(&tr, &solver).expect("monolithic solve")
+        });
+        let spec = parse_decompose("window:16").expect("spec");
+        let deco = bench_n(&format!("solve/decomposed window:16 n={n}"), samples, || {
+            solve_decomposed(&tr, &portfolio, factory, &spec).expect("decomposed solve")
+        });
+        // correctness gate on the artifact numbers: the decomposed plan
+        // must verify and respect its own certificate at every point
+        let rep = solve_decomposed(&tr, &portfolio, factory, &spec).expect("decomposed solve");
+        rep.solution.verify(&tr).expect("decomposed solution verifies");
+        assert!(
+            rep.certified_lb <= rep.cost + 1e-6 * (1.0 + rep.cost),
+            "certified lb {} above cost {}",
+            rep.certified_lb,
+            rep.cost
+        );
+        let speedup = mono.mean_ns / deco.mean_ns;
+        let norm = rep.cost / rep.certified_lb.max(1e-12);
+        println!(
+            "decomposed n={n}: {speedup:.2}x over monolithic (mono {} -> deco {}), \
+             cost {:.2} vs certified lb {:.2} ({norm:.3}x), stitch saved {:.2}%",
+            fmt_ns(mono.mean_ns),
+            fmt_ns(deco.mean_ns),
+            rep.cost,
+            rep.certified_lb,
+            100.0 * (rep.pre_stitch_cost - rep.cost) / rep.pre_stitch_cost.max(1e-12)
+        );
+        sweep_rows.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("monolithic_ns", Json::Num(mono.mean_ns)),
+            ("decomposed_ns", Json::Num(deco.mean_ns)),
+            ("speedup", Json::Num(speedup)),
+            ("cost", Json::Num(rep.cost)),
+            ("certified_lb", Json::Num(rep.certified_lb)),
+            ("normalized_cost", Json::Num(norm)),
+            ("pre_stitch_cost", Json::Num(rep.pre_stitch_cost)),
+            ("partitions", Json::Num(rep.partitions.len() as f64)),
+        ]));
+        decomposed_speedup = speedup;
+        decomposed_norm_cost = norm;
+        results.push(mono);
+        results.push(deco);
+    }
+
     let json = Json::obj(vec![
         ("bench", Json::Str("placement".into())),
         ("quick", Json::Bool(quick)),
@@ -186,6 +282,12 @@ fn main() {
         ("shaped_n_segments_tasks", Json::Num(n_shaped as f64)),
         ("shaped_n_split_tasks", Json::Num(n_split as f64)),
         ("shaped_vs_flat_split_speedup", Json::Num(shaped_speedup)),
+        ("soa_segment_store_speedup", Json::Num(soa_speedup)),
+        ("bucketed_index_speedup", Json::Num(index_speedup)),
+        ("decomposed_max_n", Json::Num(*sweep.last().unwrap() as f64)),
+        ("decomposed_vs_monolithic_speedup", Json::Num(decomposed_speedup)),
+        ("decomposed_normalized_cost", Json::Num(decomposed_norm_cost)),
+        ("decomposed_sweep", Json::Arr(sweep_rows)),
         (
             "results",
             Json::Arr(results.iter().map(BenchResult::to_json).collect()),

@@ -1,0 +1,683 @@
+//! Partition-decomposed solves for million-task instances.
+//!
+//! One monolithic solve means one mapping LP over *all* tasks and greedy
+//! placement whose candidate scans grow with the whole node pool. At
+//! n = 10^6 that is the scaling wall. A decomposed solve splits the task
+//! set with a pluggable [`Partitioner`], solves each partition
+//! *concurrently* on the worker pool through the unchanged
+//! [`Portfolio`] API (each partition gets its own trimmed sub-instance,
+//! its own shared-LP race, its own certified bound), concatenates the
+//! per-partition solutions, and runs the stitching cross-fill pass
+//! (`fill::stitch_fill`) over the merged node pool to reclaim the
+//! leftover capacity the partition boundaries fragmented.
+//!
+//! ## The combined certificate
+//!
+//! Two different sums are worth telling apart, because only one of them
+//! is a global lower bound:
+//!
+//! * **`sum_lb` = Σ_P lb(P)** is the *decomposition certificate*: a
+//!   valid lower bound on any plan in which partitions do not share
+//!   nodes — in particular on the merged, pre-stitch solution
+//!   (`pre_stitch_cost >= sum_lb` always). It is **not** a bound on the
+//!   global optimum: nodes persist the whole horizon, so an optimal
+//!   plan may reuse one node across time-disjoint partitions and beat
+//!   the sum.
+//! * **`certified_lb` = max(max_P lb(P), congestion(whole))** is the
+//!   *globally valid* certificate this report exposes as such.
+//!   Restricting any global solution to one partition's tasks yields a
+//!   feasible (and no costlier) solution of that partition, so every
+//!   per-partition bound individually lower-bounds the global optimum;
+//!   Lemma 1's congestion bound over the whole instance is valid by
+//!   construction and computed instance-direct
+//!   (`lp::dual::congestion_bound_instance`) to avoid materializing the
+//!   n·S·m·D ratio table of a full mapping LP.
+//!
+//! Reported costs always satisfy `certified_lb <= cost <= pre_stitch
+//! cost`, and stitching can push `cost` below `sum_lb` — that is the
+//! node-sharing the per-partition certificate cannot see, working as
+//! intended.
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::lp::dual::congestion_bound_instance;
+use crate::lp::solver::MappingSolver;
+use crate::model::{trim, Instance, Solution};
+use crate::util::pool::run_indexed;
+
+use super::fill::stitch_fill;
+use super::pipeline::{Portfolio, StageTime};
+use super::placement::FitPolicy;
+use super::segregate::{merge_solutions, split_small_large, sub_instance};
+
+/// Untrusted-spec cap on the partition count (mirrors the grammar caps
+/// from the workload/portfolio parsers): service clients must not be
+/// able to request an absurd fan-out.
+pub const MAX_PARTITIONS: usize = 64;
+
+/// Grammar accepted by [`parse_decompose`] (printed by its errors and
+/// the CLI usage text).
+pub const DECOMPOSE_GRAMMAR: &str = "\
+decompose spec grammar:
+  window[:k]   k near-equal chunks in task start order (default k=8)
+  dims[:k]     group by dominant demand dimension; k keeps the k-1
+               largest groups and merges the rest (default: one group
+               per dimension)
+  size[:k]     segregate large tasks, window-chunk the small ones into
+               k-1 groups (default k=2)
+constraints: 1 <= k <= 64, and k must not exceed the task count";
+
+/// Which partitioning family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Near-equal chunks in (start, index) order — the DVBP-style
+    /// time-window axis; best when load is spread over the horizon.
+    Window,
+    /// Group by dominant demand dimension, so each sub-solve packs
+    /// tasks that contend on the same resource.
+    Dims,
+    /// Segregate-style: large tasks (which dominate node purchases)
+    /// solved apart from the smalls.
+    Size,
+}
+
+/// A parsed `--decompose` / service `decompose` value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecomposeSpec {
+    pub kind: PartitionKind,
+    /// Requested partition count; `None` means the family default.
+    pub k: Option<usize>,
+}
+
+impl DecomposeSpec {
+    /// The partition count this spec asks for (family default applied).
+    /// `Dims` without `k` is data-dependent (one group per dimension),
+    /// reported as `None`.
+    pub fn requested_k(&self) -> Option<usize> {
+        match (self.kind, self.k) {
+            (_, Some(k)) => Some(k),
+            (PartitionKind::Window, None) => Some(8),
+            (PartitionKind::Size, None) => Some(2),
+            (PartitionKind::Dims, None) => None,
+        }
+    }
+
+    /// The partitioner implementing this spec.
+    pub fn partitioner(&self) -> Box<dyn Partitioner> {
+        match self.kind {
+            PartitionKind::Window => {
+                Box::new(WindowPartitioner { k: self.requested_k().unwrap() })
+            }
+            PartitionKind::Dims => Box::new(DimsPartitioner { k: self.k }),
+            PartitionKind::Size => {
+                Box::new(SizePartitioner { k: self.requested_k().unwrap() })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for DecomposeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let kind = match self.kind {
+            PartitionKind::Window => "window",
+            PartitionKind::Dims => "dims",
+            PartitionKind::Size => "size",
+        };
+        match self.k {
+            Some(k) => write!(f, "{kind}:{k}"),
+            None => write!(f, "{kind}"),
+        }
+    }
+}
+
+/// Parse `window|dims|size[:k]`. Degenerate counts (k = 0, k beyond
+/// [`MAX_PARTITIONS`]) are rejected here — errors, not clamped solves;
+/// the task-count check needs the instance and lives in
+/// [`partition_tasks`].
+pub fn parse_decompose(spec: &str) -> Result<DecomposeSpec> {
+    let spec = spec.trim();
+    let (head, k) = match spec.split_once(':') {
+        None => (spec, None),
+        Some((head, ks)) => {
+            let k: usize = ks.trim().parse().map_err(|_| {
+                anyhow::anyhow!(
+                    "decompose spec '{spec}': '{ks}' is not a partition count\n{DECOMPOSE_GRAMMAR}"
+                )
+            })?;
+            (head.trim(), Some(k))
+        }
+    };
+    let kind = match head {
+        "window" => PartitionKind::Window,
+        "dims" => PartitionKind::Dims,
+        "size" => PartitionKind::Size,
+        other => bail!("decompose spec '{spec}': unknown partitioner '{other}'\n{DECOMPOSE_GRAMMAR}"),
+    };
+    if let Some(k) = k {
+        ensure!(k >= 1, "decompose spec '{spec}': k must be >= 1\n{DECOMPOSE_GRAMMAR}");
+        ensure!(
+            k <= MAX_PARTITIONS,
+            "decompose spec '{spec}': k = {k} exceeds the cap of {MAX_PARTITIONS}\n{DECOMPOSE_GRAMMAR}"
+        );
+    }
+    Ok(DecomposeSpec { kind, k })
+}
+
+/// A task-set partitioning strategy. Implementations must emit
+/// non-empty, disjoint, covering parts — [`solve_decomposed`] re-checks
+/// all three and errors (rather than solving a degenerate instance) on
+/// violation, so a buggy custom partitioner cannot silently lose or
+/// duplicate tasks.
+pub trait Partitioner {
+    /// Display name for telemetry ("window", "dims", "size", ...).
+    fn name(&self) -> &'static str;
+
+    /// Label for partition `i` of the emitted list (telemetry rows).
+    fn part_label(&self, i: usize) -> String {
+        format!("{}:{i}", self.name())
+    }
+
+    /// Split `0..inst.n_tasks()` into non-empty, disjoint, covering
+    /// parts.
+    fn partition(&self, inst: &Instance) -> Result<Vec<Vec<usize>>>;
+}
+
+/// Chunk `order` into `k` near-equal contiguous runs (first `len % k`
+/// runs get the extra task). `k` must not exceed `order.len()`.
+fn chunk(order: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let n = order.len();
+    let (base, extra) = (n / k, n % k);
+    let mut parts = Vec::with_capacity(k);
+    let mut at = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        parts.push(order[at..at + len].to_vec());
+        at += len;
+    }
+    parts
+}
+
+/// Guard shared by the built-in partitioners: a requested count must
+/// not exceed the task count (an empty chunk is an error, not a
+/// degenerate solve).
+fn ensure_k_fits(name: &str, k: usize, n: usize) -> Result<()> {
+    ensure!(n > 0, "decompose {name}: instance has no tasks");
+    ensure!(
+        k <= n,
+        "decompose {name}:{k}: partition count exceeds the {n} task(s); \
+         lower k or solve without --decompose"
+    );
+    Ok(())
+}
+
+/// Near-equal chunks in (start, index) order.
+pub struct WindowPartitioner {
+    pub k: usize,
+}
+
+impl Partitioner for WindowPartitioner {
+    fn name(&self) -> &'static str {
+        "window"
+    }
+
+    fn partition(&self, inst: &Instance) -> Result<Vec<Vec<usize>>> {
+        ensure_k_fits(self.name(), self.k, inst.n_tasks())?;
+        let mut order: Vec<usize> = (0..inst.n_tasks()).collect();
+        order.sort_by_key(|&u| (inst.tasks[u].start, u));
+        Ok(chunk(&order, self.k))
+    }
+}
+
+/// Group tasks by dominant demand dimension: `argmax_d peak(u, d) /
+/// cap_ref(d)` with the mean per-dimension capacity over node-types as
+/// the reference scale (first dimension wins ties). With `k`, the k-1
+/// largest groups are kept and the rest merge into one.
+pub struct DimsPartitioner {
+    pub k: Option<usize>,
+}
+
+impl Partitioner for DimsPartitioner {
+    fn name(&self) -> &'static str {
+        "dims"
+    }
+
+    fn partition(&self, inst: &Instance) -> Result<Vec<Vec<usize>>> {
+        let n = inst.n_tasks();
+        ensure_k_fits(self.name(), self.k.unwrap_or(1), n)?;
+        let dims = inst.dims();
+        let m = inst.n_types() as f64;
+        let cap_ref: Vec<f64> = (0..dims)
+            .map(|d| inst.node_types.iter().map(|nt| nt.capacity[d]).sum::<f64>() / m)
+            .collect();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); dims];
+        for (u, task) in inst.tasks.iter().enumerate() {
+            let peak = task.peak();
+            let mut sig = 0usize;
+            let mut best = f64::NEG_INFINITY;
+            for d in 0..dims {
+                let v = peak[d] / cap_ref[d];
+                if v > best {
+                    best = v;
+                    sig = d;
+                }
+            }
+            groups[sig].push(u);
+        }
+        let mut parts: Vec<Vec<usize>> = groups.into_iter().filter(|g| !g.is_empty()).collect();
+        if let Some(k) = self.k {
+            if parts.len() > k {
+                // keep the k-1 largest groups (stable order on ties),
+                // merge the tail into one
+                let mut by_size: Vec<usize> = (0..parts.len()).collect();
+                by_size.sort_by_key(|&i| (std::cmp::Reverse(parts[i].len()), i));
+                let keep: std::collections::BTreeSet<usize> =
+                    by_size[..k - 1].iter().copied().collect();
+                let mut kept = Vec::with_capacity(k);
+                let mut rest = Vec::new();
+                for (i, g) in parts.into_iter().enumerate() {
+                    if keep.contains(&i) {
+                        kept.push(g);
+                    } else {
+                        rest.extend(g);
+                    }
+                }
+                rest.sort_unstable();
+                kept.push(rest);
+                parts = kept;
+            }
+        }
+        Ok(parts)
+    }
+}
+
+/// Segregate-style: the large tasks (too big to be "small" for every
+/// node-type) in one partition, the smalls window-chunked into `k - 1`.
+pub struct SizePartitioner {
+    pub k: usize,
+}
+
+impl Partitioner for SizePartitioner {
+    fn name(&self) -> &'static str {
+        "size"
+    }
+
+    fn part_label(&self, i: usize) -> String {
+        if i == 0 {
+            "size:large".into()
+        } else {
+            format!("size:small:{}", i - 1)
+        }
+    }
+
+    fn partition(&self, inst: &Instance) -> Result<Vec<Vec<usize>>> {
+        ensure_k_fits(self.name(), self.k, inst.n_tasks())?;
+        if self.k == 1 {
+            // one requested partition is the whole task set: the solve
+            // takes the exact non-decomposed sequential path
+            return Ok(vec![(0..inst.n_tasks()).collect()]);
+        }
+        let (mut small, large) = split_small_large(inst);
+        // when one side is empty the family degrades to fewer parts —
+        // never to an empty part
+        if small.is_empty() {
+            return Ok(vec![large]);
+        }
+        let small_parts = (self.k - 1).clamp(1, small.len());
+        small.sort_by_key(|&u| (inst.tasks[u].start, u));
+        let mut parts = Vec::with_capacity(small_parts + 1);
+        if !large.is_empty() {
+            parts.push(large);
+        }
+        parts.extend(chunk(&small, small_parts));
+        Ok(parts)
+    }
+}
+
+/// Validate that `parts` is a true partition of `0..n`: non-empty
+/// parts, disjoint, covering. Errors name the first violation.
+pub fn validate_partition(n_tasks: usize, parts: &[Vec<usize>]) -> Result<()> {
+    ensure!(!parts.is_empty(), "partitioner returned no partitions");
+    ensure!(
+        parts.len() <= n_tasks.max(1),
+        "{} partitions exceed the {n_tasks} task(s)",
+        parts.len()
+    );
+    let mut owner = vec![false; n_tasks];
+    let mut covered = 0usize;
+    for (i, part) in parts.iter().enumerate() {
+        ensure!(!part.is_empty(), "partition {i} is empty");
+        for &u in part {
+            ensure!(u < n_tasks, "partition {i} references task {u} out of {n_tasks}");
+            ensure!(!owner[u], "task {u} appears in more than one partition");
+            owner[u] = true;
+            covered += 1;
+        }
+    }
+    ensure!(
+        covered == n_tasks,
+        "partitions cover {covered} of {n_tasks} tasks"
+    );
+    Ok(())
+}
+
+/// Factory producing a per-worker LP solver: each concurrent partition
+/// solve gets its own instance, so the factory (not the solver) must be
+/// shareable across threads.
+pub type SolverFactory<'a> = &'a (dyn Fn() -> Box<dyn MappingSolver> + Sync);
+
+/// Telemetry for one solved partition.
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    pub label: String,
+    pub n_tasks: usize,
+    /// Cost of the partition's winning solution (also its contribution
+    /// to the merged pre-stitch cost).
+    pub cost: f64,
+    /// Certified lower bound for the partition as a standalone
+    /// instance: best of the portfolio's LP certificate and the
+    /// partition's congestion bound. Individually valid for the *whole*
+    /// instance too (see the module docs).
+    pub lb: f64,
+    pub seconds: f64,
+    /// Label of the partition's winning pipeline.
+    pub winner: String,
+}
+
+/// Result of a decomposed solve.
+#[derive(Clone, Debug)]
+pub struct DecomposeReport {
+    /// The stitched, verified-shape final solution over the input
+    /// instance's task indices.
+    pub solution: Solution,
+    /// Cost of `solution`.
+    pub cost: f64,
+    /// Globally valid certified bound:
+    /// `max(max_P lb(P), congestion(whole instance))`.
+    pub certified_lb: f64,
+    /// Σ per-partition bounds — the node-disjoint decomposition
+    /// certificate (`pre_stitch_cost >= sum_lb`); NOT a global bound.
+    pub sum_lb: f64,
+    /// Whole-instance Lemma-1 congestion bound (instance-direct).
+    pub congestion_lb: f64,
+    /// Merged cost before stitching reclaimed cross-partition leftovers.
+    pub pre_stitch_cost: f64,
+    /// Wall time of the concurrent partition fan-out.
+    pub partition_seconds: f64,
+    /// Wall time of the stitching refine pass.
+    pub stitch_seconds: f64,
+    /// Per-partition telemetry, in partition order.
+    pub partitions: Vec<PartitionReport>,
+    /// Stage timings (partition / solve / merge / stitch), same shape as
+    /// `SolveReport::stages`.
+    pub stages: Vec<StageTime>,
+}
+
+/// The stitch pass runs first-fit relocation: deterministic, cheapest
+/// per probe, and the similarity objective adds nothing when the only
+/// question is "does the victim drain completely".
+const STITCH_POLICY: FitPolicy = FitPolicy::FirstFit;
+
+/// Solve `inst` decomposed: partition, solve partitions concurrently
+/// through the unchanged portfolio API, merge, stitch.
+///
+/// A single-partition spec routes the outer instance directly through
+/// `portfolio.run_sequential` — bit-identical to a non-decomposed
+/// sequential solve (no sub-instance relabeling, no stitch pass).
+pub fn solve_decomposed(
+    inst: &Instance,
+    portfolio: &Portfolio,
+    make_solver: SolverFactory,
+    spec: &DecomposeSpec,
+) -> Result<DecomposeReport> {
+    let partitioner = spec.partitioner();
+    let t_part = Instant::now();
+    let parts = partitioner.partition(inst)?;
+    validate_partition(inst.n_tasks(), &parts)?;
+    let partition_prep = t_part.elapsed().as_secs_f64();
+
+    if parts.len() == 1 {
+        let t0 = Instant::now();
+        let rep = portfolio.run_sequential(inst, make_solver().as_ref())?;
+        let secs = t0.elapsed().as_secs_f64();
+        let best = rep.best();
+        let congestion_lb = congestion_bound_instance(inst);
+        let lb = rep.certified_lb().unwrap_or(0.0).max(congestion_lb);
+        return Ok(DecomposeReport {
+            solution: best.solution.clone(),
+            cost: best.cost,
+            certified_lb: lb,
+            sum_lb: lb,
+            congestion_lb,
+            pre_stitch_cost: best.cost,
+            partition_seconds: secs,
+            stitch_seconds: 0.0,
+            partitions: vec![PartitionReport {
+                label: partitioner.part_label(0),
+                n_tasks: inst.n_tasks(),
+                cost: best.cost,
+                lb,
+                seconds: secs,
+                winner: best.label.clone(),
+            }],
+            stages: vec![
+                StageTime { stage: "partition".into(), seconds: partition_prep },
+                StageTime { stage: "solve".into(), seconds: secs },
+            ],
+        });
+    }
+
+    // concurrent per-partition solves: each worker trims its
+    // sub-instance and races the full portfolio sequentially (the
+    // parallelism budget is spent across partitions, not within one)
+    let t_solve = Instant::now();
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    let outcomes: Vec<Result<(Solution, f64, f64, f64, String)>> =
+        run_indexed(parts.len(), workers.min(parts.len()), |i| {
+            let t0 = Instant::now();
+            let sub = sub_instance(inst, &parts[i]);
+            let sub = trim(&sub).instance;
+            let rep = portfolio.run_sequential(&sub, make_solver().as_ref())?;
+            let lb = rep
+                .certified_lb()
+                .unwrap_or(0.0)
+                .max(congestion_bound_instance(&sub));
+            let best = rep.best();
+            Ok((
+                best.solution.clone(),
+                best.cost,
+                lb,
+                t0.elapsed().as_secs_f64(),
+                best.label.clone(),
+            ))
+        });
+    let mut solved = Vec::with_capacity(parts.len());
+    for (i, outcome) in outcomes.into_iter().enumerate() {
+        match outcome {
+            Ok(v) => solved.push(v),
+            Err(e) => bail!("partition {} ({}): {e}", i, partitioner.part_label(i)),
+        }
+    }
+    let partition_seconds = t_solve.elapsed().as_secs_f64();
+
+    // merge: concatenate per-partition node pools, remapping task ids
+    let t_merge = Instant::now();
+    let merge_parts: Vec<(&[usize], &Solution)> = parts
+        .iter()
+        .zip(&solved)
+        .map(|(keep, (sol, ..))| (keep.as_slice(), sol))
+        .collect();
+    let merged = merge_solutions(inst, &merge_parts);
+    let pre_stitch_cost = merged.cost(inst);
+    let merge_seconds = t_merge.elapsed().as_secs_f64();
+
+    // stitch: parallel per-type compaction + cross-type piggyback over
+    // the merged pool — the refine pass that lets partitions share nodes
+    let t_stitch = Instant::now();
+    let stitched = stitch_fill(inst, &merged, STITCH_POLICY);
+    let cost = stitched.cost(inst);
+    let stitch_seconds = t_stitch.elapsed().as_secs_f64();
+
+    let congestion_lb = congestion_bound_instance(inst);
+    let mut sum_lb = 0.0;
+    let mut max_lb: f64 = 0.0;
+    let partitions: Vec<PartitionReport> = solved
+        .iter()
+        .enumerate()
+        .map(|(i, (_, pcost, plb, psecs, winner))| {
+            sum_lb += plb;
+            max_lb = max_lb.max(*plb);
+            PartitionReport {
+                label: partitioner.part_label(i),
+                n_tasks: parts[i].len(),
+                cost: *pcost,
+                lb: *plb,
+                seconds: *psecs,
+                winner: winner.clone(),
+            }
+        })
+        .collect();
+    let certified_lb = max_lb.max(congestion_lb);
+    debug_assert!(
+        pre_stitch_cost >= sum_lb - 1e-6 * (1.0 + sum_lb.abs()),
+        "node-disjoint certificate violated: merged {pre_stitch_cost} < sum of bounds {sum_lb}"
+    );
+
+    Ok(DecomposeReport {
+        solution: stitched,
+        cost,
+        certified_lb,
+        sum_lb,
+        congestion_lb,
+        pre_stitch_cost,
+        partition_seconds,
+        stitch_seconds,
+        partitions,
+        stages: vec![
+            StageTime { stage: "partition".into(), seconds: partition_prep },
+            StageTime { stage: "solve".into(), seconds: partition_seconds },
+            StageTime { stage: "merge".into(), seconds: merge_seconds },
+            StageTime { stage: "stitch".into(), seconds: stitch_seconds },
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::pipeline::parse_portfolio;
+    use crate::io::synth::{generate, SynthParams};
+    use crate::lp::solver::NativePdhgSolver;
+
+    fn factory() -> Box<dyn MappingSolver> {
+        Box::new(NativePdhgSolver::default())
+    }
+
+    fn test_instance(seed: u64, n: usize) -> Instance {
+        let inst = generate(&SynthParams { n, m: 4, ..Default::default() }, seed);
+        trim(&inst).instance
+    }
+
+    #[test]
+    fn parse_accepts_grammar() {
+        assert_eq!(
+            parse_decompose("window").unwrap(),
+            DecomposeSpec { kind: PartitionKind::Window, k: None }
+        );
+        assert_eq!(
+            parse_decompose("size:3").unwrap(),
+            DecomposeSpec { kind: PartitionKind::Size, k: Some(3) }
+        );
+        assert_eq!(parse_decompose("dims:5").unwrap().requested_k(), Some(5));
+        assert_eq!(parse_decompose(" window : 4 ").unwrap().k, Some(4));
+        assert_eq!(parse_decompose("window").unwrap().to_string(), "window");
+        assert_eq!(parse_decompose("dims:2").unwrap().to_string(), "dims:2");
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_counts() {
+        assert!(parse_decompose("window:0").is_err());
+        assert!(parse_decompose("window:65").is_err());
+        assert!(parse_decompose("window:x").is_err());
+        assert!(parse_decompose("shard:4").is_err());
+        assert!(parse_decompose("").is_err());
+        let msg = format!("{:#}", parse_decompose("window:0").unwrap_err());
+        assert!(msg.contains("grammar"), "error teaches the grammar: {msg}");
+    }
+
+    #[test]
+    fn partitions_are_disjoint_and_covering() {
+        let inst = test_instance(11, 90);
+        for spec in ["window:5", "dims", "dims:2", "size:3", "size"] {
+            let spec = parse_decompose(spec).unwrap();
+            let parts = spec.partitioner().partition(&inst).unwrap();
+            validate_partition(inst.n_tasks(), &parts).unwrap();
+            for part in &parts {
+                assert!(!part.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn partition_count_exceeding_tasks_is_error() {
+        let inst = test_instance(3, 5);
+        let spec = parse_decompose("window:8").unwrap();
+        let err = spec.partitioner().partition(&inst).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+        let spec = parse_decompose("size:8").unwrap();
+        assert!(spec.partitioner().partition(&inst).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_malformed_partitions() {
+        assert!(validate_partition(3, &[vec![0, 1, 2], vec![]]).is_err());
+        assert!(validate_partition(3, &[vec![0, 1]]).is_err());
+        assert!(validate_partition(3, &[vec![0, 1], vec![1, 2]]).is_err());
+        assert!(validate_partition(3, &[vec![0, 1], vec![2, 7]]).is_err());
+        assert!(validate_partition(3, &[]).is_err());
+        assert!(validate_partition(3, &[vec![0], vec![1], vec![2]]).is_ok());
+    }
+
+    #[test]
+    fn decomposed_solves_verify_and_bound_holds() {
+        let inst = test_instance(17, 120);
+        let portfolio = parse_portfolio("penalty-map,penalty-map-f").unwrap();
+        for spec in ["window:4", "dims", "size:2"] {
+            let spec = parse_decompose(spec).unwrap();
+            let rep = solve_decomposed(&inst, &portfolio, &factory, &spec).unwrap();
+            assert!(rep.solution.verify(&inst).is_ok(), "{spec:?}");
+            assert!(
+                rep.certified_lb <= rep.cost + 1e-6,
+                "{spec:?}: lb {} > cost {}",
+                rep.certified_lb,
+                rep.cost
+            );
+            assert!(rep.cost <= rep.pre_stitch_cost + 1e-9);
+            assert!(
+                rep.pre_stitch_cost >= rep.sum_lb - 1e-6,
+                "{spec:?}: node-disjoint certificate"
+            );
+            assert_eq!(
+                rep.partitions.iter().map(|p| p.n_tasks).sum::<usize>(),
+                inst.n_tasks()
+            );
+            assert!(rep.stages.iter().any(|s| s.stage == "stitch"));
+        }
+    }
+
+    #[test]
+    fn single_partition_matches_sequential_portfolio() {
+        let inst = test_instance(23, 80);
+        let portfolio = parse_portfolio("penalty-map,lp-map").unwrap();
+        let spec = parse_decompose("window:1").unwrap();
+        let rep = solve_decomposed(&inst, &portfolio, &factory, &spec).unwrap();
+        let direct = portfolio.run_sequential(&inst, &NativePdhgSolver::default()).unwrap();
+        let best = direct.best();
+        assert_eq!(rep.solution.assignment, best.solution.assignment);
+        assert_eq!(rep.solution.nodes.len(), best.solution.nodes.len());
+        assert_eq!(rep.cost.to_bits(), best.cost.to_bits());
+        assert_eq!(rep.partitions.len(), 1);
+        assert!((rep.stitch_seconds - 0.0).abs() < 1e-12);
+    }
+}

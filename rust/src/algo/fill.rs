@@ -8,7 +8,8 @@
 //! `h_avg(u|B)` order, never purchasing. Tasks mapped to less
 //! cost-effective node-types thus ride along on cheaper capacity.
 
-use crate::model::{Instance, Solution};
+use crate::model::{Instance, PlacedNode, Solution};
+use crate::util::pool::run_indexed;
 
 use super::penalty_map::h_avg_matrix;
 use super::placement::{place_group, select_node, to_solution, FitPolicy, NodeState};
@@ -71,6 +72,183 @@ pub fn solve_with_filling(
     }
     debug_assert!(remaining.iter().all(|&r| !r), "all tasks placed");
     to_solution(inst, placed_groups)
+}
+
+/// Victims with peak utilization below this fraction are offered for
+/// cross-type relocation in the stitch pass. Half-empty is the natural
+/// threshold: a victim above it rarely fits into leftovers anyway, and
+/// scanning every nearly-full node against every target is the cost the
+/// pass exists to avoid.
+const STITCH_VICTIM_UTIL: f64 = 0.5;
+
+/// Pick a destination among `cand` (indices into `nodes`) for task `u`,
+/// honoring the fit policy; never purchases. The candidate list is
+/// already in the deterministic order the policy scans (ascending
+/// purchase order for first-fit).
+fn masked_select(
+    inst: &Instance,
+    nodes: &[NodeState],
+    cand: &[usize],
+    u: usize,
+    policy: FitPolicy,
+) -> Option<usize> {
+    match policy {
+        FitPolicy::FirstFit => cand.iter().copied().find(|&i| nodes[i].fits(inst, u)),
+        FitPolicy::SimilarityFit => {
+            let mut best: Option<(usize, f64)> = None;
+            for &i in cand {
+                if nodes[i].fits(inst, u) {
+                    let s = nodes[i].similarity(inst, u);
+                    let better = match &best {
+                        None => true,
+                        Some((_, bs)) => s.total_cmp(bs) == std::cmp::Ordering::Greater,
+                    };
+                    if better {
+                        best = Some((i, s));
+                    }
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+    }
+}
+
+/// Try to relocate every task of `nodes[victim]` into the candidate
+/// nodes, all-or-nothing: either the victim empties completely (true)
+/// or every tentative move is rolled back (false). Candidates must not
+/// include the victim.
+fn drain_node(
+    inst: &Instance,
+    nodes: &mut [NodeState],
+    victim: usize,
+    cand: &[usize],
+    policy: FitPolicy,
+) -> bool {
+    let tasks = nodes[victim].tasks.clone();
+    let mut moves: Vec<(usize, usize)> = Vec::with_capacity(tasks.len());
+    for &u in &tasks {
+        // the victim still holds u while probing destinations: fine, the
+        // candidate profiles are independent of the victim's
+        match masked_select(inst, nodes, cand, u, policy) {
+            Some(i) => {
+                nodes[i].add(inst, u);
+                moves.push((u, i));
+            }
+            None => {
+                for &(mu, mi) in moves.iter().rev() {
+                    nodes[mi].remove(inst, mu);
+                }
+                return false;
+            }
+        }
+    }
+    for &u in &tasks {
+        nodes[victim].remove(inst, u);
+    }
+    true
+}
+
+/// The stitching refine pass over a merged node pool — cross-fill
+/// re-imagined for decomposed solves, and the parallel half of the
+/// "parallel cross-fill" lever.
+///
+/// A decomposed solve (`algo/decompose.rs`) concatenates per-partition
+/// solutions, so nodes purchased by different partitions never share
+/// tasks even when one partition's leftovers could absorb another's —
+/// exactly the waste cross-fill hunts. Stitching runs in two phases:
+///
+/// 1. **Per-type compaction, in parallel.** Node-type groups are
+///    independent, so each runs on the worker pool: walk the type's
+///    nodes in ascending purchase order and try to relocate each node's
+///    tasks — all-or-nothing, with rollback — into earlier kept nodes
+///    of the same type. Emptied nodes are dropped. Purchase order makes
+///    the walk deterministic regardless of scheduling.
+/// 2. **Cross-type piggyback, sequential.** In decreasing
+///    capacity-per-cost order (the same `type_order` as filling), offer
+///    every under-utilized node of *other* types (peak utilization
+///    below [`STITCH_VICTIM_UTIL`]) for all-or-nothing relocation into
+///    the target type's kept nodes. Nothing is ever purchased, so any
+///    completed relocation saves the victim's whole node cost.
+///
+/// Kept nodes are renumbered by original purchase order, so the result
+/// is deterministic and `cost(stitched) <= cost(input)` always — the
+/// pass only ever drops nodes.
+pub fn stitch_fill(inst: &Instance, sol: &Solution, policy: FitPolicy) -> Solution {
+    let m = inst.n_types();
+    // canonical node order: ascending purchase order
+    let mut order: Vec<usize> = (0..sol.nodes.len()).collect();
+    order.sort_by_key(|&i| sol.nodes[i].purchase_order);
+    let mut by_type: Vec<Vec<&PlacedNode>> = vec![Vec::new(); m];
+    for &i in &order {
+        by_type[sol.nodes[i].type_idx].push(&sol.nodes[i]);
+    }
+
+    // phase 1: per-type compaction on the worker pool
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let compacted: Vec<Vec<NodeState>> = run_indexed(m, workers.min(m.max(1)), |b| {
+        let mut states: Vec<NodeState> = by_type[b]
+            .iter()
+            .map(|node| NodeState::from_placed(inst, node, node.purchase_order))
+            .collect();
+        let mut kept = vec![true; states.len()];
+        for j in 1..states.len() {
+            let cand: Vec<usize> = (0..j).filter(|&i| kept[i]).collect();
+            if cand.is_empty() {
+                continue;
+            }
+            if drain_node(inst, &mut states, j, &cand, policy) {
+                kept[j] = false;
+            }
+        }
+        states
+            .into_iter()
+            .zip(kept)
+            .filter_map(|(s, k)| k.then_some(s))
+            .collect()
+    });
+
+    // phase 2: sequential cross-type piggyback into value-ordered types
+    let mut all: Vec<NodeState> = compacted.into_iter().flatten().collect();
+    all.sort_by_key(|s| s.purchase_order);
+    let mut kept = vec![true; all.len()];
+    for &b in &type_order(inst) {
+        let targets: Vec<usize> = (0..all.len())
+            .filter(|&i| kept[i] && all[i].type_idx == b)
+            .collect();
+        if targets.is_empty() {
+            continue;
+        }
+        let victims: Vec<usize> = (0..all.len())
+            .filter(|&i| {
+                kept[i]
+                    && all[i].type_idx != b
+                    && all[i].peak_utilization() < STITCH_VICTIM_UTIL
+            })
+            .collect();
+        for v in victims {
+            if drain_node(inst, &mut all, v, &targets, policy) {
+                kept[v] = false;
+            }
+        }
+    }
+
+    // assemble: kept nodes, renumbered along original purchase order
+    let mut out = Solution::new(inst.n_tasks());
+    for (state, keep) in all.into_iter().zip(kept) {
+        if !keep {
+            continue;
+        }
+        let idx = out.nodes.len();
+        for &u in &state.tasks {
+            out.assignment[u] = Some(idx);
+        }
+        out.nodes.push(PlacedNode {
+            type_idx: state.type_idx,
+            purchase_order: idx,
+            tasks: state.tasks,
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -157,5 +335,85 @@ mod tests {
         let n0 = &sol.nodes[0];
         assert!(n0.tasks.contains(&0) && n0.tasks.contains(&2));
         assert_eq!(sol.nodes.len(), 2);
+    }
+
+    #[test]
+    fn stitch_merges_underfull_same_type_nodes() {
+        // a merged two-partition solution: each partition bought its own
+        // half-empty node; stitching folds them into one
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.3], 0, 3), Task::new(1, vec![0.3], 0, 3)],
+            vec![NodeType::new("a", vec![1.0], 2.0)],
+            4,
+        );
+        let merged = Solution {
+            nodes: vec![
+                PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0] },
+                PlacedNode { type_idx: 0, purchase_order: 1, tasks: vec![1] },
+            ],
+            assignment: vec![Some(0), Some(1)],
+        };
+        assert!(merged.verify(&inst).is_ok());
+        let stitched = stitch_fill(&inst, &merged, FitPolicy::FirstFit);
+        assert!(stitched.verify(&inst).is_ok());
+        assert_eq!(stitched.nodes.len(), 1);
+        assert_eq!(stitched.nodes[0].tasks, vec![0, 1]);
+        assert!(stitched.cost(&inst) <= merged.cost(&inst));
+    }
+
+    #[test]
+    fn stitch_relocates_across_types_only_when_whole_node_drains() {
+        // a lonely task on a pricey node fits the value node's leftover:
+        // the pricey node must be dropped entirely
+        let inst = Instance::new(
+            vec![Task::new(0, vec![0.5], 0, 1), Task::new(1, vec![0.3], 0, 1)],
+            vec![
+                NodeType::new("value", vec![1.0], 1.0),
+                NodeType::new("pricey", vec![1.0], 3.0),
+            ],
+            2,
+        );
+        let merged = Solution {
+            nodes: vec![
+                PlacedNode { type_idx: 0, purchase_order: 0, tasks: vec![0] },
+                PlacedNode { type_idx: 1, purchase_order: 1, tasks: vec![1] },
+            ],
+            assignment: vec![Some(0), Some(1)],
+        };
+        let stitched = stitch_fill(&inst, &merged, FitPolicy::FirstFit);
+        assert!(stitched.verify(&inst).is_ok());
+        assert_eq!(stitched.nodes.len(), 1);
+        assert_eq!(stitched.nodes[0].type_idx, 0);
+        assert!((stitched.cost(&inst) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stitch_never_raises_cost_and_keeps_feasibility() {
+        use crate::algo::penalty_map::{map_tasks, MappingPolicy};
+        use crate::io::synth::{generate, SynthParams};
+        use crate::model::trim;
+        for seed in 0..6 {
+            let inst =
+                generate(&SynthParams { n: 140, m: 5, ..Default::default() }, seed + 21);
+            let tr = trim(&inst).instance;
+            let mapping = map_tasks(&tr, MappingPolicy::HAvg);
+            for policy in [FitPolicy::FirstFit, FitPolicy::SimilarityFit] {
+                let base = crate::algo::twophase::solve_with_mapping(
+                    &tr, &mapping, policy, false,
+                );
+                let stitched = stitch_fill(&tr, &base, policy);
+                assert!(
+                    stitched.verify(&tr).is_ok(),
+                    "seed {seed} {policy:?}: {:?}",
+                    stitched.verify(&tr)
+                );
+                assert!(
+                    stitched.cost(&tr) <= base.cost(&tr) + 1e-9,
+                    "seed {seed} {policy:?}: stitched {} > base {}",
+                    stitched.cost(&tr),
+                    base.cost(&tr)
+                );
+            }
+        }
     }
 }

@@ -1,6 +1,7 @@
 //! TL-Rightsizing algorithms: the paper's contribution layer.
 
 pub mod algorithms;
+pub mod decompose;
 pub mod exact;
 pub mod fill;
 pub mod interval_coloring;

@@ -21,14 +21,32 @@
 //! | `peak_utilization` | O(T · D)          | O(D)                                  |
 //! | `select_node`      | O(|S| · span · D) | O(|S| · D) + exact checks on demand   |
 //!
+//! On top of the per-node fast paths, first-fit placement maintains a
+//! [`HeadroomIndex`]: purchased nodes bucketed by whole-timeline
+//! headroom fraction (power-of-two thresholds, a `BTreeSet` of node ids
+//! per bucket). A query computes the task's demand fraction `q` in O(D),
+//! takes the minimum id over buckets whose guaranteed headroom exceeds
+//! `q` — a node that *surely* fits — and only runs exact `fits` checks
+//! on the prefix of earlier (more loaded) nodes. The returned node is
+//! **bit-identical** to the linear scan's: the scan's prefix up to the
+//! jump target is checked exactly, and the jump target itself satisfies
+//! the O(D) sure-accept, so the minimum feasible index is unchanged.
+//! What changes is the cost of skipping the long full-node prefix a
+//! million-task first-fit otherwise rescans per task: amortized
+//! O(D + log |S| + prefix of genuinely ambiguous nodes) instead of
+//! O(|S| · D). The pre-index linear scan survives as
+//! [`place_group_scan`] — the A/B baseline `benches/placement.rs`
+//! reports as `bucketed_index_speedup`.
+//!
 //! The seed's dense scan survives as [`DenseNodeState`] /
 //! [`place_group_dense`] — the property-test reference and the benchmark
 //! baseline that `benches/placement.rs` measures the indexed path
 //! against in the same run.
 
 use std::cmp::Ordering;
+use std::collections::BTreeSet;
 
-use crate::model::{DenseProfile, Instance, LoadProfile, PlacedNode, Profile, Solution};
+use crate::model::{DenseProfile, Instance, LoadProfile, PlacedNode, Profile, Solution, Task};
 
 /// Node-selection policy among feasible already-purchased nodes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -159,10 +177,185 @@ pub fn select_node<P: Profile>(
     }
 }
 
+/// Number of headroom buckets: thresholds halve from 1 down to 2^-10,
+/// with a final catch-all for (near-)full nodes that can never be a
+/// sure fit.
+const HR_BUCKETS: usize = 11;
+
+/// `THRESH[k] = 2^-k`. Bucket `k < HR_BUCKETS-1` holds nodes with
+/// headroom in `(THRESH[k+1], THRESH[k]]`; the last bucket holds the
+/// rest (headroom <= 2^-10, including negative on EPS-overfull nodes).
+const THRESH: [f64; HR_BUCKETS] = [
+    1.0,
+    0.5,
+    0.25,
+    0.125,
+    0.0625,
+    0.03125,
+    0.015625,
+    0.0078125,
+    0.00390625,
+    0.001953125,
+    0.0009765625,
+];
+
+/// Minimum per-dimension headroom fraction of a node profile over the
+/// whole timeline: `min_d (cap_d - peak_d) / cap_d`. O(D) when the
+/// backend has [`Profile::CHEAP_PEAKS`].
+pub fn headroom<P: Profile>(profile: &P) -> f64 {
+    profile
+        .cap()
+        .iter()
+        .enumerate()
+        .map(|(d, &c)| (c - profile.peak(d)) / c)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Bucketed-headroom candidate index over one first-fit node group.
+///
+/// First-fit wants the *minimum* feasible node index, and as nodes fill
+/// up the feasible prefix starts ever later — yet the plain scan re-pays
+/// an exact check per full node, per task. The index keeps each node in
+/// a bucket keyed by its current headroom fraction; for a task demanding
+/// fraction `q` it finds the earliest node in any bucket guaranteeing
+/// headroom > `q` (a *sure* fit by the O(D) peak argument) and exact-
+/// checks only the nodes before it. Returns exactly what the linear scan
+/// returns — see the module docs for the argument — so the indexed and
+/// scan paths are interchangeable, and `place_group` keeps determinism
+/// while skipping the full-node prefix.
+#[derive(Clone, Debug)]
+pub struct HeadroomIndex {
+    buckets: Vec<BTreeSet<usize>>,
+    /// `slot[i]` = bucket currently holding node `i`.
+    slot: Vec<usize>,
+}
+
+impl Default for HeadroomIndex {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HeadroomIndex {
+    pub fn new() -> Self {
+        HeadroomIndex { buckets: vec![BTreeSet::new(); HR_BUCKETS], slot: Vec::new() }
+    }
+
+    fn bucket_of(hr: f64) -> usize {
+        for k in 0..HR_BUCKETS - 1 {
+            if hr > THRESH[k + 1] {
+                return k;
+            }
+        }
+        HR_BUCKETS - 1
+    }
+
+    /// Register the next node (ids must arrive densely: 0, 1, 2, ...).
+    pub fn insert(&mut self, hr: f64) {
+        let k = Self::bucket_of(hr);
+        let i = self.slot.len();
+        self.buckets[k].insert(i);
+        self.slot.push(k);
+    }
+
+    /// Re-bucket node `i` after its load (and so headroom) changed.
+    pub fn update(&mut self, i: usize, hr: f64) {
+        let k = Self::bucket_of(hr);
+        let old = self.slot[i];
+        if k != old {
+            self.buckets[old].remove(&i);
+            self.buckets[k].insert(i);
+            self.slot[i] = k;
+        }
+    }
+
+    /// First-fit select: bit-identical to
+    /// `nodes.iter().position(|b| b.profile.fits(task))`, paying exact
+    /// checks only for nodes before the earliest sure fit.
+    pub fn select<P: Profile>(
+        &self,
+        nodes: &[NodeStateImpl<P>],
+        task: &Task,
+        cap: &[f64],
+    ) -> Option<usize> {
+        let peak_dem = task.peak();
+        let mut q = 0.0f64;
+        for (d, &c) in cap.iter().enumerate() {
+            q = q.max(peak_dem[d] / c);
+        }
+        // earliest node whose bucket guarantees headroom > q (strictly:
+        // bucket k holds hr > THRESH[k+1] >= q). Buckets are ordered by
+        // decreasing threshold, so qualifying buckets form a prefix.
+        let mut jump: Option<usize> = None;
+        for k in 0..HR_BUCKETS - 1 {
+            if THRESH[k + 1] < q {
+                break;
+            }
+            if let Some(&i) = self.buckets[k].first() {
+                jump = Some(jump.map_or(i, |j| j.min(i)));
+            }
+        }
+        let limit = jump.map_or(nodes.len(), |j| j.min(nodes.len()));
+        for (i, b) in nodes.iter().enumerate().take(limit) {
+            if b.profile.fits(task) {
+                return Some(i);
+            }
+        }
+        jump.filter(|&j| j < nodes.len())
+    }
+}
+
 /// Place the given tasks (already filtered to one node-type) in increasing
 /// start order, purchasing nodes of `type_idx` as needed. `purchase_seq`
 /// is the global purchase counter shared across node-types.
+///
+/// First-fit on a cheap-peaks backend runs through the
+/// [`HeadroomIndex`]; every other (policy, backend) combination takes
+/// the plain scan. Both produce identical placements.
 pub fn place_group<P: Profile>(
+    inst: &Instance,
+    type_idx: usize,
+    tasks: &[usize],
+    policy: FitPolicy,
+    purchase_seq: &mut usize,
+) -> Vec<NodeStateImpl<P>> {
+    if !(P::CHEAP_PEAKS && policy == FitPolicy::FirstFit) {
+        return place_group_scan(inst, type_idx, tasks, policy, purchase_seq);
+    }
+    let cap = &inst.node_types[type_idx].capacity;
+    let mut order: Vec<usize> = tasks.to_vec();
+    order.sort_by_key(|&u| (inst.tasks[u].start, u));
+    let mut nodes: Vec<NodeStateImpl<P>> = Vec::new();
+    let mut index = HeadroomIndex::new();
+    for u in order {
+        match index.select(&nodes, &inst.tasks[u], cap) {
+            Some(i) => {
+                nodes[i].add(inst, u);
+                index.update(i, headroom(nodes[i].profile()));
+            }
+            None => {
+                let mut b = NodeStateImpl::<P>::new(inst, type_idx, *purchase_seq);
+                *purchase_seq += 1;
+                assert!(
+                    b.fits(inst, u),
+                    "task {u} cannot fit an empty node of type {type_idx}: \
+                     mapping must respect admissibility"
+                );
+                b.add(inst, u);
+                index.insert(headroom(b.profile()));
+                nodes.push(b);
+            }
+        }
+    }
+    nodes
+}
+
+/// The pre-index placement loop: linear `select_node` scan per task.
+/// Kept callable as the A/B baseline for the bucketed-headroom index
+/// (`benches/placement.rs` reports indexed-vs-scan as
+/// `bucketed_index_speedup`); produces the same placement as
+/// [`place_group`].
+pub fn place_group_scan<P: Profile>(
     inst: &Instance,
     type_idx: usize,
     tasks: &[usize],
@@ -345,6 +538,105 @@ mod tests {
             assert_eq!(a.tasks, b.tasks);
             assert_eq!(a.purchase_order, b.purchase_order);
         }
+    }
+
+    #[test]
+    fn bucket_of_thresholds() {
+        assert_eq!(HeadroomIndex::bucket_of(1.0), 0);
+        assert_eq!(HeadroomIndex::bucket_of(0.6), 0);
+        assert_eq!(HeadroomIndex::bucket_of(0.5), 1);
+        assert_eq!(HeadroomIndex::bucket_of(0.3), 1);
+        assert_eq!(HeadroomIndex::bucket_of(0.25), 2);
+        assert_eq!(HeadroomIndex::bucket_of(0.001), HR_BUCKETS - 1);
+        assert_eq!(HeadroomIndex::bucket_of(0.0), HR_BUCKETS - 1);
+        assert_eq!(HeadroomIndex::bucket_of(-0.1), HR_BUCKETS - 1);
+    }
+
+    #[test]
+    fn indexed_first_fit_matches_scan() {
+        // pseudo-random workload (LCG, fixed seed): mixed spans and
+        // demand fractions spanning several headroom buckets; the
+        // indexed placement must be node-for-node identical to the scan
+        // and to the dense reference
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut rng = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64) / ((1u64 << 31) as f64)
+        };
+        let horizon = 48u32;
+        let mut tasks = Vec::new();
+        for id in 0..160u64 {
+            let start = (rng() * 40.0) as u32;
+            let end = (start + 1 + (rng() * 8.0) as u32).min(horizon - 1);
+            let d0 = 0.02 + rng() * 0.55;
+            let d1 = 0.02 + rng() * 0.55;
+            tasks.push(Task::new(id, vec![d0, d1], start, end));
+        }
+        let inst = Instance::new(
+            tasks,
+            vec![NodeType::new("a", vec![1.0, 1.0], 1.0)],
+            horizon,
+        );
+        let all: Vec<usize> = (0..inst.n_tasks()).collect();
+        let mut seq_a = 0;
+        let indexed: Vec<NodeState> =
+            place_group(&inst, 0, &all, FitPolicy::FirstFit, &mut seq_a);
+        let mut seq_b = 0;
+        let scan: Vec<NodeState> =
+            place_group_scan(&inst, 0, &all, FitPolicy::FirstFit, &mut seq_b);
+        let mut seq_c = 0;
+        let dense = place_group_dense(&inst, 0, &all, FitPolicy::FirstFit, &mut seq_c);
+        assert_eq!(indexed.len(), scan.len());
+        assert_eq!(indexed.len(), dense.len());
+        for ((a, b), c) in indexed.iter().zip(&scan).zip(&dense) {
+            assert_eq!(a.tasks, b.tasks);
+            assert_eq!(a.tasks, c.tasks);
+            assert_eq!(a.purchase_order, b.purchase_order);
+        }
+        assert!(indexed.len() > 3, "workload too easy to exercise the index");
+        let sol = to_solution(&inst, vec![indexed]);
+        assert!(sol.verify(&inst).is_ok());
+    }
+
+    #[test]
+    fn headroom_index_select_agrees_with_position_scan() {
+        // drive the index through adds that cross bucket boundaries and
+        // compare select() against the naive position() at every step
+        let inst = Instance::new(
+            (0..40u64)
+                .map(|id| {
+                    let frac = 0.05 + 0.9 * ((id * 7 % 13) as f64) / 13.0;
+                    let start = (id % 5) as u32;
+                    Task::new(id, vec![frac.min(0.95)], start, (start + 3).min(9))
+                })
+                .collect(),
+            vec![NodeType::new("a", vec![1.0], 1.0)],
+            10,
+        );
+        let mut nodes: Vec<NodeState> = Vec::new();
+        let mut index = HeadroomIndex::new();
+        let cap = vec![1.0];
+        let mut seq = 0;
+        for u in 0..inst.n_tasks() {
+            let task = &inst.tasks[u];
+            let want = nodes.iter().position(|b| b.profile().fits(task));
+            let got = index.select(&nodes, task, &cap);
+            assert_eq!(got, want, "task {u}");
+            match got {
+                Some(i) => {
+                    nodes[i].add(&inst, u);
+                    index.update(i, headroom(nodes[i].profile()));
+                }
+                None => {
+                    let mut b = NodeState::new(&inst, 0, seq);
+                    seq += 1;
+                    b.add(&inst, u);
+                    index.insert(headroom(b.profile()));
+                    nodes.push(b);
+                }
+            }
+        }
+        assert!(nodes.len() > 2);
     }
 
     #[test]

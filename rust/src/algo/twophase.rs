@@ -11,7 +11,9 @@
 use crate::model::{DenseProfile, Instance, LoadProfile, Profile, Solution};
 
 use super::fill;
-use super::placement::{place_group, to_solution, FitPolicy, NodeState, NodeStateImpl};
+use super::placement::{
+    place_group, place_group_scan, to_solution, FitPolicy, NodeState, NodeStateImpl,
+};
 
 /// Below this many tasks a solve is microseconds; thread spawn overhead
 /// would dominate, so place sequentially.
@@ -104,6 +106,23 @@ pub fn solve_with_mapping_sequential(
     policy: FitPolicy,
 ) -> Solution {
     solve_sequential::<LoadProfile>(inst, mapping, policy)
+}
+
+/// Sequential indexed solve with the *linear-scan* first-fit loop
+/// (no bucketed-headroom index) — the A/B baseline isolating the
+/// candidate-index win at the solve level; identical placements, only
+/// the per-task node search differs.
+pub fn solve_with_mapping_scan(
+    inst: &Instance,
+    mapping: &[usize],
+    policy: FitPolicy,
+) -> Solution {
+    let groups = group_by_type(inst, mapping);
+    let mut seq = 0usize;
+    let placed: Vec<Vec<NodeState>> = (0..inst.n_types())
+        .map(|b| place_group_scan(inst, b, &groups[b], policy, &mut seq))
+        .collect();
+    to_solution(inst, placed)
 }
 
 /// Sequential dense-profile reference solve — the seed's exact code path,

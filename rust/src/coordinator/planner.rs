@@ -6,6 +6,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::algo::decompose::{self, DecomposeReport, DecomposeSpec};
 use crate::algo::pipeline::{Portfolio, StageTime};
 use crate::lp::dual;
 use crate::lp::scaling;
@@ -235,6 +236,54 @@ impl Planner {
         })
     }
 
+    /// Decomposed solve (timeline trimming applied here): partition the
+    /// instance per `spec`, race the portfolio inside each partition
+    /// concurrently, merge and stitch. Partition workers each need
+    /// their own solver, so this path always uses the stateless
+    /// native/simplex solvers — the artifact engine's buckets are sized
+    /// for full instances, and sub-instance shapes would mostly miss
+    /// them anyway. Returns the report and the backend label used.
+    ///
+    /// Telemetry: `decomposed_solves` / `decompose_partitions` counters
+    /// and `decompose_solve` / `decompose_partition` /
+    /// `decompose_stitch` timers, surfaced by the service `stats` op
+    /// like every other stage.
+    pub fn solve_decomposed(
+        &self,
+        inst: &Instance,
+        portfolio: &Portfolio,
+        spec: &DecomposeSpec,
+    ) -> Result<(DecomposeReport, &'static str)> {
+        let tr = trim(inst).instance;
+        let simplex = matches!(self.backend, Backend::Simplex);
+        let factory = move || -> Box<dyn MappingSolver> {
+            if simplex {
+                Box::new(SimplexSolver)
+            } else {
+                Box::new(NativePdhgSolver::default())
+            }
+        };
+        let backend_used = if simplex { "simplex" } else { "pdhg-native" };
+        let m = &self.metrics;
+        let rep = m.time("decompose_solve", || {
+            decompose::solve_decomposed(&tr, portfolio, &factory, spec)
+        })?;
+        m.inc("decomposed_solves", 1);
+        m.inc("decompose_partitions", rep.partitions.len() as u64);
+        m.observe("decompose_partition_wall", rep.partition_seconds);
+        m.observe("decompose_stitch", rep.stitch_seconds);
+        for p in &rep.partitions {
+            m.observe("decompose_partition", p.seconds);
+        }
+        anyhow::ensure!(
+            rep.certified_lb <= rep.cost + 1e-6 * (1.0 + rep.cost.abs()),
+            "certified bound {} exceeds decomposed cost {}",
+            rep.certified_lb,
+            rep.cost
+        );
+        Ok((rep, backend_used))
+    }
+
     /// Run jobs across a worker pool (scoped threads, shared queue).
     /// Results are returned in job order.
     pub fn run_jobs<T, R>(
@@ -290,6 +339,24 @@ mod tests {
         assert!(lp.seconds > 0.0);
         assert!(row.algos.iter().all(|a| row.best().cost <= a.cost + 1e-12));
         assert_eq!(row.backend_used, "pdhg-native");
+    }
+
+    #[test]
+    fn decomposed_solve_reports_telemetry() {
+        let planner = Planner::new(Backend::Native).unwrap();
+        let inst = generate(&SynthParams { n: 90, m: 4, ..Default::default() }, 5);
+        let portfolio =
+            crate::algo::pipeline::parse_portfolio("penalty-map,penalty-map-f").unwrap();
+        let spec = decompose::parse_decompose("window:3").unwrap();
+        let (rep, backend) = planner.solve_decomposed(&inst, &portfolio, &spec).unwrap();
+        assert_eq!(backend, "pdhg-native");
+        let tr = trim(&inst).instance;
+        assert!(rep.solution.verify(&tr).is_ok());
+        assert!(rep.certified_lb > 0.0);
+        assert_eq!(rep.partitions.len(), 3);
+        assert_eq!(planner.metrics.counter("decomposed_solves"), 1);
+        assert_eq!(planner.metrics.counter("decompose_partitions"), 3);
+        assert!(planner.metrics.timer_count("decompose_partition") == 3);
     }
 
     #[test]

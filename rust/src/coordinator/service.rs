@@ -145,11 +145,27 @@ fn resolve_instance(req: &Json) -> Result<(Instance, Option<(String, u64)>)> {
 }
 
 /// The legacy one-shot solve path (requests without an 'op' field).
+/// With a `decompose` field the solve routes through the partition-
+/// decomposed pipeline; the response keeps every legacy field and adds
+/// the decomposition telemetry (additive only — requests without
+/// `decompose` answer with the exact legacy key set).
 fn handle_solve(planner: &Planner, req: &Json) -> Result<Json> {
     let (inst, workload_used) = resolve_instance(req)?;
     anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
     let t0 = std::time::Instant::now();
+
+    match req.get("decompose") {
+        Json::Null => {}
+        Json::Str(spec) => {
+            let spec = crate::algo::decompose::parse_decompose(spec)?;
+            return handle_solve_decomposed(planner, &inst, algo, &spec, workload_used, t0);
+        }
+        _ => anyhow::bail!(
+            "'decompose' must be a spec string\n{}",
+            crate::algo::decompose::DECOMPOSE_GRAMMAR
+        ),
+    }
 
     let tr = trim(&inst).instance;
     let (solver, backend) = planner.solver_for(&tr);
@@ -231,6 +247,91 @@ fn handle_solve(planner: &Planner, req: &Json) -> Result<Json> {
             ));
         }
     }
+    Ok(Json::obj(fields))
+}
+
+/// Decomposed variant of the one-shot solve. Response fields are the
+/// legacy set plus `decompose`, `sum_partition_bounds`,
+/// `congestion_bound`, `pre_stitch_cost` and a `partitions` array —
+/// additive only, and only when the request opted in.
+fn handle_solve_decomposed(
+    planner: &Planner,
+    inst: &Instance,
+    algo: &str,
+    spec: &crate::algo::decompose::DecomposeSpec,
+    workload_used: Option<(String, u64)>,
+    t0: std::time::Instant,
+) -> Result<Json> {
+    let portfolio = crate::algo::pipeline::parse_portfolio(algo)?;
+    let (rep, backend) = planner.solve_decomposed(inst, &portfolio, spec)?;
+    let tr = trim(inst).instance;
+    rep.solution
+        .verify(&tr)
+        .map_err(|v| anyhow::anyhow!("internal: infeasible decomposed solution: {v:?}"))?;
+    let seconds = t0.elapsed().as_secs_f64();
+    planner.metrics.inc("service_requests", 1);
+
+    let lb = rep.certified_lb;
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("algorithm", Json::Str(algo.to_string())),
+        ("decompose", Json::Str(spec.to_string())),
+        ("cost", Json::Num(rep.cost)),
+        ("n_nodes", Json::Num(rep.solution.nodes.len() as f64)),
+        (
+            "nodes_per_type",
+            Json::Arr(
+                rep.solution
+                    .nodes_per_type(&tr)
+                    .iter()
+                    .map(|&c| Json::Num(c as f64))
+                    .collect(),
+            ),
+        ),
+        ("backend", Json::Str(backend.to_string())),
+        ("seconds", Json::Num(seconds)),
+        (
+            "stages",
+            Json::Arr(
+                rep.stages
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("stage", Json::Str(s.stage.clone())),
+                            ("seconds", Json::Num(s.seconds)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ];
+    if let Some((label, seed)) = workload_used {
+        fields.push(("workload", Json::Str(label)));
+        fields.push(("seed", Json::Num(seed as f64)));
+    }
+    fields.push(("lower_bound", Json::Num(lb)));
+    fields.push(("normalized_cost", Json::Num(rep.cost / lb.max(1e-12))));
+    fields.push(("sum_partition_bounds", Json::Num(rep.sum_lb)));
+    fields.push(("congestion_bound", Json::Num(rep.congestion_lb)));
+    fields.push(("pre_stitch_cost", Json::Num(rep.pre_stitch_cost)));
+    fields.push((
+        "partitions",
+        Json::Arr(
+            rep.partitions
+                .iter()
+                .map(|p| {
+                    Json::obj(vec![
+                        ("partition", Json::Str(p.label.clone())),
+                        ("n_tasks", Json::Num(p.n_tasks as f64)),
+                        ("cost", Json::Num(p.cost)),
+                        ("lower_bound", Json::Num(p.lb)),
+                        ("seconds", Json::Num(p.seconds)),
+                        ("winner", Json::Str(p.winner.clone())),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
     Ok(Json::obj(fields))
 }
 
@@ -621,6 +722,52 @@ mod tests {
         ]);
         let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn decomposed_solve_request_roundtrip() {
+        let p = planner();
+        let inst = generate(&SynthParams { n: 60, m: 3, ..Default::default() }, 7);
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("penalty-map,penalty-map-f".into())),
+            ("decompose", Json::Str("window:3".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("decompose").as_str(), Some("window:3"));
+        let cost = v.get("cost").as_f64().unwrap();
+        let lb = v.get("lower_bound").as_f64().unwrap();
+        assert!(lb > 0.0 && lb <= cost + 1e-6, "{v:?}");
+        assert!(v.get("pre_stitch_cost").as_f64().unwrap() >= cost - 1e-9);
+        let parts = v.get("partitions").as_arr().unwrap();
+        assert_eq!(parts.len(), 3);
+        let total: usize = parts.iter().map(|p| p.get("n_tasks").as_usize().unwrap()).sum();
+        assert_eq!(total, 60);
+        assert!(parts[0].get("winner").as_str().is_some());
+        // stage telemetry includes the stitch pass
+        let stages = v.get("stages").as_arr().unwrap();
+        assert!(stages.iter().any(|s| s.get("stage").as_str() == Some("stitch")));
+        // the stats endpoint surfaces the decompose counters/timers
+        let s = json::parse(&handle_request(&p, r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(s.get("counters").get("decomposed_solves").as_usize(), Some(1));
+        assert_eq!(s.get("counters").get("decompose_partitions").as_usize(), Some(3));
+        assert!(s.get("timers").get("decompose_solve").get("count").as_usize() == Some(1));
+
+        // degenerate partition counts are request errors, not solves
+        let bad = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("decompose", Json::Str("window:0".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &bad.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        let bad = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("decompose", Json::Str("size:64".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &bad.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false), "k > n must be rejected");
+        assert!(v.get("error").as_str().unwrap().contains("exceeds"), "{v:?}");
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! never by the raw approximate LP objective.
 
 use super::builder::MappingLp;
+use crate::model::Instance;
 
 /// Repair `y` into dual-feasible and return the certified bound
 /// `sum_u w_u` together with the repaired `w`.
@@ -99,6 +100,44 @@ pub fn congestion_bound(lp: &MappingLp) -> f64 {
             let (ss, se) = lp.seg_spans[s];
             diff[ss as usize] += pstar;
             diff[se as usize + 1] -= pstar;
+        }
+    }
+    let mut acc = 0.0;
+    let mut best: f64 = 0.0;
+    for ts in 0..t {
+        acc += diff[ts];
+        best = best.max(acc);
+    }
+    best
+}
+
+/// [`congestion_bound`] computed straight from the instance, without
+/// materializing a [`MappingLp`]. The LP stores every per-(segment,
+/// node-type, dimension) ratio up front — n·S·m·D doubles, hundreds of
+/// megabytes at n = 10^6 — but Lemma 1 only ever *sums* those ratios
+/// once, so decomposed solves derive them on the fly. Iteration order
+/// and arithmetic mirror [`congestion_bound`] operation-for-operation
+/// (the stored ratio is the same single division), so the two agree
+/// bit-for-bit; equilibration doesn't enter (it only rescales `rho`,
+/// which Lemma 1 never reads).
+pub fn congestion_bound_instance(inst: &Instance) -> f64 {
+    let m = inst.n_types();
+    let dims = inst.dims();
+    let t = inst.horizon as usize;
+    let mut diff = vec![0.0f64; t + 1];
+    for task in &inst.tasks {
+        for seg in task.segments() {
+            let mut pstar = f64::INFINITY;
+            for b in 0..m {
+                let nt = &inst.node_types[b];
+                let h: f64 = (0..dims)
+                    .map(|d| seg.demand[d] / nt.capacity[d])
+                    .sum::<f64>()
+                    / dims as f64;
+                pstar = pstar.min(nt.cost * h);
+            }
+            diff[seg.start as usize] += pstar;
+            diff[seg.end as usize + 1] -= pstar;
         }
     }
     let mut acc = 0.0;
@@ -203,6 +242,52 @@ mod tests {
         let cong = congestion_bound(&lp);
         assert!(cong <= exact.objective + 1e-7, "cong {cong} vs {}", exact.objective);
         assert!(cong > 0.0);
+    }
+
+    #[test]
+    fn instance_congestion_matches_lp_congestion_bitwise() {
+        use crate::model::{DemandSeg, Instance, NodeType, Task};
+        for seed in [6, 7, 8] {
+            let inst = generate(
+                &SynthParams { n: 60, m: 4, dims: 3, ..Default::default() },
+                seed,
+            );
+            let tr = trim(&inst).instance;
+            let mut lp = MappingLp::from_instance(&tr);
+            let want = congestion_bound(&lp);
+            assert_eq!(
+                want.to_bits(),
+                congestion_bound_instance(&tr).to_bits(),
+                "seed {seed}"
+            );
+            // equilibration must not move the congestion bound
+            scaling::equilibrate(&mut lp);
+            assert_eq!(want.to_bits(), congestion_bound(&lp).to_bits());
+        }
+        // shaped tasks: per-segment penalties, same agreement
+        let inst = Instance::new(
+            vec![
+                Task::piecewise(
+                    0,
+                    vec![
+                        DemandSeg { start: 0, end: 2, demand: vec![0.1, 0.25] },
+                        DemandSeg { start: 3, end: 5, demand: vec![0.3, 0.05] },
+                    ],
+                ),
+                Task::new(1, vec![0.2, 0.2], 1, 4),
+            ],
+            vec![
+                NodeType::new("a", vec![1.0, 1.0], 2.0),
+                NodeType::new("b", vec![0.5, 0.5], 1.0),
+            ],
+            6,
+        );
+        let tr = trim(&inst).instance;
+        let lp = MappingLp::from_instance(&tr);
+        assert_eq!(
+            congestion_bound(&lp).to_bits(),
+            congestion_bound_instance(&tr).to_bits()
+        );
     }
 
     #[test]

@@ -37,7 +37,7 @@ tlrs — cold-start cluster rightsizing for time-limited tasks (CLOUD'21)
 
 USAGE:
   tlrs solve   (--input inst.json | --workload <wspec> [--seed 1])
-               [--algo <spec>[,<spec>...]]
+               [--algo <spec>[,<spec>...]] [--decompose <dspec>]
                [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
   tlrs session (--input inst.json | --workload <wspec> [--seed 1])
                --deltas deltas.jsonl [--algo <spec>] [--escalate 1.5|off]
@@ -89,6 +89,32 @@ ALGO SPECS (--algo, and the service's 'algorithm' field):
   refine  := fill | ls[:<max_rounds>]   (fill must be the first refine)
   examples: --algo lp+fill+ls    --algo penalty:ff+ls:16
             --algo portfolio     --algo lp-map-f+ls,portfolio
+
+DECOMPOSED SOLVES (--decompose, and the service's 'decompose' field):
+  Partition the tasks, solve every partition concurrently through the
+  same --algo portfolio, merge, and stitch (a cross-fill pass that
+  drains under-utilized nodes across partition seams — never raises
+  cost). Built for very large instances: each partition's mapping LP is
+  a fraction of the monolith's, and partitions race on separate
+  workers.
+  dspec   := window[:k] | dims[:k] | size[:k]        (k <= 64)
+  window  := sort by start time, k near-equal chunks (default k=8).
+             Best when load is spread over a long horizon.
+  dims    := group tasks by their dominant resource dimension (argmax
+             demand/mean-capacity); k keeps the k-1 largest groups and
+             merges the rest. Best for multi-resource mixes (CPU-heavy
+             vs memory-heavy pools).
+  size    := the small/large split of the paper's segregation pass;
+             smalls are chunked into k-1 parts (default k=2). Best when
+             a few whale tasks dominate.
+  The reported lower bound stays certified: max over partitions of the
+  partition's certified LB (restricting any global solution to a
+  partition's tasks stays feasible), floored by the whole-instance
+  congestion bound. The per-partition-sum bound is also reported — it
+  certifies the pre-stitch decomposition, not the global optimum.
+  k=1 is bit-identical to the non-decomposed sequential portfolio.
+  examples: --decompose window:16   --decompose dims
+            --decompose size:4 --algo penalty-map,penalty-map-f
 
 PLAN SESSIONS (tlrs session, and the service's 'op' verbs):
   A session opens a plan once (full solve via --algo) and then answers a
@@ -165,12 +191,20 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let algo = args.get_or("algo", "lp-map-f");
 
     let tr = trim(&inst).instance;
-    let (solver, backend) = planner.solver_for(&tr);
 
     // --algo: one spec runs a single pipeline; 'portfolio' and/or a
     // comma-separated list races the specs in parallel on one LP solve
     // (the service accepts the identical language).
     let portfolio = pipeline::parse_portfolio(&algo)?;
+
+    // --decompose: partition the tasks and solve the parts concurrently
+    // through the same portfolio (see the DECOMPOSED SOLVES section).
+    if let Some(dspec) = args.get("decompose") {
+        let spec = tlrs::algo::decompose::parse_decompose(dspec)?;
+        return cmd_solve_decomposed(args, &planner, &tr, &portfolio, &spec);
+    }
+
+    let (solver, backend) = planner.solver_for(&tr);
 
     let t0 = std::time::Instant::now();
     let race = portfolio.run(&tr, solver.as_ref())?;
@@ -220,6 +254,79 @@ fn cmd_solve(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.get("out") {
         std::fs::write(out, files::solution_to_json(&solution, &tr).to_string())?;
+        println!("solution       : wrote {out}");
+    }
+    Ok(())
+}
+
+/// The `--decompose` arm of `tlrs solve`: partitioned concurrent solve
+/// with the partition table, the two-tier bound report, and stitch
+/// telemetry.
+fn cmd_solve_decomposed(
+    args: &Args,
+    planner: &Planner,
+    tr: &tlrs::model::Instance,
+    portfolio: &pipeline::Portfolio,
+    spec: &tlrs::algo::decompose::DecomposeSpec,
+) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let (rep, backend) = planner.solve_decomposed(tr, portfolio, spec)?;
+    let dt = t0.elapsed();
+    rep.solution
+        .verify(tr)
+        .map_err(|v| anyhow::anyhow!("infeasible decomposed solution: {v:?}"))?;
+
+    println!("decompose      : {spec} -> {} partition(s) ({backend})", rep.partitions.len());
+    for p in &rep.partitions {
+        println!(
+            "  partition    : {:<14} {:>7} tasks  cost {:>10.4}  lb {:>10.4}  \
+             {:.3}s  ({})",
+            p.label, p.n_tasks, p.cost, p.lb, p.seconds, p.winner
+        );
+    }
+    println!("tasks / types  : {} / {}", tr.n_tasks(), tr.n_types());
+    println!("trimmed T      : {}", tr.horizon);
+    println!("nodes purchased: {}", rep.solution.nodes.len());
+    println!("cluster cost   : {:.4}", rep.cost);
+    if rep.pre_stitch_cost > rep.cost + 1e-12 {
+        println!(
+            "stitch         : {:.4} -> {:.4} ({:.2}% saved in {:.3}s)",
+            rep.pre_stitch_cost,
+            rep.cost,
+            100.0 * (rep.pre_stitch_cost - rep.cost) / rep.pre_stitch_cost,
+            rep.stitch_seconds
+        );
+    } else {
+        println!("stitch         : no cross-partition savings ({:.3}s)", rep.stitch_seconds);
+    }
+    println!(
+        "lower bound    : {:.4}  (normalized cost {:.3})",
+        rep.certified_lb,
+        rep.cost / rep.certified_lb.max(1e-12)
+    );
+    println!(
+        "  sum of parts : {:.4} (decomposition certificate), congestion {:.4}",
+        rep.sum_lb, rep.congestion_lb
+    );
+    let stage_summary = rep
+        .stages
+        .iter()
+        .map(|s| format!("{} {:.3}s", s.stage, s.seconds))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!("stage times    : {stage_summary}");
+    println!("solve time     : {dt:?}");
+    if args.has_flag("replay") {
+        let r = replay(tr, &rep.solution);
+        println!(
+            "replay         : {} overloads, avg utilization {:.1}%, peak tasks {}",
+            r.overloads,
+            r.avg_utilization * 100.0,
+            r.peak_tasks
+        );
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, files::solution_to_json(&rep.solution, tr).to_string())?;
         println!("solution       : wrote {out}");
     }
     Ok(())

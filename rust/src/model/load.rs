@@ -3,11 +3,13 @@
 //! exact search and `Solution::verify` — speaks to one [`Profile`]
 //! abstraction with two implementations:
 //!
-//!  * [`LoadProfile`] — the indexed production path: one lazy segment
-//!    tree per dimension maintaining `(max, sum, sumsq)` aggregates under
-//!    range-add, so feasibility checks, task add/remove, similarity
-//!    scoring and peak queries cost O(D·log T) instead of O(span·D) and
-//!    O(T·D).
+//!  * [`LoadProfile`] — the indexed production path: the lazy segment
+//!    trees of all D dimensions flattened into one SoA [`SegStore`]
+//!    (five contiguous buffers — max, min, sum, sumsq, lazy — in
+//!    dim-major blocks), so feasibility checks, task add/remove,
+//!    similarity scoring and peak queries cost O(D·log T) instead of
+//!    O(span·D) and O(T·D), and building a node profile costs five
+//!    allocations instead of 4·D.
 //!  * [`DenseProfile`] — the seed's dense per-timeslot array, kept as the
 //!    reference path for property tests and as the benchmark baseline.
 //!
@@ -16,6 +18,16 @@
 //! `len` updates `sumsq += 2c·sum + c²·len`, and for a task window of
 //! length `L` in dimension `d`,
 //! `Σ (cap-u)² = L·cap² - 2·cap·Σu + Σu²`.
+//!
+//! The `min` aggregate gives the timeline *floor* per dimension in O(1)
+//! (padding leaves are pinned to +∞ so the root min covers real slots
+//! only). `LoadProfile::fits` uses it as an exact sure-*reject*: when
+//! even the node's quietest slot plus the task's quietest segment
+//! overflows some dimension, no windowed check can pass — the full-node
+//! prefix that first-fit rescans is dismissed in O(D) instead of
+//! O(S·D·log T). Together with the O(1) peaks it also powers the
+//! bucketed-headroom candidate index in `algo/placement.rs`
+//! ([`Profile::CHEAP_PEAKS`]).
 //!
 //! Tasks carry piecewise-constant [`DemandProfile`]s (`model::task`):
 //! every task-level operation below iterates the task's demand segments
@@ -28,6 +40,8 @@
 //! so the property tests in `tests/prop_invariants.rs` compare the
 //! indexed code the solvers run against the seed's behavior, not
 //! against itself.
+//!
+//! [`DemandProfile`]: super::task::DemandProfile
 
 use super::task::Task;
 use super::EPS;
@@ -35,6 +49,12 @@ use super::EPS;
 /// A node's per-dimension usage over the timeline, with the query set the
 /// placement stack needs. `lo..=hi` ranges are inclusive timeslots.
 pub trait Profile: Clone + std::fmt::Debug {
+    /// True when whole-timeline [`Profile::peak`] queries are O(1):
+    /// placement then maintains the bucketed-headroom candidate index
+    /// (recomputing every node's headroom per add would otherwise turn
+    /// the index into the O(T·D) scan it replaces).
+    const CHEAP_PEAKS: bool = false;
+
     /// Empty profile over `n_slots` timeslots with the given capacity.
     fn new(n_slots: usize, cap: Vec<f64>) -> Self;
 
@@ -171,107 +191,173 @@ pub trait Profile: Clone + std::fmt::Debug {
 // Indexed backend
 // ---------------------------------------------------------------------------
 
-/// Lazy segment tree over one dimension: range-add with `(max, sum,
-/// sumsq)` aggregates.
+/// Lazy segment trees for all D dimensions of one node, flattened into a
+/// structure-of-arrays layout: five contiguous buffers, each holding D
+/// dim-major blocks of `2·size` tree nodes (`size` for `lazy` — only
+/// internal nodes carry pending adds). One [`LoadProfile`] used to own
+/// `D` separate `SegTree`s at four `Vec`s each; a million-task solve
+/// purchases tens of thousands of nodes, and 4·D allocations per node
+/// was measurable churn. The blocks are contiguous per dimension, so a
+/// range operation walks one cache-friendly slab.
 ///
-/// Conventions: aggregates stored at a node are *true* subtree values
-/// (they already include the node's own pending `lazy`); `lazy` is the
-/// uniform add not yet folded into the children's aggregates. Queries are
-/// therefore immutable — they carry the sum of ancestor lazies down the
-/// recursion instead of pushing — and only `add` rebalances the arrays.
+/// Conventions (unchanged from the per-dimension trees, so every value —
+/// and every FP operation order — is identical): aggregates stored at a
+/// node are *true* subtree values (they already include the node's own
+/// pending `lazy`); `lazy` is the uniform add not yet folded into the
+/// children's aggregates. Queries are therefore immutable — they carry
+/// the sum of ancestor lazies down the recursion instead of pushing —
+/// and only `add` rebalances the arrays.
+///
+/// The `min` aggregate mirrors `max` under range-add. Padding leaves
+/// (slots `n_slots..size`) never receive adds — `add` is always issued
+/// with `r < n_slots`, so no applied subtree, and hence no pushed lazy,
+/// ever covers them — and are pinned to +∞ at construction: the root min
+/// is the floor over *real* slots only. (`max` needs no such pin: usage
+/// is non-negative, so zero padding never wins a max.)
 #[derive(Clone, Debug)]
-struct SegTree {
-    /// Number of leaves: the smallest power of two >= n_slots.
+struct SegStore {
+    dims: usize,
+    /// Leaves per dimension: the smallest power of two >= n_slots.
     size: usize,
     max: Vec<f64>,
+    min: Vec<f64>,
     sum: Vec<f64>,
     sumsq: Vec<f64>,
     lazy: Vec<f64>,
 }
 
-impl SegTree {
-    fn new(n_slots: usize) -> Self {
+impl SegStore {
+    fn new(dims: usize, n_slots: usize) -> Self {
         let size = n_slots.next_power_of_two().max(1);
-        SegTree {
+        let mut store = SegStore {
+            dims,
             size,
-            max: vec![0.0; 2 * size],
-            sum: vec![0.0; 2 * size],
-            sumsq: vec![0.0; 2 * size],
-            // only internal nodes (index < size) carry pending adds:
-            // leaves get them folded into their aggregates immediately
-            lazy: vec![0.0; size],
+            max: vec![0.0; dims * 2 * size],
+            min: vec![0.0; dims * 2 * size],
+            sum: vec![0.0; dims * 2 * size],
+            sumsq: vec![0.0; dims * 2 * size],
+            lazy: vec![0.0; dims * size],
+        };
+        if size > n_slots {
+            for d in 0..dims {
+                let base = d * 2 * size;
+                for leaf in n_slots..size {
+                    store.min[base + size + leaf] = f64::INFINITY;
+                }
+                for node in (1..size).rev() {
+                    store.min[base + node] =
+                        store.min[base + 2 * node].min(store.min[base + 2 * node + 1]);
+                }
+            }
         }
+        store
+    }
+
+    /// Index of tree node `node` of dimension `d` in the aggregate buffers.
+    #[inline]
+    fn ix(&self, d: usize, node: usize) -> usize {
+        d * 2 * self.size + node
+    }
+
+    /// Whole-timeline max of dimension `d` (root of its max block).
+    #[inline]
+    fn root_max(&self, d: usize) -> f64 {
+        self.max[self.ix(d, 1)]
+    }
+
+    /// Whole-timeline floor of dimension `d` over real slots (root of its
+    /// min block; padding is pinned to +∞ and cannot win).
+    #[inline]
+    fn root_min(&self, d: usize) -> f64 {
+        self.min[self.ix(d, 1)]
     }
 
     /// Apply a uniform add of `c` over all `len` slots covered by `node`.
     /// Order matters: `sumsq` must read the pre-update `sum`.
-    fn apply(&mut self, node: usize, len: usize, c: f64) {
-        let s = self.sum[node];
-        self.sumsq[node] += 2.0 * c * s + c * c * len as f64;
-        self.sum[node] = s + c * len as f64;
-        self.max[node] += c;
+    fn apply(&mut self, d: usize, node: usize, len: usize, c: f64) {
+        let i = self.ix(d, node);
+        let s = self.sum[i];
+        self.sumsq[i] += 2.0 * c * s + c * c * len as f64;
+        self.sum[i] = s + c * len as f64;
+        self.max[i] += c;
+        self.min[i] += c;
         if node < self.size {
-            self.lazy[node] += c;
+            self.lazy[d * self.size + node] += c;
         }
     }
 
-    fn push(&mut self, node: usize, len: usize) {
-        let c = self.lazy[node];
+    fn push(&mut self, d: usize, node: usize, len: usize) {
+        let c = self.lazy[d * self.size + node];
         if c != 0.0 {
-            self.apply(2 * node, len / 2, c);
-            self.apply(2 * node + 1, len / 2, c);
-            self.lazy[node] = 0.0;
+            self.apply(d, 2 * node, len / 2, c);
+            self.apply(d, 2 * node + 1, len / 2, c);
+            self.lazy[d * self.size + node] = 0.0;
         }
     }
 
-    fn pull(&mut self, node: usize) {
-        self.max[node] = self.max[2 * node].max(self.max[2 * node + 1]);
-        self.sum[node] = self.sum[2 * node] + self.sum[2 * node + 1];
-        self.sumsq[node] = self.sumsq[2 * node] + self.sumsq[2 * node + 1];
+    fn pull(&mut self, d: usize, node: usize) {
+        let (i, l, r) = (self.ix(d, node), self.ix(d, 2 * node), self.ix(d, 2 * node + 1));
+        self.max[i] = self.max[l].max(self.max[r]);
+        self.min[i] = self.min[l].min(self.min[r]);
+        self.sum[i] = self.sum[l] + self.sum[r];
+        self.sumsq[i] = self.sumsq[l] + self.sumsq[r];
     }
 
-    fn add(&mut self, l: usize, r: usize, c: f64) {
-        self.add_rec(1, 0, self.size - 1, l, r, c);
+    fn add(&mut self, d: usize, l: usize, r: usize, c: f64) {
+        self.add_rec(d, 1, 0, self.size - 1, l, r, c);
     }
 
-    fn add_rec(&mut self, node: usize, lo: usize, hi: usize, l: usize, r: usize, c: f64) {
+    #[allow(clippy::too_many_arguments)]
+    fn add_rec(&mut self, d: usize, node: usize, lo: usize, hi: usize, l: usize, r: usize, c: f64) {
         if r < lo || hi < l {
             return;
         }
         if l <= lo && hi <= r {
-            self.apply(node, hi - lo + 1, c);
+            self.apply(d, node, hi - lo + 1, c);
             return;
         }
-        self.push(node, hi - lo + 1);
+        self.push(d, node, hi - lo + 1);
         let mid = lo + (hi - lo) / 2;
-        self.add_rec(2 * node, lo, mid, l, r, c);
-        self.add_rec(2 * node + 1, mid + 1, hi, l, r, c);
-        self.pull(node);
+        self.add_rec(d, 2 * node, lo, mid, l, r, c);
+        self.add_rec(d, 2 * node + 1, mid + 1, hi, l, r, c);
+        self.pull(d, node);
     }
 
-    fn query_max(&self, l: usize, r: usize) -> f64 {
-        self.max_rec(1, 0, self.size - 1, l, r, 0.0)
+    fn query_max(&self, d: usize, l: usize, r: usize) -> f64 {
+        self.max_rec(d, 1, 0, self.size - 1, l, r, 0.0)
     }
 
-    fn max_rec(&self, node: usize, lo: usize, hi: usize, l: usize, r: usize, acc: f64) -> f64 {
+    #[allow(clippy::too_many_arguments)]
+    fn max_rec(
+        &self,
+        d: usize,
+        node: usize,
+        lo: usize,
+        hi: usize,
+        l: usize,
+        r: usize,
+        acc: f64,
+    ) -> f64 {
         if r < lo || hi < l {
             return f64::NEG_INFINITY;
         }
         if l <= lo && hi <= r {
-            return self.max[node] + acc;
+            return self.max[self.ix(d, node)] + acc;
         }
-        let acc = acc + self.lazy[node];
+        let acc = acc + self.lazy[d * self.size + node];
         let mid = lo + (hi - lo) / 2;
-        self.max_rec(2 * node, lo, mid, l, r, acc)
-            .max(self.max_rec(2 * node + 1, mid + 1, hi, l, r, acc))
+        self.max_rec(d, 2 * node, lo, mid, l, r, acc)
+            .max(self.max_rec(d, 2 * node + 1, mid + 1, hi, l, r, acc))
     }
 
-    fn query_sums(&self, l: usize, r: usize) -> (f64, f64) {
-        self.sums_rec(1, 0, self.size - 1, l, r, 0.0)
+    fn query_sums(&self, d: usize, l: usize, r: usize) -> (f64, f64) {
+        self.sums_rec(d, 1, 0, self.size - 1, l, r, 0.0)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn sums_rec(
         &self,
+        d: usize,
         node: usize,
         lo: usize,
         hi: usize,
@@ -284,20 +370,23 @@ impl SegTree {
         }
         if l <= lo && hi <= r {
             let len = (hi - lo + 1) as f64;
-            let s = self.sum[node];
-            return (s + acc * len, self.sumsq[node] + 2.0 * acc * s + acc * acc * len);
+            let i = self.ix(d, node);
+            let s = self.sum[i];
+            return (s + acc * len, self.sumsq[i] + 2.0 * acc * s + acc * acc * len);
         }
-        let acc = acc + self.lazy[node];
+        let acc = acc + self.lazy[d * self.size + node];
         let mid = lo + (hi - lo) / 2;
-        let (s1, q1) = self.sums_rec(2 * node, lo, mid, l, r, acc);
-        let (s2, q2) = self.sums_rec(2 * node + 1, mid + 1, hi, l, r, acc);
+        let (s1, q1) = self.sums_rec(d, 2 * node, lo, mid, l, r, acc);
+        let (s2, q2) = self.sums_rec(d, 2 * node + 1, mid + 1, hi, l, r, acc);
         (s1 + s2, q1 + q2)
     }
 
     /// Collect ascending slots with value strictly above `threshold`.
     /// `n_slots` bounds the walk to real (non-padding) leaves.
+    #[allow(clippy::too_many_arguments)]
     fn collect_over(
         &self,
+        d: usize,
         node: usize,
         lo: usize,
         hi: usize,
@@ -306,36 +395,48 @@ impl SegTree {
         n_slots: usize,
         out: &mut Vec<(usize, f64)>,
     ) {
-        if lo >= n_slots || self.max[node] + acc <= threshold {
+        if lo >= n_slots || self.max[self.ix(d, node)] + acc <= threshold {
             return;
         }
         if lo == hi {
             // leaf: its sum over one slot is the slot's value
-            out.push((lo, self.sum[node] + acc));
+            out.push((lo, self.sum[self.ix(d, node)] + acc));
             return;
         }
-        let acc = acc + self.lazy[node];
+        let acc = acc + self.lazy[d * self.size + node];
         let mid = lo + (hi - lo) / 2;
-        self.collect_over(2 * node, lo, mid, acc, threshold, n_slots, out);
-        self.collect_over(2 * node + 1, mid + 1, hi, acc, threshold, n_slots, out);
+        self.collect_over(d, 2 * node, lo, mid, acc, threshold, n_slots, out);
+        self.collect_over(d, 2 * node + 1, mid + 1, hi, acc, threshold, n_slots, out);
     }
 }
 
-/// Indexed load profile: one lazy segment tree per dimension. All range
-/// operations are O(log T); whole-timeline peaks are O(1).
+/// Indexed load profile: all D lazy segment trees in one flattened
+/// [`SegStore`]. All range operations are O(log T); whole-timeline peaks
+/// and floors are O(1).
 #[derive(Clone, Debug)]
 pub struct LoadProfile {
     cap: Vec<f64>,
     n_slots: usize,
-    trees: Vec<SegTree>,
+    store: SegStore,
+}
+
+impl LoadProfile {
+    /// Minimum usage in dimension `d` over the whole (real) timeline —
+    /// the floor the sure-reject in [`LoadProfile::fits`] tests against.
+    /// O(1): the root of the min tree.
+    pub fn floor(&self, d: usize) -> f64 {
+        self.store.root_min(d)
+    }
 }
 
 impl Profile for LoadProfile {
+    const CHEAP_PEAKS: bool = true;
+
     fn new(n_slots: usize, cap: Vec<f64>) -> Self {
         assert!(n_slots > 0, "empty timeline");
         assert!(!cap.is_empty(), "empty capacity");
-        let trees = (0..cap.len()).map(|_| SegTree::new(n_slots)).collect();
-        LoadProfile { cap, n_slots, trees }
+        let store = SegStore::new(cap.len(), n_slots);
+        LoadProfile { cap, n_slots, store }
     }
 
     fn cap(&self) -> &[f64] {
@@ -356,28 +457,71 @@ impl Profile for LoadProfile {
             "range {lo}..={hi} outside timeline of {} slots",
             self.n_slots
         );
-        self.trees[d].add(lo, hi, c);
+        self.store.add(d, lo, hi, c);
     }
 
     fn window_max(&self, d: usize, lo: usize, hi: usize) -> f64 {
-        self.trees[d].query_max(lo, hi)
+        self.store.query_max(d, lo, hi)
     }
 
     fn window_sums(&self, d: usize, lo: usize, hi: usize) -> (f64, f64) {
-        self.trees[d].query_sums(lo, hi)
+        self.store.query_sums(d, lo, hi)
     }
 
     fn peak(&self, d: usize) -> f64 {
         // Padding leaves beyond n_slots hold zero usage; real usage is
         // non-negative, so the root max is the true timeline peak.
-        self.trees[d].max[1]
+        self.store.root_max(d)
     }
 
     fn overloads(&self, d: usize, threshold: f64) -> Vec<(usize, f64)> {
         let mut out = Vec::new();
-        let tree = &self.trees[d];
-        tree.collect_over(1, 0, tree.size - 1, 0.0, threshold, self.n_slots, &mut out);
+        self.store
+            .collect_over(d, 1, 0, self.store.size - 1, 0.0, threshold, self.n_slots, &mut out);
         out
+    }
+
+    /// The trait's sure-accept plus a min-aggregate sure-*reject*, then
+    /// the identical exact fallback. The reject is exact, never
+    /// heuristic: every windowed max is >= the timeline floor and every
+    /// segment demands at least the task's per-dimension minimum, so
+    /// `floor + min-demand > cap` in any dimension implies every
+    /// segment's exact check fails there too — the answer (`false`)
+    /// matches the trait default and the dense reference bit-for-bit.
+    /// This is what lets first-fit dismiss a full node in O(D) instead
+    /// of O(S·D·log T) while scanning the prefix of loaded nodes.
+    fn fits(&self, task: &Task) -> bool {
+        let cap = self.cap();
+        let peak_dem = task.peak();
+        let mut sure = true;
+        for (d, &c) in cap.iter().enumerate() {
+            if peak_dem[d] + self.peak(d) > c + EPS {
+                sure = false;
+                break;
+            }
+        }
+        if sure {
+            return true;
+        }
+        let segs = task.segments();
+        for (d, &c) in cap.iter().enumerate() {
+            let floor = self.store.root_min(d);
+            // peak >= every segment demand: cheap pre-test before the
+            // per-segment min scan
+            if floor + peak_dem[d] > c + EPS {
+                let min_dem =
+                    segs.iter().map(|s| s.demand[d]).fold(f64::INFINITY, f64::min);
+                if floor + min_dem > c + EPS {
+                    return false;
+                }
+            }
+        }
+        segs.iter().all(|seg| {
+            let (lo, hi) = (seg.start as usize, seg.end as usize);
+            cap.iter()
+                .enumerate()
+                .all(|(d, &c)| self.window_max(d, lo, hi) + seg.demand[d] <= c + EPS)
+        })
     }
 }
 
@@ -530,48 +674,59 @@ mod tests {
     }
 
     #[test]
-    fn segtree_matches_brute_force() {
-        // deterministic mixed add/query workload against a flat array
+    fn segstore_matches_brute_force() {
+        // deterministic mixed add/query workload against flat arrays, on
+        // a two-dimension store so the dim-major blocks are exercised
         let n = 37usize; // deliberately not a power of two
-        let mut tree = SegTree::new(n);
-        let mut flat = vec![0.0f64; n];
-        let ops: [(usize, usize, f64); 7] = [
-            (0, 36, 0.25),
-            (3, 11, 1.5),
-            (11, 11, -0.5),
-            (20, 30, 0.125),
-            (0, 5, 2.0),
-            (30, 36, 0.75),
-            (5, 25, -0.125),
+        let mut store = SegStore::new(2, n);
+        let mut flat = [vec![0.0f64; n], vec![0.0f64; n]];
+        let ops: [(usize, usize, usize, f64); 8] = [
+            (0, 0, 36, 0.25),
+            (1, 3, 11, 1.5),
+            (0, 11, 11, -0.5),
+            (1, 20, 30, 0.125),
+            (0, 0, 5, 2.0),
+            (1, 30, 36, 0.75),
+            (0, 5, 25, -0.125),
+            (1, 0, 36, 0.0625),
         ];
-        for &(l, r, c) in &ops {
-            tree.add(l, r, c);
+        for &(d, l, r, c) in &ops {
+            store.add(d, l, r, c);
             for t in l..=r {
-                flat[t] += c;
+                flat[d][t] += c;
             }
-            for &(ql, qr) in &[(0usize, n - 1), (2, 9), (10, 20), (25, 36), (7, 7)] {
-                let want_max = flat[ql..=qr].iter().copied().fold(f64::NEG_INFINITY, f64::max);
-                let want_sum: f64 = flat[ql..=qr].iter().sum();
-                let want_sq: f64 = flat[ql..=qr].iter().map(|v| v * v).sum();
-                assert!((tree.query_max(ql, qr) - want_max).abs() < 1e-12, "max {ql}..={qr}");
-                let (s, q) = tree.query_sums(ql, qr);
-                assert!((s - want_sum).abs() < 1e-9, "sum {ql}..={qr}: {s} vs {want_sum}");
-                assert!((q - want_sq).abs() < 1e-9, "sumsq {ql}..={qr}: {q} vs {want_sq}");
+            for dim in 0..2 {
+                for &(ql, qr) in &[(0usize, n - 1), (2, 9), (10, 20), (25, 36), (7, 7)] {
+                    let want_max =
+                        flat[dim][ql..=qr].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                    let want_sum: f64 = flat[dim][ql..=qr].iter().sum();
+                    let want_sq: f64 = flat[dim][ql..=qr].iter().map(|v| v * v).sum();
+                    assert!(
+                        (store.query_max(dim, ql, qr) - want_max).abs() < 1e-12,
+                        "max d{dim} {ql}..={qr}"
+                    );
+                    let (s, q) = store.query_sums(dim, ql, qr);
+                    assert!((s - want_sum).abs() < 1e-9, "sum d{dim} {ql}..={qr}");
+                    assert!((q - want_sq).abs() < 1e-9, "sumsq d{dim} {ql}..={qr}");
+                }
+                // roots are the whole-array peak and floor, per dimension
+                // (padding pinned to +inf cannot win the min)
+                let peak = flat[dim].iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let floor = flat[dim].iter().copied().fold(f64::INFINITY, f64::min);
+                assert!((store.root_max(dim) - peak).abs() < 1e-12);
+                assert!((store.root_min(dim) - floor).abs() < 1e-9, "floor d{dim}");
             }
         }
-        // root max is the whole-array peak
-        let peak = flat.iter().copied().fold(f64::NEG_INFINITY, f64::max);
-        assert!((tree.max[1] - peak).abs() < 1e-12);
     }
 
     #[test]
-    fn segtree_overload_enumeration() {
+    fn segstore_overload_enumeration() {
         let n = 10usize;
-        let mut tree = SegTree::new(n);
-        tree.add(2, 5, 1.0);
-        tree.add(4, 8, 1.0);
+        let mut store = SegStore::new(1, n);
+        store.add(0, 2, 5, 1.0);
+        store.add(0, 4, 8, 1.0);
         let mut out = Vec::new();
-        tree.collect_over(1, 0, tree.size - 1, 0.0, 1.5, n, &mut out);
+        store.collect_over(0, 1, 0, store.size - 1, 0.0, 1.5, n, &mut out);
         let slots: Vec<usize> = out.iter().map(|&(t, _)| t).collect();
         assert_eq!(slots, vec![4, 5]);
         for &(_, v) in &out {
@@ -579,8 +734,54 @@ mod tests {
         }
         // threshold above the peak: nothing
         out.clear();
-        tree.collect_over(1, 0, tree.size - 1, 0.0, 2.5, n, &mut out);
+        store.collect_over(0, 1, 0, store.size - 1, 0.0, 2.5, n, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn floor_tracks_timeline_min_over_real_slots() {
+        // 6 slots in an 8-leaf tree: the two padding leaves must never
+        // drag the root min to zero
+        let mut p: LoadProfile = Profile::new(6, vec![1.0]);
+        p.add_task(&task(vec![0.4], 0, 5));
+        assert!((p.floor(0) - 0.4).abs() < 1e-12);
+        p.add_task(&task(vec![0.3], 2, 4));
+        assert!((p.floor(0) - 0.4).abs() < 1e-12, "quietest slot still 0.4");
+        p.add_task(&task(vec![0.2], 0, 1));
+        p.add_task(&task(vec![0.2], 5, 5));
+        assert!((p.floor(0) - 0.6).abs() < 1e-12);
+        p.remove_task(&task(vec![0.4], 0, 5));
+        assert!((p.floor(0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fits_sure_reject_agrees_with_dense() {
+        // the node is uniformly loaded to 0.8: the floor alone rejects a
+        // 0.3-task anywhere; the dense reference must agree, and a probe
+        // the floor cannot reject must still pass the exact path
+        let cap = vec![1.0, 1.0];
+        let mut idx: LoadProfile = Profile::new(9, cap.clone());
+        let mut dense: DenseProfile = Profile::new(9, cap.clone());
+        let heavy = task(vec![0.8, 0.1], 0, 8);
+        idx.add_task(&heavy);
+        dense.add_task(&heavy);
+        let probe = task(vec![0.3, 0.3], 2, 6);
+        assert!(!idx.fits(&probe));
+        assert_eq!(idx.fits(&probe), dense.fits(&probe));
+        let ok = task(vec![0.15, 0.3], 2, 6);
+        assert!(idx.fits(&ok));
+        assert_eq!(idx.fits(&ok), dense.fits(&ok));
+        // shaped probe: only the quietest segment matters for the reject
+        use crate::model::task::DemandSeg;
+        let shaped = Task::piecewise(
+            1,
+            vec![
+                DemandSeg { start: 1, end: 3, demand: vec![0.5, 0.1] },
+                DemandSeg { start: 4, end: 6, demand: vec![0.1, 0.1] },
+            ],
+        );
+        assert!(!idx.fits(&shaped), "first segment overflows dim 0");
+        assert_eq!(idx.fits(&shaped), dense.fits(&shaped));
     }
 
     #[test]
@@ -735,6 +936,7 @@ mod tests {
         let mut p: LoadProfile = Profile::new(1, vec![1.0]);
         p.add_task(&task(vec![0.6], 0, 0));
         assert!((p.peak(0) - 0.6).abs() < 1e-12);
+        assert!((p.floor(0) - 0.6).abs() < 1e-12);
         assert!(p.fits(&task(vec![0.4], 0, 0)));
         assert!(!p.fits(&task(vec![0.5], 0, 0)));
         assert_eq!(p.overloads(0, 0.5).len(), 1);

@@ -237,6 +237,44 @@ fn workloads_catalog_and_stress() {
 }
 
 #[test]
+fn decomposed_solve_cli() {
+    if tlrs_bin().is_none() {
+        return;
+    }
+    let dir = std::env::temp_dir().join(format!("tlrs_cli_deco_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let sol = dir.join("deco-sol.json");
+    for dspec in ["window:3", "dims", "size:2"] {
+        let (ok, stdout, stderr) = run(&[
+            "solve", "--workload", "synth:n=90,m=4,dims=3", "--seed", "4",
+            "--algo", "penalty-map,penalty-map-f", "--decompose", dspec,
+            "--backend", "native", "--replay", "--out", sol.to_str().unwrap(),
+        ]);
+        assert!(ok, "decomposed solve {dspec} failed: {stderr}");
+        assert!(stdout.contains(&format!("decompose      : {dspec}")), "{stdout}");
+        assert!(stdout.contains("partition    :"), "{stdout}");
+        assert!(stdout.contains("stitch"), "{stdout}");
+        assert!(stdout.contains("lower bound"), "{stdout}");
+        assert!(stdout.contains("sum of parts"), "{stdout}");
+        // --replay re-simulates the stitched solution: it must be clean
+        assert!(stdout.contains("0 overloads"), "{stdout}");
+        let parsed =
+            tlrs::util::json::parse(&std::fs::read_to_string(&sol).unwrap()).unwrap();
+        assert!(parsed.get("n_nodes").as_f64().unwrap() >= 1.0);
+    }
+    // degenerate and malformed specs are CLI errors that teach the grammar
+    let (ok, _, stderr) =
+        run(&["solve", "--workload", "synth:n=20,m=3", "--decompose", "window:0"]);
+    assert!(!ok);
+    assert!(stderr.contains("k must be"), "{stderr}");
+    assert!(stderr.contains("spec grammar"), "{stderr}");
+    let (ok, _, stderr) =
+        run(&["solve", "--workload", "synth:n=20,m=3", "--decompose", "shard"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown partitioner"), "{stderr}");
+}
+
+#[test]
 fn figures_tab1_runs() {
     if tlrs_bin().is_none() {
         return;

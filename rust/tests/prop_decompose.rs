@@ -1,0 +1,162 @@
+//! Property tests for partition-decomposed solves: a k=1 decomposition
+//! must be *bit-identical* to the plain sequential portfolio, every
+//! decomposed solution must verify clean on the independent dense
+//! backend, the combined certificate must lower-bound the reported cost
+//! on the figure-style scenarios, and every built-in partitioner must
+//! emit disjoint covering partitions on every workload family.
+
+use tlrs::algo::decompose::{
+    parse_decompose, solve_decomposed, validate_partition, MAX_PARTITIONS,
+};
+use tlrs::algo::pipeline::parse_portfolio;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::io::workload::parse_workload;
+use tlrs::lp::solver::{MappingSolver, NativePdhgSolver};
+use tlrs::model::{trim, DenseProfile, Instance};
+
+fn factory() -> Box<dyn MappingSolver> {
+    Box::new(NativePdhgSolver::default())
+}
+
+fn figure_cases() -> Vec<(String, Instance)> {
+    let mut cases = Vec::new();
+    for seed in [2u64, 19] {
+        let inst = generate(
+            &SynthParams { n: 140, m: 5, dims: 3, ..Default::default() },
+            seed,
+        );
+        cases.push((format!("synth seed {seed}"), trim(&inst).instance));
+    }
+    // piecewise-demand mix: the decomposition must survive shaped tasks
+    let inst = parse_workload("mixed:services=40,shape=diurnal")
+        .unwrap()
+        .generate(7)
+        .unwrap();
+    cases.push(("mixed diurnal".into(), trim(&inst).instance));
+    cases
+}
+
+#[test]
+fn k1_decomposition_is_bit_identical_to_sequential_portfolio() {
+    let portfolio = parse_portfolio("penalty-map,lp-map-f").unwrap();
+    for (label, tr) in figure_cases() {
+        for spec in ["window:1", "dims:1", "size:1"] {
+            let spec = parse_decompose(spec).unwrap();
+            let rep = solve_decomposed(&tr, &portfolio, &factory, &spec).unwrap();
+            let direct = portfolio
+                .run_sequential(&tr, &NativePdhgSolver::default())
+                .unwrap();
+            let best = direct.best();
+            assert_eq!(
+                rep.cost.to_bits(),
+                best.cost.to_bits(),
+                "{label} {spec}: cost not bit-identical"
+            );
+            assert_eq!(rep.solution.assignment, best.solution.assignment, "{label} {spec}");
+            assert_eq!(rep.solution.nodes.len(), best.solution.nodes.len(), "{label} {spec}");
+            for (a, b) in rep.solution.nodes.iter().zip(&best.solution.nodes) {
+                assert_eq!(a.type_idx, b.type_idx, "{label} {spec}");
+                assert_eq!(a.purchase_order, b.purchase_order, "{label} {spec}");
+                assert_eq!(a.tasks, b.tasks, "{label} {spec}");
+            }
+            assert_eq!(rep.partitions.len(), 1, "{label} {spec}");
+            assert_eq!(rep.stitch_seconds, 0.0, "{label} {spec}: no stitch pass at k=1");
+        }
+    }
+}
+
+#[test]
+fn decomposed_solutions_verify_on_the_dense_backend() {
+    let portfolio = parse_portfolio("penalty-map,penalty-map-f").unwrap();
+    for (label, tr) in figure_cases() {
+        for spec in ["window:4", "dims", "size:3"] {
+            let spec = parse_decompose(spec).unwrap();
+            let rep = solve_decomposed(&tr, &portfolio, &factory, &spec).unwrap();
+            // segment-tree and dense backends must agree the plan is valid
+            rep.solution
+                .verify(&tr)
+                .unwrap_or_else(|v| panic!("{label} {spec}: {v:?}"));
+            rep.solution
+                .verify_with::<DenseProfile>(&tr)
+                .unwrap_or_else(|v| panic!("{label} {spec} (dense): {v:?}"));
+            // every task of the original instance is placed exactly once
+            assert_eq!(rep.solution.assignment.len(), tr.n_tasks(), "{label} {spec}");
+            let placed: usize = rep.solution.nodes.iter().map(|n| n.tasks.len()).sum();
+            assert_eq!(placed, tr.n_tasks(), "{label} {spec}");
+        }
+    }
+}
+
+#[test]
+fn combined_certificate_bounds_cost_on_figure_seeds() {
+    let portfolio = parse_portfolio("lp-map-f").unwrap();
+    for (label, tr) in figure_cases() {
+        for spec in ["window:3", "size:2"] {
+            let spec = parse_decompose(spec).unwrap();
+            let rep = solve_decomposed(&tr, &portfolio, &factory, &spec).unwrap();
+            let tol = 1e-6 * (1.0 + rep.cost.abs());
+            assert!(
+                rep.certified_lb > 0.0 && rep.certified_lb <= rep.cost + tol,
+                "{label} {spec}: certified lb {} vs cost {}",
+                rep.certified_lb,
+                rep.cost
+            );
+            // stitching never raises cost above the merged solution
+            assert!(rep.cost <= rep.pre_stitch_cost + 1e-9, "{label} {spec}");
+            // the node-disjoint certificate bounds the pre-stitch cost
+            assert!(
+                rep.pre_stitch_cost >= rep.sum_lb - tol,
+                "{label} {spec}: merged {} below sum of partition bounds {}",
+                rep.pre_stitch_cost,
+                rep.sum_lb
+            );
+            // the global certificate is never the (invalid-globally) sum
+            assert!(rep.certified_lb <= rep.sum_lb + tol, "{label} {spec}");
+            assert!(rep.congestion_lb <= rep.certified_lb + tol, "{label} {spec}");
+        }
+    }
+}
+
+#[test]
+fn partitioners_emit_disjoint_covering_parts_across_families() {
+    for wspec in [
+        "synth:n=75,m=4,dims=3",
+        "gct:n=60,m=5",
+        "burst:services=20,m=3,shape=spike",
+        "deadline:services=40,m=3",
+    ] {
+        let inst = parse_workload(wspec).unwrap().generate(3).unwrap();
+        let tr = trim(&inst).instance;
+        for dspec in ["window:6", "window:1", "dims", "dims:2", "size", "size:4"] {
+            let spec = parse_decompose(dspec).unwrap();
+            let parts = spec.partitioner().partition(&tr).unwrap();
+            validate_partition(tr.n_tasks(), &parts)
+                .unwrap_or_else(|e| panic!("{wspec} {dspec}: {e:#}"));
+            if let Some(k) = spec.requested_k() {
+                assert!(parts.len() <= k, "{wspec} {dspec}: {} parts > k {k}", parts.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_specs_are_errors_not_degenerate_solves() {
+    // parse-time rejections
+    for bad in ["window:0", "dims:0", "size:0", "window:65", "size:9999", "shard", "window:k"] {
+        assert!(parse_decompose(bad).is_err(), "{bad} must not parse");
+    }
+    assert!(parse_decompose(&format!("window:{MAX_PARTITIONS}")).is_ok());
+
+    // partition-time rejection: k exceeding the task count
+    let inst = generate(&SynthParams { n: 4, m: 2, ..Default::default() }, 1);
+    let tr = trim(&inst).instance;
+    let portfolio = parse_portfolio("penalty-map").unwrap();
+    let spec = parse_decompose("window:10").unwrap();
+    let err = solve_decomposed(&tr, &portfolio, &factory, &spec).unwrap_err();
+    assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+
+    // validate_partition catches malformed hand-built partitions
+    assert!(validate_partition(4, &[vec![0, 1, 2, 3], vec![]]).is_err());
+    assert!(validate_partition(4, &[vec![0, 1], vec![1, 2, 3]]).is_err());
+    assert!(validate_partition(4, &[vec![0, 1], vec![2]]).is_err());
+}

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Full benchmark suite: every bench target in release mode, refreshing
+# the rust/BENCH_*.json artifacts that track the perf trajectory PR
+# over PR (placement records the decomposed-vs-monolithic sweep up to
+# n = 10^6 plus the bucketed-index and SoA-store deltas).
+#
+#   TLRS_BENCH_QUICK=1  shrink budgets to the tier-1 smoke sizes
+#   BENCH_ONLY=<name>   run a single bench target (placement, session,
+#                       end_to_end, lp_solvers)
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+BENCHES=(placement session end_to_end lp_solvers)
+if [[ -n "${BENCH_ONLY:-}" ]]; then
+    BENCHES=("$BENCH_ONLY")
+fi
+
+cargo build --release --benches
+
+for b in "${BENCHES[@]}"; do
+    echo "== bench: $b =="
+    cargo bench --bench "$b"
+done
+
+echo "== BENCH artifacts =="
+for f in BENCH_*.json; do
+    [[ -f "$f" ]] || continue
+    printf '%-28s %s bytes\n' "$f" "$(wc -c < "$f")"
+done

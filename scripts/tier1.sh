@@ -85,6 +85,25 @@ grep -v reprice "$GEN_DIR/sess-deltas.jsonl" > "$GEN_DIR/sess-deltas-ok.jsonl"
 grep -q "session check  : OK" "$GEN_DIR/sess.out"
 grep -q "retire" "$GEN_DIR/sess.out"
 
+echo "== tier1: decomposed solve smoke =="
+# one decomposed solve per built-in partitioner: the partition table,
+# the stitch line, and the certified combined bound must all print
+"$TLRS" gen --workload synth:n=120,m=4,dims=3 --seed 5 --out "$GEN_DIR/deco.json"
+for dspec in window:4 dims size:3; do
+    echo "-- --decompose $dspec"
+    "$TLRS" solve --input "$GEN_DIR/deco.json" --algo penalty-map,penalty-map-f \
+        --decompose "$dspec" --backend native | tee "$GEN_DIR/deco.out"
+    grep -q "decompose      : $dspec" "$GEN_DIR/deco.out"
+    grep -q "partition    :" "$GEN_DIR/deco.out"
+    grep -q "lower bound    :" "$GEN_DIR/deco.out"
+    grep -q "stitch" "$GEN_DIR/deco.out"
+done
+# degenerate partition counts are errors, not degenerate solves
+if "$TLRS" solve --input "$GEN_DIR/deco.json" --decompose window:0 \
+    --backend native > /dev/null 2>&1; then
+    echo "decompose smoke: k=0 was not rejected"; exit 1
+fi
+
 echo "== tier1: session bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
     cargo bench --bench session
