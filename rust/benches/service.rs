@@ -1,0 +1,157 @@
+//! Service runtime benchmarks: solve throughput and latency through a
+//! real TCP socket at 1 / 4 / 16 concurrent clients.
+//!
+//! Each level runs a fresh runtime (`workers = clients`, queue 2x) and
+//! drives it with lock-step RPC clients (send one solve, read the
+//! answer, repeat), so per-request latencies are honest and throughput
+//! reflects worker-pool concurrency rather than client-side pipelining.
+//! Writes `BENCH_service.json` with `concurrent_vs_sequential_speedup`
+//! (level-16 rps over level-1 rps) so the accept/worker split's win is
+//! tracked PR over PR. `TLRS_BENCH_QUICK=1` shrinks levels and request
+//! counts for the tier-1 smoke.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::runtime::{RuntimeConfig, ServiceRuntime};
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::util::bench::{fmt_ns, BenchResult};
+use tlrs::util::json::Json;
+use tlrs::util::stats;
+
+struct LevelOutcome {
+    clients: usize,
+    requests: usize,
+    rps: f64,
+    result: BenchResult,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+/// One concurrency level: spin up a runtime sized for `clients`, hammer
+/// it with lock-step RPC clients, tear it down.
+fn run_level(clients: usize, per_client: usize, req_line: &str) -> LevelOutcome {
+    let planner = Arc::new(Planner::new(Backend::Native).unwrap());
+    let cfg = RuntimeConfig {
+        workers: clients,
+        queue: 2 * clients,
+        ..RuntimeConfig::default()
+    };
+    let handle = ServiceRuntime::bind(planner, "127.0.0.1:0", cfg).unwrap().spawn();
+    let addr = handle.addr;
+
+    let t0 = Instant::now();
+    let latencies_ns: Vec<f64> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..clients)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut stream = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut lats = Vec::with_capacity(per_client);
+                    let mut line = String::new();
+                    for _ in 0..per_client {
+                        let t = Instant::now();
+                        stream.write_all(req_line.as_bytes()).unwrap();
+                        stream.write_all(b"\n").unwrap();
+                        stream.flush().unwrap();
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                        lats.push(t.elapsed().as_nanos() as f64);
+                        assert!(line.contains("\"ok\":true"), "bad response: {line}");
+                    }
+                    lats
+                })
+            })
+            .collect();
+        workers.into_iter().flat_map(|w| w.join().unwrap()).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    handle.shutdown_and_join().unwrap();
+
+    let requests = clients * per_client;
+    let rps = requests as f64 / wall.max(1e-9);
+    let result = BenchResult {
+        name: format!("service/solve-latency c={clients}"),
+        mean_ns: stats::mean(&latencies_ns),
+        std_ns: stats::stddev(&latencies_ns),
+        min_ns: stats::min(&latencies_ns),
+        samples: latencies_ns.len(),
+        iters_per_sample: 1,
+    };
+    println!("{}", result.report_line());
+    let p50_ms = stats::percentile(&latencies_ns, 50.0) / 1e6;
+    let p95_ms = stats::percentile(&latencies_ns, 95.0) / 1e6;
+    println!(
+        "service/solve-throughput c={clients:<3} {rps:>8.1} req/s  \
+         (p50 {p50_ms:.2} ms, p95 {p95_ms:.2} ms, {requests} reqs in {wall:.2}s)"
+    );
+    LevelOutcome { clients, requests, rps, result, p50_ms, p95_ms }
+}
+
+fn main() {
+    println!("== service benches ==");
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let levels: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
+    let per_client = if quick { 4 } else { 10 };
+
+    // one shared request line: a small fast solve so the measurement is
+    // dominated by runtime dispatch + solver work, not instance size
+    let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 7);
+    let req_line = Json::obj(vec![
+        ("instance", files::instance_to_json(&inst)),
+        ("algorithm", Json::Str("penalty-map-f".into())),
+    ])
+    .to_string();
+
+    let outcomes: Vec<LevelOutcome> =
+        levels.iter().map(|&c| run_level(c, per_client, &req_line)).collect();
+
+    let base = &outcomes[0];
+    let top = outcomes.last().unwrap();
+    let speedup = top.rps / base.rps.max(1e-9);
+    println!(
+        "concurrent vs sequential speedup: {speedup:.2}x \
+         ({} client(s) {:.1} req/s -> {} clients {:.1} req/s, mean latency {} -> {})",
+        base.clients,
+        base.rps,
+        top.clients,
+        top.rps,
+        fmt_ns(base.result.mean_ns),
+        fmt_ns(top.result.mean_ns)
+    );
+
+    let rows = Json::Arr(
+        outcomes
+            .iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("clients", Json::Num(o.clients as f64)),
+                    ("requests", Json::Num(o.requests as f64)),
+                    ("rps", Json::Num(o.rps)),
+                    ("p50_ms", Json::Num(o.p50_ms)),
+                    ("p95_ms", Json::Num(o.p95_ms)),
+                ])
+            })
+            .collect(),
+    );
+    let json = Json::obj(vec![
+        ("bench", Json::Str("service".into())),
+        ("quick", Json::Bool(quick)),
+        ("levels", rows),
+        ("concurrent_vs_sequential_speedup", Json::Num(speedup)),
+        (
+            "results",
+            Json::Arr(outcomes.iter().map(|o| o.result.to_json()).collect()),
+        ),
+    ]);
+    let path = "BENCH_service.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_service.json");
+    println!("wrote {path}");
+}

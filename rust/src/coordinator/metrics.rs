@@ -1,5 +1,6 @@
-//! Lightweight metrics registry: counters and latency histograms, shared
-//! across the planner's worker threads and the service's session verbs.
+//! Lightweight metrics registry: counters, gauges and latency
+//! histograms, shared across the planner's worker threads and the
+//! service's session verbs and connection workers.
 //!
 //! Timers used to fold every observation into a bare (total, count)
 //! pair, which erased the distribution — a per-delta latency series with
@@ -61,9 +62,18 @@ impl TimerStat {
     }
 }
 
+/// One gauge's state: the current value plus the high-water mark (the
+/// service runtime reads peaks for "most concurrent connections ever").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GaugeStat {
+    pub value: i64,
+    pub peak: i64,
+}
+
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, GaugeStat>>,
     timers: Mutex<BTreeMap<String, TimerStat>>,
 }
 
@@ -78,6 +88,39 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Add `delta` (may be negative) to a gauge, tracking its peak.
+    /// Returns the new value.
+    pub fn gauge_add(&self, name: &str, delta: i64) -> i64 {
+        let mut gauges = self.gauges.lock().unwrap();
+        let g = gauges.entry(name.to_string()).or_default();
+        g.value += delta;
+        g.peak = g.peak.max(g.value);
+        g.value
+    }
+
+    /// Set a gauge to an absolute value, tracking its peak.
+    pub fn gauge_set(&self, name: &str, value: i64) {
+        let mut gauges = self.gauges.lock().unwrap();
+        let g = gauges.entry(name.to_string()).or_default();
+        g.value = value;
+        g.peak = g.peak.max(value);
+    }
+
+    /// Current gauge value (0 for a gauge never touched).
+    pub fn gauge(&self, name: &str) -> i64 {
+        self.gauges.lock().unwrap().get(name).map(|g| g.value).unwrap_or(0)
+    }
+
+    /// All-time high-water mark of a gauge.
+    pub fn gauge_peak(&self, name: &str) -> i64 {
+        self.gauges.lock().unwrap().get(name).map(|g| g.peak).unwrap_or(0)
+    }
+
+    /// Snapshot every gauge (sorted by name).
+    pub fn gauges_snapshot(&self) -> Vec<(String, GaugeStat)> {
+        self.gauges.lock().unwrap().iter().map(|(k, g)| (k.clone(), *g)).collect()
     }
 
     /// Time a closure and accumulate under `name`. Returns its result.
@@ -128,6 +171,9 @@ impl Metrics {
         for (k, v) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("counter {k:<40} {v}\n"));
         }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge   {k:<40} {} (peak {})\n", g.value, g.peak));
+        }
         for (k, t) in self.timers.lock().unwrap().iter() {
             out.push_str(&format!(
                 "timer   {k:<40} total {:>9.3}s  n={:<6} avg {:.2}ms  p50 {:.2}ms  \
@@ -161,6 +207,27 @@ mod tests {
         let rep = m.report();
         assert!(rep.contains("solves") && rep.contains("work"));
         assert!(rep.contains("p50") && rep.contains("p95") && rep.contains("max"));
+    }
+
+    #[test]
+    fn gauges_track_value_and_peak() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("live"), 0);
+        assert_eq!(m.gauge_add("live", 1), 1);
+        assert_eq!(m.gauge_add("live", 1), 2);
+        assert_eq!(m.gauge_add("live", -1), 1);
+        assert_eq!(m.gauge("live"), 1);
+        assert_eq!(m.gauge_peak("live"), 2, "peak survives the drop");
+        m.gauge_set("depth", 5);
+        m.gauge_set("depth", 2);
+        assert_eq!(m.gauge("depth"), 2);
+        assert_eq!(m.gauge_peak("depth"), 5);
+        let snap = m.gauges_snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].0, "depth");
+        assert_eq!(snap[1].1, GaugeStat { value: 1, peak: 2 });
+        assert!(m.report().contains("gauge   "));
+        assert!(m.report().contains("(peak 2)"));
     }
 
     #[test]

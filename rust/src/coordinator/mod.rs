@@ -1,8 +1,9 @@
 //! L3 coordination: configuration, planning, metrics, stateful plan
-//! sessions, and the TCP planning service.
+//! sessions, the TCP planning service and its concurrent runtime.
 
 pub mod config;
 pub mod metrics;
 pub mod planner;
+pub mod runtime;
 pub mod service;
 pub mod session;

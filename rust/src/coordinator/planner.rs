@@ -2,18 +2,19 @@
 //! (a pipeline portfolio + lower bound), and a worker pool for scenario
 //! sweeps. This is the L3 entry point both the CLI and the service use.
 
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::algo::decompose::{self, DecomposeReport, DecomposeSpec};
 use crate::algo::pipeline::{Portfolio, StageTime};
 use crate::lp::dual;
 use crate::lp::scaling;
-use crate::lp::solver::{MappingSolver, NativePdhgSolver, SimplexSolver};
+use crate::lp::solver::{MappingSolution, MappingSolver, NativePdhgSolver, SimplexSolver};
 use crate::lp::MappingLp;
 use crate::model::{trim, Instance};
-use crate::runtime::ArtifactSolver;
+use crate::runtime::{ArtifactSolver, Manifest};
 
 use super::config::Backend;
 use super::metrics::Metrics;
@@ -71,7 +72,7 @@ impl EvalRow {
 /// connection (sessions outlive the connection that opened them).
 pub struct Planner {
     backend: Backend,
-    artifact: Option<Arc<ArtifactSolver>>,
+    artifact: Option<ArtifactRoute>,
     pub metrics: Arc<Metrics>,
     pub sessions: SessionRegistry,
 }
@@ -81,9 +82,11 @@ impl Planner {
     /// `Auto` silently degrades to native when they are absent.
     pub fn new(backend: Backend) -> Result<Planner> {
         let artifact = match backend {
-            Backend::Artifact => Some(Arc::new(ArtifactSolver::from_default_dir()?)),
+            Backend::Artifact => {
+                Some(ArtifactRoute::Direct(Arc::new(ArtifactSolver::from_default_dir()?)))
+            }
             Backend::Auto => match ArtifactSolver::from_default_dir() {
-                Ok(s) => Some(Arc::new(s)),
+                Ok(s) => Some(ArtifactRoute::Direct(Arc::new(s))),
                 Err(e) => {
                     eprintln!("note: artifacts unavailable ({e}); using native backend");
                     None
@@ -99,6 +102,33 @@ impl Planner {
         })
     }
 
+    /// Move the artifact solver (if loaded) onto a dedicated solver
+    /// thread behind a channel, so concurrent connection workers can
+    /// share it without sharing the PJRT client across threads: workers
+    /// hold a cheap channel handle, solves serialize on the one thread.
+    /// Returns whether a solver was rerouted. Idempotent; `tlrs serve`
+    /// calls this before starting the concurrent runtime.
+    pub fn route_artifact_serial(&mut self) -> bool {
+        match self.artifact.take() {
+            Some(ArtifactRoute::Direct(a)) => {
+                let manifest = a.manifest().clone();
+                let serial = Arc::new(SerialSolver::spawn(ArcSolver(a), "pdhg-artifact"));
+                self.artifact = Some(ArtifactRoute::Serial { solver: serial, manifest });
+                true
+            }
+            other => {
+                self.artifact = other;
+                false
+            }
+        }
+    }
+
+    /// Whether this planner still holds a direct (thread-confined)
+    /// artifact handle that a concurrent runtime must not share.
+    pub fn artifact_needs_serial_routing(&self) -> bool {
+        matches!(self.artifact, Some(ArtifactRoute::Direct(_)))
+    }
+
     /// Pick the solver for a (trimmed) instance shape and report its name.
     pub fn solver_for(&self, inst: &Instance) -> (Box<dyn MappingSolver + '_>, &'static str) {
         let (n, m, t, d) =
@@ -107,15 +137,15 @@ impl Planner {
             Backend::Simplex => (Box::new(SimplexSolver), "simplex"),
             Backend::Native => (Box::new(NativePdhgSolver::default()), "pdhg-native"),
             Backend::Artifact => {
-                let s = self.artifact.as_ref().expect("artifact backend loaded").clone();
-                (Box::new(ArcSolver(s)), "pdhg-artifact")
+                let route = self.artifact.as_ref().expect("artifact backend loaded");
+                (route.solver(), "pdhg-artifact")
             }
             Backend::Auto => {
                 // the compiled artifact factors the constraint matrix as
                 // (activity x per-task ratios): it cannot express per-slot
                 // (shaped) coefficients, so shaped instances route native
                 let flat = inst.tasks.iter().all(|u| u.is_flat());
-                if let (Some(a), true) = (&self.artifact, flat) {
+                if let (Some(route), true) = (&self.artifact, flat) {
                     // probe bucket fit using the logical LP shape
                     let probe = MappingLp {
                         n,
@@ -129,14 +159,14 @@ impl Planner {
                         costs: vec![],
                         rho: vec![],
                     };
-                    if let Some(bucket) = a.bucket_for(&probe) {
+                    if let Some(volume) = route.bucket_volume(&probe) {
                         // The artifact computes over the padded dense shape;
                         // if padding inflates the work too far past the
                         // actual problem volume, the native sparse-operator
                         // backend wins. Factor 8 ~ measured crossover.
                         let actual = (n * m * t * d).max(1);
-                        if bucket.volume() <= 8 * actual {
-                            return (Box::new(ArcSolver(a.clone())), "pdhg-artifact");
+                        if volume <= 8 * actual {
+                            return (route.solver(), "pdhg-artifact");
                         }
                     }
                 }
@@ -300,6 +330,36 @@ impl Planner {
     }
 }
 
+/// How the planner reaches the artifact backend: a direct handle (the
+/// seed behavior — fine while one thread does all the solving), or a
+/// channel to a dedicated solver thread once
+/// [`Planner::route_artifact_serial`] ran (required before the
+/// concurrent service runtime may serve with more than one worker). The
+/// serial route keeps a copy of the bucket manifest so Auto-mode routing
+/// decisions stay local instead of round-tripping through the channel.
+enum ArtifactRoute {
+    Direct(Arc<ArtifactSolver>),
+    Serial { solver: Arc<SerialSolver>, manifest: Manifest },
+}
+
+impl ArtifactRoute {
+    fn solver(&self) -> Box<dyn MappingSolver> {
+        match self {
+            ArtifactRoute::Direct(a) => Box::new(ArcSolver(a.clone())),
+            ArtifactRoute::Serial { solver, .. } => Box::new(SerialHandle(solver.clone())),
+        }
+    }
+
+    fn bucket_volume(&self, probe: &MappingLp) -> Option<usize> {
+        match self {
+            ArtifactRoute::Direct(a) => a.bucket_for(probe).map(|b| b.volume()),
+            ArtifactRoute::Serial { manifest, .. } => manifest
+                .select(probe.n, probe.m, probe.t, probe.dims)
+                .map(|b| b.volume()),
+        }
+    }
+}
+
 /// Adapter: Arc<ArtifactSolver> as a MappingSolver.
 struct ArcSolver(Arc<ArtifactSolver>);
 
@@ -310,6 +370,85 @@ impl MappingSolver for ArcSolver {
 
     fn name(&self) -> &'static str {
         "pdhg-artifact"
+    }
+}
+
+// ----- serial solver thread ------------------------------------------------
+
+/// One queued solve: the LP, and where to send the answer.
+struct SerialJob {
+    lp: MappingLp,
+    reply: mpsc::SyncSender<Result<MappingSolution>>,
+}
+
+/// Hoist any solver onto a dedicated thread behind a channel: callers on
+/// any thread submit an LP and block for the answer, solves execute
+/// strictly one at a time on the owning thread. This is how the
+/// thread-confined PJRT artifact client serves a multi-worker runtime —
+/// the handles are `Send + Sync` even when the inner solver is not
+/// shareable. Dropping the `SerialSolver` closes the channel and joins
+/// the thread.
+pub struct SerialSolver {
+    tx: Mutex<Option<mpsc::Sender<SerialJob>>>,
+    worker: Mutex<Option<thread::JoinHandle<()>>>,
+    name: &'static str,
+}
+
+impl SerialSolver {
+    pub fn spawn<S: MappingSolver + Send + 'static>(inner: S, name: &'static str) -> Self {
+        let (tx, rx) = mpsc::channel::<SerialJob>();
+        let worker = thread::Builder::new()
+            .name("tlrs-serial-solver".into())
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    // a caller that gave up (dropped its receiver) is fine
+                    let _ = job.reply.send(inner.solve_mapping(&job.lp));
+                }
+            })
+            .expect("spawn serial solver thread");
+        SerialSolver {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            name,
+        }
+    }
+
+    /// Solve on the dedicated thread; blocks until this job's turn comes
+    /// and completes. Queue order is the channel's FIFO order.
+    pub fn solve(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        let (reply, answer) = mpsc::sync_channel(1);
+        {
+            let tx = self.tx.lock().unwrap();
+            let tx = tx.as_ref().ok_or_else(|| anyhow!("serial solver already shut down"))?;
+            tx.send(SerialJob { lp: lp.clone(), reply })
+                .map_err(|_| anyhow!("serial solver thread stopped"))?;
+        }
+        answer
+            .recv()
+            .map_err(|_| anyhow!("serial solver thread dropped the reply"))?
+    }
+}
+
+impl Drop for SerialSolver {
+    fn drop(&mut self) {
+        // closing the channel ends the worker's recv loop
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Adapter: a shared SerialSolver as a MappingSolver.
+struct SerialHandle(Arc<SerialSolver>);
+
+impl MappingSolver for SerialHandle {
+    fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution> {
+        self.0.solve(lp)
+    }
+
+    fn name(&self) -> &'static str {
+        self.0.name
     }
 }
 
@@ -365,5 +504,50 @@ mod tests {
         let jobs: Vec<usize> = (0..17).collect();
         let out = planner.run_jobs(jobs, 4, |&i| i * i);
         assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_solver_serializes_but_answers_every_caller() {
+        // deterministic inner solver: three concurrent callers through
+        // the one solver thread must each get the bitwise-identical
+        // answer a direct solve produces
+        let inst = generate(&SynthParams { n: 30, m: 3, ..Default::default() }, 9);
+        let tr = trim(&inst).instance;
+        let mut lp = MappingLp::from_instance(&tr);
+        scaling::equilibrate(&mut lp);
+        let direct = NativePdhgSolver::default().solve_mapping(&lp).unwrap();
+
+        let serial = Arc::new(SerialSolver::spawn(NativePdhgSolver::default(), "pdhg-native"));
+        let outs: Vec<MappingSolution> = thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|_| {
+                    let serial = serial.clone();
+                    let lp = &lp;
+                    s.spawn(move || serial.solve(lp).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for o in &outs {
+            assert_eq!(o.x, direct.x, "serialized solve must be bit-identical");
+            assert!((o.objective - direct.objective).abs() <= 1e-12);
+            assert_eq!(o.converged, direct.converged);
+        }
+        // the adapter reports the inner solver's routing label
+        let handle = SerialHandle(serial.clone());
+        assert_eq!(handle.name(), "pdhg-native");
+        assert_eq!(handle.solve_mapping(&lp).unwrap().x, direct.x);
+    }
+
+    #[test]
+    fn serial_routing_is_a_noop_without_artifacts() {
+        let mut planner = Planner::new(Backend::Native).unwrap();
+        assert!(!planner.artifact_needs_serial_routing());
+        assert!(!planner.route_artifact_serial(), "nothing to reroute");
+        assert!(!planner.route_artifact_serial(), "idempotent");
+        // the native path still solves after the (no-op) reroute
+        let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 2);
+        let row = planner.evaluate(&inst).unwrap();
+        assert_eq!(row.backend_used, "pdhg-native");
     }
 }

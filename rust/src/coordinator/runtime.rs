@@ -1,0 +1,727 @@
+//! The concurrent service runtime: an accept/worker split with
+//! admission control, load shedding, per-request budgets and graceful
+//! shutdown.
+//!
+//! The seed service handled every connection sequentially on the accept
+//! thread; this module is what `service::serve` runs on instead. The
+//! pieces:
+//!
+//!   * **Accept/worker split.** One accept thread hands each incoming
+//!     connection to a long-lived bounded [`WorkerPool`]
+//!     (`util::pool`). A connection occupies its worker for the
+//!     connection's lifetime (clients pipeline many request lines), so
+//!     `--workers N` bounds concurrent *connections being served* and
+//!     `--queue K` bounds connections waiting for a worker.
+//!   * **Admission control + load shedding.** When `active + queued`
+//!     reaches `workers + queue`, new connections are not queued
+//!     unboundedly: they get one typed line,
+//!     `{"ok":false,"error":"overloaded","retry_after_ms":...}`, and
+//!     are closed. `retry_after_ms` scales with the observed mean
+//!     request latency times the backlog depth.
+//!   * **Per-request budgets.** Request lines are read through a
+//!     size-capped reader (`--max-request-bytes`; a client streaming
+//!     one multi-GB line can no longer OOM the process — it gets a
+//!     typed `"request too large"` error and the connection closes,
+//!     since there is no way to resync mid-line). Requests that exceed
+//!     `--request-timeout` answer `{"ok":false,"error":"timeout",...}`
+//!     instead of their result. The budget bounds the *answer*, not the
+//!     side effect: a session delta that finished late is still
+//!     applied — query the session to resync.
+//!   * **Graceful shutdown.** `RuntimeCtl::begin_shutdown` (or the
+//!     `{"op":"shutdown"}` verb, gated by `--allow-shutdown`) stops the
+//!     accept loop, lets every in-flight and queued connection finish
+//!     the requests it already sent (connection handlers poll the
+//!     shutdown flag on a 250ms read-timeout tick and serve any bytes
+//!     already buffered before closing), then closes all open sessions.
+//!   * **Observability.** Live/peak connection gauges, queue depth,
+//!     shed/timeout/oversize counters and per-verb latency histograms
+//!     (`request.<verb>`) all land in the shared `Metrics` registry and
+//!     surface through `{"op":"stats"}`.
+//!
+//! The non-`Sync` PJRT artifact backend cannot be shared by concurrent
+//! workers; `Planner::route_artifact_serial` moves it onto a dedicated
+//! solver thread behind a channel (the CLI does this before serving),
+//! and [`ServiceRuntime::bind`] refuses a multi-worker runtime whose
+//! planner still holds a direct artifact handle.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::pool::WorkerPool;
+
+use super::planner::Planner;
+use super::service;
+
+/// Default cap on one request line (bytes, newline excluded): roomy
+/// enough for a ~100k-task inline instance, far below OOM territory.
+pub const DEFAULT_MAX_REQUEST_BYTES: usize = 64 << 20;
+
+/// Default per-request wall budget.
+pub const DEFAULT_REQUEST_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Read-timeout tick on connection sockets: how often an idle handler
+/// polls the shutdown flag. Bounds shutdown latency, costs nothing while
+/// requests flow.
+const POLL_INTERVAL: Duration = Duration::from_millis(250);
+
+/// How many post-shutdown poll ticks a handler waits for the rest of a
+/// half-received line before giving up on it (~5s grace).
+const SHUTDOWN_GRACE_POLLS: u32 = 20;
+
+/// Consecutive transient accept() failures tolerated before the loop
+/// treats the listener as wedged and exits.
+const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 64;
+
+/// Clamp range and no-data fallback for the shed response's
+/// `retry_after_ms` hint.
+const RETRY_AFTER_MIN_MS: f64 = 50.0;
+const RETRY_AFTER_MAX_MS: f64 = 10_000.0;
+const RETRY_AFTER_DEFAULT_MS: f64 = 200.0;
+
+/// Runtime knobs (the `tlrs serve` flags).
+#[derive(Clone, Debug)]
+pub struct RuntimeConfig {
+    /// Connection workers (`--workers`); each serves one connection at
+    /// a time for that connection's lifetime.
+    pub workers: usize,
+    /// Connections admitted beyond the running ones (`--queue`); at
+    /// `workers + queue` in flight, new connections are shed.
+    pub queue: usize,
+    /// Per-request wall budget (`--request-timeout`).
+    pub request_timeout: Duration,
+    /// Max bytes in one request line (`--max-request-bytes`).
+    pub max_request_bytes: usize,
+    /// Whether clients may stop the server via `{"op":"shutdown"}`
+    /// (`--allow-shutdown`). Off by default: anyone who can reach the
+    /// socket could otherwise take the service down.
+    pub allow_shutdown: bool,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        RuntimeConfig {
+            workers,
+            queue: 2 * workers,
+            request_timeout: DEFAULT_REQUEST_TIMEOUT,
+            max_request_bytes: DEFAULT_MAX_REQUEST_BYTES,
+            allow_shutdown: false,
+        }
+    }
+}
+
+impl RuntimeConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.workers >= 1, "--workers must be at least 1");
+        anyhow::ensure!(self.workers <= 4096, "--workers {} is absurd (max 4096)", self.workers);
+        anyhow::ensure!(
+            self.request_timeout > Duration::ZERO,
+            "--request-timeout must be positive"
+        );
+        anyhow::ensure!(
+            self.max_request_bytes >= 1024,
+            "--max-request-bytes must be at least 1024 (a bare request envelope \
+             is tens of bytes)"
+        );
+        Ok(())
+    }
+}
+
+/// Per-connection budgets, shared between the runtime path and the
+/// legacy `serve_connection` entry point.
+#[derive(Clone)]
+pub struct ConnBudget {
+    pub request_timeout: Duration,
+    pub max_request_bytes: usize,
+    /// Set when the runtime is draining; a standalone connection gets a
+    /// private always-false flag.
+    pub shutdown: Arc<AtomicBool>,
+}
+
+impl Default for ConnBudget {
+    fn default() -> Self {
+        ConnBudget {
+            request_timeout: DEFAULT_REQUEST_TIMEOUT,
+            max_request_bytes: DEFAULT_MAX_REQUEST_BYTES,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        }
+    }
+}
+
+/// Shutdown control surface, shared with connection handlers so the
+/// `{"op":"shutdown"}` verb can reach the accept loop.
+pub struct RuntimeCtl {
+    allow_shutdown: bool,
+    shutting_down: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl RuntimeCtl {
+    pub fn shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// The client-facing shutdown path (the `{"op":"shutdown"}` verb):
+    /// refused unless the runtime was started with `allow_shutdown`.
+    pub fn request_shutdown(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.allow_shutdown,
+            "shutdown is disabled on this server (start it with --allow-shutdown)"
+        );
+        self.begin_shutdown();
+        Ok(())
+    }
+
+    /// The owner-side shutdown path (tests, signal handlers): always
+    /// allowed. Sets the drain flag and pokes the accept loop awake with
+    /// a throwaway self-connection. Idempotent.
+    pub fn begin_shutdown(&self) {
+        if !self.shutting_down.swap(true, Ordering::SeqCst) {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        }
+    }
+}
+
+/// Map a bound "any" address (0.0.0.0 / [::]) to loopback so the
+/// shutdown poke can actually connect to it.
+fn connectable(mut a: SocketAddr) -> SocketAddr {
+    if a.ip().is_unspecified() {
+        a.set_ip(if a.is_ipv4() {
+            IpAddr::V4(Ipv4Addr::LOCALHOST)
+        } else {
+            IpAddr::V6(Ipv6Addr::LOCALHOST)
+        });
+    }
+    a
+}
+
+/// The bound, not-yet-running service. `bind` then `run` (blocking) or
+/// `spawn` (own thread, returns a [`RuntimeHandle`]).
+pub struct ServiceRuntime {
+    planner: Arc<Planner>,
+    cfg: RuntimeConfig,
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    pool: WorkerPool,
+    ctl: Arc<RuntimeCtl>,
+}
+
+impl ServiceRuntime {
+    pub fn bind(planner: Arc<Planner>, addr: &str, cfg: RuntimeConfig) -> Result<ServiceRuntime> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            cfg.workers == 1 || !planner.artifact_needs_serial_routing(),
+            "the PJRT artifact backend is single-client: call \
+             Planner::route_artifact_serial() before serving with --workers > 1 \
+             (tlrs serve does this automatically)"
+        );
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        let pool = WorkerPool::new("tlrs-conn", cfg.workers, cfg.queue);
+        let ctl = Arc::new(RuntimeCtl {
+            allow_shutdown: cfg.allow_shutdown,
+            shutting_down: Arc::new(AtomicBool::new(false)),
+            addr: connectable(local_addr),
+        });
+        Ok(ServiceRuntime { planner, cfg, listener, local_addr, pool, ctl })
+    }
+
+    /// The actually-bound address (resolves `--addr 127.0.0.1:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn config(&self) -> &RuntimeConfig {
+        &self.cfg
+    }
+
+    pub fn ctl(&self) -> Arc<RuntimeCtl> {
+        self.ctl.clone()
+    }
+
+    /// Accept until shutdown, then drain. The shed path and all request
+    /// handling happen on the worker pool; this thread only accepts.
+    pub fn run(mut self) -> Result<()> {
+        let accept_result = self.accept_loop();
+        let drain_result = self.drain();
+        accept_result.and(drain_result)
+    }
+
+    /// `run` on a dedicated thread; the handle shuts the runtime down.
+    pub fn spawn(self) -> RuntimeHandle {
+        let addr = self.local_addr;
+        let ctl = self.ctl.clone();
+        let join = std::thread::Builder::new()
+            .name("tlrs-accept".into())
+            .spawn(move || self.run())
+            .expect("spawn accept thread");
+        RuntimeHandle { addr, ctl, join }
+    }
+
+    fn accept_loop(&self) -> Result<()> {
+        let metrics = self.planner.metrics.clone();
+        let mut consecutive_errors = 0u32;
+        for stream in self.listener.incoming() {
+            if self.ctl.shutting_down() {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => {
+                    consecutive_errors = 0;
+                    s
+                }
+                Err(e) => {
+                    // a transient per-connection failure (peer reset
+                    // mid-handshake, EINTR, ...) must not kill the whole
+                    // server; a wedged listener must not spin forever
+                    metrics.inc("accept_errors", 1);
+                    if !accept_error_is_transient(&e) {
+                        return Err(e).context("accept");
+                    }
+                    consecutive_errors += 1;
+                    anyhow::ensure!(
+                        consecutive_errors < MAX_CONSECUTIVE_ACCEPT_ERRORS,
+                        "accept failing repeatedly ({consecutive_errors} consecutive \
+                         transient errors, last: {e})"
+                    );
+                    eprintln!("accept error (transient, continuing): {e}");
+                    continue;
+                }
+            };
+            // a shutdown poke lands here: drop the poke connection and stop
+            if self.ctl.shutting_down() {
+                break;
+            }
+            self.dispatch(stream);
+        }
+        Ok(())
+    }
+
+    /// Admission control: shed with a typed response when the pool is
+    /// full, otherwise hand the connection to a worker.
+    fn dispatch(&self, stream: TcpStream) {
+        let metrics = &self.planner.metrics;
+        if !self.pool.has_space() {
+            self.shed(stream);
+            metrics.gauge_set("service_queue_depth", self.pool.queued() as i64);
+            return;
+        }
+        let planner = self.planner.clone();
+        let budget = ConnBudget {
+            request_timeout: self.cfg.request_timeout,
+            max_request_bytes: self.cfg.max_request_bytes,
+            shutdown: self.ctl.shutting_down.clone(),
+        };
+        let ctl = self.ctl.clone();
+        let peer = stream.peer_addr().ok();
+        let job = Box::new(move || {
+            planner.metrics.gauge_add("service_connections_live", 1);
+            let res = handle_connection(&planner, stream, &budget, Some(&ctl));
+            planner.metrics.gauge_add("service_connections_live", -1);
+            if let Err(e) = res {
+                let who = peer.map(|p| format!(" ({p})")).unwrap_or_default();
+                eprintln!("connection error{who}: {e:#}");
+            }
+        });
+        match self.pool.try_submit(job) {
+            Ok(()) => metrics.inc("connections_accepted", 1),
+            // unreachable while this accept loop is the only submitter;
+            // shed silently rather than block the accept thread
+            Err(_rejected) => metrics.inc("connections_shed", 1),
+        }
+        metrics.gauge_set("service_queue_depth", self.pool.queued() as i64);
+    }
+
+    fn shed(&self, mut stream: TcpStream) {
+        let metrics = &self.planner.metrics;
+        metrics.inc("connections_shed", 1);
+        let line = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str("overloaded".into())),
+            ("retry_after_ms", Json::Num(self.retry_after_ms())),
+        ])
+        .to_string()
+            + "\n";
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+        let _ = stream.write_all(line.as_bytes());
+        // drop closes the connection
+    }
+
+    /// Back-off hint for shed clients: observed mean request latency ×
+    /// the backlog ahead of them, clamped to a sane range.
+    fn retry_after_ms(&self) -> f64 {
+        let mean_s = self
+            .planner
+            .metrics
+            .timer_stats("request")
+            .map(|t| t.mean())
+            .unwrap_or(0.0);
+        let backlog = (self.pool.active() + self.pool.queued()) as f64;
+        let est = if mean_s > 0.0 {
+            mean_s * 1e3 * (backlog + 1.0)
+        } else {
+            RETRY_AFTER_DEFAULT_MS
+        };
+        est.clamp(RETRY_AFTER_MIN_MS, RETRY_AFTER_MAX_MS).round()
+    }
+
+    /// Stop-the-world tail of `run`: drain the pool (every queued and
+    /// in-flight connection finishes the requests it already sent), then
+    /// close all sessions.
+    fn drain(&mut self) -> Result<()> {
+        // the flag is already set on the programmatic path; set it here
+        // too so a fatal accept error still drains handlers promptly
+        self.ctl.shutting_down.store(true, Ordering::SeqCst);
+        let metrics = self.planner.metrics.clone();
+        eprintln!(
+            "tlrs service: draining ({} active, {} queued connection(s))",
+            self.pool.active(),
+            self.pool.queued()
+        );
+        self.pool.shutdown();
+        let closed = self.planner.sessions.drain_all();
+        if closed > 0 {
+            metrics.inc("sessions_closed_on_shutdown", closed as u64);
+        }
+        metrics.gauge_set("service_queue_depth", 0);
+        eprintln!("tlrs service: drained; closed {closed} session(s)");
+        Ok(())
+    }
+}
+
+/// Handle to a runtime running on its own thread (tests, benches).
+pub struct RuntimeHandle {
+    pub addr: SocketAddr,
+    ctl: Arc<RuntimeCtl>,
+    join: std::thread::JoinHandle<Result<()>>,
+}
+
+impl RuntimeHandle {
+    pub fn ctl(&self) -> Arc<RuntimeCtl> {
+        self.ctl.clone()
+    }
+
+    /// Wait for the runtime to exit on its own (e.g. after a client
+    /// issued `{"op":"shutdown"}`).
+    pub fn join(self) -> Result<()> {
+        self.join.join().map_err(|_| anyhow!("runtime thread panicked"))?
+    }
+
+    pub fn shutdown_and_join(self) -> Result<()> {
+        self.ctl.begin_shutdown();
+        self.join()
+    }
+}
+
+fn accept_error_is_transient(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::NotConnected
+            | io::ErrorKind::Interrupted
+            | io::ErrorKind::WouldBlock
+            | io::ErrorKind::TimedOut
+    )
+}
+
+// ----- per-connection request loop -----------------------------------------
+
+/// What one capped line read produced.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum ReadOutcome {
+    /// `buf` holds one complete request line (newline stripped, CRLF
+    /// tolerated like the legacy `BufRead::lines` loop).
+    Line,
+    /// Clean end of stream with no pending bytes.
+    Eof,
+    /// The line exceeded the byte cap; the connection cannot resync.
+    TooLong,
+    /// The runtime is draining and no (complete) request is pending.
+    ShuttingDown,
+}
+
+/// Read one `\n`-terminated line into `buf` (which the caller clears),
+/// enforcing `max_bytes` (newline excluded; a line of exactly
+/// `max_bytes` passes) and polling `shutdown` on every read-timeout
+/// tick. Bytes already received are always served first — that is what
+/// lets graceful shutdown drain requests that were in a socket buffer
+/// when the flag flipped.
+fn read_request_line<R: BufRead>(
+    reader: &mut R,
+    buf: &mut Vec<u8>,
+    max_bytes: usize,
+    shutdown: &AtomicBool,
+) -> io::Result<ReadOutcome> {
+    let mut grace_polls = 0u32;
+    loop {
+        let mut outcome = None;
+        let used = {
+            let available = match reader.fill_buf() {
+                Ok(a) => a,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // poll tick (the 250ms socket read timeout)
+                    if shutdown.load(Ordering::SeqCst) {
+                        if buf.is_empty() {
+                            return Ok(ReadOutcome::ShuttingDown);
+                        }
+                        // half a line received: give its tail a bounded
+                        // grace window, then abandon it
+                        grace_polls += 1;
+                        if grace_polls >= SHUTDOWN_GRACE_POLLS {
+                            return Ok(ReadOutcome::ShuttingDown);
+                        }
+                    }
+                    continue;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            if available.is_empty() {
+                // EOF; an unterminated trailing line is still a request
+                // (matches the legacy `lines()` behavior)
+                return Ok(if buf.is_empty() { ReadOutcome::Eof } else { ReadOutcome::Line });
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    if buf.len() + pos > max_bytes {
+                        outcome = Some(ReadOutcome::TooLong);
+                        0
+                    } else {
+                        buf.extend_from_slice(&available[..pos]);
+                        outcome = Some(ReadOutcome::Line);
+                        pos + 1
+                    }
+                }
+                None => {
+                    if buf.len() + available.len() > max_bytes {
+                        outcome = Some(ReadOutcome::TooLong);
+                        0
+                    } else {
+                        buf.extend_from_slice(available);
+                        available.len()
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        match outcome {
+            Some(ReadOutcome::Line) => {
+                if buf.last() == Some(&b'\r') {
+                    buf.pop();
+                }
+                return Ok(ReadOutcome::Line);
+            }
+            Some(o) => return Ok(o),
+            None => grace_polls = 0, // data flowed: reset the grace window
+        }
+    }
+}
+
+fn too_large_response(max_bytes: usize) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("request too large".into())),
+        ("max_request_bytes", Json::Num(max_bytes as f64)),
+    ])
+    .to_string()
+}
+
+fn timeout_response(elapsed: Duration, budget: Duration) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str("timeout".into())),
+        ("budget_ms", Json::Num((budget.as_secs_f64() * 1e3).round())),
+        ("elapsed_ms", Json::Num((elapsed.as_secs_f64() * 1e3).round())),
+    ])
+    .to_string()
+}
+
+/// Serve one connection's pipelined request lines under `budget`.
+/// `ctl` is `Some` under the runtime (enables the shutdown verb and the
+/// drain flag); the legacy `serve_connection` entry passes `None`.
+pub(crate) fn handle_connection(
+    planner: &Planner,
+    stream: TcpStream,
+    budget: &ConnBudget,
+    ctl: Option<&RuntimeCtl>,
+) -> Result<()> {
+    // the read timeout is the shutdown poll tick, not a client deadline:
+    // read_request_line treats WouldBlock/TimedOut as "check the flag"
+    stream
+        .set_read_timeout(Some(POLL_INTERVAL))
+        .context("set_read_timeout")?;
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match read_request_line(
+            &mut reader,
+            &mut buf,
+            budget.max_request_bytes,
+            &budget.shutdown,
+        )? {
+            ReadOutcome::Eof | ReadOutcome::ShuttingDown => return Ok(()),
+            ReadOutcome::TooLong => {
+                planner.metrics.inc("requests_too_large", 1);
+                write_line(&mut writer, &too_large_response(budget.max_request_bytes))?;
+                return Ok(());
+            }
+            ReadOutcome::Line => {
+                // strict UTF-8, like the legacy lines() loop: a binary
+                // blob closes the connection instead of being guessed at
+                let line = std::str::from_utf8(&buf)
+                    .map_err(|e| anyhow!("request line is not valid UTF-8: {e}"))?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let t0 = Instant::now();
+                let (resp, verb) = service::handle_request_with(planner, line, ctl);
+                let elapsed = t0.elapsed();
+                let metrics = &planner.metrics;
+                metrics.inc("requests_handled", 1);
+                metrics.observe("request", elapsed.as_secs_f64());
+                metrics.observe(&format!("request.{verb}"), elapsed.as_secs_f64());
+                let resp = if elapsed > budget.request_timeout {
+                    metrics.inc("requests_timed_out", 1);
+                    timeout_response(elapsed, budget.request_timeout)
+                } else {
+                    resp
+                };
+                write_line(&mut writer, &resp)?;
+            }
+        }
+    }
+}
+
+fn write_line(writer: &mut TcpStream, line: &str) -> Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read(
+        input: &[u8],
+        max: usize,
+    ) -> (io::Result<ReadOutcome>, Vec<u8>, Cursor<Vec<u8>>) {
+        let mut cur = Cursor::new(input.to_vec());
+        let mut buf = Vec::new();
+        let flag = AtomicBool::new(false);
+        let r = read_request_line(&mut cur, &mut buf, max, &flag);
+        (r, buf, cur)
+    }
+
+    #[test]
+    fn reads_one_line_and_strips_crlf() {
+        let (r, buf, _) = read(b"{\"op\":\"stats\"}\nrest", 1024);
+        assert_eq!(r.unwrap(), ReadOutcome::Line);
+        assert_eq!(buf, b"{\"op\":\"stats\"}");
+
+        let (r, buf, _) = read(b"abc\r\n", 1024);
+        assert_eq!(r.unwrap(), ReadOutcome::Line);
+        assert_eq!(buf, b"abc");
+    }
+
+    #[test]
+    fn sequential_lines_then_eof() {
+        let mut cur = Cursor::new(b"a\nbb\nccc".to_vec());
+        let flag = AtomicBool::new(false);
+        let mut buf = Vec::new();
+        for expect in [&b"a"[..], b"bb", b"ccc"] {
+            buf.clear();
+            let r = read_request_line(&mut cur, &mut buf, 1024, &flag).unwrap();
+            assert_eq!(r, ReadOutcome::Line);
+            assert_eq!(buf, expect, "unterminated trailing line still served");
+        }
+        buf.clear();
+        let r = read_request_line(&mut cur, &mut buf, 1024, &flag).unwrap();
+        assert_eq!(r, ReadOutcome::Eof);
+    }
+
+    #[test]
+    fn empty_input_is_eof() {
+        let (r, buf, _) = read(b"", 1024);
+        assert_eq!(r.unwrap(), ReadOutcome::Eof);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn cap_is_enforced_and_exact_fit_passes() {
+        // 8 bytes + newline under a cap of 8: exactly at the cap passes
+        let (r, buf, _) = read(b"12345678\n", 8);
+        assert_eq!(r.unwrap(), ReadOutcome::Line);
+        assert_eq!(buf, b"12345678");
+        // 9 bytes over a cap of 8: rejected
+        let (r, _, _) = read(b"123456789\n", 8);
+        assert_eq!(r.unwrap(), ReadOutcome::TooLong);
+        // a newline-free flood past the cap is rejected without waiting
+        // for a newline that may never come
+        let (r, _, _) = read(&[b'x'; 100], 8);
+        assert_eq!(r.unwrap(), ReadOutcome::TooLong);
+    }
+
+    #[test]
+    fn transient_accept_errors_classified() {
+        for k in [
+            io::ErrorKind::ConnectionReset,
+            io::ErrorKind::ConnectionAborted,
+            io::ErrorKind::Interrupted,
+            io::ErrorKind::WouldBlock,
+            io::ErrorKind::TimedOut,
+        ] {
+            assert!(accept_error_is_transient(&io::Error::from(k)), "{k:?}");
+        }
+        for k in [
+            io::ErrorKind::NotFound,
+            io::ErrorKind::PermissionDenied,
+            io::ErrorKind::InvalidInput,
+            io::ErrorKind::OutOfMemory,
+        ] {
+            assert!(!accept_error_is_transient(&io::Error::from(k)), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        let ok = RuntimeConfig::default();
+        assert!(ok.validate().is_ok());
+        assert!(ok.workers >= 1 && ok.queue == 2 * ok.workers);
+        assert!(RuntimeConfig { workers: 0, ..ok.clone() }.validate().is_err());
+        assert!(RuntimeConfig { max_request_bytes: 10, ..ok.clone() }
+            .validate()
+            .is_err());
+        assert!(RuntimeConfig { request_timeout: Duration::ZERO, ..ok.clone() }
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn shed_hint_shapes() {
+        assert!(RETRY_AFTER_MIN_MS < RETRY_AFTER_DEFAULT_MS);
+        assert!(RETRY_AFTER_DEFAULT_MS < RETRY_AFTER_MAX_MS);
+        let t = too_large_response(4096);
+        assert!(t.contains("\"request too large\"") && t.contains("4096"), "{t}");
+        let t = timeout_response(Duration::from_millis(1500), Duration::from_secs(1));
+        assert!(t.contains("\"timeout\""), "{t}");
+        assert!(t.contains("\"budget_ms\":1000"), "{t}");
+        assert!(t.contains("\"elapsed_ms\":1500"), "{t}");
+    }
+}

@@ -55,17 +55,31 @@
 //!       what-if: prices the delta on a copy of the session without
 //!       committing it.
 //!   {"op": "close", "session": <id>}   -> final summary, frees the id.
-//!   {"op": "stats"}                    -> `Metrics::report()` counters
-//!       and latency histograms (p50/p95/max) plus open-session count —
-//!       the deployed server's introspection endpoint.
+//!   {"op": "stats"}                    -> `Metrics::report()` counters,
+//!       gauges (live/peak connections, queue depth) and latency
+//!       histograms (p50/p95/max, including per-verb `request.<verb>`
+//!       series) plus open-session count — the deployed server's
+//!       introspection endpoint.
+//!   {"op": "shutdown"}                 -> begin a graceful drain (only
+//!       under `tlrs serve --allow-shutdown`; refused otherwise).
 //!
 //! Sessions are shared across connections (per-session locking) and
 //! capped at `session::MAX_SESSIONS`.
 //!
+//! ## The runtime underneath
+//!
+//! `serve` runs on `coordinator::runtime`: an accept thread feeding a
+//! bounded worker pool, admission control that sheds excess connections
+//! with a typed `{"ok":false,"error":"overloaded","retry_after_ms":...}`
+//! line, per-request time/size budgets, and graceful shutdown that
+//! drains every in-flight request before closing sessions. At
+//! `--workers 1 --queue 0` the runtime degenerates to the seed's
+//! strictly sequential behavior (same `handle_request` path, byte-
+//! identical responses). See the `runtime` module doc for the contract.
+//!
 //! Python never serves requests; this loop is the deployable L3 artifact.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
@@ -76,39 +90,83 @@ use crate::model::{trim, Instance};
 use crate::util::json::{self, Json};
 
 use super::planner::Planner;
+use super::runtime;
 use super::session::{self, DeltaReport, PlanSession, SessionConfig};
 
 /// Handle one request line; always returns a JSON response line.
 pub fn handle_request(planner: &Planner, line: &str) -> String {
-    match handle_inner(planner, line) {
+    handle_request_with(planner, line, None).0
+}
+
+/// `handle_request` plus the runtime's needs: an optional control handle
+/// (enables the `shutdown` verb) and the request's verb label for
+/// per-verb latency metrics. This is the single dispatch path — the
+/// concurrent runtime and the legacy entry points produce byte-identical
+/// responses because they both run through here.
+pub fn handle_request_with(
+    planner: &Planner,
+    line: &str,
+    ctl: Option<&runtime::RuntimeCtl>,
+) -> (String, &'static str) {
+    let parsed = json::parse(line);
+    let verb = match &parsed {
+        Ok(req) => verb_of(req),
+        Err(_) => "invalid",
+    };
+    let result = match parsed {
+        Ok(req) => handle_parsed(planner, &req, ctl),
+        Err(e) => Err(anyhow::anyhow!("{e}")),
+    };
+    let resp = match result {
         Ok(v) => v.to_string(),
         Err(e) => Json::obj(vec![
             ("ok", Json::Bool(false)),
             ("error", Json::Str(format!("{e:#}"))),
         ])
         .to_string(),
+    };
+    (resp, verb)
+}
+
+/// Metrics label for a request (the `request.<verb>` histogram key).
+fn verb_of(req: &Json) -> &'static str {
+    match req.get("op") {
+        Json::Null => "solve",
+        op => match op.as_str() {
+            Some("open") => "open",
+            Some("delta") => "delta",
+            Some("query") => "query",
+            Some("close") => "close",
+            Some("stats") => "stats",
+            Some("shutdown") => "shutdown",
+            _ => "invalid",
+        },
     }
 }
 
-fn handle_inner(planner: &Planner, line: &str) -> Result<Json> {
-    let req = json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+fn handle_parsed(
+    planner: &Planner,
+    req: &Json,
+    ctl: Option<&runtime::RuntimeCtl>,
+) -> Result<Json> {
     match req.get("op") {
         // no 'op': the legacy one-shot solve, byte-identical to pre-
         // session behavior
-        Json::Null => handle_solve(planner, &req),
+        Json::Null => handle_solve(planner, req),
         op => {
             let op = op
                 .as_str()
-                .context("'op' must be a string (open|delta|query|close|stats)")?;
+                .context("'op' must be a string (open|delta|query|close|stats|shutdown)")?;
             match op {
-                "open" => op_open(planner, &req),
-                "delta" => op_delta(planner, &req),
-                "query" => op_query(planner, &req),
-                "close" => op_close(planner, &req),
+                "open" => op_open(planner, req),
+                "delta" => op_delta(planner, req),
+                "query" => op_query(planner, req),
+                "close" => op_close(planner, req),
                 "stats" => op_stats(planner),
+                "shutdown" => op_shutdown(planner, ctl),
                 other => anyhow::bail!(
                     "unknown op '{other}' (session verbs: open, delta, query, close, \
-                     stats; omit 'op' for a one-shot solve)"
+                     stats, shutdown; omit 'op' for a one-shot solve)"
                 ),
             }
         }
@@ -523,8 +581,9 @@ fn op_close(planner: &Planner, req: &Json) -> Result<Json> {
 }
 
 /// `{"op": "stats"}` — the deployed server's introspection endpoint:
-/// every counter, every latency histogram (p50/p95/max over the recent
-/// window), open-session count, and the human-readable report text.
+/// every counter, every gauge (current value + all-time peak), every
+/// latency histogram (p50/p95/max over the recent window), open-session
+/// count, and the human-readable report text.
 fn op_stats(planner: &Planner) -> Result<Json> {
     let counters = Json::Obj(
         planner
@@ -532,6 +591,22 @@ fn op_stats(planner: &Planner) -> Result<Json> {
             .counters_snapshot()
             .into_iter()
             .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect(),
+    );
+    let gauges = Json::Obj(
+        planner
+            .metrics
+            .gauges_snapshot()
+            .into_iter()
+            .map(|(k, g)| {
+                (
+                    k,
+                    Json::obj(vec![
+                        ("value", Json::Num(g.value as f64)),
+                        ("peak", Json::Num(g.peak as f64)),
+                    ]),
+                )
+            })
             .collect(),
     );
     let timers = Json::Obj(
@@ -558,47 +633,68 @@ fn op_stats(planner: &Planner) -> Result<Json> {
         ("ok", Json::Bool(true)),
         ("op", Json::Str("stats".into())),
         ("counters", counters),
+        ("gauges", gauges),
         ("timers", timers),
         ("sessions_open", Json::Num(planner.sessions.count() as f64)),
         ("report", Json::Str(planner.metrics.report())),
     ]))
 }
 
-/// Serve forever on `addr` (e.g. "127.0.0.1:7077"). Connections are
-/// handled sequentially on the accept thread: the PJRT client underneath
-/// the artifact backend is deliberately not shared across threads (the
-/// xla handle is not Sync), and on this single-solver deployment a solve
-/// saturates the machine anyway. Each connection may pipeline many
-/// request lines.
-pub fn serve(planner: Arc<Planner>, addr: &str) -> Result<()> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    eprintln!("tlrs planning service on {addr}");
-    for stream in listener.incoming() {
-        let stream = stream?;
-        if let Err(e) = serve_connection(&planner, stream) {
-            eprintln!("connection error: {e:#}");
-        }
-    }
-    Ok(())
+/// `{"op": "shutdown"}` — begin a graceful drain: stop accepting, let
+/// every in-flight and queued request finish, close all sessions, exit.
+/// Only meaningful over the runtime (`tlrs serve`), and only when it was
+/// started with `--allow-shutdown`.
+fn op_shutdown(planner: &Planner, ctl: Option<&runtime::RuntimeCtl>) -> Result<Json> {
+    let ctl =
+        ctl.context("shutdown is only available over the service runtime (tlrs serve)")?;
+    ctl.request_shutdown()?;
+    planner.metrics.inc("shutdown_requests", 1);
+    Ok(Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("op", Json::Str("shutdown".into())),
+        ("draining", Json::Bool(true)),
+        ("sessions_open", Json::Num(planner.sessions.count() as f64)),
+    ]))
 }
 
-/// Handle one client connection (used directly by tests).
+/// Serve forever on `addr` (e.g. "127.0.0.1:7077") with default runtime
+/// knobs. See [`serve_with`].
+pub fn serve(planner: Arc<Planner>, addr: &str) -> Result<()> {
+    serve_with(planner, addr, runtime::RuntimeConfig::default())
+}
+
+/// Serve on `addr` over the concurrent runtime (`coordinator::runtime`):
+/// an accept thread feeding `cfg.workers` connection workers with a
+/// bounded queue, shedding excess connections with a typed "overloaded"
+/// line, enforcing per-request time/size budgets, and draining
+/// gracefully on shutdown. Each connection may pipeline many request
+/// lines. Blocks until the runtime shuts down (fatal accept error, or
+/// `{"op":"shutdown"}` under `cfg.allow_shutdown`).
+pub fn serve_with(
+    planner: Arc<Planner>,
+    addr: &str,
+    cfg: runtime::RuntimeConfig,
+) -> Result<()> {
+    let rt = runtime::ServiceRuntime::bind(planner, addr, cfg)?;
+    let c = rt.config();
+    eprintln!(
+        "tlrs planning service on {} ({} workers, queue {}, request timeout {:.0}s, \
+         max request {} bytes{})",
+        rt.local_addr(),
+        c.workers,
+        c.queue,
+        c.request_timeout.as_secs_f64(),
+        c.max_request_bytes,
+        if c.allow_shutdown { ", shutdown enabled" } else { "" },
+    );
+    rt.run()
+}
+
+/// Handle one client connection on the calling thread (used directly by
+/// tests): the single-connection primitive the runtime's workers run,
+/// with default budgets and no shutdown/control surface.
 pub fn serve_connection(planner: &Planner, stream: TcpStream) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = handle_request(planner, &line);
-        writer.write_all(resp.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
-    }
-    let _ = peer;
-    Ok(())
+    runtime::handle_connection(planner, stream, &runtime::ConnBudget::default(), None)
 }
 
 #[cfg(test)]
@@ -917,6 +1013,39 @@ mod tests {
         assert!(v.get("error").as_str().unwrap().contains("no open session"));
         let v = json::parse(&handle_request(&p, r#"{"op":3}"#)).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn shutdown_op_requires_the_runtime() {
+        // without a runtime control handle (direct handle_request, as in
+        // tests and one-off embedding) the verb is a typed refusal, not
+        // a crash or an exit
+        let p = planner();
+        let v = json::parse(&handle_request(&p, r#"{"op":"shutdown"}"#)).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(
+            v.get("error").as_str().unwrap().contains("service runtime"),
+            "{v:?}"
+        );
+        assert_eq!(p.metrics.counter("shutdown_requests"), 0);
+    }
+
+    #[test]
+    fn stats_op_exposes_gauges_and_verb_labels() {
+        let p = planner();
+        p.metrics.gauge_add("service_connections_live", 1);
+        p.metrics.gauge_add("service_connections_live", -1);
+        let (resp, verb) = handle_request_with(&p, r#"{"op":"stats"}"#, None);
+        assert_eq!(verb, "stats");
+        let v = json::parse(&resp).unwrap();
+        let g = v.get("gauges").get("service_connections_live");
+        assert_eq!(g.get("value").as_usize(), Some(0), "{v:?}");
+        assert_eq!(g.get("peak").as_usize(), Some(1), "{v:?}");
+        // verb labels cover every request shape, including unparseable
+        assert_eq!(handle_request_with(&p, "not json", None).1, "invalid");
+        assert_eq!(handle_request_with(&p, r#"{"op":3}"#, None).1, "invalid");
+        assert_eq!(handle_request_with(&p, r#"{"op":"close"}"#, None).1, "close");
+        assert_eq!(handle_request_with(&p, r#"{"x":1}"#, None).1, "solve");
     }
 
     #[test]

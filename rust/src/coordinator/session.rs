@@ -737,6 +737,17 @@ impl SessionRegistry {
         before - inner.len()
     }
 
+    /// Close every open session (the graceful-shutdown path); returns
+    /// how many were open. Handles already obtained via `get` stay
+    /// usable until dropped — the runtime only calls this after its
+    /// connection workers have drained, so no op is in flight.
+    pub fn drain_all(&self) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.len();
+        inner.clear();
+        n
+    }
+
     pub fn count(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
@@ -936,6 +947,19 @@ mod tests {
         assert!(reg.get(ia).is_some());
         assert_eq!(reg.sweep_idle(std::time::Duration::ZERO), 2);
         assert_eq!(reg.count(), 0);
+    }
+
+    #[test]
+    fn registry_drain_all_closes_everything() {
+        let reg = SessionRegistry::new();
+        let (a, _) = PlanSession::open(small(5), SessionConfig::default()).unwrap();
+        let (b, _) = PlanSession::open(small(6), SessionConfig::default()).unwrap();
+        let ia = reg.insert(a).unwrap();
+        let _ib = reg.insert(b).unwrap();
+        assert_eq!(reg.drain_all(), 2);
+        assert_eq!(reg.count(), 0);
+        assert!(reg.get(ia).is_none());
+        assert_eq!(reg.drain_all(), 0, "draining an empty registry is a no-op");
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //!   stress    --workload <spec> [--surprise <spec>] plan + surprise-load sim
 //!   lb        --input inst.json [--backend auto]
 //!   figures   <id|all> [--quick] [--backend auto] [--out-dir bench_results]
-//!   serve     [--addr 127.0.0.1:7077] [--backend auto]
+//!   serve     [--addr 127.0.0.1:7077] [--backend auto] [--workers N]
+//!             [--queue K] [--request-timeout S] [--max-request-bytes B]
+//!             [--allow-shutdown]
 //!   info      print artifact manifest and PJRT platform
 //!   help
 
@@ -52,7 +54,9 @@ USAGE:
   tlrs figures <fig1|fig5|fig7a|fig7b|fig7c|fig8a|fig8b|fig9|fig10|fig11|tab1|rt|ntl|all>
                [--quick] [--backend ...] [--out-dir bench_results]
   tlrs ablations [--quick]
-  tlrs serve   [--addr 127.0.0.1:7077] [--backend ...]
+  tlrs serve   [--addr 127.0.0.1:7077] [--backend ...] [--workers N] [--queue K]
+               [--request-timeout <seconds>] [--max-request-bytes B]
+               [--allow-shutdown]
   tlrs info
 
 WORKLOAD SPECS (--workload, gen/solve/stress, and the service's 'workload' field):
@@ -131,9 +135,40 @@ PLAN SESSIONS (tlrs session, and the service's 'op' verbs):
     {\"op\": \"reprice\", \"node_types\": [{name,capacity,cost}...]}
   --check asserts per-delta invariants (cost >= certified LB) and exits
   non-zero on violation. The service speaks the same layer over TCP:
-  {\"op\": \"open\"|\"delta\"|\"query\"|\"close\"|\"stats\"} — 'query' prices a
-  delta without committing it, 'stats' dumps counters and latency
-  histograms. See coordinator::service docs.
+  {\"op\": \"open\"|\"delta\"|\"query\"|\"close\"|\"stats\"|\"shutdown\"} — 'query'
+  prices a delta without committing it, 'stats' dumps counters, gauges
+  and latency histograms. See coordinator::service docs.
+
+SERVICE RUNTIME (tlrs serve):
+  Line-delimited JSON over TCP on a concurrent accept/worker runtime:
+  an accept thread feeds --workers N connection workers (default: CPU
+  count) with a bounded queue of --queue K waiting connections (default
+  2xN). Each connection occupies one worker for its lifetime and may
+  pipeline many request lines. At --workers 1 --queue 0 the service is
+  strictly sequential and responses are byte-identical to handling the
+  requests directly.
+  Admission : past N active + K queued connections, new ones are shed
+              with one line {\"ok\":false,\"error\":\"overloaded\",
+              \"retry_after_ms\":...} and closed — back off and retry.
+  Budgets   : a request line longer than --max-request-bytes (default
+              64 MiB) answers {\"ok\":false,\"error\":\"request too large\",
+              ...} and closes the connection (no way to resync inside a
+              line). A request that runs past --request-timeout (default
+              120s) answers {\"ok\":false,\"error\":\"timeout\",...} instead
+              of its result; the side effect still happened (a late
+              session delta stays applied — query the session to
+              resync).
+  Shutdown  : {\"op\":\"shutdown\"} (only with --allow-shutdown) stops the
+              accept loop, drains every in-flight and queued request,
+              closes all sessions, and exits 0. Without the flag the verb
+              is refused and the server keeps running.
+  Stats     : {\"op\":\"stats\"} adds gauges (live/peak connections, queue
+              depth) and per-verb latency histograms (request.solve,
+              request.delta, ...) next to the existing counters/timers.
+  The PJRT artifact backend is single-client; serve moves it onto a
+  dedicated solver thread at startup so any --workers count is safe
+  (artifact-routed solves still serialize; native solves run
+  concurrently).
 ";
 
 fn main() {
@@ -630,9 +665,32 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    use tlrs::coordinator::runtime::RuntimeConfig;
+
     let addr = args.get_or("addr", "127.0.0.1:7077");
-    let planner = Arc::new(planner_from(args)?);
-    service::serve(planner, &addr)
+    let defaults = RuntimeConfig::default();
+    let workers = args.get_usize("workers", defaults.workers);
+    let timeout_s =
+        args.get_f64("request-timeout", defaults.request_timeout.as_secs_f64());
+    anyhow::ensure!(
+        timeout_s.is_finite() && timeout_s > 0.0,
+        "--request-timeout must be a positive number of seconds"
+    );
+    let cfg = RuntimeConfig {
+        workers,
+        queue: args.get_usize("queue", 2 * workers),
+        request_timeout: std::time::Duration::from_secs_f64(timeout_s),
+        max_request_bytes: args.get_usize("max-request-bytes", defaults.max_request_bytes),
+        allow_shutdown: args.has_flag("allow-shutdown"),
+    };
+    let mut planner = planner_from(args)?;
+    if planner.route_artifact_serial() {
+        eprintln!(
+            "note: artifact backend routed through a dedicated solver thread \
+             (PJRT client is single-threaded; artifact solves serialize)"
+        );
+    }
+    service::serve_with(Arc::new(planner), &addr, cfg)
 }
 
 fn cmd_info() -> Result<()> {

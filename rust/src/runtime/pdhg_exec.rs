@@ -57,6 +57,13 @@ impl ArtifactSolver {
         self.manifest.select(lp.n, lp.m, lp.t, lp.dims)
     }
 
+    /// The bucket table this solver routes through (the planner keeps a
+    /// copy for routing decisions when the solver itself is hidden
+    /// behind a dedicated serial thread).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
     fn power_norm(&self, bucket: &Bucket, padded: &PaddedLp) -> Result<f32> {
         let exe = self.engine.load(&self.manifest.path_of(&bucket.power))?;
         let out = exe.run(&[padded.act.clone(), padded.r.clone(), padded.rho.clone()])?;

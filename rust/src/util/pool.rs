@@ -1,7 +1,18 @@
-//! Scoped-thread worker pool: index-ordered fan-out over a job list.
-//! One subtle concurrency pattern (ticket counter + slot mutex +
-//! `thread::scope`), one home — the portfolio racer and the planner's
-//! sweep pool both run on it.
+//! Worker pools, two shapes for two lifetimes:
+//!
+//!   * [`run_indexed`] — scoped-thread fan-out over a *finite* job list
+//!     (ticket counter + slot mutex + `thread::scope`), returning results
+//!     in index order. The portfolio racer and the planner's sweep pool
+//!     run on it; scoped borrowing of the caller's data is its point.
+//!   * [`WorkerPool`] — a *long-lived* pool with a bounded job queue for
+//!     the service runtime: jobs are `'static` closures, submission is
+//!     non-blocking admission control ([`WorkerPool::try_submit`] hands
+//!     the job back instead of queueing unboundedly — the caller decides
+//!     how to shed), and [`WorkerPool::shutdown`] drains every queued job
+//!     before joining the workers (graceful shutdown).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f(i)` for every index in `0..n` on at most `workers` scoped
 /// threads and return the results in index order. Work is distributed
@@ -31,9 +42,145 @@ where
     results.into_iter().map(|r| r.expect("worker completed")).collect()
 }
 
+// ----- long-lived bounded pool ---------------------------------------------
+
+/// A queued unit of work.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    /// Jobs currently executing on a worker.
+    active: usize,
+    closed: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+}
+
+/// Long-lived worker pool with a bounded job queue.
+///
+/// Admission rule: a job is accepted iff `active + queued <
+/// workers + queue_cap` — so `workers = 1, queue_cap = 0` admits a job
+/// only when the pool is completely idle, degenerating to strictly
+/// sequential execution. [`WorkerPool::try_submit`] never blocks; it
+/// hands a rejected job back so the submitter can shed load explicitly.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+    queue_cap: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (min 1) named `<label>-<i>` threads sharing a
+    /// queue that admits up to `queue_cap` jobs beyond the running ones.
+    pub fn new(label: &str, workers: usize, queue_cap: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                active: 0,
+                closed: false,
+            }),
+            work_ready: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("{label}-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers, queue_cap, handles }
+    }
+
+    /// Admit `job` if the pool has space (see the admission rule above);
+    /// hand it back otherwise. Never blocks.
+    pub fn try_submit(&self, job: Job) -> Result<(), Job> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.closed || st.active + st.jobs.len() >= self.workers + self.queue_cap {
+                return Err(job);
+            }
+            st.jobs.push_back(job);
+        }
+        self.shared.work_ready.notify_one();
+        Ok(())
+    }
+
+    /// Whether a `try_submit` right now would be admitted.
+    pub fn has_space(&self) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        !st.closed && st.active + st.jobs.len() < self.workers + self.queue_cap
+    }
+
+    /// Jobs waiting in the queue (not yet picked up by a worker).
+    pub fn queued(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    /// Jobs currently executing.
+    pub fn active(&self) -> usize {
+        self.shared.state.lock().unwrap().active
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Close the queue and join every worker. Jobs already queued are
+    /// drained — run to completion — before the workers exit; only
+    /// *new* submissions are refused. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.shared.state.lock().unwrap().closed = true;
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    st.active += 1;
+                    break job;
+                }
+                if st.closed {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        // a panicking job must not kill the worker: the pool is the
+        // service's whole capacity, and each lost thread would silently
+        // shrink it until the server wedges
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        if res.is_err() {
+            eprintln!("worker: job panicked (worker kept alive)");
+        }
+        shared.state.lock().unwrap().active -= 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::mpsc;
 
     #[test]
     fn results_keep_index_order() {
@@ -46,5 +193,98 @@ mod tests {
         assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(run_indexed(1, 0, |i| i + 1), vec![1]);
         assert_eq!(run_indexed(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    /// Hold `n` jobs inside the pool (blocked on a channel) and return
+    /// the release sender once all of them have started.
+    fn hold_jobs(pool: &WorkerPool, n: usize) -> mpsc::Sender<()> {
+        let (release_tx, release_rx) = mpsc::channel::<()>();
+        let release_rx = Arc::new(Mutex::new(release_rx));
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        for _ in 0..n {
+            let release_rx = release_rx.clone();
+            let started_tx = started_tx.clone();
+            pool.try_submit(Box::new(move || {
+                started_tx.send(()).unwrap();
+                release_rx.lock().unwrap().recv().unwrap();
+            }))
+            .unwrap_or_else(|_| panic!("job rejected"));
+        }
+        for _ in 0..n {
+            started_rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        release_tx
+    }
+
+    #[test]
+    fn admission_bound_is_workers_plus_queue() {
+        let pool = WorkerPool::new("t", 2, 1);
+        // occupy both workers, then fill the single queue slot
+        let release = hold_jobs(&pool, 2);
+        assert_eq!(pool.active(), 2);
+        assert!(pool.has_space());
+        pool.try_submit(Box::new(|| {})).map_err(|_| ()).unwrap();
+        assert_eq!(pool.queued(), 1);
+        // 2 active + 1 queued = workers + queue_cap: full
+        assert!(!pool.has_space());
+        assert!(pool.try_submit(Box::new(|| {})).is_err());
+        // release the held jobs; the queued one drains and space returns
+        release.send(()).unwrap();
+        release.send(()).unwrap();
+        let t0 = std::time::Instant::now();
+        while (pool.active() > 0 || pool.queued() > 0)
+            && t0.elapsed() < std::time::Duration::from_secs(5)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(pool.queued(), 0);
+        assert!(pool.has_space());
+    }
+
+    #[test]
+    fn workers_1_queue_0_is_strictly_sequential() {
+        let pool = WorkerPool::new("t", 1, 0);
+        let release = hold_jobs(&pool, 1);
+        // anything in flight ⇒ no admission: the `--workers 1 --queue 0`
+        // byte-identity configuration never runs two requests at once
+        assert!(!pool.has_space());
+        assert!(pool.try_submit(Box::new(|| {})).is_err());
+        release.send(()).unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let mut pool = WorkerPool::new("t", 1, 8);
+        let done = Arc::new(AtomicUsize::new(0));
+        let release = hold_jobs(&pool, 1);
+        for _ in 0..5 {
+            let done = done.clone();
+            pool.try_submit(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            }))
+            .unwrap_or_else(|_| panic!("queue has space"));
+        }
+        assert_eq!(pool.queued(), 5);
+        release.send(()).unwrap();
+        pool.shutdown(); // joins only after the 5 queued jobs ran
+        assert_eq!(done.load(Ordering::SeqCst), 5);
+        // closed pool refuses new work
+        assert!(pool.try_submit(Box::new(|| {})).is_err());
+        assert!(!pool.has_space());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_the_worker() {
+        let mut pool = WorkerPool::new("t", 1, 2);
+        pool.try_submit(Box::new(|| panic!("boom")))
+            .unwrap_or_else(|_| panic!("queue has space"));
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = done.clone();
+        pool.try_submit(Box::new(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        }))
+        .unwrap_or_else(|_| panic!("queue has space"));
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 1, "worker survived the panic");
     }
 }

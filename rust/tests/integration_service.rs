@@ -206,8 +206,11 @@ fn two_concurrent_sessions_over_one_connection_pool() {
 
 #[test]
 fn concurrent_clients_are_serialized_but_served() {
-    // the service handles connections sequentially (PJRT client is not
-    // Sync) — two queued clients must both get answers
+    // serve_connection is the single-connection primitive underneath the
+    // runtime; a manual sequential accept loop over it must still answer
+    // a client that queued behind another (kernel accept backlog).
+    // Concurrent serving, shedding and shutdown are covered by
+    // tests/stress_service.rs on the real runtime.
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let server = std::thread::spawn(move || {

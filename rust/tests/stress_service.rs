@@ -1,0 +1,407 @@
+//! Integration: the concurrent service runtime under multi-client load —
+//! byte-identity at the minimal configuration, concurrent pipelined
+//! clients, the shed path, per-request budgets, and graceful shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::runtime::{RuntimeConfig, RuntimeHandle, ServiceRuntime};
+use tlrs::coordinator::service;
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::util::json::{self, Json};
+
+fn cfg(workers: usize, queue: usize) -> RuntimeConfig {
+    RuntimeConfig { workers, queue, ..RuntimeConfig::default() }
+}
+
+fn start(cfg: RuntimeConfig) -> (Arc<Planner>, RuntimeHandle) {
+    let planner = Arc::new(Planner::new(Backend::Native).unwrap());
+    let rt = ServiceRuntime::bind(planner.clone(), "127.0.0.1:0", cfg).unwrap();
+    (planner, rt.spawn())
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// One client connection with a line-oriented request/response API.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).unwrap();
+        self.stream.write_all(b"\n").unwrap();
+        self.stream.flush().unwrap();
+    }
+
+    fn recv_raw(&mut self) -> String {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert!(n > 0, "unexpected EOF from server");
+        line.trim_end_matches('\n').to_string()
+    }
+
+    fn recv(&mut self) -> Json {
+        let raw = self.recv_raw();
+        json::parse(&raw).unwrap()
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+
+    fn expect_eof(&mut self) {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).unwrap();
+        assert_eq!(n, 0, "expected EOF, got {line:?}");
+    }
+
+    fn finish_writes(&mut self) {
+        self.stream.shutdown(std::net::Shutdown::Write).unwrap();
+    }
+}
+
+fn solve_req(n: usize, seed: u64, algo: &str) -> String {
+    let inst = generate(&SynthParams { n, m: 3, ..Default::default() }, seed);
+    Json::obj(vec![
+        ("instance", files::instance_to_json(&inst)),
+        ("algorithm", Json::Str(algo.into())),
+    ])
+    .to_string()
+}
+
+/// Deep-copy with every "seconds" field zeroed: wall times are the one
+/// legitimately nondeterministic part of a response.
+fn normalize(v: &Json) -> Json {
+    match v {
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .map(|(k, val)| {
+                    let nv =
+                        if k == "seconds" { Json::Num(0.0) } else { normalize(val) };
+                    (k.clone(), nv)
+                })
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(normalize).collect()),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn minimal_runtime_responses_match_direct_handling() {
+    // acceptance gate: at --workers 1 --queue 0 a single connection's
+    // responses are byte-identical to calling handle_request directly
+    // (modulo measured wall times, zeroed on both sides before the
+    // solve comparison; error lines compare as exact bytes)
+    let direct = Planner::new(Backend::Native).unwrap();
+    let (_planner, handle) = start(cfg(1, 0));
+    let mut c = Client::connect(handle.addr);
+
+    let solve = solve_req(20, 5, "lp-map-f");
+    let errors = [
+        "this is not json".to_string(),
+        solve_req(10, 1, "magic"),
+        r#"{"op":"frobnicate"}"#.to_string(),
+        r#"{"op":3}"#.to_string(),
+    ];
+
+    // pipeline everything (plus blank lines, skipped by both paths)
+    c.send(&solve);
+    c.send("");
+    for e in &errors {
+        c.send(e);
+    }
+    let got_solve = c.recv_raw();
+    let direct_solve = service::handle_request(&direct, &solve);
+    assert_eq!(
+        normalize(&json::parse(&got_solve).unwrap()),
+        normalize(&json::parse(&direct_solve).unwrap()),
+        "solve responses diverge:\n  runtime: {got_solve}\n  direct:  {direct_solve}"
+    );
+    for e in &errors {
+        assert_eq!(c.recv_raw(), service::handle_request(&direct, e), "request {e}");
+    }
+    c.finish_writes();
+    c.expect_eof();
+    handle.shutdown_and_join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_all_served_within_bounds() {
+    // 3 pipelined one-shot clients + 2 session clients on a 4-worker
+    // runtime: everything completes, nothing is shed, concurrency stays
+    // within the worker bound, and stats surfaces the runtime telemetry
+    let (planner, handle) = start(cfg(4, 8));
+    let addr = handle.addr;
+
+    let solver_clients: Vec<_> = (0..3)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                // write all requests first, then read all: exercises
+                // pipelining through the worker, not just lock-step RPC
+                let algo = if i == 0 { "lp-map-f" } else { "penalty-map-f" };
+                let reqs: Vec<String> =
+                    (0..3).map(|j| solve_req(16 + 2 * i, 10 + j, algo)).collect();
+                for r in &reqs {
+                    c.send(r);
+                }
+                for r in &reqs {
+                    let v = c.recv();
+                    assert_eq!(v.get("ok").as_bool(), Some(true), "{r}: {v:?}");
+                    if i == 0 {
+                        assert!(
+                            v.get("normalized_cost").as_f64().unwrap() >= 1.0 - 1e-6,
+                            "{v:?}"
+                        );
+                    }
+                }
+                c.finish_writes();
+                c.expect_eof();
+            })
+        })
+        .collect();
+
+    let session_clients: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let v = c.request(&format!(
+                    r#"{{"op":"open","workload":"synth:n={},m=3,dims=2","seed":{}}}"#,
+                    14 + 4 * i,
+                    i + 1
+                ));
+                assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+                let sid = v.get("session").as_usize().unwrap();
+                let fresh = 900 + i;
+                let v = c.request(&format!(
+                    r#"{{"op":"delta","session":{sid},"deltas":{{"op":"admit","tasks":[{{"id":{fresh},"demand":[0.05,0.05],"start":0,"end":2}}]}}}}"#
+                ));
+                assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+                let v = c.request(&format!(
+                    r#"{{"op":"query","session":{sid},"delta":{{"op":"retire","ids":[{fresh}]}}}}"#
+                ));
+                assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+                let v = c.request(&format!(r#"{{"op":"close","session":{sid}}}"#));
+                assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+                c.finish_writes();
+                c.expect_eof();
+            })
+        })
+        .collect();
+
+    for h in solver_clients.into_iter().chain(session_clients) {
+        h.join().unwrap();
+    }
+
+    // one more sequential client inspects the runtime's own telemetry
+    let mut c = Client::connect(addr);
+    let v = c.request(r#"{"op":"stats"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true));
+    let timers = v.get("timers");
+    assert!(
+        timers.get("request.solve").get("count").as_usize().unwrap() >= 9,
+        "{v:?}"
+    );
+    assert!(timers.get("request.open").get("count").as_usize().unwrap() >= 2);
+    let live = v.get("gauges").get("service_connections_live");
+    assert!(live.get("peak").as_usize().unwrap() >= 1, "{v:?}");
+    drop(c);
+
+    let m = &planner.metrics;
+    wait_until("stats connection to finish", || {
+        m.gauge("service_connections_live") == 0
+    });
+    assert_eq!(planner.sessions.count(), 0, "both sessions closed by clients");
+    assert_eq!(m.counter("connections_accepted"), 6);
+    assert_eq!(m.counter("connections_shed"), 0);
+    // 9 solves + 2 x (open, delta, query, close) + 1 stats
+    assert_eq!(m.counter("requests_handled"), 18);
+    let peak = m.gauge_peak("service_connections_live");
+    assert!(
+        peak >= 2 && peak <= 4,
+        "expected concurrent-but-bounded service, peak {peak}"
+    );
+    handle.shutdown_and_join().unwrap();
+}
+
+#[test]
+fn overload_sheds_with_retry_after() {
+    // workers=1 queue=1: one active + one queued connection is the
+    // admission bound; the third connection gets the typed shed line
+    let (planner, handle) = start(cfg(1, 1));
+    let addr = handle.addr;
+    let m = planner.metrics.clone();
+
+    // A occupies the single worker for as long as it stays connected
+    let mut a = Client::connect(addr);
+    let v = a.request(&solve_req(14, 1, "penalty-map-f"));
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+
+    // B is admitted into the queue slot (its request bytes buffer up)
+    let mut b = Client::connect(addr);
+    b.send(&solve_req(14, 2, "penalty-map-f"));
+    wait_until("B to be admitted", || m.counter("connections_accepted") == 2);
+
+    // C exceeds workers + queue: shed with a typed line, then closed
+    let mut c = Client::connect(addr);
+    let v = c.recv();
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+    assert_eq!(v.get("error").as_str(), Some("overloaded"), "{v:?}");
+    assert!(v.get("retry_after_ms").as_f64().unwrap() >= 50.0, "{v:?}");
+    c.expect_eof();
+    assert_eq!(m.counter("connections_shed"), 1);
+
+    // A departs; the worker drains B's buffered request
+    drop(a);
+    let v = b.recv();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "queued client served: {v:?}");
+    drop(b);
+
+    assert_eq!(m.counter("connections_accepted"), 2);
+    handle.shutdown_and_join().unwrap();
+}
+
+#[test]
+fn graceful_shutdown_drains_pending_requests() {
+    // 2 workers: A (holding an open session) and B occupy them; C and D
+    // are queued with their request bytes already in socket buffers.
+    // Shutdown must answer C and D (data-first drain), close every
+    // connection, and close A's session.
+    let (planner, handle) = start(cfg(2, 8));
+    let addr = handle.addr;
+    let m = planner.metrics.clone();
+
+    let mut a = Client::connect(addr);
+    let v = a.request(r#"{"op":"open","workload":"synth:n=12,m=2,dims=2","seed":3}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+    assert_eq!(planner.sessions.count(), 1);
+
+    let mut b = Client::connect(addr);
+    let v = b.request(&solve_req(12, 4, "penalty-map-f"));
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+
+    // A and B hold both workers (responses read, connections open)
+    let mut c = Client::connect(addr);
+    c.send(&solve_req(12, 5, "penalty-map-f"));
+    c.finish_writes();
+    let mut d = Client::connect(addr);
+    d.send(&solve_req(12, 6, "penalty-map-f"));
+    d.finish_writes();
+    wait_until("C and D to be admitted", || m.counter("connections_accepted") == 4);
+    assert_eq!(m.counter("connections_shed"), 0);
+
+    handle.ctl().begin_shutdown();
+
+    // queued connections still get their answers during the drain
+    for (label, q) in [("C", &mut c), ("D", &mut d)] {
+        let v = q.recv();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "client {label}: {v:?}");
+        q.expect_eof();
+    }
+    // idle-open connections are closed by the drain
+    a.expect_eof();
+    b.expect_eof();
+    handle.join().unwrap();
+
+    assert_eq!(planner.sessions.count(), 0, "drain closes abandoned sessions");
+    assert_eq!(m.counter("sessions_closed_on_shutdown"), 1);
+    assert_eq!(m.counter("requests_handled"), 4);
+    assert_eq!(m.gauge("service_queue_depth"), 0);
+    assert_eq!(m.gauge("service_connections_live"), 0);
+}
+
+#[test]
+fn shutdown_verb_gated_and_draining() {
+    // without --allow-shutdown the verb is refused and the server keeps
+    // serving
+    let (_planner, handle) = start(cfg(2, 4));
+    let mut c = Client::connect(handle.addr);
+    let v = c.request(r#"{"op":"shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+    assert!(v.get("error").as_str().unwrap().contains("--allow-shutdown"), "{v:?}");
+    let v = c.request(&solve_req(12, 7, "penalty-map-f"));
+    assert_eq!(v.get("ok").as_bool(), Some(true), "server kept serving: {v:?}");
+    drop(c);
+    handle.shutdown_and_join().unwrap();
+
+    // with it, the verb answers, drains, and the runtime exits cleanly
+    let (planner, handle) =
+        start(RuntimeConfig { allow_shutdown: true, ..cfg(2, 4) });
+    let mut c = Client::connect(handle.addr);
+    let v = c.request(&solve_req(12, 8, "penalty-map-f"));
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+    let v = c.request(r#"{"op":"shutdown"}"#);
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+    assert_eq!(v.get("op").as_str(), Some("shutdown"));
+    assert_eq!(v.get("draining").as_bool(), Some(true));
+    c.expect_eof();
+    handle.join().unwrap();
+    assert_eq!(planner.metrics.counter("shutdown_requests"), 1);
+}
+
+#[test]
+fn oversize_request_gets_typed_error_and_close() {
+    let (planner, handle) =
+        start(RuntimeConfig { max_request_bytes: 2048, ..cfg(1, 2) });
+    let mut c = Client::connect(handle.addr);
+    let huge = format!(r#"{{"pad":"{}"}}"#, "x".repeat(5000));
+    let v = c.request(&huge);
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+    assert_eq!(v.get("error").as_str(), Some("request too large"), "{v:?}");
+    assert_eq!(v.get("max_request_bytes").as_usize(), Some(2048), "{v:?}");
+    // mid-line there is no resync point: the connection closes
+    c.expect_eof();
+    assert_eq!(planner.metrics.counter("requests_too_large"), 1);
+
+    // the server itself is unaffected: a fresh connection solves
+    let mut c2 = Client::connect(handle.addr);
+    let v = c2.request(&solve_req(12, 9, "penalty-map-f"));
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+    drop(c2);
+    handle.shutdown_and_join().unwrap();
+}
+
+#[test]
+fn request_timeout_answers_typed_error_but_keeps_connection() {
+    // an unmeetable 1ns budget: every request times out, but the budget
+    // bounds the answer, not the connection — the next request still
+    // gets served (and also answers with the typed error)
+    let (planner, handle) =
+        start(RuntimeConfig { request_timeout: Duration::from_nanos(1), ..cfg(1, 2) });
+    let mut c = Client::connect(handle.addr);
+    for seed in [11, 12] {
+        let v = c.request(&solve_req(12, seed, "penalty-map-f"));
+        assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+        assert_eq!(v.get("error").as_str(), Some("timeout"), "{v:?}");
+        assert!(v.get("elapsed_ms").as_f64().unwrap() >= 0.0);
+    }
+    drop(c);
+    assert_eq!(planner.metrics.counter("requests_timed_out"), 2);
+    assert_eq!(planner.metrics.counter("requests_handled"), 2);
+    handle.shutdown_and_join().unwrap();
+}

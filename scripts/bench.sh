@@ -2,15 +2,17 @@
 # Full benchmark suite: every bench target in release mode, refreshing
 # the rust/BENCH_*.json artifacts that track the perf trajectory PR
 # over PR (placement records the decomposed-vs-monolithic sweep up to
-# n = 10^6 plus the bucketed-index and SoA-store deltas).
+# n = 10^6 plus the bucketed-index and SoA-store deltas; service records
+# solve throughput/latency through the concurrent runtime at 1/4/16
+# clients and the concurrent-vs-sequential speedup).
 #
 #   TLRS_BENCH_QUICK=1  shrink budgets to the tier-1 smoke sizes
 #   BENCH_ONLY=<name>   run a single bench target (placement, session,
-#                       end_to_end, lp_solvers)
+#                       end_to_end, lp_solvers, service)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-BENCHES=(placement session end_to_end lp_solvers)
+BENCHES=(placement session end_to_end lp_solvers service)
 if [[ -n "${BENCH_ONLY:-}" ]]; then
     BENCHES=("$BENCH_ONLY")
 fi

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 gate: release build + full test suite + placement-bench smoke.
+# Tier-1 gate: release build + full test suite + service-runtime smoke
+# + placement-bench smoke.
 #
 # The bench smoke runs in quick mode (TLRS_BENCH_QUICK=1) under a time
 # budget and leaves rust/BENCH_placement.json behind so the placement
@@ -103,6 +104,41 @@ if "$TLRS" solve --input "$GEN_DIR/deco.json" --decompose window:0 \
     --backend native > /dev/null 2>&1; then
     echo "decompose smoke: k=0 was not rejected"; exit 1
 fi
+
+echo "== tier1: service stress tests =="
+# the multi-client runtime tests (concurrent clients, admission/shedding,
+# graceful shutdown, budgets) also run under `cargo test -q` above; the
+# explicit run keeps the concurrent-runtime coverage visible and
+# mandatory even if the suite above is ever filtered
+cargo test -q --test stress_service
+
+echo "== tier1: service runtime smoke =="
+# boot the real CLI server on an ephemeral port, drive solve -> stats ->
+# shutdown over /dev/tcp, and require a clean drain (exit 0)
+SRV_LOG="$GEN_DIR/serve.log"
+"$TLRS" serve --addr 127.0.0.1:0 --workers 2 --queue 4 --allow-shutdown \
+    --backend native > "$SRV_LOG" 2>&1 &
+SRV_PID=$!
+trap 'rm -rf "$GEN_DIR"; kill "${SRV_PID:-}" 2>/dev/null || true' EXIT
+for _ in $(seq 1 100); do
+    grep -q "tlrs planning service on" "$SRV_LOG" && break
+    sleep 0.1
+done
+grep -q "tlrs planning service on" "$SRV_LOG"
+PORT=$(sed -n 's/.*127\.0\.0\.1:\([0-9]*\).*/\1/p' "$SRV_LOG" | head -1)
+exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+printf '%s\n' '{"workload":"synth:n=20,m=3,dims=2","seed":4,"algorithm":"penalty-map-f"}' >&3
+IFS= read -r RESP <&3
+echo "$RESP" | grep -q '"ok":true'
+printf '%s\n' '{"op":"stats"}' >&3
+IFS= read -r RESP <&3
+echo "$RESP" | grep -q 'service_connections_live'
+printf '%s\n' '{"op":"shutdown"}' >&3
+IFS= read -r RESP <&3
+echo "$RESP" | grep -q '"draining":true'
+exec 3<&- 3>&-
+wait "$SRV_PID"
+echo "service runtime smoke: solve/stats/shutdown OK, server drained clean"
 
 echo "== tier1: session bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
