@@ -1,0 +1,843 @@
+"""Differential mirror of the Rust wire layer's two JSON parsers.
+
+The container this repo grows in has no rustc/cargo, so the Rust-side
+differential fuzz (`rust/tests/prop_wire.rs`) cannot run here. This file
+is the executable stand-in: faithful Python transliterations of
+
+  * the recursive DOM parser in `rust/src/util/json.rs` (``DomParser``),
+  * the non-recursive streaming pull parser in `rust/src/util/wire.rs`
+    (``PullParser``),
+
+fuzz-compared on random documents, byte-level mutations and a
+handwritten edge corpus. The equivalence contract being checked is the
+same one wire.rs documents: the pull parser accepts exactly the language
+the DOM parser accepts and reports the *same error message at the same
+byte position* on malformed input.
+
+Two deliberate scope limits:
+
+  * Values are compared as parsed Python objects (floats, strs, dicts,
+    lists). Serialized float *strings* are never compared — Rust's
+    ``Display`` and Python's ``repr`` legitimately differ (e.g. Rust
+    prints ``0.000000001`` where Python prints ``1e-09``) even though
+    both parse the same decimal to the same binary double.
+  * Both mirrors operate on bytes with byte positions, exactly like the
+    Rust originals; errors are ``(msg, pos)`` tuples.
+
+Only the standard library is used.
+"""
+
+import json
+import random
+
+import pytest
+
+
+class JsonErr(Exception):
+    """Mirror of ``JsonError { msg, pos }``."""
+
+    def __init__(self, msg, pos):
+        super().__init__(f"json error at byte {pos}: {msg}")
+        self.msg = msg
+        self.pos = pos
+
+    def tup(self):
+        return (self.msg, self.pos)
+
+
+WS = (0x20, 0x09, 0x0A, 0x0D)  # space, tab, \n, \r — both parsers' set
+HEX_DIGITS = set(b"0123456789abcdefABCDEF")
+
+
+def _from_str_radix_16(txt):
+    """Rust ``u32::from_str_radix(txt, 16)`` for the 4-char escape slice.
+
+    Python's ``int(s, 16)`` is looser (whitespace, underscores, ``0x``),
+    so mirror Rust's grammar exactly: optional leading ``+``, then one
+    or more hex digits, nothing else.
+    """
+    body = txt[1:] if txt.startswith("+") else txt
+    if not body or any(ord(c) not in HEX_DIGITS for c in body):
+        return None
+    return int(body, 16)
+
+
+def _unescape_u(b, i, err):
+    """Shared ``\\u`` handling: ``i`` sits on the ``u`` byte.
+
+    Returns ``(char, new_i)`` with ``new_i`` on the last hex digit (the
+    caller's trailing ``i += 1`` then steps past it), or raises the
+    Rust-identical "bad \\u escape" at ``i``.
+    """
+    if i + 4 >= len(b):
+        raise err("bad \\u escape")
+    try:
+        hx = b[i + 1 : i + 5].decode("utf-8")
+    except UnicodeDecodeError:
+        raise err("bad \\u escape") from None
+    code = _from_str_radix_16(hx)
+    if code is None:
+        raise err("bad \\u escape")
+    # char::from_u32(code).unwrap_or(U+FFFD): 4 hex digits cap the code
+    # at 0xFFFF, so the only invalid scalars are the surrogates
+    c = "�" if 0xD800 <= code <= 0xDFFF else chr(code)
+    return c, i + 4
+
+
+def _scan_number(b, i):
+    """Both parsers' identical number scanner; returns the end index."""
+    if i < len(b) and b[i] == ord("-"):
+        i += 1
+    while i < len(b) and ord("0") <= b[i] <= ord("9"):
+        i += 1
+    if i < len(b) and b[i] == ord("."):
+        i += 1
+        while i < len(b) and ord("0") <= b[i] <= ord("9"):
+            i += 1
+    if i < len(b) and b[i] in (ord("e"), ord("E")):
+        i += 1
+        if i < len(b) and b[i] in (ord("+"), ord("-")):
+            i += 1
+        while i < len(b) and ord("0") <= b[i] <= ord("9"):
+            i += 1
+    return i
+
+
+def _parse_f64(txt):
+    """Rust ``txt.parse::<f64>()`` on a scanner-shaped token.
+
+    Over the scanner's alphabet (``-0..9.eE+``) Rust's and Python's
+    accepted grammars coincide (``1.``, ``.5``, ``-.5`` parse; ``-``,
+    ``1e``, ``.`` do not), both are correctly rounded, and both overflow
+    to inf (``1e999``). Python extras like underscores or ``inf`` are
+    unreachable from the scanner.
+    """
+    try:
+        return float(txt)
+    except ValueError:
+        return None
+
+
+# --------------------------------------------------------------------------
+# DomParser — transliteration of rust/src/util/json.rs `Parser`
+# --------------------------------------------------------------------------
+
+
+class DomParser:
+    """Recursive-descent mirror; re-validates the UTF-8 *suffix of the
+    whole input* at every ordinary string character, like the Rust DOM
+    (which gets a ``&str`` in production but whose byte-level semantics
+    the pull parser must reproduce)."""
+
+    def __init__(self, b):
+        self.b = b
+        self.i = 0
+
+    def err(self, msg):
+        return JsonErr(msg, self.i)
+
+    def peek(self):
+        return self.b[self.i] if self.i < len(self.b) else None
+
+    def skip_ws(self):
+        while self.peek() in WS:
+            self.i += 1
+
+    def expect(self, c):
+        if self.peek() == c:
+            self.i += 1
+        else:
+            raise self.err(f"expected '{chr(c)}'")
+
+    def lit(self, s, v):
+        if self.b[self.i : self.i + len(s)] == s:
+            self.i += len(s)
+            return v
+        raise self.err("invalid literal")
+
+    def value(self):
+        c = self.peek()
+        if c == ord("{"):
+            return self.object()
+        if c == ord("["):
+            return self.array()
+        if c == ord('"'):
+            return self.string()
+        if c == ord("t"):
+            return self.lit(b"true", True)
+        if c == ord("f"):
+            return self.lit(b"false", False)
+        if c == ord("n"):
+            return self.lit(b"null", None)
+        if c is not None and (c == ord("-") or ord("0") <= c <= ord("9")):
+            return self.number()
+        raise self.err("unexpected character")
+
+    def object(self):
+        self.expect(ord("{"))
+        m = {}
+        self.skip_ws()
+        if self.peek() == ord("}"):
+            self.i += 1
+            return m
+        while True:
+            self.skip_ws()
+            k = self.string()
+            self.skip_ws()
+            self.expect(ord(":"))
+            self.skip_ws()
+            m[k] = self.value()  # dict insert: last key wins, like BTreeMap
+            self.skip_ws()
+            c = self.peek()
+            if c == ord(","):
+                self.i += 1
+            elif c == ord("}"):
+                self.i += 1
+                return m
+            else:
+                raise self.err("expected ',' or '}'")
+
+    def array(self):
+        self.expect(ord("["))
+        v = []
+        self.skip_ws()
+        if self.peek() == ord("]"):
+            self.i += 1
+            return v
+        while True:
+            self.skip_ws()
+            v.append(self.value())
+            self.skip_ws()
+            c = self.peek()
+            if c == ord(","):
+                self.i += 1
+            elif c == ord("]"):
+                self.i += 1
+                return v
+            else:
+                raise self.err("expected ',' or ']'")
+
+    ESCAPES = {
+        ord('"'): '"',
+        ord("\\"): "\\",
+        ord("/"): "/",
+        ord("n"): "\n",
+        ord("t"): "\t",
+        ord("r"): "\r",
+        ord("b"): "",
+        ord("f"): "",
+    }
+
+    def string(self):
+        self.expect(ord('"'))
+        out = []
+        while True:
+            c = self.peek()
+            if c is None:
+                raise self.err("unterminated string")
+            if c == ord('"'):
+                self.i += 1
+                return "".join(out)
+            if c == ord("\\"):
+                self.i += 1
+                e = self.peek()
+                if e in self.ESCAPES:
+                    out.append(self.ESCAPES[e])
+                elif e == ord("u"):
+                    ch, self.i = _unescape_u(self.b, self.i, self.err)
+                    out.append(ch)
+                else:
+                    raise self.err("bad escape")
+                self.i += 1
+            else:
+                # copy a full utf-8 scalar; the Rust DOM validates the
+                # remainder of the whole input here, every time
+                start = self.i
+                try:
+                    rest = self.b[start:].decode("utf-8")
+                except UnicodeDecodeError:
+                    raise self.err("invalid utf-8") from None
+                ch = rest[0]
+                out.append(ch)
+                self.i += len(ch.encode("utf-8"))
+
+    def number(self):
+        start = self.i
+        self.i = _scan_number(self.b, self.i)
+        x = _parse_f64(self.b[start : self.i].decode("utf-8"))
+        if x is None:
+            raise self.err("invalid number")
+        return x
+
+
+def dom_parse(b):
+    """Mirror of ``json::parse``: ws, value, ws, full consumption."""
+    p = DomParser(b)
+    p.skip_ws()
+    v = p.value()
+    p.skip_ws()
+    if p.i != len(p.b):
+        raise p.err("trailing characters")
+    return v
+
+
+# --------------------------------------------------------------------------
+# PullParser — transliteration of rust/src/util/wire.rs `JsonPull`
+# --------------------------------------------------------------------------
+
+# states
+START, OBJ_FIRST, OBJ_KEY, VALUE, ARR_FIRST, ARR_VALUE, AFTER_VALUE, DONE = range(8)
+OBJ, ARR = "obj", "arr"
+
+
+def _utf8_len(lead):
+    if lead <= 0x7F:
+        return 1
+    if 0xC0 <= lead <= 0xDF:
+        return 2
+    if 0xE0 <= lead <= 0xEF:
+        return 3
+    return 4
+
+
+class PullParser:
+    """Non-recursive state-machine mirror; validates the UTF-8 suffix
+    once, at the first ordinary string character it ever sees, then
+    steps strings by ``utf8_len`` without re-decoding."""
+
+    def __init__(self, b):
+        self.b = b
+        self.i = 0
+        self.stack = []
+        self.state = START
+        self.valid_from = None
+
+    def err(self, msg):
+        return JsonErr(msg, self.i)
+
+    def peek(self):
+        return self.b[self.i] if self.i < len(self.b) else None
+
+    def skip_ws(self):
+        while self.peek() in WS:
+            self.i += 1
+
+    def expect(self, c):
+        if self.peek() == c:
+            self.i += 1
+        else:
+            raise self.err(f"expected '{chr(c)}'")
+
+    def lit(self, s):
+        if self.b[self.i : self.i + len(s)] == s:
+            self.i += len(s)
+        else:
+            raise self.err("invalid literal")
+
+    def close(self, frame):
+        assert self.stack and self.stack[-1] == frame
+        self.stack.pop()
+        self.state = DONE if not self.stack else AFTER_VALUE
+        return ("obj_end",) if frame == OBJ else ("arr_end",)
+
+    def end_scalar(self):
+        self.state = DONE if not self.stack else AFTER_VALUE
+
+    def next(self):
+        while True:
+            st = self.state
+            if st == START:
+                self.skip_ws()
+                return self.value_event()
+            if st == VALUE:
+                return self.value_event()
+            if st == OBJ_FIRST:
+                self.skip_ws()
+                if self.peek() == ord("}"):
+                    self.i += 1
+                    return self.close(OBJ)
+                return self.key_event()
+            if st == OBJ_KEY:
+                self.skip_ws()
+                return self.key_event()
+            if st == ARR_FIRST:
+                self.skip_ws()
+                if self.peek() == ord("]"):
+                    self.i += 1
+                    return self.close(ARR)
+                return self.value_event()
+            if st == ARR_VALUE:
+                self.skip_ws()
+                return self.value_event()
+            if st == AFTER_VALUE:
+                self.skip_ws()
+                frame = self.stack[-1]
+                c = self.peek()
+                if frame == OBJ:
+                    if c == ord(","):
+                        self.i += 1
+                        self.state = OBJ_KEY
+                    elif c == ord("}"):
+                        self.i += 1
+                        return self.close(OBJ)
+                    else:
+                        raise self.err("expected ',' or '}'")
+                else:
+                    if c == ord(","):
+                        self.i += 1
+                        self.state = ARR_VALUE
+                    elif c == ord("]"):
+                        self.i += 1
+                        return self.close(ARR)
+                    else:
+                        raise self.err("expected ',' or ']'")
+            elif st == DONE:
+                self.skip_ws()
+                if self.i != len(self.b):
+                    raise self.err("trailing characters")
+                return None
+
+    def value_event(self):
+        c = self.peek()
+        if c == ord("{"):
+            self.i += 1
+            self.stack.append(OBJ)
+            self.state = OBJ_FIRST
+            return ("obj_start",)
+        if c == ord("["):
+            self.i += 1
+            self.stack.append(ARR)
+            self.state = ARR_FIRST
+            return ("arr_start",)
+        if c == ord('"'):
+            s = self.string()
+            self.end_scalar()
+            return ("str", s)
+        if c == ord("t"):
+            self.lit(b"true")
+            self.end_scalar()
+            return ("bool", True)
+        if c == ord("f"):
+            self.lit(b"false")
+            self.end_scalar()
+            return ("bool", False)
+        if c == ord("n"):
+            self.lit(b"null")
+            self.end_scalar()
+            return ("null",)
+        if c is not None and (c == ord("-") or ord("0") <= c <= ord("9")):
+            x = self.number()
+            self.end_scalar()
+            return ("num", x)
+        raise self.err("unexpected character")
+
+    def key_event(self):
+        k = self.string()
+        self.skip_ws()
+        self.expect(ord(":"))
+        self.skip_ws()
+        self.state = VALUE
+        return ("key", k)
+
+    def ensure_valid_utf8(self):
+        if self.valid_from is None:
+            try:
+                self.b[self.i :].decode("utf-8")
+            except UnicodeDecodeError:
+                raise self.err("invalid utf-8") from None
+            self.valid_from = self.i
+
+    def str_slice(self, a, b):
+        return self.b[a:b].decode("utf-8")
+
+    def string(self):
+        self.expect(ord('"'))
+        start = self.i
+        owned = None  # set on the first escape, like the Cow switch
+        while True:
+            c = self.peek()
+            if c is None:
+                raise self.err("unterminated string")
+            if c == ord('"'):
+                s = owned if owned is not None else self.str_slice(start, self.i)
+                self.i += 1
+                return s
+            if c == ord("\\"):
+                s = owned if owned is not None else self.str_slice(start, self.i)
+                self.i += 1
+                e = self.peek()
+                if e in DomParser.ESCAPES:
+                    s += DomParser.ESCAPES[e]
+                elif e == ord("u"):
+                    ch, self.i = _unescape_u(self.b, self.i, self.err)
+                    s += ch
+                else:
+                    raise self.err("bad escape")
+                self.i += 1
+                owned = s
+            else:
+                self.ensure_valid_utf8()
+                n = _utf8_len(c)
+                if owned is not None:
+                    owned += self.str_slice(self.i, self.i + n)
+                self.i += n
+
+    def number(self):
+        start = self.i
+        self.i = _scan_number(self.b, self.i)
+        x = _parse_f64(self.b[start : self.i].decode("utf-8"))
+        if x is None:
+            raise self.err("invalid number")
+        return x
+
+    def parse_value(self):
+        """Mirror of the Holder-stack ``parse_value`` — non-recursive."""
+        stack = []  # entries: ["arr", list] or ["obj", dict, pending_key]
+        while True:
+            ev = self.next()
+            if ev is None:
+                raise self.err("unexpected character")
+            tag = ev[0]
+            if tag == "obj_start":
+                stack.append([OBJ, {}, None])
+                continue
+            if tag == "arr_start":
+                stack.append([ARR, []])
+                continue
+            if tag == "key":
+                stack[-1][2] = ev[1]
+                continue
+            if tag == "obj_end":
+                completed = stack.pop()[1]
+            elif tag == "arr_end":
+                completed = stack.pop()[1]
+            elif tag == "null":
+                completed = None
+            else:  # str / num / bool
+                completed = ev[1]
+            if not stack:
+                return completed
+            top = stack[-1]
+            if top[0] == ARR:
+                top[1].append(completed)
+            else:
+                top[1][top[2]] = completed  # last key wins
+                top[2] = None
+
+
+def pull_parse(b):
+    """Mirror of ``wire::parse_dom``."""
+    p = PullParser(b)
+    v = p.parse_value()
+    assert p.next() is None, "top-level value already completed"
+    return v
+
+
+# --------------------------------------------------------------------------
+# differential harness
+# --------------------------------------------------------------------------
+
+
+def run(parse, b):
+    try:
+        return ("ok", parse(b))
+    except JsonErr as e:
+        return ("err", e.tup())
+
+
+def assert_parsers_agree(b):
+    dom = run(dom_parse, b)
+    pull = run(pull_parse, b)
+    assert dom == pull, f"dom={dom!r} pull={pull!r} on {b!r}"
+    return dom
+
+
+STRING_POOL = [
+    "",
+    "a",
+    "key",
+    "with space",
+    "quote\"inside",
+    "back\\slash",
+    "line\nbreak\ttab\rcr",
+    "ctl",
+    "",
+    "unicode éπ中",
+    "astral \U0001f980",
+    "� replacement",
+    "/slashes/",
+]
+
+NUMBER_TOKENS = [
+    "0",
+    "-0",
+    "7",
+    "-13",
+    "3.25",
+    "-0.5",
+    "1e3",
+    "2.5E-4",
+    "1e+15",
+    "-1.25e2",
+    "9007199254740993",  # 2^53 + 1: parses fine, as_usize territory
+    "1152921504606846976",  # 2^60
+    "1e999",  # overflows to inf in both Rust and Python
+    "1e-999",  # underflows to 0.0 in both
+    "0.1",
+    "123456.789",
+]
+
+
+def gen_string_text(rng):
+    """A JSON string *token*, mixing raw chars, named and \\u escapes."""
+    base = rng.choice(STRING_POOL)
+    out = ['"']
+    for ch in base:
+        mode = rng.randrange(4)
+        if ch in '"\\' or ord(ch) < 0x20:
+            # must escape; pick named vs \u where a named form exists
+            named = {'"': '\\"', "\\": "\\\\", "\n": "\\n", "\t": "\\t",
+                     "\r": "\\r", "": "\\b", "": "\\f"}
+            if ch in named and mode != 0:
+                out.append(named[ch])
+            else:
+                out.append(f"\\u{ord(ch):04x}")
+        elif mode == 0 and ord(ch) <= 0xFFFF:
+            out.append(f"\\u{ord(ch):04x}")
+        elif mode == 1 and ch == "/":
+            out.append("\\/")
+        else:
+            out.append(ch)
+    if rng.randrange(8) == 0:
+        out.append("\\ud800")  # lone surrogate -> U+FFFD in both parsers
+    out.append('"')
+    return "".join(out)
+
+
+def gen_ws(rng):
+    return "".join(rng.choice([" ", "\t", "\n", "\r"]) for _ in range(rng.randrange(3)))
+
+
+def gen_text(rng, depth):
+    """A syntactically valid JSON document as text, random whitespace."""
+    kind = rng.randrange(8) if depth > 0 else rng.randrange(6)
+    if kind == 0:
+        return "null"
+    if kind == 1:
+        return rng.choice(["true", "false"])
+    if kind in (2, 3):
+        return rng.choice(NUMBER_TOKENS)
+    if kind in (4, 5):
+        return gen_string_text(rng)
+    if kind == 6:
+        items = [gen_text(rng, depth - 1) for _ in range(rng.randrange(4))]
+        return "[" + ",".join(gen_ws(rng) + it + gen_ws(rng) for it in items) + "]"
+    pairs = [
+        gen_ws(rng) + gen_string_text(rng) + gen_ws(rng) + ":" + gen_ws(rng)
+        + gen_text(rng, depth - 1) + gen_ws(rng)
+        for _ in range(rng.randrange(4))
+    ]
+    return "{" + ",".join(pairs) + "}"
+
+
+SPLICE = b'{}[],:"\\0123456789eE.-+tfnu \t\n\rx'
+
+
+def mutate(rng, b):
+    """One byte-level mutation: truncate, overwrite, or insert."""
+    kind = rng.randrange(3)
+    if kind == 0 and b:
+        return b[: rng.randrange(len(b))]
+    if kind == 1 and b:
+        i = rng.randrange(len(b))
+        c = rng.randrange(256) if rng.randrange(4) == 0 else rng.choice(SPLICE)
+        return b[:i] + bytes([c]) + b[i + 1 :]
+    i = rng.randrange(len(b) + 1)
+    return b[:i] + bytes([rng.choice(SPLICE)]) + b[i:]
+
+
+def normalize_ints(v):
+    """json.loads yields ints where the mirrors yield floats."""
+    if isinstance(v, bool):
+        return v
+    if isinstance(v, int):
+        return float(v)
+    if isinstance(v, list):
+        return [normalize_ints(x) for x in v]
+    if isinstance(v, dict):
+        return {k: normalize_ints(x) for k, x in v.items()}
+    return v
+
+
+# --------------------------------------------------------------------------
+# tests
+# --------------------------------------------------------------------------
+
+
+class TestMirrorsAgree:
+    def test_random_documents(self):
+        """Valid generated docs parse identically through both mirrors."""
+        for seed in range(200):
+            rng = random.Random(seed)
+            text = gen_text(rng, 4)
+            b = text.encode("utf-8")
+            status, _ = assert_parsers_agree(b)
+            assert status == "ok", f"generated doc must parse: {text!r}"
+            # whitespace wrapping is invisible to both
+            wrapped = (gen_ws(rng) + text + gen_ws(rng)).encode("utf-8")
+            assert assert_parsers_agree(wrapped) == assert_parsers_agree(b)
+
+    def test_random_mutations(self):
+        """Byte-level damage produces identical (msg, pos) errors."""
+        for seed in range(200):
+            rng = random.Random(10_000 + seed)
+            b = gen_text(rng, 4).encode("utf-8")
+            for _ in range(12):
+                assert_parsers_agree(mutate(rng, b))
+
+    def test_compound_mutations(self):
+        """Repeated damage (mutations of mutations) still agrees."""
+        for seed in range(60):
+            rng = random.Random(20_000 + seed)
+            b = gen_text(rng, 3).encode("utf-8")
+            for _ in range(8):
+                b = mutate(rng, b)
+                assert_parsers_agree(b)
+
+    def test_handwritten_edge_corpus(self):
+        """The prop_wire.rs edge corpus, plus byte-position traps."""
+        cases = [
+            b"", b"{", b"[", b"]", b"}", b"[1,]", b'{"a":1,}', b"12 34",
+            b"'single'", b'{"a" 1}', b"[1 2]", b"tru", b"fals", b"nul",
+            b"truex", b'"unterminated', b'"bad \\q"', b'"bad \\u00',
+            b'"\\u12"', b'"\\u+fff"', b'"\\uzzzz"', b'"\\ud800"',
+            b'"\\udfff"', b'"\\ue000"', b'"\\u0041"', b'"a\\', b'"\\',
+            b"-", b"+1", b"1e", b"1e+", b"01", b"1.", b".5", b"-.",
+            b"-.5", b"1.e5", b"1e999", b"1e-999", b"{}", b"[]",
+            b'{"":null}', b"[[[]]]", b'{"a":{"b":[1,{"c":2}]}}',
+            b'{"dup":1,"dup":2}', b"  [ 1 , { \"k\" : [ true ] } ]  ",
+            b'["\\n\\t\\r\\b\\f\\/\\\\\\""]', b"[,]", b"{,}", b'{"a",}',
+            b'{"a":}', b"[1,,2]", b"nullnull", b"truefalse", b"1 ",
+            b" 1", b"\t\n", b'"\xc3\xa9"', b'"\xf0\x9f\xa6\x80"',
+        ]
+        for b in cases:
+            assert_parsers_agree(b)
+
+    def test_exact_error_tuples(self):
+        """A handful of hardcoded (msg, pos) expectations guard against
+        both mirrors drifting *together* away from the Rust semantics."""
+        expected = {
+            b"": ("unexpected character", 0),
+            b"{": ("expected '\"'", 1),
+            b"[1,]": ("unexpected character", 3),
+            b"12 34": ("trailing characters", 3),
+            b"tru": ("invalid literal", 0),
+            b'"bad \\q"': ("bad escape", 6),
+            b'"bad \\u00': ("bad \\u escape", 6),
+            b"-": ("invalid number", 1),
+            b"1e": ("invalid number", 2),
+            b'{"a":1,}': ("expected '\"'", 7),
+            b'{"a" 1}': ("expected ':'", 5),
+            b"[1 2]": ("expected ',' or ']'", 3),
+            b'"unterminated': ("unterminated string", 13),
+        }
+        for b, tup in expected.items():
+            for parse in (dom_parse, pull_parse):
+                with pytest.raises(JsonErr) as exc:
+                    parse(b)
+                assert exc.value.tup() == tup, f"{parse.__name__} on {b!r}"
+
+    def test_invalid_utf8_bytes(self):
+        """Raw invalid bytes: inside strings both fail with the DOM's
+        whole-suffix "invalid utf-8" at the first ordinary string char
+        (the key's first byte here, position 2); outside strings they
+        are a plain syntax error."""
+        bad = b'{"k":"a\xff"}'
+        for parse in (dom_parse, pull_parse):
+            with pytest.raises(JsonErr) as exc:
+                parse(bad)
+            assert exc.value.tup() == ("invalid utf-8", 2)
+        assert_parsers_agree(bad)
+        assert_parsers_agree(b"\xff\xfe")
+        assert_parsers_agree(b'["ok", "\xc3"]')  # truncated 2-byte char
+        assert_parsers_agree(b'"\xed\xa0\x80"')  # utf-8-encoded surrogate
+        # escape-only string before the invalid byte: validation fires at
+        # the first *ordinary* char, which sits after the escapes
+        assert_parsers_agree(b'"\\n\\tz\xff"')
+
+    def test_lone_surrogate_escape_becomes_replacement(self):
+        """char::from_u32 on a surrogate is None -> U+FFFD in both."""
+        for b in (b'"\\ud800"', b'"\\udbff"', b'"\\udfff"'):
+            assert dom_parse(b) == "�"
+            assert pull_parse(b) == "�"
+        # non-surrogate BMP chars come through exact
+        assert pull_parse(b'"\\u4e2d"') == "中"
+
+    def test_deep_nesting(self):
+        """Differential at the Rust test's depth; the pull mirror alone
+        far past any recursion limit (it carries an explicit stack)."""
+        doc = ("[" * 200 + "]" * 200).encode()
+        assert assert_parsers_agree(doc)[0] == "ok"
+        deep = ("[" * 3000 + "]" * 3000).encode()
+        v = pull_parse(deep)
+        for _ in range(2999):
+            assert isinstance(v, list) and len(v) == 1
+            v = v[0]
+        assert v == []
+
+    def test_against_stdlib_json(self):
+        """Sanity anchor: on documents produced by json.dumps (no exotic
+        escapes), the DOM mirror agrees with json.loads — the mirror is
+        a real JSON parser, not just self-consistent with its twin."""
+        for seed in range(60):
+            rng = random.Random(30_000 + seed)
+            value = normalize_ints(json.loads(
+                "[" + ",".join(
+                    rng.choice(['null', 'true', '-2.5', '7', '{"k":[1,2]}',
+                                '"text"', '[]', '{"a":{"b":null}}'])
+                    for _ in range(rng.randrange(1, 6))
+                ) + "]"
+            ))
+            text = json.dumps(value).encode("utf-8")
+            assert normalize_ints(dom_parse(text)) == value
+            assert normalize_ints(pull_parse(text)) == value
+
+    def test_number_token_values(self):
+        """Every generator number token parses to the same float through
+        both mirrors and Python's float (correct rounding on all sides),
+        including the 1e999 -> inf overflow both parsers share."""
+        for tok in NUMBER_TOKENS:
+            b = tok.encode()
+            assert dom_parse(b) == pull_parse(b) == float(tok), tok
+        assert dom_parse(b"1e999") == float("inf")
+        assert dom_parse(b"1e-999") == 0.0
+
+
+class TestMaxSafeInt:
+    """Mirror of json.rs `num_is_usize`: the as_usize gate shared by the
+    DOM accessor and the typed streaming decoders."""
+
+    MAX_SAFE_INT = 9007199254740992.0  # 2^53
+
+    @staticmethod
+    def num_is_usize(x):
+        import math
+        return x >= 0.0 and math.modf(x)[0] == 0.0 and x <= TestMaxSafeInt.MAX_SAFE_INT
+
+    def test_boundary(self):
+        ok = self.num_is_usize
+        assert ok(0.0) and ok(7.0) and ok(self.MAX_SAFE_INT)
+        assert not ok(-1.0)
+        assert not ok(2.5)
+        assert not ok(self.MAX_SAFE_INT * 2)
+        assert not ok(float("inf"))
+        assert not ok(float("nan"))  # nan.fract() is nan -> != 0
+
+    def test_parsed_large_ids_are_rejected(self):
+        """An id literal above 2^53 parses as a float fine but must fail
+        the usize gate (it silently snapped to a neighboring integer)."""
+        x = dom_parse(b"9007199254740993")  # 2^53 + 1 rounds to 2^53
+        assert x == self.MAX_SAFE_INT
+        assert self.num_is_usize(x)  # the *rounded* value is in range...
+        y = dom_parse(b"18014398509481984")  # 2^54
+        assert not self.num_is_usize(y)  # ...but past the cap it fails

@@ -1,0 +1,202 @@
+//! Wire-layer benchmarks: the streaming pull-parse/direct-write hot
+//! paths against the DOM they replace, on service-scale payloads — a
+//! large instance document and a delta stream — reporting bytes/sec and
+//! exact allocation counts (via a counting global allocator).
+//!
+//! Writes `BENCH_wire.json` with `streaming_vs_dom_speedup` (DOM
+//! instance-parse mean over streaming mean) plus per-path allocation
+//! counts, so the zero-alloc claim is a tracked number, not prose.
+//! `TLRS_BENCH_QUICK=1` shrinks the payloads for the tier-1 smoke.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use tlrs::io::delta::{delta_from_json, delta_from_slice};
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::util::bench::{bench, BenchResult};
+use tlrs::util::json::{self, Json};
+
+/// Counts every allocation the process makes; the deltas around a
+/// single measured call give exact per-operation numbers.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// (allocations, bytes) performed by one call of `f`.
+fn count_allocs<T>(f: impl FnOnce() -> T) -> (u64, u64, T) {
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let b0 = ALLOC_BYTES.load(Ordering::Relaxed);
+    let out = black_box(f());
+    (
+        ALLOCS.load(Ordering::Relaxed) - a0,
+        ALLOC_BYTES.load(Ordering::Relaxed) - b0,
+        out,
+    )
+}
+
+fn mib_per_s(bytes: usize, mean_ns: f64) -> f64 {
+    bytes as f64 / (mean_ns / 1e9) / (1024.0 * 1024.0)
+}
+
+fn main() {
+    println!("== wire benches ==");
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let (n_tasks, n_deltas) = if quick { (10_000, 1_000) } else { (100_000, 10_000) };
+    let budget = Duration::from_millis(if quick { 250 } else { 1500 });
+
+    // ---- payloads --------------------------------------------------------
+    let inst = generate(&SynthParams { n: n_tasks, m: 4, ..Default::default() }, 11);
+    let inst_text = files::instance_to_wire_string(&inst);
+    let delta_lines: Vec<String> = (0..n_deltas)
+        .map(|i| match i % 3 {
+            0 => format!(
+                "{{\"op\":\"admit\",\"tasks\":[{{\"id\":{},\"start\":2,\"end\":9,\
+                 \"demand\":[0.5,0.25,0.1,0.9]}}]}}",
+                1_000_000 + i
+            ),
+            1 => format!("{{\"op\":\"reshape\",\"id\":{},\"demand\":[0.7,0.2,0.4,0.1],\"start\":1,\"end\":7}}", i % n_tasks),
+            _ => format!("{{\"op\":\"retire\",\"ids\":[{}]}}", 1_000_000 + i - 2),
+        })
+        .collect();
+    let delta_bytes: usize = delta_lines.iter().map(|l| l.len()).sum();
+    println!(
+        "payloads: {n_tasks}-task instance ({} bytes), {n_deltas}-delta stream ({delta_bytes} bytes)",
+        inst_text.len()
+    );
+
+    let report = |r: &BenchResult, bytes: usize| {
+        println!("{}  ({:.1} MiB/s)", r.report_line(), mib_per_s(bytes, r.mean_ns));
+    };
+
+    // ---- instance parse: DOM vs streaming --------------------------------
+    let dom_parse = bench("wire/instance-parse/dom", budget, || {
+        files::instance_from_json(&json::parse(&inst_text).unwrap()).unwrap()
+    });
+    let stream_parse = bench("wire/instance-parse/streaming", budget, || {
+        files::instance_from_slice(inst_text.as_bytes()).unwrap()
+    });
+    let speedup = dom_parse.mean_ns / stream_parse.mean_ns.max(1e-9);
+    report(&dom_parse, inst_text.len());
+    report(&stream_parse, inst_text.len());
+
+    // ---- instance serialize: DOM vs direct-write -------------------------
+    let dom_write = bench("wire/instance-write/dom", budget, || {
+        files::instance_to_json(&inst).to_string()
+    });
+    let stream_write = bench("wire/instance-write/streaming", budget, || {
+        files::instance_to_wire_string(&inst)
+    });
+    report(&dom_write, inst_text.len());
+    report(&stream_write, inst_text.len());
+
+    // ---- delta stream: per-line decode -----------------------------------
+    let dom_delta = bench("wire/delta-stream/dom", budget, || {
+        delta_lines
+            .iter()
+            .map(|l| delta_from_json(&json::parse(l).unwrap()).unwrap())
+            .count()
+    });
+    let stream_delta = bench("wire/delta-stream/streaming", budget, || {
+        delta_lines
+            .iter()
+            .map(|l| delta_from_slice(l.as_bytes()).unwrap())
+            .count()
+    });
+    report(&dom_delta, delta_bytes);
+    report(&stream_delta, delta_bytes);
+
+    // ---- allocation counts (one call each) -------------------------------
+    let (dom_parse_allocs, _, _) =
+        count_allocs(|| files::instance_from_json(&json::parse(&inst_text).unwrap()).unwrap());
+    let (stream_parse_allocs, _, _) =
+        count_allocs(|| files::instance_from_slice(inst_text.as_bytes()).unwrap());
+    let (dom_write_allocs, _, _) = count_allocs(|| files::instance_to_json(&inst).to_string());
+    let (stream_write_allocs, _, _) = count_allocs(|| files::instance_to_wire_string(&inst));
+    let one_delta = &delta_lines[1]; // a reshape: flat task body, no arrays of objects
+    let (dom_delta_allocs, _, _) =
+        count_allocs(|| delta_from_json(&json::parse(one_delta).unwrap()).unwrap());
+    let (stream_delta_allocs, _, _) = count_allocs(|| delta_from_slice(one_delta.as_bytes()).unwrap());
+    println!(
+        "allocs: instance parse {dom_parse_allocs} dom vs {stream_parse_allocs} streaming; \
+         instance write {dom_write_allocs} dom vs {stream_write_allocs} streaming; \
+         one delta {dom_delta_allocs} dom vs {stream_delta_allocs} streaming"
+    );
+    println!("streaming vs dom speedup (instance parse): {speedup:.2}x");
+
+    // the whole point: the streaming paths allocate materially less than
+    // the DOM they replace (the DOM builds a node per JSON value)
+    assert!(
+        stream_parse_allocs < dom_parse_allocs / 2,
+        "streaming instance parse should allocate far less than the DOM \
+         ({stream_parse_allocs} vs {dom_parse_allocs})"
+    );
+    assert!(
+        stream_delta_allocs < dom_delta_allocs / 2,
+        "streaming delta decode should allocate far less than the DOM \
+         ({stream_delta_allocs} vs {dom_delta_allocs})"
+    );
+
+    let artifact = Json::obj(vec![
+        ("bench", Json::Str("wire".into())),
+        ("quick", Json::Bool(quick)),
+        ("n_tasks", Json::Num(n_tasks as f64)),
+        ("n_deltas", Json::Num(n_deltas as f64)),
+        ("instance_bytes", Json::Num(inst_text.len() as f64)),
+        ("delta_bytes", Json::Num(delta_bytes as f64)),
+        ("streaming_vs_dom_speedup", Json::Num(speedup)),
+        (
+            "instance_parse_mib_per_s",
+            Json::obj(vec![
+                ("dom", Json::Num(mib_per_s(inst_text.len(), dom_parse.mean_ns))),
+                ("streaming", Json::Num(mib_per_s(inst_text.len(), stream_parse.mean_ns))),
+            ]),
+        ),
+        (
+            "allocs",
+            Json::obj(vec![
+                ("instance_parse_dom", Json::Num(dom_parse_allocs as f64)),
+                ("instance_parse_streaming", Json::Num(stream_parse_allocs as f64)),
+                ("instance_write_dom", Json::Num(dom_write_allocs as f64)),
+                ("instance_write_streaming", Json::Num(stream_write_allocs as f64)),
+                ("delta_decode_dom", Json::Num(dom_delta_allocs as f64)),
+                ("delta_decode_streaming", Json::Num(stream_delta_allocs as f64)),
+            ]),
+        ),
+        (
+            "results",
+            Json::Arr(
+                [dom_parse, stream_parse, dom_write, stream_write, dom_delta, stream_delta]
+                    .iter()
+                    .map(|r| r.to_json())
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write("BENCH_wire.json", artifact.to_string() + "\n").unwrap();
+    println!("wrote BENCH_wire.json");
+}

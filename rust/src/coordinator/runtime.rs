@@ -529,6 +529,35 @@ fn read_request_line<R: BufRead>(
     }
 }
 
+/// What a received line needs before dispatch.
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum LineClass {
+    /// Only ASCII whitespace: skip it, like the legacy `trim()` check.
+    Blank,
+    /// Starts with a significant ASCII byte: hand the raw bytes to
+    /// `service::handle_request_bytes` (no UTF-8 copy up front).
+    Request,
+    /// First significant byte is non-ASCII — could be Unicode whitespace
+    /// (blank line) or invalid UTF-8 (connection error). Route through
+    /// the legacy `from_utf8` + `trim()` path to keep those semantics.
+    NeedsStr,
+}
+
+/// Classify with a pure byte scan. The ASCII whitespace set matches
+/// `char::is_whitespace` restricted to ASCII (space, \t, \n, \v, \f,
+/// \r); any non-ASCII lead byte defers to the `&str` path, which owns
+/// the Unicode-whitespace and invalid-UTF-8 cases.
+fn classify_line(buf: &[u8]) -> LineClass {
+    for &b in buf {
+        match b {
+            b' ' | b'\t' | b'\n' | 0x0b | 0x0c | b'\r' => {}
+            0x80.. => return LineClass::NeedsStr,
+            _ => return LineClass::Request,
+        }
+    }
+    LineClass::Blank
+}
+
 fn too_large_response(max_bytes: usize) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
@@ -580,15 +609,26 @@ pub(crate) fn handle_connection(
                 return Ok(());
             }
             ReadOutcome::Line => {
-                // strict UTF-8, like the legacy lines() loop: a binary
-                // blob closes the connection instead of being guessed at
-                let line = std::str::from_utf8(&buf)
-                    .map_err(|e| anyhow!("request line is not valid UTF-8: {e}"))?;
-                if line.trim().is_empty() {
-                    continue;
+                // requests that lead with a significant ASCII byte go to
+                // the service as raw bytes — the streaming wire layer
+                // pull-parses them with no UTF-8 validation copy. Only
+                // non-ASCII lead bytes take the legacy `&str` detour
+                // (Unicode blank lines, and the strict-UTF-8 contract:
+                // a binary blob closes the connection instead of being
+                // guessed at — handle_request_bytes errors identically).
+                match classify_line(&buf) {
+                    LineClass::Blank => continue,
+                    LineClass::NeedsStr => {
+                        let line = std::str::from_utf8(&buf)
+                            .map_err(|e| anyhow!("request line is not valid UTF-8: {e}"))?;
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                    }
+                    LineClass::Request => {}
                 }
                 let t0 = Instant::now();
-                let (resp, verb) = service::handle_request_with(planner, line, ctl);
+                let (resp, verb) = service::handle_request_bytes(planner, &buf, ctl)?;
                 let elapsed = t0.elapsed();
                 let metrics = &planner.metrics;
                 metrics.inc("requests_handled", 1);
@@ -711,6 +751,23 @@ mod tests {
         assert!(RuntimeConfig { request_timeout: Duration::ZERO, ..ok.clone() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn classify_line_matches_the_legacy_trim_semantics() {
+        // blank: only ASCII whitespace (the exact `char::is_whitespace`
+        // ASCII subset, incl. \v and \f)
+        assert_eq!(classify_line(b""), LineClass::Blank);
+        assert_eq!(classify_line(b" \t\r\x0b\x0c"), LineClass::Blank);
+        // a significant ASCII byte, even after leading whitespace
+        assert_eq!(classify_line(b"{\"op\":\"stats\"}"), LineClass::Request);
+        assert_eq!(classify_line(b"  {}"), LineClass::Request);
+        // 0x1c-0x1f are NOT whitespace: the legacy trim() kept them too
+        assert_eq!(classify_line(b"\x1c"), LineClass::Request);
+        // non-ASCII lead byte: Unicode whitespace (NBSP) or invalid
+        // UTF-8 both defer to the &str path
+        assert_eq!(classify_line("\u{a0}".as_bytes()), LineClass::NeedsStr);
+        assert_eq!(classify_line(b" \xff{}"), LineClass::NeedsStr);
     }
 
     #[test]

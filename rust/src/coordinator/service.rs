@@ -77,8 +77,21 @@
 //! strictly sequential behavior (same `handle_request` path, byte-
 //! identical responses). See the `runtime` module doc for the contract.
 //!
+//! ## The wire layer
+//!
+//! Requests enter through the two-tier wire layer (`util::wire`): the
+//! hot shapes — an inline `instance` object, `delta`/`deltas` payloads —
+//! pull-parse straight into typed structs with zero intermediate DOM,
+//! and every response is direct-written by `util::wire::JsonWriter`
+//! instead of being built as a `Json` tree and serialized. Anything the
+//! typed decoders do not recognize falls back to the DOM path
+//! (`util::json`), which owns all error reporting — so responses,
+//! including every error string, stay byte-identical to the DOM-only
+//! service (pinned by `tests/prop_wire.rs`).
+//!
 //! Python never serves requests; this loop is the deployable L3 artifact.
 
+use std::collections::BTreeMap;
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -86,8 +99,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::io::delta as iodelta;
 use crate::io::files;
-use crate::model::{trim, Instance};
+use crate::model::{trim, Delta, Instance};
 use crate::util::json::{self, Json};
+use crate::util::wire::{self, Event, JsonPull, JsonWriter};
 
 use super::planner::Planner;
 use super::runtime;
@@ -96,6 +110,123 @@ use super::session::{self, DeltaReport, PlanSession, SessionConfig};
 /// Handle one request line; always returns a JSON response line.
 pub fn handle_request(planner: &Planner, line: &str) -> String {
     handle_request_with(planner, line, None).0
+}
+
+/// A hot request field: absent (or JSON `null`, which every consumer
+/// treats the same), already pull-parsed into its typed form, or left
+/// for the DOM path (the value sits in `Envelope::rest` under its key).
+enum Hot<T> {
+    Absent,
+    Typed(T),
+    Dom,
+}
+
+/// The `deltas`/`delta` payload: one delta object or an array of them.
+enum DeltasField {
+    One(Delta),
+    Many(Vec<Delta>),
+}
+
+/// A parsed request envelope. The hot fields (`instance`, `deltas`,
+/// `delta`) are pull-parsed straight into typed structs when they have
+/// the expected shape; everything else — including hot fields with a
+/// surprising shape — lands in `rest` as a DOM value so the legacy
+/// code paths (and their exact error strings) still apply.
+struct Envelope {
+    instance: Hot<Instance>,
+    deltas: Hot<DeltasField>,
+    delta: Hot<DeltasField>,
+    rest: Json,
+}
+
+impl Envelope {
+    /// Streaming fast path: pull-parse the request bytes. Returns `None`
+    /// on *any* surprise — malformed JSON, a hot field that fails its
+    /// typed decoder, trailing bytes — and the caller re-runs the DOM
+    /// path, which owns the canonical error. Duplicate keys keep the
+    /// last occurrence, like the DOM's `BTreeMap` insert.
+    fn from_bytes(bytes: &[u8]) -> Option<Envelope> {
+        let mut p = JsonPull::new(bytes);
+        match p.next().ok()? {
+            Some(Event::ObjStart) => {}
+            _ => return None,
+        }
+        let mut instance = Hot::Absent;
+        let mut deltas = Hot::Absent;
+        let mut delta = Hot::Absent;
+        let mut rest: BTreeMap<String, Json> = BTreeMap::new();
+        loop {
+            match p.next().ok()? {
+                Some(Event::Key(k)) => match k.as_ref() {
+                    "instance" => {
+                        rest.remove("instance");
+                        if p.peek_value_byte() == Some(b'{') {
+                            instance = Hot::Typed(files::instance_value_from_pull(&mut p)?);
+                        } else {
+                            match p.parse_value().ok()? {
+                                Json::Null => instance = Hot::Absent,
+                                v => {
+                                    rest.insert("instance".to_string(), v);
+                                    instance = Hot::Dom;
+                                }
+                            }
+                        }
+                    }
+                    key @ ("deltas" | "delta") => {
+                        let key = key.to_string();
+                        rest.remove(&key);
+                        let slot = match p.peek_value_byte() {
+                            Some(b'{') => Hot::Typed(DeltasField::One(
+                                iodelta::delta_value_from_pull(&mut p)?,
+                            )),
+                            Some(b'[') => Hot::Typed(DeltasField::Many(
+                                iodelta::deltas_array_from_pull(&mut p)?,
+                            )),
+                            _ => match p.parse_value().ok()? {
+                                Json::Null => Hot::Absent,
+                                v => {
+                                    rest.insert(key.clone(), v);
+                                    Hot::Dom
+                                }
+                            },
+                        };
+                        if key == "deltas" {
+                            deltas = slot;
+                        } else {
+                            delta = slot;
+                        }
+                    }
+                    key => {
+                        let key = key.to_string();
+                        let v = p.parse_value().ok()?;
+                        rest.insert(key, v);
+                    }
+                },
+                Some(Event::ObjEnd) => break,
+                _ => return None,
+            }
+        }
+        matches!(p.next(), Ok(None)).then(|| Envelope {
+            instance,
+            deltas,
+            delta,
+            rest: Json::Obj(rest),
+        })
+    }
+
+    /// DOM fallback: every field stays in `rest`; hot slots just record
+    /// presence so the shared dispatch reads them through the DOM.
+    fn from_dom(req: Json) -> Envelope {
+        fn slot<T>(req: &Json, key: &str) -> Hot<T> {
+            if matches!(req.get(key), Json::Null) { Hot::Absent } else { Hot::Dom }
+        }
+        Envelope {
+            instance: slot(&req, "instance"),
+            deltas: slot(&req, "deltas"),
+            delta: slot(&req, "delta"),
+            rest: req,
+        }
+    }
 }
 
 /// `handle_request` plus the runtime's needs: an optional control handle
@@ -108,24 +239,53 @@ pub fn handle_request_with(
     line: &str,
     ctl: Option<&runtime::RuntimeCtl>,
 ) -> (String, &'static str) {
-    let parsed = json::parse(line);
-    let verb = match &parsed {
-        Ok(req) => verb_of(req),
-        Err(_) => "invalid",
-    };
-    let result = match parsed {
-        Ok(req) => handle_parsed(planner, &req, ctl),
-        Err(e) => Err(anyhow::anyhow!("{e}")),
-    };
-    let resp = match result {
-        Ok(v) => v.to_string(),
-        Err(e) => Json::obj(vec![
-            ("ok", Json::Bool(false)),
-            ("error", Json::Str(format!("{e:#}"))),
-        ])
-        .to_string(),
-    };
-    (resp, verb)
+    if let Some(mut env) = Envelope::from_bytes(line.as_bytes()) {
+        return finish_request(planner, &mut env, ctl);
+    }
+    match json::parse(line) {
+        Ok(req) => finish_request(planner, &mut Envelope::from_dom(req), ctl),
+        Err(e) => (error_response(&anyhow::anyhow!("{e}")), "invalid"),
+    }
+}
+
+/// Byte-slice entry point for the runtime: lets the pull parser consume
+/// the request buffer without an up-front UTF-8 validation pass. Only
+/// when the streaming decode bails do we validate UTF-8 for the DOM
+/// fallback; invalid bytes propagate as a connection error, exactly like
+/// the legacy `from_utf8`-first loop.
+pub fn handle_request_bytes(
+    planner: &Planner,
+    bytes: &[u8],
+    ctl: Option<&runtime::RuntimeCtl>,
+) -> Result<(String, &'static str)> {
+    if let Some(mut env) = Envelope::from_bytes(bytes) {
+        return Ok(finish_request(planner, &mut env, ctl));
+    }
+    let line = std::str::from_utf8(bytes)
+        .map_err(|e| anyhow!("request line is not valid UTF-8: {e}"))?;
+    Ok(match json::parse(line) {
+        Ok(req) => finish_request(planner, &mut Envelope::from_dom(req), ctl),
+        Err(e) => (error_response(&anyhow::anyhow!("{e}")), "invalid"),
+    })
+}
+
+fn finish_request(
+    planner: &Planner,
+    env: &mut Envelope,
+    ctl: Option<&runtime::RuntimeCtl>,
+) -> (String, &'static str) {
+    let verb = verb_of(&env.rest);
+    match handle_parsed(planner, env, ctl) {
+        Ok(resp) => (resp, verb),
+        Err(e) => (error_response(&e), verb),
+    }
+}
+
+fn error_response(e: &anyhow::Error) -> String {
+    let mut w = wire::obj_writer(64);
+    w.key("error").str(&format!("{e:#}"));
+    w.key("ok").bool(false);
+    w.finish_obj()
 }
 
 /// Metrics label for a request (the `request.<verb>` histogram key).
@@ -146,60 +306,68 @@ fn verb_of(req: &Json) -> &'static str {
 
 fn handle_parsed(
     planner: &Planner,
-    req: &Json,
+    env: &mut Envelope,
     ctl: Option<&runtime::RuntimeCtl>,
-) -> Result<Json> {
-    match req.get("op") {
+) -> Result<String> {
+    let op = match env.rest.get("op") {
         // no 'op': the legacy one-shot solve, byte-identical to pre-
         // session behavior
-        Json::Null => handle_solve(planner, req),
-        op => {
-            let op = op
-                .as_str()
-                .context("'op' must be a string (open|delta|query|close|stats|shutdown)")?;
-            match op {
-                "open" => op_open(planner, req),
-                "delta" => op_delta(planner, req),
-                "query" => op_query(planner, req),
-                "close" => op_close(planner, req),
-                "stats" => op_stats(planner),
-                "shutdown" => op_shutdown(planner, ctl),
-                other => anyhow::bail!(
-                    "unknown op '{other}' (session verbs: open, delta, query, close, \
-                     stats, shutdown; omit 'op' for a one-shot solve)"
-                ),
-            }
-        }
+        Json::Null => None,
+        op => Some(
+            op.as_str()
+                .context("'op' must be a string (open|delta|query|close|stats|shutdown)")?
+                .to_string(),
+        ),
+    };
+    match op.as_deref() {
+        None => handle_solve(planner, env),
+        Some("open") => op_open(planner, env),
+        Some("delta") => op_delta(planner, env),
+        Some("query") => op_query(planner, env),
+        Some("close") => op_close(planner, &env.rest),
+        Some("stats") => op_stats(planner),
+        Some("shutdown") => op_shutdown(planner, ctl),
+        Some(other) => anyhow::bail!(
+            "unknown op '{other}' (session verbs: open, delta, query, close, \
+             stats, shutdown; omit 'op' for a one-shot solve)"
+        ),
     }
 }
 
 /// Resolve the instance a request operates on: inline `instance` or a
 /// server-side generated `workload` (+ `seed`). Returns the workload
-/// label/seed for response echo when generated.
-fn resolve_instance(req: &Json) -> Result<(Instance, Option<(String, u64)>)> {
-    let mut workload_used: Option<(String, u64)> = None;
-    let inst = match (req.get("instance"), req.get("workload")) {
-        (Json::Null, Json::Null) => {
+/// label/seed for response echo when generated. The typed slot hands
+/// over a ready `Instance` with no DOM in between; the Dom slot re-reads
+/// `rest` so malformed inline instances keep their legacy error text.
+fn resolve_instance(env: &mut Envelope) -> Result<(Instance, Option<(String, u64)>)> {
+    let has_workload = !matches!(env.rest.get("workload"), Json::Null);
+    let slot = std::mem::replace(&mut env.instance, Hot::Absent);
+    match (slot, has_workload) {
+        (Hot::Absent, false) => {
             anyhow::bail!("request needs an 'instance' or a 'workload'")
         }
-        (inst_json, Json::Null) => {
-            files::instance_from_json(inst_json).context("instance")?
+        (Hot::Typed(_) | Hot::Dom, true) => {
+            anyhow::bail!("request has both 'instance' and 'workload'")
         }
-        (Json::Null, w) => {
-            let source = crate::io::workload::source_from_json(w)?;
-            let seed = match req.get("seed") {
+        (Hot::Typed(inst), false) => Ok((inst, None)),
+        (Hot::Dom, false) => Ok((
+            files::instance_from_json(env.rest.get("instance")).context("instance")?,
+            None,
+        )),
+        (Hot::Absent, true) => {
+            let source = crate::io::workload::source_from_json(env.rest.get("workload"))?;
+            let seed = match env.rest.get("seed") {
                 Json::Null => 1,
                 s => s
                     .as_usize()
                     .context("'seed' must be a non-negative integer")?
                     as u64,
             };
-            workload_used = Some((source.label(), seed));
-            source.generate(seed)?
+            let label = source.label();
+            let inst = source.generate(seed)?;
+            Ok((inst, Some((label, seed))))
         }
-        _ => anyhow::bail!("request has both 'instance' and 'workload'"),
-    };
-    Ok((inst, workload_used))
+    }
 }
 
 /// The legacy one-shot solve path (requests without an 'op' field).
@@ -207,9 +375,10 @@ fn resolve_instance(req: &Json) -> Result<(Instance, Option<(String, u64)>)> {
 /// decomposed pipeline; the response keeps every legacy field and adds
 /// the decomposition telemetry (additive only — requests without
 /// `decompose` answer with the exact legacy key set).
-fn handle_solve(planner: &Planner, req: &Json) -> Result<Json> {
-    let (inst, workload_used) = resolve_instance(req)?;
+fn handle_solve(planner: &Planner, env: &mut Envelope) -> Result<String> {
+    let (inst, workload_used) = resolve_instance(env)?;
     anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
+    let req = &env.rest;
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
     let t0 = std::time::Instant::now();
 
@@ -239,73 +408,64 @@ fn handle_solve(planner: &Planner, req: &Json) -> Result<Json> {
     let seconds = t0.elapsed().as_secs_f64();
     planner.metrics.inc("service_requests", 1);
 
-    let mut fields = vec![
-        ("ok", Json::Bool(true)),
-        ("algorithm", Json::Str(algo.to_string())),
-        ("cost", Json::Num(cost)),
-        ("n_nodes", Json::Num(solution.nodes.len() as f64)),
-        (
-            "nodes_per_type",
-            Json::Arr(
-                solution
-                    .nodes_per_type(&tr)
-                    .iter()
-                    .map(|&c| Json::Num(c as f64))
-                    .collect(),
-            ),
-        ),
-        ("backend", Json::Str(backend.to_string())),
-        ("seconds", Json::Num(seconds)),
-        (
-            // array, not an object: a spec may repeat a stage (ls:2+ls:8)
-            "stages",
-            Json::Arr(
-                rep.stages
-                    .iter()
-                    .map(|s| {
-                        Json::obj(vec![
-                            ("stage", Json::Str(s.stage.clone())),
-                            ("seconds", Json::Num(s.seconds)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ];
-    if let Some((label, seed)) = workload_used {
-        fields.push(("workload", Json::Str(label)));
-        fields.push(("seed", Json::Num(seed as f64)));
-    }
+    // direct-write, keys in the DOM's sorted order
+    let racing = race.reports.len() + race.skipped.len() > 1;
+    let mut w = wire::obj_writer(512);
+    w.key("algorithm").str(algo);
+    w.key("backend").str(backend);
+    w.key("cost").num(cost);
     if let Some(lb) = lb {
-        fields.push(("lower_bound", Json::Num(lb)));
-        fields.push(("normalized_cost", Json::Num(cost / lb.max(1e-12))));
+        w.key("lower_bound").num(lb);
     }
-    if race.reports.len() + race.skipped.len() > 1 {
-        fields.push(("winner", Json::Str(rep.label.clone())));
-        fields.push((
-            "raced",
-            Json::Arr(
-                race.reports
-                    .iter()
-                    .map(|r| {
-                        Json::obj(vec![
-                            ("algorithm", Json::Str(r.label.clone())),
-                            ("cost", Json::Num(r.cost)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ));
-        if !race.skipped.is_empty() {
-            // members the certified LP bound proved could not beat a
-            // finished incumbent (early abort) — no cost to report
-            fields.push((
-                "skipped",
-                Json::Arr(race.skipped.iter().map(|l| Json::Str(l.clone())).collect()),
-            ));
+    w.key("n_nodes").num(solution.nodes.len() as f64);
+    w.key("nodes_per_type").begin_arr();
+    for &c in solution.nodes_per_type(&tr).iter() {
+        w.num(c as f64);
+    }
+    w.end_arr();
+    if let Some(lb) = lb {
+        w.key("normalized_cost").num(cost / lb.max(1e-12));
+    }
+    w.key("ok").bool(true);
+    if racing {
+        w.key("raced").begin_arr();
+        for r in &race.reports {
+            w.begin_obj();
+            w.key("algorithm").str(&r.label);
+            w.key("cost").num(r.cost);
+            w.end_obj();
         }
+        w.end_arr();
     }
-    Ok(Json::obj(fields))
+    w.key("seconds").num(seconds);
+    if let Some((_, seed)) = &workload_used {
+        w.key("seed").num(*seed as f64);
+    }
+    if racing && !race.skipped.is_empty() {
+        // members the certified LP bound proved could not beat a
+        // finished incumbent (early abort) — no cost to report
+        w.key("skipped").begin_arr();
+        for l in &race.skipped {
+            w.str(l);
+        }
+        w.end_arr();
+    }
+    // array, not an object: a spec may repeat a stage (ls:2+ls:8)
+    w.key("stages").begin_arr();
+    for s in &rep.stages {
+        w.begin_obj();
+        w.key("seconds").num(s.seconds);
+        w.key("stage").str(&s.stage);
+        w.end_obj();
+    }
+    w.end_arr();
+    if racing {
+        w.key("winner").str(&rep.label);
+    }
+    if let Some((label, _)) = &workload_used {
+        w.key("workload").str(label);
+    }
+    Ok(w.finish_obj())
 }
 
 /// Decomposed variant of the one-shot solve. Response fields are the
@@ -319,7 +479,7 @@ fn handle_solve_decomposed(
     spec: &crate::algo::decompose::DecomposeSpec,
     workload_used: Option<(String, u64)>,
     t0: std::time::Instant,
-) -> Result<Json> {
+) -> Result<String> {
     let portfolio = crate::algo::pipeline::parse_portfolio(algo)?;
     let (rep, backend) = planner.solve_decomposed(inst, &portfolio, spec)?;
     let tr = trim(inst).instance;
@@ -330,86 +490,69 @@ fn handle_solve_decomposed(
     planner.metrics.inc("service_requests", 1);
 
     let lb = rep.certified_lb;
-    let mut fields = vec![
-        ("ok", Json::Bool(true)),
-        ("algorithm", Json::Str(algo.to_string())),
-        ("decompose", Json::Str(spec.to_string())),
-        ("cost", Json::Num(rep.cost)),
-        ("n_nodes", Json::Num(rep.solution.nodes.len() as f64)),
-        (
-            "nodes_per_type",
-            Json::Arr(
-                rep.solution
-                    .nodes_per_type(&tr)
-                    .iter()
-                    .map(|&c| Json::Num(c as f64))
-                    .collect(),
-            ),
-        ),
-        ("backend", Json::Str(backend.to_string())),
-        ("seconds", Json::Num(seconds)),
-        (
-            "stages",
-            Json::Arr(
-                rep.stages
-                    .iter()
-                    .map(|s| {
-                        Json::obj(vec![
-                            ("stage", Json::Str(s.stage.clone())),
-                            ("seconds", Json::Num(s.seconds)),
-                        ])
-                    })
-                    .collect(),
-            ),
-        ),
-    ];
-    if let Some((label, seed)) = workload_used {
-        fields.push(("workload", Json::Str(label)));
-        fields.push(("seed", Json::Num(seed as f64)));
+    let mut w = wire::obj_writer(1024);
+    w.key("algorithm").str(algo);
+    w.key("backend").str(backend);
+    w.key("congestion_bound").num(rep.congestion_lb);
+    w.key("cost").num(rep.cost);
+    w.key("decompose").str(&spec.to_string());
+    w.key("lower_bound").num(lb);
+    w.key("n_nodes").num(rep.solution.nodes.len() as f64);
+    w.key("nodes_per_type").begin_arr();
+    for &c in rep.solution.nodes_per_type(&tr).iter() {
+        w.num(c as f64);
     }
-    fields.push(("lower_bound", Json::Num(lb)));
-    fields.push(("normalized_cost", Json::Num(rep.cost / lb.max(1e-12))));
-    fields.push(("sum_partition_bounds", Json::Num(rep.sum_lb)));
-    fields.push(("congestion_bound", Json::Num(rep.congestion_lb)));
-    fields.push(("pre_stitch_cost", Json::Num(rep.pre_stitch_cost)));
-    fields.push((
-        "partitions",
-        Json::Arr(
-            rep.partitions
-                .iter()
-                .map(|p| {
-                    Json::obj(vec![
-                        ("partition", Json::Str(p.label.clone())),
-                        ("n_tasks", Json::Num(p.n_tasks as f64)),
-                        ("cost", Json::Num(p.cost)),
-                        ("lower_bound", Json::Num(p.lb)),
-                        ("seconds", Json::Num(p.seconds)),
-                        ("winner", Json::Str(p.winner.clone())),
-                    ])
-                })
-                .collect(),
-        ),
-    ));
-    Ok(Json::obj(fields))
+    w.end_arr();
+    w.key("normalized_cost").num(rep.cost / lb.max(1e-12));
+    w.key("ok").bool(true);
+    w.key("partitions").begin_arr();
+    for p in &rep.partitions {
+        w.begin_obj();
+        w.key("cost").num(p.cost);
+        w.key("lower_bound").num(p.lb);
+        w.key("n_tasks").num(p.n_tasks as f64);
+        w.key("partition").str(&p.label);
+        w.key("seconds").num(p.seconds);
+        w.key("winner").str(&p.winner);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.key("pre_stitch_cost").num(rep.pre_stitch_cost);
+    w.key("seconds").num(seconds);
+    if let Some((_, seed)) = &workload_used {
+        w.key("seed").num(*seed as f64);
+    }
+    w.key("stages").begin_arr();
+    for s in &rep.stages {
+        w.begin_obj();
+        w.key("seconds").num(s.seconds);
+        w.key("stage").str(&s.stage);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.key("sum_partition_bounds").num(rep.sum_lb);
+    if let Some((label, _)) = &workload_used {
+        w.key("workload").str(label);
+    }
+    Ok(w.finish_obj())
 }
 
 // ----- session verbs ------------------------------------------------------
 
-/// One per-delta report as a wire object.
-fn delta_report_json(rep: &DeltaReport) -> Json {
-    let mut fields = vec![
-        ("op", Json::Str(rep.op.to_string())),
-        ("decision", Json::Str(rep.decision.as_str().to_string())),
-        ("cost", Json::Num(rep.cost)),
-        ("lower_bound", Json::Num(rep.lower_bound)),
-        ("n_tasks", Json::Num(rep.n_tasks as f64)),
-        ("n_nodes", Json::Num(rep.n_nodes as f64)),
-        ("seconds", Json::Num(rep.seconds)),
-    ];
+/// One per-delta report, direct-written (keys in the DOM's sorted order).
+fn write_delta_report(w: &mut JsonWriter<Vec<u8>>, rep: &DeltaReport) {
+    w.begin_obj();
+    w.key("cost").num(rep.cost);
+    w.key("decision").str(rep.decision.as_str());
+    w.key("lower_bound").num(rep.lower_bound);
+    w.key("n_nodes").num(rep.n_nodes as f64);
+    w.key("n_tasks").num(rep.n_tasks as f64);
+    w.key("op").str(rep.op);
     if let Some(reason) = &rep.reason {
-        fields.push(("reason", Json::Str(reason.clone())));
+        w.key("reason").str(reason);
     }
-    Json::obj(fields)
+    w.key("seconds").num(rep.seconds);
+    w.end_obj();
 }
 
 /// Session config from request knobs (`algorithm`, `escalate`, `fit`).
@@ -457,7 +600,7 @@ fn session_handle(
     Ok((id, handle))
 }
 
-fn op_open(planner: &Planner, req: &Json) -> Result<Json> {
+fn op_open(planner: &Planner, env: &mut Envelope) -> Result<String> {
     // cheap early reject: the cap must bound *compute*, not just memory —
     // the authoritative re-check happens inside sessions.insert()
     anyhow::ensure!(
@@ -465,42 +608,56 @@ fn op_open(planner: &Planner, req: &Json) -> Result<Json> {
         "too many open sessions ({}); close one first",
         session::MAX_SESSIONS
     );
-    let (inst, workload_used) = resolve_instance(req)?;
-    let cfg = session_config(req)?;
+    let (inst, workload_used) = resolve_instance(env)?;
+    let cfg = session_config(&env.rest)?;
     let algo = cfg.algo.clone();
     let (session, open) =
         planner.metrics.time("session_open", || PlanSession::open(inst, cfg))?;
     let id = planner.sessions.insert(session)?;
     planner.metrics.inc("sessions_opened", 1);
-    let mut fields = vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("open".into())),
-        ("session", Json::Num(id as f64)),
-        ("algorithm", Json::Str(algo)),
-        ("winner", Json::Str(open.label.clone())),
-        ("cost", Json::Num(open.cost)),
-        ("lower_bound", Json::Num(open.lower_bound)),
-        ("n_tasks", Json::Num(open.n_tasks as f64)),
-        ("n_nodes", Json::Num(open.n_nodes as f64)),
-        ("seconds", Json::Num(open.seconds)),
-    ];
-    if let Some((label, seed)) = workload_used {
-        fields.push(("workload", Json::Str(label)));
-        fields.push(("seed", Json::Num(seed as f64)));
+    let mut w = wire::obj_writer(256);
+    w.key("algorithm").str(&algo);
+    w.key("cost").num(open.cost);
+    w.key("lower_bound").num(open.lower_bound);
+    w.key("n_nodes").num(open.n_nodes as f64);
+    w.key("n_tasks").num(open.n_tasks as f64);
+    w.key("ok").bool(true);
+    w.key("op").str("open");
+    w.key("seconds").num(open.seconds);
+    if let Some((_, seed)) = &workload_used {
+        w.key("seed").num(*seed as f64);
     }
-    Ok(Json::obj(fields))
+    w.key("session").num(id as f64);
+    w.key("winner").str(&open.label);
+    if let Some((label, _)) = &workload_used {
+        w.key("workload").str(label);
+    }
+    Ok(w.finish_obj())
 }
 
-fn op_delta(planner: &Planner, req: &Json) -> Result<Json> {
-    let (id, handle) = session_handle(planner, req)?;
-    let deltas_json = match (req.get("deltas"), req.get("delta")) {
-        (Json::Null, Json::Null) => anyhow::bail!(
-            "the delta op needs a 'deltas' field (one delta object or an array)"
-        ),
-        (Json::Null, d) => d,
-        (d, _) => d,
+/// Pull the delta payload out of the envelope for the `delta` op:
+/// `deltas` wins over `delta` when both are present (the DOM rule), the
+/// typed slot hands over ready structs, and the Dom slot re-runs the
+/// grammar parser on `rest` so every legacy error string survives.
+fn take_deltas_field(env: &mut Envelope) -> Result<Vec<Delta>> {
+    let (slot, key) = if !matches!(env.deltas, Hot::Absent) {
+        (std::mem::replace(&mut env.deltas, Hot::Absent), "deltas")
+    } else if !matches!(env.delta, Hot::Absent) {
+        (std::mem::replace(&mut env.delta, Hot::Absent), "delta")
+    } else {
+        anyhow::bail!("the delta op needs a 'deltas' field (one delta object or an array)")
     };
-    let deltas = iodelta::deltas_from_json(deltas_json)?;
+    match slot {
+        Hot::Typed(DeltasField::One(d)) => Ok(vec![d]),
+        Hot::Typed(DeltasField::Many(ds)) => Ok(ds),
+        Hot::Dom => iodelta::deltas_from_json(env.rest.get(key)),
+        Hot::Absent => unreachable!("absent slots are rejected above"),
+    }
+}
+
+fn op_delta(planner: &Planner, env: &mut Envelope) -> Result<String> {
+    let (id, handle) = session_handle(planner, &env.rest)?;
+    let deltas = take_deltas_field(env)?;
     let mut session = handle.lock().unwrap();
     let mut applied = Vec::with_capacity(deltas.len());
     for (i, d) in deltas.iter().enumerate() {
@@ -522,43 +679,56 @@ fn op_delta(planner: &Planner, req: &Json) -> Result<Json> {
         );
         planner.metrics.observe("session_delta", rep.seconds);
         planner.metrics.observe(&format!("session_delta.{}", rep.op), rep.seconds);
-        applied.push(delta_report_json(&rep));
+        applied.push(rep);
     }
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("delta".into())),
-        ("session", Json::Num(id as f64)),
-        ("applied", Json::Arr(applied)),
-        ("cost", Json::Num(session.cost())),
-        ("lower_bound", Json::Num(session.lower_bound())),
-        ("n_tasks", Json::Num(session.n_tasks() as f64)),
-        ("n_nodes", Json::Num(session.n_nodes() as f64)),
-    ]))
+    let mut w = wire::obj_writer(128 + 128 * applied.len());
+    w.key("applied").begin_arr();
+    for rep in &applied {
+        write_delta_report(&mut w, rep);
+    }
+    w.end_arr();
+    w.key("cost").num(session.cost());
+    w.key("lower_bound").num(session.lower_bound());
+    w.key("n_nodes").num(session.n_nodes() as f64);
+    w.key("n_tasks").num(session.n_tasks() as f64);
+    w.key("ok").bool(true);
+    w.key("op").str("delta");
+    w.key("session").num(id as f64);
+    Ok(w.finish_obj())
 }
 
-fn op_query(planner: &Planner, req: &Json) -> Result<Json> {
-    let (id, handle) = session_handle(planner, req)?;
-    let delta_json = match req.get("delta") {
-        Json::Null => anyhow::bail!("the query op needs a 'delta' field (one delta object)"),
-        d => d,
+fn op_query(planner: &Planner, env: &mut Envelope) -> Result<String> {
+    let (id, handle) = session_handle(planner, &env.rest)?;
+    let delta = match std::mem::replace(&mut env.delta, Hot::Absent) {
+        Hot::Absent => {
+            anyhow::bail!("the query op needs a 'delta' field (one delta object)")
+        }
+        Hot::Typed(DeltasField::One(d)) => d,
+        Hot::Typed(DeltasField::Many(_)) => {
+            // an array is not a delta object: reproduce the DOM grammar
+            // error an array input hits (`get("op")` on a non-object)
+            iodelta::delta_from_json(&Json::Arr(Vec::new()))?;
+            unreachable!("an array delta always fails the grammar")
+        }
+        Hot::Dom => iodelta::delta_from_json(env.rest.get("delta"))?,
     };
-    let delta = iodelta::delta_from_json(delta_json)?;
     let session = handle.lock().unwrap();
     let current = session.cost();
     let rep = session.quote(&delta)?;
     planner.metrics.inc("session_queries", 1);
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("query".into())),
-        ("session", Json::Num(id as f64)),
-        ("cost", Json::Num(current)),
-        ("cost_if", Json::Num(rep.cost)),
-        ("delta_cost", Json::Num(rep.cost - current)),
-        ("would", delta_report_json(&rep)),
-    ]))
+    let mut w = wire::obj_writer(256);
+    w.key("cost").num(current);
+    w.key("cost_if").num(rep.cost);
+    w.key("delta_cost").num(rep.cost - current);
+    w.key("ok").bool(true);
+    w.key("op").str("query");
+    w.key("session").num(id as f64);
+    w.key("would");
+    write_delta_report(&mut w, &rep);
+    Ok(w.finish_obj())
 }
 
-fn op_close(planner: &Planner, req: &Json) -> Result<Json> {
+fn op_close(planner: &Planner, req: &Json) -> Result<String> {
     let id = session_id(req)?;
     let handle = planner
         .sessions
@@ -567,94 +737,74 @@ fn op_close(planner: &Planner, req: &Json) -> Result<Json> {
     let session = handle.lock().unwrap();
     let (n_deltas, repairs, resolves) = session.delta_counts();
     planner.metrics.inc("sessions_closed", 1);
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("close".into())),
-        ("session", Json::Num(id as f64)),
-        ("cost", Json::Num(session.cost())),
-        ("lower_bound", Json::Num(session.lower_bound())),
-        ("n_tasks", Json::Num(session.n_tasks() as f64)),
-        ("deltas", Json::Num(n_deltas as f64)),
-        ("repairs", Json::Num(repairs as f64)),
-        ("resolves", Json::Num(resolves as f64)),
-    ]))
+    let mut w = wire::obj_writer(160);
+    w.key("cost").num(session.cost());
+    w.key("deltas").num(n_deltas as f64);
+    w.key("lower_bound").num(session.lower_bound());
+    w.key("n_tasks").num(session.n_tasks() as f64);
+    w.key("ok").bool(true);
+    w.key("op").str("close");
+    w.key("repairs").num(repairs as f64);
+    w.key("resolves").num(resolves as f64);
+    w.key("session").num(id as f64);
+    Ok(w.finish_obj())
 }
 
 /// `{"op": "stats"}` — the deployed server's introspection endpoint:
 /// every counter, every gauge (current value + all-time peak), every
 /// latency histogram (p50/p95/max over the recent window), open-session
 /// count, and the human-readable report text.
-fn op_stats(planner: &Planner) -> Result<Json> {
-    let counters = Json::Obj(
-        planner
-            .metrics
-            .counters_snapshot()
-            .into_iter()
-            .map(|(k, v)| (k, Json::Num(v as f64)))
-            .collect(),
-    );
-    let gauges = Json::Obj(
-        planner
-            .metrics
-            .gauges_snapshot()
-            .into_iter()
-            .map(|(k, g)| {
-                (
-                    k,
-                    Json::obj(vec![
-                        ("value", Json::Num(g.value as f64)),
-                        ("peak", Json::Num(g.peak as f64)),
-                    ]),
-                )
-            })
-            .collect(),
-    );
-    let timers = Json::Obj(
-        planner
-            .metrics
-            .timers_snapshot()
-            .into_iter()
-            .map(|(k, t)| {
-                (
-                    k,
-                    Json::obj(vec![
-                        ("count", Json::Num(t.count as f64)),
-                        ("total", Json::Num(t.total)),
-                        ("mean", Json::Num(t.mean())),
-                        ("p50", Json::Num(t.pct(50.0))),
-                        ("p95", Json::Num(t.pct(95.0))),
-                        ("max", Json::Num(t.max)),
-                    ]),
-                )
-            })
-            .collect(),
-    );
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("stats".into())),
-        ("counters", counters),
-        ("gauges", gauges),
-        ("timers", timers),
-        ("sessions_open", Json::Num(planner.sessions.count() as f64)),
-        ("report", Json::Str(planner.metrics.report())),
-    ]))
+fn op_stats(planner: &Planner) -> Result<String> {
+    // the snapshots come off `BTreeMap`s, so iteration is already in the
+    // sorted order the writer requires
+    let mut w = wire::obj_writer(2048);
+    w.key("counters").begin_obj();
+    for (k, v) in planner.metrics.counters_snapshot() {
+        w.key(&k).num(v as f64);
+    }
+    w.end_obj();
+    w.key("gauges").begin_obj();
+    for (k, g) in planner.metrics.gauges_snapshot() {
+        w.key(&k).begin_obj();
+        w.key("peak").num(g.peak as f64);
+        w.key("value").num(g.value as f64);
+        w.end_obj();
+    }
+    w.end_obj();
+    w.key("ok").bool(true);
+    w.key("op").str("stats");
+    w.key("report").str(&planner.metrics.report());
+    w.key("sessions_open").num(planner.sessions.count() as f64);
+    w.key("timers").begin_obj();
+    for (k, t) in planner.metrics.timers_snapshot() {
+        w.key(&k).begin_obj();
+        w.key("count").num(t.count as f64);
+        w.key("max").num(t.max);
+        w.key("mean").num(t.mean());
+        w.key("p50").num(t.pct(50.0));
+        w.key("p95").num(t.pct(95.0));
+        w.key("total").num(t.total);
+        w.end_obj();
+    }
+    w.end_obj();
+    Ok(w.finish_obj())
 }
 
 /// `{"op": "shutdown"}` — begin a graceful drain: stop accepting, let
 /// every in-flight and queued request finish, close all sessions, exit.
 /// Only meaningful over the runtime (`tlrs serve`), and only when it was
 /// started with `--allow-shutdown`.
-fn op_shutdown(planner: &Planner, ctl: Option<&runtime::RuntimeCtl>) -> Result<Json> {
+fn op_shutdown(planner: &Planner, ctl: Option<&runtime::RuntimeCtl>) -> Result<String> {
     let ctl =
         ctl.context("shutdown is only available over the service runtime (tlrs serve)")?;
     ctl.request_shutdown()?;
     planner.metrics.inc("shutdown_requests", 1);
-    Ok(Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("op", Json::Str("shutdown".into())),
-        ("draining", Json::Bool(true)),
-        ("sessions_open", Json::Num(planner.sessions.count() as f64)),
-    ]))
+    let mut w = wire::obj_writer(80);
+    w.key("draining").bool(true);
+    w.key("ok").bool(true);
+    w.key("op").str("shutdown");
+    w.key("sessions_open").num(planner.sessions.count() as f64);
+    Ok(w.finish_obj())
 }
 
 /// Serve forever on `addr` (e.g. "127.0.0.1:7077") with default runtime

@@ -21,8 +21,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::{Delta, Task};
-use crate::util::json::{self, Json};
+use crate::model::{Delta, DemandSeg, NodeType, Task};
+use crate::util::json::{self, num_is_usize, Json};
+use crate::util::wire::{Event, JsonPull};
 
 use super::files;
 
@@ -186,8 +187,191 @@ pub fn deltas_from_json(v: &Json) -> Result<Vec<Delta>> {
     }
 }
 
+// ---------- streaming hot path (typed pull decoders) ----------------------
+//
+// Same contract as the instance decoders in `io::files`: fast paths for
+// valid input only. Any surprise returns `None`; the caller re-runs
+// `delta_from_json` on the DOM, which produces the canonical grammar
+// error. Typed success must imply an identical DOM result
+// (`tests/prop_wire.rs` pins this differentially).
+
+/// Decode a delta object body (after its `ObjStart` was consumed).
+pub(crate) fn delta_body_from_pull(p: &mut JsonPull) -> Option<Delta> {
+    let mut op: Option<String> = None;
+    // admit / retire / reprice payloads
+    let mut tasks: Option<Vec<(Task, bool)>> = None;
+    let mut ids: Option<Vec<u64>> = None;
+    let mut node_types: Option<Vec<NodeType>> = None;
+    // reshape payload (inline task fields)
+    let mut id: Option<f64> = None;
+    let mut start: Option<u32> = None;
+    let mut end: Option<u32> = None;
+    let mut demand: Option<Vec<f64>> = None;
+    let mut segments: Option<Option<Vec<DemandSeg>>> = None;
+    loop {
+        match p.next().ok()? {
+            // last occurrence wins, like the DOM's BTreeMap insert
+            Some(Event::Key(k)) => match k.as_ref() {
+                "op" => match p.next().ok()? {
+                    Some(Event::Str(s)) => op = Some(s.into_owned()),
+                    _ => return None,
+                },
+                "tasks" => {
+                    match p.next().ok()? {
+                        Some(Event::ArrStart) => {}
+                        _ => return None,
+                    }
+                    let mut out = Vec::new();
+                    loop {
+                        match p.next().ok()? {
+                            Some(Event::ObjStart) => {
+                                out.push(files::task_body_from_pull(p)?)
+                            }
+                            Some(Event::ArrEnd) => break,
+                            _ => return None,
+                        }
+                    }
+                    tasks = Some(out);
+                }
+                "ids" => {
+                    match p.next().ok()? {
+                        Some(Event::ArrStart) => {}
+                        _ => return None,
+                    }
+                    let mut out = Vec::new();
+                    loop {
+                        match p.next().ok()? {
+                            // the DOM's as_usize() as u64 idiom
+                            Some(Event::Num(x)) if num_is_usize(x) => {
+                                out.push((x as usize) as u64)
+                            }
+                            Some(Event::ArrEnd) => break,
+                            _ => return None,
+                        }
+                    }
+                    ids = Some(out);
+                }
+                "node_types" => {
+                    match p.next().ok()? {
+                        Some(Event::ArrStart) => {}
+                        _ => return None,
+                    }
+                    let mut out = Vec::new();
+                    loop {
+                        match p.next().ok()? {
+                            Some(Event::ObjStart) => {
+                                out.push(files::node_type_body_from_pull(p)?)
+                            }
+                            Some(Event::ArrEnd) => break,
+                            _ => return None,
+                        }
+                    }
+                    node_types = Some(out);
+                }
+                "id" => id = Some(files::pull_num(p)?),
+                "start" => start = Some(files::num_u32(files::pull_num(p)?)?),
+                "end" => end = Some(files::num_u32(files::pull_num(p)?)?),
+                "demand" => demand = Some(files::pull_f64_vec(p)?),
+                "segments" => segments = Some(files::segs_value_from_pull(p)?),
+                _ => p.skip_value().ok()?,
+            },
+            Some(Event::ObjEnd) => break,
+            _ => return None,
+        }
+    }
+    match op?.as_str() {
+        "admit" => {
+            let tasks = tasks?;
+            // session ids are addressing keys: every id must have been a
+            // strict non-negative integer (the DOM pre-check)
+            if tasks.is_empty() || tasks.iter().any(|(_, strict)| !strict) {
+                return None;
+            }
+            Some(Delta::Admit { tasks: tasks.into_iter().map(|(t, _)| t).collect() })
+        }
+        "retire" => {
+            let ids = ids?;
+            if ids.is_empty() {
+                return None;
+            }
+            Some(Delta::Retire { ids })
+        }
+        "reshape" => {
+            let id_raw = id?;
+            if !num_is_usize(id_raw) {
+                return None;
+            }
+            // the DOM's flat-check is on key *presence*: a literal
+            // `"segments": null` counts as present there
+            if segments.is_none() && (start.is_none() || end.is_none()) {
+                return None;
+            }
+            let (start, end) = match (&segments, start, end) {
+                // derive the declared span from the segments
+                (Some(Some(segs)), None, None) => {
+                    let first = segs.first()?;
+                    (first.start, segs.last().expect("non-empty").end)
+                }
+                (_, Some(s), Some(e)) => (s, e),
+                // half-declared span without a derivable one: DOM errors
+                _ => return None,
+            };
+            let (task, _) = files::build_task(id_raw, start, end, demand, segments)?;
+            Some(Delta::Reshape { task })
+        }
+        "reprice" => {
+            let node_types = node_types?;
+            if node_types.is_empty() {
+                return None;
+            }
+            Some(Delta::Reprice { node_types })
+        }
+        _ => None,
+    }
+}
+
+/// Decode one full delta value (the upcoming value must be an object).
+pub(crate) fn delta_value_from_pull(p: &mut JsonPull) -> Option<Delta> {
+    match p.next().ok()? {
+        Some(Event::ObjStart) => delta_body_from_pull(p),
+        _ => None,
+    }
+}
+
+/// Decode a `"deltas"` array value. `None` for an empty array too — the
+/// DOM path owns that grammar error.
+pub(crate) fn deltas_array_from_pull(p: &mut JsonPull) -> Option<Vec<Delta>> {
+    match p.next().ok()? {
+        Some(Event::ArrStart) => {}
+        _ => return None,
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next().ok()? {
+            Some(Event::ObjStart) => out.push(delta_body_from_pull(p)?),
+            Some(Event::ArrEnd) => break,
+            _ => return None,
+        }
+    }
+    if out.is_empty() {
+        return None;
+    }
+    Some(out)
+}
+
+/// Streaming-decode one complete delta document from raw bytes; `None`
+/// means "fall back to the DOM path".
+pub fn delta_from_slice(bytes: &[u8]) -> Option<Delta> {
+    let mut p = JsonPull::new(bytes);
+    let d = delta_value_from_pull(&mut p)?;
+    matches!(p.next(), Ok(None)).then_some(d)
+}
+
 /// Load a JSON-lines delta stream (one delta per line; blank lines and
 /// `#` comment lines are skipped) — the `tlrs session --deltas` format.
+/// Each line takes the streaming hot path first and only rebuilds a DOM
+/// when that bails (then purely to produce the canonical error or
+/// handle a cold shape).
 pub fn load_delta_stream(path: &Path) -> Result<Vec<Delta>> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -195,6 +379,10 @@ pub fn load_delta_stream(path: &Path) -> Result<Vec<Delta>> {
     for (i, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(d) = delta_from_slice(line.as_bytes()) {
+            out.push(d);
             continue;
         }
         let v = json::parse(line)
@@ -369,6 +557,59 @@ mod tests {
         let err = format!("{:#}", load_delta_stream(&path).unwrap_err());
         assert!(err.contains(":1"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streaming_delta_decoder_matches_dom() {
+        // every shape the DOM accepts must pull-decode to the same delta
+        for text in [
+            r#"{"op":"admit","tasks":[{"id":7,"demand":[0.2,0.1],"start":0,"end":3}]}"#,
+            r#"{"op":"admit","tasks":[{"id":7,"start":0,"end":3,"segments":[
+                {"start":0,"end":1,"demand":[0.1]},{"start":2,"end":3,"demand":[0.6]}]}]}"#,
+            r#"{"op":"retire","ids":[3,5]}"#,
+            r#"{"op":"reshape","id":3,"demand":[0.4],"start":1,"end":4}"#,
+            r#"{"op":"reshape","id":9,"segments":[
+                {"start":0,"end":1,"demand":[0.1]},
+                {"start":2,"end":5,"demand":[0.6]}]}"#,
+            r#"{"op":"reshape","id":3,"demand":[0.4],"start":1,"end":4,"segments":null}"#,
+            r#"{"op":"reprice","node_types":[{"name":"a","capacity":[1.0],"cost":2.5}]}"#,
+            // unknown fields are skipped, duplicate keys last-wins
+            r#"{"op":"retire","note":{"x":[1,2]},"ids":[9],"ids":[3,5]}"#,
+        ] {
+            let fast = delta_from_slice(text.as_bytes())
+                .unwrap_or_else(|| panic!("hot path bailed on valid delta: {text}"));
+            let dom = delta_from_json(&json::parse(text).unwrap()).unwrap();
+            assert_eq!(
+                delta_to_json(&fast).to_string(),
+                delta_to_json(&dom).to_string(),
+                "{text}"
+            );
+        }
+        // everything the DOM rejects must come back None
+        for text in [
+            r#"{"tasks":[]}"#,
+            r#"{"op":"warp"}"#,
+            r#"{"op":"admit","tasks":[]}"#,
+            r#"{"op":"admit","tasks":[{"id":-7,"demand":[0.1],"start":0,"end":1}]}"#,
+            r#"{"op":"admit","tasks":[{"id":1.5,"demand":[0.1],"start":0,"end":1}]}"#,
+            r#"{"op":"admit","tasks":[{"id":9007199254740994,"demand":[0.1],"start":0,"end":1}]}"#,
+            r#"{"op":"retire","ids":[]}"#,
+            r#"{"op":"retire","ids":[-1]}"#,
+            r#"{"op":"reshape","id":1,"demand":[0.1]}"#,
+            r#"{"op":"reshape","id":1,"segments":null}"#,
+            r#"{"op":"reshape","id":1,"start":0,"segments":[
+                {"start":0,"end":1,"demand":[0.1]}]}"#,
+            r#"{"op":"reshape","id":1,"segments":[]}"#,
+            r#"{"op":"reprice","node_types":[]}"#,
+            r#"{"op":"retire","ids":[1]} trailing"#,
+        ] {
+            assert!(delta_from_slice(text.as_bytes()).is_none(), "{text}");
+            assert!(
+                json::parse(text).is_err()
+                    || delta_from_json(&json::parse(text).unwrap()).is_err(),
+                "DOM must also reject: {text}"
+            );
+        }
     }
 
     #[test]

@@ -19,7 +19,8 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::model::{DemandSeg, Instance, NodeType, Solution, Task};
-use crate::util::json::{self, Json};
+use crate::util::json::{self, num_is_usize, Json};
+use crate::util::wire::{Event, JsonPull, JsonWriter};
 
 // ---------- JSON instance format ----------------------------------------
 
@@ -186,12 +187,335 @@ fn validate_demand(id: u64, demand: &[f64]) -> Result<()> {
     Ok(())
 }
 
+// ---------- streaming hot path (typed pull decoders) ----------------------
+//
+// Fast decoders over `util::wire::JsonPull` for the instance grammar,
+// building `Task`/`NodeType`/`Instance` without a DOM. They are fast
+// paths for *valid* input only: any surprise — wrong type, missing
+// field, failed validation — returns `None` and the caller falls back
+// to the `*_from_json` DOM path above, which produces the canonical
+// error. The only obligation is: typed success implies the DOM path
+// would succeed with an identical value (pinned by `tests/prop_wire.rs`).
+
+pub(crate) fn pull_num(p: &mut JsonPull) -> Option<f64> {
+    match p.next().ok()? {
+        Some(Event::Num(x)) => Some(x),
+        _ => None,
+    }
+}
+
+pub(crate) fn pull_f64_vec(p: &mut JsonPull) -> Option<Vec<f64>> {
+    match p.next().ok()? {
+        Some(Event::ArrStart) => {}
+        _ => return None,
+    }
+    let mut out = Vec::new();
+    loop {
+        match p.next().ok()? {
+            Some(Event::Num(x)) => out.push(x),
+            Some(Event::ArrEnd) => return Some(out),
+            _ => return None,
+        }
+    }
+}
+
+/// The `as_usize() as u32` idiom of the DOM path, as one cast chain.
+pub(crate) fn num_u32(x: f64) -> Option<u32> {
+    num_is_usize(x).then(|| (x as usize) as u32)
+}
+
+fn demand_ok(demand: &[f64]) -> bool {
+    demand.iter().all(|d| d.is_finite() && *d >= 0.0)
+}
+
+/// Decode a task object body (after its `ObjStart` was consumed).
+/// Returns the task plus whether its id was a strict non-negative
+/// integer — surfaces that address tasks by id (session deltas)
+/// enforce that; instance files keep the seed's lenient cast.
+pub(crate) fn task_body_from_pull(p: &mut JsonPull) -> Option<(Task, bool)> {
+    let mut id: Option<f64> = None;
+    let mut start: Option<u32> = None;
+    let mut end: Option<u32> = None;
+    let mut demand: Option<Vec<f64>> = None;
+    let mut segments: Option<Option<Vec<DemandSeg>>> = None;
+    loop {
+        match p.next().ok()? {
+            // last occurrence wins, like the DOM's BTreeMap insert
+            Some(Event::Key(k)) => match k.as_ref() {
+                "id" => id = Some(pull_num(p)?),
+                "start" => start = Some(num_u32(pull_num(p)?)?),
+                "end" => end = Some(num_u32(pull_num(p)?)?),
+                "demand" => demand = Some(pull_f64_vec(p)?),
+                "segments" => segments = Some(segs_value_from_pull(p)?),
+                _ => p.skip_value().ok()?,
+            },
+            Some(Event::ObjEnd) => break,
+            _ => return None,
+        }
+    }
+    build_task(id?, start?, end?, demand, segments)
+}
+
+pub(crate) fn build_task(
+    id_raw: f64,
+    start: u32,
+    end: u32,
+    demand: Option<Vec<f64>>,
+    segments: Option<Option<Vec<DemandSeg>>>,
+) -> Option<(Task, bool)> {
+    let strict = num_is_usize(id_raw);
+    let id = id_raw as u64;
+    // a literal `"segments": null` is absent for the DOM's get(): flat
+    match segments.flatten() {
+        None => {
+            let demand = demand?;
+            if end < start || demand.is_empty() || !demand_ok(&demand) {
+                return None;
+            }
+            Some((Task::new(id, demand, start, end), strict))
+        }
+        Some(segs) => {
+            let task = Task::try_piecewise(id, segs).ok()?;
+            if (task.start, task.end) != (start, end) {
+                return None;
+            }
+            Some((task, strict))
+        }
+    }
+}
+
+/// Decode a `"segments"` *value*: `Some(None)` for a literal `null`
+/// (≡ absent under the DOM's `get`), `Some(Some(segs))` for an array.
+pub(crate) fn segs_value_from_pull(p: &mut JsonPull) -> Option<Option<Vec<DemandSeg>>> {
+    match p.next().ok()? {
+        Some(Event::Null) => Some(None),
+        Some(Event::ArrStart) => {
+            let mut segs = Vec::new();
+            loop {
+                match p.next().ok()? {
+                    Some(Event::ObjStart) => segs.push(seg_body_from_pull(p)?),
+                    Some(Event::ArrEnd) => return Some(Some(segs)),
+                    _ => return None,
+                }
+            }
+        }
+        _ => None,
+    }
+}
+
+fn seg_body_from_pull(p: &mut JsonPull) -> Option<DemandSeg> {
+    let mut start: Option<u32> = None;
+    let mut end: Option<u32> = None;
+    let mut demand: Option<Vec<f64>> = None;
+    loop {
+        match p.next().ok()? {
+            Some(Event::Key(k)) => match k.as_ref() {
+                "start" => start = Some(num_u32(pull_num(p)?)?),
+                "end" => end = Some(num_u32(pull_num(p)?)?),
+                "demand" => demand = Some(pull_f64_vec(p)?),
+                _ => p.skip_value().ok()?,
+            },
+            Some(Event::ObjEnd) => break,
+            _ => return None,
+        }
+    }
+    let demand = demand?;
+    if !demand_ok(&demand) {
+        return None;
+    }
+    Some(DemandSeg { start: start?, end: end?, demand })
+}
+
+pub(crate) fn node_type_body_from_pull(p: &mut JsonPull) -> Option<NodeType> {
+    let mut name: Option<Option<String>> = None;
+    let mut capacity: Option<Vec<f64>> = None;
+    let mut cost: Option<f64> = None;
+    loop {
+        match p.next().ok()? {
+            Some(Event::Key(k)) => match k.as_ref() {
+                // the DOM treats any non-string name as "unnamed" and
+                // keeps going, so a container here is parsed, not a bail
+                "name" => name = Some(p.parse_value().ok()?.as_str().map(String::from)),
+                "capacity" => capacity = Some(pull_f64_vec(p)?),
+                "cost" => cost = Some(pull_num(p)?),
+                _ => p.skip_value().ok()?,
+            },
+            Some(Event::ObjEnd) => break,
+            _ => return None,
+        }
+    }
+    let name = name.flatten();
+    let name = name.as_deref().unwrap_or("unnamed");
+    let capacity = capacity?;
+    let cost = cost?;
+    if capacity.is_empty() || capacity.iter().any(|c| !c.is_finite() || *c <= 0.0) {
+        return None;
+    }
+    if !cost.is_finite() || cost < 0.0 {
+        return None;
+    }
+    Some(NodeType::new(name, capacity, cost))
+}
+
+/// Decode one full instance value (the upcoming value must be an
+/// object). Applies the same post-validations as `instance_from_json`.
+pub(crate) fn instance_value_from_pull(p: &mut JsonPull) -> Option<Instance> {
+    match p.next().ok()? {
+        Some(Event::ObjStart) => {}
+        _ => return None,
+    }
+    let mut horizon: Option<u32> = None;
+    let mut node_types: Option<Vec<NodeType>> = None;
+    let mut tasks: Option<Vec<Task>> = None;
+    loop {
+        match p.next().ok()? {
+            Some(Event::Key(k)) => match k.as_ref() {
+                "horizon" => horizon = Some(num_u32(pull_num(p)?)?),
+                "node_types" => {
+                    match p.next().ok()? {
+                        Some(Event::ArrStart) => {}
+                        _ => return None,
+                    }
+                    let mut out = Vec::new();
+                    loop {
+                        match p.next().ok()? {
+                            Some(Event::ObjStart) => out.push(node_type_body_from_pull(p)?),
+                            Some(Event::ArrEnd) => break,
+                            _ => return None,
+                        }
+                    }
+                    node_types = Some(out);
+                }
+                "tasks" => {
+                    match p.next().ok()? {
+                        Some(Event::ArrStart) => {}
+                        _ => return None,
+                    }
+                    let mut out = Vec::new();
+                    loop {
+                        match p.next().ok()? {
+                            Some(Event::ObjStart) => out.push(task_body_from_pull(p)?.0),
+                            Some(Event::ArrEnd) => break,
+                            _ => return None,
+                        }
+                    }
+                    tasks = Some(out);
+                }
+                _ => p.skip_value().ok()?,
+            },
+            Some(Event::ObjEnd) => break,
+            _ => return None,
+        }
+    }
+    let (horizon, node_types, tasks) = (horizon?, node_types?, tasks?);
+    if node_types.is_empty() || horizon == 0 {
+        return None;
+    }
+    let dims = node_types[0].dims();
+    if node_types.iter().any(|b| b.dims() != dims) {
+        return None;
+    }
+    if tasks.iter().any(|u| u.dims() != dims || u.end >= horizon) {
+        return None;
+    }
+    Some(Instance::new(tasks, node_types, horizon))
+}
+
+/// Streaming-decode a complete instance document from raw bytes.
+/// `None` means "not decodable on the hot path" — re-run the DOM path
+/// for the canonical result or error.
+pub fn instance_from_slice(bytes: &[u8]) -> Option<Instance> {
+    let mut p = JsonPull::new(bytes);
+    let inst = instance_value_from_pull(&mut p)?;
+    matches!(p.next(), Ok(None)).then_some(inst)
+}
+
+// ---------- streaming hot path (direct-write serializer) -------------------
+//
+// Byte-identical to `instance_to_json(..).to_string()`: same key orders
+// (the DOM's BTreeMap sorts them), same number formatting.
+
+pub(crate) fn write_f64_arr<W: std::io::Write>(w: &mut JsonWriter<W>, xs: &[f64]) {
+    w.begin_arr();
+    for &x in xs {
+        w.num(x);
+    }
+    w.end_arr();
+}
+
+pub fn write_task_json<W: std::io::Write>(w: &mut JsonWriter<W>, u: &Task) {
+    w.begin_obj();
+    if u.is_flat() {
+        w.key("demand");
+        write_f64_arr(w, u.peak());
+        w.key("end").num(u.end as f64);
+        w.key("id").num(u.id as f64);
+        w.key("start").num(u.start as f64);
+    } else {
+        w.key("end").num(u.end as f64);
+        w.key("id").num(u.id as f64);
+        w.key("segments").begin_arr();
+        for s in u.segments() {
+            w.begin_obj();
+            w.key("demand");
+            write_f64_arr(w, &s.demand);
+            w.key("end").num(s.end as f64);
+            w.key("start").num(s.start as f64);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key("start").num(u.start as f64);
+    }
+    w.end_obj();
+}
+
+pub fn write_node_type_json<W: std::io::Write>(w: &mut JsonWriter<W>, b: &NodeType) {
+    w.begin_obj();
+    w.key("capacity");
+    write_f64_arr(w, &b.capacity);
+    w.key("cost").num(b.cost);
+    w.key("name").str(&b.name);
+    w.end_obj();
+}
+
+pub fn write_instance_json<W: std::io::Write>(w: &mut JsonWriter<W>, inst: &Instance) {
+    w.begin_obj();
+    w.key("horizon").num(inst.horizon as f64);
+    w.key("node_types").begin_arr();
+    for b in &inst.node_types {
+        write_node_type_json(w, b);
+    }
+    w.end_arr();
+    w.key("tasks").begin_arr();
+    for u in &inst.tasks {
+        write_task_json(w, u);
+    }
+    w.end_arr();
+    w.end_obj();
+}
+
+pub fn instance_to_wire_string(inst: &Instance) -> String {
+    // rough per-row reservation so large instances don't regrow the buffer
+    let cap = 64 * (inst.tasks.len() + inst.node_types.len()) + 64;
+    let mut w = JsonWriter::new(Vec::with_capacity(cap));
+    write_instance_json(&mut w, inst);
+    w.into_string()
+}
+
 pub fn save_instance(inst: &Instance, path: &Path) -> Result<()> {
-    fs::write(path, instance_to_json(inst).to_string())
+    fs::write(path, instance_to_wire_string(inst))
         .with_context(|| format!("writing {}", path.display()))
 }
 
 pub fn load_instance(path: &Path) -> Result<Instance> {
+    let bytes =
+        fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if let Some(inst) = instance_from_slice(&bytes) {
+        return Ok(inst);
+    }
+    // cold path: re-read as text so the legacy UTF-8/parse/validation
+    // error surfaces exactly as before
+    drop(bytes);
     let text = fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let v = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -392,6 +716,89 @@ mod tests {
         assert_eq!(inst.tasks, back.tasks);
         assert!(!back.tasks[1].is_flat());
         assert_eq!(back.tasks[1].segments().len(), 3);
+    }
+
+    #[test]
+    fn wire_serializer_matches_dom() {
+        let inst = generate(&SynthParams { n: 40, m: 3, ..Default::default() }, 9);
+        assert_eq!(instance_to_wire_string(&inst), instance_to_json(&inst).to_string());
+        let shaped = Instance::new(
+            shaped_tasks(),
+            vec![NodeType::new("a\"b\n", vec![1.0, 1.0], 1.5)],
+            7,
+        );
+        assert_eq!(
+            instance_to_wire_string(&shaped),
+            instance_to_json(&shaped).to_string()
+        );
+    }
+
+    #[test]
+    fn streaming_decoder_matches_dom() {
+        for (inst, label) in [
+            (generate(&SynthParams { n: 40, m: 3, ..Default::default() }, 9), "flat"),
+            (
+                Instance::new(
+                    shaped_tasks(),
+                    vec![NodeType::new("a", vec![1.0, 1.0], 1.0)],
+                    7,
+                ),
+                "shaped",
+            ),
+        ] {
+            let text = instance_to_json(&inst).to_string();
+            let fast = instance_from_slice(text.as_bytes()).expect(label);
+            assert_eq!(fast.tasks, inst.tasks, "{label}");
+            assert_eq!(fast.node_types, inst.node_types, "{label}");
+            assert_eq!(fast.horizon, inst.horizon, "{label}");
+        }
+        // unknown fields skipped, duplicate keys last-wins, null segments
+        // means flat — exactly like the DOM
+        let text = r#"{"horizon":4,"extra":{"deep":[1,{"x":2}]},
+            "node_types":[{"name":"a","capacity":[1.0],"cost":1.0,"note":7}],
+            "tasks":[{"id":1,"id":2,"demand":[0.5],"start":0,"end":2,
+                      "segments":null}]}"#;
+        let fast = instance_from_slice(text.as_bytes()).unwrap();
+        let dom = instance_from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(fast.tasks, dom.tasks);
+        assert_eq!(fast.tasks[0].id, 2);
+        assert!(fast.tasks[0].is_flat());
+    }
+
+    #[test]
+    fn streaming_decoder_bails_where_dom_errors() {
+        // everything the DOM rejects must come back None (the caller
+        // falls back and reports the DOM's canonical error)
+        for text in [
+            // invalid flat span
+            r#"{"horizon":4,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[{"id":0,"demand":[0.1],"start":3,"end":1}]}"#,
+            // beyond-horizon task
+            r#"{"horizon":2,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[{"id":0,"demand":[0.1],"start":0,"end":2}]}"#,
+            // declared span disagreeing with segments
+            r#"{"horizon":8,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[{"id":0,"start":0,"end":5,"segments":[
+                    {"start":0,"end":1,"demand":[0.1]},
+                    {"start":2,"end":4,"demand":[0.2]}]}]}"#,
+            // dims mismatch, empty node_types, zero horizon
+            r#"{"horizon":4,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[{"id":0,"demand":[0.1,0.2],"start":0,"end":1}]}"#,
+            r#"{"horizon":4,"node_types":[],"tasks":[]}"#,
+            r#"{"horizon":0,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[]}"#,
+            // malformed JSON and trailing garbage
+            r#"{"horizon":4"#,
+            r#"{"horizon":4,"node_types":[{"name":"a","capacity":[1.0],"cost":1.0}],
+                "tasks":[]} extra"#,
+        ] {
+            assert!(instance_from_slice(text.as_bytes()).is_none(), "{text}");
+            assert!(
+                json::parse(text).is_err()
+                    || instance_from_json(&json::parse(text).unwrap()).is_err(),
+                "DOM must also reject: {text}"
+            );
+        }
     }
 
     #[test]

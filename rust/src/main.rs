@@ -169,6 +169,12 @@ SERVICE RUNTIME (tlrs serve):
   dedicated solver thread at startup so any --workers count is safe
   (artifact-routed solves still serialize; native solves run
   concurrently).
+  Wire layer: hot request shapes (inline instances, delta payloads)
+              pull-parse straight into typed structs and responses are
+              direct-written — no JSON tree in between. Anything else
+              falls back to the DOM path with identical responses and
+              error text, so clients never see the difference (see
+              util::wire).
 ";
 
 fn main() {

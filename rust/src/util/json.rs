@@ -2,6 +2,20 @@
 //! vendored dependency universe has no serde_json. Handles the full JSON
 //! grammar needed by the artifact manifest, instance files, experiment
 //! configs and the planning service protocol.
+//!
+//! This is the **cold tier** of the two-tier wire layer. It materializes a
+//! full DOM (`BTreeMap` objects, heap `String`s) and is the canonical
+//! definition of accepted grammar, error messages/positions, and output
+//! formatting. The **hot tier** — `util::wire`'s streaming `JsonPull`
+//! parser and `JsonWriter` direct-write serializer, plus the typed
+//! decoders in `io::files` / `io::delta` and the service request
+//! envelope — decodes the high-volume shapes (inline instances, task
+//! `segments` arrays, delta objects) straight into `Task`/`Delta`/
+//! `Instance` and writes responses without building a tree. The hot tier
+//! is byte-equivalent by construction: typed decoders bail to this DOM
+//! path on any surprise, and `tests/prop_wire.rs` pins parser/writer
+//! equivalence differentially. Cold shapes (artifact manifests, configs,
+//! workload specs) stay on this module.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -41,7 +55,7 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+        self.as_f64().filter(|x| num_is_usize(*x)).map(|x| x as usize)
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -137,6 +151,19 @@ impl Json {
             }
         }
     }
+}
+
+/// Largest f64 at which every integer is still exactly representable
+/// (2^53). Above it, `as usize` silently lands on a neighboring value,
+/// so an id/index that large was never what the sender meant.
+pub const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
+
+/// Is this f64 an exact, in-range usize? Shared by [`Json::as_usize`]
+/// and the typed streaming decoders in `io` so both tiers accept the
+/// same integers. Rejects negatives, fractions, anything above
+/// [`MAX_SAFE_INT`], and non-finite values (`inf.fract()` is NaN).
+pub fn num_is_usize(x: f64) -> bool {
+    x >= 0.0 && x.fract() == 0.0 && x <= MAX_SAFE_INT
 }
 
 fn write_escaped(s: &str, out: &mut String) {
@@ -398,6 +425,20 @@ mod tests {
     fn int_formatting() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn as_usize_rejects_unsafe_integers() {
+        // at 2^53 integers are still exact
+        assert_eq!(Json::Num(MAX_SAFE_INT).as_usize(), Some(9_007_199_254_740_992));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        // 2^53 + 2 is the next representable f64 above it — a truncating
+        // `as usize` used to accept these (and 1e300!) silently
+        assert_eq!(Json::Num(9_007_199_254_740_994.0).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(1.5).as_usize(), None);
     }
 
     #[test]

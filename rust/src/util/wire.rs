@@ -1,0 +1,925 @@
+//! The hot tier of the two-tier wire layer: a zero-copy streaming JSON
+//! pull parser and a direct-write serializer.
+//!
+//! `util::json` is the cold tier — a full DOM of `BTreeMap`s and heap
+//! `String`s, kept for cold shapes (manifests, configs, workload specs)
+//! and as the canonical semantics. This module is the hot tier the
+//! service runs on:
+//!
+//!   * [`JsonPull`] — a non-recursive pull parser over `&[u8]` yielding
+//!     [`Event`]s with zero-copy `&str` slices whenever a string
+//!     contains no escapes. Typed decoders (`io::files::
+//!     instance_from_slice`, `io::delta::delta_from_slice`, the service
+//!     request envelope) consume the events straight into
+//!     `Task`/`Delta`/`Instance` without materializing a tree.
+//!   * [`JsonWriter`] / [`JsonWrite`] — a serializer that writes JSON
+//!     straight into an `impl io::Write` buffer with the exact float
+//!     and escape formatting of `Json::to_string`, used by
+//!     `coordinator::service` for every response.
+//!
+//! **Equivalence contract.** The pull parser accepts exactly the
+//! language `json::parse` accepts and reports the *same error message
+//! at the same byte position* on malformed input; the writer emits the
+//! same bytes the DOM writer emits (object keys must be fed in sorted
+//! order — debug-asserted — because `Json::Obj` is a `BTreeMap`).
+//! Typed decoders built on `JsonPull` are *fast paths for valid input
+//! only*: on any surprise they return `None` and the caller re-runs the
+//! DOM path, which produces the canonical error. Both properties are
+//! pinned by `tests/prop_wire.rs` differential fuzzing.
+//!
+//! One deliberate semantic note: the DOM parser validates UTF-8 from
+//! the first ordinary (non-escape) string character to the end of the
+//! whole input. `JsonPull` performs that identical validation once, at
+//! the first ordinary string character it ever sees, and then slices
+//! strings zero-copy; error positions match because the DOM path also
+//! fails at that first character.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::io::{self, Write};
+
+use super::json::{Json, JsonError};
+
+/// One parse event. `Key`/`Str` borrow from the input when the string
+/// has no escapes (`Cow::Borrowed`) and only allocate when it does.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event<'a> {
+    ObjStart,
+    ObjEnd,
+    ArrStart,
+    ArrEnd,
+    /// An object key (the following events form its value).
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum State {
+    /// Before the top-level value.
+    Start,
+    /// Just consumed `{`: expect `}` or the first key.
+    ObjFirst,
+    /// Just consumed `,` inside an object: expect a key.
+    ObjKey,
+    /// Just consumed `:` (and trailing ws): expect a value.
+    Value,
+    /// Just consumed `[`: expect `]` or the first element.
+    ArrFirst,
+    /// Just consumed `,` inside an array: expect a value.
+    ArrValue,
+    /// A value inside a container just ended: expect `,` or the closer.
+    AfterValue,
+    /// The top-level value ended: expect end of input.
+    Done,
+}
+
+/// Non-recursive streaming pull parser over a byte slice. Call
+/// [`JsonPull::next`] until it returns `Ok(None)` (end of a fully
+/// consumed document) or an error. Container depth lives in an explicit
+/// stack, so arbitrarily nested input cannot overflow the call stack.
+pub struct JsonPull<'a> {
+    b: &'a [u8],
+    i: usize,
+    stack: Vec<Frame>,
+    state: State,
+    /// Position from which the remainder of the input has been
+    /// validated as UTF-8 (`None` until the first ordinary string
+    /// character forces the check). Enables zero-copy string slices.
+    valid_from: Option<usize>,
+}
+
+impl<'a> JsonPull<'a> {
+    pub fn new(b: &'a [u8]) -> JsonPull<'a> {
+        JsonPull { b, i: 0, stack: Vec::new(), state: State::Start, valid_from: None }
+    }
+
+    /// Current byte position (error positions report this).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    /// First byte of the upcoming value. Only meaningful directly after
+    /// a [`Event::Key`] (whitespace after the `:` is already consumed);
+    /// lets envelope decoders route `{`/`[` values to typed decoders.
+    pub fn peek_value_byte(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    /// Pull the next event. `Ok(None)` means the document is complete
+    /// and fully consumed (trailing whitespace allowed, anything else
+    /// is the DOM parser's "trailing characters" error).
+    pub fn next(&mut self) -> Result<Option<Event<'a>>, JsonError> {
+        loop {
+            match self.state {
+                State::Start => {
+                    self.skip_ws();
+                    return self.value_event().map(Some);
+                }
+                State::Value => return self.value_event().map(Some),
+                State::ObjFirst => {
+                    self.skip_ws();
+                    if self.peek() == Some(b'}') {
+                        self.i += 1;
+                        return Ok(Some(self.close(Frame::Obj)));
+                    }
+                    return self.key_event().map(Some);
+                }
+                State::ObjKey => {
+                    self.skip_ws();
+                    return self.key_event().map(Some);
+                }
+                State::ArrFirst => {
+                    self.skip_ws();
+                    if self.peek() == Some(b']') {
+                        self.i += 1;
+                        return Ok(Some(self.close(Frame::Arr)));
+                    }
+                    return self.value_event().map(Some);
+                }
+                State::ArrValue => {
+                    self.skip_ws();
+                    return self.value_event().map(Some);
+                }
+                State::AfterValue => {
+                    self.skip_ws();
+                    match self.stack.last() {
+                        Some(Frame::Obj) => match self.peek() {
+                            Some(b',') => {
+                                self.i += 1;
+                                self.state = State::ObjKey;
+                            }
+                            Some(b'}') => {
+                                self.i += 1;
+                                return Ok(Some(self.close(Frame::Obj)));
+                            }
+                            _ => return Err(self.err("expected ',' or '}'")),
+                        },
+                        Some(Frame::Arr) => match self.peek() {
+                            Some(b',') => {
+                                self.i += 1;
+                                self.state = State::ArrValue;
+                            }
+                            Some(b']') => {
+                                self.i += 1;
+                                return Ok(Some(self.close(Frame::Arr)));
+                            }
+                            _ => return Err(self.err("expected ',' or ']'")),
+                        },
+                        None => unreachable!("AfterValue with an empty stack"),
+                    }
+                }
+                State::Done => {
+                    self.skip_ws();
+                    if self.i != self.b.len() {
+                        return Err(self.err("trailing characters"));
+                    }
+                    return Ok(None);
+                }
+            }
+        }
+    }
+
+    /// Materialize the next value (and everything inside it) as a DOM
+    /// `Json` — the cold-path escape hatch for fields a typed decoder
+    /// does not understand. Non-recursive like the event loop.
+    pub fn parse_value(&mut self) -> Result<Json, JsonError> {
+        enum Holder {
+            Arr(Vec<Json>),
+            Obj(BTreeMap<String, Json>, Option<String>),
+        }
+        let mut stack: Vec<Holder> = Vec::new();
+        loop {
+            let ev = match self.next()? {
+                Some(ev) => ev,
+                None => return Err(self.err("unexpected character")),
+            };
+            let completed: Json = match ev {
+                Event::ObjStart => {
+                    stack.push(Holder::Obj(BTreeMap::new(), None));
+                    continue;
+                }
+                Event::ArrStart => {
+                    stack.push(Holder::Arr(Vec::new()));
+                    continue;
+                }
+                Event::Key(k) => {
+                    match stack.last_mut() {
+                        Some(Holder::Obj(_, slot)) => *slot = Some(k.into_owned()),
+                        _ => unreachable!("key outside an object"),
+                    }
+                    continue;
+                }
+                Event::ObjEnd => match stack.pop() {
+                    Some(Holder::Obj(m, _)) => Json::Obj(m),
+                    _ => unreachable!("unbalanced ObjEnd"),
+                },
+                Event::ArrEnd => match stack.pop() {
+                    Some(Holder::Arr(v)) => Json::Arr(v),
+                    _ => unreachable!("unbalanced ArrEnd"),
+                },
+                Event::Str(s) => Json::Str(s.into_owned()),
+                Event::Num(x) => Json::Num(x),
+                Event::Bool(b) => Json::Bool(b),
+                Event::Null => Json::Null,
+            };
+            match stack.last_mut() {
+                None => return Ok(completed),
+                Some(Holder::Arr(v)) => v.push(completed),
+                Some(Holder::Obj(m, slot)) => {
+                    // last key wins, exactly like the DOM's BTreeMap insert
+                    let k = slot.take().expect("value follows its key");
+                    m.insert(k, completed);
+                }
+            }
+        }
+    }
+
+    /// Consume and discard the next value (unknown fields on the hot
+    /// path). Still validates it fully.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next()? {
+                None => return Err(self.err("unexpected character")),
+                Some(Event::ObjStart | Event::ArrStart) => depth += 1,
+                Some(Event::ObjEnd | Event::ArrEnd) => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Some(Event::Key(_)) => {}
+                Some(_) => {
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    // ----- internals -------------------------------------------------------
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn lit(&mut self, s: &str) -> Result<(), JsonError> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(())
+        } else {
+            Err(self.err("invalid literal"))
+        }
+    }
+
+    fn close(&mut self, frame: Frame) -> Event<'a> {
+        debug_assert_eq!(self.stack.last(), Some(&frame));
+        self.stack.pop();
+        self.state =
+            if self.stack.is_empty() { State::Done } else { State::AfterValue };
+        match frame {
+            Frame::Obj => Event::ObjEnd,
+            Frame::Arr => Event::ArrEnd,
+        }
+    }
+
+    fn end_scalar(&mut self) {
+        self.state =
+            if self.stack.is_empty() { State::Done } else { State::AfterValue };
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.i += 1;
+                self.stack.push(Frame::Obj);
+                self.state = State::ObjFirst;
+                Ok(Event::ObjStart)
+            }
+            Some(b'[') => {
+                self.i += 1;
+                self.stack.push(Frame::Arr);
+                self.state = State::ArrFirst;
+                Ok(Event::ArrStart)
+            }
+            Some(b'"') => {
+                let s = self.string()?;
+                self.end_scalar();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => {
+                self.lit("true")?;
+                self.end_scalar();
+                Ok(Event::Bool(true))
+            }
+            Some(b'f') => {
+                self.lit("false")?;
+                self.end_scalar();
+                Ok(Event::Bool(false))
+            }
+            Some(b'n') => {
+                self.lit("null")?;
+                self.end_scalar();
+                Ok(Event::Null)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let x = self.number()?;
+                self.end_scalar();
+                Ok(Event::Num(x))
+            }
+            _ => Err(self.err("unexpected character")),
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
+        let k = self.string()?;
+        self.skip_ws();
+        self.expect(b':')?;
+        self.skip_ws();
+        self.state = State::Value;
+        Ok(Event::Key(k))
+    }
+
+    /// The DOM parser validates `&input[first_ordinary_char..]` (to the
+    /// *end of the whole input*) at every ordinary string character; one
+    /// check at the first such character is equivalent — every later
+    /// ordinary character sits inside the already-validated suffix —
+    /// and it is what licenses zero-copy slices and `utf8_len` steps.
+    fn ensure_valid_utf8(&mut self) -> Result<(), JsonError> {
+        if self.valid_from.is_none() {
+            if std::str::from_utf8(&self.b[self.i..]).is_err() {
+                return Err(self.err("invalid utf-8"));
+            }
+            self.valid_from = Some(self.i);
+        }
+        Ok(())
+    }
+
+    fn str_slice(&self, a: usize, b: usize) -> &'a str {
+        std::str::from_utf8(&self.b[a..b]).expect("slice was validated as utf-8")
+    }
+
+    fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
+        self.expect(b'"')?;
+        let start = self.i;
+        // set on the first escape: everything before it was clean
+        let mut owned: Option<String> = None;
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let s = match owned {
+                        Some(s) => Cow::Owned(s),
+                        None => Cow::Borrowed(self.str_slice(start, self.i)),
+                    };
+                    self.i += 1;
+                    return Ok(s);
+                }
+                Some(b'\\') => {
+                    let mut s = match owned.take() {
+                        Some(s) => s,
+                        None => self.str_slice(start, self.i).to_string(),
+                    };
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'b') => s.push('\u{8}'),
+                        Some(b'f') => s.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.i + 4 >= self.b.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.b[self.i + 1..self.i + 5])
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.i += 1;
+                    owned = Some(s);
+                }
+                Some(c) => {
+                    self.ensure_valid_utf8()?;
+                    let n = utf8_len(c);
+                    if let Some(s) = owned.as_mut() {
+                        s.push_str(self.str_slice(self.i, self.i + n));
+                    }
+                    self.i += n;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        txt.parse::<f64>().map_err(|_| self.err("invalid number"))
+    }
+}
+
+/// Byte length of a UTF-8 scalar from its leading byte. Only called on
+/// validated input, where a leading byte in `0x80..0xC0` cannot occur
+/// at a character boundary.
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+/// Parse a complete document through the pull parser into a DOM value.
+/// Same values, same error messages and byte positions as
+/// `json::parse` (pinned by `tests/prop_wire.rs`).
+pub fn parse_dom(input: &str) -> Result<Json, JsonError> {
+    let mut p = JsonPull::new(input.as_bytes());
+    let v = p.parse_value()?;
+    match p.next()? {
+        None => Ok(v),
+        Some(_) => unreachable!("top-level value already completed"),
+    }
+}
+
+// ----- direct-write serialization ------------------------------------------
+
+#[derive(Clone, Copy)]
+struct WFrame {
+    obj: bool,
+    first: bool,
+}
+
+/// Streaming JSON writer: emits straight into an `impl io::Write`
+/// buffer with the exact number/escape formatting of `Json::to_string`.
+/// Methods chain (`w.key("ok").bool(true)`); the first I/O error is
+/// held until [`JsonWriter::finish`].
+///
+/// Because `Json::Obj` is a `BTreeMap`, the DOM always serializes
+/// object keys sorted — byte-identical output therefore requires
+/// callers to emit keys in sorted order, which debug builds assert.
+pub struct JsonWriter<W: Write> {
+    w: W,
+    err: Option<io::Error>,
+    stack: Vec<WFrame>,
+    #[cfg(debug_assertions)]
+    keys: Vec<Option<String>>,
+}
+
+impl<W: Write> JsonWriter<W> {
+    pub fn new(w: W) -> JsonWriter<W> {
+        JsonWriter {
+            w,
+            err: None,
+            stack: Vec::new(),
+            #[cfg(debug_assertions)]
+            keys: Vec::new(),
+        }
+    }
+
+    fn raw(&mut self, f: impl FnOnce(&mut W) -> io::Result<()>) {
+        if self.err.is_none() {
+            if let Err(e) = f(&mut self.w) {
+                self.err = Some(e);
+            }
+        }
+    }
+
+    /// Comma management for a value in array (or top-level) position;
+    /// object values get their separator from `key`.
+    fn value_prelude(&mut self) {
+        let need_comma = match self.stack.last_mut() {
+            Some(f) if !f.obj => {
+                let was_first = f.first;
+                f.first = false;
+                !was_first
+            }
+            _ => false,
+        };
+        if need_comma {
+            self.raw(|w| w.write_all(b","));
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.value_prelude();
+        self.raw(|w| w.write_all(b"{"));
+        self.stack.push(WFrame { obj: true, first: true });
+        #[cfg(debug_assertions)]
+        self.keys.push(None);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        let f = self.stack.pop();
+        debug_assert!(matches!(f, Some(WFrame { obj: true, .. })), "end_obj outside object");
+        #[cfg(debug_assertions)]
+        self.keys.pop();
+        self.raw(|w| w.write_all(b"}"));
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.value_prelude();
+        self.raw(|w| w.write_all(b"["));
+        self.stack.push(WFrame { obj: false, first: true });
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        let f = self.stack.pop();
+        debug_assert!(matches!(f, Some(WFrame { obj: false, .. })), "end_arr outside array");
+        self.raw(|w| w.write_all(b"]"));
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        let first = {
+            let top = self.stack.last_mut().expect("key outside object");
+            debug_assert!(top.obj, "key inside array");
+            let was_first = top.first;
+            top.first = false;
+            was_first
+        };
+        #[cfg(debug_assertions)]
+        {
+            let slot = self.keys.last_mut().expect("key outside object");
+            if let Some(prev) = slot {
+                debug_assert!(
+                    prev.as_str() < k,
+                    "object keys must be emitted in sorted order \
+                     (BTreeMap equivalence): {prev:?} then {k:?}"
+                );
+            }
+            *slot = Some(k.to_string());
+        }
+        if !first {
+            self.raw(|w| w.write_all(b","));
+        }
+        self.write_escaped(k);
+        self.raw(|w| w.write_all(b":"));
+        self
+    }
+
+    pub fn null(&mut self) -> &mut Self {
+        self.value_prelude();
+        self.raw(|w| w.write_all(b"null"));
+        self
+    }
+
+    pub fn bool(&mut self, b: bool) -> &mut Self {
+        self.value_prelude();
+        self.raw(|w| w.write_all(if b { b"true" } else { b"false" }));
+        self
+    }
+
+    /// `Json::to_string`'s exact number form: integral values below
+    /// 1e15 in magnitude print as integers, everything else as `{x}`.
+    pub fn num(&mut self, x: f64) -> &mut Self {
+        self.value_prelude();
+        if x.fract() == 0.0 && x.abs() < 1e15 {
+            let i = x as i64;
+            self.raw(|w| write!(w, "{i}"));
+        } else {
+            self.raw(|w| write!(w, "{x}"));
+        }
+        self
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Self {
+        self.value_prelude();
+        self.write_escaped(s);
+        self
+    }
+
+    /// `json::write_escaped`, byte for byte. Scans for the next byte
+    /// needing an escape and bulk-writes the clean run before it (all
+    /// escape-worthy characters are single ASCII bytes, so a byte scan
+    /// is exact).
+    fn write_escaped(&mut self, s: &str) {
+        self.raw(|w| {
+            w.write_all(b"\"")?;
+            let bytes = s.as_bytes();
+            let mut run = 0;
+            for (i, &b) in bytes.iter().enumerate() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    w.write_all(&bytes[run..i])?;
+                    match b {
+                        b'"' => w.write_all(b"\\\"")?,
+                        b'\\' => w.write_all(b"\\\\")?,
+                        b'\n' => w.write_all(b"\\n")?,
+                        b'\r' => w.write_all(b"\\r")?,
+                        b'\t' => w.write_all(b"\\t")?,
+                        _ => write!(w, "\\u{:04x}", b)?,
+                    }
+                    run = i + 1;
+                }
+            }
+            w.write_all(&bytes[run..])?;
+            w.write_all(b"\"")
+        });
+    }
+
+    /// Finish, returning the sink (or the first deferred I/O error).
+    pub fn finish(self) -> io::Result<W> {
+        debug_assert!(self.stack.is_empty(), "unclosed container at finish");
+        match self.err {
+            Some(e) => Err(e),
+            None => Ok(self.w),
+        }
+    }
+}
+
+impl JsonWriter<Vec<u8>> {
+    /// In-memory sink convenience: writing to a `Vec` cannot fail, and
+    /// the writer only ever emits valid UTF-8.
+    pub fn into_string(self) -> String {
+        let buf = self.finish().expect("Vec sink never errors");
+        String::from_utf8(buf).expect("writer emits utf-8")
+    }
+
+    /// Close the outer object opened by [`obj_writer`] and return the
+    /// response string.
+    pub fn finish_obj(mut self) -> String {
+        self.end_obj();
+        self.into_string()
+    }
+}
+
+/// Start a direct-write JSON object response in a reserved buffer.
+pub fn obj_writer(capacity: usize) -> JsonWriter<Vec<u8>> {
+    let mut w = JsonWriter::new(Vec::with_capacity(capacity));
+    w.begin_obj();
+    w
+}
+
+/// Serialize-self into a [`JsonWriter`] — the write-trait half of the
+/// wire layer. Implementors must emit object keys in sorted order (see
+/// [`JsonWriter`]).
+pub trait JsonWrite {
+    fn write_json<W: Write>(&self, w: &mut JsonWriter<W>);
+
+    /// Render into a fresh reserved buffer.
+    fn to_wire_string(&self) -> String {
+        let mut w = JsonWriter::new(Vec::with_capacity(128));
+        self.write_json(&mut w);
+        w.into_string()
+    }
+}
+
+impl JsonWrite for Json {
+    fn write_json<W: Write>(&self, w: &mut JsonWriter<W>) {
+        match self {
+            Json::Null => {
+                w.null();
+            }
+            Json::Bool(b) => {
+                w.bool(*b);
+            }
+            Json::Num(x) => {
+                w.num(*x);
+            }
+            Json::Str(s) => {
+                w.str(s);
+            }
+            Json::Arr(v) => {
+                w.begin_arr();
+                for x in v {
+                    x.write_json(w);
+                }
+                w.end_arr();
+            }
+            Json::Obj(m) => {
+                w.begin_obj();
+                for (k, v) in m {
+                    w.key(k);
+                    v.write_json(w);
+                }
+                w.end_obj();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn events(src: &str) -> Result<Vec<Event<'_>>, JsonError> {
+        let mut p = JsonPull::new(src.as_bytes());
+        let mut out = Vec::new();
+        while let Some(ev) = p.next()? {
+            out.push(ev);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn pull_yields_expected_events() {
+        let evs = events(r#"{"a":[1,true,null],"b":"x"}"#).unwrap();
+        assert_eq!(
+            evs,
+            vec![
+                Event::ObjStart,
+                Event::Key(Cow::Borrowed("a")),
+                Event::ArrStart,
+                Event::Num(1.0),
+                Event::Bool(true),
+                Event::Null,
+                Event::ArrEnd,
+                Event::Key(Cow::Borrowed("b")),
+                Event::Str(Cow::Borrowed("x")),
+                Event::ObjEnd,
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_are_zero_copy_until_escaped() {
+        // no escapes (even non-ASCII): borrowed straight from the input
+        let src = "[\"plain \u{e9}\",\"esc\\n\"]";
+        let mut p = JsonPull::new(src.as_bytes());
+        assert_eq!(p.next().unwrap(), Some(Event::ArrStart));
+        match p.next().unwrap().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain \u{e9}"),
+            other => panic!("expected borrowed: {other:?}"),
+        }
+        // an escape forces materialization
+        match p.next().unwrap().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_dom_matches_json_parse_on_valid_docs() {
+        for src in [
+            r#"{"a":[1,2.5,-3e2],"b":"x\"y","c":true,"d":null,"e":{}}"#,
+            r#"[]"#,
+            r#"{}"#,
+            r#"  [ 1 , { "k" : [ true ] } ]  "#,
+            r#""A\n\tπ""#,
+            "3.25",
+            "null",
+            r#"{"dup":1,"dup":2}"#,
+        ] {
+            let dom = json::parse(src).unwrap();
+            let pulled = parse_dom(src).unwrap();
+            assert_eq!(dom, pulled, "{src}");
+        }
+    }
+
+    #[test]
+    fn errors_match_dom_positions() {
+        for src in [
+            "{", "[1,]", "12 34", "'single'", r#"{"a" 1}"#, "", "[1 2]",
+            r#"{"a":1,}"#, "tru", r#""unterminated"#, r#""bad \q""#,
+            r#""bad \u00"#, "-", "1e", "[",
+        ] {
+            let dom_err = json::parse(src).unwrap_err();
+            let pull_err = parse_dom(src).unwrap_err();
+            assert_eq!(dom_err.pos, pull_err.pos, "{src:?}");
+            assert_eq!(dom_err.msg, pull_err.msg, "{src:?}");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_does_not_recurse() {
+        // far beyond what the recursive DOM parser could survive is not
+        // testable differentially; match its tested depth and beyond
+        let src = "[".repeat(200) + &"]".repeat(200);
+        assert!(parse_dom(&src).is_ok());
+    }
+
+    #[test]
+    fn skip_value_consumes_exactly_one_value() {
+        let mut p = JsonPull::new(br#"{"skip":{"deep":[1,{"x":2}]},"keep":7}"#.as_slice());
+        assert_eq!(p.next().unwrap(), Some(Event::ObjStart));
+        assert!(matches!(p.next().unwrap(), Some(Event::Key(k)) if k == "skip"));
+        p.skip_value().unwrap();
+        assert!(matches!(p.next().unwrap(), Some(Event::Key(k)) if k == "keep"));
+        assert_eq!(p.next().unwrap(), Some(Event::Num(7.0)));
+        assert_eq!(p.next().unwrap(), Some(Event::ObjEnd));
+        assert_eq!(p.next().unwrap(), None);
+    }
+
+    #[test]
+    fn writer_matches_dom_serialization() {
+        for src in [
+            r#"{"a":[1,2.5,-3e2],"b":"x\"y","c":true,"d":null,"e":{}}"#,
+            r#"{"s":"ab\nπ","big":1e300,"neg":-0.5}"#,
+            "[[],{},[null]]",
+        ] {
+            let v = json::parse(src).unwrap();
+            assert_eq!(v.to_wire_string(), v.to_string(), "{src}");
+        }
+        assert_eq!(Json::Num(3.0).to_wire_string(), "3");
+        assert_eq!(Json::Num(3.25).to_wire_string(), "3.25");
+        assert_eq!(Json::Num(-0.0).to_wire_string(), "0");
+    }
+
+    #[test]
+    fn writer_chains_and_manages_commas() {
+        let mut w = obj_writer(64);
+        w.key("a").num(1.0);
+        w.key("b").begin_arr().num(1.0).str("two").begin_obj().end_obj().end_arr();
+        w.key("c").bool(false);
+        assert_eq!(w.finish_obj(), r#"{"a":1,"b":[1,"two",{}],"c":false}"#);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "sorted order")]
+    fn writer_asserts_sorted_keys() {
+        let mut w = obj_writer(16);
+        w.key("b").num(1.0);
+        w.key("a").num(2.0);
+        let _ = w.finish_obj();
+    }
+
+    #[test]
+    fn invalid_utf8_bytes_never_parse() {
+        // a pull parse over invalid UTF-8 must fail (the DOM path is
+        // only ever handed &str); the whole-suffix check fires at the
+        // first ordinary string character — here the key's 'k'
+        let mut bad = b"{\"k\":\"a".to_vec();
+        bad.push(0xff);
+        bad.extend_from_slice(b"\"}");
+        let mut p = JsonPull::new(&bad);
+        let mut err = None;
+        loop {
+            match p.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => break,
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let err = err.expect("must fail");
+        assert_eq!(err.msg, "invalid utf-8");
+        assert_eq!(err.pos, 2, "fails at the first ordinary string char");
+        // outside strings: plain syntax error
+        assert!(JsonPull::new(&[0xff, 0xfe]).next().is_err());
+    }
+}

@@ -1,0 +1,414 @@
+//! Differential fuzz for the streaming wire layer (`util::wire` and the
+//! typed decoders built on it): the pull parser agrees with the DOM
+//! parser byte-for-byte — same values on valid input, same error
+//! message *and* byte position on truncated/malformed input — the
+//! direct-write serializer reproduces `Json::to_string` exactly, the
+//! typed instance/delta decoders only ever succeed where the DOM
+//! succeeds with the identical result, and both service entry points
+//! answer identically with canonical (sorted-key, re-serializable)
+//! responses.
+
+use tlrs::coordinator::config::Backend;
+use tlrs::coordinator::planner::Planner;
+use tlrs::coordinator::service;
+use tlrs::io::delta::{delta_from_json, delta_from_slice, delta_to_json};
+use tlrs::io::files;
+use tlrs::io::synth::{generate, SynthParams};
+use tlrs::model::{DemandSeg, Instance, Task};
+use tlrs::util::json::{self, Json};
+use tlrs::util::rng::Rng;
+use tlrs::util::wire::{parse_dom, JsonWrite};
+
+// ---------- generators ----------------------------------------------------
+
+fn gen_string(rng: &mut Rng) -> String {
+    const POOL: &[&str] = &[
+        "a", "b", "Z", "0", " ", "\"", "\\", "\n", "\t", "\r", "\u{8}", "\u{c}", "/",
+        "é", "日", "🦀", "\u{fffd}", "\u{1}", "\u{1f}",
+    ];
+    let n = rng.below(8);
+    (0..n).map(|_| POOL[rng.below(POOL.len() as u64) as usize]).collect()
+}
+
+fn gen_num(rng: &mut Rng) -> f64 {
+    match rng.below(6) {
+        0 => rng.below(1000) as f64,
+        1 => -(rng.below(1000) as f64),
+        2 => rng.uniform(-1e6, 1e6),
+        3 => rng.uniform(0.0, 1.0),
+        // beyond 2^53: exercises the integer-formatting boundary and
+        // the as_usize safety cutoff
+        4 => rng.below(1 << 60) as f64,
+        _ => rng.uniform(-1.0, 1.0) * 1e-9,
+    }
+}
+
+fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+    let pick = if depth == 0 { rng.below(5) } else { rng.below(7) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(gen_num(rng)),
+        3 | 4 => Json::Str(gen_string(rng)),
+        5 => Json::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|_| (gen_string(rng), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+/// A random char-boundary byte index into `s` (0..=len).
+fn boundary(s: &str, rng: &mut Rng) -> usize {
+    let mut i = rng.below(s.len() as u64 + 1) as usize;
+    while !s.is_char_boundary(i) {
+        i += 1;
+    }
+    i
+}
+
+/// Mutate a text while staying valid UTF-8: truncate at a boundary,
+/// splice a random printable ASCII byte, or overwrite one.
+fn mutate(text: &str, rng: &mut Rng) -> String {
+    let mut s = text.to_string();
+    match rng.below(3) {
+        0 => {
+            s.truncate(boundary(&s, rng));
+        }
+        1 => {
+            let pos = boundary(&s, rng);
+            s.insert(pos, (rng.below(95) + 32) as u8 as char);
+        }
+        _ => {
+            let pos = boundary(&s, rng);
+            if pos < s.len() {
+                let end = pos + s[pos..].chars().next().unwrap().len_utf8();
+                s.replace_range(pos..end, &((rng.below(95) + 32) as u8 as char).to_string());
+            }
+        }
+    }
+    s
+}
+
+// ---------- parser vs DOM -------------------------------------------------
+
+fn assert_parsers_agree(text: &str) {
+    match (parse_dom(text), json::parse(text)) {
+        (Ok(a), Ok(b)) => assert_eq!(a, b, "value mismatch on {text:?}"),
+        (Err(a), Err(b)) => assert_eq!(
+            format!("{a}"),
+            format!("{b}"),
+            "error mismatch on {text:?}"
+        ),
+        (a, b) => panic!("pull/DOM disagreement on {text:?}: {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn pull_parser_matches_dom_on_random_documents_and_mutations() {
+    for seed in 0..150u64 {
+        let mut rng = Rng::new(seed + 1);
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        assert_parsers_agree(&text);
+        assert_parsers_agree(&format!("  {text} \t"));
+        for _ in 0..6 {
+            assert_parsers_agree(&mutate(&text, &mut rng));
+        }
+    }
+}
+
+#[test]
+fn pull_parser_matches_dom_on_handwritten_edge_cases() {
+    // the canonical serializer never emits these spellings, so cover
+    // them explicitly: every escape form, number grammar edges, nesting
+    // and truncation errors
+    const CASES: &[&str] = &[
+        r#""Aé\ud83e""#, // \u escapes incl. a lone surrogate (-> U+FFFD)
+        r#""\b\f\/\n\r\t\"\\""#,
+        r#""\q""#,   // bad escape
+        r#""\u00""#, // truncated \u
+        r#""\u00zz""#,
+        "\"unterminated",
+        "\"\\\"",
+        "1e5", "1E+5", "1e-5", "-0.5", "-0", "0.0", "01", "1.", "1e", "-", "+1",
+        "9007199254740993", "1e999", "-1e999", // overflow -> inf is a parse_f64 artifact both share
+        "[1,2,]", "[,1]", "[1 2]", "[", "]", "[]", "[ ]",
+        "{", "}", "{}", "{ }", r#"{"a"}"#, r#"{"a":}"#, r#"{"a":1,}"#, r#"{"a":1"#,
+        r#"{"a":1 "b":2}"#, r#"{1:2}"#, r#"{"a":1,"a":2}"#,
+        "tru", "truex", "true false", "null", "nul", "false",
+        "  ", "", "\t\n\r ", "{]", "[}",
+        r#"{"a":[{"b":[[]]}]}"#,
+        r#"{"é":"日🦀"}"#,
+        "3 ", " 3x",
+    ];
+    for text in CASES {
+        assert_parsers_agree(text);
+    }
+    // deep nesting: the pull parser must not recurse
+    let deep = format!("{}1{}", "[".repeat(3000), "]".repeat(3000));
+    assert_parsers_agree(&deep);
+}
+
+// ---------- writer vs DOM -------------------------------------------------
+
+#[test]
+fn direct_writer_matches_dom_serialization_on_random_values() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(seed + 7);
+        let v = gen_value(&mut rng, 3);
+        assert_eq!(v.to_wire_string(), v.to_string(), "seed {seed}");
+    }
+}
+
+// ---------- typed instance decoder ----------------------------------------
+
+fn shaped(inst: &Instance) -> Instance {
+    let tasks = inst
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(i, u)| {
+            if i % 2 == 0 || u.span_len() < 2 {
+                return u.clone();
+            }
+            let mid = u.start + u.span_len() / 2;
+            Task::piecewise(
+                u.id,
+                vec![
+                    DemandSeg { start: u.start, end: mid - 1, demand: u.peak().to_vec() },
+                    DemandSeg { start: mid, end: u.end, demand: u.peak().to_vec() },
+                ],
+            )
+        })
+        .collect();
+    Instance::new(tasks, inst.node_types.clone(), inst.horizon)
+}
+
+#[test]
+fn instance_decoder_matches_dom_on_canonical_and_mutated_texts() {
+    for seed in 1..=8u64 {
+        let flat = generate(&SynthParams { n: 12, m: 3, ..Default::default() }, seed);
+        for inst in [flat.clone(), shaped(&flat)] {
+            let text = files::instance_to_wire_string(&inst);
+            // serializer differential
+            assert_eq!(text, files::instance_to_json(&inst).to_string(), "seed {seed}");
+            // the hot path must take its own canonical output
+            let back = files::instance_from_slice(text.as_bytes())
+                .expect("canonical instance text must stream-decode");
+            assert_eq!(
+                files::instance_to_json(&back),
+                files::instance_to_json(&inst),
+                "seed {seed}"
+            );
+            // typed success on a mutation implies the DOM agrees exactly
+            let mut rng = Rng::new(seed ^ 0xA5A5);
+            for _ in 0..60 {
+                let m = mutate(&text, &mut rng);
+                if let Some(fast) = files::instance_from_slice(m.as_bytes()) {
+                    let dom = json::parse(&m)
+                        .ok()
+                        .and_then(|v| files::instance_from_json(&v).ok())
+                        .expect("typed decode succeeded where the DOM fails");
+                    assert_eq!(
+                        files::instance_to_json(&fast),
+                        files::instance_to_json(&dom),
+                        "on {m:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------- typed delta decoder -------------------------------------------
+
+#[test]
+fn delta_decoder_matches_dom_on_canonical_and_mutated_texts() {
+    const VALID: &[&str] = &[
+        r#"{"op":"admit","tasks":[{"id":9,"start":0,"end":3,"demand":[1.0,2.0]}]}"#,
+        r#"{"op":"admit","tasks":[{"id":1,"start":2,"end":2,"demand":[0.5]},{"id":2,"start":0,"end":1,"demand":[3]}]}"#,
+        r#"{"op":"admit","tasks":[{"id":4,"segments":[{"start":1,"end":2,"demand":[1]},{"start":3,"end":5,"demand":[2]}]}]}"#,
+        r#"{"op":"retire","ids":[1,2,3]}"#,
+        r#"{"op":"reshape","id":7,"demand":[2.5],"start":1,"end":4}"#,
+        r#"{"op":"reshape","id":7,"segments":[{"start":0,"end":1,"demand":[1]},{"start":2,"end":3,"demand":[4]}]}"#,
+        r#"{"op":"reshape","id":7,"segments":null,"demand":[1],"start":0,"end":2}"#,
+        r#"{"op":"reprice","node_types":[{"name":"m1","capacity":[8.0,16.0],"cost":3.5}]}"#,
+    ];
+    for text in VALID {
+        let fast = delta_from_slice(text.as_bytes())
+            .unwrap_or_else(|| panic!("hot path must decode {text}"));
+        let dom = delta_from_json(&json::parse(text).unwrap()).unwrap();
+        assert_eq!(delta_to_json(&fast), delta_to_json(&dom), "on {text}");
+
+        let mut rng = Rng::new(text.len() as u64);
+        for _ in 0..80 {
+            let m = mutate(text, &mut rng);
+            if let Some(fast) = delta_from_slice(m.as_bytes()) {
+                let dom = json::parse(&m)
+                    .ok()
+                    .and_then(|v| delta_from_json(&v).ok())
+                    .expect("typed delta decode succeeded where the DOM fails");
+                assert_eq!(delta_to_json(&fast), delta_to_json(&dom), "on {m:?}");
+            }
+        }
+    }
+    // shapes the typed path must hand back to the DOM (which errors)
+    const INVALID: &[&str] = &[
+        r#"{"op":"admit","tasks":[{"id":-1,"start":0,"end":1,"demand":[1]}]}"#,
+        r#"{"op":"admit","tasks":[{"id":9007199254740994,"start":0,"end":1,"demand":[1]}]}"#,
+        r#"{"op":"admit","tasks":[]}"#,
+        r#"{"op":"retire","ids":[]}"#,
+        r#"{"op":"reshape","id":1,"segments":null}"#,
+        r#"{"op":"reshape","id":1,"demand":[1],"start":0}"#,
+        r#"{"op":"nope"}"#,
+        r#"{"tasks":[]}"#,
+    ];
+    for text in INVALID {
+        assert!(delta_from_slice(text.as_bytes()).is_none(), "{text}");
+        assert!(
+            delta_from_json(&json::parse(text).unwrap()).is_err(),
+            "{text} should be a DOM grammar error"
+        );
+    }
+}
+
+// ---------- the service envelope ------------------------------------------
+
+/// Drop every `seconds` field (the only nondeterministic response
+/// content) so two runs of the same request compare equal.
+fn strip_seconds(resp: &str) -> Json {
+    fn strip(v: &mut Json) {
+        match v {
+            Json::Obj(m) => {
+                m.remove("seconds");
+                for x in m.values_mut() {
+                    strip(x);
+                }
+            }
+            Json::Arr(a) => {
+                for x in a.iter_mut() {
+                    strip(x);
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut v = json::parse(resp).unwrap_or_else(|e| panic!("unparsable response {resp}: {e}"));
+    strip(&mut v);
+    v
+}
+
+#[test]
+fn service_entry_points_agree_and_responses_are_canonical() {
+    let planner = Planner::new(Backend::Native).unwrap();
+    let inst = generate(&SynthParams { n: 8, m: 2, ..Default::default() }, 7);
+    let inst_text = files::instance_to_wire_string(&inst);
+    let corpus: Vec<(String, &str)> = vec![
+        (format!("{{\"instance\":{inst_text},\"algorithm\":\"penalty-map-f\"}}"), "solve"),
+        (format!(" {{\"instance\": {inst_text} ,\"algorithm\":\"penalty-map-f\"}} "), "solve"),
+        // empty deltas array: streaming bails, the DOM path answers
+        (
+            format!("{{\"deltas\":[],\"instance\":{inst_text},\"algorithm\":\"penalty-map-f\"}}"),
+            "solve",
+        ),
+        ("{\"workload\":\"warp:n=6\",\"seed\":2,\"algorithm\":\"penalty-map-f\"}".into(), "solve"),
+        ("{\"op\":\"stats\"}".into(), "stats"),
+        ("{\"op\":\"shutdown\"}".into(), "shutdown"), // error: no runtime ctl
+        ("{\"op\":\"bogus\"}".into(), "invalid"),
+        ("{\"op\":3}".into(), "invalid"),
+        ("{}".into(), "solve"),                       // needs instance/workload
+        (format!("{{\"instance\":{inst_text},\"workload\":\"warp:n=6\"}}"), "solve"),
+        ("{\"instance\":3}".into(), "solve"),
+        ("{\"instance\":null}".into(), "solve"),
+        ("not json".into(), "invalid"),
+        ("[1,2]".into(), "solve"),                    // non-object request
+        ("{\"op\":\"close\",\"session\":99}".into(), "close"),
+        ("{\"op\":\"delta\",\"session\":99}".into(), "delta"),
+        ("{\"op\":\"query\",\"session\":99,\"delta\":{\"op\":\"retire\",\"ids\":[1]}}".into(), "query"),
+    ];
+    for (line, want_verb) in &corpus {
+        let (a, va) = service::handle_request_with(&planner, line, None);
+        let (b, vb) = service::handle_request_bytes(&planner, line.as_bytes(), None).unwrap();
+        assert_eq!(va, want_verb, "verb for {line}");
+        assert_eq!(va, vb, "verb split for {line}");
+        // canonical: the direct-written response re-serializes to
+        // itself through the DOM (sorted keys, same number/escape form)
+        assert_eq!(json::parse(&a).unwrap().to_string(), a, "non-canonical: {a}");
+        if a.contains("\"ok\":false") {
+            // deterministic error paths: byte-identical across entries
+            assert_eq!(a, b, "for {line}");
+        } else {
+            assert_eq!(strip_seconds(&a), strip_seconds(&b), "for {line}");
+        }
+    }
+
+    // typed fast path vs forced DOM fallback: same solve, same answer
+    let (fast, _) = service::handle_request_with(
+        &planner,
+        &format!("{{\"instance\":{inst_text},\"algorithm\":\"penalty-map-f\"}}"),
+        None,
+    );
+    let (dom, _) = service::handle_request_with(
+        &planner,
+        &format!("{{\"deltas\":[],\"instance\":{inst_text},\"algorithm\":\"penalty-map-f\"}}"),
+        None,
+    );
+    assert!(fast.contains("\"ok\":true"), "{fast}");
+    assert_eq!(strip_seconds(&fast), strip_seconds(&dom));
+
+    // invalid UTF-8 only errors on the bytes entry (the &str entry
+    // cannot receive it); message matches the legacy runtime's
+    let err = service::handle_request_bytes(&planner, b"{\"op\":\"stats\"\xff}", None)
+        .expect_err("invalid UTF-8 must be a connection error");
+    assert!(
+        err.to_string().starts_with("request line is not valid UTF-8"),
+        "{err}"
+    );
+}
+
+#[test]
+fn session_roundtrip_over_the_bytes_entry() {
+    let planner = Planner::new(Backend::Native).unwrap();
+    let inst = generate(&SynthParams { n: 8, m: 2, ..Default::default() }, 3);
+    let inst_text = files::instance_to_wire_string(&inst);
+
+    let open = format!("{{\"op\":\"open\",\"instance\":{inst_text},\"algorithm\":\"penalty-map-f\"}}");
+    let (resp, verb) = service::handle_request_bytes(&planner, open.as_bytes(), None).unwrap();
+    assert_eq!(verb, "open");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{resp}");
+    assert_eq!(v.to_string(), resp, "non-canonical open response");
+    let sid = v.get("session").as_f64().unwrap() as u64;
+
+    // one typed delta batch: array form, mixed ops
+    let batch = format!(
+        "{{\"op\":\"delta\",\"session\":{sid},\"deltas\":[\
+         {{\"op\":\"admit\",\"tasks\":[{{\"id\":9001,\"start\":0,\"end\":2,\"demand\":[0.5,0.5]}}]}},\
+         {{\"op\":\"retire\",\"ids\":[9001]}}]}}"
+    );
+    let (resp, verb) = service::handle_request_bytes(&planner, batch.as_bytes(), None).unwrap();
+    assert_eq!(verb, "delta");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{resp}");
+    assert_eq!(v.to_string(), resp, "non-canonical delta response");
+    assert_eq!(v.get("applied").as_arr().map(|a| a.len()), Some(2), "{resp}");
+
+    let query = format!(
+        "{{\"op\":\"query\",\"session\":{sid},\"delta\":{{\"op\":\"retire\",\"ids\":[{}]}}}}",
+        inst.tasks[0].id
+    );
+    let (resp, verb) = service::handle_request_bytes(&planner, query.as_bytes(), None).unwrap();
+    assert_eq!(verb, "query");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{resp}");
+    assert_eq!(v.to_string(), resp, "non-canonical query response");
+
+    let close = format!("{{\"op\":\"close\",\"session\":{sid}}}");
+    let (resp, verb) = service::handle_request_bytes(&planner, close.as_bytes(), None).unwrap();
+    assert_eq!(verb, "close");
+    let v = json::parse(&resp).unwrap();
+    assert_eq!(v.get("ok"), &Json::Bool(true), "{resp}");
+    assert_eq!(v.to_string(), resp, "non-canonical close response");
+}

@@ -4,15 +4,17 @@
 # over PR (placement records the decomposed-vs-monolithic sweep up to
 # n = 10^6 plus the bucketed-index and SoA-store deltas; service records
 # solve throughput/latency through the concurrent runtime at 1/4/16
-# clients and the concurrent-vs-sequential speedup).
+# clients and the concurrent-vs-sequential speedup; wire records the
+# streaming pull-parse/direct-write layer against the DOM it replaces,
+# with bytes/sec and exact allocation counts).
 #
 #   TLRS_BENCH_QUICK=1  shrink budgets to the tier-1 smoke sizes
 #   BENCH_ONLY=<name>   run a single bench target (placement, session,
-#                       end_to_end, lp_solvers, service)
+#                       end_to_end, lp_solvers, service, wire)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-BENCHES=(placement session end_to_end lp_solvers service)
+BENCHES=(placement session end_to_end lp_solvers service wire)
 if [[ -n "${BENCH_ONLY:-}" ]]; then
     BENCHES=("$BENCH_ONLY")
 fi

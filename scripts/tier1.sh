@@ -140,11 +140,47 @@ exec 3<&- 3>&-
 wait "$SRV_PID"
 echo "service runtime smoke: solve/stats/shutdown OK, server drained clean"
 
+echo "== tier1: large-instance solve-over-service smoke =="
+# a 20k-task inline instance streamed over one request line exercises
+# the wire layer's typed instance decoder at service scale (the request
+# is far past any small-buffer path) plus the decomposed solve
+"$TLRS" gen --workload synth:n=20000,m=4,dims=2 --seed 6 --out "$GEN_DIR/big.json"
+"$TLRS" serve --addr 127.0.0.1:0 --workers 2 --queue 4 --allow-shutdown \
+    --backend native > "$SRV_LOG" 2>&1 &
+SRV_PID=$!
+for _ in $(seq 1 100); do
+    grep -q "tlrs planning service on" "$SRV_LOG" && break
+    sleep 0.1
+done
+grep -q "tlrs planning service on" "$SRV_LOG"
+PORT=$(sed -n 's/.*127\.0\.0\.1:\([0-9]*\).*/\1/p' "$SRV_LOG" | head -1)
+exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+{ printf '%s' '{"algorithm":"penalty-map-f","decompose":"size:8","instance":'; \
+  cat "$GEN_DIR/big.json"; printf '%s\n' '}'; } >&3
+IFS= read -r RESP <&3
+echo "$RESP" | grep -q '"ok":true'
+echo "$RESP" | grep -q '"decompose":"size:8"'
+printf '%s\n' '{"op":"shutdown"}' >&3
+IFS= read -r RESP <&3
+echo "$RESP" | grep -q '"draining":true'
+exec 3<&- 3>&-
+wait "$SRV_PID"
+echo "large-instance service smoke: 20k-task solve OK"
+
 echo "== tier1: session bench smoke =="
 TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
     cargo bench --bench session
 test -f BENCH_session.json
 head -c 400 BENCH_session.json
+echo
+
+echo "== tier1: wire bench smoke =="
+# quick-mode run of the streaming-vs-DOM wire benches; the bench itself
+# asserts the streaming paths allocate materially less than the DOM
+TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+    cargo bench --bench wire
+test -f BENCH_wire.json
+head -c 400 BENCH_wire.json
 echo
 
 echo "== tier1: placement bench smoke =="
