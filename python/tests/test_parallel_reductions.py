@@ -1,0 +1,164 @@
+"""Fuzz mirror for PR 9's deterministic-reduction contract (lp/pdhg.rs).
+
+The parallel PDHG engine claims bit-identical results at every thread
+count because (a) blocks write disjoint outputs and only interchange
+*independent* iterations, (b) every scalar f64 sum keeps its serial
+per-element order (per-chunk/per-block local accumulators combined in
+fixed index order), and (c) max reductions split into 0.0-baseline
+chunk partials folded in chunk order, exact because f64::max is
+associative (including its NaN-dropping semantics).
+
+Python floats are IEEE-754 binary64 like Rust f64, so the claims are
+checkable here bit-for-bit: each test mirrors one Rust kernel's serial
+order and its chunked/blocked decomposition (with blocks executed in a
+*shuffled* order, mimicking scheduling nondeterminism) and asserts the
+bit patterns agree. Run: python3 python/tests/test_parallel_reductions.py
+"""
+
+import math
+import random
+import struct
+
+TASK_CHUNK = 1024  # mirrors pdhg::TASK_CHUNK
+
+
+def bits(x):
+    return struct.pack("<d", x)
+
+
+def f64_max(a, b):
+    # Rust f64::max: NaN-dropping (if one arg is NaN, the other wins).
+    if math.isnan(a):
+        return b
+    if math.isnan(b):
+        return a
+    return max(a, b)
+
+
+def chunks(n, width=TASK_CHUNK):
+    return [(s, min(s + width, n)) for s in range(0, n, width)]
+
+
+def test_max_by_chunks(trials=400):
+    """max_by_chunks: 0.0-baseline chunk partials folded in chunk order
+    == the serial 0.0-init fold, bitwise, incl. NaN/inf elements."""
+    rng = random.Random(11)
+    for t in range(trials):
+        n = rng.randrange(1, 5000)
+        vals = []
+        for _ in range(n):
+            r = rng.random()
+            if r < 0.02:
+                vals.append(float("nan"))
+            elif r < 0.04:
+                vals.append(float("inf"))
+            else:
+                # residual-like: non-negative magnitudes across scales
+                vals.append(abs(rng.gauss(0, 1)) * 10 ** rng.randrange(-12, 12))
+        serial = 0.0
+        for v in vals:
+            serial = f64_max(serial, v)
+        block_ix = list(range(len(chunks(n))))
+        rng.shuffle(block_ix)  # blocks run in any order...
+        partials = {}
+        for b in block_ix:
+            s, e = chunks(n)[b]
+            acc = 0.0
+            for v in vals[s:e]:
+                acc = f64_max(acc, v)
+            partials[b] = acc
+        par = 0.0
+        for b in range(len(chunks(n))):  # ...but combine in chunk order
+            par = f64_max(par, partials[b])
+        assert bits(serial) == bits(par), f"trial {t}: {serial} vs {par}"
+
+
+def test_chunked_row_accumulation(trials=200):
+    """The primal step's per-task row sum: serial `rows[i] += x[b*n+i]`
+    b-ascending == per-chunk local accumulator, any chunk order."""
+    rng = random.Random(23)
+    for t in range(trials):
+        n = rng.randrange(1, 3000)
+        m = rng.randrange(1, 7)
+        x = [rng.gauss(0, 1) * 10 ** rng.randrange(-8, 8) for _ in range(m * n)]
+        serial = [0.0] * n
+        for i in range(n):
+            row = 0.0
+            for b in range(m):
+                row += x[b * n + i]
+            serial[i] = row
+        par = [0.0] * n
+        block_ix = list(range(len(chunks(n))))
+        rng.shuffle(block_ix)
+        for c in block_ix:
+            s, e = chunks(n)[c]
+            for i in range(s, e):
+                acc = 0.0
+                for b in range(m):  # same b-ascending per-element order
+                    acc += x[b * n + i]
+                par[i] = acc
+        for i in range(n):
+            assert bits(serial[i]) == bits(par[i]), f"trial {t} row {i}"
+
+
+def test_blocked_prefix_lanes(trials=200):
+    """forward/adjoint (b,d)-blocks: diff+prefix lanes write disjoint
+    outputs, so executing blocks in any order is bitwise identical."""
+    rng = random.Random(37)
+    for t in range(trials):
+        m = rng.randrange(1, 5)
+        dims = rng.randrange(1, 4)
+        T = rng.randrange(2, 40)
+        segs = []
+        for _ in range(rng.randrange(1, 200)):
+            s = rng.randrange(0, T)
+            e = rng.randrange(s, T)
+            segs.append((s, e, rng.random() * 10 ** rng.randrange(-6, 6)))
+
+        def run(order):
+            out = [0.0] * (m * dims * (T + 1))
+            for k in order:
+                b, d = divmod(k, dims)
+                lane = k * (T + 1)
+                # diff scatter then prefix, exactly like forward_tm
+                for (s, e, r) in segs:
+                    out[lane + s] += r * (b + 1) * (d + 1)
+                    out[lane + e + 1] -= r * (b + 1) * (d + 1)
+                for ts in range(1, T + 1):
+                    out[lane + ts] += out[lane + ts - 1]
+            return out
+
+        serial = run(list(range(m * dims)))
+        shuffled = list(range(m * dims))
+        rng.shuffle(shuffled)
+        par = run(shuffled)
+        for i, (a, b2) in enumerate(zip(serial, par)):
+            assert bits(a) == bits(b2), f"trial {t} lane elem {i}"
+
+
+def test_serial_ga_combine(trials=200):
+    """adjoint's ga[b] = sum_d ga_part[b*dims+d], combined serially in
+    d-ascending order after the parallel phase == the pre-PR in-place
+    `ga[b] += prefix[T]` accumulation in d-ascending order."""
+    rng = random.Random(53)
+    for t in range(trials):
+        m = rng.randrange(1, 8)
+        dims = rng.randrange(1, 6)
+        part = [rng.gauss(0, 1) * 10 ** rng.randrange(-10, 10)
+                for _ in range(m * dims)]
+        for b in range(m):
+            old = 0.0
+            for d in range(dims):  # pre-PR order
+                old += part[b * dims + d]
+            new = 0.0
+            for d in range(dims):  # fixed-order combine of block partials
+                new += part[b * dims + d]
+            assert bits(old) == bits(new), f"trial {t} type {b}"
+
+
+if __name__ == "__main__":
+    test_max_by_chunks()
+    test_chunked_row_accumulation()
+    test_blocked_prefix_lanes()
+    test_serial_ga_combine()
+    print("parallel-reduction mirror: all fuzz checks passed")

@@ -1,0 +1,104 @@
+//! Parallel PDHG engine bench: fixed-iteration solves of one large
+//! shaped mapping LP at 1/2/4/8 worker threads (bit-identical results,
+//! so the comparison is pure wall-clock), plus the parallel ratio-table
+//! build. Writes `BENCH_lp.json` with `parallel_lp_speedup` (serial
+//! time over the best parallel time) so the perf trajectory is tracked
+//! PR over PR. `TLRS_BENCH_QUICK=1` shrinks the instance and budgets
+//! for the tier-1 smoke.
+
+use tlrs::io::workload;
+use tlrs::lp::{pdhg, scaling, MappingLp, PdhgOptions};
+use tlrs::model::trim;
+use tlrs::util::bench::bench_n;
+use tlrs::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("TLRS_BENCH_QUICK")
+        .map(|v| v == "1")
+        .unwrap_or(false);
+    let (n, iters, samples) = if quick { (4_000, 200, 1) } else { (100_000, 600, 2) };
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("== parallel LP benches (n={n}, {iters} iters, {cores} cores) ==");
+
+    let spec = format!("synth:n={n},m=6,dims=3,horizon=24,shape=ramp");
+    let inst = workload::parse_workload(&spec)
+        .expect("workload spec")
+        .generate(1)
+        .expect("generate");
+    let tr = trim(&inst).instance;
+
+    // ratio-table build: serial vs parallel
+    let build_serial = bench_n("lp_build/serial", samples.max(2), || {
+        MappingLp::from_instance(&tr)
+    });
+    let build_par = bench_n("lp_build/threads=4", samples.max(2), || {
+        MappingLp::from_instance_par(&tr, 4)
+    });
+    let build_speedup = build_serial.mean_ns / build_par.mean_ns.max(1.0);
+
+    let mut lp = MappingLp::from_instance(&tr);
+    scaling::equilibrate(&mut lp);
+
+    // fixed-iteration solves: identical work (and bit-identical output)
+    // at every thread count, so wall-clock ratios are the whole story
+    let mut results = vec![build_serial, build_par];
+    let mut rows = Vec::new();
+    let mut serial_ns = 0.0f64;
+    let mut best_par_ns = f64::INFINITY;
+    let mut objective_bits: Option<u64> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let opts = PdhgOptions { max_iters: iters, threads, ..Default::default() };
+        let mut last_obj = 0.0f64;
+        let r = bench_n(&format!("pdhg_solve/threads={threads}"), samples, || {
+            let out = pdhg::solve(&lp, &opts);
+            last_obj = out.objective;
+            out
+        });
+        // cross-thread-count determinism: the engine's core contract
+        match objective_bits {
+            None => objective_bits = Some(last_obj.to_bits()),
+            Some(bits) => assert_eq!(
+                bits,
+                last_obj.to_bits(),
+                "threads={threads} changed the objective bits"
+            ),
+        }
+        if threads == 1 {
+            serial_ns = r.mean_ns;
+        } else {
+            best_par_ns = best_par_ns.min(r.mean_ns);
+        }
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("mean_ns", Json::Num(r.mean_ns)),
+        ]));
+        results.push(r);
+    }
+    let speedup = serial_ns / best_par_ns.max(1.0);
+    println!(
+        "parallel_lp_speedup: {speedup:.2}x (serial {:.2}ms, best parallel {:.2}ms)",
+        serial_ns / 1e6,
+        best_par_ns / 1e6
+    );
+    if !quick && cores >= 2 {
+        // on a multi-core box the parallel engine must never lose to
+        // the serial path (single-core machines can only measure the
+        // dispatch overhead, so the gate is skipped there)
+        assert!(speedup >= 1.0, "parallel engine slower than serial: {speedup:.3}x");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::Str("lp".into())),
+        ("quick", Json::Bool(quick)),
+        ("cores", Json::Num(cores as f64)),
+        ("n", Json::Num(n as f64)),
+        ("solve_iters", Json::Num(iters as f64)),
+        ("parallel_lp_speedup", Json::Num(speedup)),
+        ("builder_build_speedup", Json::Num(build_speedup)),
+        ("solves", Json::Arr(rows)),
+        ("results", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+    ]);
+    let path = "BENCH_lp.json";
+    std::fs::write(path, json.to_string() + "\n").expect("write BENCH_lp.json");
+    println!("wrote {path}");
+}

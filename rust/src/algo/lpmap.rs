@@ -52,8 +52,8 @@ pub struct LpMapReport {
 
 /// Per-type congestion peaks implied by a fractional assignment — the
 /// tightest alpha for which x is feasible (used as the crossover budget).
-fn implied_alpha(lp: &crate::lp::MappingLp, x: &[f64]) -> Vec<f64> {
-    let mut op = crate::lp::pdhg::Operator::new(lp);
+fn implied_alpha(lp: &crate::lp::MappingLp, x: &[f64], threads: usize) -> Vec<f64> {
+    let mut op = crate::lp::pdhg::Operator::with_threads(lp, threads);
     let mut buf = vec![0.0; lp.m * lp.t * lp.dims];
     op.forward(x, &vec![0.0; lp.m], &mut buf);
     let mut alpha = vec![0.0f64; lp.m];
@@ -148,7 +148,11 @@ pub fn round_mapping(inst: &Instance, x: &[f64]) -> (Vec<usize>, Vec<f64>) {
 
 /// Phase 1 only: solve + round. The instance should be timeline-trimmed.
 pub fn solve_lp_mapping(inst: &Instance, solver: &dyn MappingSolver) -> Result<LpOutcome> {
-    let mut lp = MappingLp::from_instance(inst);
+    // One thread knob governs the whole mapping path: the ratio-table
+    // build, the solve itself, the crossover's operator applications and
+    // the certified-bound repair (all bit-identical for any count).
+    let threads = solver.lp_threads();
+    let mut lp = MappingLp::from_instance_par(inst, threads);
     scaling::equilibrate(&mut lp);
     let sol = solver.solve_mapping(&lp)?;
     // First-order backends return interior-face points; crossover pulls
@@ -158,7 +162,7 @@ pub fn solve_lp_mapping(inst: &Instance, solver: &dyn MappingSolver) -> Result<L
         sol.x.clone()
     } else {
         // alpha is implied by x at the optimum: recompute per-type peaks
-        let alpha = implied_alpha(&lp, &sol.x);
+        let alpha = implied_alpha(&lp, &sol.x, threads);
         crate::lp::crossover::crossover(&lp, &sol.x, &alpha, 1e-4).0
     };
     let (mapping, x_max) = round_mapping(inst, &x);
@@ -171,7 +175,7 @@ pub fn solve_lp_mapping(inst: &Instance, solver: &dyn MappingSolver) -> Result<L
         // exact backend: the objective itself is the bound
         sol.objective
     } else {
-        dual::certified_bound(&lp, &sol.y).0
+        dual::certified_bound_par(&lp, &sol.y, threads).0
     };
     Ok(LpOutcome {
         mapping,

@@ -769,6 +769,12 @@ impl Portfolio {
         }
     }
 
+    /// The one LP solve every racer shares, run on the *caller* thread
+    /// before the race starts. This ordering is what lets the LP engine
+    /// use its own worker team (`PdhgOptions::threads` via
+    /// `solver.lp_threads()`) without oversubscribing: LP threads are
+    /// done and parked before the racer pool spawns, so the two pools
+    /// never hold cores at the same time.
     fn shared_lp(
         &self,
         inst: &Instance,

@@ -73,6 +73,9 @@ impl EvalRow {
 pub struct Planner {
     backend: Backend,
     artifact: Option<ArtifactRoute>,
+    /// LP worker-thread knob (0 = auto): the default for every solve
+    /// this planner dispatches; per-request `lp_threads` overrides it.
+    lp_threads: usize,
     pub metrics: Arc<Metrics>,
     pub sessions: SessionRegistry,
 }
@@ -97,9 +100,21 @@ impl Planner {
         Ok(Planner {
             backend,
             artifact,
+            lp_threads: 0,
             metrics: Arc::new(Metrics::new()),
             sessions: SessionRegistry::new(),
         })
+    }
+
+    /// Set the planner-wide LP thread knob (CLI `--lp-threads`; 0 = auto).
+    /// LP results are bit-identical for every value (see `lp::pdhg`).
+    pub fn set_lp_threads(&mut self, threads: usize) {
+        self.lp_threads = threads.min(crate::lp::pdhg::MAX_LP_THREADS);
+    }
+
+    /// The planner-wide LP thread knob (0 = auto).
+    pub fn lp_threads(&self) -> usize {
+        self.lp_threads
     }
 
     /// Move the artifact solver (if loaded) onto a dedicated solver
@@ -131,11 +146,29 @@ impl Planner {
 
     /// Pick the solver for a (trimmed) instance shape and report its name.
     pub fn solver_for(&self, inst: &Instance) -> (Box<dyn MappingSolver + '_>, &'static str) {
+        self.solver_for_threads(inst, None)
+    }
+
+    /// [`Planner::solver_for`] with a per-request LP-thread override
+    /// (service `lp_threads` field); `None` uses the planner-wide knob.
+    /// Native solves record the resolved count in the `lp_threads_used`
+    /// gauge surfaced by `{"op":"stats"}`.
+    pub fn solver_for_threads(
+        &self,
+        inst: &Instance,
+        threads: Option<usize>,
+    ) -> (Box<dyn MappingSolver + '_>, &'static str) {
         let (n, m, t, d) =
             (inst.n_tasks(), inst.n_types(), inst.horizon as usize, inst.dims());
+        let eff = threads.unwrap_or(self.lp_threads);
+        let native = || -> Box<dyn MappingSolver> {
+            let resolved = crate::lp::pdhg::resolve_threads(eff);
+            self.metrics.gauge_set("lp_threads_used", resolved as i64);
+            Box::new(NativePdhgSolver::with_threads(eff))
+        };
         match self.backend {
             Backend::Simplex => (Box::new(SimplexSolver), "simplex"),
-            Backend::Native => (Box::new(NativePdhgSolver::default()), "pdhg-native"),
+            Backend::Native => (native(), "pdhg-native"),
             Backend::Artifact => {
                 let route = self.artifact.as_ref().expect("artifact backend loaded");
                 (route.solver(), "pdhg-artifact")
@@ -170,7 +203,7 @@ impl Planner {
                         }
                     }
                 }
-                (Box::new(NativePdhgSolver::default()), "pdhg-native")
+                (native(), "pdhg-native")
             }
         }
     }
@@ -231,7 +264,7 @@ impl Planner {
         // floored by the congestion bound.
         let t0 = std::time::Instant::now();
         let cong = {
-            let mut lp = MappingLp::from_instance(&tr);
+            let mut lp = MappingLp::from_instance_par(&tr, solver.lp_threads());
             scaling::equilibrate(&mut lp);
             dual::congestion_bound(&lp)
         };
@@ -284,13 +317,35 @@ impl Planner {
         portfolio: &Portfolio,
         spec: &DecomposeSpec,
     ) -> Result<(DecomposeReport, &'static str)> {
+        self.solve_decomposed_threads(inst, portfolio, spec, None)
+    }
+
+    /// [`Planner::solve_decomposed`] with a per-request LP-thread
+    /// override. Partitions solve concurrently, so the resolved LP
+    /// budget is split across the partition workers (`requested_k`);
+    /// partitioners of unknown width keep their solvers single-threaded.
+    pub fn solve_decomposed_threads(
+        &self,
+        inst: &Instance,
+        portfolio: &Portfolio,
+        spec: &DecomposeSpec,
+        threads: Option<usize>,
+    ) -> Result<(DecomposeReport, &'static str)> {
         let tr = trim(inst).instance;
         let simplex = matches!(self.backend, Backend::Simplex);
+        let eff = threads.unwrap_or(self.lp_threads);
+        let per_partition = match spec.requested_k() {
+            Some(k) => (crate::lp::pdhg::resolve_threads(eff) / k.max(1)).max(1),
+            None => 1,
+        };
+        if !simplex {
+            self.metrics.gauge_set("lp_threads_used", per_partition as i64);
+        }
         let factory = move || -> Box<dyn MappingSolver> {
             if simplex {
                 Box::new(SimplexSolver)
             } else {
-                Box::new(NativePdhgSolver::default())
+                Box::new(NativePdhgSolver::with_threads(per_partition))
             }
         };
         let backend_used = if simplex { "simplex" } else { "pdhg-native" };

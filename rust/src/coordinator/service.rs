@@ -99,6 +99,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::io::delta as iodelta;
 use crate::io::files;
+use crate::lp::pdhg;
 use crate::model::{trim, Delta, Instance};
 use crate::util::json::{self, Json};
 use crate::util::wire::{self, Event, JsonPull, JsonWriter};
@@ -370,6 +371,28 @@ fn resolve_instance(env: &mut Envelope) -> Result<(Instance, Option<(String, u64
     }
 }
 
+/// Optional `lp_threads` request field: worker threads for the LP
+/// kernels (0 = auto). Requests come from untrusted clients, so the
+/// count is validated against the hard cap rather than silently
+/// clamped — like the portfolio-spec cap, an out-of-range value is a
+/// request error, not a server choice.
+fn lp_threads_override(req: &Json) -> Result<Option<usize>> {
+    match req.get("lp_threads") {
+        Json::Null => Ok(None),
+        v => {
+            let t = v
+                .as_usize()
+                .context("'lp_threads' must be a non-negative integer (0 = auto)")?;
+            anyhow::ensure!(
+                t <= pdhg::MAX_LP_THREADS,
+                "lp_threads {t} exceeds the cap of {}",
+                pdhg::MAX_LP_THREADS
+            );
+            Ok(Some(t))
+        }
+    }
+}
+
 /// The legacy one-shot solve path (requests without an 'op' field).
 /// With a `decompose` field the solve routes through the partition-
 /// decomposed pipeline; the response keeps every legacy field and adds
@@ -380,13 +403,22 @@ fn handle_solve(planner: &Planner, env: &mut Envelope) -> Result<String> {
     anyhow::ensure!(inst.n_tasks() > 0, "empty instance");
     let req = &env.rest;
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
+    let lp_threads = lp_threads_override(req)?;
     let t0 = std::time::Instant::now();
 
     match req.get("decompose") {
         Json::Null => {}
         Json::Str(spec) => {
             let spec = crate::algo::decompose::parse_decompose(spec)?;
-            return handle_solve_decomposed(planner, &inst, algo, &spec, workload_used, t0);
+            return handle_solve_decomposed(
+                planner,
+                &inst,
+                algo,
+                &spec,
+                lp_threads,
+                workload_used,
+                t0,
+            );
         }
         _ => anyhow::bail!(
             "'decompose' must be a spec string\n{}",
@@ -395,7 +427,7 @@ fn handle_solve(planner: &Planner, env: &mut Envelope) -> Result<String> {
     }
 
     let tr = trim(&inst).instance;
-    let (solver, backend) = planner.solver_for(&tr);
+    let (solver, backend) = planner.solver_for_threads(&tr, lp_threads);
     let portfolio = crate::algo::pipeline::parse_portfolio(algo)?;
     let race = portfolio.run(&tr, solver.as_ref())?;
     let rep = race.best();
@@ -416,6 +448,11 @@ fn handle_solve(planner: &Planner, env: &mut Envelope) -> Result<String> {
     w.key("cost").num(cost);
     if let Some(lb) = lb {
         w.key("lower_bound").num(lb);
+    }
+    if lp_threads.is_some() {
+        // echo the resolved count only when the request asked for the
+        // knob — legacy requests keep the exact legacy key set
+        w.key("lp_threads").num(solver.lp_threads() as f64);
     }
     w.key("n_nodes").num(solution.nodes.len() as f64);
     w.key("nodes_per_type").begin_arr();
@@ -477,11 +514,12 @@ fn handle_solve_decomposed(
     inst: &Instance,
     algo: &str,
     spec: &crate::algo::decompose::DecomposeSpec,
+    lp_threads: Option<usize>,
     workload_used: Option<(String, u64)>,
     t0: std::time::Instant,
 ) -> Result<String> {
     let portfolio = crate::algo::pipeline::parse_portfolio(algo)?;
-    let (rep, backend) = planner.solve_decomposed(inst, &portfolio, spec)?;
+    let (rep, backend) = planner.solve_decomposed_threads(inst, &portfolio, spec, lp_threads)?;
     let tr = trim(inst).instance;
     rep.solution
         .verify(&tr)
@@ -497,6 +535,10 @@ fn handle_solve_decomposed(
     w.key("cost").num(rep.cost);
     w.key("decompose").str(&spec.to_string());
     w.key("lower_bound").num(lb);
+    if let Some(t) = lp_threads {
+        // resolved total budget (the planner splits it per partition)
+        w.key("lp_threads").num(pdhg::resolve_threads(t) as f64);
+    }
     w.key("n_nodes").num(rep.solution.nodes.len() as f64);
     w.key("nodes_per_type").begin_arr();
     for &c in rep.solution.nodes_per_type(&tr).iter() {
@@ -555,9 +597,12 @@ fn write_delta_report(w: &mut JsonWriter<Vec<u8>>, rep: &DeltaReport) {
     w.end_obj();
 }
 
-/// Session config from request knobs (`algorithm`, `escalate`, `fit`).
-fn session_config(req: &Json) -> Result<SessionConfig> {
+/// Session config from request knobs (`algorithm`, `escalate`, `fit`,
+/// `lp_threads`). `default_lp_threads` is the planner-wide knob, used
+/// when the request does not carry its own.
+fn session_config(req: &Json, default_lp_threads: usize) -> Result<SessionConfig> {
     let mut cfg = SessionConfig::default();
+    cfg.lp_threads = lp_threads_override(req)?.unwrap_or(default_lp_threads);
     if let Some(algo) = req.get("algorithm").as_str() {
         cfg.algo = algo.to_string();
     }
@@ -609,7 +654,7 @@ fn op_open(planner: &Planner, env: &mut Envelope) -> Result<String> {
         session::MAX_SESSIONS
     );
     let (inst, workload_used) = resolve_instance(env)?;
-    let cfg = session_config(&env.rest)?;
+    let cfg = session_config(&env.rest, planner.lp_threads())?;
     let algo = cfg.algo.clone();
     let (session, open) =
         planner.metrics.time("session_open", || PlanSession::open(inst, cfg))?;
@@ -1044,6 +1089,60 @@ mod tests {
             ],
             "{v:?}"
         );
+    }
+
+    #[test]
+    fn lp_threads_knob_roundtrip() {
+        let p = planner();
+        let inst = generate(&SynthParams { n: 20, m: 3, ..Default::default() }, 5);
+        // explicit count: echoed back, surfaced in the stats gauge
+        let req = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+            ("lp_threads", Json::Num(2.0)),
+        ]);
+        let v = json::parse(&handle_request(&p, &req.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("lp_threads").as_usize(), Some(2));
+        let s = json::parse(&handle_request(&p, r#"{"op":"stats"}"#)).unwrap();
+        assert_eq!(
+            s.get("gauges").get("lp_threads_used").get("value").as_usize(),
+            Some(2),
+            "{s:?}"
+        );
+        // identical solve: a parallel run is bit-identical to serial
+        let serial = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("algorithm", Json::Str("lp-map-f".into())),
+            ("lp_threads", Json::Num(1.0)),
+        ]);
+        let v1 = json::parse(&handle_request(&p, &serial.to_string())).unwrap();
+        assert_eq!(v1.get("cost").as_f64(), v.get("cost").as_f64());
+        assert_eq!(v1.get("lower_bound").as_f64(), v.get("lower_bound").as_f64());
+        // over-cap counts are request errors, not silent clamps
+        let big = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("lp_threads", Json::Num(1000.0)),
+        ]);
+        let v = json::parse(&handle_request(&p, &big.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert!(v.get("error").as_str().unwrap().contains("exceeds"), "{v:?}");
+        // non-integer is a typed request error
+        let bad = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("lp_threads", Json::Str("many".into())),
+        ]);
+        let v = json::parse(&handle_request(&p, &bad.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        // decomposed solves accept the knob and echo the resolved budget
+        let dec = Json::obj(vec![
+            ("instance", files::instance_to_json(&inst)),
+            ("decompose", Json::Str("window:2".into())),
+            ("lp_threads", Json::Num(4.0)),
+        ]);
+        let v = json::parse(&handle_request(&p, &dec.to_string())).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+        assert_eq!(v.get("lp_threads").as_usize(), Some(4));
     }
 
     #[test]

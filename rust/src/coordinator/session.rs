@@ -118,6 +118,9 @@ pub struct SessionConfig {
     /// Warm-start escalated re-solves from the retained PDHG iterates
     /// (disable to force bit-identical cold re-solves, e.g. in tests).
     pub warm: bool,
+    /// LP worker threads for the session's solves (0 = auto; results
+    /// are bit-identical for every value).
+    pub lp_threads: usize,
 }
 
 impl Default for SessionConfig {
@@ -127,6 +130,7 @@ impl Default for SessionConfig {
             fit: FitPolicy::FirstFit,
             escalate_ratio: Some(1.5),
             warm: true,
+            lp_threads: 0,
         }
     }
 }
@@ -175,8 +179,12 @@ struct WarmSolver {
 }
 
 impl WarmSolver {
-    fn new(warm: Option<WarmIterates>) -> Self {
-        WarmSolver { opts: PdhgOptions::default(), warm, captured: Mutex::new(None) }
+    fn new(warm: Option<WarmIterates>, threads: usize) -> Self {
+        WarmSolver {
+            opts: PdhgOptions { threads, ..Default::default() },
+            warm,
+            captured: Mutex::new(None),
+        }
     }
 
     fn take_captured(&self) -> Option<PdhgResult> {
@@ -203,6 +211,10 @@ impl MappingSolver for WarmSolver {
 
     fn name(&self) -> &'static str {
         "pdhg-native"
+    }
+
+    fn lp_threads(&self) -> usize {
+        pdhg::resolve_threads(self.opts.threads)
     }
 }
 
@@ -256,7 +268,7 @@ impl PlanSession {
             }
         }
         let portfolio = parse_portfolio(&cfg.algo)?;
-        let solver = WarmSolver::new(None);
+        let solver = WarmSolver::new(None, cfg.lp_threads);
         let race = portfolio.run(&inst, &solver)?;
         let rep = race.best();
         rep.solution
@@ -277,7 +289,10 @@ impl PlanSession {
         };
         session.retain_iterates(solver.take_captured());
         session.lb = {
-            let lp = MappingLp::from_instance(&session.inst);
+            let lp = MappingLp::from_instance_par(
+                &session.inst,
+                pdhg::resolve_threads(session.cfg.lp_threads),
+            );
             let mut lb = dual::congestion_bound(&lp);
             if let Some(clb) = race.certified_lb() {
                 lb = lb.max(clb);
@@ -591,12 +606,13 @@ impl PlanSession {
             self.lb = 0.0;
             return;
         }
-        let mut lp = MappingLp::from_instance(&self.inst);
+        let threads = pdhg::resolve_threads(self.cfg.lp_threads);
+        let mut lp = MappingLp::from_instance_par(&self.inst, threads);
         let mut lb = dual::congestion_bound(&lp);
         if let Some(w) = &self.warm {
             if w.m == lp.m && w.t == lp.t && w.dims == lp.dims {
                 scaling::equilibrate(&mut lp);
-                lb = lb.max(dual::certified_bound(&lp, &w.iterates.y).0);
+                lb = lb.max(dual::certified_bound_par(&lp, &w.iterates.y, threads).0);
             }
         }
         self.lb = lb;
@@ -647,14 +663,17 @@ impl PlanSession {
     fn full_resolve(&mut self) -> Result<()> {
         let portfolio = parse_portfolio(&self.cfg.algo)?;
         let warm = if self.cfg.warm { self.warm_for_current() } else { None };
-        let solver = WarmSolver::new(warm);
+        let solver = WarmSolver::new(warm, self.cfg.lp_threads);
         let race = portfolio
             .run(&self.inst, &solver)
             .context("escalated full re-solve")?;
         let rep = race.best();
         self.pool = Pool::from_solution(&self.inst, &rep.solution);
         self.retain_iterates(solver.take_captured());
-        let lp = MappingLp::from_instance(&self.inst);
+        let lp = MappingLp::from_instance_par(
+            &self.inst,
+            pdhg::resolve_threads(self.cfg.lp_threads),
+        );
         let mut lb = dual::congestion_bound(&lp);
         if let Some(clb) = race.certified_lb() {
             lb = lb.max(clb);

@@ -55,21 +55,54 @@ impl MappingLp {
     /// timeline-trimmed (T <= segment count); an untrimmed one still
     /// works, just larger.
     pub fn from_instance(inst: &Instance) -> Self {
+        Self::from_instance_par(inst, 1)
+    }
+
+    /// Build with the O(S·m·D) ratio table filled by up to `threads`
+    /// workers. The spans/offsets pass stays serial (it is O(S) and
+    /// order-defining); each segment's ratio row is an exclusive
+    /// contiguous range of `seg_ratios` and every entry is one pure
+    /// division, so the table is bit-identical to the serial build for
+    /// any thread count. Small tables fold to one inline thread.
+    pub fn from_instance_par(inst: &Instance, threads: usize) -> Self {
+        use super::pdhg::{n_chunks, DisjointSlice, PAR_MIN_NM, TASK_CHUNK};
+        use crate::util::pool::Team;
         let (n, m, dims) = (inst.n_tasks(), inst.n_types(), inst.dims());
         let mut seg_off = Vec::with_capacity(n + 1);
         seg_off.push(0usize);
         let mut seg_spans: Vec<(u32, u32)> = Vec::with_capacity(n);
-        let mut seg_ratios: Vec<f64> = Vec::with_capacity(n * m * dims);
+        let mut seg_demand: Vec<&[f64]> = Vec::with_capacity(n);
         for u in &inst.tasks {
             for seg in u.segments() {
                 seg_spans.push((seg.start, seg.end));
-                for b in 0..m {
-                    for d in 0..dims {
-                        seg_ratios.push(seg.demand[d] / inst.node_types[b].capacity[d]);
-                    }
-                }
+                seg_demand.push(&seg.demand);
             }
             seg_off.push(seg_spans.len());
+        }
+        let s_total = seg_spans.len();
+        let cells = s_total * m * dims;
+        let threads = if cells < PAR_MIN_NM { 1 } else { threads.max(1) };
+        let mut seg_ratios = vec![0.0; cells];
+        {
+            let team = Team::new(threads);
+            let ds = DisjointSlice::new(&mut seg_ratios);
+            let caps: Vec<&[f64]> =
+                inst.node_types.iter().map(|b| b.capacity.as_slice()).collect();
+            team.run_blocks(n_chunks(s_total), |c| {
+                let lo = c * TASK_CHUNK;
+                let hi = (lo + TASK_CHUNK).min(s_total);
+                for s in lo..hi {
+                    // SAFETY: segment s's ratio row is exclusive to the
+                    // chunk owning s.
+                    let row = unsafe { ds.slice_mut(s * m * dims, m * dims) };
+                    let dem = seg_demand[s];
+                    for b in 0..m {
+                        for d in 0..dims {
+                            row[b * dims + d] = dem[d] / caps[b][d];
+                        }
+                    }
+                }
+            });
         }
         MappingLp {
             n,
@@ -225,6 +258,23 @@ mod tests {
         // rows are (b-major, live-ts, d); all 4 slots live here
         assert!((dense.a_ub.at(0, 0) - 0.2).abs() < 1e-15, "slot 0");
         assert!((dense.a_ub.at(3, 0) - 0.8).abs() < 1e-15, "slot 3");
+    }
+
+    #[test]
+    fn parallel_ratio_table_matches_serial_bitwise() {
+        // big enough that from_instance_par really engages its team
+        let inst = generate(
+            &SynthParams { n: 1200, m: 3, dims: 2, horizon: 10, ..Default::default() },
+            7,
+        );
+        let serial = MappingLp::from_instance(&inst);
+        let par = MappingLp::from_instance_par(&inst, 4);
+        assert_eq!(serial.seg_off, par.seg_off);
+        assert_eq!(serial.seg_spans, par.seg_spans);
+        assert_eq!(serial.seg_ratios.len(), par.seg_ratios.len());
+        for (a, b) in serial.seg_ratios.iter().zip(&par.seg_ratios) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

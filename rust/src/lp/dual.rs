@@ -23,10 +23,25 @@ use crate::model::Instance;
 /// Repair `y` into dual-feasible and return the certified bound
 /// `sum_u w_u` together with the repaired `w`.
 pub fn certified_bound(lp: &MappingLp, y: &[f64]) -> (f64, Vec<f64>) {
+    certified_bound_par(lp, y, 1)
+}
+
+/// [`certified_bound`] with the dominant O(S·m·D) per-task repair pass
+/// sharded over up to `threads` workers. Deterministic-reduction
+/// contract: the (b,d) prefix rows and each task's `w[u]` are exclusive
+/// blocks computed in the serial reference's per-element order, and the
+/// scale pass plus the final dual objective are scalar sums that stay
+/// sequential — so the bound is bit-identical for every thread count.
+pub fn certified_bound_par(lp: &MappingLp, y: &[f64], threads: usize) -> (f64, Vec<f64>) {
+    use super::pdhg::{n_chunks, DisjointSlice, PAR_MIN_NM, TASK_CHUNK};
+    use crate::util::pool::Team;
     let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
     debug_assert_eq!(y.len(), m * t * dims);
+    let threads = if n * m < PAR_MIN_NM { 1 } else { threads.max(1) };
+    let team = Team::new(threads);
 
-    // per-B scale so that sum_{t,d} rho*y <= cost(B)
+    // per-B scale so that sum_{t,d} rho*y <= cost(B) — scalar sums,
+    // sequential per the determinism contract
     let mut scale = vec![1.0f64; m];
     for b in 0..m {
         let mut s = 0.0;
@@ -41,42 +56,59 @@ pub fn certified_bound(lp: &MappingLp, y: &[f64]) -> (f64, Vec<f64>) {
         }
     }
 
-    // prefix sums of the repaired rho*y per (b, d)
-    // pref[b][d][ts+1] layout flattened
+    // prefix sums of the repaired rho*y per (b, d): each (b,d) row is an
+    // exclusive block, sequential within the row
     let mut pref = vec![0.0f64; m * dims * (t + 1)];
-    for b in 0..m {
-        for d in 0..dims {
-            let base = (b * dims + d) * (t + 1);
+    {
+        let ds = DisjointSlice::new(&mut pref);
+        let scale_ref: &[f64] = &scale;
+        team.run_blocks(m * dims, |k| {
+            let (b, d) = (k / dims, k % dims);
+            // SAFETY: prefix row k is exclusive to block k.
+            let row = unsafe { ds.slice_mut(k * (t + 1), t + 1) };
             for ts in 0..t {
-                let v = y[(b * t + ts) * dims + d].max(0.0) * scale[b];
-                pref[base + ts + 1] = pref[base + ts] + lp.rho_at(b, d) * v;
+                let v = y[(b * t + ts) * dims + d].max(0.0) * scale_ref[b];
+                row[ts + 1] = row[ts] + lp.rho_at(b, d) * v;
             }
-        }
+        });
     }
 
     let mut w = vec![0.0f64; n];
-    let mut total = 0.0;
-    for u in 0..n {
-        let mut best = f64::INFINITY;
-        for b in 0..m {
-            let mut acc = 0.0;
-            for d in 0..dims {
-                let base = (b * dims + d) * (t + 1);
-                // per-slot coefficients: the x-column of task u sums
-                // rho*y weighted by the demand segment covering each slot
-                for s in lp.segs_of(u) {
-                    let (ss, se) = lp.seg_spans[s];
-                    acc += (pref[base + se as usize + 1] - pref[base + ss as usize])
-                        * lp.seg_ratio(s, b, d);
+    {
+        let ds = DisjointSlice::new(&mut w);
+        let pref_ref: &[f64] = &pref;
+        team.run_blocks(n_chunks(n), |c| {
+            let lo = c * TASK_CHUNK;
+            let hi = (lo + TASK_CHUNK).min(n);
+            for u in lo..hi {
+                let mut best = f64::INFINITY;
+                for b in 0..m {
+                    let mut acc = 0.0;
+                    for d in 0..dims {
+                        let base = (b * dims + d) * (t + 1);
+                        // per-slot coefficients: the x-column of task u
+                        // sums rho*y weighted by the demand segment
+                        // covering each slot
+                        for s in lp.segs_of(u) {
+                            let (ss, se) = lp.seg_spans[s];
+                            acc += (pref_ref[base + se as usize + 1]
+                                - pref_ref[base + ss as usize])
+                                * lp.seg_ratio(s, b, d);
+                        }
+                    }
+                    best = best.min(acc);
                 }
+                // w may be any real; only positive contributions help the
+                // bound, but we keep the exact min to report a true dual
+                // point.
+                // SAFETY: w[u] is owned by the chunk owning u.
+                unsafe { ds.set(u, best) };
             }
-            best = best.min(acc);
-        }
-        // w may be any real; only positive contributions help the bound,
-        // but we keep the exact min to report a true dual point.
-        w[u] = best;
-        total += best;
+        });
     }
+    // dual objective: scalar sum, sequential in ascending u — the serial
+    // reference's exact accumulation order
+    let total: f64 = w.iter().sum();
     (total, w)
 }
 
@@ -288,6 +320,25 @@ mod tests {
             congestion_bound(&lp).to_bits(),
             congestion_bound_instance(&tr).to_bits()
         );
+    }
+
+    #[test]
+    fn parallel_certified_bound_matches_serial_bitwise() {
+        use crate::util::rng::Rng;
+        // n*m clears the parallel gate so the team really engages
+        let lp = lp_for(9, 2000);
+        let mut rng = Rng::new(11);
+        let y: Vec<f64> =
+            (0..lp.m * lp.t * lp.dims).map(|_| rng.uniform(-0.5, 1.5)).collect();
+        let (t1, w1) = certified_bound(&lp, &y);
+        for threads in [2, 4, 8] {
+            let (tp, wp) = certified_bound_par(&lp, &y, threads);
+            assert_eq!(t1.to_bits(), tp.to_bits(), "threads {threads}");
+            assert_eq!(w1.len(), wp.len());
+            for (a, b) in w1.iter().zip(&wp) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}");
+            }
+        }
     }
 
     #[test]

@@ -12,8 +12,68 @@
 //!   - iterate averaging (ergodic O(1/k) convergence on LPs),
 //!   - adaptive restart to the better of {last, average} per chunk,
 //!   - primal-weight (omega) rebalancing from the residual ratio.
+//!
+//! # Parallel engine
+//!
+//! Every hot kernel runs on a [`Team`] of persistent worker threads
+//! ([`PdhgOptions::threads`], resolved by [`resolve_threads`]). The block
+//! decomposition:
+//!
+//!   - `forward_tm` / `adjoint_tm` shard across **(b, d) blocks** — each
+//!     (node-type, dimension) pair owns an exclusive diff/prefix lane of
+//!     length t+1 in `Operator::lanes` plus a disjoint strided slice of
+//!     the output, so blocks share nothing and run in any order.
+//!   - the adjoint's alpha-column sums are combined **serially in fixed
+//!     (b, d) order** from per-block partials (`ga_part`), and its task
+//!     gradient runs a second phase over **(b, task-chunk) blocks** that
+//!     reads the lanes of phase one.
+//!   - dense vector kernels (proximal step, dual step, averaging,
+//!     residual maxima) shard over **fixed-boundary index chunks** of
+//!     [`TASK_CHUNK`] elements; per-chunk partials are folded serially in
+//!     chunk order.
+//!
+//! # Deterministic-reduction contract
+//!
+//! Results are **bit-identical for every thread count** (the repo-wide
+//! determinism guarantee, same style as the portfolio's
+//! parallel==sequential-fold pin): every floating-point value is produced
+//! by exactly the per-element operation sequence of the sequential
+//! reference — blocks only interchange *independent* loop iterations,
+//! all scalar f64 **sum** reductions (dual objective, norm estimate,
+//! objective) stay sequential, and f64 **max** reductions parallelize
+//! freely because `f64::max` is exactly associative (including its
+//! NaN-dropping semantics). Instances below [`PAR_MIN_NM`] fold to one
+//! inline thread; the outputs are unchanged by construction.
 
 use super::builder::MappingLp;
+use crate::util::pool::Team;
+
+/// Trust-boundary cap on the LP thread knob (service requests are
+/// untrusted input — same role as `MAX_PORTFOLIO_SPECS`).
+pub const MAX_LP_THREADS: usize = 64;
+
+/// Below this n*m the solver always runs inline on the caller thread:
+/// dispatch overhead would dominate kernels this small, and unit-scale
+/// LPs solve in microseconds anyway.
+pub(crate) const PAR_MIN_NM: usize = 4096;
+
+/// Fixed chunk length for dense-vector block decomposition. Fixed (not
+/// derived from the thread count) so chunk boundaries — and therefore
+/// every partial fold — are identical for every thread count.
+pub(crate) const TASK_CHUNK: usize = 1024;
+
+/// Resolve a requested thread count: 0 means auto (half the cores,
+/// capped at 8, so the portfolio/decompose pools keep their share and
+/// nested parallelism doesn't oversubscribe); explicit requests are
+/// capped at [`MAX_LP_THREADS`].
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        (cores / 2).clamp(1, 8)
+    } else {
+        requested.min(MAX_LP_THREADS)
+    }
+}
 
 /// Solver options. Defaults suit the unit-scale mapping LPs.
 #[derive(Clone, Debug)]
@@ -32,11 +92,22 @@ pub struct PdhgOptions {
     /// default: on the mapping LP the restart scheme alone converges
     /// faster (see EXPERIMENTS.md section Perf, omega ablation).
     pub adapt_omega: bool,
+    /// Worker threads for the parallel kernels. 0 = auto (see
+    /// [`resolve_threads`]); results are bit-identical for every value.
+    pub threads: usize,
 }
 
 impl Default for PdhgOptions {
     fn default() -> Self {
-        PdhgOptions { max_iters: 120_000, chunk: 250, tol: 2e-4, gap_tol: 2e-4, omega: 1.0, adapt_omega: false }
+        PdhgOptions {
+            max_iters: 120_000,
+            chunk: 250,
+            tol: 2e-4,
+            gap_tol: 2e-4,
+            omega: 1.0,
+            adapt_omega: false,
+            threads: 0,
+        }
     }
 }
 
@@ -57,7 +128,107 @@ pub struct PdhgResult {
     pub residuals: [f64; 4],
 }
 
-/// The structured operator with scratch buffers.
+/// One chunk of omega rebalancing, guarded against the failure mode a
+/// converged dual chunk exposes: `pri`/`dua` that are zero (clamped to
+/// 1e-12 before the ratio) or non-finite (omega passes through
+/// unchanged — a NaN/inf ratio would otherwise poison every subsequent
+/// iterate through tau/sigma).
+pub(crate) fn adapt_omega(omega: f64, pri: f64, dua: f64) -> f64 {
+    if !pri.is_finite() || !dua.is_finite() {
+        return omega;
+    }
+    let ratio = (pri.max(1e-12) / dua.max(1e-12)).sqrt().clamp(0.5, 2.0);
+    (omega * ratio).clamp(1e-3, 1e3)
+}
+
+/// A raw view over an `&mut [f64]` that parallel blocks index into.
+///
+/// SAFETY CONTRACT: every concurrent block must touch a disjoint set of
+/// indices (the block decompositions above are designed so ownership is
+/// provable from the block id alone); the view must not outlive the
+/// kernel that created it. `Team::run_blocks` returning is the
+/// happens-before edge that makes the writes visible to the caller.
+#[derive(Clone, Copy)]
+pub(crate) struct DisjointSlice {
+    ptr: *mut f64,
+    len: usize,
+}
+
+unsafe impl Send for DisjointSlice {}
+unsafe impl Sync for DisjointSlice {}
+
+impl DisjointSlice {
+    pub(crate) fn new(s: &mut [f64]) -> Self {
+        DisjointSlice { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// SAFETY: no concurrent block may touch index `i`.
+    pub(crate) unsafe fn get(&self, i: usize) -> f64 {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// SAFETY: no concurrent block may touch index `i`.
+    pub(crate) unsafe fn set(&self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// SAFETY: the range `start..start+len` must be exclusive to the
+    /// calling block for the lifetime of the returned slice.
+    pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f64] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// ceil(len / TASK_CHUNK) — the fixed-boundary chunk count.
+pub(crate) fn n_chunks(len: usize) -> usize {
+    (len + TASK_CHUNK - 1) / TASK_CHUNK
+}
+
+/// dst[i] = src[i] / k, sharded over fixed chunks (elementwise, so
+/// bit-identical for any thread count).
+fn div_into(team: &Team, src: &[f64], k: f64, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let len = src.len();
+    let ds = DisjointSlice::new(dst);
+    team.run_blocks(n_chunks(len), |c| {
+        let lo = c * TASK_CHUNK;
+        let hi = (lo + TASK_CHUNK).min(len);
+        for i in lo..hi {
+            // SAFETY: chunk c owns indices lo..hi exclusively.
+            unsafe { ds.set(i, src[i] / k) };
+        }
+    });
+}
+
+/// max over `eval(0..len)` with a 0.0 floor, computed as per-chunk
+/// partial maxima folded serially in chunk order. `f64::max` is exactly
+/// associative, so the result is bitwise equal to the sequential fold.
+fn max_by_chunks<F: Fn(usize) -> f64 + Sync>(team: &Team, len: usize, eval: F) -> f64 {
+    if len == 0 {
+        return 0.0;
+    }
+    let chunks = n_chunks(len);
+    let mut partials = vec![0.0f64; chunks];
+    {
+        let ds = DisjointSlice::new(&mut partials);
+        team.run_blocks(chunks, |c| {
+            let lo = c * TASK_CHUNK;
+            let hi = (lo + TASK_CHUNK).min(len);
+            let mut acc = 0.0f64;
+            for i in lo..hi {
+                acc = acc.max(eval(i));
+            }
+            // SAFETY: partial slot c is exclusive to chunk c.
+            unsafe { ds.set(c, acc) };
+        });
+    }
+    partials.iter().copied().fold(0.0f64, f64::max)
+}
+
+/// The structured operator with scratch buffers and its worker team.
 ///
 /// Perf note (EXPERIMENTS.md section Perf): the public x/gx layout is
 /// task-major `[u*m + b]` and ratios are `[(s*m + b)*dims + d]`, so the
@@ -71,8 +242,13 @@ pub struct PdhgResult {
 /// O(m·D·(S + T)) where S is the total segment count (= n when flat).
 pub struct Operator<'a> {
     lp: &'a MappingLp,
-    /// prefix/diff scratch, length t+1
-    scratch: Vec<f64>,
+    /// per-(b,d) diff/prefix lanes, each of length t+1: lane
+    /// k = b*dims + d occupies lanes[k*(t+1)..(k+1)*(t+1)] and is
+    /// exclusive to block k during a kernel.
+    lanes: Vec<f64>,
+    /// per-(b,d) alpha-column partials from the adjoint's phase one,
+    /// combined serially in fixed (b, d) order.
+    ga_part: Vec<f64>,
     /// per-segment ratios in (b,d)-major layout over the *permuted*
     /// segment order: ratios_bd[(b*dims + d)*S + j]
     ratios_bd: Vec<f64>,
@@ -89,11 +265,23 @@ pub struct Operator<'a> {
     /// task permutation (sorted by start slot); internal arrays use
     /// permuted indices, transposes map back to the public order
     perm: Vec<usize>,
+    /// persistent worker team for the parallel kernels
+    team: Team,
 }
 
 impl<'a> Operator<'a> {
+    /// Single-threaded operator (kernels run inline on the caller).
     pub fn new(lp: &'a MappingLp) -> Self {
+        Self::with_threads(lp, 1)
+    }
+
+    /// Operator with a worker team of up to `threads` threads. Instances
+    /// below [`PAR_MIN_NM`] fold to one inline thread; outputs are
+    /// bit-identical either way.
+    pub fn with_threads(lp: &'a MappingLp, threads: usize) -> Self {
         let (n, m, dims) = (lp.n, lp.m, lp.dims);
+        let threads = if n * m < PAR_MIN_NM { 1 } else { threads.max(1) };
+        let team = Team::new(threads);
         // Process tasks in start order: the diff-array scatter in forward()
         // then walks memory monotonically (second perf iteration, see
         // EXPERIMENTS.md section Perf).
@@ -114,17 +302,24 @@ impl<'a> Operator<'a> {
             }
             off.push(seg_starts.len());
         }
+        // (b,d)-major ratio table, one exclusive row per (b,d) block
+        // (each element is one pure division — order-free).
         let mut ratios_bd = vec![0.0; m * dims * s_total];
-        for (j, &s) in perm_segs.iter().enumerate() {
-            for b in 0..m {
-                for d in 0..dims {
-                    ratios_bd[(b * dims + d) * s_total + j] = lp.seg_ratio(s, b, d);
+        {
+            let ds = DisjointSlice::new(&mut ratios_bd);
+            team.run_blocks(m * dims, |k| {
+                let (b, d) = (k / dims, k % dims);
+                // SAFETY: row k is exclusive to block k.
+                let row = unsafe { ds.slice_mut(k * s_total, s_total) };
+                for (j, &s) in perm_segs.iter().enumerate() {
+                    row[j] = lp.seg_ratio(s, b, d);
                 }
-            }
+            });
         }
         Operator {
             lp,
-            scratch: vec![0.0; lp.t + 1],
+            lanes: vec![0.0; m * dims * (lp.t + 1)],
+            ga_part: vec![0.0; m * dims],
             ratios_bd,
             seg_starts,
             seg_ends,
@@ -132,7 +327,13 @@ impl<'a> Operator<'a> {
             xt: vec![0.0; n * m],
             gxt: vec![0.0; n * m],
             perm,
+            team,
         }
+    }
+
+    /// Worker threads backing this operator's kernels.
+    pub fn threads(&self) -> usize {
+        self.team.threads()
     }
 
     /// y_out = rho * (K x - alpha), shape (m, t, dims) flattened b-major.
@@ -151,37 +352,44 @@ impl<'a> Operator<'a> {
 
     /// forward on a type-major permuted x (solver-internal hot path; the
     /// transpose-free variant saves 3 O(nm) passes per PDHG iteration).
+    ///
+    /// Parallel over (b,d) blocks: block k = b*dims + d owns diff lane k
+    /// and the output indices `(b*t + ts)*dims + d` — fully disjoint, so
+    /// any block order produces the sequential reference bit-for-bit.
     pub fn forward_tm(&mut self, xt: &[f64], alpha: &[f64], out: &mut [f64]) {
         let lp = self.lp;
         let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
         let s_total = lp.n_segments();
         debug_assert_eq!(out.len(), m * t * dims);
-        for b in 0..m {
+        let Operator { lanes, team, ratios_bd, seg_starts, seg_ends, off, .. } = self;
+        let out_ds = DisjointSlice::new(out);
+        let lanes_ds = DisjointSlice::new(lanes);
+        team.run_blocks(m * dims, |k| {
+            let (b, d) = (k / dims, k % dims);
+            let rho = lp.rho_at(b, d);
             let xb = &xt[b * n..(b + 1) * n];
-            for d in 0..dims {
-                let rho = lp.rho_at(b, d);
-                let rat = &self.ratios_bd
-                    [(b * dims + d) * s_total..(b * dims + d + 1) * s_total];
-                let diff = &mut self.scratch;
-                diff[..=t].fill(0.0);
-                for u in 0..n {
-                    let x = xb[u];
-                    for j in self.off[u]..self.off[u + 1] {
-                        let w = x * rat[j];
-                        if w != 0.0 {
-                            diff[self.seg_starts[j]] += w;
-                            diff[self.seg_ends[j] + 1] -= w;
-                        }
+            let rat = &ratios_bd[k * s_total..(k + 1) * s_total];
+            // SAFETY: lane k is exclusive to block k.
+            let diff = unsafe { lanes_ds.slice_mut(k * (t + 1), t + 1) };
+            diff.fill(0.0);
+            for u in 0..n {
+                let x = xb[u];
+                for j in off[u]..off[u + 1] {
+                    let w = x * rat[j];
+                    if w != 0.0 {
+                        diff[seg_starts[j]] += w;
+                        diff[seg_ends[j] + 1] -= w;
                     }
                 }
-                let mut acc = 0.0;
-                let a = alpha[b];
-                for ts in 0..t {
-                    acc += diff[ts];
-                    out[(b * t + ts) * dims + d] = rho * (acc - a);
-                }
             }
-        }
+            let mut acc = 0.0;
+            let a = alpha[b];
+            for ts in 0..t {
+                acc += diff[ts];
+                // SAFETY: stride-d index owned by block k = b*dims + d.
+                unsafe { out_ds.set((b * t + ts) * dims + d, rho * (acc - a)) };
+            }
+        });
     }
 
     /// Adjoint pieces: gx[u*m+b] = sum_{t,d} rho*y * r over the task span;
@@ -201,33 +409,67 @@ impl<'a> Operator<'a> {
     }
 
     /// adjoint producing a type-major permuted gradient (solver-internal).
+    ///
+    /// Two parallel phases with a serial combine between them:
+    ///   1. per-(b,d) prefix lanes (disjoint, like the forward) plus the
+    ///      alpha-column partial `ga_part[k] = prefix[t]`;
+    ///      then `ga[b] = Σ_d ga_part[b*dims + d]` serially in fixed d
+    ///      order — the exact sum order of the sequential reference;
+    ///   2. per-(b, task-chunk) blocks: each task u accumulates its
+    ///      gradient in d-outer / segment-inner order into a local before
+    ///      one disjoint write — again the sequential per-element order.
     pub fn adjoint_tm(&mut self, y: &[f64], gxt: &mut [f64], ga: &mut [f64]) {
         let lp = self.lp;
         let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
         let s_total = lp.n_segments();
-        gxt.fill(0.0);
-        ga.fill(0.0);
-        for b in 0..m {
-            let gxb = &mut gxt[b * n..(b + 1) * n];
-            for d in 0..dims {
+        debug_assert_eq!(gxt.len(), n * m);
+        let Operator { lanes, ga_part, team, ratios_bd, seg_starts, seg_ends, off, .. } = self;
+        // phase 1: prefix lanes + alpha-column partials
+        {
+            let lanes_ds = DisjointSlice::new(lanes);
+            let gp_ds = DisjointSlice::new(ga_part);
+            team.run_blocks(m * dims, |k| {
+                let (b, d) = (k / dims, k % dims);
                 let rho = lp.rho_at(b, d);
-                let rat = &self.ratios_bd
-                    [(b * dims + d) * s_total..(b * dims + d + 1) * s_total];
-                // prefix[ts] = sum of rho*y[b,0..ts,d]
-                let prefix = &mut self.scratch;
+                // SAFETY: lane k / partial slot k are exclusive to block k.
+                let prefix = unsafe { lanes_ds.slice_mut(k * (t + 1), t + 1) };
                 prefix[0] = 0.0;
                 for ts in 0..t {
                     prefix[ts + 1] = prefix[ts] + rho * y[(b * t + ts) * dims + d];
                 }
-                ga[b] += prefix[t];
-                for u in 0..n {
-                    for j in self.off[u]..self.off[u + 1] {
-                        let seg = prefix[self.seg_ends[j] + 1] - prefix[self.seg_starts[j]];
-                        gxb[u] += seg * rat[j];
+                unsafe { gp_ds.set(k, prefix[t]) };
+            });
+        }
+        // serial fixed-order combine (bit-identical to the sequential fold)
+        for b in 0..m {
+            let mut acc = 0.0;
+            for d in 0..dims {
+                acc += ga_part[b * dims + d];
+            }
+            ga[b] = acc;
+        }
+        // phase 2: task gradients off the (now read-only) prefix lanes
+        let lanes_ref: &[f64] = lanes;
+        let chunks = n_chunks(n);
+        let gxt_ds = DisjointSlice::new(gxt);
+        team.run_blocks(m * chunks, |q| {
+            let (b, c) = (q / chunks, q % chunks);
+            let lo = c * TASK_CHUNK;
+            let hi = (lo + TASK_CHUNK).min(n);
+            for u in lo..hi {
+                let mut acc = 0.0;
+                for d in 0..dims {
+                    let k = b * dims + d;
+                    let prefix = &lanes_ref[k * (t + 1)..(k + 1) * (t + 1)];
+                    let rat = &ratios_bd[k * s_total..(k + 1) * s_total];
+                    for j in off[u]..off[u + 1] {
+                        acc += (prefix[seg_ends[j] + 1] - prefix[seg_starts[j]]) * rat[j];
                     }
                 }
+                // SAFETY: index b*n + u is owned by block (b, chunk of u).
+                unsafe { gxt_ds.set(b * n + u, acc) };
             }
-        }
+        });
     }
 
     /// Transpose a type-major permuted vector into the public task-major
@@ -266,7 +508,8 @@ impl<'a> Operator<'a> {
     }
 
     /// Power iteration estimate of the full operator's spectral norm
-    /// (inequality rows + equality rows).
+    /// (inequality rows + equality rows). The norm accumulations are
+    /// scalar sums and stay sequential (determinism contract).
     pub fn norm_estimate(&mut self, iters: usize) -> f64 {
         let lp = self.lp;
         let (n, m) = (lp.n, lp.m);
@@ -308,6 +551,9 @@ impl<'a> Operator<'a> {
 }
 
 /// Residuals of an iterate: [eq, ineq, dual, rel_gap].
+///
+/// The max reductions shard over fixed chunks (exactly associative); the
+/// objectives are scalar sums and stay sequential (determinism contract).
 pub fn residuals(
     op: &mut Operator,
     x: &[f64],
@@ -317,24 +563,18 @@ pub fn residuals(
 ) -> [f64; 4] {
     let lp = op.lp;
     let (n, m) = (lp.n, lp.m);
-    let mut eq: f64 = 0.0;
-    for u in 0..n {
+    let eq = max_by_chunks(&op.team, n, |u| {
         let s: f64 = (0..m).map(|b| x[u * m + b]).sum();
-        eq = eq.max((s - 1.0).abs());
-    }
+        (s - 1.0).abs()
+    });
     let mut buf = vec![0.0; m * lp.t * lp.dims];
     op.forward(x, alpha, &mut buf);
-    let ineq = buf.iter().copied().fold(0.0f64, |a, v| a.max(v));
+    let ineq = max_by_chunks(&op.team, buf.len(), |i| buf[i]);
 
     let mut gx = vec![0.0; n * m];
     let mut ga = vec![0.0; m];
     op.adjoint(y, &mut gx, &mut ga);
-    let mut dual: f64 = 0.0;
-    for u in 0..n {
-        for b in 0..m {
-            dual = dual.max(w[u] - gx[u * m + b]);
-        }
-    }
+    let mut dual = max_by_chunks(&op.team, n * m, |i| w[i / m] - gx[i]);
     for b in 0..m {
         dual = dual.max(ga[b] - lp.costs[b]);
     }
@@ -417,6 +657,16 @@ pub fn solve(lp: &MappingLp, opts: &PdhgOptions) -> PdhgResult {
     solve_from(lp, opts, vec![0.0; n * m], vec![0.0; m], vec![0.0; ny], vec![0.0; n])
 }
 
+/// Restart score: the worst residual, or +inf when any residual is
+/// non-finite so a poisoned candidate never wins the restart comparison.
+fn restart_score(r: &[f64; 4]) -> f64 {
+    if r.iter().all(|v| v.is_finite()) {
+        r[0].max(r[1]).max(r[2]).max(r[3])
+    } else {
+        f64::INFINITY
+    }
+}
+
 fn solve_from(
     lp: &MappingLp,
     opts: &PdhgOptions,
@@ -426,7 +676,7 @@ fn solve_from(
     w0: Vec<f64>,
 ) -> PdhgResult {
     let (n, m, dims, t) = (lp.n, lp.m, lp.dims, lp.t);
-    let mut op = Operator::new(lp);
+    let mut op = Operator::with_threads(lp, resolve_threads(opts.threads));
     let norm = op.norm_estimate(50);
     let base = 0.9 / norm;
     let mut omega = opts.omega;
@@ -453,12 +703,17 @@ fn solve_from(
     let mut xbt = vec![0.0; nm];
     let mut ab = vec![0.0; m];
     let mut rows = vec![0.0; n];
-    // chunk averages (internal layout)
+    // chunk sums + averages (internal layout)
     let (mut sxt, mut sa) = (vec![0.0; nm], vec![0.0; m]);
     let (mut sy, mut swt) = (vec![0.0; ny], vec![0.0; n]);
+    let (mut axt, mut aa) = (vec![0.0; nm], vec![0.0; m]);
+    let (mut ay, mut awt) = (vec![0.0; ny], vec![0.0; n]);
     // public-layout buffers for chunk-boundary residuals
     let mut xp = vec![0.0; nm];
     let mut wp = vec![0.0; n];
+
+    let task_chunks = n_chunks(n);
+    let y_chunks = n_chunks(ny);
 
     let mut iter = 0usize;
     let mut res = [f64::INFINITY; 4];
@@ -473,21 +728,41 @@ fn solve_from(
         swt.fill(0.0);
         let chunk = opts.chunk.min(opts.max_iters - iter);
         for _ in 0..chunk {
-            // primal step (fused: update + extrapolate + average + row sums)
+            // primal step (fused: update + extrapolate + average + row
+            // sums), sharded over task-index chunks: chunk c owns index
+            // i across every type row (xt/xbt/sxt at b*n+i, rows[i]),
+            // with the row sum accumulated b-ascending in a local — the
+            // sequential reference's exact per-element order.
             op.adjoint_tm(&y, &mut gxt, &mut ga);
-            rows.fill(0.0);
-            for b in 0..m {
-                let base_i = b * n;
-                for i in 0..n {
-                    let j = base_i + i;
-                    let v = xt[j] - tau * (gxt[j] - wt[i]);
-                    let v = if v > 0.0 { v } else { 0.0 };
-                    let xb = 2.0 * v - xt[j];
-                    xbt[j] = xb;
-                    rows[i] += xb;
-                    xt[j] = v;
-                    sxt[j] += v;
-                }
+            {
+                let xt_ds = DisjointSlice::new(&mut xt);
+                let xbt_ds = DisjointSlice::new(&mut xbt);
+                let sxt_ds = DisjointSlice::new(&mut sxt);
+                let rows_ds = DisjointSlice::new(&mut rows);
+                let gxt_ref: &[f64] = &gxt;
+                let wt_ref: &[f64] = &wt;
+                op.team.run_blocks(task_chunks, |c| {
+                    let lo = c * TASK_CHUNK;
+                    let hi = (lo + TASK_CHUNK).min(n);
+                    for i in lo..hi {
+                        let mut row = 0.0;
+                        for b in 0..m {
+                            let j = b * n + i;
+                            // SAFETY: chunk c owns index i in every row.
+                            unsafe {
+                                let old = xt_ds.get(j);
+                                let v = old - tau * (gxt_ref[j] - wt_ref[i]);
+                                let v = if v > 0.0 { v } else { 0.0 };
+                                let xb = 2.0 * v - old;
+                                xbt_ds.set(j, xb);
+                                row += xb;
+                                xt_ds.set(j, v);
+                                sxt_ds.set(j, sxt_ds.get(j) + v);
+                            }
+                        }
+                        unsafe { rows_ds.set(i, row) };
+                    }
+                });
             }
             for b in 0..m {
                 let v = alpha[b] - tau * (lp.costs[b] - ga[b]);
@@ -496,27 +771,54 @@ fn solve_from(
                 alpha[b] = v;
                 sa[b] += v;
             }
-            // dual step on extrapolated point (fused y update + average)
+            // dual step on extrapolated point (fused y update + average),
+            // elementwise over fixed chunks
             op.forward_tm(&xbt, &ab, &mut kx);
-            for i in 0..ny {
-                let v = y[i] + sigma * kx[i];
-                let v = if v > 0.0 { v } else { 0.0 };
-                y[i] = v;
-                sy[i] += v;
+            {
+                let y_ds = DisjointSlice::new(&mut y);
+                let sy_ds = DisjointSlice::new(&mut sy);
+                let kx_ref: &[f64] = &kx;
+                op.team.run_blocks(y_chunks, |c| {
+                    let lo = c * TASK_CHUNK;
+                    let hi = (lo + TASK_CHUNK).min(ny);
+                    for i in lo..hi {
+                        // SAFETY: chunk c owns indices lo..hi.
+                        unsafe {
+                            let v = y_ds.get(i) + sigma * kx_ref[i];
+                            let v = if v > 0.0 { v } else { 0.0 };
+                            y_ds.set(i, v);
+                            sy_ds.set(i, sy_ds.get(i) + v);
+                        }
+                    }
+                });
             }
-            for i in 0..n {
-                let v = wt[i] + sigma * (1.0 - rows[i]);
-                wt[i] = v;
-                swt[i] += v;
+            {
+                let wt_ds = DisjointSlice::new(&mut wt);
+                let swt_ds = DisjointSlice::new(&mut swt);
+                let rows_ref: &[f64] = &rows;
+                op.team.run_blocks(task_chunks, |c| {
+                    let lo = c * TASK_CHUNK;
+                    let hi = (lo + TASK_CHUNK).min(n);
+                    for i in lo..hi {
+                        // SAFETY: chunk c owns indices lo..hi.
+                        unsafe {
+                            let v = wt_ds.get(i) + sigma * (1.0 - rows_ref[i]);
+                            wt_ds.set(i, v);
+                            swt_ds.set(i, swt_ds.get(i) + v);
+                        }
+                    }
+                });
             }
             iter += 1;
         }
         // chunk boundary: evaluate last vs average, restart from the better
         let k = chunk as f64;
-        let axt: Vec<f64> = sxt.iter().map(|v| v / k).collect();
-        let aa: Vec<f64> = sa.iter().map(|v| v / k).collect();
-        let ay: Vec<f64> = sy.iter().map(|v| v / k).collect();
-        let awt: Vec<f64> = swt.iter().map(|v| v / k).collect();
+        div_into(&op.team, &sxt, k, &mut axt);
+        for b in 0..m {
+            aa[b] = sa[b] / k;
+        }
+        div_into(&op.team, &sy, k, &mut ay);
+        div_into(&op.team, &swt, k, &mut awt);
 
         op.to_public(&xt, &mut xp);
         op.unpermute_tasks(&wt, &mut wp);
@@ -524,8 +826,7 @@ fn solve_from(
         op.to_public(&axt, &mut xp);
         op.unpermute_tasks(&awt, &mut wp);
         let r_avg = residuals(&mut op, &xp, &aa, &ay, &wp);
-        let score = |r: &[f64; 4]| r[0].max(r[1]).max(r[2]).max(r[3]);
-        if score(&r_avg) < score(&r_last) {
+        if restart_score(&r_avg) < restart_score(&r_last) {
             xt.copy_from_slice(&axt);
             alpha.copy_from_slice(&aa);
             y.copy_from_slice(&ay);
@@ -534,17 +835,17 @@ fn solve_from(
         } else {
             res = r_last;
         }
-        if res[0].max(res[1]) <= opts.tol && res[3] <= opts.gap_tol {
+        if res.iter().all(|v| v.is_finite())
+            && res[0].max(res[1]) <= opts.tol
+            && res[3] <= opts.gap_tol
+        {
             converged = true;
             break;
         }
         // optional primal-weight adaptation (ablation shows the restart
         // scheme alone converges faster on the mapping LP; default off)
         if opts.adapt_omega {
-            let pri = res[0].max(res[1]).max(1e-12);
-            let dua = res[2].max(1e-12);
-            let ratio = (pri / dua).sqrt().clamp(0.5, 2.0);
-            omega = (omega * ratio).clamp(1e-3, 1e3);
+            omega = adapt_omega(omega, res[0].max(res[1]), res[2]);
         }
     }
 
@@ -731,5 +1032,107 @@ mod tests {
         let r1 = solve(&lp, &PdhgOptions::default());
         let rel = (r0.objective - r1.objective).abs() / (1.0 + r0.objective);
         assert!(rel < 5e-4, "{} vs {}", r0.objective, r1.objective);
+    }
+
+    #[test]
+    fn adapt_omega_guards_nonfinite_and_zero_ratios() {
+        // a converged dual chunk: near-zero dual residual must not blow
+        // omega up past its clamp (ratio saturates at 2.0)
+        let w = adapt_omega(1.0, 1e-3, 0.0);
+        assert!(w.is_finite());
+        assert_eq!(w, 2.0);
+        // both residuals at machine zero: ratio is exactly 1, omega holds
+        assert_eq!(adapt_omega(1.0, 0.0, 0.0), 1.0);
+        // non-finite residuals pass omega through untouched instead of
+        // poisoning tau/sigma with NaN/inf
+        assert_eq!(adapt_omega(0.7, f64::NAN, 1.0), 0.7);
+        assert_eq!(adapt_omega(0.7, 1.0, f64::NAN), 0.7);
+        assert_eq!(adapt_omega(0.7, f64::INFINITY, 1.0), 0.7);
+        assert_eq!(adapt_omega(0.7, 1.0, f64::INFINITY), 0.7);
+        // clamps still apply on the finite path
+        assert_eq!(adapt_omega(1e3, 1.0, 1e-12), 1e3);
+        assert_eq!(adapt_omega(1e-3, 1e-12, 1.0), 1e-3);
+        // and a solve with adaptation on still converges
+        let lp = small_lp(9, 30, 3, 2, 8);
+        let r = solve(&lp, &PdhgOptions { adapt_omega: true, ..Default::default() });
+        assert!(r.converged, "{:?}", r.residuals);
+    }
+
+    #[test]
+    fn fits_shape_rejects_shrunk_and_reshaped_instances() {
+        // a session keeps WarmIterates across deltas; a retire that
+        // shrinks n or a reshape that changes the trimmed horizon must
+        // fail fits_shape so callers fall back to a cold solve
+        let lp = small_lp(11, 12, 3, 2, 8);
+        let cold = solve(&lp, &PdhgOptions::default());
+        let warm = WarmIterates::from(&cold);
+        assert!(warm.fits_shape(&lp));
+        // retire: fewer tasks
+        let lp_small = small_lp(11, 9, 3, 2, 8);
+        assert!(!warm.fits_shape(&lp_small));
+        // reshape: same tasks, different trimmed horizon (t changes)
+        let lp_long = small_lp(11, 12, 3, 2, 16);
+        if lp_long.t != lp.t {
+            assert!(!warm.fits_shape(&lp_long));
+        }
+        // the fallback path is a clean cold solve, no panic/misindex
+        let r = if warm.fits_shape(&lp_small) {
+            solve_resume(&lp_small, &PdhgOptions::default(), &warm)
+        } else {
+            solve(&lp_small, &PdhgOptions::default())
+        };
+        assert!(r.converged, "{:?}", r.residuals);
+    }
+
+    #[test]
+    fn parallel_operator_matches_sequential_bitwise() {
+        use crate::util::rng::Rng;
+        // big enough to clear the PAR_MIN_NM gate so threads really engage
+        let lp = small_lp(7, 2000, 3, 2, 10);
+        assert!(lp.n * lp.m >= PAR_MIN_NM);
+        let mut op1 = Operator::with_threads(&lp, 1);
+        let mut op4 = Operator::with_threads(&lp, 4);
+        assert_eq!(op1.threads(), 1);
+        assert_eq!(op4.threads(), 4);
+        assert_eq!(op1.ratios_bd, op4.ratios_bd);
+        let mut rng = Rng::new(3);
+        let x: Vec<f64> = (0..lp.n * lp.m).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let alpha: Vec<f64> = (0..lp.m).map(|_| rng.uniform(0.0, 2.0)).collect();
+        let y: Vec<f64> =
+            (0..lp.m * lp.t * lp.dims).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let mut kx1 = vec![0.0; y.len()];
+        let mut kx4 = vec![0.0; y.len()];
+        op1.forward(&x, &alpha, &mut kx1);
+        op4.forward(&x, &alpha, &mut kx4);
+        for (a, b) in kx1.iter().zip(&kx4) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (mut gx1, mut ga1) = (vec![0.0; x.len()], vec![0.0; lp.m]);
+        let (mut gx4, mut ga4) = (vec![0.0; x.len()], vec![0.0; lp.m]);
+        op1.adjoint(&y, &mut gx1, &mut ga1);
+        op4.adjoint(&y, &mut gx4, &mut ga4);
+        for (a, b) in gx1.iter().zip(&gx4).chain(ga1.iter().zip(&ga4)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a short bounded solve is bit-identical end to end
+        let opts1 = PdhgOptions { max_iters: 500, threads: 1, ..Default::default() };
+        let opts4 = PdhgOptions { max_iters: 500, threads: 4, ..Default::default() };
+        let r1 = solve(&lp, &opts1);
+        let r4 = solve(&lp, &opts4);
+        assert_eq!(r1.iterations, r4.iterations);
+        assert_eq!(r1.converged, r4.converged);
+        assert_eq!(r1.objective.to_bits(), r4.objective.to_bits());
+        for (a, b) in r1.x.iter().zip(&r4.x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r1.y.iter().zip(&r4.y) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r1.w.iter().zip(&r4.w) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for i in 0..4 {
+            assert_eq!(r1.residuals[i].to_bits(), r4.residuals[i].to_bits());
+        }
     }
 }

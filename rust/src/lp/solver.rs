@@ -29,6 +29,14 @@ pub trait MappingSolver {
     fn solve_mapping(&self, lp: &MappingLp) -> Result<MappingSolution>;
     /// Short backend name for reports.
     fn name(&self) -> &'static str;
+    /// Resolved worker-thread count this backend solves with. The LP
+    /// build / certified-bound passes around a solve use the same count
+    /// so one knob governs the whole mapping path. Results are
+    /// bit-identical for every value (see `lp::pdhg`); backends without
+    /// parallel kernels stay at 1.
+    fn lp_threads(&self) -> usize {
+        1
+    }
 }
 
 /// Native f64 PDHG backend (default production path for large T).
@@ -56,6 +64,17 @@ impl MappingSolver for NativePdhgSolver {
 
     fn name(&self) -> &'static str {
         "pdhg-native"
+    }
+
+    fn lp_threads(&self) -> usize {
+        pdhg::resolve_threads(self.opts.threads)
+    }
+}
+
+impl NativePdhgSolver {
+    /// Backend with an explicit thread knob (0 = auto).
+    pub fn with_threads(threads: usize) -> Self {
+        NativePdhgSolver { opts: PdhgOptions { threads, ..Default::default() } }
     }
 }
 

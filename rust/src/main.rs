@@ -40,10 +40,11 @@ tlrs — cold-start cluster rightsizing for time-limited tasks (CLOUD'21)
 USAGE:
   tlrs solve   (--input inst.json | --workload <wspec> [--seed 1])
                [--algo <spec>[,<spec>...]] [--decompose <dspec>]
-               [--backend auto|native|artifact|simplex] [--replay] [--out sol.json]
+               [--backend auto|native|artifact|simplex] [--lp-threads N]
+               [--replay] [--out sol.json]
   tlrs session (--input inst.json | --workload <wspec> [--seed 1])
                --deltas deltas.jsonl [--algo <spec>] [--escalate 1.5|off]
-               [--fit ff|sim] [--check]
+               [--fit ff|sim] [--lp-threads N] [--check]
   tlrs gen     --workload <wspec> [--seed 1] --out inst.json [--csv trace.csv]
                (legacy: --kind synth|gct [--n ...] [--m ...] [--dims ...]
                 [--horizon ...] [--priced])
@@ -54,9 +55,9 @@ USAGE:
   tlrs figures <fig1|fig5|fig7a|fig7b|fig7c|fig8a|fig8b|fig9|fig10|fig11|tab1|rt|ntl|all>
                [--quick] [--backend ...] [--out-dir bench_results]
   tlrs ablations [--quick]
-  tlrs serve   [--addr 127.0.0.1:7077] [--backend ...] [--workers N] [--queue K]
-               [--request-timeout <seconds>] [--max-request-bytes B]
-               [--allow-shutdown]
+  tlrs serve   [--addr 127.0.0.1:7077] [--backend ...] [--lp-threads N]
+               [--workers N] [--queue K] [--request-timeout <seconds>]
+               [--max-request-bytes B] [--allow-shutdown]
   tlrs info
 
 WORKLOAD SPECS (--workload, gen/solve/stress, and the service's 'workload' field):
@@ -93,6 +94,19 @@ ALGO SPECS (--algo, and the service's 'algorithm' field):
   refine  := fill | ls[:<max_rounds>]   (fill must be the first refine)
   examples: --algo lp+fill+ls    --algo penalty:ff+ls:16
             --algo portfolio     --algo lp-map-f+ls,portfolio
+
+LP THREADS (--lp-threads, and the service's 'lp_threads' field):
+  Worker threads for the native PDHG LP kernels (operator applies,
+  proximal steps, reductions) and the LP build. 0 (the default) auto-
+  sizes to half the cores, capped at 8, leaving headroom for the
+  portfolio race and decomposed-partition workers; explicit counts are
+  capped at 64. Results are bit-identical for every value — parallel
+  runs reproduce the serial solve to the last bit (fixed-boundary
+  blocks, fixed-order combines; see lp::pdhg). Decomposed solves split
+  the budget across concurrent partitions. Over the service, requests
+  may carry \"lp_threads\": N per solve/open (values past the cap are
+  request errors); the resolved count is echoed in the response and in
+  the 'lp_threads_used' stats gauge.
 
 DECOMPOSED SOLVES (--decompose, and the service's 'decompose' field):
   Partition the tasks, solve every partition concurrently through the
@@ -187,7 +201,9 @@ fn main() {
 
 fn planner_from(args: &Args) -> Result<Planner> {
     let backend = Backend::parse(&args.get_or("backend", "auto"))?;
-    Planner::new(backend)
+    let mut planner = Planner::new(backend)?;
+    planner.set_lp_threads(args.get_usize("lp-threads", 0));
+    Ok(planner)
 }
 
 fn dispatch(args: &Args) -> Result<()> {
@@ -392,6 +408,7 @@ fn cmd_session(args: &Args) -> Result<()> {
         fit: session::parse_fit(&args.get_or("fit", "ff"))?,
         escalate_ratio: session::parse_escalate(&args.get_or("escalate", "1.5"))?,
         warm: true,
+        lp_threads: args.get_usize("lp-threads", 0),
     };
     let escalate_desc = match cfg.escalate_ratio {
         Some(r) => format!("{r:.2} x LB"),

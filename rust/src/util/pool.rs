@@ -1,9 +1,16 @@
-//! Worker pools, two shapes for two lifetimes:
+//! Worker pools, three shapes for three lifetimes:
 //!
 //!   * [`run_indexed`] — scoped-thread fan-out over a *finite* job list
 //!     (ticket counter + slot mutex + `thread::scope`), returning results
 //!     in index order. The portfolio racer and the planner's sweep pool
 //!     run on it; scoped borrowing of the caller's data is its point.
+//!   * [`Team`] — persistent parked helpers for *kernel-grained* scoped
+//!     work: [`Team::run_blocks`] dispatches one block-indexed closure
+//!     borrowing the caller's stack and returns when every block ran.
+//!     Spawning scoped threads per call (as `run_indexed` does) costs
+//!     tens of microseconds; the LP engine dispatches its operator
+//!     kernels hundreds of thousands of times per solve, so the team
+//!     wakes parked threads instead.
 //!   * [`WorkerPool`] — a *long-lived* pool with a bounded job queue for
 //!     the service runtime: jobs are `'static` closures, submission is
 //!     non-blocking admission control ([`WorkerPool::try_submit`] hands
@@ -12,6 +19,7 @@
 //!     before joining the workers (graceful shutdown).
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Run `f(i)` for every index in `0..n` on at most `workers` scoped
@@ -40,6 +48,205 @@ where
         }
     });
     results.into_iter().map(|r| r.expect("worker completed")).collect()
+}
+
+// ----- persistent scoped team ----------------------------------------------
+
+/// Type-erased description of one [`Team::run_blocks`] dispatch. The raw
+/// pointers reference the caller's stack frame; they stay valid because
+/// `run_blocks` does not return until every helper has left the
+/// generation (`running == 0`), so the borrow strictly outlives every
+/// use.
+#[derive(Clone, Copy)]
+struct BlockJob {
+    f: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    n: usize,
+}
+
+// Safety: the closure behind `f` is `Sync` (shared access from many
+// threads is its contract) and the pointers are only dereferenced while
+// the owning `run_blocks` frame is blocked alive (see `BlockJob` doc).
+unsafe impl Send for BlockJob {}
+
+struct TeamCtrl {
+    /// Bumped once per dispatch; helpers compare against the generation
+    /// they last served to detect new work.
+    generation: u64,
+    job: Option<BlockJob>,
+    /// Helpers still inside the current generation.
+    running: usize,
+    /// A helper's block panicked this generation.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct TeamShared {
+    ctrl: Mutex<TeamCtrl>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// A persistent team of parked threads for scoped data-parallel kernels.
+///
+/// [`Team::run_blocks`] runs `f(block)` for every block in
+/// `0..n_blocks`, on the calling thread plus `threads - 1` parked
+/// helpers, and returns once all blocks finished — which is exactly what
+/// makes lending the helpers a non-`'static` closure sound: the borrow
+/// cannot outlive the call. Blocks are claimed from an atomic ticket
+/// counter, so *which thread* runs a block is scheduling-dependent;
+/// callers needing deterministic results must make blocks independent
+/// (disjoint writes) and do any cross-block combining themselves in
+/// fixed block order after the call.
+///
+/// A panic inside a block is re-raised from `run_blocks` after the whole
+/// team has quiesced; the team stays usable.
+pub struct Team {
+    shared: Arc<TeamShared>,
+    /// Serializes concurrent `run_blocks` callers (the control slot
+    /// holds one dispatch at a time).
+    run_lock: Mutex<()>,
+    threads: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Team {
+    /// A team of `threads` total threads: the caller participates, so
+    /// only `threads - 1` helpers are spawned. `threads <= 1` spawns
+    /// nothing and `run_blocks` degenerates to an inline loop — the
+    /// zero-overhead sequential path.
+    pub fn new(threads: usize) -> Team {
+        let threads = threads.max(1);
+        let shared = Arc::new(TeamShared {
+            ctrl: Mutex::new(TeamCtrl {
+                generation: 0,
+                job: None,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("team-{i}"))
+                    .spawn(move || team_helper_loop(&shared))
+                    .expect("spawn team helper")
+            })
+            .collect();
+        Team { shared, run_lock: Mutex::new(()), threads, handles }
+    }
+
+    /// Total thread count (caller + helpers).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(block)` for every block in `0..n_blocks` across the team,
+    /// returning when all blocks completed. See the type doc for the
+    /// determinism contract.
+    pub fn run_blocks<F>(&self, n_blocks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.handles.is_empty() || n_blocks <= 1 {
+            for b in 0..n_blocks {
+                f(b);
+            }
+            return;
+        }
+        let serial = self.run_lock.lock().unwrap();
+        let next = AtomicUsize::new(0);
+        // Erase the closure's lifetime for the helpers. Sound: this
+        // frame blocks below until `running == 0`, i.e. until no helper
+        // can still reach the pointer (see `BlockJob`).
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            debug_assert!(ctrl.job.is_none() && ctrl.running == 0);
+            ctrl.generation += 1;
+            ctrl.job = Some(BlockJob { f: f_static, next: &next, n: n_blocks });
+            ctrl.running = self.handles.len();
+            ctrl.panicked = false;
+        }
+        self.shared.start.notify_all();
+        // participate — the calling thread is a team member too; catch a
+        // local panic so the helpers still quiesce before we unwind past
+        // the borrowed closure
+        let mine = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            drain_tickets(f_ref, &next, n_blocks)
+        }));
+        let helper_panicked = {
+            let mut ctrl = self.shared.ctrl.lock().unwrap();
+            while ctrl.running > 0 {
+                ctrl = self.shared.done.wait(ctrl).unwrap();
+            }
+            ctrl.job = None;
+            ctrl.panicked
+        };
+        drop(serial);
+        if let Err(p) = mine {
+            std::panic::resume_unwind(p);
+        }
+        if helper_panicked {
+            panic!("team: a parallel block panicked");
+        }
+    }
+}
+
+impl Drop for Team {
+    fn drop(&mut self) {
+        self.shared.ctrl.lock().unwrap().shutdown = true;
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn drain_tickets(f: &(dyn Fn(usize) + Sync), next: &AtomicUsize, n: usize) {
+    loop {
+        let b = next.fetch_add(1, Ordering::SeqCst);
+        if b >= n {
+            break;
+        }
+        f(b);
+    }
+}
+
+fn team_helper_loop(shared: &TeamShared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut ctrl = shared.ctrl.lock().unwrap();
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.generation != seen {
+                    seen = ctrl.generation;
+                    break ctrl.job.expect("generation bumped with a job set");
+                }
+                ctrl = shared.start.wait(ctrl).unwrap();
+            }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            drain_tickets(&*job.f, &*job.next, job.n)
+        }));
+        let mut ctrl = shared.ctrl.lock().unwrap();
+        if res.is_err() {
+            ctrl.panicked = true;
+        }
+        ctrl.running -= 1;
+        if ctrl.running == 0 {
+            shared.done.notify_all();
+        }
+    }
 }
 
 // ----- long-lived bounded pool ---------------------------------------------
@@ -193,6 +400,74 @@ mod tests {
         assert_eq!(run_indexed(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(run_indexed(1, 0, |i| i + 1), vec![1]);
         assert_eq!(run_indexed(3, 64, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn team_runs_every_block_exactly_once_across_dispatches() {
+        let team = Team::new(4);
+        assert_eq!(team.threads(), 4);
+        // reuse the same team for several dispatches of varying size
+        // (the generation counter must isolate them)
+        for n in [0usize, 1, 3, 7, 64, 257] {
+            let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+            team.run_blocks(n, |b| {
+                hits[b].fetch_add(1, Ordering::SeqCst);
+            });
+            for (b, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "block {b} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn team_of_one_is_inline() {
+        let team = Team::new(1);
+        assert_eq!(team.threads(), 1);
+        // borrows a stack-local mutably-written-through-atomics value;
+        // with one thread this never leaves the calling thread
+        let sum = AtomicUsize::new(0);
+        team.run_blocks(10, |b| {
+            sum.fetch_add(b, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+    }
+
+    #[test]
+    fn team_blocks_borrow_caller_data() {
+        // disjoint per-block regions of a caller-owned Vec, written via
+        // raw parts — the pattern the LP kernels use
+        let team = Team::new(3);
+        let mut out = vec![0usize; 100];
+        let ptr = out.as_mut_ptr() as usize;
+        team.run_blocks(10, |b| {
+            let p = ptr as *mut usize;
+            for i in b * 10..(b + 1) * 10 {
+                // Safety: block b exclusively owns out[b*10..(b+1)*10]
+                unsafe { *p.add(i) = i * 2 };
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+
+    #[test]
+    fn team_panicking_block_propagates_and_team_survives() {
+        let team = Team::new(4);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            team.run_blocks(16, |b| {
+                if b == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate out of run_blocks");
+        // the team must still dispatch correctly afterwards
+        let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        team.run_blocks(8, |b| {
+            hits[b].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
     }
 
     /// Hold `n` jobs inside the pool (blocked on a channel) and return

@@ -6,15 +6,17 @@
 # solve throughput/latency through the concurrent runtime at 1/4/16
 # clients and the concurrent-vs-sequential speedup; wire records the
 # streaming pull-parse/direct-write layer against the DOM it replaces,
-# with bytes/sec and exact allocation counts).
+# with bytes/sec and exact allocation counts; lp records the parallel
+# PDHG engine's 1/2/4/8-thread speedup on one large shaped LP, where
+# results are bit-identical so the ratio is pure wall-clock).
 #
 #   TLRS_BENCH_QUICK=1  shrink budgets to the tier-1 smoke sizes
 #   BENCH_ONLY=<name>   run a single bench target (placement, session,
-#                       end_to_end, lp_solvers, service, wire)
+#                       end_to_end, lp_solvers, lp, service, wire)
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-BENCHES=(placement session end_to_end lp_solvers service wire)
+BENCHES=(placement session end_to_end lp_solvers lp service wire)
 if [[ -n "${BENCH_ONLY:-}" ]]; then
     BENCHES=("$BENCH_ONLY")
 fi

@@ -86,6 +86,14 @@ grep -v reprice "$GEN_DIR/sess-deltas.jsonl" > "$GEN_DIR/sess-deltas-ok.jsonl"
 grep -q "session check  : OK" "$GEN_DIR/sess.out"
 grep -q "retire" "$GEN_DIR/sess.out"
 
+echo "== tier1: parallel LP smoke =="
+# the parallel engine is a pure perf knob: a 2-thread solve must replay
+# the whole CLI path cleanly (bit-identical results are pinned by
+# tests/prop_lp_parallel.rs, run explicitly below)
+"$TLRS" solve --input "$GEN_DIR/sess.json" --algo lp-map-f --backend native \
+    --lp-threads 2 > /dev/null
+cargo test -q --test prop_lp_parallel
+
 echo "== tier1: decomposed solve smoke =="
 # one decomposed solve per built-in partitioner: the partition table,
 # the stitch line, and the certified combined bound must all print
@@ -181,6 +189,13 @@ TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
     cargo bench --bench wire
 test -f BENCH_wire.json
 head -c 400 BENCH_wire.json
+echo
+
+echo "== tier1: parallel LP bench smoke =="
+TLRS_BENCH_QUICK=1 timeout "${TIER1_BENCH_TIMEOUT:-300}" \
+    cargo bench --bench lp
+test -f BENCH_lp.json
+head -c 400 BENCH_lp.json
 echo
 
 echo "== tier1: placement bench smoke =="
