@@ -1,0 +1,104 @@
+"""Mirror tests for tlrs-lint: the Python implementation must agree with
+the Rust one fixture-for-fixture and byte-for-byte on the inventory.
+
+The Rust side (``rust/tests/lint_rules.rs``) runs the same corpus under
+``rust/tests/lint_fixtures/`` through ``util::lint``; this file runs it
+through ``python/tools/lint.py``. Both parse the same two-line header:
+
+    //! path: algo/example.rs
+    //! expect: unordered-iter@4 float-ord@9     (or: clean)
+
+so any divergence between the implementations shows up as one side
+failing its fixture suite. The repo-clean and inventory tests below are
+the toolchain-less stand-ins for the Rust gate in containers without
+cargo.
+"""
+
+import importlib.util
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+FIXTURES = REPO / "rust" / "tests" / "lint_fixtures"
+
+_spec = importlib.util.spec_from_file_location(
+    "tlrs_lint", REPO / "python" / "tools" / "lint.py")
+lint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint)
+
+
+def parse_header(src, name):
+    lines = src.splitlines()
+    assert lines[0].startswith("//! path: "), f"{name}: missing path header"
+    assert lines[1].startswith("//! expect: "), f"{name}: missing expect header"
+    path = lines[0][len("//! path: "):].strip()
+    spec = lines[1][len("//! expect: "):].strip()
+    want = []
+    if spec != "clean":
+        for entry in spec.split():
+            rule, _, line = entry.partition("@")
+            want.append((int(line), rule))
+    return path, sorted(want)
+
+
+def fixture_files():
+    files = sorted(FIXTURES.glob("*.rs"))
+    assert len(files) >= 15, "fixture corpus shrank"
+    return files
+
+
+@pytest.mark.parametrize("file", fixture_files(), ids=lambda p: p.name)
+def test_fixture_verdicts(file):
+    src = file.read_text(encoding="utf-8")
+    path, want = parse_header(src, file.name)
+    findings, _used, _blocks = lint.scan_source(path, src)
+    got = sorted((ln, rule) for ln, rule, _msg in findings)
+    assert got == want, f"{file.name}: verdicts diverge from header"
+
+
+def test_allow_fixtures_exercise_suppression():
+    for name, min_allows in [
+        ("r1_allow.rs", 3),
+        ("r2_float_allow.rs", 1),
+        ("r6_unsafe_allow.rs", 1),
+    ]:
+        src = (FIXTURES / name).read_text(encoding="utf-8")
+        path, _ = parse_header(src, name)
+        _findings, used, _blocks = lint.scan_source(path, src)
+        assert len(used) >= min_allows, f"{name}: allows not honored"
+
+
+def test_repo_sources_are_lint_clean():
+    n_files, findings, _allows, _blocks = lint.scan_tree(str(REPO / "rust" / "src"))
+    assert n_files > 50, "src tree went missing?"
+    rendered = ["%s:%d: [%s] %s" % f for f in findings]
+    assert not rendered, "the crate's own sources violate the lint:\n" + "\n".join(rendered)
+
+
+def test_unsafe_inventory_is_complete_and_committed():
+    _n, _findings, _allows, blocks = lint.scan_tree(str(REPO / "rust" / "src"))
+    assert blocks, "the pool/pdhg unsafe blocks vanished?"
+    for f, ln, safety, allow in blocks:
+        assert safety is not None or allow is not None, (
+            f"{f}:{ln}: unsafe block with neither SAFETY comment nor allow")
+    committed = (REPO / "LINT_unsafe.json").read_text(encoding="utf-8")
+    assert lint.unsafe_json(blocks) == committed, (
+        "LINT_unsafe.json is stale — regenerate with scripts/lint.sh")
+
+
+def test_malformed_allow_details():
+    # the three malformation shapes produce the documented diagnostics
+    cases = [
+        ("// lint:allow(float-ord missing close\nlet x = 1;\n",
+         "unclosed lint:allow annotation"),
+        ("// lint:allow(float-ord) no colon\nlet x = 1;\n",
+         "lint:allow needs `): reason`"),
+        ("// lint:allow(bogus): reason\nlet x = 1;\n",
+         "unknown rule `bogus` in lint:allow"),
+        ("// lint:allow(float-ord):\nlet x = 1;\n",
+         "empty reason in lint:allow(float-ord)"),
+    ]
+    for src, detail in cases:
+        findings, _, _ = lint.scan_source("algo/example.rs", src)
+        assert [(f[1], f[2]) for f in findings] == [("bad-allow", detail)], src

@@ -1,0 +1,645 @@
+#!/usr/bin/env python3
+"""tlrs-lint, Python mirror — determinism & safety analyzer for the Rust tree.
+
+Line-for-line mirror of `rust/src/util/lint/` (lexer.rs + rules.rs) so the
+gate runs even in containers without a Rust toolchain.  The two
+implementations share the fixture corpus under `rust/tests/lint_fixtures/`
+and must produce identical verdicts (pinned by
+`python/tests/test_lint_mirror.py` and `rust/tests/lint_rules.rs`).
+
+Rules (see docs/INVARIANTS.md for the why):
+  unordered-iter  R1  no HashMap/HashSet on result paths
+  float-ord       R2  no partial_cmp / float-literal == anywhere
+  raw-spawn       R3  no raw threading outside util/pool.rs
+  wallclock       R4  no Instant::now/SystemTime in the solver core
+  panic-path      R5  no unwrap/expect/slice-index on the service path
+  unsafe-audit    R6  every `unsafe` carries an adjacent SAFETY comment
+
+Suppression: `// lint:allow(rule): reason` trailing the offending line or
+in the contiguous comment block directly above it.  Allows are counted and
+reported; a stale or malformed allow is itself a violation.
+"""
+
+import os
+import sys
+
+RULES = (
+    "unordered-iter",
+    "float-ord",
+    "raw-spawn",
+    "wallclock",
+    "panic-path",
+    "unsafe-audit",
+)
+
+# ---------------------------------------------------------------------------
+# lexer — mirrors rust/src/util/lint/lexer.rs token for token
+# ---------------------------------------------------------------------------
+
+# kinds: ident num fnum str char life op comment
+OPS3 = ("<<=", ">>=", "..=", "...")
+OPS2 = (
+    "::", "==", "!=", "<=", ">=", "&&", "||", "->", "=>", "..",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+)
+
+
+def _is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+def lex(src):
+    """Tokenize Rust source into (kind, text, line) triples.
+
+    Comments are kept as tokens (the rules need them); strings, chars and
+    lifetimes are consumed precisely so braces/quotes inside them can
+    never confuse the rule passes.
+    """
+    toks = []
+    i, line, n = 0, 1, len(src)
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "/":
+            j = i
+            while j < n and src[j] != "\n":
+                j += 1
+            toks.append(("comment", src[i:j], line))
+            i = j
+            continue
+        if c == "/" and i + 1 < n and src[i + 1] == "*":
+            start, depth, j = line, 1, i + 2
+            while j < n and depth > 0:
+                if src[j] == "/" and j + 1 < n and src[j + 1] == "*":
+                    depth += 1
+                    j += 2
+                elif src[j] == "*" and j + 1 < n and src[j + 1] == "/":
+                    depth -= 1
+                    j += 2
+                else:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+            toks.append(("comment", src[i:j], start))
+            i = j
+            continue
+        # raw / byte string prefixes and raw identifiers
+        if c == "r" or c == "b":
+            j = i + 1
+            if c == "b" and j < n and src[j] == "r":
+                j += 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes += 1
+                j += 1
+            raw_form = j > i + 1 or c == "r"  # r".., r#"..,  br".., b# is not raw
+            if j < n and src[j] == '"' and raw_form:
+                # raw (byte) string r"..", r#".."#, br".."  — no escapes
+                j += 1
+                close = '"' + "#" * hashes
+                start = line
+                while j < n and src[j:j + len(close)] != close:
+                    if src[j] == "\n":
+                        line += 1
+                    j += 1
+                j += len(close)
+                toks.append(("str", src[i:j], start))
+                i = j
+                continue
+            if c == "r" and hashes == 1 and j < n and _is_ident_start(src[j]):
+                # raw identifier r#type
+                k = j
+                while k < n and _is_ident_cont(src[k]):
+                    k += 1
+                toks.append(("ident", src[j:k], line))
+                i = k
+                continue
+            if c == "b" and i + 1 < n and src[i + 1] == '"':
+                i2, line2 = _lex_quoted(src, i + 1, line)
+                toks.append(("str", src[i:i2], line))
+                i, line = i2, line2
+                continue
+            if c == "b" and i + 1 < n and src[i + 1] == "'":
+                i2 = _lex_char(src, i + 1)
+                toks.append(("char", src[i:i2], line))
+                i = i2
+                continue
+            # plain identifier starting with r/b
+        if _is_ident_start(c):
+            j = i
+            while j < n and _is_ident_cont(src[j]):
+                j += 1
+            toks.append(("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            i2, is_float = _lex_number(src, i)
+            toks.append(("fnum" if is_float else "num", src[i:i2], line))
+            i = i2
+            continue
+        if c == '"':
+            i2, line2 = _lex_quoted(src, i, line)
+            toks.append(("str", src[i:i2], line))
+            i, line = i2, line2
+            continue
+        if c == "'":
+            if i + 1 < n and src[i + 1] == "\\":
+                i2 = _lex_char(src, i)
+                toks.append(("char", src[i:i2], line))
+                i = i2
+                continue
+            if i + 2 < n and _is_ident_start(src[i + 1]) and src[i + 2] != "'":
+                # lifetime 'a / 'static
+                j = i + 1
+                while j < n and _is_ident_cont(src[j]):
+                    j += 1
+                toks.append(("life", src[i:j], line))
+                i = j
+                continue
+            i2 = _lex_char(src, i)
+            toks.append(("char", src[i:i2], line))
+            i = i2
+            continue
+        if src[i:i + 3] in OPS3:
+            toks.append(("op", src[i:i + 3], line))
+            i += 3
+            continue
+        if src[i:i + 2] in OPS2:
+            toks.append(("op", src[i:i + 2], line))
+            i += 2
+            continue
+        toks.append(("op", c, line))
+        i += 1
+    return toks
+
+
+def _lex_quoted(src, i, line):
+    """Consume a normal "..." string starting at the quote; returns (end, line)."""
+    n = len(src)
+    j = i + 1
+    while j < n:
+        if src[j] == "\\":
+            # an escaped newline (line continuation) still ends a line
+            if j + 1 < n and src[j + 1] == "\n":
+                line += 1
+            j += 2
+            continue
+        if src[j] == "\n":
+            line += 1
+        if src[j] == '"':
+            return j + 1, line
+        j += 1
+    return j, line
+
+
+def _lex_char(src, i):
+    """Consume a 'x' / '\\n' char literal starting at the quote; returns end."""
+    n = len(src)
+    j = i + 1
+    while j < n:
+        if src[j] == "\\":
+            j += 2
+            continue
+        if src[j] == "'":
+            return j + 1
+        j += 1
+    return j
+
+
+def _lex_number(src, i):
+    """Consume a numeric literal; returns (end, is_float)."""
+    n = len(src)
+    j = i
+    if src[j] == "0" and j + 1 < n and src[j + 1] in "xob":
+        j += 2
+        while j < n and (src[j].isalnum() or src[j] == "_"):
+            j += 1
+        return j, False
+    is_float = False
+    while j < n and (src[j].isdigit() or src[j] == "_"):
+        j += 1
+    if j < n and src[j] == ".":
+        nxt = src[j + 1] if j + 1 < n else ""
+        if nxt.isdigit():
+            is_float = True
+            j += 1
+            while j < n and (src[j].isdigit() or src[j] == "_"):
+                j += 1
+        elif nxt != "." and not _is_ident_start(nxt):
+            # trailing-dot float like `1.`
+            is_float = True
+            j += 1
+    if j < n and src[j] in "eE":
+        k = j + 1
+        if k < n and src[k] in "+-":
+            k += 1
+        if k < n and src[k].isdigit():
+            is_float = True
+            j = k
+            while j < n and (src[j].isdigit() or src[j] == "_"):
+                j += 1
+    # type suffix (1usize, 2.5f64, 1f32)
+    if j < n and _is_ident_start(src[j]):
+        if src[j] == "f":
+            is_float = True
+        while j < n and _is_ident_cont(src[j]):
+            j += 1
+    return j, is_float
+
+
+# ---------------------------------------------------------------------------
+# rule engine — mirrors rust/src/util/lint/rules.rs
+# ---------------------------------------------------------------------------
+
+RUST_KEYWORDS = frozenset((
+    "let", "mut", "ref", "in", "as", "return", "break", "continue", "move",
+    "if", "else", "match", "for", "while", "loop", "where", "dyn", "box",
+    "yield", "const", "static", "fn", "impl", "pub", "use", "mod", "enum",
+    "struct", "trait", "type",
+))
+
+UNWRAP_LIKE = ("unwrap", "expect")
+SPAWN_LIKE = ("spawn", "scope", "Builder")
+
+R1_PREFIXES = ("algo/", "lp/", "model/", "io/", "sim/", "runtime/", "harness/")
+R1_FILES = (
+    "util/wire.rs", "util/json.rs",
+    "coordinator/service.rs", "coordinator/session.rs",
+)
+R4_EXEMPT_FILES = (
+    "coordinator/metrics.rs", "coordinator/runtime.rs",
+    "coordinator/session.rs", "coordinator/planner.rs",
+    "util/bench.rs", "main.rs",
+)
+R4_EXEMPT_PREFIXES = ("harness/", "bin/")
+R5_FILES = ("coordinator/service.rs", "util/wire.rs")
+R5_INDEX_FILES = ("coordinator/service.rs",)
+R3_EXEMPT_FILES = ("util/pool.rs",)
+
+
+def r1_applies(path):
+    return path.startswith(R1_PREFIXES) or path in R1_FILES
+
+
+def r3_applies(path):
+    return path not in R3_EXEMPT_FILES
+
+
+def r4_applies(path):
+    return path not in R4_EXEMPT_FILES and not path.startswith(R4_EXEMPT_PREFIXES)
+
+
+def r5_applies(path):
+    return path in R5_FILES
+
+
+def r5_index_applies(path):
+    return path in R5_INDEX_FILES
+
+
+def clean_comment(text):
+    """Strip comment sigils so only the prose is stored in the inventory."""
+    t = text.strip()
+    if t.startswith("/*"):
+        t = t[2:]
+        if t.endswith("*/"):
+            t = t[:-2]
+    while t.startswith("/"):
+        t = t[1:]
+    if t.startswith("!"):
+        t = t[1:]
+    return t.strip()
+
+
+def parse_allow(text):
+    """Extract a lint:allow annotation from one comment.
+
+    Returns (rule, reason) | None (no annotation) | ("", detail) when the
+    annotation is present but malformed.
+    """
+    at = text.find("lint:allow(")
+    if at < 0:
+        return None
+    rest = text[at + len("lint:allow("):]
+    close = rest.find(")")
+    if close < 0:
+        return ("", "unclosed lint:allow annotation")
+    rule = rest[:close].strip()
+    tail = rest[close + 1:]
+    if not tail.startswith(":"):
+        return ("", "lint:allow needs `): reason`")
+    reason = tail[1:].strip()
+    if rule not in RULES:
+        return ("", "unknown rule `%s` in lint:allow" % rule)
+    if not reason:
+        return ("", "empty reason in lint:allow(%s)" % rule)
+    return (rule, reason)
+
+
+class FileScan:
+    """All per-file scanning state; `scan_source` drives it."""
+
+    def __init__(self, path, src):
+        self.path = path
+        self.toks = lex(src)
+        self.ct = [t for t in self.toks if t[0] != "comment"]
+        self.skips = test_ranges(self.ct)
+        self.skip_lines = set()
+        for lo, hi in self.skips:
+            self.skip_lines.update(
+                range(self.ct[lo][2], self.ct[hi][2] + 1))
+        self.has_code = set(t[2] for t in self.ct)
+        self.comments = {}
+        for t in self.toks:
+            if t[0] == "comment":
+                self.comments.setdefault(t[2], []).append(t[1])
+        # allows: list of [line, rule, reason, used]
+        self.allows = []
+        self.bad_allows = []
+        for ln in sorted(self.comments):
+            for text in self.comments[ln]:
+                got = parse_allow(text)
+                if got is None:
+                    continue
+                rule, detail = got
+                if rule == "":
+                    self.bad_allows.append((ln, detail))
+                else:
+                    self.allows.append([ln, rule, detail, 0])
+
+    def in_skip(self, ci):
+        return any(lo <= ci <= hi for lo, hi in self.skips)
+
+    def attached_lines(self, line):
+        """The comment lines an annotation on `line` may live on: the line
+        itself plus the contiguous run of comment-only lines above it."""
+        out = [line]
+        ln = line - 1
+        while ln > 0 and ln in self.comments and ln not in self.has_code:
+            out.append(ln)
+            ln -= 1
+        return out
+
+    def find_allow(self, line, rule):
+        for ln in self.attached_lines(line):
+            for a in self.allows:
+                if a[0] == ln and a[1] == rule:
+                    return a
+        return None
+
+    def find_safety(self, line):
+        for ln in self.attached_lines(line):
+            for text in self.comments.get(ln, ()):
+                if "safety" in text.lower():
+                    return clean_comment(text)
+        return None
+
+
+def test_ranges(ct):
+    """Token-index ranges (inclusive) of `#[cfg(test)]` / `#[test]` items."""
+    ranges = []
+    i, n = 0, len(ct)
+    while i < n:
+        if ct[i][1] == "#" and i + 1 < n and ct[i + 1][1] == "[":
+            j, depth, idents = i + 2, 1, []
+            while j < n and depth > 0:
+                tx = ct[j][1]
+                if tx == "[":
+                    depth += 1
+                elif tx == "]":
+                    depth -= 1
+                elif ct[j][0] == "ident":
+                    idents.append(tx)
+                j += 1
+            gated = ("test" in idents and "not" not in idents
+                     and (len(idents) == 1 or idents[0] == "cfg"))
+            if gated:
+                k = j
+                while k < n and ct[k][1] not in ("{", ";"):
+                    k += 1
+                if k < n and ct[k][1] == "{":
+                    d, k = 1, k + 1
+                    while k < n and d > 0:
+                        if ct[k][1] == "{":
+                            d += 1
+                        elif ct[k][1] == "}":
+                            d -= 1
+                        k += 1
+                    ranges.append((i, k - 1))
+            i = j
+        else:
+            i += 1
+    return ranges
+
+
+def scan_source(path, src):
+    """Lint one file.  Returns (findings, allows_used, unsafe_blocks) where
+    findings are (line, rule, msg) triples and unsafe_blocks are
+    (line, safety|None, allow_reason|None) triples."""
+    fs = FileScan(path, src)
+    ct = fs.ct
+    n = len(ct)
+    raw = []  # (line, rule, msg)
+
+    def tk(i):
+        return ct[i][1] if 0 <= i < n else ""
+
+    def kd(i):
+        return ct[i][0] if 0 <= i < n else ""
+
+    unsafe_blocks = []
+    for i in range(n):
+        if fs.in_skip(i):
+            continue
+        kind, text, line = ct[i]
+        if kind == "ident":
+            if text in ("HashMap", "HashSet") and r1_applies(path):
+                raw.append((line, "unordered-iter",
+                            "`%s` on a result path: iteration order is "
+                            "nondeterministic — use BTreeMap/BTreeSet or "
+                            "drain through a sort" % text))
+            if text == "partial_cmp":
+                raw.append((line, "float-ord",
+                            "`partial_cmp` on floats: use `f64::total_cmp` "
+                            "for a total, NaN-safe order"))
+            if (text == "thread" and tk(i + 1) == "::"
+                    and tk(i + 2) in SPAWN_LIKE and r3_applies(path)):
+                raw.append((line, "raw-spawn",
+                            "`thread::%s` outside util/pool.rs: route "
+                            "threading through the pool primitives" % tk(i + 2)))
+            if (text == "Instant" and tk(i + 1) == "::" and tk(i + 2) == "now"
+                    and r4_applies(path)):
+                raw.append((line, "wallclock",
+                            "`Instant::now` in the solver core: wall-clock "
+                            "reads belong to the coordinator/harness layers"))
+            if text == "SystemTime" and r4_applies(path):
+                raw.append((line, "wallclock",
+                            "`SystemTime` in the solver core: wall-clock "
+                            "reads belong to the coordinator/harness layers"))
+            if (text in UNWRAP_LIKE and tk(i - 1) == "." and tk(i + 1) == "("
+                    and r5_applies(path)):
+                raw.append((line, "panic-path",
+                            "`.%s()` on the service request path: return a "
+                            "typed error instead" % text))
+            if text == "unsafe":
+                safety = fs.find_safety(line)
+                allow = fs.find_allow(line, "unsafe-audit")
+                if allow is not None:
+                    allow[3] += 1
+                unsafe_blocks.append(
+                    (line, safety, allow[2] if allow else None))
+                if safety is None:
+                    raw.append((line, "unsafe-audit",
+                                "`unsafe` without an adjacent "
+                                "`// SAFETY:` comment"))
+        elif kind == "op":
+            if text in ("==", "!=") and (kd(i - 1) == "fnum" or kd(i + 1) == "fnum"):
+                raw.append((line, "float-ord",
+                            "float literal compared with `==`/`!=`: exact "
+                            "float equality needs a justifying annotation"))
+            if (text == "[" and r5_index_applies(path)
+                    and ((kd(i - 1) == "ident" and tk(i - 1) not in RUST_KEYWORDS)
+                         or tk(i - 1) in (")", "]"))):
+                raw.append((line, "panic-path",
+                            "slice index on the service request path: use "
+                            "`get(..)` and return a typed error"))
+
+    findings = []
+    for line, rule, msg in raw:
+        allow = fs.find_allow(line, rule)
+        if allow is not None:
+            allow[3] += 1
+            continue
+        findings.append((line, rule, msg))
+    # unsafe-audit allows were consumed during the unsafe pass: drop the
+    # findings they suppressed (find_allow above already re-matched them,
+    # so nothing extra to do) — but a SAFETY-less unsafe with an allow
+    # must not survive as a finding:
+    findings = [f for f in findings
+                if not (f[1] == "unsafe-audit" and fs.find_allow(f[0], "unsafe-audit"))]
+
+    for ln, detail in fs.bad_allows:
+        if ln not in fs.skip_lines:
+            findings.append((ln, "bad-allow", detail))
+    for a in fs.allows:
+        if a[3] == 0 and a[0] not in fs.skip_lines:
+            findings.append((a[0], "stale-allow",
+                            "allow for `%s` suppresses nothing — remove it" % a[1]))
+    findings.sort(key=lambda f: (f[0], f[1], f[2]))
+    used = [(a[0], a[1], a[2]) for a in fs.allows if a[3] > 0]
+    return findings, used, unsafe_blocks
+
+
+# ---------------------------------------------------------------------------
+# tree scan + reporting
+# ---------------------------------------------------------------------------
+
+def walk_rs(root):
+    out = []
+    for base, dirs, files in os.walk(root):
+        dirs.sort()
+        for f in sorted(files):
+            if f.endswith(".rs"):
+                full = os.path.join(base, f)
+                rel = os.path.relpath(full, root).replace(os.sep, "/")
+                out.append(rel)
+    out.sort()
+    return out
+
+
+def json_escape(s):
+    out = []
+    for ch in s:
+        if ch == '"':
+            out.append('\\"')
+        elif ch == "\\":
+            out.append("\\\\")
+        elif ch == "\n":
+            out.append("\\n")
+        elif ch == "\t":
+            out.append("\\t")
+        elif ch == "\r":
+            out.append("\\r")
+        elif ord(ch) < 0x20:
+            out.append("\\u%04x" % ord(ch))
+        else:
+            out.append(ch)
+    return "".join(out)
+
+
+def unsafe_json(blocks):
+    """blocks: list of (file, line, safety|None, allow|None), pre-sorted."""
+    lines = ["{", '  "total": %d,' % len(blocks), '  "blocks": [']
+    for i, (f, ln, safety, allow) in enumerate(blocks):
+        s = "null" if safety is None else '"%s"' % json_escape(safety)
+        a = "null" if allow is None else '"%s"' % json_escape(allow)
+        comma = "," if i + 1 < len(blocks) else ""
+        lines.append('    {"file": "%s", "line": %d, "safety": %s, '
+                     '"allow": %s}%s' % (json_escape(f), ln, s, a, comma))
+    lines.append("  ]")
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def scan_tree(root):
+    findings, allows, blocks = [], [], []
+    files = walk_rs(root)
+    for rel in files:
+        with open(os.path.join(root, rel), "r", encoding="utf-8") as fh:
+            src = fh.read()
+        f, a, u = scan_source(rel, src)
+        findings.extend((rel, ln, rule, msg) for ln, rule, msg in f)
+        allows.extend((rel, ln, rule, reason) for ln, rule, reason in a)
+        blocks.extend((rel, ln, safety, reason) for ln, safety, reason in u)
+    findings.sort(key=lambda x: (x[0], x[1], x[2], x[3]))
+    allows.sort(key=lambda x: (x[0], x[1], x[2]))
+    blocks.sort(key=lambda x: (x[0], x[1]))
+    return len(files), findings, allows, blocks
+
+
+def main(argv):
+    root = "rust/src"
+    unsafe_out = None
+    quiet = False
+    i = 1
+    while i < len(argv):
+        if argv[i] == "--root" and i + 1 < len(argv):
+            root = argv[i + 1]
+            i += 2
+        elif argv[i] == "--unsafe-out" and i + 1 < len(argv):
+            unsafe_out = argv[i + 1]
+            i += 2
+        elif argv[i] == "--quiet":
+            quiet = True
+            i += 1
+        else:
+            sys.stderr.write("usage: lint.py [--root DIR] [--unsafe-out FILE]"
+                             " [--quiet]\n")
+            return 2
+    n_files, findings, allows, blocks = scan_tree(root)
+    for f, ln, rule, msg in findings:
+        print("%s/%s:%d: [%s] %s" % (root, f, ln, rule, msg))
+    if not quiet:
+        for f, ln, rule, reason in allows:
+            print("note: %s/%s:%d: lint:allow(%s): %s" % (root, f, ln, rule, reason))
+    if unsafe_out is not None:
+        with open(unsafe_out, "w", encoding="utf-8") as fh:
+            fh.write(unsafe_json(blocks))
+    print("tlrs-lint: scanned %d files: %d violation(s), %d allow(s) honored, "
+          "%d unsafe block(s) inventoried"
+          % (n_files, len(findings), len(allows), len(blocks)))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -19,7 +19,7 @@ use super::placement::FitPolicy;
 use super::twophase::solve_with_mapping;
 
 /// Which algorithm (figure legend names).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Algorithm {
     PenaltyMap,
     PenaltyMapF,
@@ -152,7 +152,7 @@ mod tests {
         let inst = generate(&SynthParams { n: 150, m: 6, ..Default::default() }, 33);
         let tr = trim(&inst).instance;
         let solver = NativePdhgSolver::default();
-        let mut costs = std::collections::HashMap::new();
+        let mut costs = std::collections::BTreeMap::new();
         for algo in Algorithm::all() {
             let (sol, rep) = run(&tr, algo, &solver).unwrap();
             assert!(sol.verify(&tr).is_ok(), "{algo:?}");

@@ -432,12 +432,14 @@ pub fn solve_decomposed(
     spec: &DecomposeSpec,
 ) -> Result<DecomposeReport> {
     let partitioner = spec.partitioner();
+    // lint:allow(wallclock): stage telemetry only — never feeds a decision
     let t_part = Instant::now();
     let parts = partitioner.partition(inst)?;
     validate_partition(inst.n_tasks(), &parts)?;
     let partition_prep = t_part.elapsed().as_secs_f64();
 
     if parts.len() == 1 {
+        // lint:allow(wallclock): stage telemetry only — never feeds a decision
         let t0 = Instant::now();
         let rep = portfolio.run_sequential(inst, make_solver().as_ref())?;
         let secs = t0.elapsed().as_secs_f64();
@@ -471,10 +473,12 @@ pub fn solve_decomposed(
     // concurrent per-partition solves: each worker trims its
     // sub-instance and races the full portfolio sequentially (the
     // parallelism budget is spent across partitions, not within one)
+    // lint:allow(wallclock): stage telemetry only — never feeds a decision
     let t_solve = Instant::now();
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
     let outcomes: Vec<Result<(Solution, f64, f64, f64, String)>> =
         run_indexed(parts.len(), workers.min(parts.len()), |i| {
+            // lint:allow(wallclock): stage telemetry only — never feeds a decision
             let t0 = Instant::now();
             let sub = sub_instance(inst, &parts[i]);
             let sub = trim(&sub).instance;
@@ -502,6 +506,7 @@ pub fn solve_decomposed(
     let partition_seconds = t_solve.elapsed().as_secs_f64();
 
     // merge: concatenate per-partition node pools, remapping task ids
+    // lint:allow(wallclock): stage telemetry only — never feeds a decision
     let t_merge = Instant::now();
     let merge_parts: Vec<(&[usize], &Solution)> = parts
         .iter()
@@ -514,6 +519,7 @@ pub fn solve_decomposed(
 
     // stitch: parallel per-type compaction + cross-type piggyback over
     // the merged pool — the refine pass that lets partitions share nodes
+    // lint:allow(wallclock): stage telemetry only — never feeds a decision
     let t_stitch = Instant::now();
     let stitched = stitch_fill(inst, &merged, STITCH_POLICY);
     let cost = stitched.cost(inst);

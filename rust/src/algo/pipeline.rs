@@ -395,6 +395,7 @@ impl Pipeline {
         if !self.needs_lp() {
             return self.run_shared(inst, None);
         }
+        // lint:allow(wallclock): stage telemetry only — never feeds a decision
         let t0 = Instant::now();
         let outcome = solve_lp_mapping(inst, solver)?;
         let lp_seconds = t0.elapsed().as_secs_f64();
@@ -418,6 +419,7 @@ impl Pipeline {
             strategy.label()
         );
 
+        // lint:allow(wallclock): stage telemetry only — never feeds a decision
         let t0 = Instant::now();
         let mappings = strategy.mappings(inst, lp)?;
         ensure!(!mappings.is_empty(), "strategy '{}' produced no mappings", strategy.label());
@@ -462,18 +464,21 @@ impl Pipeline {
         for &(mapping, fit) in &candidates {
             let mut sol;
             let first_pass = if skip_place {
+                // lint:allow(wallclock): stage telemetry only — never feeds a decision
                 let t = Instant::now();
                 sol = Solution::new(inst.n_tasks());
                 self.refines[0].refine(inst, mapping, fit, &mut sol);
                 refine_seconds[0] += t.elapsed().as_secs_f64();
                 1
             } else {
+                // lint:allow(wallclock): stage telemetry only — never feeds a decision
                 let t = Instant::now();
                 sol = solve_with_mapping(inst, mapping, fit, false);
                 place_seconds += t.elapsed().as_secs_f64();
                 0
             };
             for (i, pass) in self.refines.iter().enumerate().skip(first_pass) {
+                // lint:allow(wallclock): stage telemetry only — never feeds a decision
                 let t = Instant::now();
                 pass.refine(inst, mapping, fit, &mut sol);
                 refine_seconds[i] += t.elapsed().as_secs_f64();
@@ -783,6 +788,7 @@ impl Portfolio {
         if !self.pipelines.iter().any(|p| p.needs_lp()) {
             return Ok((None, 0.0));
         }
+        // lint:allow(wallclock): stage telemetry only — never feeds a decision
         let t0 = Instant::now();
         let outcome = solve_lp_mapping(inst, solver)?;
         Ok((Some(outcome), t0.elapsed().as_secs_f64()))

@@ -3,10 +3,11 @@
 //! place each group greedily, and optionally run cross-node-type filling.
 //!
 //! Without filling the node-type groups are fully independent, so they
-//! are placed on scoped threads (`std::thread::scope` — the dependency
-//! universe has no rayon) and the per-node purchase numbers are
-//! renumbered afterwards to match the sequential counter exactly: the
-//! parallel solve is bit-identical to the sequential one.
+//! are placed concurrently through `util::pool::run_indexed` (all
+//! threading routes through the pool — the `raw-spawn` lint invariant)
+//! and the per-node purchase numbers are renumbered afterwards to match
+//! the sequential counter exactly: the parallel solve is bit-identical
+//! to the sequential one.
 
 use crate::model::{DenseProfile, Instance, LoadProfile, Profile, Solution};
 
@@ -65,24 +66,13 @@ pub fn solve_with_mapping(
     }
 
     let groups = group_by_type(inst, mapping);
-    // one scoped thread per node-type; each places with a local purchase
-    // counter starting at zero
-    let mut placed: Vec<Vec<NodeState>> = std::thread::scope(|s| {
-        let handles: Vec<_> = groups
-            .iter()
-            .enumerate()
-            .map(|(b, group)| {
-                s.spawn(move || {
-                    let mut local_seq = 0usize;
-                    place_group::<LoadProfile>(inst, b, group, policy, &mut local_seq)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("placement thread panicked"))
-            .collect()
-    });
+    // one pooled worker per node-type; each places with a local purchase
+    // counter starting at zero (results come back in type order)
+    let mut placed: Vec<Vec<NodeState>> =
+        crate::util::pool::run_indexed(groups.len(), groups.len(), |b| {
+            let mut local_seq = 0usize;
+            place_group::<LoadProfile>(inst, b, &groups[b], policy, &mut local_seq)
+        });
 
     // Renumber purchase orders to the global sequential counter: groups in
     // type order, nodes within a group already in purchase order. This

@@ -1,0 +1,72 @@
+//! `tlrs-lint` CLI: scan a Rust source tree for determinism & safety
+//! invariant violations (see `util::lint` and docs/INVARIANTS.md).
+//!
+//! Exit status: 0 clean, 1 violations found, 2 usage error. Output is
+//! line-oriented (`file:line: [rule] message`) and byte-identical to
+//! the Python mirror (`python/tools/lint.py`) on the same tree.
+//!
+//! ```text
+//! tlrs-lint [--root DIR] [--unsafe-out FILE] [--quiet]
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use tlrs::util::lint::{scan_tree, unsafe_json};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().collect();
+    let mut root = String::from("rust/src");
+    let mut unsafe_out: Option<String> = None;
+    let mut quiet = false;
+    let mut i = 1usize;
+    while i < args.len() {
+        if args[i] == "--root" && i + 1 < args.len() {
+            root = args[i + 1].clone();
+            i += 2;
+        } else if args[i] == "--unsafe-out" && i + 1 < args.len() {
+            unsafe_out = Some(args[i + 1].clone());
+            i += 2;
+        } else if args[i] == "--quiet" {
+            quiet = true;
+            i += 1;
+        } else {
+            eprintln!("usage: tlrs-lint [--root DIR] [--unsafe-out FILE] [--quiet]");
+            return ExitCode::from(2);
+        }
+    }
+    let report = match scan_tree(Path::new(&root)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("tlrs-lint: cannot scan {root}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    for (f, ln, rule, msg) in &report.findings {
+        println!("{root}/{f}:{ln}: [{rule}] {msg}");
+    }
+    if !quiet {
+        for (f, ln, rule, reason) in &report.allows {
+            println!("note: {root}/{f}:{ln}: lint:allow({rule}): {reason}");
+        }
+    }
+    if let Some(path) = unsafe_out {
+        if let Err(e) = std::fs::write(&path, unsafe_json(&report.blocks)) {
+            eprintln!("tlrs-lint: cannot write {path}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    println!(
+        "tlrs-lint: scanned {} files: {} violation(s), {} allow(s) honored, \
+         {} unsafe block(s) inventoried",
+        report.n_files,
+        report.findings.len(),
+        report.allows.len(),
+        report.blocks.len()
+    );
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

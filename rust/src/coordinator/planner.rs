@@ -452,6 +452,9 @@ pub struct SerialSolver {
 impl SerialSolver {
     pub fn spawn<S: MappingSolver + Send + 'static>(inner: S, name: &'static str) -> Self {
         let (tx, rx) = mpsc::channel::<SerialJob>();
+        // lint:allow(raw-spawn): the serial solver owns a dedicated, named,
+        // long-lived thread (not a data-parallel fan-out) — the pool's
+        // run-to-completion helpers do not fit a command-loop lifetime.
         let worker = thread::Builder::new()
             .name("tlrs-serial-solver".into())
             .spawn(move || {

@@ -257,6 +257,9 @@ impl ServiceRuntime {
     pub fn spawn(self) -> RuntimeHandle {
         let addr = self.local_addr;
         let ctl = self.ctl.clone();
+        // lint:allow(raw-spawn): the accept loop is a structural, named,
+        // long-lived thread tied to the listener's lifetime, not a
+        // data-parallel task the pool could own.
         let join = std::thread::Builder::new()
             .name("tlrs-accept".into())
             .spawn(move || self.run())

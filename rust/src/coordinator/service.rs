@@ -404,6 +404,8 @@ fn handle_solve(planner: &Planner, env: &mut Envelope) -> Result<String> {
     let req = &env.rest;
     let algo = req.get("algorithm").as_str().unwrap_or("lp-map-f");
     let lp_threads = lp_threads_override(req)?;
+    // lint:allow(wallclock): request-latency observation for the metrics
+    // envelope only — the measured duration never feeds plan math.
     let t0 = std::time::Instant::now();
 
     match req.get("decompose") {
@@ -645,6 +647,23 @@ fn session_handle(
     Ok((id, handle))
 }
 
+/// Lock a session's mutex, turning lock poisoning (a prior request
+/// panicked mid-update, so the plan state may be inconsistent) into a
+/// typed `{"ok":false,...}` response instead of propagating the panic
+/// into this worker. The session stays addressable so the client can
+/// still `close` it — close recovers the guard and drops the state.
+fn lock_session(
+    id: u64,
+    handle: &std::sync::Mutex<PlanSession>,
+) -> Result<std::sync::MutexGuard<'_, PlanSession>> {
+    handle.lock().map_err(|_| {
+        anyhow!(
+            "session {id} is poisoned: a prior request panicked mid-update; \
+             close it and open a new plan"
+        )
+    })
+}
+
 fn op_open(planner: &Planner, env: &mut Envelope) -> Result<String> {
     // cheap early reject: the cap must bound *compute*, not just memory —
     // the authoritative re-check happens inside sessions.insert()
@@ -703,7 +722,7 @@ fn take_deltas_field(env: &mut Envelope) -> Result<Vec<Delta>> {
 fn op_delta(planner: &Planner, env: &mut Envelope) -> Result<String> {
     let (id, handle) = session_handle(planner, &env.rest)?;
     let deltas = take_deltas_field(env)?;
-    let mut session = handle.lock().unwrap();
+    let mut session = lock_session(id, &handle)?;
     let mut applied = Vec::with_capacity(deltas.len());
     for (i, d) in deltas.iter().enumerate() {
         let rep = session.apply(d).map_err(|e| {
@@ -757,7 +776,7 @@ fn op_query(planner: &Planner, env: &mut Envelope) -> Result<String> {
         }
         Hot::Dom => iodelta::delta_from_json(env.rest.get("delta"))?,
     };
-    let session = handle.lock().unwrap();
+    let session = lock_session(id, &handle)?;
     let current = session.cost();
     let rep = session.quote(&delta)?;
     planner.metrics.inc("session_queries", 1);
@@ -779,7 +798,9 @@ fn op_close(planner: &Planner, req: &Json) -> Result<String> {
         .sessions
         .close(id)
         .ok_or_else(|| anyhow!("no open session {id}"))?;
-    let session = handle.lock().unwrap();
+    // a poisoned session is still closable: recover the guard (the state
+    // is only read for the summary and dropped right after)
+    let session = handle.lock().unwrap_or_else(|e| e.into_inner());
     let (n_deltas, repairs, resolves) = session.delta_counts();
     planner.metrics.inc("sessions_closed", 1);
     let mut w = wire::obj_writer(160);

@@ -463,6 +463,8 @@ fn cost_kind(spec: &WorkloadSpec, dims: usize) -> Result<CostKind> {
         "key 'coef' needs cost=fixed"
     );
     Ok(match cost {
+        // lint:allow(float-ord): e == 1.0 detects the literal default exponent
+        // written by the spec author; 1.0 is exactly representable.
         "hom" if e == 1.0 => CostKind::HomogeneousLinear,
         // unit coefficients with a non-unit exponent: still "homogeneous",
         // but needs the general fixed form
@@ -622,6 +624,8 @@ pub fn spec_of_synth(p: &SynthParams) -> WorkloadSpec {
         CostKind::HomogeneousLinear => {}
         CostKind::HeterogeneousRandom { exponent } => {
             spec.set("cost", "het");
+            // lint:allow(float-ord): round-trip spec printing — only the exact
+            // default 1.0 may be omitted; any other value must be serialized.
             if *exponent != 1.0 {
                 spec.set("e", exponent.to_string());
             }
@@ -629,6 +633,8 @@ pub fn spec_of_synth(p: &SynthParams) -> WorkloadSpec {
         CostKind::Fixed { coefficients, exponent } => {
             if coefficients == &pricing::gcp_coefficients(p.dims) {
                 spec.set("cost", "gcp");
+            // lint:allow(float-ord): all-ones coefficient detection for the
+            // compact spec form; 1.0 is exactly representable.
             } else if coefficients.iter().all(|&c| c == 1.0) {
                 spec.set("cost", "hom");
             } else {
@@ -642,6 +648,8 @@ pub fn spec_of_synth(p: &SynthParams) -> WorkloadSpec {
                         .join(";"),
                 );
             }
+            // lint:allow(float-ord): round-trip spec printing — only the exact
+            // default 1.0 may be omitted; any other value must be serialized.
             if *exponent != 1.0 {
                 spec.set("e", exponent.to_string());
             }
@@ -1194,6 +1202,8 @@ fn shape_task(t: Task, shape: Shape, day: u32, seed: u64) -> Task {
             start: s,
             end: e,
             // mult == 1.0 reproduces the drawn vector bit-exactly
+            // lint:allow(float-ord): multiplier 1.0 marks an untouched window in
+            // the generator — an exact sentinel, never a computed value.
             demand: if mult == 1.0 {
                 base.clone()
             } else {

@@ -92,6 +92,7 @@ impl MappingLp {
                 let lo = c * TASK_CHUNK;
                 let hi = (lo + TASK_CHUNK).min(s_total);
                 for s in lo..hi {
+                    debug_assert!(s < s_total, "segment row within the table");
                     // SAFETY: segment s's ratio row is exclusive to the
                     // chunk owning s.
                     let row = unsafe { ds.slice_mut(s * m * dims, m * dims) };

@@ -64,6 +64,7 @@ pub fn certified_bound_par(lp: &MappingLp, y: &[f64], threads: usize) -> (f64, V
         let scale_ref: &[f64] = &scale;
         team.run_blocks(m * dims, |k| {
             let (b, d) = (k / dims, k % dims);
+            debug_assert!(k < m * dims, "block id within the prefix table");
             // SAFETY: prefix row k is exclusive to block k.
             let row = unsafe { ds.slice_mut(k * (t + 1), t + 1) };
             for ts in 0..t {
@@ -101,6 +102,7 @@ pub fn certified_bound_par(lp: &MappingLp, y: &[f64], threads: usize) -> (f64, V
                 // w may be any real; only positive contributions help the
                 // bound, but we keep the exact min to report a true dual
                 // point.
+                debug_assert!(u < n, "task index within the dual vector");
                 // SAFETY: w[u] is owned by the chunk owning u.
                 unsafe { ds.set(u, best) };
             }

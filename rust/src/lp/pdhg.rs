@@ -154,7 +154,11 @@ pub(crate) struct DisjointSlice {
     len: usize,
 }
 
+// SAFETY: the raw pointer is only written through the per-block
+// disjoint-index contract above; sharing the view across the team's
+// threads is the whole point and is sound under that contract.
 unsafe impl Send for DisjointSlice {}
+// SAFETY: same contract — concurrent blocks never alias an index.
 unsafe impl Sync for DisjointSlice {}
 
 impl DisjointSlice {
@@ -165,20 +169,27 @@ impl DisjointSlice {
     /// SAFETY: no concurrent block may touch index `i`.
     pub(crate) unsafe fn get(&self, i: usize) -> f64 {
         debug_assert!(i < self.len);
-        *self.ptr.add(i)
+        // SAFETY: i is in bounds (debug-asserted) and exclusively owned
+        // by the calling block per this fn's contract.
+        unsafe { *self.ptr.add(i) }
     }
 
     /// SAFETY: no concurrent block may touch index `i`.
     pub(crate) unsafe fn set(&self, i: usize, v: f64) {
         debug_assert!(i < self.len);
-        *self.ptr.add(i) = v;
+        // SAFETY: i is in bounds (debug-asserted) and exclusively owned
+        // by the calling block per this fn's contract.
+        unsafe { *self.ptr.add(i) = v };
     }
 
     /// SAFETY: the range `start..start+len` must be exclusive to the
     /// calling block for the lifetime of the returned slice.
     pub(crate) unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f64] {
-        debug_assert!(start + len <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+        debug_assert!(start <= self.len && len <= self.len - start);
+        // SAFETY: the range is in bounds (debug-asserted, overflow-proof
+        // form) and exclusively owned by the caller per this fn's
+        // contract, so no aliasing &mut can exist.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 }
 
@@ -376,6 +387,9 @@ impl<'a> Operator<'a> {
                 let x = xb[u];
                 for j in off[u]..off[u + 1] {
                     let w = x * rat[j];
+                    // lint:allow(float-ord): exact-zero sparsity skip —
+                    // adding/subtracting 0.0 is the identity, so skipping
+                    // preserves bit-identical sums
                     if w != 0.0 {
                         diff[seg_starts[j]] += w;
                         diff[seg_ends[j] + 1] -= w;
@@ -437,6 +451,7 @@ impl<'a> Operator<'a> {
                 for ts in 0..t {
                     prefix[ts + 1] = prefix[ts] + rho * y[(b * t + ts) * dims + d];
                 }
+                // SAFETY: partial slot k is exclusive to block k.
                 unsafe { gp_ds.set(k, prefix[t]) };
             });
         }
@@ -760,6 +775,7 @@ fn solve_from(
                                 sxt_ds.set(j, sxt_ds.get(j) + v);
                             }
                         }
+                        // SAFETY: row slot i is owned by chunk c.
                         unsafe { rows_ds.set(i, row) };
                     }
                 });

@@ -128,6 +128,8 @@ fn optimize(t: &mut [f64], basis: &mut [usize], m: usize, cols: usize, cost: &[f
             let mut rj = cost[j];
             for r in 0..m {
                 let cb = cost[basis[r]];
+                // lint:allow(float-ord): exact-zero skip — a structurally zero basis
+                // cost contributes nothing; skipping it cannot change the sum.
                 if cb != 0.0 && cb.is_finite() {
                     rj -= cb * t[r * cols + j];
                 }
@@ -177,6 +179,8 @@ fn pivot(t: &mut [f64], basis: &mut [usize], m: usize, cols: usize, r: usize, j:
     for rr in 0..m {
         if rr != r {
             let f = t[rr * cols + j];
+            // lint:allow(float-ord): exact-zero pivot skip — eliminating a row
+            // whose factor is exactly 0.0 is a no-op; the skip is bit-identical.
             if f != 0.0 {
                 for c in 0..cols {
                     t[rr * cols + c] -= f * t[r * cols + c];

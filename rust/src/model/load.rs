@@ -288,6 +288,8 @@ impl SegStore {
 
     fn push(&mut self, d: usize, node: usize, len: usize) {
         let c = self.lazy[d * self.size + node];
+        // lint:allow(float-ord): exact-zero lazy tag — 0.0 means "no pending
+        // update" for this segment-tree node; never a computed comparison.
         if c != 0.0 {
             self.apply(d, 2 * node, len / 2, c);
             self.apply(d, 2 * node + 1, len / 2, c);

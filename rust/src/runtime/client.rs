@@ -5,7 +5,7 @@
 //! executes with f32 host buffers. Python never runs here; the artifacts
 //! are self-contained.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
@@ -82,13 +82,16 @@ impl Executable {
 /// The PJRT client with a compile cache keyed by artifact path.
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+    // BTreeMap, not HashMap: iteration/order on any result-adjacent path
+    // must be deterministic (lint rule `unordered-iter`), and a compile cache
+    // this small gains nothing from hashing.
+    cache: Mutex<BTreeMap<PathBuf, std::sync::Arc<Executable>>>,
 }
 
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Engine { client, cache: Mutex::new(BTreeMap::new()) })
     }
 
     pub fn platform(&self) -> String {

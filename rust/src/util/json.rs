@@ -120,6 +120,8 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
+                // lint:allow(float-ord): fract() == 0.0 is the exact integrality test
+                // for the canonical integer print form; no tolerance is wanted here.
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
@@ -163,6 +165,8 @@ pub const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0;
 /// same integers. Rejects negatives, fractions, anything above
 /// [`MAX_SAFE_INT`], and non-finite values (`inf.fract()` is NaN).
 pub fn num_is_usize(x: f64) -> bool {
+    // lint:allow(float-ord): exact integrality test for the usize
+    // fast-path — a fractional part must reject, however small.
     x >= 0.0 && x.fract() == 0.0 && x <= MAX_SAFE_INT
 }
 

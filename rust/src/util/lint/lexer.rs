@@ -1,0 +1,395 @@
+//! Handwritten Rust lexer for `tlrs-lint`.
+//!
+//! Tokenizes Rust source into (kind, text, line) triples. Comments are
+//! kept as tokens (the rule passes need them to find `// SAFETY:` and
+//! `lint:allow` annotations); strings, chars and lifetimes are
+//! consumed precisely so braces and quotes inside them can never
+//! confuse the rule passes. No type information, no syn — the rules in
+//! [`super::rules`] are all expressible over this token stream.
+//!
+//! `python/tools/lint.py` mirrors this file function for function; the
+//! shared fixture corpus under `rust/tests/lint_fixtures/` pins the two
+//! implementations to identical verdicts.
+
+/// Token kind. `Fnum` is split out from `Num` because the `float-ord`
+/// rule fires on `==`/`!=` adjacent to a *float* literal only.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    Ident,
+    Num,
+    Fnum,
+    Str,
+    Char,
+    Life,
+    Op,
+    Comment,
+}
+
+/// One lexed token: kind, verbatim text, 1-based line of its first char.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+const OPS3: [&str; 4] = ["<<=", ">>=", "..=", "..."];
+const OPS2: [&str; 20] = [
+    "::", "==", "!=", "<=", ">=", "&&", "||", "->", "=>", "..",
+    "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn text_of(s: &[char], i: usize, j: usize) -> String {
+    s[i..j].iter().collect()
+}
+
+/// True when `s[j..]` starts with the char sequence `pat`.
+fn starts_with_at(s: &[char], j: usize, pat: &[char]) -> bool {
+    j + pat.len() <= s.len() && s[j..j + pat.len()] == *pat
+}
+
+/// Tokenize Rust source. The lexer never fails: unrecognized bytes
+/// become single-char `Op` tokens, unterminated literals run to EOF.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text_of(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    if s[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Comment, text: text_of(&s, i, j), line: start });
+            i = j;
+            continue;
+        }
+        // raw / byte string prefixes and raw identifiers
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            if c == 'b' && j < n && s[j] == 'r' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && s[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            // r".., r#".., br".." are raw; b".." is NOT (it has escapes)
+            let raw_form = j > i + 1 || c == 'r';
+            if j < n && s[j] == '"' && raw_form {
+                // raw (byte) string — no escapes, runs to `"` + hashes
+                j += 1;
+                let mut close = vec!['"'];
+                close.extend(std::iter::repeat('#').take(hashes));
+                let start = line;
+                while j < n && !starts_with_at(&s, j, &close) {
+                    if s[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                j += close.len();
+                let j = j.min(n);
+                toks.push(Tok { kind: Kind::Str, text: text_of(&s, i, j), line: start });
+                i = j;
+                continue;
+            }
+            if c == 'r' && hashes == 1 && j < n && is_ident_start(s[j]) {
+                // raw identifier r#type
+                let mut k = j;
+                while k < n && is_ident_cont(s[k]) {
+                    k += 1;
+                }
+                toks.push(Tok { kind: Kind::Ident, text: text_of(&s, j, k), line });
+                i = k;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && s[i + 1] == '"' {
+                let (i2, line2) = lex_quoted(&s, i + 1, line);
+                toks.push(Tok { kind: Kind::Str, text: text_of(&s, i, i2), line });
+                i = i2;
+                line = line2;
+                continue;
+            }
+            if c == 'b' && i + 1 < n && s[i + 1] == '\'' {
+                let i2 = lex_char(&s, i + 1);
+                toks.push(Tok { kind: Kind::Char, text: text_of(&s, i, i2), line });
+                i = i2;
+                continue;
+            }
+            // otherwise: a plain identifier starting with r/b — fall through
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: text_of(&s, i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let (i2, is_float) = lex_number(&s, i);
+            let kind = if is_float { Kind::Fnum } else { Kind::Num };
+            toks.push(Tok { kind, text: text_of(&s, i, i2), line });
+            i = i2;
+            continue;
+        }
+        if c == '"' {
+            let (i2, line2) = lex_quoted(&s, i, line);
+            toks.push(Tok { kind: Kind::Str, text: text_of(&s, i, i2), line });
+            i = i2;
+            line = line2;
+            continue;
+        }
+        if c == '\'' {
+            if i + 1 < n && s[i + 1] == '\\' {
+                let i2 = lex_char(&s, i);
+                toks.push(Tok { kind: Kind::Char, text: text_of(&s, i, i2), line });
+                i = i2;
+                continue;
+            }
+            if i + 2 < n && is_ident_start(s[i + 1]) && s[i + 2] != '\'' {
+                // lifetime 'a / 'static
+                let mut j = i + 1;
+                while j < n && is_ident_cont(s[j]) {
+                    j += 1;
+                }
+                toks.push(Tok { kind: Kind::Life, text: text_of(&s, i, j), line });
+                i = j;
+                continue;
+            }
+            let i2 = lex_char(&s, i);
+            toks.push(Tok { kind: Kind::Char, text: text_of(&s, i, i2), line });
+            i = i2;
+            continue;
+        }
+        if i + 3 <= n {
+            let three = text_of(&s, i, i + 3);
+            if OPS3.contains(&three.as_str()) {
+                toks.push(Tok { kind: Kind::Op, text: three, line });
+                i += 3;
+                continue;
+            }
+        }
+        if i + 2 <= n {
+            let two = text_of(&s, i, i + 2);
+            if OPS2.contains(&two.as_str()) {
+                toks.push(Tok { kind: Kind::Op, text: two, line });
+                i += 2;
+                continue;
+            }
+        }
+        toks.push(Tok { kind: Kind::Op, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Consume a normal `"..."` string starting at the quote; returns
+/// (end index, line after the string).
+fn lex_quoted(s: &[char], i: usize, mut line: usize) -> (usize, usize) {
+    let n = s.len();
+    let mut j = i + 1;
+    while j < n {
+        if s[j] == '\\' {
+            // an escaped newline (line continuation) still ends a line
+            if j + 1 < n && s[j + 1] == '\n' {
+                line += 1;
+            }
+            j += 2;
+            continue;
+        }
+        if s[j] == '\n' {
+            line += 1;
+        }
+        if s[j] == '"' {
+            return (j + 1, line);
+        }
+        j += 1;
+    }
+    (j.min(n), line)
+}
+
+/// Consume a `'x'` / `'\n'` char literal starting at the quote.
+fn lex_char(s: &[char], i: usize) -> usize {
+    let n = s.len();
+    let mut j = i + 1;
+    while j < n {
+        if s[j] == '\\' {
+            j += 2;
+            continue;
+        }
+        if s[j] == '\'' {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j.min(n)
+}
+
+/// Consume a numeric literal; returns (end index, is_float).
+fn lex_number(s: &[char], i: usize) -> (usize, bool) {
+    let n = s.len();
+    let mut j = i;
+    if s[j] == '0' && j + 1 < n && matches!(s[j + 1], 'x' | 'o' | 'b') {
+        j += 2;
+        while j < n && (s[j].is_alphanumeric() || s[j] == '_') {
+            j += 1;
+        }
+        return (j, false);
+    }
+    let mut is_float = false;
+    while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+        j += 1;
+    }
+    if j < n && s[j] == '.' {
+        let nxt = if j + 1 < n { s[j + 1] } else { '\0' };
+        if nxt.is_ascii_digit() {
+            is_float = true;
+            j += 1;
+            while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                j += 1;
+            }
+        } else if nxt != '.' && !is_ident_start(nxt) {
+            // trailing-dot float like `1.`
+            is_float = true;
+            j += 1;
+        }
+    }
+    if j < n && matches!(s[j], 'e' | 'E') {
+        let mut k = j + 1;
+        if k < n && matches!(s[k], '+' | '-') {
+            k += 1;
+        }
+        if k < n && s[k].is_ascii_digit() {
+            is_float = true;
+            j = k;
+            while j < n && (s[j].is_ascii_digit() || s[j] == '_') {
+                j += 1;
+            }
+        }
+    }
+    // type suffix (1usize, 2.5f64, 1f32)
+    if j < n && is_ident_start(s[j]) {
+        if s[j] == 'f' {
+            is_float = true;
+        }
+        while j < n && is_ident_cont(s[j]) {
+            j += 1;
+        }
+    }
+    (j, is_float)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn basic_tokens() {
+        let t = kinds("let x = 1.5 + y;");
+        assert_eq!(
+            t,
+            vec![
+                (Kind::Ident, "let".to_string()),
+                (Kind::Ident, "x".to_string()),
+                (Kind::Op, "=".to_string()),
+                (Kind::Fnum, "1.5".to_string()),
+                (Kind::Op, "+".to_string()),
+                (Kind::Ident, "y".to_string()),
+                (Kind::Op, ";".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn float_forms() {
+        for (src, want) in [
+            ("1.0", Kind::Fnum),
+            ("1.", Kind::Fnum),
+            ("1e3", Kind::Fnum),
+            ("2f64", Kind::Fnum),
+            ("1_000", Kind::Num),
+            ("0xff", Kind::Num),
+            ("3usize", Kind::Num),
+        ] {
+            assert_eq!(lex(src)[0].kind, want, "{src}");
+        }
+        // `1..n` is a range, not a float
+        let t = kinds("1..n");
+        assert_eq!(t[0], (Kind::Num, "1".to_string()));
+        assert_eq!(t[1], (Kind::Op, "..".to_string()));
+    }
+
+    #[test]
+    fn strings_hide_contents() {
+        let t = kinds(r#"let s = "HashMap == 1.0"; x"#);
+        assert!(t.iter().all(|(k, tx)| *k != Kind::Ident || tx != "HashMap"));
+        let t = kinds("r#\"unsafe \" inside\"# y");
+        assert_eq!(t[0].0, Kind::Str);
+        assert_eq!(t[1], (Kind::Ident, "y".to_string()));
+    }
+
+    #[test]
+    fn line_numbers_cross_multiline_tokens() {
+        let src = "a\n/* x\n y */\n\"s1\\\n s2\"\nb";
+        let t = lex(src);
+        let b = t.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 6);
+    }
+
+    #[test]
+    fn lifetimes_and_chars() {
+        let t = kinds("&'a str; 'x'; '\\n'");
+        assert_eq!(t[1], (Kind::Life, "'a".to_string()));
+        assert!(t.iter().any(|(k, tx)| *k == Kind::Char && tx == "'x'"));
+    }
+}

@@ -1,0 +1,145 @@
+//! `tlrs-lint`: in-repo determinism & safety analyzer.
+//!
+//! The solver's headline guarantees — bit-identical parallel solves,
+//! seed-reproducible workloads, a service that degrades instead of
+//! dying — rest on coding invariants no compiler checks: no unordered
+//! iteration on result paths, no partial float orders, all threading
+//! through `util::pool`, no wall-clock reads in the solver core, no
+//! panics on the service request path, every `unsafe` audited. This
+//! module enforces them at the token level over the crate's own
+//! sources; `src/bin/lint.rs` is the CLI and `scripts/lint.sh` the
+//! gate entry point.
+//!
+//! Zero dependencies by design: [`lexer`] is a handwritten Rust lexer
+//! in the house style of `util::json` / `util::wire`, and [`rules`] is
+//! a small token-pattern engine over it. `python/tools/lint.py`
+//! mirrors both line for line so the gate runs in toolchain-less
+//! containers; `rust/tests/lint_fixtures/` pins the two to identical
+//! verdicts.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{scan_source, Finding, ScanOut, RULES};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Aggregated result of scanning a source tree. All vectors are sorted
+/// (file, line, ..) so output is deterministic and diffable; the Python
+/// mirror produces the identical ordering.
+pub struct TreeReport {
+    pub n_files: usize,
+    /// (file, line, rule, message)
+    pub findings: Vec<(String, usize, String, String)>,
+    /// (file, line, rule, reason)
+    pub allows: Vec<(String, usize, String, String)>,
+    /// (file, line, safety comment, allow reason)
+    pub blocks: Vec<(String, usize, Option<String>, Option<String>)>,
+}
+
+/// All `.rs` files under `root`, as sorted root-relative `/`-paths.
+pub fn walk_rs(root: &Path) -> io::Result<Vec<String>> {
+    fn visit(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<_> =
+            fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                visit(&p, out)?;
+            } else if p.extension().map_or(false, |x| x == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut full = Vec::new();
+    visit(root, &mut full)?;
+    let mut out: Vec<String> = full
+        .iter()
+        .map(|p| {
+            p.strip_prefix(root)
+                .expect("walked path is under root")
+                .to_string_lossy()
+                .replace(std::path::MAIN_SEPARATOR, "/")
+        })
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+/// Scan every `.rs` file under `root` and merge the per-file results.
+pub fn scan_tree(root: &Path) -> io::Result<TreeReport> {
+    let files = walk_rs(root)?;
+    let mut findings = Vec::new();
+    let mut allows = Vec::new();
+    let mut blocks = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(root.join(rel))?;
+        let out = scan_source(rel, &src);
+        for (ln, rule, msg) in out.findings {
+            findings.push((rel.clone(), ln, rule, msg));
+        }
+        for (ln, rule, reason) in out.allows_used {
+            allows.push((rel.clone(), ln, rule, reason));
+        }
+        for (ln, safety, reason) in out.unsafe_blocks {
+            blocks.push((rel.clone(), ln, safety, reason));
+        }
+    }
+    findings.sort();
+    allows.sort();
+    blocks.sort_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+    Ok(TreeReport { n_files: files.len(), findings, allows, blocks })
+}
+
+/// Minimal JSON string escaper — same table as the Python mirror.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::new();
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the unsafe inventory (`LINT_unsafe.json`). Byte-identical to
+/// the Python mirror's output on the same blocks.
+pub fn unsafe_json(
+    blocks: &[(String, usize, Option<String>, Option<String>)],
+) -> String {
+    let mut lines = vec![
+        "{".to_string(),
+        format!("  \"total\": {},", blocks.len()),
+        "  \"blocks\": [".to_string(),
+    ];
+    for (i, (f, ln, safety, allow)) in blocks.iter().enumerate() {
+        let s = match safety {
+            None => "null".to_string(),
+            Some(t) => format!("\"{}\"", json_escape(t)),
+        };
+        let a = match allow {
+            None => "null".to_string(),
+            Some(t) => format!("\"{}\"", json_escape(t)),
+        };
+        let comma = if i + 1 < blocks.len() { "," } else { "" };
+        lines.push(format!(
+            "    {{\"file\": \"{}\", \"line\": {}, \"safety\": {}, \"allow\": {}}}{}",
+            json_escape(f), ln, s, a, comma
+        ));
+    }
+    lines.push("  ]".to_string());
+    lines.push("}".to_string());
+    lines.join("\n") + "\n"
+}

@@ -1,0 +1,510 @@
+//! Rule engine for `tlrs-lint`: six token-level checks with path-scoped
+//! policies, suppression annotations, and the unsafe inventory.
+//!
+//! The rules (docs/INVARIANTS.md has the full rationale):
+//!
+//! | rule            | invariant it protects                               |
+//! |-----------------|-----------------------------------------------------|
+//! | `unordered-iter`| no HashMap/HashSet on result paths                  |
+//! | `float-ord`     | no `partial_cmp` / float-literal `==` anywhere      |
+//! | `raw-spawn`     | no raw threading outside `util/pool.rs`             |
+//! | `wallclock`     | no `Instant::now`/`SystemTime` in the solver core   |
+//! | `panic-path`    | no unwrap/expect/slice-index on the service path    |
+//! | `unsafe-audit`  | every `unsafe` carries an adjacent `SAFETY:` comment|
+//!
+//! Suppression: a `lint:allow` comment — rule in parens, then a
+//! `: reason` tail — trailing the offending
+//! line or in the contiguous comment block directly above it. Allows
+//! are counted and reported; a stale or malformed allow is itself a
+//! violation (`stale-allow` / `bad-allow`).
+//!
+//! Code under `#[cfg(test)]` / `#[test]` is skipped: tests may unwrap,
+//! time and spawn freely — the invariants guard shipped behavior.
+//!
+//! `python/tools/lint.py` mirrors this file; the fixture corpus under
+//! `rust/tests/lint_fixtures/` pins both to identical verdicts.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{lex, Kind, Tok};
+
+/// The allowable rule names inside a `lint:allow` annotation.
+pub const RULES: [&str; 6] = [
+    "unordered-iter",
+    "float-ord",
+    "raw-spawn",
+    "wallclock",
+    "panic-path",
+    "unsafe-audit",
+];
+
+/// Keywords that may legitimately precede `[` (array literals, `in [..]`)
+/// — everything else before `[` on the service path is an index panic.
+const RUST_KEYWORDS: [&str; 30] = [
+    "let", "mut", "ref", "in", "as", "return", "break", "continue", "move",
+    "if", "else", "match", "for", "while", "loop", "where", "dyn", "box",
+    "yield", "const", "static", "fn", "impl", "pub", "use", "mod", "enum",
+    "struct", "trait", "type",
+];
+
+const UNWRAP_LIKE: [&str; 2] = ["unwrap", "expect"];
+const SPAWN_LIKE: [&str; 3] = ["spawn", "scope", "Builder"];
+
+const R1_PREFIXES: [&str; 7] =
+    ["algo/", "lp/", "model/", "io/", "sim/", "runtime/", "harness/"];
+const R1_FILES: [&str; 4] = [
+    "util/wire.rs", "util/json.rs",
+    "coordinator/service.rs", "coordinator/session.rs",
+];
+const R4_EXEMPT_FILES: [&str; 6] = [
+    "coordinator/metrics.rs", "coordinator/runtime.rs",
+    "coordinator/session.rs", "coordinator/planner.rs",
+    "util/bench.rs", "main.rs",
+];
+const R4_EXEMPT_PREFIXES: [&str; 2] = ["harness/", "bin/"];
+const R5_FILES: [&str; 2] = ["coordinator/service.rs", "util/wire.rs"];
+const R5_INDEX_FILES: [&str; 1] = ["coordinator/service.rs"];
+const R3_EXEMPT_FILES: [&str; 1] = ["util/pool.rs"];
+
+fn r1_applies(path: &str) -> bool {
+    R1_PREFIXES.iter().any(|p| path.starts_with(p)) || R1_FILES.contains(&path)
+}
+
+fn r3_applies(path: &str) -> bool {
+    !R3_EXEMPT_FILES.contains(&path)
+}
+
+fn r4_applies(path: &str) -> bool {
+    !R4_EXEMPT_FILES.contains(&path)
+        && !R4_EXEMPT_PREFIXES.iter().any(|p| path.starts_with(p))
+}
+
+fn r5_applies(path: &str) -> bool {
+    R5_FILES.contains(&path)
+}
+
+fn r5_index_applies(path: &str) -> bool {
+    R5_INDEX_FILES.contains(&path)
+}
+
+/// One reported violation: (line, rule, message).
+pub type Finding = (usize, String, String);
+/// One honored suppression: (line, rule, reason).
+pub type AllowUse = (usize, String, String);
+/// One inventoried unsafe block: (line, safety comment, allow reason).
+pub type UnsafeBlock = (usize, Option<String>, Option<String>);
+
+/// Result of scanning one file.
+pub struct ScanOut {
+    pub findings: Vec<Finding>,
+    pub allows_used: Vec<AllowUse>,
+    pub unsafe_blocks: Vec<UnsafeBlock>,
+}
+
+/// Strip comment sigils so only the prose lands in the inventory.
+fn clean_comment(text: &str) -> String {
+    let mut t = text.trim();
+    if let Some(stripped) = t.strip_prefix("/*") {
+        t = stripped;
+        if let Some(stripped) = t.strip_suffix("*/") {
+            t = stripped;
+        }
+    }
+    while let Some(stripped) = t.strip_prefix('/') {
+        t = stripped;
+    }
+    if let Some(stripped) = t.strip_prefix('!') {
+        t = stripped;
+    }
+    t.trim().to_string()
+}
+
+/// Parsed `lint:allow` annotation: `Ok((rule, reason))`, or the
+/// malformation detail. `None` from [`parse_allow`] means no annotation.
+type AllowParse = Result<(String, String), String>;
+
+/// Extract a `lint:allow` annotation — rule in parens, `: reason`
+/// tail — from one comment.
+fn parse_allow(text: &str) -> Option<AllowParse> {
+    let tag = "lint:allow(";
+    let at = text.find(tag)?;
+    let rest = &text[at + tag.len()..];
+    let close = match rest.find(')') {
+        Some(c) => c,
+        None => return Some(Err("unclosed lint:allow annotation".into())),
+    };
+    let rule = rest[..close].trim();
+    let tail = &rest[close + 1..];
+    let reason = match tail.strip_prefix(':') {
+        Some(r) => r.trim(),
+        None => return Some(Err("lint:allow needs `): reason`".into())),
+    };
+    if !RULES.contains(&rule) {
+        return Some(Err(format!("unknown rule `{rule}` in lint:allow")));
+    }
+    if reason.is_empty() {
+        return Some(Err(format!("empty reason in lint:allow({rule})")));
+    }
+    Some(Ok((rule.to_string(), reason.to_string())))
+}
+
+/// One registered allow annotation and its use count.
+struct Allow {
+    line: usize,
+    rule: String,
+    reason: String,
+    used: usize,
+}
+
+/// All per-file scanning state; [`scan_source`] drives it.
+struct FileScan {
+    ct: Vec<Tok>,
+    skips: Vec<(usize, usize)>,
+    skip_lines: BTreeSet<usize>,
+    has_code: BTreeSet<usize>,
+    comments: BTreeMap<usize, Vec<String>>,
+    allows: Vec<Allow>,
+    bad_allows: Vec<(usize, String)>,
+}
+
+impl FileScan {
+    fn new(src: &str) -> FileScan {
+        let toks = lex(src);
+        let ct: Vec<Tok> =
+            toks.iter().filter(|t| t.kind != Kind::Comment).cloned().collect();
+        let skips = test_ranges(&ct);
+        let mut skip_lines = BTreeSet::new();
+        for &(lo, hi) in &skips {
+            for ln in ct[lo].line..=ct[hi].line {
+                skip_lines.insert(ln);
+            }
+        }
+        let has_code: BTreeSet<usize> = ct.iter().map(|t| t.line).collect();
+        let mut comments: BTreeMap<usize, Vec<String>> = BTreeMap::new();
+        for t in &toks {
+            if t.kind == Kind::Comment {
+                comments.entry(t.line).or_default().push(t.text.clone());
+            }
+        }
+        let mut allows = Vec::new();
+        let mut bad_allows = Vec::new();
+        for (&ln, texts) in &comments {
+            for text in texts {
+                match parse_allow(text) {
+                    None => {}
+                    Some(Err(detail)) => bad_allows.push((ln, detail)),
+                    Some(Ok((rule, reason))) => {
+                        allows.push(Allow { line: ln, rule, reason, used: 0 })
+                    }
+                }
+            }
+        }
+        FileScan { ct, skips, skip_lines, has_code, comments, allows, bad_allows }
+    }
+
+    fn in_skip(&self, ci: usize) -> bool {
+        self.skips.iter().any(|&(lo, hi)| lo <= ci && ci <= hi)
+    }
+
+    /// The comment lines an annotation suppressing `line` may live on:
+    /// the line itself plus the contiguous run of comment-only lines
+    /// directly above it.
+    fn attached_lines(&self, line: usize) -> Vec<usize> {
+        let mut out = vec![line];
+        let mut ln = line.wrapping_sub(1);
+        while ln > 0
+            && self.comments.contains_key(&ln)
+            && !self.has_code.contains(&ln)
+        {
+            out.push(ln);
+            ln -= 1;
+        }
+        out
+    }
+
+    fn find_allow(&self, line: usize, rule: &str) -> Option<usize> {
+        for ln in self.attached_lines(line) {
+            for (ai, a) in self.allows.iter().enumerate() {
+                if a.line == ln && a.rule == rule {
+                    return Some(ai);
+                }
+            }
+        }
+        None
+    }
+
+    fn find_safety(&self, line: usize) -> Option<String> {
+        for ln in self.attached_lines(line) {
+            if let Some(texts) = self.comments.get(&ln) {
+                for text in texts {
+                    if text.to_lowercase().contains("safety") {
+                        return Some(clean_comment(text));
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Token-index ranges (inclusive) of `#[cfg(test)]` / `#[test]` items
+/// over the comment-free token stream.
+fn test_ranges(ct: &[Tok]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let n = ct.len();
+    let mut i = 0usize;
+    while i < n {
+        if ct[i].text == "#" && i + 1 < n && ct[i + 1].text == "[" {
+            let mut j = i + 2;
+            let mut depth = 1usize;
+            let mut idents: Vec<&str> = Vec::new();
+            while j < n && depth > 0 {
+                let tx = ct[j].text.as_str();
+                if tx == "[" {
+                    depth += 1;
+                } else if tx == "]" {
+                    depth -= 1;
+                } else if ct[j].kind == Kind::Ident {
+                    idents.push(tx);
+                }
+                j += 1;
+            }
+            let gated = idents.contains(&"test")
+                && !idents.contains(&"not")
+                && (idents.len() == 1 || idents[0] == "cfg");
+            if gated {
+                let mut k = j;
+                while k < n && ct[k].text != "{" && ct[k].text != ";" {
+                    k += 1;
+                }
+                if k < n && ct[k].text == "{" {
+                    let mut d = 1usize;
+                    k += 1;
+                    while k < n && d > 0 {
+                        if ct[k].text == "{" {
+                            d += 1;
+                        } else if ct[k].text == "}" {
+                            d -= 1;
+                        }
+                        k += 1;
+                    }
+                    ranges.push((i, k - 1));
+                }
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    ranges
+}
+
+/// Lint one file. `path` is the `rust/src`-relative path with `/`
+/// separators — the policy tables key off it.
+pub fn scan_source(path: &str, src: &str) -> ScanOut {
+    let mut fs = FileScan::new(src);
+    let n = fs.ct.len();
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut unsafe_blocks: Vec<UnsafeBlock> = Vec::new();
+
+    let tk = |ct: &[Tok], i: isize| -> String {
+        if i >= 0 && (i as usize) < ct.len() {
+            ct[i as usize].text.clone()
+        } else {
+            String::new()
+        }
+    };
+    let kd = |ct: &[Tok], i: isize| -> Option<Kind> {
+        if i >= 0 && (i as usize) < ct.len() {
+            Some(ct[i as usize].kind)
+        } else {
+            None
+        }
+    };
+
+    for i in 0..n {
+        if fs.in_skip(i) {
+            continue;
+        }
+        let ii = i as isize;
+        let (kind, text, line) = {
+            let t = &fs.ct[i];
+            (t.kind, t.text.clone(), t.line)
+        };
+        match kind {
+            Kind::Ident => {
+                if (text == "HashMap" || text == "HashSet") && r1_applies(path) {
+                    raw.push((line, "unordered-iter".into(), format!(
+                        "`{text}` on a result path: iteration order is \
+                         nondeterministic — use BTreeMap/BTreeSet or \
+                         drain through a sort"
+                    )));
+                }
+                if text == "partial_cmp" {
+                    raw.push((line, "float-ord".into(),
+                        "`partial_cmp` on floats: use `f64::total_cmp` \
+                         for a total, NaN-safe order".into()));
+                }
+                if text == "thread"
+                    && tk(&fs.ct, ii + 1) == "::"
+                    && SPAWN_LIKE.contains(&tk(&fs.ct, ii + 2).as_str())
+                    && r3_applies(path)
+                {
+                    raw.push((line, "raw-spawn".into(), format!(
+                        "`thread::{}` outside util/pool.rs: route \
+                         threading through the pool primitives",
+                        tk(&fs.ct, ii + 2)
+                    )));
+                }
+                if text == "Instant"
+                    && tk(&fs.ct, ii + 1) == "::"
+                    && tk(&fs.ct, ii + 2) == "now"
+                    && r4_applies(path)
+                {
+                    raw.push((line, "wallclock".into(),
+                        "`Instant::now` in the solver core: wall-clock \
+                         reads belong to the coordinator/harness layers".into()));
+                }
+                if text == "SystemTime" && r4_applies(path) {
+                    raw.push((line, "wallclock".into(),
+                        "`SystemTime` in the solver core: wall-clock \
+                         reads belong to the coordinator/harness layers".into()));
+                }
+                if UNWRAP_LIKE.contains(&text.as_str())
+                    && tk(&fs.ct, ii - 1) == "."
+                    && tk(&fs.ct, ii + 1) == "("
+                    && r5_applies(path)
+                {
+                    raw.push((line, "panic-path".into(), format!(
+                        "`.{text}()` on the service request path: return a \
+                         typed error instead"
+                    )));
+                }
+                if text == "unsafe" {
+                    let safety = fs.find_safety(line);
+                    let allow = fs.find_allow(line, "unsafe-audit");
+                    let allow_reason = allow.map(|ai| {
+                        fs.allows[ai].used += 1;
+                        fs.allows[ai].reason.clone()
+                    });
+                    let missing = safety.is_none();
+                    unsafe_blocks.push((line, safety, allow_reason));
+                    if missing {
+                        raw.push((line, "unsafe-audit".into(),
+                            "`unsafe` without an adjacent \
+                             `// SAFETY:` comment".into()));
+                    }
+                }
+            }
+            Kind::Op => {
+                if (text == "==" || text == "!=")
+                    && (kd(&fs.ct, ii - 1) == Some(Kind::Fnum)
+                        || kd(&fs.ct, ii + 1) == Some(Kind::Fnum))
+                {
+                    raw.push((line, "float-ord".into(),
+                        "float literal compared with `==`/`!=`: exact \
+                         float equality needs a justifying annotation".into()));
+                }
+                if text == "["
+                    && r5_index_applies(path)
+                    && ((kd(&fs.ct, ii - 1) == Some(Kind::Ident)
+                        && !RUST_KEYWORDS.contains(&tk(&fs.ct, ii - 1).as_str()))
+                        || tk(&fs.ct, ii - 1) == ")"
+                        || tk(&fs.ct, ii - 1) == "]")
+                {
+                    raw.push((line, "panic-path".into(),
+                        "slice index on the service request path: use \
+                         `get(..)` and return a typed error".into()));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for (line, rule, msg) in raw {
+        if let Some(ai) = fs.find_allow(line, &rule) {
+            fs.allows[ai].used += 1;
+            continue;
+        }
+        findings.push((line, rule, msg));
+    }
+    // an unsafe block whose allow was consumed during the inventory pass
+    // must not survive as a finding
+    findings.retain(|f| {
+        !(f.1 == "unsafe-audit" && fs.find_allow(f.0, "unsafe-audit").is_some())
+    });
+
+    for (ln, detail) in &fs.bad_allows {
+        if !fs.skip_lines.contains(ln) {
+            findings.push((*ln, "bad-allow".into(), detail.clone()));
+        }
+    }
+    for a in &fs.allows {
+        if a.used == 0 && !fs.skip_lines.contains(&a.line) {
+            findings.push((a.line, "stale-allow".into(), format!(
+                "allow for `{}` suppresses nothing — remove it", a.rule
+            )));
+        }
+    }
+    findings.sort();
+    let allows_used: Vec<AllowUse> = fs
+        .allows
+        .iter()
+        .filter(|a| a.used > 0)
+        .map(|a| (a.line, a.rule.clone(), a.reason.clone()))
+        .collect();
+    ScanOut { findings, allows_used, unsafe_blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<(usize, String)> {
+        scan_source(path, src)
+            .findings
+            .into_iter()
+            .map(|(ln, rule, _)| (ln, rule))
+            .collect()
+    }
+
+    #[test]
+    fn policy_scoping() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of("algo/x.rs", src).len(), 1);
+        assert_eq!(rules_of("coordinator/metrics.rs", src).len(), 0);
+    }
+
+    #[test]
+    fn allow_suppresses_and_is_counted() {
+        let src = "// lint:allow(float-ord): exact sentinel\nif x == 1.0 {}\n";
+        let out = scan_source("algo/x.rs", src);
+        assert!(out.findings.is_empty());
+        assert_eq!(out.allows_used.len(), 1);
+    }
+
+    #[test]
+    fn stale_allow_is_a_finding() {
+        let src = "// lint:allow(float-ord): nothing here\nlet x = 1;\n";
+        let got = rules_of("algo/x.rs", src);
+        assert_eq!(got, vec![(1, "stale-allow".to_string())]);
+    }
+
+    #[test]
+    fn test_code_is_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        assert!(rules_of("coordinator/service.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_inventory() {
+        let src = "// SAFETY: disjoint\nunsafe { ptr.read() }\nunsafe { bad() }\n";
+        let out = scan_source("lp/x.rs", src);
+        assert_eq!(out.unsafe_blocks.len(), 2);
+        assert!(out.unsafe_blocks[0].1.is_some());
+        assert!(out.unsafe_blocks[1].1.is_none());
+        assert_eq!(out.findings.len(), 1);
+        assert_eq!(out.findings[0].1, "unsafe-audit");
+    }
+}

@@ -1,8 +1,10 @@
-//! Dependency-free substrates: RNG, statistics, JSON, CLI parsing, bench.
+//! Dependency-free substrates: RNG, statistics, JSON, CLI parsing,
+//! bench, threading pool, and the in-repo lint (`tlrs-lint`).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod lint;
 pub mod pool;
 pub mod rng;
 pub mod stats;

@@ -160,11 +160,14 @@ impl Team {
         }
         let serial = self.run_lock.lock().unwrap();
         let next = AtomicUsize::new(0);
-        // Erase the closure's lifetime for the helpers. Sound: this
-        // frame blocks below until `running == 0`, i.e. until no helper
-        // can still reach the pointer (see `BlockJob`).
         let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: this erases the closure's lifetime for the helpers.
+        // Sound because this frame blocks below until `running == 0`,
+        // i.e. until no helper can still reach the pointer (see
+        // `BlockJob`); the debug_assert under the ctrl lock pins the
+        // no-job-in-flight precondition before the pointer is published.
         let f_static: &'static (dyn Fn(usize) + Sync) =
+            // SAFETY: see the contract above — the frame outlives helpers.
             unsafe { std::mem::transmute(f_ref) };
         {
             let mut ctrl = self.shared.ctrl.lock().unwrap();
@@ -235,6 +238,10 @@ fn team_helper_loop(shared: &TeamShared) {
                 ctrl = shared.start.wait(ctrl).unwrap();
             }
         };
+        // SAFETY: `job`'s raw pointers reference the dispatching
+        // `run_blocks` frame, which cannot return until this helper
+        // decrements `running` below — the borrow strictly outlives
+        // every dereference here.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
             drain_tickets(&*job.f, &*job.next, job.n)
         }));

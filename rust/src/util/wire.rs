@@ -236,6 +236,8 @@ impl<'a> JsonPull<'a> {
                 Some(Holder::Arr(v)) => v.push(completed),
                 Some(Holder::Obj(m, slot)) => {
                     // last key wins, exactly like the DOM's BTreeMap insert
+                    // lint:allow(panic-path): the state machine emits Key
+                    // before Value inside an object, so the slot is Some
                     let k = slot.take().expect("value follows its key");
                     m.insert(k, completed);
                 }
@@ -283,7 +285,7 @@ impl<'a> JsonPull<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -363,7 +365,7 @@ impl<'a> JsonPull<'a> {
     fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
         let k = self.string()?;
         self.skip_ws();
-        self.expect(b':')?;
+        self.expect_byte(b':')?;
         self.skip_ws();
         self.state = State::Value;
         Ok(Event::Key(k))
@@ -385,11 +387,13 @@ impl<'a> JsonPull<'a> {
     }
 
     fn str_slice(&self, a: usize, b: usize) -> &'a str {
+        // lint:allow(panic-path): ensure_valid_utf8 ran before any slice
+        // is taken; re-validation here cannot fail
         std::str::from_utf8(&self.b[a..b]).expect("slice was validated as utf-8")
     }
 
     fn string(&mut self) -> Result<Cow<'a, str>, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let start = self.i;
         // set on the first escape: everything before it was clean
         let mut owned: Option<String> = None;
@@ -471,6 +475,7 @@ impl<'a> JsonPull<'a> {
                 self.i += 1;
             }
         }
+        // lint:allow(panic-path): the scanned range is ASCII digits/signs
         let txt = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         txt.parse::<f64>().map_err(|_| self.err("invalid number"))
     }
@@ -593,6 +598,8 @@ impl<W: Write> JsonWriter<W> {
 
     pub fn key(&mut self, k: &str) -> &mut Self {
         let first = {
+            // lint:allow(panic-path): writer-misuse guard — callers are
+            // in-crate response builders, never request data
             let top = self.stack.last_mut().expect("key outside object");
             debug_assert!(top.obj, "key inside array");
             let was_first = top.first;
@@ -601,6 +608,7 @@ impl<W: Write> JsonWriter<W> {
         };
         #[cfg(debug_assertions)]
         {
+            // lint:allow(panic-path): debug-only sorted-key tracker
             let slot = self.keys.last_mut().expect("key outside object");
             if let Some(prev) = slot {
                 debug_assert!(
@@ -635,6 +643,8 @@ impl<W: Write> JsonWriter<W> {
     /// 1e15 in magnitude print as integers, everything else as `{x}`.
     pub fn num(&mut self, x: f64) -> &mut Self {
         self.value_prelude();
+        // lint:allow(float-ord): fract() == 0.0 is the exact integrality test
+        // for the canonical integer print form; no tolerance is wanted here.
         if x.fract() == 0.0 && x.abs() < 1e15 {
             let i = x as i64;
             self.raw(|w| write!(w, "{i}"));
@@ -692,7 +702,10 @@ impl JsonWriter<Vec<u8>> {
     /// In-memory sink convenience: writing to a `Vec` cannot fail, and
     /// the writer only ever emits valid UTF-8.
     pub fn into_string(self) -> String {
+        // lint:allow(panic-path): io::Write into a Vec is infallible and
+        // the writer only emits valid UTF-8 (escaping is byte-exact)
         let buf = self.finish().expect("Vec sink never errors");
+        // lint:allow(panic-path): same — the writer only emits UTF-8
         String::from_utf8(buf).expect("writer emits utf-8")
     }
 

@@ -1,0 +1,12 @@
+//! path: algo/example.rs
+//! expect: bad-allow@5 float-ord@6 bad-allow@7 float-ord@8 bad-allow@9 float-ord@10
+
+pub fn f(x: f64) -> bool {
+    // lint:allow(float-ord) missing the colon-reason tail
+    let a = x == 1.0;
+    // lint:allow(bogus-rule): rule name does not exist
+    let b = x != 2.0;
+    // lint:allow(float-ord):
+    let c = x == 3.0;
+    a && b && c
+}

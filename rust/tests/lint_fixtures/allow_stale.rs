@@ -1,0 +1,7 @@
+//! path: algo/example.rs
+//! expect: stale-allow@5
+
+pub fn add(a: u64, b: u64) -> u64 {
+    // lint:allow(float-ord): nothing on the next line actually trips it
+    a + b
+}

@@ -1,0 +1,18 @@
+//! path: algo/example.rs
+//! expect: unordered-iter@12 unordered-iter@12 float-ord@13 float-ord@14
+
+pub fn edge_cases(x: f64, n: usize) -> usize {
+    let _doc = "HashMap == 1.0 unsafe inside a string";
+    let _raw = r#"thread::spawn and "quotes" stay inert"#;
+    let _bytes = b"Instant::now() \" still a string";
+    /* block comment: SystemTime partial_cmp
+       spans lines and stays inert */
+    let _cont = "line one \
+        line two with HashMap inside";
+    let flagged: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let trailing_dot = x == 1.;
+    let exponent = 2e3 != x;
+    let range_not_float = n > 1 && (1..n).len() > 0;
+    let _ = (flagged, trailing_dot, exponent, range_not_float);
+    n
+}

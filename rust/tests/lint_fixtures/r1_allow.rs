@@ -1,0 +1,19 @@
+//! path: lp/example.rs
+//! expect: clean
+
+use std::collections::HashMap; // lint:allow(unordered-iter): alias only — all iteration below drains through a sort
+
+// lint:allow(unordered-iter): probe-only scratch set, never iterated
+use std::collections::HashSet;
+
+pub fn dedup_sorted(xs: &[u32]) -> Vec<u32> {
+    let mut seen: HashSet<u32> = HashSet::new(); // lint:allow(unordered-iter): membership probes only
+    let mut out: Vec<u32> = Vec::new();
+    for &x in xs {
+        if seen.insert(x) {
+            out.push(x);
+        }
+    }
+    out.sort_unstable();
+    out
+}

@@ -1,0 +1,8 @@
+//! path: coordinator/metrics.rs
+//! expect: clean
+
+use std::collections::HashMap;
+
+pub struct Counters {
+    by_op: HashMap<String, u64>,
+}

@@ -1,0 +1,14 @@
+//! path: algo/example.rs
+//! expect: unordered-iter@4 unordered-iter@7 unordered-iter@8 unordered-iter@8
+
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u32]) -> Vec<(u32, usize)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &x in xs {
+        seen.insert(x);
+        *counts.entry(x).or_insert(0) += 1;
+    }
+    counts.into_iter().collect()
+}

@@ -1,0 +1,7 @@
+//! path: model/example.rs
+//! expect: clean
+
+pub fn skip_zero(w: f64) -> bool {
+    // lint:allow(float-ord): exact-zero sparsity sentinel, never computed
+    w != 0.0
+}

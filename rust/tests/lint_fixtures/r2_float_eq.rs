@@ -1,0 +1,10 @@
+//! path: model/example.rs
+//! expect: float-ord@5 float-ord@6
+
+pub fn checks(x: f64, y: f64, i: u32) -> bool {
+    let a = x == 1.0;
+    let b = 0.5 != y;
+    let c = x == y;
+    let d = i == 1;
+    a && b && c && d
+}

@@ -1,0 +1,16 @@
+//! path: harness/example.rs
+//! expect: float-ord@5 float-ord@11
+
+pub fn sort_scores(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+pub fn max_score(v: &[f64]) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for &x in v {
+        if best.map(|b| x.partial_cmp(&b) == Some(std::cmp::Ordering::Greater)).unwrap_or(true) {
+            best = Some(x);
+        }
+    }
+    best
+}

@@ -1,0 +1,7 @@
+//! path: util/pool.rs
+//! expect: clean
+
+pub fn helper() {
+    let _b = std::thread::Builder::new().name("tlrs-pool-0".into());
+    let _h = std::thread::spawn(|| ());
+}

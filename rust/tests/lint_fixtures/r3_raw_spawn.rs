@@ -1,0 +1,11 @@
+//! path: runtime/example.rs
+//! expect: raw-spawn@5 raw-spawn@6 raw-spawn@7
+
+pub fn run() {
+    let h = std::thread::spawn(|| 1 + 1);
+    let b = std::thread::Builder::new().name("x".into());
+    std::thread::scope(|s| {
+        let _ = s;
+    });
+    let _ = (h, b);
+}

@@ -1,0 +1,6 @@
+//! path: coordinator/runtime.rs
+//! expect: clean
+
+pub fn timed() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,8 @@
+//! path: lp/example.rs
+//! expect: wallclock@5 wallclock@6
+
+pub fn timed() -> u64 {
+    let t0 = std::time::Instant::now();
+    let _epoch = std::time::SystemTime::now();
+    t0.elapsed().as_nanos() as u64
+}

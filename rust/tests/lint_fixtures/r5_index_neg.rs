@@ -1,0 +1,12 @@
+//! path: coordinator/service.rs
+//! expect: clean
+
+pub fn shapes(i: usize) -> u32 {
+    let a = [1u32, 2, 3];
+    let v = vec![7u32];
+    let mut total = 0;
+    for x in [10u32, 20] {
+        total += x;
+    }
+    total + a.get(i).copied().unwrap_or(0) + v.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,10 @@
+//! path: coordinator/service.rs
+//! expect: panic-path@5 panic-path@6 panic-path@7 panic-path@8
+
+pub fn handle(req: &[u8], items: &[u32], i: usize) -> u32 {
+    let head = req.first().unwrap();
+    let tail = req.last().expect("nonempty");
+    let a = items[0];
+    let b = items[i];
+    u32::from(*head) + u32::from(*tail) + a + b
+}

@@ -1,0 +1,8 @@
+//! path: util/wire.rs
+//! expect: panic-path@5
+
+pub fn peek(buf: &[u8]) -> u8 {
+    let first = buf.first().unwrap();
+    let second = buf[1];
+    first + second
+}

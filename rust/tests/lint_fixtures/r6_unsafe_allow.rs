@@ -1,0 +1,7 @@
+//! path: lp/example.rs
+//! expect: clean
+
+pub fn read(p: *const f64) -> f64 {
+    // lint:allow(unsafe-audit): justification tracked in the module doc
+    unsafe { p.read() }
+}

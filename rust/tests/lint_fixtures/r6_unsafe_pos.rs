@@ -1,0 +1,9 @@
+//! path: lp/example.rs
+//! expect: unsafe-audit@5
+
+pub fn read_both(p: *const f64) -> f64 {
+    let a = unsafe { p.read() };
+    // SAFETY: caller guarantees `p` points one past a valid pair.
+    let b = unsafe { p.add(1).read() };
+    a + b
+}

@@ -1,0 +1,20 @@
+//! path: coordinator/service.rs
+//! expect: panic-path@5
+
+pub fn handle(req: &[u8]) -> u8 {
+    req.first().copied().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+
+    #[test]
+    fn free_to_panic() {
+        let t0 = std::time::Instant::now();
+        let mut m = HashMap::new();
+        m.insert(1u32, t0);
+        let v = [1u32, 2];
+        assert_eq!(v[0], m.keys().copied().next().unwrap());
+    }
+}

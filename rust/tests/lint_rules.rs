@@ -1,0 +1,129 @@
+//! Fixture-driven tests for `tlrs-lint` (util::lint), plus the
+//! repo-clean gate: the crate's own sources must scan violation-free.
+//!
+//! Each fixture under `tests/lint_fixtures/` declares its pretend path
+//! and expected verdicts in its first two lines:
+//!
+//! ```text
+//! //! path: algo/example.rs
+//! //! expect: unordered-iter@4 float-ord@9     (or: clean)
+//! ```
+//!
+//! `python/tests/test_lint_mirror.py` runs the *same* corpus through
+//! the Python mirror — the two implementations must agree fixture for
+//! fixture, and byte for byte on the unsafe inventory.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use tlrs::util::lint::{scan_source, scan_tree, unsafe_json};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures")
+}
+
+/// Parse the two-line fixture header: (pretend path, expected (line, rule)s).
+fn parse_header(src: &str, file: &str) -> (String, Vec<(usize, String)>) {
+    let mut lines = src.lines();
+    let path_line = lines.next().unwrap_or_default();
+    let expect_line = lines.next().unwrap_or_default();
+    let path = path_line
+        .strip_prefix("//! path: ")
+        .unwrap_or_else(|| panic!("{file}: first line must be `//! path: ..`"))
+        .trim()
+        .to_string();
+    let spec = expect_line
+        .strip_prefix("//! expect: ")
+        .unwrap_or_else(|| panic!("{file}: second line must be `//! expect: ..`"))
+        .trim();
+    let mut want = Vec::new();
+    if spec != "clean" {
+        for entry in spec.split_whitespace() {
+            let (rule, line) = entry
+                .split_once('@')
+                .unwrap_or_else(|| panic!("{file}: bad expect entry `{entry}`"));
+            let line: usize = line
+                .parse()
+                .unwrap_or_else(|_| panic!("{file}: bad line in `{entry}`"));
+            want.push((line, rule.to_string()));
+        }
+    }
+    want.sort();
+    (path, want)
+}
+
+#[test]
+fn fixtures_match_expected_verdicts() {
+    let dir = fixture_dir();
+    let mut names: Vec<PathBuf> = fs::read_dir(&dir)
+        .expect("fixture dir exists")
+        .map(|e| e.expect("readable entry").path())
+        .filter(|p| p.extension().map_or(false, |x| x == "rs"))
+        .collect();
+    names.sort();
+    assert!(names.len() >= 15, "fixture corpus shrank: {}", names.len());
+    for file in names {
+        let name = file.file_name().unwrap().to_string_lossy().to_string();
+        let src = fs::read_to_string(&file).expect("readable fixture");
+        let (path, want) = parse_header(&src, &name);
+        let out = scan_source(&path, &src);
+        let mut got: Vec<(usize, String)> =
+            out.findings.iter().map(|(ln, rule, _)| (*ln, rule.clone())).collect();
+        got.sort();
+        assert_eq!(got, want, "{name}: verdicts diverge from header");
+    }
+}
+
+#[test]
+fn fixture_allows_are_honored_where_declared() {
+    // the allow fixtures must actually exercise the suppression path
+    for (name, min_allows) in [("r1_allow.rs", 3), ("r2_float_allow.rs", 1), ("r6_unsafe_allow.rs", 1)] {
+        let src = fs::read_to_string(fixture_dir().join(name)).expect("fixture");
+        let (path, _) = parse_header(&src, name);
+        let out = scan_source(&path, &src);
+        assert!(
+            out.allows_used.len() >= min_allows,
+            "{name}: expected >= {min_allows} honored allows, got {}",
+            out.allows_used.len()
+        );
+    }
+}
+
+#[test]
+fn repo_sources_are_lint_clean() {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = scan_tree(&src_root).expect("scan src tree");
+    assert!(report.n_files > 50, "src tree went missing?");
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|(f, ln, rule, msg)| format!("{f}:{ln}: [{rule}] {msg}"))
+        .collect();
+    assert!(
+        rendered.is_empty(),
+        "the crate's own sources violate the lint:\n{}",
+        rendered.join("\n")
+    );
+}
+
+#[test]
+fn unsafe_inventory_is_complete_and_committed() {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = scan_tree(&src_root).expect("scan src tree");
+    assert!(!report.blocks.is_empty(), "the pool/pdhg unsafe blocks vanished?");
+    for (f, ln, safety, allow) in &report.blocks {
+        assert!(
+            safety.is_some() || allow.is_some(),
+            "{f}:{ln}: unsafe block with neither SAFETY comment nor allow"
+        );
+    }
+    // the committed inventory is the regenerated one, byte for byte
+    let committed = Path::new(env!("CARGO_MANIFEST_DIR")).join("../LINT_unsafe.json");
+    let committed =
+        fs::read_to_string(committed).expect("LINT_unsafe.json is committed at the repo root");
+    assert_eq!(
+        unsafe_json(&report.blocks),
+        committed,
+        "LINT_unsafe.json is stale — regenerate with scripts/lint.sh"
+    );
+}

@@ -78,6 +78,31 @@ fn random_instance(seed: u64) -> Instance {
 
 const CASES: u64 = 60;
 
+/// Seed-repeat determinism: regenerating the instance from the same seed
+/// and re-running every algorithm must reproduce the solution bit for
+/// bit (Debug formatting of f64 is shortest-roundtrip, so equal strings
+/// mean equal bits). This pins the ordered-container invariant the
+/// `unordered-iter` lint rule guards — a HashMap anywhere on the result
+/// path shows up here as run-to-run drift.
+#[test]
+fn repeated_solves_are_bit_identical() {
+    use tlrs::algo::algorithms::run;
+    let solver = NativePdhgSolver::default();
+    for seed in 0..6u64 {
+        let first = trim(&random_instance(seed + 9000)).instance;
+        let second = trim(&random_instance(seed + 9000)).instance;
+        for algo in Algorithm::all() {
+            let (a, _) = run(&first, algo, &solver).expect("first solve");
+            let (b, _) = run(&second, algo, &solver).expect("second solve");
+            assert_eq!(
+                format!("{a:?}"),
+                format!("{b:?}"),
+                "seed {seed} {algo:?}: repeated solve diverged"
+            );
+        }
+    }
+}
+
 #[test]
 fn trimming_preserves_cost_and_feasibility() {
     for seed in 0..CASES {

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# tlrs-lint gate: scan rust/src for determinism & safety invariant
+# violations (docs/INVARIANTS.md) and regenerate the unsafe inventory
+# (LINT_unsafe.json at the repo root).
+#
+# Prefers the Rust binary; containers without a Rust toolchain fall
+# back to the line-for-line Python mirror — the two are pinned to
+# identical verdicts by the shared fixture corpus.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v cargo > /dev/null 2>&1; then
+    echo "== lint: tlrs-lint (rust) =="
+    cargo run --quiet --release --manifest-path rust/Cargo.toml --bin tlrs-lint -- \
+        --root rust/src --unsafe-out LINT_unsafe.json --quiet
+else
+    echo "== lint: tlrs-lint (python mirror; no cargo in PATH) =="
+    python3 python/tools/lint.py --root rust/src --unsafe-out LINT_unsafe.json --quiet
+fi

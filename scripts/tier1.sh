@@ -8,6 +8,12 @@
 #
 #   TIER1_BENCH_TIMEOUT   seconds allowed for the bench smoke (default 300)
 set -euo pipefail
+
+echo "== tier1: tlrs-lint =="
+# the determinism & safety analyzer (docs/INVARIANTS.md) gates first:
+# a lint violation is cheaper to report before the full build + suite
+"$(dirname "$0")/lint.sh"
+
 cd "$(dirname "$0")/../rust"
 
 echo "== tier1: cargo build --release =="
